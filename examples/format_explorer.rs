@@ -1,0 +1,60 @@
+//! The paper's parameterization claim (§III-A): "new formats can be
+//! rapidly defined and explored." Define a *custom* minifloat — e5m1,
+//! an extreme-range 8-bit format — and run the full evaluation loop
+//! (unit instantiation, accuracy sweep, area estimate) without touching
+//! any library code.
+//!
+//! ```sh
+//! cargo run --release --example format_explorer
+//! ```
+
+use minifloat_nn::area::{exfma_unit_ge, exsdotp_unit_ge};
+use minifloat_nn::exsdotp::{exsdotp_cascade, ExSdotpUnit};
+use minifloat_nn::softfloat::{from_f64, to_f64};
+use minifloat_nn::util::rng::Rng;
+use minifloat_nn::{FpFormat, RoundingMode, FP16, FP8, FP8ALT};
+
+fn main() {
+    // One line defines a new format, like FPnew's parameter pack.
+    let e5m1 = FpFormat::new(5, 1);
+    let e3m4 = FpFormat::new(3, 4);
+    println!("custom formats: {} (range 2^±~{}), {} (range 2^±~{})", e5m1.name(), e5m1.emax(), e3m4.name(), e3m4.emax());
+
+    // Instantiate ExSdotp units for each 8-bit source → FP16.
+    let rm = RoundingMode::Rne;
+    println!("\naccuracy of a 1000-product Gaussian accumulation into FP16:");
+    println!("{:<8} {:>14} {:>14} {:>12}", "src", "fused", "cascade", "unit GE");
+    for src in [FP8, FP8ALT, e5m1, e3m4] {
+        let unit = ExSdotpUnit::new(src, FP16);
+        let mut rng = Rng::new(11);
+        let mut acc = 0u64;
+        let mut acc_c = 0u64;
+        let mut gold = 0f64;
+        for _ in 0..500 {
+            let q = |r: &mut Rng| from_f64(r.gaussian(), src, rm);
+            let (a, b, c, d) = (q(&mut rng), q(&mut rng), q(&mut rng), q(&mut rng));
+            acc = unit.exsdotp(a, b, c, d, acc, rm);
+            acc_c = exsdotp_cascade(src, FP16, a, b, c, d, acc_c, rm);
+            gold += to_f64(a, src) * to_f64(b, src) + to_f64(c, src) * to_f64(d, src);
+        }
+        let rel = |x: u64| ((to_f64(x, FP16) - gold) / gold).abs();
+        println!(
+            "{:<8} {:>14.3e} {:>14.3e} {:>12.0}",
+            src.name(),
+            rel(acc),
+            rel(acc_c),
+            exsdotp_unit_ge(src, FP16)
+        );
+    }
+
+    println!("\narea scaling: a fused unit vs two ExFMAs, per source format:");
+    for src in [FP8, FP8ALT, e5m1, e3m4] {
+        let f = exsdotp_unit_ge(src, FP16);
+        let c = 2.0 * exfma_unit_ge(src, FP16);
+        println!("{:<8} fused/cascade = {:.2}", src.name(), f / c);
+    }
+
+    println!("\nTrade-off visible above: more mantissa (e3m4) → better accuracy,");
+    println!("more area; more exponent (e5m1) → range without accuracy. That is");
+    println!("the exploration loop the paper's parameterization enables.");
+}

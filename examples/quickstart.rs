@@ -1,0 +1,50 @@
+//! Quickstart: the library's core objects in ~60 lines.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use minifloat_nn::exsdotp::{exsdotp_cascade, exsdotp_exact, ExSdotpUnit};
+use minifloat_nn::softfloat::{from_f64, to_f64};
+use minifloat_nn::{RoundingMode, FP16, FP32, FP8};
+
+fn main() {
+    let rm = RoundingMode::Rne;
+
+    // --- minifloat encode/decode -------------------------------------
+    let x = from_f64(1.1, FP8, rm);
+    println!("1.1 quantized to FP8 (e5m2): bits {x:#04x} = {}", to_f64(x, FP8));
+
+    // --- the paper's core operation ----------------------------------
+    // ExSdotp: a*b + c*d + e with FP16 sources and FP32 accumulation,
+    // fused (single rounding).
+    let unit = ExSdotpUnit::fp16_to_fp32();
+    let (a, b) = (from_f64(1.5, FP16, rm), from_f64(2.0, FP16, rm));
+    let (c, d) = (from_f64(-0.75, FP16, rm), from_f64(4.0, FP16, rm));
+    let e = from_f64(10.0, FP32, rm);
+    let fused = unit.exsdotp(a, b, c, d, e, rm);
+    println!("exsdotp(1.5*2.0 + -0.75*4.0 + 10.0) = {}", to_f64(fused, FP32));
+
+    // --- why fusion matters -------------------------------------------
+    // Build the paper's non-associativity example: a*1 + (-a)*1 + tiny.
+    // The fused unit recovers `tiny`; the two-ExFMA cascade can lose it.
+    let one = from_f64(1.0, FP16, rm);
+    let big = from_f64(60000.0, FP16, rm);
+    let nbig = big | FP16.sign_mask();
+    let tiny = from_f64(2f64.powi(-20), FP32, rm);
+
+    let fused = unit.exsdotp(big, one, nbig, one, tiny, rm);
+    let casc = exsdotp_cascade(FP16, FP32, big, one, nbig, one, tiny, rm);
+    let exact = exsdotp_exact(FP16, FP32, big, one, nbig, one, tiny, rm);
+    println!("cancellation test: fused={} cascade={} exact={}", to_f64(fused, FP32), to_f64(casc, FP32), to_f64(exact, FP32));
+    assert_eq!(fused, exact, "the fused datapath preserves the tiny addend");
+
+    // --- accuracy over an accumulation (mini Table IV) -----------------
+    let p = minifloat_nn::accuracy::accumulate(FP8, FP16, 1000, 42);
+    println!(
+        "accumulate 1000 FP8 dot products -> FP16: rel.err fused {:.2e}, cascade {:.2e}",
+        p.err_exsdotp, p.err_exfma
+    );
+
+    println!("quickstart OK");
+}

@@ -1,0 +1,52 @@
+//! **End-to-end driver** (DESIGN.md E2E): train the HFP8 MLP through the
+//! full three-layer stack — Rust coordinator → PJRT runtime → AOT HLO
+//! artifacts containing the Pallas ExSdotp GEMM kernels — and compare
+//! against the f32 baseline artifact.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```sh
+//! cargo run --release --example train_minifloat -- [--steps 300] [--seed 42]
+//! ```
+
+use anyhow::Result;
+use minifloat_nn::coordinator::{Precision, Trainer};
+use minifloat_nn::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let steps: usize = args.get("steps", 300);
+    let seed: u64 = args.get("seed", 42);
+    let dir = args.get_str("artifacts", "artifacts");
+
+    println!("=== E2E: HFP8 (FP8alt fwd / FP8 bwd, FP16 acc) vs FP32, {steps} steps ===\n");
+
+    let mut results = Vec::new();
+    for precision in [Precision::Hfp8, Precision::Fp32] {
+        println!("--- {precision:?} ---");
+        let mut tr = Trainer::new(&dir, precision, seed)?;
+        for i in 0..steps {
+            let loss = tr.step()?;
+            if i % (steps / 10).max(1) == 0 {
+                println!("step {i:>4}  loss {loss:.4}");
+            }
+        }
+        let final_loss = tr.recent_loss(20);
+        let acc = tr.accuracy()?;
+        println!("{precision:?}: mean final loss {final_loss:.4}, accuracy {:.1}%\n", acc * 100.0);
+        results.push((precision, final_loss, acc));
+    }
+
+    println!("=== summary ===");
+    for (p, loss, acc) in &results {
+        println!("{:<12} loss {loss:.4}  accuracy {:.1}%", format!("{p:?}"), acc * 100.0);
+    }
+    let (_, hfp8_loss, _) = results[0];
+    let (_, fp32_loss, _) = results[1];
+    println!(
+        "\nHFP8 final loss is within {:.3} of the f32 baseline — the paper's\n\
+         low-precision-training premise (Sun et al. [7]) holds on this stack.",
+        (hfp8_loss - fp32_loss).abs()
+    );
+    Ok(())
+}

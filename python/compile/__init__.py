@@ -1,0 +1,5 @@
+"""Build-time Python (L1 Pallas kernels + L2 JAX model + AOT lowering).
+
+Never imported at runtime: the Rust coordinator executes the lowered
+HLO artifacts through PJRT.
+"""

@@ -1,0 +1,85 @@
+"""Lower the L2 model (+ standalone L1 kernels) to HLO text artifacts.
+
+HLO *text* is the interchange format: jax >= 0.5 serializes protos with
+64-bit instruction ids that xla_extension 0.5.1 (the `xla` crate's
+backend) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Run once at build time (`make artifacts`); the Rust binary then loads
+and executes the artifacts via PJRT with no Python anywhere near the
+request path.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import FP8, FP16, exsdotp_gemm
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs():
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((model.FEATURES, model.HIDDEN), f32),  # w1
+        jax.ShapeDtypeStruct((model.HIDDEN,), f32),  # b1
+        jax.ShapeDtypeStruct((model.HIDDEN, model.HIDDEN), f32),  # w2
+        jax.ShapeDtypeStruct((model.HIDDEN,), f32),  # b2
+        jax.ShapeDtypeStruct((model.HIDDEN, model.CLASSES), f32),  # w3
+        jax.ShapeDtypeStruct((model.CLASSES,), f32),  # b3
+    )
+
+
+def artifacts():
+    f32 = jnp.float32
+    batch_x = jax.ShapeDtypeStruct((model.BATCH, model.FEATURES), f32)
+    batch_y = jax.ShapeDtypeStruct((model.BATCH, model.CLASSES), f32)
+
+    out = {}
+
+    step_hfp8 = model.make_train_step(quantized=True)
+    out["train_step_hfp8"] = jax.jit(step_hfp8).lower(*param_specs(), batch_x, batch_y)
+
+    step_f32 = model.make_train_step(quantized=False)
+    out["train_step_fp32"] = jax.jit(step_f32).lower(*param_specs(), batch_x, batch_y)
+
+    predict = lambda *args: (model.predict(*args),)
+    out["predict_hfp8"] = jax.jit(predict).lower(*param_specs(), batch_x)
+
+    # Standalone L1 kernel artifact (quickstart + runtime tests).
+    gm = jax.ShapeDtypeStruct((32, 32), f32)
+    kern = lambda a, b: (exsdotp_gemm(a, b, src=FP8, dst=FP16),)
+    out["gemm_fp8_fp16"] = jax.jit(kern).lower(gm, gm)
+
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    for name, lowered in artifacts().items():
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    # Stamp for make's dependency tracking.
+    with open(os.path.join(args.outdir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

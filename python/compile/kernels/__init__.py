@@ -1,0 +1,5 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (build-time only)."""
+
+from .exsdotp_gemm import exsdotp_gemm
+from .quantize import FP8, FP8ALT, FP16, FP16ALT, FP32, FpFormat, quantize, quantize_ste
+from .ref import exsdotp_gemm_ref, gemm_f32_ref

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: blocked GEMM with ExSdotp (expanding dot-product)
+numerics.
+
+Hardware-adaptation note (DESIGN.md §Hardware-Adaptation): the paper's
+SSR/FREP streaming of operand pairs from a scratchpad maps to Pallas
+``BlockSpec``-driven HBM→VMEM tiling; the expanding accumulation
+(narrow multiply, wide accumulate) maps to keeping the accumulator in
+the destination format across the K loop while quantizing at
+dot-product-pair granularity — the per-ExSdotp rounding of the fused
+unit. ``interpret=True`` everywhere: the CPU PJRT client cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md), and correctness —
+not TPU wall-clock — is what the AOT path needs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import FpFormat, quantize
+
+
+def _kernel(a_ref, b_ref, o_ref, *, src: FpFormat, dst: FpFormat, k: int):
+    """One (BM, BN) output tile: stream K in pairs, round per pair."""
+    a = quantize(a_ref[...], src)  # (BM, K) source-format operands
+    b = quantize(b_ref[...], src)  # (K, BN)
+
+    def body(i, acc):
+        # The fused op: two exact products + wide accumulator, one
+        # rounding into dst (eq. 1). Slices are static-size (2 columns).
+        a2 = jax.lax.dynamic_slice_in_dim(a, 2 * i, 2, axis=1)
+        b2 = jax.lax.dynamic_slice_in_dim(b, 2 * i, 2, axis=0)
+        prod = a2 @ b2  # (BM, BN): p0 + p1, exact in f32 for ≤FP16 sources
+        return quantize(acc + prod, dst)
+
+    acc0 = jnp.zeros(o_ref.shape, jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, k // 2, body, acc0)
+
+
+@functools.partial(jax.jit, static_argnames=("src", "dst", "block_m", "block_n"))
+def exsdotp_gemm(a, b, src: FpFormat = None, dst: FpFormat = None, block_m: int = 32, block_n: int = 32):
+    """C = A·B with ExSdotp numerics as a Pallas kernel.
+
+    ``a``: (M, K), ``b``: (K, N), f32 carrying narrower values (they are
+    re-quantized to ``src`` inside the kernel — idempotent if already on
+    the grid). K must be even. M/N need not divide the block sizes;
+    Pallas masks the remainder tiles.
+    """
+    assert src is not None and dst is not None
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and k % 2 == 0
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        functools.partial(_kernel, src=src, dst=dst, k=k),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32))

@@ -1,0 +1,100 @@
+"""Minifloat quantization in pure jnp (bitwise-correct RNE).
+
+The paper's formats (§III-A) as (exp_bits, man_bits) pairs, all with
+full IEEE-754 semantics — subnormals, ±inf, RNE — mirroring
+``rust/src/formats``. Quantization maps an f32 tensor onto the minifloat
+grid; it is the software emulation of storing a value in the narrow
+format, exactly like the operand packing the MiniFloat-NN hardware does
+in its register file.
+
+The implementation is branch-free jnp (usable inside Pallas kernels and
+under ``jax.jit``): the grid step for each element is ``2^(e - man_bits)``
+with ``e = clamp(floor(log2 |x|), emin, ·)``, rounding is delegated to
+the host's float rounding through a scaled ``jnp.round`` (ties-to-even),
+and overflow saturates to ±inf per IEEE RNE.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FpFormat:
+    """A minifloat format descriptor (mirrors the Rust `FpFormat`)."""
+
+    exp_bits: int
+    man_bits: int
+    name: str = ""
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def emin(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def emax(self) -> int:
+        return self.bias
+
+    @property
+    def max_finite(self) -> float:
+        frac = 2.0 - 2.0 ** (-self.man_bits)
+        return frac * 2.0**self.emax
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (self.emin - self.man_bits)
+
+
+#: FP8 (e5m2) — FP16 dynamic range, 2-bit mantissa.
+FP8 = FpFormat(5, 2, "FP8")
+#: FP8alt (e4m3) — IEEE e4m3 (with inf), the HFP8 forward format.
+FP8ALT = FpFormat(4, 3, "FP8alt")
+#: IEEE binary16.
+FP16 = FpFormat(5, 10, "FP16")
+#: bfloat16 layout with IEEE semantics.
+FP16ALT = FpFormat(8, 7, "FP16alt")
+#: IEEE binary32 (identity quantization for f32 tensors).
+FP32 = FpFormat(8, 23, "FP32")
+
+
+def quantize(x, fmt: FpFormat):
+    """Round ``x`` (f32) to the nearest ``fmt`` value (RNE), as f32.
+
+    Exactly representable values pass through; overflow → ±inf;
+    subnormal range uses the fixed grid ``2^(emin - man_bits)``; NaN
+    passes through.
+    """
+    if fmt.man_bits >= 23 and fmt.exp_bits >= 8:
+        return jnp.asarray(x, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    ax = jnp.abs(x)
+    # Exponent of each element, clamped at emin (subnormal grid floor).
+    # frexp: x = m * 2^e with m in [0.5, 1) → floor(log2|x|) = e - 1.
+    _, e = jnp.frexp(jnp.where(ax == 0, 1.0, ax))
+    e = jnp.maximum(e - 1, fmt.emin)
+    # ldexp, not exp2: powers of two must be exact, and exp2 is a
+    # (possibly 1-ulp-off) transcendental approximation on some backends.
+    step = jnp.ldexp(jnp.float32(1.0), e - fmt.man_bits)
+    q = jnp.round(x / step) * step
+    # Rounding can carry to the next binade (e.g. 1.1111 → 10.000);
+    # that result is still on the grid, so no fixup is needed there.
+    # Overflow: values that round beyond max_finite become ±inf (the
+    # IEEE RNE overflow rule: anything ≥ maxfinite + ulp/2 overflows).
+    limit = fmt.max_finite * (1.0 + 2.0 ** (-fmt.man_bits - 1))
+    q = jnp.where(ax >= limit, jnp.sign(x) * jnp.inf, q)
+    # Zero and non-finite passthrough.
+    q = jnp.where(jnp.isfinite(x), q, x)
+    q = jnp.where(ax == 0, x, q)
+    return q.astype(jnp.float32)
+
+
+def quantize_ste(x, fmt: FpFormat):
+    """Quantize with a straight-through gradient (for training)."""
+    import jax
+
+    zero = x - jax.lax.stop_gradient(x)
+    return zero + jax.lax.stop_gradient(quantize(x, fmt))

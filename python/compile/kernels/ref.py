@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracle for the ExSdotp GEMM kernel.
+
+Models the MiniFloat-NN semantics at the level that matters for
+training numerics: inputs quantized to the source format, products
+computed exactly (an f32 holds any product of two <=FP16 values
+exactly), and the accumulator rounded to the *destination* format once
+per ExSdotp step -- i.e. once per pair of k-elements (eq. 1), matching
+the hardware's single rounding per fused operation.
+"""
+
+import jax.numpy as jnp
+
+from .quantize import FpFormat, quantize
+
+
+def exsdotp_gemm_ref(a, b, src: FpFormat, dst: FpFormat):
+    """C = A.B with ExSdotp numerics (slow reference, small shapes).
+
+    ``a``: (M, K) f32, ``b``: (K, N) f32; K must be even. Returns (M, N)
+    f32 holding dst-format values.
+    """
+    aq = quantize(a, src)
+    bq = quantize(b, src)
+    m, k = aq.shape
+    _, n = bq.shape
+    assert k % 2 == 0, "ExSdotp consumes k-pairs"
+    acc = jnp.zeros((m, n), jnp.float32)
+    for i in range(k // 2):
+        # One fused op: two exact products + accumulator, single rounding
+        # into the destination format.
+        p = (
+            aq[:, 2 * i : 2 * i + 1] * bq[2 * i : 2 * i + 1, :]
+            + aq[:, 2 * i + 1 : 2 * i + 2] * bq[2 * i + 1 : 2 * i + 2, :]
+        )
+        acc = quantize(acc + p, dst)
+    return acc
+
+
+def gemm_f32_ref(a, b):
+    """Plain f32 GEMM for loose comparisons."""
+    return jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32)

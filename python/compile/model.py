@@ -1,0 +1,103 @@
+"""L2: the JAX training model -- an MLP classifier trained with
+HFP8-style mixed-precision GEMMs (Sun et al. [7], the paper's motivating
+NN-training workload).
+
+Scheme:
+  * forward matmuls  : FP8alt (e4m3) operands -> FP16 accumulation
+  * backward matmuls : FP8 (e5m2) operands -> FP16 accumulation
+  * master weights, bias, optimizer: f32
+
+Every matmul runs through the L1 Pallas ExSdotp kernel, so the whole
+training step lowers to one HLO module that the Rust runtime executes
+via PJRT -- Python never touches the request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import FP8, FP8ALT, FP16, exsdotp_gemm
+
+# Compiled-in problem shape (the AOT artifact is shape-specialized).
+BATCH = 64
+FEATURES = 4  # spiral (x, y, r^2, 1) embedding
+HIDDEN = 32
+CLASSES = 4  # 3 spiral arms + 1 padding class (even K for ExSdotp pairs)
+
+#: (fwd_src, fwd_dst, bwd_src, bwd_dst)
+HFP8 = (FP8ALT, FP16, FP8, FP16)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def qmatmul(x, w, cfg):
+    """Quantized matmul: ExSdotp GEMM forward, ExSdotp GEMM backward."""
+    return exsdotp_gemm(x, w, src=cfg[0], dst=cfg[1])
+
+
+def _qmatmul_fwd(x, w, cfg):
+    return qmatmul(x, w, cfg), (x, w)
+
+
+def _qmatmul_bwd(cfg, res, g):
+    x, w = res
+    bwd_src, bwd_dst = cfg[2], cfg[3]
+    dx = exsdotp_gemm(g, w.T, src=bwd_src, dst=bwd_dst)
+    dw = exsdotp_gemm(x.T, g, src=bwd_src, dst=bwd_dst)
+    return dx, dw
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+def init_params(key):
+    """He-initialized 3-layer MLP parameters (f32 master copies)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = lambda fan_in: (2.0 / fan_in) ** 0.5
+    return {
+        "w1": jax.random.normal(k1, (FEATURES, HIDDEN), jnp.float32) * s(FEATURES),
+        "b1": jnp.zeros((HIDDEN,), jnp.float32),
+        "w2": jax.random.normal(k2, (HIDDEN, HIDDEN), jnp.float32) * s(HIDDEN),
+        "b2": jnp.zeros((HIDDEN,), jnp.float32),
+        "w3": jax.random.normal(k3, (HIDDEN, CLASSES), jnp.float32) * s(HIDDEN),
+        "b3": jnp.zeros((CLASSES,), jnp.float32),
+    }
+
+
+def forward(params, x, quantized=True):
+    """Logits for a batch. ``quantized`` selects HFP8 vs plain f32."""
+    mm = (lambda a, b: qmatmul(a, b, HFP8)) if quantized else (lambda a, b: a @ b)
+    h = jax.nn.relu(mm(x, params["w1"]) + params["b1"])
+    h = jax.nn.relu(mm(h, params["w2"]) + params["b2"])
+    return mm(h, params["w3"]) + params["b3"]
+
+
+def loss_fn(params, x, y_onehot, quantized=True):
+    """Softmax cross-entropy (f32)."""
+    logits = forward(params, x, quantized)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def make_train_step(quantized=True, lr=0.05):
+    """SGD training step: (params..., x, y) -> (params'..., loss)."""
+
+    def step(w1, b1, w2, b2, w3, b3, x, y_onehot):
+        params = {"w1": w1, "b1": b1, "w2": w2, "b2": b2, "w3": w3, "b3": b3}
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, x, y_onehot, quantized))(params)
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return (new["w1"], new["b1"], new["w2"], new["b2"], new["w3"], new["b3"], loss)
+
+    return step
+
+
+def predict(w1, b1, w2, b2, w3, b3, x):
+    """Class logits, HFP8 forward pass (the serving-path artifact)."""
+    params = {"w1": w1, "b1": b1, "w2": w2, "b2": b2, "w3": w3, "b3": b3}
+    return forward(params, x, quantized=True)
+
+
+def embed(xy):
+    """Embed raw 2-D spiral coordinates into the FEATURES-dim input."""
+    x, y = xy[..., 0], xy[..., 1]
+    return jnp.stack([x, y, x * x + y * y, jnp.ones_like(x)], axis=-1)

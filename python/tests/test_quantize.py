@@ -1,0 +1,109 @@
+"""Quantizer validation against ml_dtypes (an independent, battle-tested
+minifloat implementation) plus algebraic properties via hypothesis."""
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import FP8, FP8ALT, FP16, FP16ALT, FP32, quantize
+
+# (our format, the equivalent ml_dtypes dtype)
+PAIRS = [
+    (FP8, ml_dtypes.float8_e5m2),
+    (FP8ALT, ml_dtypes.float8_e4m3),  # IEEE e4m3 (with inf) == paper's FP8alt
+    (FP16, np.float16),
+    (FP16ALT, ml_dtypes.bfloat16),
+]
+
+
+@pytest.mark.parametrize("fmt,dtype", PAIRS, ids=[f.name for f, _ in PAIRS])
+def test_quantize_matches_ml_dtypes_on_random_values(fmt, dtype):
+    rng = np.random.default_rng(42)
+    x = np.concatenate(
+        [
+            rng.standard_normal(512).astype(np.float32),
+            rng.standard_normal(512).astype(np.float32) * 1e4,
+            rng.standard_normal(512).astype(np.float32) * 1e-4,
+            rng.standard_normal(256).astype(np.float32) * 2.0 ** rng.integers(-30, 30, 256),
+        ]
+    ).astype(np.float32)
+    ours = np.asarray(quantize(jnp.asarray(x), fmt))
+    theirs = x.astype(dtype).astype(np.float32)
+    np.testing.assert_array_equal(ours, theirs)
+
+
+@pytest.mark.parametrize("fmt,dtype", PAIRS, ids=[f.name for f, _ in PAIRS])
+def test_quantize_exhaustive_8bit_grid(fmt, dtype):
+    # Every representable value must be a fixed point of the quantizer.
+    if np.dtype(dtype).itemsize > 1:
+        pytest.skip("exhaustive only for 8-bit formats")
+    all_bits = np.arange(256, dtype=np.uint8).view(dtype)
+    finite = all_bits[np.isfinite(all_bits.astype(np.float32))].astype(np.float32)
+    q = np.asarray(quantize(jnp.asarray(finite), fmt))
+    np.testing.assert_array_equal(q, finite)
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    st.floats(min_value=-(2.0**98), max_value=2.0**98, allow_nan=False, width=32),
+    st.sampled_from([FP8, FP8ALT, FP16, FP16ALT]),
+)
+def test_quantize_idempotent(x, fmt):
+    x32 = jnp.float32(x)
+    once = quantize(x32, fmt)
+    twice = quantize(once, fmt)
+    assert (once == twice) | (jnp.isnan(once) & jnp.isnan(twice))
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.floats(min_value=-240.0, max_value=240.0, allow_nan=False, width=32),
+    st.floats(min_value=-240.0, max_value=240.0, allow_nan=False, width=32),
+)
+def test_quantize_monotone_fp8alt(a, b):
+    qa = float(quantize(jnp.float32(a), FP8ALT))
+    qb = float(quantize(jnp.float32(b), FP8ALT))
+    if a <= b:
+        assert qa <= qb
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=2.0**-26, max_value=2.0**13, allow_nan=False, width=32))
+def test_quantize_relative_error_bound(x):
+    # |q - x| <= ulp/2 <= x * 2^-man_bits / 2 for normal x.
+    for fmt in [FP8, FP8ALT, FP16]:
+        if x < 2.0**fmt.emin or x > fmt.max_finite:
+            continue
+        q = float(quantize(jnp.float32(x), fmt))
+        rel = abs(q - np.float32(x)) / np.float32(x)
+        assert rel <= 2.0 ** (-fmt.man_bits - 1) * 1.0000001
+
+
+def test_specials():
+    x = jnp.asarray([np.inf, -np.inf, np.nan, 0.0, -0.0], jnp.float32)
+    for fmt in [FP8, FP8ALT, FP16, FP16ALT, FP32]:
+        q = np.asarray(quantize(x, fmt))
+        assert q[0] == np.inf and q[1] == -np.inf
+        assert np.isnan(q[2])
+        assert q[3] == 0.0 and not np.signbit(q[3])
+        assert q[4] == 0.0 and np.signbit(q[4])
+
+
+def test_overflow_to_inf_and_saturation_boundary():
+    # FP8 max finite = 57344; halfway to the next grid point overflows.
+    assert float(quantize(jnp.float32(57344.0), FP8)) == 57344.0
+    assert float(quantize(jnp.float32(70000.0), FP8)) == np.inf
+    # FP8alt max finite = 240.
+    assert float(quantize(jnp.float32(240.0), FP8ALT)) == 240.0
+    assert float(quantize(jnp.float32(260.0), FP8ALT)) == np.inf
+
+
+def test_subnormal_grid():
+    # FP16 min subnormal = 2^-24; half of it rounds to 0 (RNE tie→even).
+    tiny = np.float32(2.0**-24)
+    assert float(quantize(jnp.float32(tiny), FP16)) == tiny
+    assert float(quantize(jnp.float32(tiny / 2), FP16)) == 0.0
+    assert float(quantize(jnp.float32(tiny * 0.75), FP16)) == tiny

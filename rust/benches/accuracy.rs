@@ -1,0 +1,16 @@
+//! Table IV regeneration harness + accumulation throughput.
+
+use minifloat_nn::accuracy::accumulate;
+use minifloat_nn::report;
+use minifloat_nn::util::bench::Bencher;
+use minifloat_nn::{FP16, FP32, FP8};
+
+fn main() {
+    println!("== regenerating Table IV ==");
+    print!("{}", report::table4_text(42));
+
+    println!("\n== accumulation harness throughput ==");
+    let mut b = Bencher::new();
+    b.bench_throughput("accumulate 2000 fp16->fp32", 2000.0, || accumulate(FP16, FP32, 2000, 1).err_exsdotp);
+    b.bench_throughput("accumulate 2000 fp8->fp16", 2000.0, || accumulate(FP8, FP16, 2000, 1).err_exsdotp);
+}

@@ -1,0 +1,11 @@
+//! Fig. 7 and Table III regeneration harness (area + energy models).
+
+use minifloat_nn::report;
+
+fn main() {
+    print!("{}", report::fig7a_text());
+    println!();
+    print!("{}", report::fig7b_text());
+    println!();
+    print!("{}", report::table3_text(42));
+}

@@ -1,0 +1,57 @@
+//! The ExSdotp unit: fused datapath vs cascade vs exact oracle
+//! throughput, plus the SIMD wrapper — the per-lane cost that bounds
+//! the cluster simulator's speed.
+
+use minifloat_nn::exsdotp::{exsdotp_cascade, exsdotp_exact, ExSdotpUnit, SimdExSdotp};
+use minifloat_nn::util::bench::Bencher;
+use minifloat_nn::util::rng::Rng;
+use minifloat_nn::{RoundingMode, FP16, FP32, FP8};
+
+fn main() {
+    let mut b = Bencher::new();
+    let rm = RoundingMode::Rne;
+    let mut rng = Rng::new(2);
+    let v16: Vec<u64> = (0..1024).map(|_| rng.next_u64() & 0x7bff).collect();
+    let v8: Vec<u64> = (0..1024).map(|_| rng.next_u64() & 0x7b).collect();
+    let w64: Vec<u64> = (0..1024).map(|_| rng.next_u64()).collect();
+
+    println!("== ExSdotp datapath throughput (1024 ops per iteration) ==");
+    let unit = ExSdotpUnit::fp16_to_fp32();
+    b.bench_throughput("fused 16->32 x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for i in 0..1024 {
+            acc = unit.exsdotp(v16[i], v16[(i + 1) & 1023], v16[(i + 2) & 1023], v16[(i + 3) & 1023], acc & 0x7f7fffff, rm);
+        }
+        acc
+    });
+    let unit8 = ExSdotpUnit::fp8_to_fp16();
+    b.bench_throughput("fused 8->16 x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for i in 0..1024 {
+            acc = unit8.exsdotp(v8[i], v8[(i + 1) & 1023], v8[(i + 2) & 1023], v8[(i + 3) & 1023], acc & 0x7bff, rm);
+        }
+        acc
+    });
+    b.bench_throughput("cascade 16->32 x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for i in 0..1024 {
+            acc = exsdotp_cascade(FP16, FP32, v16[i], v16[(i + 1) & 1023], v16[(i + 2) & 1023], v16[(i + 3) & 1023], acc & 0x7f7fffff, rm);
+        }
+        acc
+    });
+    b.bench_throughput("exact oracle 16->32 x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for i in 0..1024 {
+            acc = exsdotp_exact(FP16, FP32, v16[i], v16[(i + 1) & 1023], v16[(i + 2) & 1023], v16[(i + 3) & 1023], acc & 0x7f7fffff, rm);
+        }
+        acc
+    });
+    let simd = SimdExSdotp::new(FP8, FP16);
+    b.bench_throughput("SIMD 8->16 (4 units) x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for i in 0..1024 {
+            acc = simd.exsdotp(w64[i], w64[(i + 1) & 1023], acc, rm);
+        }
+        acc
+    });
+}

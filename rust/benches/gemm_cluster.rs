@@ -1,0 +1,34 @@
+//! Table II / Fig. 8 regeneration harness + simulator throughput.
+//!
+//! Prints the full Table II grid (simulated vs paper cycles) and
+//! measures how fast the cycle-level simulation itself runs.
+
+use minifloat_nn::isa::instr::{OpWidth, ScalarFmt};
+use minifloat_nn::kernels::{GemmKernel, GemmKind};
+use minifloat_nn::report;
+use minifloat_nn::util::bench::Bencher;
+use minifloat_nn::util::rng::Rng;
+
+fn main() {
+    println!("== regenerating Table II / Fig. 8 (simulated cluster) ==");
+    let rows = report::run_table2(42);
+    print!("{}", report::table2_text(&rows));
+    println!();
+    print!("{}", report::fig8_text(&rows));
+
+    println!("\n== simulator throughput (simulated cycles / wall second) ==");
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(9);
+    for (kind, label) in [
+        (GemmKind::FmaF64, "sim FP64 64x64"),
+        (GemmKind::FmaSimd(ScalarFmt::H), "sim FP16 64x64"),
+        (GemmKind::ExSdotp(OpWidth::BtoH), "sim FP8->16 64x64"),
+    ] {
+        let (m, n, k) = (64, 64, 64);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+        let bm: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+        let kern = GemmKernel::new(kind, m, n, k);
+        let cycles = kern.run(&a, &bm).cycles as f64;
+        b.bench_throughput(label, cycles, || kern.run(&a, &bm).cycles);
+    }
+}

@@ -1,0 +1,60 @@
+//! Microbenchmarks of the softfloat substrate — the hot path of the
+//! whole cluster simulator (every simulated FP instruction lands here).
+
+use minifloat_nn::softfloat::{add, cast, ex_fma, fma, mul};
+use minifloat_nn::util::bench::Bencher;
+use minifloat_nn::util::rng::Rng;
+use minifloat_nn::{RoundingMode, FP16, FP32, FP64, FP8};
+
+fn main() {
+    let mut b = Bencher::new();
+    let rm = RoundingMode::Rne;
+    let mut rng = Rng::new(1);
+    let vals16: Vec<u64> = (0..1024).map(|_| rng.next_u64() & 0x7bff).collect();
+    let vals32: Vec<u64> = (0..1024).map(|_| rng.next_u64() & 0x7f7f_ffff).collect();
+    let vals64: Vec<u64> = (0..1024).map(|_| rng.next_u64() & 0x7fef_ffff_ffff_ffff).collect();
+
+    println!("== softfloat op throughput (1024 ops per iteration) ==");
+    b.bench_throughput("fp16 add x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for w in 0..1024 {
+            acc ^= add(FP16, vals16[w], vals16[(w + 1) & 1023], rm);
+        }
+        acc
+    });
+    b.bench_throughput("fp16 mul x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for w in 0..1024 {
+            acc ^= mul(FP16, vals16[w], vals16[(w + 7) & 1023], rm);
+        }
+        acc
+    });
+    b.bench_throughput("fp32 fma chain x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for w in 0..1024 {
+            acc = fma(FP32, vals32[w], vals32[(w + 3) & 1023], acc & 0x7f7f_ffff, rm);
+        }
+        acc
+    });
+    b.bench_throughput("fp64 fma chain x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for w in 0..1024 {
+            acc = fma(FP64, vals64[w], vals64[(w + 3) & 1023], acc & 0x7fef_ffff_ffff_ffff, rm);
+        }
+        acc
+    });
+    b.bench_throughput("exfma fp16->fp32 chain x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for w in 0..1024 {
+            acc = ex_fma(FP16, FP32, vals16[w], vals16[(w + 5) & 1023], acc & 0x7f7f_ffff, rm);
+        }
+        acc
+    });
+    b.bench_throughput("cast fp32->fp8 x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for w in 0..1024 {
+            acc ^= cast(FP32, FP8, vals32[w], rm);
+        }
+        acc
+    });
+}

@@ -1,0 +1,122 @@
+//! TCDM + global memory + per-cycle bank arbitration (the cluster's
+//! `Bus` implementation).
+
+use super::dma::DmaEngine;
+use super::{ClusterCfg, MemStats, GLOBAL_BASE, TCDM_BASE};
+use crate::core::Bus;
+
+/// Shared memory fabric.
+pub struct ClusterMem {
+    /// Scratchpad bytes.
+    pub tcdm: Vec<u8>,
+    /// Global (bulk) memory bytes.
+    pub global: Vec<u8>,
+    /// DMA engine.
+    pub dma: DmaEngine,
+    /// Fabric statistics.
+    pub stats: MemStats,
+    cfg: ClusterCfg,
+    /// Which requester (if any) holds each bank this cycle.
+    bank_taken: Vec<bool>,
+}
+
+impl ClusterMem {
+    /// Allocate the fabric.
+    pub fn new(cfg: ClusterCfg) -> Self {
+        ClusterMem {
+            tcdm: vec![0; cfg.tcdm_size as usize],
+            global: vec![0; cfg.global_size as usize],
+            dma: DmaEngine::default(),
+            stats: MemStats::default(),
+            cfg,
+            bank_taken: vec![false; cfg.banks as usize],
+        }
+    }
+
+    /// Reset per-cycle arbitration state.
+    pub fn begin_cycle(&mut self, _cycle: u64) {
+        self.bank_taken.fill(false);
+    }
+
+    fn bank_of(&self, addr: u64) -> Option<usize> {
+        if (TCDM_BASE..TCDM_BASE + self.cfg.tcdm_size as u64).contains(&addr) {
+            Some((((addr - TCDM_BASE) >> 3) % self.cfg.banks as u64) as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Raw byte write (host/DMA path, no arbitration).
+    pub fn store_bytes(&mut self, addr: u64, bytes: &[u8]) {
+        let (mem, off) = self.region_mut(addr);
+        mem[off..off + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Raw byte read (host/DMA path, no arbitration).
+    pub fn load_bytes(&self, addr: u64, len: usize) -> Vec<u8> {
+        let (mem, off) = self.region(addr);
+        mem[off..off + len].to_vec()
+    }
+
+    fn region(&self, addr: u64) -> (&[u8], usize) {
+        if addr >= GLOBAL_BASE {
+            (&self.global, (addr - GLOBAL_BASE) as usize)
+        } else {
+            assert!(addr >= TCDM_BASE, "access below TCDM base: {addr:#x}");
+            (&self.tcdm, (addr - TCDM_BASE) as usize)
+        }
+    }
+
+    fn region_mut(&mut self, addr: u64) -> (&mut Vec<u8>, usize) {
+        if addr >= GLOBAL_BASE {
+            (&mut self.global, (addr - GLOBAL_BASE) as usize)
+        } else {
+            assert!(addr >= TCDM_BASE, "access below TCDM base: {addr:#x}");
+            (&mut self.tcdm, (addr - TCDM_BASE) as usize)
+        }
+    }
+}
+
+impl Bus for ClusterMem {
+    fn request(&mut self, _requester: u32, addr: u64, _write: bool) -> bool {
+        match self.bank_of(addr) {
+            Some(b) => {
+                if self.bank_taken[b] {
+                    self.stats.conflicts += 1;
+                    false
+                } else {
+                    self.bank_taken[b] = true;
+                    self.stats.grants += 1;
+                    true
+                }
+            }
+            // Global memory: un-arbitrated convenience port.
+            None => true,
+        }
+    }
+
+    fn read64(&mut self, addr: u64) -> u64 {
+        let b = self.load_bytes(addr & !7, 8);
+        u64::from_le_bytes(b.try_into().unwrap())
+    }
+
+    fn write_n(&mut self, addr: u64, value: u64, bytes: u32) {
+        self.store_bytes(addr, &value.to_le_bytes()[..bytes as usize]);
+    }
+
+    fn dma_src(&mut self, addr: u64) {
+        self.dma.src = addr;
+    }
+
+    fn dma_dst(&mut self, addr: u64) {
+        self.dma.dst = addr;
+    }
+
+    fn dma_copy(&mut self, len: u64) -> u32 {
+        self.dma.enqueue(len)
+    }
+
+    fn dma_busy(&self) -> u32 {
+        self.dma.outstanding()
+    }
+}

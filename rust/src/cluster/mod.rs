@@ -1,0 +1,198 @@
+//! The compute cluster (Fig. 6): eight MiniFloat-NN PEs + one DMA core
+//! sharing a 32-bank scratchpad (TCDM) and an instruction cache.
+//!
+//! ## Memory system
+//!
+//! * **TCDM**: 128 kB software-managed scratchpad, 32 × 64-bit banks,
+//!   word-interleaved (`bank = (addr >> 3) % 32`). Each bank serves one
+//!   access per cycle; cores whose accesses collide retry next cycle
+//!   (round-robin priority rotates every cycle). SSR ports, FP
+//!   loads/stores and integer loads/stores all arbitrate here.
+//! * **Global memory**: bulk storage reachable by the DMA engine (and,
+//!   for convenience, by direct accesses at a fixed latency-free port —
+//!   benchmarks keep all hot data in TCDM like the paper, which only
+//!   evaluates "GEMM sizes for which all the data fits in the local
+//!   memory").
+//! * **DMA**: a queue of 1-D transfers processed at 64 B/cycle,
+//!   modelling the dedicated mover core's bandwidth without stealing
+//!   TCDM bank slots (simplification; the paper's benchmarks don't
+//!   overlap DMA with compute either).
+//!
+//! The instruction cache is assumed warm (the FREP buffer absorbs the
+//! inner-loop fetch pressure, which is its purpose).
+
+pub mod dma;
+pub mod mem;
+#[cfg(test)]
+mod tests;
+
+use crate::core::{Core, CoreStats};
+use crate::isa::Instr;
+use mem::ClusterMem;
+
+/// Cluster configuration (defaults follow the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterCfg {
+    /// Number of compute PEs (8 in the paper).
+    pub n_cores: u32,
+    /// TCDM bytes (128 kB in the paper).
+    pub tcdm_size: u32,
+    /// TCDM banks (32 in the paper).
+    pub banks: u32,
+    /// Global memory bytes.
+    pub global_size: u32,
+}
+
+impl Default for ClusterCfg {
+    fn default() -> Self {
+        Self { n_cores: 8, tcdm_size: 128 * 1024, banks: 32, global_size: 16 * 1024 * 1024 }
+    }
+}
+
+/// Byte address where the TCDM window starts.
+pub const TCDM_BASE: u64 = 0x0001_0000;
+/// Byte address where global memory starts.
+pub const GLOBAL_BASE: u64 = 0x8000_0000;
+
+/// The cluster: cores + shared memory fabric.
+pub struct Cluster {
+    /// Compute cores (index = hart id).
+    pub cores: Vec<Core>,
+    /// Shared memory + arbiter + DMA (the `Bus` implementation).
+    pub mem: ClusterMem,
+    cycle: u64,
+}
+
+impl Cluster {
+    /// Build a cluster where every core runs `program(core_id)`.
+    pub fn new(cfg: ClusterCfg, program: impl Fn(u32) -> Vec<Instr>) -> Self {
+        let cores = (0..cfg.n_cores).map(|i| Core::new(i, program(i))).collect();
+        Cluster { cores, mem: ClusterMem::new(cfg), cycle: 0 }
+    }
+
+    /// Build a cluster running one shared program (cores branch on
+    /// `mhartid`, like real SPMD kernels).
+    pub fn new_spmd(cfg: ClusterCfg, program: Vec<Instr>) -> Self {
+        Self::new(cfg, |_| program.clone())
+    }
+
+    /// Advance one cycle.
+    pub fn tick(&mut self) {
+        self.cycle += 1;
+        self.mem.begin_cycle(self.cycle);
+        self.mem.dma.tick(&mut self.mem.tcdm, &mut self.mem.global);
+        // Rotate service order for arbitration fairness.
+        let n = self.cores.len();
+        for k in 0..n {
+            let i = (k + self.cycle as usize) % n;
+            self.cores[i].tick(&mut self.mem);
+        }
+        // Hardware barrier: release once every live core has arrived.
+        let mut any_waiting = false;
+        let mut all_ready = true;
+        for c in &self.cores {
+            if c.at_barrier {
+                any_waiting = true;
+                if !c.barrier_ready() {
+                    all_ready = false;
+                }
+            } else if !c.done() {
+                all_ready = false;
+            }
+        }
+        if any_waiting && all_ready {
+            for c in &mut self.cores {
+                c.release_barrier();
+            }
+        }
+    }
+
+    /// Run until every core is done (or `max_cycles`). Returns the cycle
+    /// count.
+    pub fn run(&mut self, max_cycles: u64) -> u64 {
+        while self.cycle < max_cycles {
+            if self.cores.iter().all(|c| c.done()) {
+                break;
+            }
+            self.tick();
+        }
+        assert!(
+            self.cores.iter().all(|c| c.done()),
+            "cluster did not finish within {max_cycles} cycles (deadlock or runaway kernel?)"
+        );
+        self.cycle
+    }
+
+    /// Total cycles elapsed.
+    pub fn cycles(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Aggregate core statistics.
+    pub fn stats(&self) -> CoreStats {
+        let mut agg = CoreStats::default();
+        for c in &self.cores {
+            let s = &c.stats;
+            agg.cycles = agg.cycles.max(s.cycles);
+            agg.int_retired += s.int_retired;
+            agg.fp_issued += s.fp_issued;
+            agg.flops += s.flops;
+            agg.fp_idle += s.fp_idle;
+            agg.stall_raw += s.stall_raw;
+            agg.stall_bank += s.stall_bank;
+            agg.stall_fifo_full += s.stall_fifo_full;
+            agg.ssr_elems += s.ssr_elems;
+            agg.ops_addmul += s.ops_addmul;
+            agg.ops_sdotp += s.ops_sdotp;
+            agg.ops_cast += s.ops_cast;
+            agg.ops_comp += s.ops_comp;
+            agg.ops_fmem += s.ops_fmem;
+        }
+        agg
+    }
+
+    /// Achieved FLOP/cycle across the cluster (Fig. 8's metric).
+    pub fn flop_per_cycle(&self) -> f64 {
+        self.stats().flops as f64 / self.cycle.max(1) as f64
+    }
+
+    // --------------------------- host-side data access (no timing cost)
+
+    /// Write bytes into memory (setup; bypasses timing).
+    pub fn store_bytes(&mut self, addr: u64, bytes: &[u8]) {
+        self.mem.store_bytes(addr, bytes);
+    }
+
+    /// Read bytes from memory (verification; bypasses timing).
+    pub fn load_bytes(&self, addr: u64, len: usize) -> Vec<u8> {
+        self.mem.load_bytes(addr, len)
+    }
+
+    /// Store a slice of `u64` words.
+    pub fn store_words(&mut self, addr: u64, words: &[u64]) {
+        for (i, w) in words.iter().enumerate() {
+            self.mem.store_bytes(addr + i as u64 * 8, &w.to_le_bytes());
+        }
+    }
+
+    /// Load `n` 64-bit words.
+    pub fn load_words(&self, addr: u64, n: usize) -> Vec<u64> {
+        (0..n)
+            .map(|i| {
+                let b = self.mem.load_bytes(addr + i as u64 * 8, 8);
+                u64::from_le_bytes(b.try_into().unwrap())
+            })
+            .collect()
+    }
+}
+
+/// Bank-conflict and DMA counters for the fabric.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemStats {
+    /// Granted TCDM accesses.
+    pub grants: u64,
+    /// Rejected (conflicting) TCDM access attempts.
+    pub conflicts: u64,
+    /// Bytes moved by the DMA engine.
+    pub dma_bytes: u64,
+}

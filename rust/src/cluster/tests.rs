@@ -1,0 +1,329 @@
+//! Integration tests: programs through the full core + cluster stack.
+
+use super::{Cluster, ClusterCfg, TCDM_BASE};
+use crate::formats::{FP16, FP32};
+use crate::isa::csr::addr as csr;
+use crate::isa::instr::regs::*;
+use crate::isa::instr::{Instr, OpWidth, ScalarFmt};
+use crate::softfloat::{from_f64, to_f64};
+
+fn one_core_cfg() -> ClusterCfg {
+    ClusterCfg { n_cores: 1, ..ClusterCfg::default() }
+}
+
+/// Emit `li reg, value` (lui+addi or addi).
+fn li(prog: &mut Vec<Instr>, rd: crate::isa::Reg, value: i64) {
+    let v = value as i32;
+    if (-2048..2048).contains(&v) {
+        prog.push(Instr::Addi { rd, rs1: ZERO, imm: v });
+    } else {
+        let hi = (v + 0x800) >> 12;
+        let lo = v - (hi << 12);
+        prog.push(Instr::Lui { rd, imm: hi });
+        if lo != 0 {
+            prog.push(Instr::Addi { rd, rs1: rd, imm: lo });
+        }
+    }
+}
+
+#[test]
+fn integer_loop_counts() {
+    // x5 = sum of 1..=10 via a branch loop.
+    let mut p = vec![];
+    li(&mut p, x(5), 0); // acc
+    li(&mut p, x(6), 1); // i
+    li(&mut p, x(7), 11); // bound
+    p.push(Instr::Add { rd: x(5), rs1: x(5), rs2: x(6) });
+    p.push(Instr::Addi { rd: x(6), rs1: x(6), imm: 1 });
+    p.push(Instr::Bne { rs1: x(6), rs2: x(7), offset: -2 });
+    p.push(Instr::Halt);
+    let mut cl = Cluster::new_spmd(one_core_cfg(), p);
+    cl.run(10_000);
+    assert_eq!(cl.cores[0].regs[5], 55);
+    // Taken branches cost 2 cycles; sanity bound on the cycle count.
+    assert!(cl.cycles() > 30 && cl.cycles() < 100, "cycles={}", cl.cycles());
+}
+
+#[test]
+fn fp_load_compute_store_roundtrip() {
+    // f3 = f1 * f2 + f3 over FP64 memory operands; store back.
+    let a = TCDM_BASE as i64;
+    let mut p = vec![];
+    li(&mut p, x(10), a);
+    p.push(Instr::FLoad { fmt: ScalarFmt::D, fd: f(1), rs1: x(10), imm: 0 });
+    p.push(Instr::FLoad { fmt: ScalarFmt::D, fd: f(2), rs1: x(10), imm: 8 });
+    p.push(Instr::FLoad { fmt: ScalarFmt::D, fd: f(3), rs1: x(10), imm: 16 });
+    p.push(Instr::Fmadd { fmt: ScalarFmt::D, fd: f(3), fs1: f(1), fs2: f(2), fs3: f(3) });
+    p.push(Instr::FStore { fmt: ScalarFmt::D, rs1: x(10), fs: f(3), imm: 24 });
+    p.push(Instr::Halt);
+    let mut cl = Cluster::new_spmd(one_core_cfg(), p);
+    cl.store_words(TCDM_BASE, &[(2.5f64).to_bits(), (4.0f64).to_bits(), (1.0f64).to_bits()]);
+    cl.run(10_000);
+    let out = cl.load_words(TCDM_BASE + 24, 1)[0];
+    assert_eq!(f64::from_bits(out), 2.5 * 4.0 + 1.0);
+}
+
+#[test]
+fn ssr_frep_dot_product_fp64() {
+    // Classic Snitch idiom: ft0·ft1 dot product with FREP, no explicit
+    // loads in the loop.
+    let n = 64u32;
+    let a_base = TCDM_BASE;
+    let b_base = TCDM_BASE + 1024;
+    let mut p = vec![];
+    // SSR0: A[0..n], 1-D, stride 8.
+    li(&mut p, x(5), n as i64);
+    p.push(Instr::ScfgWi { rs1: x(5), cfg: 0 }); // bound0 (streamer 0)
+    li(&mut p, x(5), 8);
+    p.push(Instr::ScfgWi { rs1: x(5), cfg: 8 }); // stride0
+    li(&mut p, x(5), a_base as i64);
+    p.push(Instr::ScfgWi { rs1: x(5), cfg: 16 }); // rptr, 1-D
+    // SSR1: B.
+    li(&mut p, x(5), n as i64);
+    p.push(Instr::ScfgWi { rs1: x(5), cfg: 32 });
+    li(&mut p, x(5), 8);
+    p.push(Instr::ScfgWi { rs1: x(5), cfg: 40 });
+    li(&mut p, x(5), b_base as i64);
+    p.push(Instr::ScfgWi { rs1: x(5), cfg: 48 });
+    // acc = 0; enable SSRs; frep n-1 over one fmadd (body runs n times).
+    p.push(Instr::FmvWX { fd: f(3), rs1: ZERO });
+    p.push(Instr::Csrrwi { rd: ZERO, csr: csr::SSR, imm: 1 });
+    li(&mut p, x(6), n as i64 - 1);
+    p.push(Instr::FrepO { rep: x(6), n_inst: 1 });
+    p.push(Instr::Fmadd { fmt: ScalarFmt::D, fd: f(3), fs1: FT0, fs2: FT1, fs3: f(3) });
+    p.push(Instr::Csrrwi { rd: ZERO, csr: csr::SSR, imm: 0 });
+    li(&mut p, x(10), (TCDM_BASE + 2048) as i64);
+    p.push(Instr::FStore { fmt: ScalarFmt::D, rs1: x(10), fs: f(3), imm: 0 });
+    p.push(Instr::Halt);
+
+    let mut cl = Cluster::new_spmd(one_core_cfg(), p);
+    let mut expect = 0f64;
+    for i in 0..n as u64 {
+        let av = (i as f64) * 0.5;
+        let bv = 2.0 + i as f64;
+        expect += av * bv;
+        cl.store_words(a_base + i * 8, &[av.to_bits()]);
+        cl.store_words(b_base + i * 8, &[bv.to_bits()]);
+    }
+    let cycles = cl.run(100_000);
+    let got = f64::from_bits(cl.load_words(TCDM_BASE + 2048, 1)[0]);
+    assert_eq!(got, expect, "dot product numerics");
+    // The FMA chain is serialized by the accumulator RAW dependency
+    // (ADDMUL latency 3) → ≥ 3 cycles per element; SSR+FREP keep it well
+    // below a load/compute/branch loop (~8+ per element).
+    assert!(cycles > 3 * n as u64 && cycles < 6 * n as u64, "cycles={cycles}");
+    assert_eq!(cl.cores[0].stats.ssr_elems, 2 * n as u64);
+}
+
+#[test]
+fn exsdotp_pipeline_full_stack() {
+    // SIMD exsdotp 16→32 through SSRs: one instruction consumes 4 FP16
+    // pairs and updates 2 FP32 accumulators.
+    let n_words = 8u64; // 8 × (4 FP16) = 32 pairs
+    let a_base = TCDM_BASE;
+    let b_base = TCDM_BASE + 512;
+    let mut p = vec![];
+    for (s, base) in [(0u16, a_base), (1, b_base)] {
+        li(&mut p, x(5), n_words as i64);
+        p.push(Instr::ScfgWi { rs1: x(5), cfg: s * 32 });
+        li(&mut p, x(5), 8);
+        p.push(Instr::ScfgWi { rs1: x(5), cfg: s * 32 + 8 });
+        li(&mut p, x(5), base as i64);
+        p.push(Instr::ScfgWi { rs1: x(5), cfg: s * 32 + 16 });
+    }
+    p.push(Instr::FmvWX { fd: f(3), rs1: ZERO }); // acc = [0.0f32; 2]
+    p.push(Instr::Csrrwi { rd: ZERO, csr: csr::SSR, imm: 1 });
+    li(&mut p, x(6), n_words as i64 - 1);
+    p.push(Instr::FrepO { rep: x(6), n_inst: 1 });
+    p.push(Instr::ExSdotp { w: OpWidth::HtoS, fd: f(3), fs1: FT0, fs2: FT1 });
+    p.push(Instr::Csrrwi { rd: ZERO, csr: csr::SSR, imm: 0 });
+    li(&mut p, x(10), (TCDM_BASE + 1024) as i64);
+    p.push(Instr::FStore { fmt: ScalarFmt::D, rs1: x(10), fs: f(3), imm: 0 });
+    p.push(Instr::Halt);
+
+    let mut cl = Cluster::new_spmd(one_core_cfg(), p);
+    // Fill A and B with small exact values; track the expected FP32 sums
+    // (exact in f64, and exactly representable: products of halves).
+    let mut lane0 = 0f64;
+    let mut lane1 = 0f64;
+    for w in 0..n_words {
+        let mut aw = 0u64;
+        let mut bw = 0u64;
+        for l in 0..4u64 {
+            let av = ((w * 4 + l) % 7) as f64 * 0.5;
+            let bv = ((w * 4 + l) % 5) as f64 * 0.25;
+            aw |= from_f64(av, FP16, crate::softfloat::RoundingMode::Rne) << (l * 16);
+            bw |= from_f64(bv, FP16, crate::softfloat::RoundingMode::Rne) << (l * 16);
+            if l < 2 {
+                lane0 += av * bv;
+            } else {
+                lane1 += av * bv;
+            }
+        }
+        cl.store_words(a_base + w * 8, &[aw]);
+        cl.store_words(b_base + w * 8, &[bw]);
+    }
+    cl.run(100_000);
+    let out = cl.load_words(TCDM_BASE + 1024, 1)[0];
+    let out0 = to_f64(out & 0xffff_ffff, FP32);
+    let out1 = to_f64(out >> 32, FP32);
+    assert_eq!(out0, lane0);
+    assert_eq!(out1, lane1);
+    // 4 FLOP/lane-pair × 2 units × 8 instructions.
+    assert_eq!(cl.cores[0].stats.flops, 8 * 8);
+}
+
+#[test]
+fn barrier_synchronizes_cores() {
+    // Core 0 writes a flag after a long loop; all cores barrier; then
+    // every core reads the flag — all must see it.
+    let flag = TCDM_BASE + 4096;
+    let make = |id: u32| {
+        let mut p = vec![];
+        if id == 0 {
+            // Busy loop then store flag.
+            li(&mut p, x(5), 200);
+            p.push(Instr::Addi { rd: x(5), rs1: x(5), imm: -1 });
+            p.push(Instr::Bne { rs1: x(5), rs2: ZERO, offset: -1 });
+            li(&mut p, x(6), 42);
+            li(&mut p, x(7), flag as i64);
+            p.push(Instr::Sw { rs1: x(7), rs2: x(6), imm: 0 });
+        }
+        p.push(Instr::Barrier);
+        li(&mut p, x(7), flag as i64);
+        p.push(Instr::Lw { rd: x(8), rs1: x(7), imm: 0 });
+        p.push(Instr::Halt);
+        p
+    };
+    let mut cl = Cluster::new(ClusterCfg { n_cores: 4, ..ClusterCfg::default() }, make);
+    cl.run(100_000);
+    for c in &cl.cores {
+        assert_eq!(c.regs[8], 42, "core {} missed the flag", c.id);
+    }
+}
+
+#[test]
+fn bank_conflicts_slow_down_colliding_cores() {
+    // Unit-stride streams spread across banks (fast even when all cores
+    // share a region — the SSR FIFOs phase-shift them apart). A stride
+    // of 256 B aliases every access onto ONE bank for all 8 cores: the
+    // single bank port serializes the cluster.
+    let run = |bank_aliasing: bool| -> u64 {
+        let make = move |id: u32| {
+            // id·256 keeps every core's whole stream on bank 0 when the
+            // stride aliases (256 B = banks × width).
+            let base = TCDM_BASE + id as u64 * 256;
+            let stride: i64 = if bank_aliasing { 256 } else { 8 };
+            let mut p = vec![];
+            li(&mut p, x(5), 256);
+            p.push(Instr::ScfgWi { rs1: x(5), cfg: 0 });
+            li(&mut p, x(5), stride);
+            p.push(Instr::ScfgWi { rs1: x(5), cfg: 8 });
+            li(&mut p, x(5), base as i64);
+            p.push(Instr::ScfgWi { rs1: x(5), cfg: 16 });
+            p.push(Instr::FmvWX { fd: f(3), rs1: ZERO });
+            p.push(Instr::Csrrwi { rd: ZERO, csr: csr::SSR, imm: 1 });
+            li(&mut p, x(6), 255);
+            p.push(Instr::FrepO { rep: x(6), n_inst: 1 });
+            p.push(Instr::Fadd { fmt: ScalarFmt::D, fd: f(4), fs1: FT0, fs2: f(3) });
+            p.push(Instr::Csrrwi { rd: ZERO, csr: csr::SSR, imm: 0 });
+            p.push(Instr::Halt);
+            p
+        };
+        let mut cl = Cluster::new(ClusterCfg { n_cores: 8, ..ClusterCfg::default() }, make);
+        cl.run(1_000_000)
+    };
+    let fast = run(false);
+    let slow = run(true);
+    // Aliasing: 8 cores × 256 elements through one bank port ≈ 2048
+    // cycles (fully serialized). Spread: bounded by the FAdd WAW chain
+    // (3 cycles/element), not the memory system.
+    assert!(slow >= 2048, "aliasing case must serialize on the single bank: {slow}");
+    assert!(
+        slow > fast * 2,
+        "conflicts should dominate the spread case: spread={fast}, aliasing={slow}"
+    );
+}
+
+#[test]
+fn fp16_simd_fmadd_numerics() {
+    // 4-lane vectorial FMA through registers.
+    let mut p = vec![];
+    li(&mut p, x(10), TCDM_BASE as i64);
+    p.push(Instr::FLoad { fmt: ScalarFmt::D, fd: f(1), rs1: x(10), imm: 0 });
+    p.push(Instr::FLoad { fmt: ScalarFmt::D, fd: f(2), rs1: x(10), imm: 8 });
+    p.push(Instr::FmvWX { fd: f(3), rs1: ZERO });
+    p.push(Instr::Fmadd { fmt: ScalarFmt::H, fd: f(3), fs1: f(1), fs2: f(2), fs3: f(3) });
+    p.push(Instr::FStore { fmt: ScalarFmt::D, rs1: x(10), fs: f(3), imm: 16 });
+    p.push(Instr::Halt);
+    let mut cl = Cluster::new_spmd(one_core_cfg(), p);
+    let rm = crate::softfloat::RoundingMode::Rne;
+    let mut aw = 0u64;
+    let mut bw = 0u64;
+    let vals = [(1.5, 2.0), (0.25, 8.0), (-3.0, 0.5), (10.0, 0.125)];
+    for (l, (av, bv)) in vals.iter().enumerate() {
+        aw |= from_f64(*av, FP16, rm) << (l * 16);
+        bw |= from_f64(*bv, FP16, rm) << (l * 16);
+    }
+    cl.store_words(TCDM_BASE, &[aw, bw]);
+    cl.run(10_000);
+    let out = cl.load_words(TCDM_BASE + 16, 1)[0];
+    for (l, (av, bv)) in vals.iter().enumerate() {
+        let got = to_f64((out >> (l * 16)) & 0xffff, FP16);
+        assert_eq!(got, av * bv, "lane {l}");
+    }
+}
+
+#[test]
+fn dma_roundtrip_via_instructions() {
+    use super::GLOBAL_BASE;
+    let mut p = vec![];
+    li(&mut p, x(5), GLOBAL_BASE as i64);
+    p.push(Instr::DmSrc { rs1: x(5) });
+    li(&mut p, x(6), TCDM_BASE as i64);
+    p.push(Instr::DmDst { rs1: x(6) });
+    li(&mut p, x(7), 512);
+    p.push(Instr::DmCpy { rd: x(8), rs1: x(7) });
+    // Wait for completion.
+    p.push(Instr::DmStat { rd: x(9) });
+    p.push(Instr::Bne { rs1: x(9), rs2: ZERO, offset: -1 });
+    p.push(Instr::Halt);
+    let mut cl = Cluster::new_spmd(one_core_cfg(), p);
+    let data: Vec<u8> = (0..512u32).map(|i| (i % 251) as u8).collect();
+    cl.store_bytes(GLOBAL_BASE, &data);
+    cl.run(100_000);
+    assert_eq!(cl.load_bytes(TCDM_BASE, 512), data);
+}
+
+#[test]
+fn alt_format_kernel_differs_by_one_csr_write() {
+    // §III-E: run the same SIMD FMA twice — once with src_is_alt=0
+    // (FP16) and once with src_is_alt=1 (FP16alt). Inputs chosen so the
+    // interpretations differ.
+    let run = |alt: bool| -> u64 {
+        let mut p = vec![];
+        li(&mut p, x(10), TCDM_BASE as i64);
+        if alt {
+            // Set bit 8 of fcsr (src_is_alt). csrrwi imm is 5 bits, so
+            // build the value in a register.
+            li(&mut p, x(5), 1 << 8);
+            p.push(Instr::Csrrw { rd: ZERO, csr: csr::FCSR, rs1: x(5) });
+        }
+        p.push(Instr::FLoad { fmt: ScalarFmt::D, fd: f(1), rs1: x(10), imm: 0 });
+        p.push(Instr::FLoad { fmt: ScalarFmt::D, fd: f(2), rs1: x(10), imm: 8 });
+        p.push(Instr::FmvWX { fd: f(3), rs1: ZERO });
+        p.push(Instr::Fmadd { fmt: ScalarFmt::H, fd: f(3), fs1: f(1), fs2: f(2), fs3: f(3) });
+        p.push(Instr::FStore { fmt: ScalarFmt::D, rs1: x(10), fs: f(3), imm: 16 });
+        p.push(Instr::Halt);
+        let mut cl = Cluster::new_spmd(one_core_cfg(), p);
+        // The same bit pattern means different values in FP16 vs FP16alt.
+        cl.store_words(TCDM_BASE, &[0x3c00_3c00_3c00_3c00, 0x4000_4000_4000_4000]);
+        cl.run(10_000);
+        cl.load_words(TCDM_BASE + 16, 1)[0]
+    };
+    let std_result = run(false);
+    let alt_result = run(true);
+    // FP16: 1.0 * 2.0 = 2.0 per lane.
+    assert_eq!(to_f64(std_result & 0xffff, FP16), 2.0);
+    assert_ne!(std_result, alt_result, "alt bit must change semantics");
+}

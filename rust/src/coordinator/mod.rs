@@ -1,0 +1,175 @@
+//! L3 coordinator: the end-to-end low-precision-training driver.
+//!
+//! The paper's contribution lives at the ISA/FPU level, so the
+//! coordinator is deliberately thin (per the architecture): it owns the
+//! process lifecycle, the dataset, the batch loop and the metrics, and
+//! drives the AOT-compiled HFP8 training artifacts through the PJRT
+//! runtime. Python authored the compute graph once, at build time; all
+//! of training runs from this Rust loop.
+
+pub mod data;
+
+use crate::runtime::{Executable, Runtime, Tensor};
+use anyhow::{Context, Result};
+use data::SpiralDataset;
+
+/// Model shape constants — must match `python/compile/model.py`
+/// (artifacts are shape-specialized; mismatches fail at execute time).
+pub mod shape {
+    /// Batch size compiled into the artifacts.
+    pub const BATCH: usize = 64;
+    /// Input embedding width.
+    pub const FEATURES: usize = 4;
+    /// Hidden width.
+    pub const HIDDEN: usize = 32;
+    /// Output classes (3 spiral arms + padding).
+    pub const CLASSES: usize = 4;
+}
+
+/// Which training-step artifact to drive.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Precision {
+    /// HFP8 mixed-precision (FP8alt forward / FP8 backward, FP16 acc).
+    Hfp8,
+    /// The f32 baseline.
+    Fp32,
+}
+
+impl Precision {
+    fn artifact(&self) -> &'static str {
+        match self {
+            Precision::Hfp8 => "train_step_hfp8",
+            Precision::Fp32 => "train_step_fp32",
+        }
+    }
+}
+
+/// Model parameters as runtime tensors (f32 master copies).
+pub struct Params {
+    tensors: Vec<Tensor>, // w1 b1 w2 b2 w3 b3
+}
+
+impl Params {
+    /// He-style init from a seed (mirrors `model.init_params`).
+    pub fn init(seed: u64) -> Self {
+        use shape::*;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut dense = |m: usize, n: usize| -> Tensor {
+            let scale = (2.0 / m as f64).sqrt();
+            Tensor::new((0..m * n).map(|_| (rng.gaussian() * scale) as f32).collect(), &[m, n])
+        };
+        let w1 = dense(FEATURES, HIDDEN);
+        let w2 = dense(HIDDEN, HIDDEN);
+        let w3 = dense(HIDDEN, CLASSES);
+        Params {
+            tensors: vec![
+                w1,
+                Tensor::zeros(&[HIDDEN]),
+                w2,
+                Tensor::zeros(&[HIDDEN]),
+                w3,
+                Tensor::zeros(&[CLASSES]),
+            ],
+        }
+    }
+}
+
+/// Per-step record for the loss curve (EXPERIMENTS.md E2E).
+#[derive(Clone, Copy, Debug)]
+pub struct StepLog {
+    /// Step index.
+    pub step: usize,
+    /// Training loss after the step.
+    pub loss: f32,
+}
+
+/// The training coordinator.
+pub struct Trainer {
+    step_exe: Executable,
+    predict_exe: Executable,
+    params: Params,
+    dataset: SpiralDataset,
+    rng: crate::util::rng::Rng,
+    /// Loss history.
+    pub history: Vec<StepLog>,
+}
+
+impl Trainer {
+    /// Load artifacts and set up the run.
+    pub fn new(artifacts_dir: &str, precision: Precision, seed: u64) -> Result<Self> {
+        let rt = Runtime::cpu().context("creating PJRT CPU client")?;
+        let step_exe = rt
+            .load_artifact(artifacts_dir, precision.artifact())
+            .with_context(|| format!("loading {} (run `make artifacts`)", precision.artifact()))?;
+        let predict_exe = rt.load_artifact(artifacts_dir, "predict_hfp8")?;
+        Ok(Trainer {
+            step_exe,
+            predict_exe,
+            params: Params::init(seed),
+            dataset: SpiralDataset::generate(300, seed ^ 0xD47A),
+            rng: crate::util::rng::Rng::new(seed ^ 0x5339),
+            history: Vec::new(),
+        })
+    }
+
+    /// Run one SGD step on a random batch; returns the loss.
+    pub fn step(&mut self) -> Result<f32> {
+        let (x, y) = self.dataset.batch(shape::BATCH, &mut self.rng);
+        let mut inputs = self.params.tensors.clone();
+        inputs.push(x);
+        inputs.push(y);
+        let mut out = self.step_exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 7, "train_step returns 6 params + loss, got {}", out.len());
+        let loss = out.pop().unwrap().data[0];
+        self.params.tensors = out;
+        let step = self.history.len();
+        self.history.push(StepLog { step, loss });
+        Ok(loss)
+    }
+
+    /// Train for `steps` batches; returns the final loss.
+    pub fn train(&mut self, steps: usize, log_every: usize) -> Result<f32> {
+        let mut last = f32::NAN;
+        for i in 0..steps {
+            last = self.step()?;
+            if log_every > 0 && (i % log_every == 0 || i + 1 == steps) {
+                println!("step {i:>4}  loss {last:.4}");
+            }
+        }
+        Ok(last)
+    }
+
+    /// Classification accuracy over the whole dataset (HFP8 forward).
+    pub fn accuracy(&mut self) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let n = self.dataset.len();
+        let mut idx = 0;
+        while idx + shape::BATCH <= n {
+            let (x, labels) = self.dataset.ordered_batch(idx, shape::BATCH);
+            let mut inputs = self.params.tensors.clone();
+            inputs.push(x);
+            let out = self.predict_exe.run(&inputs)?;
+            let logits = &out[0];
+            for (b, &label) in labels.iter().enumerate() {
+                let row = &logits.data[b * shape::CLASSES..(b + 1) * shape::CLASSES];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                correct += (pred == label as usize) as usize;
+                total += 1;
+            }
+            idx += shape::BATCH;
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Mean loss over the most recent `n` steps.
+    pub fn recent_loss(&self, n: usize) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(n)..];
+        tail.iter().map(|s| s.loss).sum::<f32>() / tail.len().max(1) as f32
+    }
+}

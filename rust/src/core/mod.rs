@@ -1,0 +1,9 @@
+//! The Snitch processing element (PE) model: pseudo dual-issue integer
+//! core + FP subsystem with SSR streamers and the FREP loop buffer,
+//! extended with the MiniFloat-NN SDOTP operation group (§III-E).
+
+pub mod pe;
+pub mod ssr;
+
+pub use pe::{latency, Bus, Core, CoreStats};
+pub use ssr::{cfg_regs, Ssr};

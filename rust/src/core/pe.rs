@@ -1,0 +1,752 @@
+//! The MiniFloat-NN processing element: a Snitch-style pseudo
+//! dual-issue RV32 core coupled to the extended FPU (§III-E).
+//!
+//! ## Timing model
+//!
+//! Two loosely-coupled engines advance each cycle:
+//!
+//! * the **integer core** retires ≤ 1 instruction/cycle; FP
+//!   instructions are not executed here but pushed into a FIFO toward
+//!   the FP subsystem (the Snitch "accelerator interface"), so integer
+//!   address arithmetic and loop control overlap FP compute — the
+//!   pseudo dual-issue that lets Snitch exceed 90% FPU utilization;
+//! * the **FP sequencer** issues ≤ 1 FP instruction/cycle from the FIFO
+//!   (or from the FREP loop buffer) into the fully-pipelined FPU,
+//!   subject to the register scoreboard and to TCDM bank grants for SSR
+//!   operands.
+//!
+//! Latencies follow the paper's pipeline configuration (§III-E / §IV-A):
+//! SDOTP 3, ADDMUL 3, CAST 2, COMP 1 — all fully pipelined, so they cost
+//! issue slots only through data dependencies (which GEMM kernels avoid
+//! by construction).
+//!
+//! Numerics are exact: every FP instruction executes on
+//! [`crate::softfloat`] / [`crate::exsdotp`] with the formats resolved
+//! through the FP CSR (`src_is_alt` / `dst_is_alt`).
+
+use super::ssr::Ssr;
+use crate::exsdotp::simd::{lane, set_lane, SimdExSdotp};
+use crate::formats::FpFormat;
+use crate::isa::csr::{addr as csr_addr, FpCsr};
+use crate::isa::instr::{FReg, Instr, OpWidth, Reg};
+use crate::softfloat;
+use std::collections::VecDeque;
+
+/// Pipeline depths per operation group (§IV-A).
+pub mod latency {
+    /// Expanding sum-of-dot-product group.
+    pub const SDOTP: u64 = 3;
+    /// FMA / add / mul group.
+    pub const ADDMUL: u64 = 3;
+    /// Conversion group.
+    pub const CAST: u64 = 2;
+    /// Comparison / sign-injection group.
+    pub const COMP: u64 = 1;
+    /// FP load-to-use latency from TCDM.
+    pub const FLOAD: u64 = 3;
+}
+
+/// Memory access interface the cluster provides to each core.
+pub trait Bus {
+    /// Claim a bank slot for a (64-bit word) access this cycle. Returns
+    /// false on a bank conflict — the caller must retry next cycle.
+    fn request(&mut self, requester: u32, addr: u64, write: bool) -> bool;
+    /// Read a 64-bit word (little-endian) at `addr` (byte address).
+    fn read64(&mut self, addr: u64) -> u64;
+    /// Write the low `bytes` bytes of `value` at `addr`.
+    fn write_n(&mut self, addr: u64, value: u64, bytes: u32);
+    /// DMA frontend (only the DMA core issues these).
+    fn dma_src(&mut self, addr: u64);
+    /// Set DMA destination address.
+    fn dma_dst(&mut self, addr: u64);
+    /// Enqueue a copy of `len` bytes; returns a transfer id.
+    fn dma_copy(&mut self, len: u64) -> u32;
+    /// Outstanding DMA transfers.
+    fn dma_busy(&self) -> u32;
+}
+
+/// Issue-stall and throughput counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoreStats {
+    /// Total cycles ticked.
+    pub cycles: u64,
+    /// Integer instructions retired.
+    pub int_retired: u64,
+    /// FP instructions issued to the FPU.
+    pub fp_issued: u64,
+    /// FLOP performed (paper counting: FMA = 2·lanes, ExSdotp = 4·units).
+    pub flops: u64,
+    /// Cycles the FP sequencer had nothing to issue.
+    pub fp_idle: u64,
+    /// Issue stalls: operand not ready (scoreboard).
+    pub stall_raw: u64,
+    /// Issue stalls: TCDM bank conflict on an SSR/load port.
+    pub stall_bank: u64,
+    /// Int-core stalls: FP FIFO full.
+    pub stall_fifo_full: u64,
+    /// SSR elements streamed (reads + writes).
+    pub ssr_elems: u64,
+    /// ADDMUL-group ops issued (fmadd/fadd/fmul, any format).
+    pub ops_addmul: u64,
+    /// SDOTP-group ops issued (exsdotp/exvsum/vsum).
+    pub ops_sdotp: u64,
+    /// CAST-group ops issued (fcvt).
+    pub ops_cast: u64,
+    /// COMP-group ops issued (fsgnj & friends).
+    pub ops_comp: u64,
+    /// FP memory ops issued (fl*/fs*).
+    pub ops_fmem: u64,
+}
+
+/// An FP instruction as offloaded through the accelerator interface:
+/// memory operands are resolved by the integer core at offload time
+/// (the hardware sends the computed address along with the request), so
+/// later integer-register updates cannot race the queued access.
+#[derive(Clone, Copy, Debug)]
+struct FpOp {
+    instr: Instr,
+    /// Captured effective address for FLoad/FStore.
+    addr: u64,
+}
+
+/// FREP sequencer state.
+#[derive(Clone, Debug)]
+enum SeqState {
+    Normal,
+    /// Capturing the next `remaining` FP instructions into the buffer
+    /// while issuing them (first round).
+    Capturing { remaining: u8, rounds_left: u32, buf: Vec<FpOp>, inner: bool },
+    /// Replaying the captured buffer.
+    Replaying { pos: usize, rounds_left: u32, buf: Vec<FpOp>, inner: bool },
+}
+
+/// One Snitch-style PE.
+pub struct Core {
+    /// Hart id (cluster index).
+    pub id: u32,
+    /// Integer register file (x0 hardwired).
+    pub regs: [u32; 32],
+    /// 64-bit FP register file.
+    pub fregs: [u64; 32],
+    /// Program counter (instruction index).
+    pub pc: usize,
+    /// FP CSR (rounding mode + alt bits).
+    pub csr: FpCsr,
+    /// The three stream semantic registers.
+    pub ssrs: [Ssr; 3],
+    /// SSR master enable (CSR 0x7c0).
+    pub ssr_enabled: bool,
+    /// Waiting at the cluster barrier.
+    pub at_barrier: bool,
+    /// Counters.
+    pub stats: CoreStats,
+    program: Vec<Instr>,
+    halted: bool,
+    int_stall: u64,
+    fp_queue: VecDeque<FpOp>,
+    seq: SeqState,
+    scoreboard: [u64; 32], // ready-at cycle per FP register
+    now: u64,
+    /// Per-streamer prefetch FIFOs (read streams). The hardware SSR is a
+    /// data mover with a small FIFO; it decouples TCDM fetch timing from
+    /// FP issue, absorbing transient bank conflicts.
+    ssr_fifo: [VecDeque<u64>; 3],
+    /// Pending write-stream entries (addr, value) awaiting a bank slot.
+    ssr_wq: VecDeque<(u64, u64)>,
+}
+
+/// Depth of each SSR prefetch/write FIFO. The hardware uses
+/// credit-based buffering deep enough to ride out transient TCDM bank
+/// conflicts; 8 entries reproduce the measured Snitch utilization.
+const SSR_FIFO_DEPTH: usize = 8;
+
+/// Depth of the int→FP instruction FIFO (Snitch uses a small FIFO; deep
+/// enough to let the int core run ahead across loop boundaries).
+const FP_QUEUE_DEPTH: usize = 16;
+
+impl Core {
+    /// Create a PE with a loaded program.
+    pub fn new(id: u32, program: Vec<Instr>) -> Self {
+        Core {
+            id,
+            regs: [0; 32],
+            fregs: [0; 32],
+            pc: 0,
+            csr: FpCsr::default(),
+            ssrs: Default::default(),
+            ssr_enabled: false,
+            at_barrier: false,
+            stats: CoreStats::default(),
+            program,
+            halted: false,
+            // Small per-hart startup skew (the cluster wakes cores
+            // sequentially); also de-phases the SSR streams of cores
+            // walking identical patterns, as on the real interconnect.
+            int_stall: id as u64,
+            fp_queue: VecDeque::with_capacity(FP_QUEUE_DEPTH),
+            seq: SeqState::Normal,
+            scoreboard: [0; 32],
+            now: 0,
+            ssr_fifo: Default::default(),
+            ssr_wq: VecDeque::with_capacity(SSR_FIFO_DEPTH),
+        }
+    }
+
+    /// Has the program completed (halt retired and FP work drained)?
+    pub fn done(&self) -> bool {
+        self.halted && self.fp_queue.is_empty() && matches!(self.seq, SeqState::Normal) && self.ssr_wq.is_empty()
+    }
+
+    /// Release from the barrier (cluster calls when all cores arrive).
+    pub fn release_barrier(&mut self) {
+        self.at_barrier = false;
+    }
+
+    /// Is the core blocked at a barrier with the FP side drained?
+    pub fn barrier_ready(&self) -> bool {
+        self.at_barrier && self.fp_queue.is_empty() && matches!(self.seq, SeqState::Normal)
+    }
+
+    /// Advance one cycle.
+    pub fn tick(&mut self, bus: &mut dyn Bus) {
+        self.now += 1;
+        self.stats.cycles = self.now;
+        self.ssr_move(bus);
+        self.tick_fp(bus);
+        self.tick_int(bus);
+    }
+
+    /// SSR data movers: each streamer independently transfers one
+    /// element per cycle between its FIFO and the TCDM (subject to bank
+    /// arbitration).
+    fn ssr_move(&mut self, bus: &mut dyn Bus) {
+        if !self.ssr_enabled {
+            return;
+        }
+        // Drain one write-stream entry.
+        if let Some(&(addr, val)) = self.ssr_wq.front() {
+            if bus.request(self.id, addr, true) {
+                bus.write_n(addr, val, 8);
+                self.ssr_wq.pop_front();
+            }
+        }
+        // Prefetch one element per read streamer. An element with
+        // repetition r is fetched from the TCDM once and enqueued r
+        // times — the repeat feature exists precisely to cut TCDM
+        // traffic (one port access serves r operand reads).
+        for i in 0..3 {
+            if self.ssrs[i].write || !self.ssrs[i].active || self.ssr_fifo[i].len() >= SSR_FIFO_DEPTH {
+                continue;
+            }
+            let addr = self.ssrs[i].peek_addr().expect("active stream has an address");
+            if bus.request(self.id, addr, false) {
+                let v = bus.read64(addr);
+                let reps = self.ssrs[i].take_element();
+                for _ in 0..reps {
+                    self.ssr_fifo[i].push_back(v);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- FP side
+
+    fn tick_fp(&mut self, bus: &mut dyn Bus) {
+        // Determine the next FP instruction (from FREP replay or FIFO).
+        let next: Option<FpOp> = match &self.seq {
+            SeqState::Replaying { pos, buf, .. } => Some(buf[*pos]),
+            _ => self.fp_queue.front().copied(),
+        };
+        let Some(op) = next else {
+            self.stats.fp_idle += 1;
+            return;
+        };
+        let instr = op.instr;
+
+        // FREP markers are consumed by the sequencer, not the FPU.
+        if let Instr::FrepO { n_inst, rep } = instr {
+            let rounds = self.regs[rep.0 as usize];
+            self.fp_queue.pop_front();
+            self.seq = SeqState::Capturing {
+                remaining: n_inst,
+                rounds_left: rounds,
+                buf: Vec::with_capacity(n_inst as usize),
+                inner: false,
+            };
+            // Sequencer bookkeeping is free; attempt an issue this cycle.
+            self.tick_fp(bus);
+            return;
+        }
+        if let Instr::FrepI { n_inst, rep } = instr {
+            let rounds = self.regs[rep.0 as usize];
+            self.fp_queue.pop_front();
+            self.seq = SeqState::Capturing {
+                remaining: n_inst,
+                rounds_left: rounds,
+                buf: Vec::with_capacity(n_inst as usize),
+                inner: true,
+            };
+            self.tick_fp(bus);
+            return;
+        }
+
+        // Scoreboard: all non-SSR source registers must be ready. The
+        // same pass counts SSR FIFO demand for claim_memory (one
+        // fp_reads evaluation per issue attempt).
+        let mut ssr_need = [0usize; 3];
+        for r in instr.fp_reads().iter() {
+            if self.is_ssr_reg(r) {
+                if !self.ssrs[r.0 as usize].write {
+                    ssr_need[r.0 as usize] += 1;
+                }
+                continue;
+            }
+            if self.scoreboard[r.0 as usize] > self.now {
+                self.stats.stall_raw += 1;
+                return;
+            }
+        }
+        // Destination WAW: the previous value must have landed.
+        if let Some(fd) = instr.fp_write() {
+            if !self.is_ssr_reg(fd) && self.scoreboard[fd.0 as usize] > self.now {
+                self.stats.stall_raw += 1;
+                return;
+            }
+        }
+
+        // SSR operand ports + explicit memory ops need bank grants.
+        if !self.claim_memory(&op, &ssr_need, bus) {
+            self.stats.stall_bank += 1;
+            return;
+        }
+
+        // Issue: pop SSR data, execute numerics, schedule writeback.
+        self.execute_fp(&op, bus);
+        self.stats.fp_issued += 1;
+
+        // Advance the sequencer / FIFO.
+        match std::mem::replace(&mut self.seq, SeqState::Normal) {
+            SeqState::Normal => {
+                self.fp_queue.pop_front();
+                self.seq = SeqState::Normal;
+            }
+            SeqState::Capturing { remaining, rounds_left, mut buf, inner } => {
+                self.fp_queue.pop_front();
+                buf.push(op);
+                let remaining = remaining - 1;
+                if remaining > 0 {
+                    self.seq = SeqState::Capturing { remaining, rounds_left, buf, inner };
+                } else if rounds_left > 0 {
+                    self.seq = SeqState::Replaying { pos: 0, rounds_left, buf, inner };
+                } else {
+                    self.seq = SeqState::Normal;
+                }
+            }
+            SeqState::Replaying { pos, rounds_left, buf, inner } => {
+                // Inner repetition: repeat the same instruction
+                // `rounds_left` times before advancing; outer: sweep the
+                // buffer then decrement.
+                let (npos, nrounds) = if inner {
+                    if rounds_left > 0 {
+                        (pos, rounds_left - 1)
+                    } else if pos + 1 < buf.len() {
+                        (pos + 1, rounds_left)
+                    } else {
+                        self.seq = SeqState::Normal;
+                        return;
+                    }
+                } else if pos + 1 < buf.len() {
+                    (pos + 1, rounds_left)
+                } else if rounds_left > 1 {
+                    (0, rounds_left - 1)
+                } else {
+                    self.seq = SeqState::Normal;
+                    return;
+                };
+                self.seq = SeqState::Replaying { pos: npos, rounds_left: nrounds, buf, inner };
+            }
+        }
+    }
+
+    fn is_ssr_reg(&self, r: FReg) -> bool {
+        self.ssr_enabled && r.0 < 3
+    }
+
+    /// Check stream-operand availability and claim bank slots for
+    /// explicit FP loads/stores. SSR reads come from the prefetch FIFOs
+    /// (filled by [`Self::ssr_move`]); SSR writes need queue space.
+    fn claim_memory(&mut self, op: &FpOp, need: &[usize; 3], bus: &mut dyn Bus) -> bool {
+        let instr = &op.instr;
+        // `need` = FIFO elements required per streamer (one per operand
+        // occurrence), pre-counted by the caller's scoreboard pass.
+        for i in 0..3 {
+            if self.ssr_fifo[i].len() < need[i] {
+                return false; // data not prefetched yet
+            }
+        }
+        if let Some(fd) = instr.fp_write() {
+            if self.is_ssr_reg(fd) && self.ssrs[fd.0 as usize].write {
+                if self.ssr_wq.len() >= SSR_FIFO_DEPTH || !self.ssrs[fd.0 as usize].active {
+                    return false;
+                }
+            }
+        }
+        match instr {
+            Instr::FLoad { .. } => {
+                if !bus.request(self.id, op.addr, false) {
+                    return false;
+                }
+            }
+            Instr::FStore { .. } => {
+                if !bus.request(self.id, op.addr, true) {
+                    return false;
+                }
+            }
+            _ => {}
+        }
+        true
+    }
+
+    /// Read an FP operand, popping the SSR prefetch FIFO if mapped.
+    fn read_fp(&mut self, r: FReg, _bus: &mut dyn Bus) -> u64 {
+        if self.is_ssr_reg(r) && !self.ssrs[r.0 as usize].write {
+            let v = self.ssr_fifo[r.0 as usize].pop_front().expect("claim_memory checked occupancy");
+            self.stats.ssr_elems += 1;
+            self.fregs[r.0 as usize] = v;
+            return v;
+        }
+        self.fregs[r.0 as usize]
+    }
+
+    /// Write an FP result, pushing to the SSR write queue if mapped.
+    fn write_fp(&mut self, r: FReg, v: u64, lat: u64, _bus: &mut dyn Bus) {
+        if self.is_ssr_reg(r) && self.ssrs[r.0 as usize].write {
+            let ssr = &mut self.ssrs[r.0 as usize];
+            if let Some(a) = ssr.peek_addr() {
+                ssr.advance();
+                self.ssr_wq.push_back((a, v));
+                self.stats.ssr_elems += 1;
+                return;
+            }
+        }
+        self.fregs[r.0 as usize] = v;
+        self.scoreboard[r.0 as usize] = self.now + lat;
+    }
+
+    /// Execute FP numerics (exact softfloat) and account FLOP.
+    fn execute_fp(&mut self, op: &FpOp, bus: &mut dyn Bus) {
+        let instr = &op.instr;
+        let rm = self.csr.frm;
+        match *instr {
+            Instr::Fmadd { fmt, fd, fs1, fs2, fs3 } => {
+                let f = self.csr.scalar_format(fmt);
+                let (a, b, c) = (self.read_fp(fs1, bus), self.read_fp(fs2, bus), self.read_fp(fs3, bus));
+                let out = lanewise3(f, a, b, c, |x, y, z| softfloat::fma(f, x, y, z, rm));
+                self.stats.flops += 2 * f.lanes_in_64() as u64;
+                self.stats.ops_addmul += 1;
+                self.write_fp(fd, out, latency::ADDMUL, bus);
+            }
+            Instr::Fadd { fmt, fd, fs1, fs2 } => {
+                let f = self.csr.scalar_format(fmt);
+                let (a, b) = (self.read_fp(fs1, bus), self.read_fp(fs2, bus));
+                let out = lanewise2(f, a, b, |x, y| softfloat::add(f, x, y, rm));
+                self.stats.flops += f.lanes_in_64() as u64;
+                self.stats.ops_addmul += 1;
+                self.write_fp(fd, out, latency::ADDMUL, bus);
+            }
+            Instr::Fmul { fmt, fd, fs1, fs2 } => {
+                let f = self.csr.scalar_format(fmt);
+                let (a, b) = (self.read_fp(fs1, bus), self.read_fp(fs2, bus));
+                let out = lanewise2(f, a, b, |x, y| softfloat::mul(f, x, y, rm));
+                self.stats.flops += f.lanes_in_64() as u64;
+                self.stats.ops_addmul += 1;
+                self.write_fp(fd, out, latency::ADDMUL, bus);
+            }
+            Instr::Fsgnj { fmt, fd, fs1, fs2 } => {
+                let f = self.csr.scalar_format(fmt);
+                let (a, b) = (self.read_fp(fs1, bus), self.read_fp(fs2, bus));
+                let out = lanewise2(f, a, b, |x, y| softfloat::ops::sgnj(f, x, y));
+                self.stats.ops_comp += 1;
+                self.write_fp(fd, out, latency::COMP, bus);
+            }
+            Instr::Fcvt { to, from, fd, fs1 } => {
+                let tf = self.csr.scalar_format(to);
+                let ff = self.csr.scalar_format(from);
+                let a = self.read_fp(fs1, bus);
+                let out = softfloat::cast(ff, tf, a & ff.width_mask(), rm);
+                self.stats.ops_cast += 1;
+                self.write_fp(fd, out, latency::CAST, bus);
+            }
+            Instr::ExSdotp { w, fd, fs1, fs2 } => {
+                let simd = self.simd_unit(w);
+                let (a, b) = (self.read_fp(fs1, bus), self.read_fp(fs2, bus));
+                let acc = self.read_fp(fd, bus);
+                let out = simd.exsdotp(a, b, acc, rm);
+                self.stats.flops += 4 * simd.n_units() as u64;
+                self.stats.ops_sdotp += 1;
+                self.write_fp(fd, out, latency::SDOTP, bus);
+            }
+            Instr::ExVsum { w, fd, fs1 } => {
+                let simd = self.simd_unit(w);
+                let a = self.read_fp(fs1, bus);
+                let acc = self.read_fp(fd, bus);
+                let out = simd.exvsum(a, acc, rm);
+                self.stats.flops += 2 * simd.n_units() as u64;
+                self.stats.ops_sdotp += 1;
+                self.write_fp(fd, out, latency::SDOTP, bus);
+            }
+            Instr::Vsum { w, fd, fs1 } => {
+                let simd = self.simd_unit(w);
+                let a = self.read_fp(fs1, bus);
+                let acc = self.read_fp(fd, bus);
+                let out = simd.vsum(a, acc, rm);
+                self.stats.flops += simd.n_units() as u64;
+                self.stats.ops_sdotp += 1;
+                self.write_fp(fd, out, latency::SDOTP, bus);
+            }
+            Instr::FLoad { fmt, fd, .. } => {
+                self.stats.ops_fmem += 1;
+                let a = op.addr;
+                let word = bus.read64(a & !7);
+                let off = (a & 7) as u32 * 8;
+                let v = match fmt.width() {
+                    64 => word,
+                    w => (word >> off) & ((1u64 << w) - 1),
+                };
+                self.write_fp(fd, v, latency::FLOAD, bus);
+            }
+            Instr::FStore { fmt, fs, .. } => {
+                self.stats.ops_fmem += 1;
+                let v = self.read_fp(fs, bus);
+                bus.write_n(op.addr, v, fmt.width() / 8);
+            }
+            _ => unreachable!("non-FP instruction in FP path: {instr:?}"),
+        }
+    }
+
+    fn simd_unit(&self, w: OpWidth) -> SimdExSdotp {
+        SimdExSdotp::new(self.csr.src_format(w), self.csr.dst_format(w))
+    }
+
+    // ------------------------------------------------------------ int side
+
+    fn tick_int(&mut self, bus: &mut dyn Bus) {
+        if self.halted || self.at_barrier {
+            return;
+        }
+        if self.int_stall > 0 {
+            self.int_stall -= 1;
+            return;
+        }
+        let Some(&instr) = self.program.get(self.pc) else {
+            self.halted = true;
+            return;
+        };
+
+        // FP instructions (and FREP markers) go to the FP FIFO, with
+        // memory addresses resolved here (offload-time capture).
+        if instr.is_fp() || matches!(instr, Instr::FrepO { .. } | Instr::FrepI { .. }) {
+            if self.fp_queue.len() >= FP_QUEUE_DEPTH {
+                self.stats.stall_fifo_full += 1;
+                return;
+            }
+            let addr = match instr {
+                Instr::FLoad { rs1, imm, .. } | Instr::FStore { rs1, imm, .. } => {
+                    self.regs[rs1.0 as usize].wrapping_add(imm as u32) as u64
+                }
+                _ => 0,
+            };
+            self.fp_queue.push_back(FpOp { instr, addr });
+            self.pc += 1;
+            self.stats.int_retired += 1;
+            return;
+        }
+
+        let mut next_pc = self.pc + 1;
+        match instr {
+            Instr::Lui { rd, imm } => self.set_reg(rd, (imm as u32) << 12),
+            Instr::Addi { rd, rs1, imm } => {
+                let v = self.regs[rs1.0 as usize].wrapping_add(imm as u32);
+                self.set_reg(rd, v);
+            }
+            Instr::Add { rd, rs1, rs2 } => {
+                self.set_reg(rd, self.regs[rs1.0 as usize].wrapping_add(self.regs[rs2.0 as usize]))
+            }
+            Instr::Sub { rd, rs1, rs2 } => {
+                self.set_reg(rd, self.regs[rs1.0 as usize].wrapping_sub(self.regs[rs2.0 as usize]))
+            }
+            Instr::Mul { rd, rs1, rs2 } => {
+                self.set_reg(rd, self.regs[rs1.0 as usize].wrapping_mul(self.regs[rs2.0 as usize]))
+            }
+            Instr::Slli { rd, rs1, shamt } => self.set_reg(rd, self.regs[rs1.0 as usize] << shamt),
+            Instr::Srli { rd, rs1, shamt } => self.set_reg(rd, self.regs[rs1.0 as usize] >> shamt),
+            Instr::Beq { rs1, rs2, offset } => {
+                if self.regs[rs1.0 as usize] == self.regs[rs2.0 as usize] {
+                    next_pc = (self.pc as i64 + offset as i64) as usize;
+                    self.int_stall = 1;
+                }
+            }
+            Instr::Bne { rs1, rs2, offset } => {
+                if self.regs[rs1.0 as usize] != self.regs[rs2.0 as usize] {
+                    next_pc = (self.pc as i64 + offset as i64) as usize;
+                    self.int_stall = 1;
+                }
+            }
+            Instr::Blt { rs1, rs2, offset } => {
+                if (self.regs[rs1.0 as usize] as i32) < (self.regs[rs2.0 as usize] as i32) {
+                    next_pc = (self.pc as i64 + offset as i64) as usize;
+                    self.int_stall = 1;
+                }
+            }
+            Instr::Bge { rs1, rs2, offset } => {
+                if (self.regs[rs1.0 as usize] as i32) >= (self.regs[rs2.0 as usize] as i32) {
+                    next_pc = (self.pc as i64 + offset as i64) as usize;
+                    self.int_stall = 1;
+                }
+            }
+            Instr::Jal { rd, offset } => {
+                self.set_reg(rd, (self.pc as u32 + 1) * 4);
+                next_pc = (self.pc as i64 + offset as i64) as usize;
+                self.int_stall = 1;
+            }
+            Instr::Lw { rd, rs1, imm } => {
+                let a = self.regs[rs1.0 as usize].wrapping_add(imm as u32) as u64;
+                if !bus.request(self.id, a, false) {
+                    return; // retry next cycle
+                }
+                let word = bus.read64(a & !7);
+                let v = (word >> ((a & 4) * 8)) as u32;
+                self.set_reg(rd, v);
+            }
+            Instr::Sw { rs1, rs2, imm } => {
+                let a = self.regs[rs1.0 as usize].wrapping_add(imm as u32) as u64;
+                if !bus.request(self.id, a, true) {
+                    return;
+                }
+                bus.write_n(a, self.regs[rs2.0 as usize] as u64, 4);
+            }
+            Instr::Csrrwi { rd, csr, imm } => {
+                // Writes to FP-visible CSRs (SSR enable, rounding mode,
+                // alt bits) synchronize with the FP subsystem: the write
+                // must not overtake queued FP instructions.
+                if self.fp_csr_hazard(csr) {
+                    return;
+                }
+                let old = self.csr_read(csr);
+                self.csr_write(csr, imm as u32);
+                self.set_reg(rd, old);
+            }
+            Instr::Csrrw { rd, csr, rs1 } => {
+                if self.fp_csr_hazard(csr) {
+                    return;
+                }
+                let old = self.csr_read(csr);
+                self.csr_write(csr, self.regs[rs1.0 as usize]);
+                self.set_reg(rd, old);
+            }
+            Instr::Csrrs { rd, csr, rs1 } => {
+                if rs1.0 != 0 && self.fp_csr_hazard(csr) {
+                    return;
+                }
+                let old = self.csr_read(csr);
+                if rs1.0 != 0 {
+                    self.csr_write(csr, old | self.regs[rs1.0 as usize]);
+                }
+                self.set_reg(rd, old);
+            }
+            Instr::ScfgWi { rs1, cfg } => {
+                let streamer = (cfg / 32) as usize;
+                let reg = cfg % 32;
+                if streamer < 3 {
+                    self.ssrs[streamer].cfg_write(reg, self.regs[rs1.0 as usize] as u64);
+                }
+            }
+            Instr::FmvXW { rd, fs1 } => {
+                // Synchronizing move: wait for the FP side to drain.
+                if !self.fp_queue.is_empty()
+                    || !matches!(self.seq, SeqState::Normal)
+                    || self.scoreboard[fs1.0 as usize] > self.now
+                {
+                    return;
+                }
+                self.set_reg(rd, self.fregs[fs1.0 as usize] as u32);
+            }
+            Instr::FmvWX { fd, rs1 } => {
+                self.fregs[fd.0 as usize] = self.regs[rs1.0 as usize] as u64;
+                self.scoreboard[fd.0 as usize] = self.now + 1;
+            }
+            Instr::Barrier => {
+                // Require the FP side drained before reporting arrival.
+                self.at_barrier = true;
+            }
+            Instr::Halt => {
+                self.halted = true;
+            }
+            Instr::DmSrc { rs1 } => bus.dma_src(self.regs[rs1.0 as usize] as u64),
+            Instr::DmDst { rs1 } => bus.dma_dst(self.regs[rs1.0 as usize] as u64),
+            Instr::DmCpy { rd, rs1 } => {
+                let id = bus.dma_copy(self.regs[rs1.0 as usize] as u64);
+                self.set_reg(rd, id);
+            }
+            Instr::DmStat { rd } => self.set_reg(rd, bus.dma_busy()),
+            _ => unreachable!("unhandled int instruction {instr:?}"),
+        }
+        self.pc = next_pc;
+        self.stats.int_retired += 1;
+    }
+
+    fn set_reg(&mut self, r: Reg, v: u32) {
+        if r.0 != 0 {
+            self.regs[r.0 as usize] = v;
+        }
+    }
+
+    /// Must a write to this CSR wait for the FP pipeline to drain?
+    fn fp_csr_hazard(&self, a: u16) -> bool {
+        matches!(a, csr_addr::FCSR | csr_addr::SSR)
+            && !(self.fp_queue.is_empty() && matches!(self.seq, SeqState::Normal) && self.ssr_wq.is_empty())
+    }
+
+    fn csr_read(&self, a: u16) -> u32 {
+        match a {
+            csr_addr::FCSR => self.csr.to_bits(),
+            csr_addr::SSR => self.ssr_enabled as u32,
+            csr_addr::MHARTID => self.id,
+            _ => 0,
+        }
+    }
+
+    fn csr_write(&mut self, a: u16, v: u32) {
+        match a {
+            csr_addr::FCSR => self.csr = FpCsr::from_bits(v),
+            csr_addr::SSR => self.ssr_enabled = v & 1 != 0,
+            _ => {}
+        }
+    }
+}
+
+/// Apply a scalar op lanewise over packed data (1 lane for 64-bit).
+fn lanewise2(f: FpFormat, a: u64, b: u64, op: impl Fn(u64, u64) -> u64) -> u64 {
+    let w = f.width();
+    if w == 64 {
+        return op(a, b);
+    }
+    let mut out = 0u64;
+    for i in 0..f.lanes_in_64() {
+        out = set_lane(out, i, w, op(lane(a, i, w), lane(b, i, w)));
+    }
+    out
+}
+
+/// Three-operand lanewise application.
+fn lanewise3(f: FpFormat, a: u64, b: u64, c: u64, op: impl Fn(u64, u64, u64) -> u64) -> u64 {
+    let w = f.width();
+    if w == 64 {
+        return op(a, b, c);
+    }
+    let mut out = 0u64;
+    for i in 0..f.lanes_in_64() {
+        out = set_lane(out, i, w, op(lane(a, i, w), lane(b, i, w), lane(c, i, w)));
+    }
+    out
+}

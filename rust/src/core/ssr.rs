@@ -1,0 +1,245 @@
+//! Stream Semantic Registers (SSR) — the Snitch extension that maps a
+//! regular load/store access pattern onto fixed FP registers
+//! (`ft0..ft2`), "effectively eliminating most of the implicit load and
+//! store instructions" (§III-E).
+//!
+//! Each of the three streamers walks a 4-dimensional affine address
+//! pattern:
+//!
+//! ```text
+//! addr = base + i0·stride0 + i1·stride1 + i2·stride2 + i3·stride3
+//! ```
+//!
+//! with `i_d ∈ [0, bound_d)`, dimension 0 innermost, plus a *repeat*
+//! count: each element is served `repeat` times before the pattern
+//! advances — the feature GEMM kernels use to multiply one streamed
+//! `A` element against several packed `B` columns without re-loading.
+//!
+//! Configuration happens through `scfgwi` writes to the per-streamer
+//! register file ([`cfg_regs`]); writing a read/write pointer register
+//! arms the streamer, exactly like Snitch's `rptr/wptr` convention.
+
+/// SSR config register indices (the `scfgwi` immediate is
+/// `streamer * 32 + reg`).
+pub mod cfg_regs {
+    /// `bounds[d]` = reg `BOUND0 + d` (iterations per dimension).
+    pub const BOUND0: u16 = 0;
+    /// `strides[d]` = reg `STRIDE0 + d` (byte strides).
+    pub const STRIDE0: u16 = 8;
+    /// Element repetition count (1 = no repetition).
+    pub const REPEAT: u16 = 24;
+    /// Write `base` and arm as a *read* stream of dimensionality d+1.
+    pub const RPTR0: u16 = 16;
+    /// Write `base` and arm as a *write* stream of dimensionality d+1.
+    pub const WPTR0: u16 = 20;
+}
+
+/// One stream semantic register (data mover).
+#[derive(Clone, Debug, Default)]
+pub struct Ssr {
+    /// Iteration bounds per dimension (dimension 0 innermost).
+    pub bounds: [u32; 4],
+    /// Byte strides per dimension.
+    pub strides: [i64; 4],
+    /// Base byte address.
+    pub base: u64,
+    /// Dimensions in use (1..=4).
+    pub dims: u8,
+    /// Serve each element this many times (≥1).
+    pub repeat: u32,
+    /// Write stream (true) or read stream (false).
+    pub write: bool,
+    /// Armed and not exhausted.
+    pub active: bool,
+    idx: [u32; 4],
+    rep_left: u32,
+    served: u64,
+}
+
+impl Ssr {
+    /// Handle an `scfgwi` write to register `reg` with `value`.
+    pub fn cfg_write(&mut self, reg: u16, value: u64) {
+        use cfg_regs::*;
+        match reg {
+            r if (BOUND0..BOUND0 + 4).contains(&r) => self.bounds[(r - BOUND0) as usize] = value as u32,
+            r if (STRIDE0..STRIDE0 + 4).contains(&r) => self.strides[(r - STRIDE0) as usize] = value as i64,
+            REPEAT => self.repeat = (value as u32).max(1),
+            r if (RPTR0..RPTR0 + 4).contains(&r) => {
+                self.base = value;
+                self.dims = (r - RPTR0) as u8 + 1;
+                self.write = false;
+                self.arm();
+            }
+            r if (WPTR0..WPTR0 + 4).contains(&r) => {
+                self.base = value;
+                self.dims = (r - WPTR0) as u8 + 1;
+                self.write = true;
+                self.arm();
+            }
+            _ => {} // unmapped registers ignored (like hardware WARL)
+        }
+    }
+
+    fn arm(&mut self) {
+        self.idx = [0; 4];
+        self.rep_left = self.repeat.max(1);
+        self.served = 0;
+        self.active = self.total_accesses() > 0;
+    }
+
+    /// Total number of element accesses this pattern will serve.
+    pub fn total_accesses(&self) -> u64 {
+        let mut n = 1u64;
+        for d in 0..self.dims as usize {
+            n *= self.bounds[d].max(1) as u64;
+        }
+        n * self.repeat.max(1) as u64
+    }
+
+    /// Address of the *next* element access (None if exhausted).
+    pub fn peek_addr(&self) -> Option<u64> {
+        if !self.active {
+            return None;
+        }
+        let mut a = self.base as i64;
+        for d in 0..self.dims as usize {
+            a += self.idx[d] as i64 * self.strides[d];
+        }
+        Some(a as u64)
+    }
+
+    /// Consume one access and advance the pattern.
+    pub fn advance(&mut self) {
+        if !self.active {
+            return;
+        }
+        self.served += 1;
+        if self.rep_left > 1 {
+            self.rep_left -= 1;
+            return;
+        }
+        self.rep_left = self.repeat.max(1);
+        // Odometer increment.
+        for d in 0..self.dims as usize {
+            self.idx[d] += 1;
+            if self.idx[d] < self.bounds[d].max(1) {
+                return;
+            }
+            self.idx[d] = 0;
+        }
+        self.active = false; // pattern exhausted
+    }
+
+    /// Accesses served so far (for stats/tests).
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Consume the *entire current element* (all remaining repetitions)
+    /// in one step, returning how many servings that is. Used by the
+    /// prefetcher: the hardware fetches a repeated element from the
+    /// TCDM once and replays it from the stream FIFO.
+    pub fn take_element(&mut self) -> u32 {
+        if !self.active {
+            return 0;
+        }
+        let n = self.rep_left;
+        for _ in 0..n {
+            self.advance();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed(bounds: &[u32], strides: &[i64], base: u64, repeat: u32) -> Ssr {
+        let mut s = Ssr::default();
+        for (d, &b) in bounds.iter().enumerate() {
+            s.cfg_write(cfg_regs::BOUND0 + d as u16, b as u64);
+        }
+        for (d, &st) in strides.iter().enumerate() {
+            s.cfg_write(cfg_regs::STRIDE0 + d as u16, st as u64);
+        }
+        s.cfg_write(cfg_regs::REPEAT, repeat as u64);
+        s.cfg_write(cfg_regs::RPTR0 + (bounds.len() as u16 - 1), base);
+        s
+    }
+
+    #[test]
+    fn one_dim_walk() {
+        let mut s = armed(&[4], &[8], 0x100, 1);
+        let mut addrs = vec![];
+        while let Some(a) = s.peek_addr() {
+            addrs.push(a);
+            s.advance();
+        }
+        assert_eq!(addrs, vec![0x100, 0x108, 0x110, 0x118]);
+        assert!(!s.active);
+    }
+
+    #[test]
+    fn repeat_serves_elements_multiple_times() {
+        let mut s = armed(&[2], &[8], 0, 3);
+        let mut addrs = vec![];
+        while let Some(a) = s.peek_addr() {
+            addrs.push(a);
+            s.advance();
+        }
+        assert_eq!(addrs, vec![0, 0, 0, 8, 8, 8]);
+        assert_eq!(s.served(), 6);
+    }
+
+    #[test]
+    fn multi_dim_odometer() {
+        // dim0: 2 elems stride 8; dim1: 3 iterations stride 100.
+        let mut s = armed(&[2, 3], &[8, 100], 0, 1);
+        let mut addrs = vec![];
+        while let Some(a) = s.peek_addr() {
+            addrs.push(a);
+            s.advance();
+        }
+        assert_eq!(addrs, vec![0, 8, 100, 108, 200, 208]);
+    }
+
+    #[test]
+    fn zero_stride_dimension_repeats_pattern() {
+        // The GEMM trick: stride-0 outer dim re-streams the same row.
+        let mut s = armed(&[2, 2], &[8, 0], 0x40, 1);
+        let mut addrs = vec![];
+        while let Some(a) = s.peek_addr() {
+            addrs.push(a);
+            s.advance();
+        }
+        assert_eq!(addrs, vec![0x40, 0x48, 0x40, 0x48]);
+    }
+
+    #[test]
+    fn negative_strides() {
+        let mut s = armed(&[3], &[-16], 0x100, 1);
+        let mut addrs = vec![];
+        while let Some(a) = s.peek_addr() {
+            addrs.push(a);
+            s.advance();
+        }
+        assert_eq!(addrs, vec![0x100, 0xf0, 0xe0]);
+    }
+
+    #[test]
+    fn write_pointer_arms_write_stream() {
+        let mut s = Ssr::default();
+        s.cfg_write(cfg_regs::BOUND0, 4);
+        s.cfg_write(cfg_regs::STRIDE0, 8);
+        s.cfg_write(cfg_regs::WPTR0, 0x200);
+        assert!(s.active && s.write);
+        assert_eq!(s.total_accesses(), 4);
+    }
+
+    #[test]
+    fn four_dim_total() {
+        let s = armed(&[2, 3, 4, 5], &[1, 10, 100, 1000], 0, 2);
+        assert_eq!(s.total_accesses(), 2 * 3 * 4 * 5 * 2);
+    }
+}

@@ -1,0 +1,211 @@
+//! Per-operation energy model (Table III, §IV-C).
+//!
+//! **Substitution note (DESIGN.md §2):** the paper extracts power with
+//! PrimePower from switching activity of the placed-and-routed 12 nm
+//! netlist. We model energy as a per-operation table (pJ at 0.8 V,
+//! typical corner) applied to the simulator's op counters, plus a
+//! per-cycle static/clock-tree term — the standard architecture-level
+//! energy-model shape. Calibration anchors from the paper:
+//!
+//! * FPU peak efficiency, SIMD FP8→FP16 ExSdotp: **1631 GFLOPS/W**
+//!   (Table III top row) → 16 FLOP / E(sdotp-op) ⇒ ≈ 9.8 pJ/op.
+//! * Cluster computing 128×256 FP8→FP16 GEMM: **224 mW @ 1.26 GHz**
+//!   ⇒ ≈ 178 pJ/cycle ⇒ 575 GFLOPS/W (§IV-C).
+//! * The native FP64 Snitch cluster reference: ~80 GFLOPS/W (Table III
+//!   bottom row, 22 nm — our 12 nm model lands in the same band, which
+//!   the paper itself leans on for its 7.2× claim).
+
+use crate::core::CoreStats;
+use crate::isa::instr::{OpWidth, ScalarFmt};
+
+/// Operating point (paper: typical corner).
+pub const VDD: f64 = 0.8;
+/// Clock frequency in GHz (typical corner, §IV-A).
+pub const FREQ_GHZ: f64 = 1.26;
+
+/// Energy per operation in pJ (0.8 V, GF12, model values).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyTable {
+    /// SIMD SDOTP-group op, 8→16 (4 units busy).
+    pub sdotp_btoh: f64,
+    /// SIMD SDOTP-group op, 16→32 (2 units busy).
+    pub sdotp_htos: f64,
+    /// Scalar FP64 FMA.
+    pub fma_d: f64,
+    /// SIMD 2×FP32 FMA.
+    pub fma_s: f64,
+    /// SIMD 4×FP16 FMA.
+    pub fma_h: f64,
+    /// Cast-group op.
+    pub cast: f64,
+    /// Comparison/sign-injection op.
+    pub comp: f64,
+    /// FP load/store.
+    pub fmem: f64,
+    /// One TCDM access (SSR element or load/store data side).
+    pub tcdm: f64,
+    /// One integer-core instruction.
+    pub int_instr: f64,
+    /// Static + clock-tree energy per cycle for the whole cluster.
+    pub static_per_cycle: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        EnergyTable {
+            sdotp_btoh: 9.8,
+            sdotp_htos: 10.5,
+            fma_d: 12.0,
+            fma_s: 9.0,
+            fma_h: 8.5,
+            cast: 3.0,
+            comp: 1.5,
+            fmem: 4.0,
+            tcdm: 4.5,
+            int_instr: 1.8,
+            static_per_cycle: 45.0,
+        }
+    }
+}
+
+/// Which compute op dominates a kernel (selects the FPU energy row).
+#[derive(Clone, Copy, Debug)]
+pub enum ComputeClass {
+    /// SIMD expanding dot product of the given width.
+    Sdotp(OpWidth),
+    /// FMA of the given format.
+    Fma(ScalarFmt),
+}
+
+/// Energy/power/efficiency report for one kernel run.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyReport {
+    /// Total energy in µJ.
+    pub total_uj: f64,
+    /// Average power in mW at [`FREQ_GHZ`].
+    pub avg_mw: f64,
+    /// Achieved GFLOPS at [`FREQ_GHZ`].
+    pub gflops: f64,
+    /// Energy efficiency in GFLOPS/W.
+    pub gflops_per_w: f64,
+}
+
+/// Estimate energy for a simulated run from its op counters.
+pub fn estimate(stats: &CoreStats, cycles: u64, class: ComputeClass, table: &EnergyTable) -> EnergyReport {
+    let fpu_op = match class {
+        ComputeClass::Sdotp(OpWidth::BtoH) => table.sdotp_btoh,
+        ComputeClass::Sdotp(OpWidth::HtoS) => table.sdotp_htos,
+        ComputeClass::Fma(ScalarFmt::D) => table.fma_d,
+        ComputeClass::Fma(ScalarFmt::S) => table.fma_s,
+        ComputeClass::Fma(_) => table.fma_h,
+    };
+    // SDOTP counters include the epilogue vsum ops; ADDMUL counters the
+    // FMAs — both billed at the kernel's compute-op energy; COMP/CAST at
+    // their own rows.
+    let mut pj = 0.0;
+    pj += (stats.ops_sdotp + stats.ops_addmul) as f64 * fpu_op;
+    pj += stats.ops_cast as f64 * table.cast;
+    pj += stats.ops_comp as f64 * table.comp;
+    pj += stats.ops_fmem as f64 * table.fmem;
+    pj += stats.ssr_elems as f64 * table.tcdm;
+    pj += stats.ops_fmem as f64 * table.tcdm; // data side of fl/fs
+    pj += stats.int_retired as f64 * table.int_instr;
+    pj += cycles as f64 * table.static_per_cycle;
+
+    let seconds = cycles as f64 / (FREQ_GHZ * 1e9);
+    let total_j = pj * 1e-12;
+    let flops = stats.flops as f64;
+    EnergyReport {
+        total_uj: total_j * 1e6,
+        avg_mw: total_j / seconds * 1e3,
+        gflops: flops / seconds / 1e9,
+        gflops_per_w: flops / total_j / 1e9,
+    }
+}
+
+/// FPU-only peak efficiency for Table III's top rows: the op energy at
+/// full utilization, no cluster overheads.
+pub fn fpu_peak_gflops_per_w(class: ComputeClass, table: &EnergyTable) -> f64 {
+    let (flop, pj) = match class {
+        ComputeClass::Sdotp(OpWidth::BtoH) => (16.0, table.sdotp_btoh),
+        ComputeClass::Sdotp(OpWidth::HtoS) => (8.0, table.sdotp_htos),
+        ComputeClass::Fma(ScalarFmt::D) => (2.0, table.fma_d),
+        ComputeClass::Fma(ScalarFmt::S) => (4.0, table.fma_s),
+        ComputeClass::Fma(_) => (8.0, table.fma_h),
+    };
+    flop / (pj * 1e-12) / 1e9 / 1e9 * 1.0e9 // FLOP/op / (J/op) → FLOPS/W → GFLOPS/W
+}
+
+/// Peak throughput of one FPU in GFLOPS (Table III "Peak Throughput").
+pub fn fpu_peak_gflops(class: ComputeClass) -> f64 {
+    let flop_per_cycle = match class {
+        ComputeClass::Sdotp(OpWidth::BtoH) => 16.0,
+        ComputeClass::Sdotp(OpWidth::HtoS) => 8.0,
+        ComputeClass::Fma(ScalarFmt::D) => 2.0,
+        ComputeClass::Fma(ScalarFmt::S) => 4.0,
+        ComputeClass::Fma(_) => 8.0,
+    };
+    flop_per_cycle * FREQ_GHZ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fpu_peak_matches_table3() {
+        let t = EnergyTable::default();
+        // 16 FLOP/cycle × 1.26 GHz = 20.2 GFLOPS (exFP8 row).
+        assert!((fpu_peak_gflops(ComputeClass::Sdotp(OpWidth::BtoH)) - 20.16).abs() < 0.01);
+        // 1631 GFLOPS/W peak efficiency for exFP8.
+        let eff = fpu_peak_gflops_per_w(ComputeClass::Sdotp(OpWidth::BtoH), &t);
+        assert!((eff - 1632.0).abs() < 15.0, "peak eff {eff:.0}");
+    }
+
+    #[test]
+    fn cluster_fp8_gemm_hits_575_gflops_per_w() {
+        // Full-stack anchor: simulate the paper's headline workload
+        // (128×256 FP8→FP16 GEMM) and check power/efficiency.
+        use crate::kernels::{GemmKernel, GemmKind};
+        let mut rng = crate::util::rng::Rng::new(3);
+        let (m, n, k) = (128, 256, 128);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+        let kern = GemmKernel::new(GemmKind::ExSdotp(OpWidth::BtoH), m, n, k);
+        let run = kern.run(&a, &b);
+        let rep = estimate(&run.stats, run.cycles, ComputeClass::Sdotp(OpWidth::BtoH), &EnergyTable::default());
+        // §IV-C: 128 GFLOPS, 224 mW, 575 GFLOPS/W.
+        assert!((rep.gflops - 128.0).abs() < 15.0, "GFLOPS {:.1}", rep.gflops);
+        assert!((rep.avg_mw - 224.0).abs() < 35.0, "power {:.0} mW", rep.avg_mw);
+        assert!((rep.gflops_per_w - 575.0).abs() < 60.0, "efficiency {:.0}", rep.gflops_per_w);
+    }
+
+    #[test]
+    fn fp64_reference_efficiency_near_snitch_80() {
+        use crate::kernels::{GemmKernel, GemmKind};
+        let mut rng = crate::util::rng::Rng::new(4);
+        let (m, n, k) = (64, 64, 64);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian()).collect();
+        let kern = GemmKernel::new(GemmKind::FmaF64, m, n, k);
+        let run = kern.run(&a, &b);
+        let rep = estimate(&run.stats, run.cycles, ComputeClass::Fma(ScalarFmt::D), &EnergyTable::default());
+        assert!((60.0..100.0).contains(&rep.gflops_per_w), "FP64 eff {:.0}", rep.gflops_per_w);
+    }
+
+    #[test]
+    fn efficiency_ratio_fp8_vs_fp64_near_7x() {
+        use crate::kernels::{GemmKernel, GemmKind};
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut mk = |kind, m: usize, n: usize, k: usize, class| {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+            let run = GemmKernel::new(kind, m, n, k).run(&a, &b);
+            estimate(&run.stats, run.cycles, class, &EnergyTable::default()).gflops_per_w
+        };
+        let fp8 = mk(GemmKind::ExSdotp(OpWidth::BtoH), 128, 256, 128, ComputeClass::Sdotp(OpWidth::BtoH));
+        let fp64 = mk(GemmKind::FmaF64, 64, 64, 64, ComputeClass::Fma(ScalarFmt::D));
+        let ratio = fp8 / fp64;
+        assert!((5.5..9.0).contains(&ratio), "ratio {ratio:.1} (paper: 7.2)");
+    }
+}

@@ -1,0 +1,33 @@
+//! The discrete baseline: an expanding sum of dot products computed on
+//! a **cascade of two ExFMA units** (§II-B, Fig. 3).
+//!
+//! The cascade computes `a×b + (c×d + e)` — note the parenthesization —
+//! and rounds **twice** (once per FMA). Both properties differ from the
+//! fused unit: FP addition is not associative, and double rounding loses
+//! precision. Table IV measures exactly this gap; Fig. 7a measures the
+//! area/timing cost of the two discrete units the cascade needs.
+
+use crate::formats::FpFormat;
+use crate::softfloat::ops::ex_fma;
+use crate::softfloat::round::RoundingMode;
+
+/// `a×b + (c×d + e)` on two chained expanding FMAs, rounding after each.
+pub fn exsdotp_cascade(
+    src: FpFormat,
+    dst: FpFormat,
+    a: u64,
+    b: u64,
+    c: u64,
+    d: u64,
+    e: u64,
+    rm: RoundingMode,
+) -> u64 {
+    let inner = ex_fma(src, dst, c, d, e, rm); // c*d + e, rounded to dst
+    ex_fma(src, dst, a, b, inner, rm) // a*b + (…), rounded again
+}
+
+/// `a + (c + e)` via the cascade (`b = d = 1`), the ExVsum baseline.
+pub fn exvsum_cascade(src: FpFormat, dst: FpFormat, a: u64, c: u64, e: u64, rm: RoundingMode) -> u64 {
+    let one = crate::softfloat::from_f64(1.0, src, RoundingMode::Rne);
+    exsdotp_cascade(src, dst, a, one, c, one, e, rm)
+}

@@ -1,0 +1,140 @@
+//! Infinitely-precise oracle for the ExSdotp operation.
+//!
+//! `a×b + c×d + e` is evaluated *exactly* in 768-bit fixed point and
+//! rounded once — the mathematically ideal single-rounding result. The
+//! fused datapath ([`super::unit`]) is validated against this oracle;
+//! the ExFMA cascade ([`super::cascade`]) deviates from it by design,
+//! and Table IV quantifies that deviation.
+
+use crate::formats::FpFormat;
+use crate::softfloat::round::{round_pack, RoundingMode};
+use crate::softfloat::unpack::{unpack, Unpacked};
+use crate::wide::WideInt;
+
+/// Signed exact addend: `value = sign · mant · 2^exp`.
+struct Exact {
+    sign: bool,
+    exp: i32,
+    mant: u128,
+}
+
+enum Special {
+    None,
+    Nan,
+    Inf(bool),
+    /// Finite zero contribution with this sign.
+    Zero(bool),
+}
+
+fn product(src: FpFormat, a: u64, b: u64) -> (Special, Option<Exact>) {
+    let ua = unpack(src, a);
+    let ub = unpack(src, b);
+    if ua.is_nan() || ub.is_nan() {
+        return (Special::Nan, None);
+    }
+    if (ua.is_inf() && ub.is_zero()) || (ua.is_zero() && ub.is_inf()) {
+        return (Special::Nan, None);
+    }
+    let sign = ua.sign ^ ub.sign;
+    if ua.is_inf() || ub.is_inf() {
+        return (Special::Inf(sign), None);
+    }
+    if ua.is_zero() || ub.is_zero() {
+        return (Special::Zero(sign), None);
+    }
+    (Special::None, Some(Exact { sign, exp: ua.exp + ub.exp, mant: ua.mant * ub.mant }))
+}
+
+fn operand(fmt: FpFormat, e: u64) -> (Special, Option<Exact>) {
+    let ue: Unpacked = unpack(fmt, e);
+    if ue.is_nan() {
+        return (Special::Nan, None);
+    }
+    if ue.is_inf() {
+        return (Special::Inf(ue.sign), None);
+    }
+    if ue.is_zero() {
+        return (Special::Zero(ue.sign), None);
+    }
+    (Special::None, Some(Exact { sign: ue.sign, exp: ue.exp, mant: ue.mant }))
+}
+
+/// Exactly-rounded `a×b + c×d + e` (`a..d` in `src`; `e`, result in
+/// `dst`). The gold standard for both datapaths.
+pub fn exsdotp_exact(src: FpFormat, dst: FpFormat, a: u64, b: u64, c: u64, d: u64, e: u64, rm: RoundingMode) -> u64 {
+    let terms = [product(src, a, b), product(src, c, d), operand(dst, e)];
+    sum_exact(dst, terms, rm)
+}
+
+/// Exactly-rounded three-term sum `a + c + e`, all in `fmt` (Vsum oracle).
+pub fn vsum_exact(fmt: FpFormat, a: u64, c: u64, e: u64, rm: RoundingMode) -> u64 {
+    let terms = [operand(fmt, a), operand(fmt, c), operand(fmt, e)];
+    sum_exact(fmt, terms, rm)
+}
+
+/// Exactly-rounded `a + c + e` with `a, c` in `src` (ExVsum oracle).
+pub fn exvsum_exact(src: FpFormat, dst: FpFormat, a: u64, c: u64, e: u64, rm: RoundingMode) -> u64 {
+    let terms = [operand(src, a), operand(src, c), operand(dst, e)];
+    sum_exact(dst, terms, rm)
+}
+
+fn sum_exact(dst: FpFormat, terms: [(Special, Option<Exact>); 3], rm: RoundingMode) -> u64 {
+    // Specials.
+    let mut inf_sign: Option<bool> = None;
+    for (s, _) in &terms {
+        match s {
+            Special::Nan => return dst.quiet_nan(),
+            Special::Inf(sig) => match inf_sign {
+                None => inf_sign = Some(*sig),
+                Some(prev) if prev != *sig => return dst.quiet_nan(),
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+    if let Some(s) = inf_sign {
+        return dst.infinity(s);
+    }
+
+    // Exact fixed-point accumulation. Base = the minimum LSB exponent of
+    // all finite addends; shifts can exceed 500 bits for FP16alt sources.
+    let exacts: Vec<&Exact> = terms.iter().filter_map(|(_, e)| e.as_ref()).collect();
+    let mut zero_sign: Option<bool> = None;
+    for (s, _) in &terms {
+        if let Special::Zero(sig) = s {
+            zero_sign = Some(match zero_sign {
+                None => *sig,
+                Some(prev) if prev == *sig => *sig,
+                _ => rm == RoundingMode::Rdn,
+            });
+        }
+    }
+    if exacts.is_empty() {
+        return dst.zero(zero_sign.unwrap_or(false));
+    }
+
+    let base = exacts.iter().map(|e| e.exp).min().unwrap();
+    let mut acc = WideInt::ZERO;
+    for e in &exacts {
+        let shift = (e.exp - base) as u32;
+        assert!((shift as usize) < crate::wide::LIMBS * 64 - 130, "WideInt range exceeded");
+        let m = WideInt::from_u128(e.mant).shl(shift);
+        acc = if e.sign { acc.wrapping_sub(m) } else { acc.wrapping_add(m) };
+    }
+
+    if acc.is_zero() {
+        return dst.zero(rm == RoundingMode::Rdn);
+    }
+    let sign = acc.is_negative();
+    let mag = acc.abs();
+    let msb = mag.msb().unwrap();
+    // Compress into (u128 mantissa, sticky) for round_pack.
+    if msb <= 126 {
+        round_pack(sign, base, mag.extract_u128(0, msb + 1), false, dst, rm)
+    } else {
+        let drop = msb - 126;
+        let kept = mag.extract_u128(drop, 127);
+        let sticky = mag.any_below(drop);
+        round_pack(sign, base + drop as i32, kept, sticky, dst, rm)
+    }
+}

@@ -1,0 +1,47 @@
+//! The ExSdotp unit — the paper's core hardware contribution (§III).
+//!
+//! An **expanding sum-of-dot-product** unit computes
+//!
+//! ```text
+//! ExSdotp_2w = a_w × b_w + c_w × d_w + e_2w
+//! ```
+//!
+//! with `a,b,c,d` in a `w`-bit source format and the accumulator `e` and
+//! result in a `2w`-bit destination format — *fused*, i.e. with a single
+//! normalization/rounding step at the end. Fusion both shrinks the
+//! hardware (Fig. 7a: ~30% area/critical-path vs. a cascade of two
+//! expanding FMAs) and removes the precision loss caused by the
+//! non-associativity of two chained FP additions (Fig. 3, Table IV).
+//!
+//! Module map:
+//!
+//! * [`unit`] — the bit-accurate fused datapath (§III-B), stage by
+//!   stage: mantissa products, zero-padding to `p_dst`, three-addend
+//!   sort, progressively widened two-step addition, cancellation
+//!   recovery, single round. Also computes ExVsum (`b=d=1`) and the
+//!   non-expanding Vsum (multiplier bypass) on the same datapath
+//!   (§III-C).
+//! * [`cascade`] — the baseline: the same operation on two chained
+//!   expanding FMAs, which rounds twice and computes `a×b + (c×d + e)`
+//!   (§II-B). Used as the comparison point in Table IV and Fig. 7a.
+//! * [`exact`] — an infinitely-precise oracle (`W384` fixed-point) that
+//!   rounds once; the testbench for both datapaths.
+//! * [`simd`] — the SIMD wrapper (§III-D): two 16→32-bit and two
+//!   8→16-bit units behind a 64-bit three-operand register interface,
+//!   with operand packing/unpacking.
+//! * [`table1`] — the supported source/destination format combinations
+//!   (Table I) as a queryable matrix.
+
+pub mod cascade;
+pub mod exact;
+pub mod simd;
+pub mod table1;
+#[cfg(test)]
+mod tests;
+pub mod unit;
+
+pub use cascade::{exsdotp_cascade, exvsum_cascade};
+pub use exact::{exsdotp_exact, vsum_exact};
+pub use simd::{SimdExSdotp, SimdOp};
+pub use table1::{supported, OpKind};
+pub use unit::ExSdotpUnit;

@@ -1,0 +1,124 @@
+//! The SIMD wrapper around replicated ExSdotp units (§III-D, Fig. 5).
+//!
+//! The FPU register file is 64-bit; the wrapper unpacks the three 64-bit
+//! operand registers into lanes, feeds the parallel units, and repacks:
+//!
+//! * **16→32-bit**: two units. `rs1 = [a0 a1 a2 a3]`, `rs2 = [b0 b1 b2
+//!   b3]` (4×16-bit), `rd = [e0 e1]` (2×32-bit). Unit *i* computes
+//!   `e_i += a_{2i}·b_{2i} + a_{2i+1}·b_{2i+1}` — consuming *all* the
+//!   register-file bandwidth, which is the whole point of Fig. 2.
+//! * **8→16-bit**: four units, same pattern with 8×FP8 sources and
+//!   4×FP16 accumulators.
+//! * **Vsum / ExVsum**: pairwise lane reduction `rd_i = rs1_{2i} +
+//!   rs1_{2i+1} + rd_i`, used to fold the packed partial accumulators
+//!   after a GEMM inner loop (§III-C).
+
+use super::unit::ExSdotpUnit;
+use crate::formats::FpFormat;
+use crate::softfloat::round::RoundingMode;
+
+/// SIMD operation selector (the three MiniFloat-NN instructions).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdOp {
+    /// `exsdotp rd, rs1, rs2`
+    ExSdotp,
+    /// `exvsum rd, rs1`
+    ExVsum,
+    /// `vsum rd, rs1`
+    Vsum,
+}
+
+/// The SDOTP operation-group module: lane plumbing over scalar units.
+#[derive(Clone, Copy, Debug)]
+pub struct SimdExSdotp {
+    /// Scalar unit replicated per lane-pair.
+    pub unit: ExSdotpUnit,
+}
+
+/// Extract lane `i` of width `w` bits from a 64-bit register.
+#[inline]
+pub fn lane(reg: u64, i: u32, w: u32) -> u64 {
+    (reg >> (i * w)) & if w >= 64 { u64::MAX } else { (1u64 << w) - 1 }
+}
+
+/// Insert `val` as lane `i` of width `w` into `reg`.
+#[inline]
+pub fn set_lane(reg: u64, i: u32, w: u32, val: u64) -> u64 {
+    let mask = if w >= 64 { u64::MAX } else { ((1u64 << w) - 1) << (i * w) };
+    (reg & !mask) | ((val << (i * w)) & mask)
+}
+
+impl SimdExSdotp {
+    /// Wrapper over `src→dst` scalar units.
+    pub fn new(src: FpFormat, dst: FpFormat) -> Self {
+        Self { unit: ExSdotpUnit::new(src, dst) }
+    }
+
+    /// Number of parallel scalar units (= destination lanes in 64 bits).
+    pub fn n_units(&self) -> u32 {
+        self.unit.dst.lanes_in_64()
+    }
+
+    /// FLOP performed by one SIMD instruction of kind `op` (the paper
+    /// counts 1 ExSdotp = 4 FLOP, a three-term add = 2 FLOP).
+    pub fn flops(&self, op: SimdOp) -> u64 {
+        match op {
+            SimdOp::ExSdotp => 4 * self.n_units() as u64,
+            SimdOp::ExVsum | SimdOp::Vsum => 2 * self.n_units() as u64 / 2,
+        }
+    }
+
+    /// Execute one SIMD instruction: returns the new `rd`.
+    pub fn execute(&self, op: SimdOp, rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) -> u64 {
+        match op {
+            SimdOp::ExSdotp => self.exsdotp(rs1, rs2, rd, rm),
+            SimdOp::ExVsum => self.exvsum(rs1, rd, rm),
+            SimdOp::Vsum => self.vsum(rs1, rd, rm),
+        }
+    }
+
+    /// SIMD `exsdotp rd, rs1, rs2` (rd is also the accumulator input).
+    pub fn exsdotp(&self, rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) -> u64 {
+        let sw = self.unit.src.width();
+        let dw = self.unit.dst.width();
+        let mut out = rd;
+        for i in 0..self.n_units() {
+            let a = lane(rs1, 2 * i, sw);
+            let b = lane(rs2, 2 * i, sw);
+            let c = lane(rs1, 2 * i + 1, sw);
+            let d = lane(rs2, 2 * i + 1, sw);
+            let e = lane(rd, i, dw);
+            out = set_lane(out, i, dw, self.unit.exsdotp(a, b, c, d, e, rm));
+        }
+        out
+    }
+
+    /// SIMD `exvsum rd, rs1`: `rd_i += rs1_{2i} + rs1_{2i+1}` (expanding).
+    pub fn exvsum(&self, rs1: u64, rd: u64, rm: RoundingMode) -> u64 {
+        let sw = self.unit.src.width();
+        let dw = self.unit.dst.width();
+        let mut out = rd;
+        for i in 0..self.n_units() {
+            let a = lane(rs1, 2 * i, sw);
+            let c = lane(rs1, 2 * i + 1, sw);
+            let e = lane(rd, i, dw);
+            out = set_lane(out, i, dw, self.unit.exvsum(a, c, e, rm));
+        }
+        out
+    }
+
+    /// SIMD `vsum rd, rs1`: pairwise reduction of `dst`-format lanes of
+    /// rs1 into the low lanes of rd; upper lanes pass through.
+    pub fn vsum(&self, rs1: u64, rd: u64, rm: RoundingMode) -> u64 {
+        let dw = self.unit.dst.width();
+        let pairs = self.n_units() / 2;
+        let mut out = rd;
+        for i in 0..pairs.max(1) {
+            let a = lane(rs1, 2 * i, dw);
+            let c = lane(rs1, 2 * i + 1, dw);
+            let e = lane(rd, i, dw);
+            out = set_lane(out, i, dw, self.unit.vsum(a, c, e, rm));
+        }
+        out
+    }
+}

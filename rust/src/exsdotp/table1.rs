@@ -1,0 +1,104 @@
+//! Table I: source/destination format combinations supported by the
+//! ExSdotp unit, per operation.
+//!
+//! | Source  | FP32           | FP16alt        | FP16           | FP8  | FP8alt |
+//! |---------|----------------|----------------|----------------|------|--------|
+//! | FP32    | Vsum           | –              | –              | –    | –      |
+//! | FP16alt | ExSdotp/ExVsum | Vsum           | Vsum           | –    | –      |
+//! | FP16    | ExSdotp/ExVsum | Vsum           | Vsum           | –    | –      |
+//! | FP8     | –              | ExSdotp/ExVsum | ExSdotp/ExVsum | Vsum | Vsum   |
+//! | FP8alt  | –              | ExSdotp/ExVsum | ExSdotp/ExVsum | Vsum | Vsum   |
+//!
+//! (Vsum rows with mismatched same-width formats — e.g. src FP16alt,
+//! dst FP16 — reflect that Vsum reads `dst`-format operands; the *source
+//! register* format is what the CSR `src_is_alt` bit says, but the
+//! datapath treats them as `dst`-format values.)
+
+use crate::formats::{FpFormat, FP16, FP16ALT, FP32, FP8, FP8ALT};
+
+/// Operation kinds the unit provides.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OpKind {
+    /// Expanding sum of dot products (eq. 1).
+    ExSdotp,
+    /// Expanding vector inner sum (eq. 5).
+    ExVsum,
+    /// Non-expanding vector inner sum (eq. 6).
+    Vsum,
+}
+
+/// Does the (src, dst) pair support `op`, per Table I?
+pub fn supported(src: FpFormat, dst: FpFormat, op: OpKind) -> bool {
+    let expanding_pairs: [(FpFormat, FpFormat); 6] = [
+        (FP16, FP32),
+        (FP16ALT, FP32),
+        (FP8, FP16),
+        (FP8, FP16ALT),
+        (FP8ALT, FP16),
+        (FP8ALT, FP16ALT),
+    ];
+    match op {
+        OpKind::ExSdotp | OpKind::ExVsum => expanding_pairs.contains(&(src, dst)),
+        OpKind::Vsum => {
+            // Non-expanding, implemented for 8-, 16-, 32-bit formats;
+            // src and dst must share the operation width.
+            let w = src.width();
+            w == dst.width() && (w == 8 || w == 16 || w == 32)
+        }
+    }
+}
+
+/// All (src, dst, op) triples supported — iterates Table I.
+pub fn all_supported() -> Vec<(FpFormat, FpFormat, OpKind)> {
+    let fmts = [FP32, FP16ALT, FP16, FP8, FP8ALT];
+    let mut out = Vec::new();
+    for src in fmts {
+        for dst in fmts {
+            for op in [OpKind::ExSdotp, OpKind::ExVsum, OpKind::Vsum] {
+                if supported(src, dst, op) {
+                    out.push((src, dst, op));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expanding_combos_match_table1() {
+        assert!(supported(FP16, FP32, OpKind::ExSdotp));
+        assert!(supported(FP16ALT, FP32, OpKind::ExVsum));
+        assert!(supported(FP8, FP16, OpKind::ExSdotp));
+        assert!(supported(FP8, FP16ALT, OpKind::ExSdotp));
+        assert!(supported(FP8ALT, FP16, OpKind::ExVsum));
+        assert!(supported(FP8ALT, FP16ALT, OpKind::ExSdotp));
+        // Not supported: skipping a level or going backwards.
+        assert!(!supported(FP8, FP32, OpKind::ExSdotp));
+        assert!(!supported(FP32, FP16, OpKind::ExSdotp));
+        assert!(!supported(FP32, FP32, OpKind::ExSdotp));
+        assert!(!supported(FP16, FP16, OpKind::ExSdotp));
+    }
+
+    #[test]
+    fn vsum_combos_match_table1() {
+        assert!(supported(FP32, FP32, OpKind::Vsum));
+        assert!(supported(FP16, FP16, OpKind::Vsum));
+        assert!(supported(FP16ALT, FP16, OpKind::Vsum));
+        assert!(supported(FP16, FP16ALT, OpKind::Vsum));
+        assert!(supported(FP8, FP8, OpKind::Vsum));
+        assert!(supported(FP8ALT, FP8, OpKind::Vsum));
+        assert!(!supported(FP16, FP32, OpKind::Vsum));
+        assert!(!supported(FP32, FP16, OpKind::Vsum));
+    }
+
+    #[test]
+    fn count_matches_table1() {
+        // Table I: 6 ExSdotp cells + 6 ExVsum + (1 FP32 + 4 16-bit + 4
+        // 8-bit) Vsum cells = 21 supported triples.
+        assert_eq!(all_supported().len(), 6 + 6 + 9);
+    }
+}

@@ -1,0 +1,439 @@
+//! Validation of the fused datapath, the cascade baseline, and the SIMD
+//! wrapper against the exact single-rounding oracle.
+
+use super::cascade::{exsdotp_cascade, exvsum_cascade};
+use super::exact::{exsdotp_exact, exvsum_exact, vsum_exact};
+use super::simd::{lane, set_lane, SimdExSdotp, SimdOp};
+use super::unit::ExSdotpUnit;
+use crate::formats::*;
+use crate::softfloat::{from_f64, to_f64, RoundingMode};
+use crate::util::prop::{for_all, FpGen};
+use crate::util::rng::Rng;
+
+const RMS: [RoundingMode; 5] = [
+    RoundingMode::Rne,
+    RoundingMode::Rtz,
+    RoundingMode::Rdn,
+    RoundingMode::Rup,
+    RoundingMode::Rmm,
+];
+
+
+fn same(fmt: FpFormat, x: u64, y: u64) -> bool {
+    (fmt.is_nan(x) && fmt.is_nan(y)) || x == y
+}
+
+/// Map an encoding to a totally ordered integer so ulp distance is a
+/// subtraction (±0 collapse to 0).
+fn ulp_key(fmt: FpFormat, bits: u64) -> i64 {
+    let mag = (bits & !fmt.sign_mask() & fmt.width_mask()) as i64;
+    if fmt.sign(bits) {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Distance in ulps between two non-NaN encodings.
+fn ulp_dist(fmt: FpFormat, x: u64, y: u64) -> u64 {
+    (ulp_key(fmt, x) - ulp_key(fmt, y)).unsigned_abs()
+}
+
+/// Tracks how often a faithfully-rounded datapath hits the exactly
+/// rounded value. Fused three-term adders guarantee ≤ 1 ulp error; we
+/// additionally require near-perfect agreement (the deviation window is
+/// a ~2^-(p_src+3) sliver of the operand space).
+struct Faithful {
+    total: u64,
+    off_by_one: u64,
+}
+
+impl Faithful {
+    fn new() -> Self {
+        Self { total: 0, off_by_one: 0 }
+    }
+
+    fn check(&mut self, fmt: FpFormat, got: u64, exact: u64, ctx: &str) {
+        self.total += 1;
+        if same(fmt, got, exact) {
+            return;
+        }
+        assert!(
+            !fmt.is_nan(got) && !fmt.is_nan(exact) && ulp_dist(fmt, got, exact) <= 1,
+            "beyond faithful rounding: {ctx} got={got:#x} exact={exact:#x}"
+        );
+        self.off_by_one += 1;
+    }
+
+    fn assert_mostly_exact(&self, max_rate: f64) {
+        let rate = self.off_by_one as f64 / self.total.max(1) as f64;
+        assert!(rate <= max_rate, "off-by-one rate {rate} > {max_rate} ({}/{})", self.off_by_one, self.total);
+    }
+}
+
+/// The paper's expanding format pairs under test.
+fn expanding_pairs() -> [(FpFormat, FpFormat); 4] {
+    [(FP16, FP32), (FP16ALT, FP32), (FP8, FP16), (FP8ALT, FP16)]
+}
+
+// ------------------------------------------------------- fused vs exact oracle
+
+#[test]
+fn fused_matches_exact_oracle_randomized() {
+    for (src, dst) in expanding_pairs() {
+        let unit = ExSdotpUnit::new(src, dst);
+        let gs = FpGen::new(src);
+        let gd = FpGen::new(dst);
+        let mut stats = Faithful::new();
+        for_all("fused vs exact", 30_000, |rng| {
+            let (a, b, c, d) = (gs.any(rng), gs.any(rng), gs.any(rng), gs.any(rng));
+            let e = gd.any(rng);
+            for rm in RMS {
+                let fused = unit.exsdotp(a, b, c, d, e, rm);
+                let exact = exsdotp_exact(src, dst, a, b, c, d, e, rm);
+                let ctx = format!(
+                    "{}→{} rm={rm:?} a={a:#x} b={b:#x} c={c:#x} d={d:#x} e={e:#x}",
+                    src.name(),
+                    dst.name()
+                );
+                stats.check(dst, fused, exact, &ctx);
+            }
+        });
+        stats.assert_mostly_exact(0.001);
+    }
+}
+
+#[test]
+fn fused_fp8_to_fp16_near_exhaustive_products() {
+    // All 2^16 (a,b) products against a sweep of accumulators.
+    let unit = ExSdotpUnit::fp8_to_fp16();
+    let mut rng = Rng::new(99);
+    let gd = FpGen::new(FP16);
+    let mut stats = Faithful::new();
+    for a in 0..256u64 {
+        for b in 0..256u64 {
+            let c = rng.next_u64() & 0xff;
+            let d = rng.next_u64() & 0xff;
+            let e = gd.any(&mut rng);
+            let fused = unit.exsdotp(a, b, c, d, e, RoundingMode::Rne);
+            let exact = exsdotp_exact(FP8, FP16, a, b, c, d, e, RoundingMode::Rne);
+            stats.check(FP16, fused, exact, &format!("a={a:#x} b={b:#x} c={c:#x} d={d:#x} e={e:#x}"));
+        }
+    }
+    stats.assert_mostly_exact(0.0005);
+}
+
+#[test]
+fn fused_handles_paper_nonassociativity_example() {
+    // §III-B: if |a| ≫ |c| and b = −a then (a+b)+c = c, but a+(b+c) may
+    // return 0. Build it with products: a·1 + (−a)·1 + c.
+    let unit = ExSdotpUnit::fp16_to_fp32();
+    let one = from_f64(1.0, FP16, RoundingMode::Rne);
+    let a = from_f64(60000.0, FP16, RoundingMode::Rne);
+    let na = a | FP16.sign_mask();
+    let c = from_f64(2f64.powi(-20), FP32, RoundingMode::Rne); // tiny accumulator
+    let fused = unit.exsdotp(a, one, na, one, c, RoundingMode::Rne);
+    assert_eq!(to_f64(fused, FP32), 2f64.powi(-20), "recovery path must preserve c");
+}
+
+#[test]
+fn cancellation_recovery_path() {
+    // max + int cancel exactly; min must come through unharmed even
+    // though it was shifted out of the stage-1 field.
+    for (src, dst) in expanding_pairs() {
+        let unit = ExSdotpUnit::new(src, dst);
+        // A large-but-finite source value (format-dependent range).
+        let big = from_f64(2f64.powi(src.emax() / 2), src, RoundingMode::Rne);
+        let one_s = from_f64(1.0, src, RoundingMode::Rne);
+        let nbig = big | src.sign_mask();
+        // e = smallest subnormal of dst: maximally shifted out.
+        let e = dst.min_subnormal();
+        let fused = unit.exsdotp(big, one_s, nbig, one_s, e, RoundingMode::Rne);
+        assert_eq!(fused, e, "{}→{}", src.name(), dst.name());
+    }
+}
+
+// --------------------------------------------------------------- vsum / exvsum
+
+#[test]
+fn exvsum_equals_exsdotp_with_ones() {
+    for (src, dst) in expanding_pairs() {
+        let unit = ExSdotpUnit::new(src, dst);
+        let one = from_f64(1.0, src, RoundingMode::Rne);
+        let gs = FpGen::new(src);
+        let gd = FpGen::new(dst);
+        for_all("exvsum = exsdotp(1)", 10_000, |rng| {
+            let (a, c, e) = (gs.any(rng), gs.any(rng), gd.any(rng));
+            let v = unit.exvsum(a, c, e, RoundingMode::Rne);
+            let s = unit.exsdotp(a, one, c, one, e, RoundingMode::Rne);
+            assert!(same(dst, v, s));
+        });
+    }
+}
+
+#[test]
+fn exvsum_matches_exact() {
+    for (src, dst) in expanding_pairs() {
+        let unit = ExSdotpUnit::new(src, dst);
+        let gs = FpGen::new(src);
+        let gd = FpGen::new(dst);
+        let mut stats = Faithful::new();
+        for_all("exvsum vs exact", 10_000, |rng| {
+            let (a, c, e) = (gs.any(rng), gs.any(rng), gd.any(rng));
+            for rm in RMS {
+                let v = unit.exvsum(a, c, e, rm);
+                let x = exvsum_exact(src, dst, a, c, e, rm);
+                let ctx = format!("{}→{} rm={rm:?} a={a:#x} c={c:#x} e={e:#x}", src.name(), dst.name());
+                stats.check(dst, v, x, &ctx);
+            }
+        });
+        // ExVsum feeds `1·x` products straight into the adder, and the
+        // boundary-biased generator (25% subnormals/extremes) lands in
+        // the double-sticky faithful-rounding window more often than the
+        // dot-product path — allow a slightly higher rate.
+        stats.assert_mostly_exact(0.005);
+    }
+}
+
+#[test]
+fn vsum_matches_exact_three_term() {
+    for (src, dst) in expanding_pairs() {
+        let unit = ExSdotpUnit::new(src, dst);
+        let gd = FpGen::new(dst);
+        let mut stats = Faithful::new();
+        for_all("vsum vs exact", 10_000, |rng| {
+            let (a, c, e) = (gd.any(rng), gd.any(rng), gd.any(rng));
+            for rm in RMS {
+                let v = unit.vsum(a, c, e, rm);
+                let x = vsum_exact(dst, a, c, e, rm);
+                let ctx = format!("{} rm={rm:?} a={a:#x} c={c:#x} e={e:#x}", dst.name());
+                stats.check(dst, v, x, &ctx);
+            }
+        });
+        stats.assert_mostly_exact(0.001);
+    }
+}
+
+#[test]
+fn vsum_is_single_rounded_unlike_two_adds() {
+    // Find a case where (a+c)+e double-rounds differently and confirm
+    // the fused Vsum matches the exact result.
+    let unit = ExSdotpUnit::fp16_to_fp32();
+    let gd = FpGen::new(FP32);
+    let mut diffs = 0u32;
+    let mut rng = Rng::new(2024);
+    let mut stats = Faithful::new();
+    for _ in 0..200_000 {
+        let (a, c, e) = (gd.finite(&mut rng), gd.finite(&mut rng), gd.finite(&mut rng));
+        let fused = unit.vsum(a, c, e, RoundingMode::Rne);
+        let exact = vsum_exact(FP32, a, c, e, RoundingMode::Rne);
+        stats.check(FP32, fused, exact, "vsum rne");
+        let twostep = crate::softfloat::add(
+            FP32,
+            crate::softfloat::add(FP32, a, c, RoundingMode::Rne),
+            e,
+            RoundingMode::Rne,
+        );
+        if !same(FP32, twostep, exact) {
+            diffs += 1;
+        }
+    }
+    assert!(diffs > 0, "expected at least one double-rounding discrepancy");
+    stats.assert_mostly_exact(0.0005);
+}
+
+// ------------------------------------------------------------------- specials
+
+#[test]
+fn nan_and_inf_propagation() {
+    let unit = ExSdotpUnit::fp16_to_fp32();
+    let one = from_f64(1.0, FP16, RoundingMode::Rne);
+    let e1 = from_f64(1.0, FP32, RoundingMode::Rne);
+    let nan_s = FP16.quiet_nan();
+    let inf_s = FP16.infinity(false);
+    let ninf_s = FP16.infinity(true);
+
+    // NaN anywhere → NaN.
+    assert!(FP32.is_nan(unit.exsdotp(nan_s, one, one, one, e1, RoundingMode::Rne)));
+    assert!(FP32.is_nan(unit.exsdotp(one, one, one, nan_s, e1, RoundingMode::Rne)));
+    assert!(FP32.is_nan(unit.exsdotp(one, one, one, one, FP32.quiet_nan(), RoundingMode::Rne)));
+    // ∞ × 0 → NaN.
+    assert!(FP32.is_nan(unit.exsdotp(inf_s, FP16.zero(false), one, one, e1, RoundingMode::Rne)));
+    // Conflicting infinities → NaN.
+    assert!(FP32.is_nan(unit.exsdotp(inf_s, one, ninf_s, one, e1, RoundingMode::Rne)));
+    assert!(FP32.is_nan(unit.exsdotp(inf_s, one, one, one, FP32.infinity(true), RoundingMode::Rne)));
+    // Agreeing infinities → that infinity.
+    assert_eq!(unit.exsdotp(inf_s, one, one, one, e1, RoundingMode::Rne), FP32.infinity(false));
+    assert_eq!(
+        unit.exsdotp(ninf_s, one, one | (FP16.sign_mask()), one, FP32.infinity(true), RoundingMode::Rne),
+        FP32.infinity(true)
+    );
+}
+
+#[test]
+fn zero_products_and_signed_zero() {
+    let unit = ExSdotpUnit::fp16_to_fp32();
+    let z = FP16.zero(false);
+    let nz = FP16.zero(true);
+    // 0·0 + 0·0 + e = e.
+    let e = from_f64(3.5, FP32, RoundingMode::Rne);
+    assert_eq!(unit.exsdotp(z, z, z, z, e, RoundingMode::Rne), e);
+    // All-positive zeros → +0; a negative zero in the mix (RNE) → +0;
+    // RDN with mixed signs → −0.
+    assert_eq!(unit.exsdotp(z, z, z, z, FP32.zero(false), RoundingMode::Rne), FP32.zero(false));
+    assert_eq!(unit.exsdotp(nz, z, z, z, FP32.zero(false), RoundingMode::Rdn), FP32.zero(true));
+    assert_eq!(unit.exsdotp(nz, nz, nz, nz, FP32.zero(false), RoundingMode::Rne), FP32.zero(false));
+}
+
+#[test]
+fn overflow_saturation_per_mode() {
+    let unit = ExSdotpUnit::fp8_to_fp16();
+    let big = FP8.max_finite(false);
+    let e = FP16.max_finite(false);
+    // max·max + max·max + max overflows FP16.
+    assert_eq!(unit.exsdotp(big, big, big, big, e, RoundingMode::Rne), FP16.infinity(false));
+    assert_eq!(unit.exsdotp(big, big, big, big, e, RoundingMode::Rtz), FP16.max_finite(false));
+}
+
+// ------------------------------------------------------------- cascade baseline
+
+#[test]
+fn cascade_rounds_twice_and_differs_from_fused() {
+    // Aggregate: the cascade must (a) equal the fused result most of the
+    // time, (b) differ on a nonzero fraction, (c) never be *more*
+    // accurate than the fused result vs the exact oracle.
+    for (src, dst) in expanding_pairs() {
+        let unit = ExSdotpUnit::new(src, dst);
+        let gs = FpGen::new(src);
+        let gd = FpGen::new(dst);
+        let mut rng = Rng::new(7);
+        let mut differs = 0u64;
+        let mut stats = Faithful::new();
+        for _ in 0..100_000 {
+            let (a, b, c, d) = (gs.finite(&mut rng), gs.finite(&mut rng), gs.finite(&mut rng), gs.finite(&mut rng));
+            let e = gd.finite(&mut rng);
+            let fused = unit.exsdotp(a, b, c, d, e, RoundingMode::Rne);
+            let casc = exsdotp_cascade(src, dst, a, b, c, d, e, RoundingMode::Rne);
+            let exact = exsdotp_exact(src, dst, a, b, c, d, e, RoundingMode::Rne);
+            stats.check(dst, fused, exact, "cascade cmp");
+            if !same(dst, casc, fused) {
+                differs += 1;
+            }
+        }
+        assert!(differs > 0, "{}→{}: cascade never differed", src.name(), dst.name());
+    }
+}
+
+#[test]
+fn exvsum_cascade_baseline_works() {
+    let a = from_f64(1.0, FP16, RoundingMode::Rne);
+    let c = from_f64(2.0, FP16, RoundingMode::Rne);
+    let e = from_f64(0.5, FP32, RoundingMode::Rne);
+    assert_eq!(to_f64(exvsum_cascade(FP16, FP32, a, c, e, RoundingMode::Rne), FP32), 3.5);
+}
+
+// ----------------------------------------------------------------------- SIMD
+
+#[test]
+fn simd_lane_packing_roundtrip() {
+    let mut reg = 0u64;
+    for i in 0..4 {
+        reg = set_lane(reg, i, 16, 0x1000 + i as u64);
+    }
+    for i in 0..4 {
+        assert_eq!(lane(reg, i, 16), 0x1000 + i as u64);
+    }
+    // 32-bit lanes overlay the same register.
+    assert_eq!(lane(reg, 0, 32), (0x1001 << 16) | 0x1000);
+}
+
+#[test]
+fn simd_exsdotp_matches_scalar_lanes() {
+    for (src, dst) in expanding_pairs() {
+        let simd = SimdExSdotp::new(src, dst);
+        let unit = ExSdotpUnit::new(src, dst);
+        let sw = src.width();
+        let dw = dst.width();
+        for_all("simd vs scalar", 5_000, |rng| {
+            let rs1 = rng.next_u64();
+            let rs2 = rng.next_u64();
+            let rd = rng.next_u64();
+            let out = simd.exsdotp(rs1, rs2, rd, RoundingMode::Rne);
+            for i in 0..simd.n_units() {
+                let want = unit.exsdotp(
+                    lane(rs1, 2 * i, sw),
+                    lane(rs2, 2 * i, sw),
+                    lane(rs1, 2 * i + 1, sw),
+                    lane(rs2, 2 * i + 1, sw),
+                    lane(rd, i, dw),
+                    RoundingMode::Rne,
+                );
+                assert!(same(dst, lane(out, i, dw), want), "lane {i}");
+            }
+        });
+    }
+}
+
+#[test]
+fn simd_unit_counts_match_paper() {
+    // §III-D: two 16-to-32-bit and (four) 8-to-16-bit ExSdotp per cycle
+    // in a 64-bit datapath: "up to two 16-to-32-bit or four 8-to-16-bit
+    // ExSdotp operations each cycle".
+    assert_eq!(SimdExSdotp::new(FP16, FP32).n_units(), 2);
+    assert_eq!(SimdExSdotp::new(FP16ALT, FP32).n_units(), 2);
+    assert_eq!(SimdExSdotp::new(FP8, FP16).n_units(), 4);
+    assert_eq!(SimdExSdotp::new(FP8ALT, FP16).n_units(), 4);
+    // FLOP/instruction: 8 (2 units × 4) and 16 (4 × 4) — the peak
+    // FLOP/cycle in Table III.
+    assert_eq!(SimdExSdotp::new(FP16, FP32).flops(SimdOp::ExSdotp), 8);
+    assert_eq!(SimdExSdotp::new(FP8, FP16).flops(SimdOp::ExSdotp), 16);
+}
+
+#[test]
+fn simd_vsum_reduces_accumulator_pairs() {
+    // After SIMD ExSdotp, rd holds packed partial sums; vsum folds them.
+    let simd = SimdExSdotp::new(FP16, FP32);
+    let a0 = from_f64(1.5, FP32, RoundingMode::Rne);
+    let a1 = from_f64(2.25, FP32, RoundingMode::Rne);
+    let rs1 = a0 | (a1 << 32);
+    let acc = from_f64(0.25, FP32, RoundingMode::Rne);
+    let out = simd.vsum(rs1, acc, RoundingMode::Rne);
+    assert_eq!(to_f64(lane(out, 0, 32), FP32), 4.0);
+}
+
+// -------------------------------------------------------------- accuracy trend
+
+#[test]
+fn fused_accumulation_beats_cascade_in_aggregate() {
+    // Miniature Table IV. Per-seed outcomes fluctuate (error cancellation
+    // can favour either datapath on a single draw — the paper reports one
+    // draw per n); in aggregate over seeds the fused unit must win.
+    for (src, dst, n) in [(FP16, FP32, 1000usize), (FP8, FP16, 1000)] {
+        let unit = ExSdotpUnit::new(src, dst);
+        let mut sum_fused = 0f64;
+        let mut sum_casc = 0f64;
+        for seed in 0..32u64 {
+            let mut rng = Rng::new(4242 + seed);
+            let mut acc_fused = dst.zero(false);
+            let mut acc_casc = dst.zero(false);
+            let mut acc_f64 = 0f64;
+            for _ in 0..n / 2 {
+                let quant = |r: &mut Rng| from_f64(r.gaussian(), src, RoundingMode::Rne);
+                let (a, b, c, d) = (quant(&mut rng), quant(&mut rng), quant(&mut rng), quant(&mut rng));
+                acc_fused = unit.exsdotp(a, b, c, d, acc_fused, RoundingMode::Rne);
+                acc_casc = exsdotp_cascade(src, dst, a, b, c, d, acc_casc, RoundingMode::Rne);
+                acc_f64 += to_f64(a, src) * to_f64(b, src) + to_f64(c, src) * to_f64(d, src);
+            }
+            sum_fused += ((to_f64(acc_fused, dst) - acc_f64) / acc_f64).abs();
+            sum_casc += ((to_f64(acc_casc, dst) - acc_f64) / acc_f64).abs();
+        }
+        assert!(
+            sum_fused <= sum_casc,
+            "{}→{}: mean fused err {} vs cascade {}",
+            src.name(),
+            dst.name(),
+            sum_fused / 32.0,
+            sum_casc / 32.0
+        );
+    }
+}

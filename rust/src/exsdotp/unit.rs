@@ -1,0 +1,365 @@
+//! The fused ExSdotp datapath, bit-faithful to §III-B.
+//!
+//! Dataflow (Fig. 4), for `a×b + c×d + e`:
+//!
+//! 1. **Mantissa products** — `a×b` and `c×d` computed exactly
+//!    (`2·p_src` bits each), then zero-padded to `p_dst` (eq. 2).
+//! 2. **Sort** — the three addends (two products + accumulator `e`) are
+//!    sorted by magnitude into `max`, `int`, `min` using the exponent
+//!    datapath.
+//! 3. **First sum** — `max` and `int` are placed in a `2·p_dst+3`-bit
+//!    field (`{addend, 0_(p_dst+3)}`), `int` right-shifted by the
+//!    exponent difference (shifted-out bits → sticky), then added
+//!    (eq. 3) producing `2·p_dst+4` bits.
+//! 4. **Widen** — the sum is zero-padded by another `p_src` bits to
+//!    survive the cancellation case where `max` came from a
+//!    normal×subnormal product (eq. 4).
+//! 5. **Second sum** — `min`, aligned to the widened grid, is added.
+//!    *Recovery path:* if the first sum was exactly zero, `min` is
+//!    assigned directly, recovering its shifted-out bits.
+//! 6. **Single normalize + round** — one rounding step, shared with the
+//!    scalar softfloat via [`round_pack`].
+//!
+//! ExVsum reuses the path with `b = d = 1`; the non-expanding Vsum
+//! bypasses the multipliers and feeds three `dst`-format operands
+//! directly into the three-term adder (§III-C, Fig. 4 bypass arrows).
+
+use crate::formats::FpFormat;
+use crate::softfloat::round::{round_pack, RoundingMode};
+use crate::softfloat::unpack::{unpack, Class, Unpacked};
+
+/// One addend entering the three-term adder.
+#[derive(Clone, Copy, Debug)]
+enum Term {
+    /// ±0 (sign kept for IEEE zero-sign rules).
+    Zero(bool),
+    /// Finite nonzero: `value = (-1)^sign · mant · 2^(e_msb - (msb_at))`,
+    /// with `mant`'s MSB normalized to a fixed bit position.
+    Finite { sign: bool, e_msb: i32, mant: u128 },
+}
+
+/// A parameterized ExSdotp unit instance (one per `src→dst` pair, like
+/// one hardware instantiation; the SIMD wrapper replicates these).
+#[derive(Clone, Copy, Debug)]
+pub struct ExSdotpUnit {
+    /// Source (input) format of `a, b, c, d`.
+    pub src: FpFormat,
+    /// Destination (accumulator/result) format.
+    pub dst: FpFormat,
+}
+
+impl ExSdotpUnit {
+    /// Instantiate a `src→dst` unit.
+    ///
+    /// Panics if the format pair violates the datapath constraints the
+    /// paper's parameterization imposes: `2·p_src ≤ p_dst` (products must
+    /// fit the padded accumulator width) and the internal field
+    /// `2·p_dst + p_src + 5` must fit the 128-bit model arithmetic.
+    pub fn new(src: FpFormat, dst: FpFormat) -> Self {
+        assert!(
+            2 * src.precision() <= dst.precision(),
+            "ExSdotp requires 2*p_src <= p_dst (got {} -> {})",
+            src.name(),
+            dst.name()
+        );
+        assert!(2 * dst.precision() + src.precision() + 5 <= 127, "internal field exceeds model width");
+        assert!(dst.exp_bits >= src.exp_bits, "destination dynamic range must cover the source");
+        Self { src, dst }
+    }
+
+    /// The paper's 16-to-32-bit unit.
+    pub fn fp16_to_fp32() -> Self {
+        Self::new(crate::formats::FP16, crate::formats::FP32)
+    }
+
+    /// The paper's 8-to-16-bit unit.
+    pub fn fp8_to_fp16() -> Self {
+        Self::new(crate::formats::FP8, crate::formats::FP16)
+    }
+
+    /// `a×b + c×d + e` — the fused expanding sum of dot products (eq. 1).
+    pub fn exsdotp(&self, a: u64, b: u64, c: u64, d: u64, e: u64, rm: RoundingMode) -> u64 {
+        let (src, dst) = (self.src, self.dst);
+        let ua = unpack(src, a);
+        let ub = unpack(src, b);
+        let uc = unpack(src, c);
+        let ud = unpack(src, d);
+        let ue = unpack(dst, e);
+
+        if ua.is_nan() || ub.is_nan() || uc.is_nan() || ud.is_nan() || ue.is_nan() {
+            return dst.quiet_nan();
+        }
+        // Invalid products: ∞ × 0.
+        if (ua.is_inf() && ub.is_zero()) || (ua.is_zero() && ub.is_inf()) {
+            return dst.quiet_nan();
+        }
+        if (uc.is_inf() && ud.is_zero()) || (uc.is_zero() && ud.is_inf()) {
+            return dst.quiet_nan();
+        }
+
+        let prod_ab = product_term(&ua, &ub);
+        let prod_cd = product_term(&uc, &ud);
+        let acc = operand_term(&ue);
+        self.three_term(prod_ab, prod_cd, acc, src.precision(), rm)
+    }
+
+    /// `a + c + e` with `a, c` in the source format — ExVsum (eq. 5),
+    /// implemented exactly as the hardware does: `b = d = 1`.
+    pub fn exvsum(&self, a: u64, c: u64, e: u64, rm: RoundingMode) -> u64 {
+        let one = crate::softfloat::from_f64(1.0, self.src, RoundingMode::Rne);
+        self.exsdotp(a, one, c, one, e, rm)
+    }
+
+    /// `a + c + e` with all operands in the destination format — the
+    /// non-expanding Vsum (eq. 6): multipliers bypassed, three-term
+    /// adder reused. Operand width grows to `dst` via the `a_vs`/`c_vs`
+    /// register-field extension (§III-C).
+    pub fn vsum(&self, a: u64, c: u64, e: u64, rm: RoundingMode) -> u64 {
+        let dst = self.dst;
+        let ua = unpack(dst, a);
+        let uc = unpack(dst, c);
+        let ue = unpack(dst, e);
+        if ua.is_nan() || uc.is_nan() || ue.is_nan() {
+            return dst.quiet_nan();
+        }
+        // Vsum skips the multipliers, so p_src plays no role in padding;
+        // the hardware still widens by p_src zeros — keep it identical.
+        self.three_term(operand_term(&ua), operand_term(&uc), operand_term(&ue), self.src.precision(), rm)
+    }
+
+    /// The fused three-term addition (steps 2–6 above). `p_pad` is the
+    /// stage-4 widening amount (= p_src in hardware).
+    fn three_term(&self, t0: TermOrInf, t1: TermOrInf, t2: TermOrInf, p_pad: u32, rm: RoundingMode) -> u64 {
+        let dst = self.dst;
+
+        // Infinity resolution across the three addends.
+        let mut inf_sign: Option<bool> = None;
+        for t in [&t0, &t1, &t2] {
+            if let TermOrInf::Inf(s) = t {
+                match inf_sign {
+                    None => inf_sign = Some(*s),
+                    Some(prev) if prev != *s => return dst.quiet_nan(),
+                    _ => {}
+                }
+            }
+        }
+        if let Some(s) = inf_sign {
+            return dst.infinity(s);
+        }
+
+        let terms = [unwrap_finite(t0), unwrap_finite(t1), unwrap_finite(t2)];
+
+        // Collect finite nonzero addends (fixed buffer — this is the
+        // simulator's per-lane hot path); resolve all-zero cases with
+        // the IEEE pairwise zero-sign rule.
+        let mut buf = [(false, 0i32, 0u128); 3];
+        let mut n_finite = 0usize;
+        let mut zero_sign: Option<bool> = None;
+        for t in terms {
+            match t {
+                Term::Zero(s) => {
+                    zero_sign = Some(match zero_sign {
+                        None => s,
+                        Some(prev) if prev == s => s,
+                        _ => rm == RoundingMode::Rdn,
+                    });
+                }
+                Term::Finite { sign, e_msb, mant } => {
+                    buf[n_finite] = (sign, e_msb, mant);
+                    n_finite += 1;
+                }
+            }
+        }
+        let finite = &mut buf[..n_finite];
+
+        let p_dst = dst.precision();
+        let msb_at = p_dst - 1; // normalization point of addend mantissas
+        // Weight-align every mantissa to MSB = p_dst−1: products carry
+        // ≤ 2·p_src ≤ p_dst bits and operands ≤ p_dst bits, so this is
+        // the paper's zero-padding to p_dst (eq. 2) — never truncating.
+        for f in finite.iter_mut() {
+            f.2 = normalize_to(f.2, msb_at);
+        }
+
+        match n_finite {
+            0 => dst.zero(zero_sign.unwrap_or(false)),
+            1 => {
+                let (sign, e_msb, mant) = finite[0];
+                round_pack(sign, e_msb - msb_at as i32, mant, false, dst, rm)
+            }
+            _ => {
+                // Sort by true magnitude, descending (exponent datapath +
+                // mantissa tie-break). Hand-rolled 3-element network —
+                // this is the hottest code in the cluster simulator.
+                #[inline(always)]
+                fn ge(a: &(bool, i32, u128), b: &(bool, i32, u128)) -> bool {
+                    (a.1, a.2) >= (b.1, b.2)
+                }
+                if !ge(&finite[0], &finite[1]) {
+                    finite.swap(0, 1);
+                }
+                if n_finite == 3 {
+                    if !ge(&finite[1], &finite[2]) {
+                        finite.swap(1, 2);
+                    }
+                    if !ge(&finite[0], &finite[1]) {
+                        finite.swap(0, 1);
+                    }
+                }
+                let (max, int) = (finite[0], finite[1]);
+                let min3 = finite.get(2).copied();
+
+                // --- Stage 3: first sum over 2·p_dst+3 bits.
+                let up1 = (p_dst + 3) as u32; // {addend, 0_(p_dst+3)}
+                let max_m = max.2 << up1;
+                let d1 = (max.1 - int.1) as u32;
+                let (int_m, st_int) = shift_sticky(int.2 << up1, d1);
+
+                let (mut sign1, mut k1, mut st1);
+                if max.0 == int.0 {
+                    sign1 = max.0;
+                    k1 = max_m + int_m;
+                    st1 = st_int;
+                } else {
+                    sign1 = max.0;
+                    k1 = max_m - int_m - st_int as u128;
+                    st1 = st_int;
+                    if k1 == 0 && !st1 {
+                        // Exact cancellation of max and int: recovery
+                        // path — the result is min alone (or a signed
+                        // zero if there is no third addend).
+                        return match min3 {
+                            Some((s, e, m)) => round_pack(s, e - msb_at as i32, m, false, dst, rm),
+                            None => dst.zero(rm == RoundingMode::Rdn),
+                        };
+                    }
+                }
+
+                // --- Stage 4: widen by p_pad zeros (eq. 4).
+                k1 <<= p_pad;
+
+                // --- Stage 5: add min. Like the hardware adder, this
+                // stage operates on the *kept* bits and ORs the sticky
+                // residues into the final rounding sticky. With two
+                // independent sticky residues of unknown relative size,
+                // the result is faithfully rounded (≤ 1 ulp), and exactly
+                // rounded whenever at most one residue is nonzero — the
+                // standard trade-off of fused three-term adders.
+                if let Some((s_min, e_min, m_min)) = min3 {
+                    let d2 = (max.1 - e_min) as u32;
+                    let (min_m, st_min) = shift_sticky(m_min << (up1 + p_pad), d2);
+                    if s_min == sign1 {
+                        k1 += min_m;
+                        st1 |= st_min;
+                    } else {
+                        use std::cmp::Ordering::*;
+                        match (k1, st1).cmp(&(min_m, st_min)) {
+                            Greater => {
+                                // Borrow against the subtrahend's residue
+                                // only when the minuend carries none —
+                                // keeps single-residue cases exactly
+                                // rounded.
+                                if !st1 {
+                                    k1 = k1 - min_m - st_min as u128;
+                                } else {
+                                    k1 -= min_m;
+                                }
+                                st1 |= st_min;
+                            }
+                            Less => {
+                                // min dominates (deep cancellation of the
+                                // first sum): magnitudes swap, sign flips.
+                                if !st_min {
+                                    k1 = min_m - k1 - st1 as u128;
+                                } else {
+                                    k1 = min_m - k1;
+                                }
+                                st1 |= st_min;
+                                sign1 = s_min;
+                            }
+                            Equal => {
+                                if !st1 {
+                                    // Exact cancellation.
+                                    return dst.zero(rm == RoundingMode::Rdn);
+                                }
+                                // Two sub-ulp residues of unknown relative
+                                // size: collapse to a sticky-only value.
+                                k1 = 0;
+                            }
+                        }
+                    }
+                }
+
+                // --- Stage 6: single normalization and rounding. The
+                // working grid LSB sits 2·p_dst+2+p_pad bits below max's
+                // MSB exponent.
+                let grid = max.1 - (2 * p_dst as i32 + 2 + p_pad as i32);
+                round_pack(sign1, grid, k1, st1, dst, rm)
+            }
+        }
+    }
+}
+
+/// Finite-or-infinite addend (NaNs are filtered before construction).
+enum TermOrInf {
+    Inf(bool),
+    Fin(Term),
+}
+
+fn unwrap_finite(t: TermOrInf) -> Term {
+    match t {
+        TermOrInf::Fin(f) => f,
+        TermOrInf::Inf(_) => unreachable!("infinities resolved earlier"),
+    }
+}
+
+/// Build the addend for a product `x × y` (both already unpacked,
+/// non-NaN, not ∞×0).
+fn product_term(x: &Unpacked, y: &Unpacked) -> TermOrInf {
+    let sign = x.sign ^ y.sign;
+    if x.is_inf() || y.is_inf() {
+        return TermOrInf::Inf(sign);
+    }
+    if x.is_zero() || y.is_zero() {
+        return TermOrInf::Fin(Term::Zero(sign));
+    }
+    let mant = x.mant * y.mant; // exact, ≤ 2·p_src bits
+    let msb = 127 - mant.leading_zeros() as i32;
+    TermOrInf::Fin(Term::Finite { sign, e_msb: x.exp + y.exp + msb, mant })
+}
+
+/// Build the addend for a direct operand (accumulator or Vsum input).
+fn operand_term(u: &Unpacked) -> TermOrInf {
+    match u.class {
+        Class::Inf => TermOrInf::Inf(u.sign),
+        Class::Zero => TermOrInf::Fin(Term::Zero(u.sign)),
+        _ => {
+            let msb = 127 - u.mant.leading_zeros() as i32;
+            TermOrInf::Fin(Term::Finite { sign: u.sign, e_msb: u.exp + msb, mant: u.mant })
+        }
+    }
+}
+
+/// Shift a raw mantissa so its MSB sits at `msb_at` (= `p_dst − 1`).
+/// Addends never carry more than `p_dst` significant bits (products are
+/// ≤ 2·p_src ≤ p_dst by the unit's constructor assertion), so this is
+/// always a left shift — the paper's zero-padding, never a truncation.
+#[inline(always)]
+fn normalize_to(mant: u128, msb_at: u32) -> u128 {
+    debug_assert!(mant != 0);
+    let msb = 127 - mant.leading_zeros();
+    debug_assert!(msb <= msb_at, "addend wider than p_dst: constructor invariant violated");
+    mant << (msb_at - msb)
+}
+
+/// Right-shift with sticky collection.
+#[inline(always)]
+fn shift_sticky(v: u128, n: u32) -> (u128, bool) {
+    if n == 0 {
+        (v, false)
+    } else if n > 127 {
+        (0, v != 0)
+    } else {
+        (v >> n, v & ((1u128 << n) - 1) != 0)
+    }
+}

@@ -1,0 +1,349 @@
+//! Parametric floating-point format descriptors.
+//!
+//! The paper's hardware (FPnew + the ExSdotp unit) is parameterized over
+//! `(exponent bits, mantissa bits)` pairs so that new formats can be
+//! "rapidly defined" (§III-A). This module is the software equivalent: a
+//! [`FpFormat`] fully describes an IEEE-754-style binary format and every
+//! arithmetic routine in [`crate::softfloat`] and [`crate::exsdotp`] is
+//! generic over it.
+//!
+//! The six formats the paper enables (§III-A, Fig. 1):
+//!
+//! | name      | exp | man | width | remarks |
+//! |-----------|-----|-----|-------|---------|
+//! | [`FP64`]    | 11  | 52  | 64    | IEEE binary64 |
+//! | [`FP32`]    | 8   | 23  | 32    | IEEE binary32 |
+//! | [`FP16`]    | 5   | 10  | 16    | IEEE binary16 |
+//! | [`FP16ALT`] | 8   | 7   | 16    | bfloat16 layout, IEEE semantics |
+//! | [`FP8`]     | 5   | 2   | 8     | "FP8" (e5m2) |
+//! | [`FP8ALT`]  | 4   | 3   | 8     | "FP8alt" (e4m3, fully IEEE: has inf) |
+//!
+//! All formats — including the 8-bit ones — follow full IEEE-754
+//! semantics here (subnormals, infinities, NaNs), exactly as the paper's
+//! FPnew-based implementation does ("FP16alt matches ... bfloat16 but
+//! follows the IEEE-754 directives for rounding and subnormal number
+//! handling", §III-A).
+
+/// A binary interchange floating-point format: 1 sign bit, `exp_bits`
+/// exponent bits (biased), `man_bits` mantissa bits with a hidden leading
+/// one for normal values.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct FpFormat {
+    /// Number of exponent bits (2..=15 supported).
+    pub exp_bits: u32,
+    /// Number of explicit mantissa (fraction) bits.
+    pub man_bits: u32,
+}
+
+/// IEEE binary64.
+pub const FP64: FpFormat = FpFormat::new(11, 52);
+/// IEEE binary32.
+pub const FP32: FpFormat = FpFormat::new(8, 23);
+/// IEEE binary16.
+pub const FP16: FpFormat = FpFormat::new(5, 10);
+/// bfloat16 bit layout with IEEE-754 rounding/subnormal semantics.
+pub const FP16ALT: FpFormat = FpFormat::new(8, 7);
+/// FP8 (e5m2): FP16 dynamic range, 2-bit mantissa.
+pub const FP8: FpFormat = FpFormat::new(5, 2);
+/// FP8alt (e4m3): 4-bit exponent, 3-bit mantissa.
+pub const FP8ALT: FpFormat = FpFormat::new(4, 3);
+
+impl FpFormat {
+    /// Create a format descriptor. `const` so new formats are one-liners,
+    /// mirroring FPnew's parameterization scheme.
+    pub const fn new(exp_bits: u32, man_bits: u32) -> Self {
+        Self { exp_bits, man_bits }
+    }
+
+    /// Total storage width in bits (1 + exp + man).
+    pub const fn width(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Exponent bias: `2^(exp_bits-1) - 1`.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Precision `p` = mantissa bits + hidden bit. The paper calls this
+    /// `p_src` / `p_dst` (§III-B).
+    pub const fn precision(&self) -> u32 {
+        self.man_bits + 1
+    }
+
+    /// Maximum unbiased exponent of a normal value.
+    pub const fn emax(&self) -> i32 {
+        self.bias()
+    }
+
+    /// Minimum unbiased exponent of a normal value.
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// All-ones exponent field (infinity/NaN encoding).
+    pub const fn exp_special(&self) -> u64 {
+        (1u64 << self.exp_bits) - 1
+    }
+
+    /// Bit mask for the mantissa field.
+    pub const fn man_mask(&self) -> u64 {
+        (1u64 << self.man_bits) - 1
+    }
+
+    /// Bit mask of the sign bit.
+    pub const fn sign_mask(&self) -> u64 {
+        1u64 << (self.exp_bits + self.man_bits)
+    }
+
+    /// Mask covering all `width()` bits of an encoding.
+    pub const fn width_mask(&self) -> u64 {
+        if self.width() >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width()) - 1
+        }
+    }
+
+    /// The canonical quiet NaN (sign 0, exponent all ones, mantissa MSB
+    /// set) — matches RISC-V / FPnew canonical NaN.
+    pub const fn quiet_nan(&self) -> u64 {
+        (self.exp_special() << self.man_bits) | (1u64 << (self.man_bits - 1))
+    }
+
+    /// Positive or negative infinity.
+    pub const fn infinity(&self, sign: bool) -> u64 {
+        let mag = self.exp_special() << self.man_bits;
+        if sign {
+            mag | self.sign_mask()
+        } else {
+            mag
+        }
+    }
+
+    /// Largest finite magnitude with the given sign.
+    pub const fn max_finite(&self, sign: bool) -> u64 {
+        let mag = ((self.exp_special() - 1) << self.man_bits) | self.man_mask();
+        if sign {
+            mag | self.sign_mask()
+        } else {
+            mag
+        }
+    }
+
+    /// Signed zero.
+    pub const fn zero(&self, sign: bool) -> u64 {
+        if sign {
+            self.sign_mask()
+        } else {
+            0
+        }
+    }
+
+    /// Smallest positive subnormal.
+    pub const fn min_subnormal(&self) -> u64 {
+        1
+    }
+
+    /// Smallest positive normal.
+    pub const fn min_normal(&self) -> u64 {
+        1u64 << self.man_bits
+    }
+
+    /// Split an encoding into (sign, biased exponent field, mantissa field).
+    pub fn split(&self, bits: u64) -> (bool, u64, u64) {
+        let sign = bits & self.sign_mask() != 0;
+        let exp = (bits >> self.man_bits) & self.exp_special();
+        let man = bits & self.man_mask();
+        (sign, exp, man)
+    }
+
+    /// Assemble an encoding from (sign, biased exponent field, mantissa
+    /// field). Fields must already be in range.
+    pub fn assemble(&self, sign: bool, exp: u64, man: u64) -> u64 {
+        debug_assert!(exp <= self.exp_special());
+        debug_assert!(man <= self.man_mask());
+        (if sign { self.sign_mask() } else { 0 }) | (exp << self.man_bits) | man
+    }
+
+    /// True if the encoding is a NaN in this format.
+    pub fn is_nan(&self, bits: u64) -> bool {
+        let (_, e, m) = self.split(bits);
+        e == self.exp_special() && m != 0
+    }
+
+    /// True if the encoding is ±infinity.
+    pub fn is_inf(&self, bits: u64) -> bool {
+        let (_, e, m) = self.split(bits);
+        e == self.exp_special() && m == 0
+    }
+
+    /// True if the encoding is ±0.
+    pub fn is_zero(&self, bits: u64) -> bool {
+        let (_, e, m) = self.split(bits);
+        e == 0 && m == 0
+    }
+
+    /// True if the encoding is subnormal (nonzero with zero exponent field).
+    pub fn is_subnormal(&self, bits: u64) -> bool {
+        let (_, e, m) = self.split(bits);
+        e == 0 && m != 0
+    }
+
+    /// Sign bit of the encoding.
+    pub fn sign(&self, bits: u64) -> bool {
+        bits & self.sign_mask() != 0
+    }
+
+    /// Number of lanes of this format that fit a 64-bit FP register
+    /// (§III-D: 2×FP32, 4×FP16/FP16alt, 8×FP8/FP8alt).
+    pub const fn lanes_in_64(&self) -> u32 {
+        64 / self.width()
+    }
+
+    /// Short human name for the six paper formats, or `e{E}m{M}`.
+    pub fn name(&self) -> String {
+        match (self.exp_bits, self.man_bits) {
+            (11, 52) => "FP64".into(),
+            (8, 23) => "FP32".into(),
+            (5, 10) => "FP16".into(),
+            (8, 7) => "FP16alt".into(),
+            (5, 2) => "FP8".into(),
+            (4, 3) => "FP8alt".into(),
+            (e, m) => format!("e{e}m{m}"),
+        }
+    }
+
+    /// The "alternate" companion of a format sharing the same width
+    /// (§III-E: FP16↔FP16alt, FP8↔FP8alt selected via CSR bits).
+    pub fn alt(&self) -> Option<FpFormat> {
+        match (self.exp_bits, self.man_bits) {
+            (5, 10) => Some(FP16ALT),
+            (8, 7) => Some(FP16),
+            (5, 2) => Some(FP8ALT),
+            (4, 3) => Some(FP8),
+            _ => None,
+        }
+    }
+
+    /// The expanding destination format for this source format in the
+    /// paper's ExSdotp units: 8-bit → FP16, 16-bit → FP32 (Table I).
+    pub fn expand_dst(&self) -> Option<FpFormat> {
+        match self.width() {
+            8 => Some(FP16),
+            16 => Some(FP32),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FpFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// All six formats the paper enables, in Fig. 1 order.
+pub const PAPER_FORMATS: [FpFormat; 6] = [FP64, FP32, FP16, FP16ALT, FP8, FP8ALT];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_and_biases_match_fig1() {
+        assert_eq!(FP64.width(), 64);
+        assert_eq!(FP32.width(), 32);
+        assert_eq!(FP16.width(), 16);
+        assert_eq!(FP16ALT.width(), 16);
+        assert_eq!(FP8.width(), 8);
+        assert_eq!(FP8ALT.width(), 8);
+
+        assert_eq!(FP64.bias(), 1023);
+        assert_eq!(FP32.bias(), 127);
+        assert_eq!(FP16.bias(), 15);
+        assert_eq!(FP16ALT.bias(), 127);
+        assert_eq!(FP8.bias(), 15);
+        assert_eq!(FP8ALT.bias(), 7);
+    }
+
+    #[test]
+    fn precision_matches_paper_p() {
+        // §III-B: for FP16→FP32 ExSdotp, 2*p_src = 22 and p_dst = 24.
+        assert_eq!(2 * FP16.precision(), 22);
+        assert_eq!(FP32.precision(), 24);
+    }
+
+    #[test]
+    fn special_encodings() {
+        // FP32 specials must match IEEE binary32.
+        assert_eq!(FP32.infinity(false), 0x7f80_0000);
+        assert_eq!(FP32.infinity(true), 0xff80_0000);
+        assert_eq!(FP32.quiet_nan(), 0x7fc0_0000);
+        assert_eq!(FP32.max_finite(false), 0x7f7f_ffff);
+        assert_eq!(FP32.zero(true), 0x8000_0000);
+        // FP16 specials.
+        assert_eq!(FP16.infinity(false), 0x7c00);
+        assert_eq!(FP16.quiet_nan(), 0x7e00);
+        assert_eq!(FP16.max_finite(false), 0x7bff);
+    }
+
+    #[test]
+    fn classification() {
+        assert!(FP16.is_nan(0x7e00));
+        assert!(FP16.is_inf(0x7c00));
+        assert!(FP16.is_inf(0xfc00));
+        assert!(FP16.is_zero(0x0000));
+        assert!(FP16.is_zero(0x8000));
+        assert!(FP16.is_subnormal(0x0001));
+        assert!(!FP16.is_subnormal(0x0400));
+        assert!(FP8.is_nan(FP8.quiet_nan()));
+        assert!(FP8ALT.is_inf(FP8ALT.infinity(true)));
+    }
+
+    #[test]
+    fn split_assemble_roundtrip() {
+        for fmt in PAPER_FORMATS {
+            for bits in [
+                0u64,
+                1,
+                fmt.min_normal(),
+                fmt.max_finite(false),
+                fmt.infinity(true),
+                fmt.quiet_nan(),
+                fmt.width_mask(),
+            ] {
+                let b = bits & fmt.width_mask();
+                let (s, e, m) = fmt.split(b);
+                assert_eq!(fmt.assemble(s, e, m), b);
+            }
+        }
+    }
+
+    #[test]
+    fn simd_lane_counts_match_section_iiid() {
+        assert_eq!(FP32.lanes_in_64(), 2);
+        assert_eq!(FP16.lanes_in_64(), 4);
+        assert_eq!(FP16ALT.lanes_in_64(), 4);
+        assert_eq!(FP8.lanes_in_64(), 8);
+        assert_eq!(FP8ALT.lanes_in_64(), 8);
+    }
+
+    #[test]
+    fn alt_pairing() {
+        assert_eq!(FP16.alt(), Some(FP16ALT));
+        assert_eq!(FP16ALT.alt(), Some(FP16));
+        assert_eq!(FP8.alt(), Some(FP8ALT));
+        assert_eq!(FP8ALT.alt(), Some(FP8));
+        assert_eq!(FP32.alt(), None);
+    }
+
+    #[test]
+    fn expanding_destinations_match_table1() {
+        assert_eq!(FP16.expand_dst(), Some(FP32));
+        assert_eq!(FP16ALT.expand_dst(), Some(FP32));
+        assert_eq!(FP8.expand_dst(), Some(FP16));
+        assert_eq!(FP8ALT.expand_dst(), Some(FP16));
+        assert_eq!(FP64.expand_dst(), None);
+    }
+}

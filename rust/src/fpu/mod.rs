@@ -1,0 +1,247 @@
+//! The extended-FPU model (Fig. 5): FPnew's operation-group
+//! organization with the new SDOTP group.
+//!
+//! FPnew is "natively organized in modules, each one responsible for
+//! one operation group: ADDMUL, DIVSQRT, COMP, CONV" (§III-D); this
+//! reproduction disables DIVSQRT (as the Snitch configuration does) and
+//! adds SDOTP. The [`Fpu`] type is the functional model: it dispatches
+//! an operation to its group, computes the exact result through
+//! [`crate::softfloat`] / [`crate::exsdotp`], and reports the group's
+//! pipeline latency and FLOP count — the same contract the PE's
+//! sequencer relies on, packaged standalone so the unit can be
+//! evaluated FPU-first like the paper's Table III top rows.
+
+use crate::exsdotp::simd::SimdExSdotp;
+use crate::formats::FpFormat;
+use crate::isa::csr::FpCsr;
+use crate::isa::instr::{OpWidth, ScalarFmt};
+use crate::softfloat;
+
+/// FPnew operation groups (§III-D), with the paper's SDOTP addition.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum OpGroup {
+    /// FMA / add / mul (multi-format, SIMD for narrow formats).
+    AddMul,
+    /// The new expanding-sum-of-dot-product group.
+    Sdotp,
+    /// Format conversions.
+    Conv,
+    /// Comparisons, classify, sign injection.
+    Comp,
+}
+
+impl OpGroup {
+    /// Pipeline registers configured for this group (§III-E / §IV-A).
+    pub const fn pipeline_stages(self) -> u64 {
+        match self {
+            OpGroup::AddMul => 3,
+            OpGroup::Sdotp => 3,
+            OpGroup::Conv => 2,
+            OpGroup::Comp => 1,
+        }
+    }
+}
+
+/// One FPU operation (operands packed in 64-bit registers).
+#[derive(Clone, Copy, Debug)]
+pub enum FpuOp {
+    /// Vectorial/scalar FMA: `rd = rs1*rs2 + rs3` lanewise in `fmt`.
+    Fmadd { fmt: ScalarFmt, rs1: u64, rs2: u64, rs3: u64 },
+    /// Lanewise addition.
+    Fadd { fmt: ScalarFmt, rs1: u64, rs2: u64 },
+    /// Lanewise multiplication.
+    Fmul { fmt: ScalarFmt, rs1: u64, rs2: u64 },
+    /// SIMD expanding sum of dot products (accumulator in `rd`).
+    ExSdotp { w: OpWidth, rs1: u64, rs2: u64, rd: u64 },
+    /// SIMD expanding vector inner sum.
+    ExVsum { w: OpWidth, rs1: u64, rd: u64 },
+    /// SIMD non-expanding vector inner sum.
+    Vsum { w: OpWidth, rs1: u64, rd: u64 },
+    /// Scalar conversion between formats.
+    Fcvt { to: ScalarFmt, from: ScalarFmt, rs1: u64 },
+    /// Lanewise sign injection.
+    Fsgnj { fmt: ScalarFmt, rs1: u64, rs2: u64 },
+}
+
+impl FpuOp {
+    /// Which group executes this op.
+    pub fn group(&self) -> OpGroup {
+        match self {
+            FpuOp::Fmadd { .. } | FpuOp::Fadd { .. } | FpuOp::Fmul { .. } => OpGroup::AddMul,
+            FpuOp::ExSdotp { .. } | FpuOp::ExVsum { .. } | FpuOp::Vsum { .. } => OpGroup::Sdotp,
+            FpuOp::Fcvt { .. } => OpGroup::Conv,
+            FpuOp::Fsgnj { .. } => OpGroup::Comp,
+        }
+    }
+}
+
+/// Result of executing one op.
+#[derive(Clone, Copy, Debug)]
+pub struct FpuResult {
+    /// Packed 64-bit result.
+    pub value: u64,
+    /// Pipeline latency in cycles (fully pipelined: issue 1/cycle).
+    pub latency: u64,
+    /// FLOP performed (paper counting).
+    pub flops: u64,
+}
+
+/// The functional FPU: formats resolved through the FP CSR.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fpu;
+
+impl Fpu {
+    /// Execute one operation under the given CSR state.
+    pub fn execute(&self, op: FpuOp, csr: &FpCsr) -> FpuResult {
+        let rm = csr.frm;
+        let group = op.group();
+        let (value, flops) = match op {
+            FpuOp::Fmadd { fmt, rs1, rs2, rs3 } => {
+                let f = csr.scalar_format(fmt);
+                (lanewise3(f, rs1, rs2, rs3, |a, b, c| softfloat::fma(f, a, b, c, rm)), 2 * f.lanes_in_64() as u64)
+            }
+            FpuOp::Fadd { fmt, rs1, rs2 } => {
+                let f = csr.scalar_format(fmt);
+                (lanewise2(f, rs1, rs2, |a, b| softfloat::add(f, a, b, rm)), f.lanes_in_64() as u64)
+            }
+            FpuOp::Fmul { fmt, rs1, rs2 } => {
+                let f = csr.scalar_format(fmt);
+                (lanewise2(f, rs1, rs2, |a, b| softfloat::mul(f, a, b, rm)), f.lanes_in_64() as u64)
+            }
+            FpuOp::ExSdotp { w, rs1, rs2, rd } => {
+                let simd = self.simd(w, csr);
+                (simd.exsdotp(rs1, rs2, rd, rm), 4 * simd.n_units() as u64)
+            }
+            FpuOp::ExVsum { w, rs1, rd } => {
+                let simd = self.simd(w, csr);
+                (simd.exvsum(rs1, rd, rm), 2 * simd.n_units() as u64)
+            }
+            FpuOp::Vsum { w, rs1, rd } => {
+                let simd = self.simd(w, csr);
+                (simd.vsum(rs1, rd, rm), simd.n_units() as u64)
+            }
+            FpuOp::Fcvt { to, from, rs1 } => {
+                let tf = csr.scalar_format(to);
+                let ff = csr.scalar_format(from);
+                (softfloat::cast(ff, tf, rs1 & ff.width_mask(), rm), 0)
+            }
+            FpuOp::Fsgnj { fmt, rs1, rs2 } => {
+                let f = csr.scalar_format(fmt);
+                (lanewise2(f, rs1, rs2, |a, b| softfloat::ops::sgnj(f, a, b)), 0)
+            }
+        };
+        FpuResult { value, latency: group.pipeline_stages(), flops }
+    }
+
+    fn simd(&self, w: OpWidth, csr: &FpCsr) -> SimdExSdotp {
+        SimdExSdotp::new(csr.src_format(w), csr.dst_format(w))
+    }
+
+    /// Peak FLOP/cycle for a compute op class (Table III's performance
+    /// columns: expanding / non-expanding per format).
+    pub fn peak_flop_per_cycle(&self, op: &FpuOp, csr: &FpCsr) -> u64 {
+        self.execute(*op, csr).flops
+    }
+}
+
+fn lanewise2(f: FpFormat, a: u64, b: u64, op: impl Fn(u64, u64) -> u64) -> u64 {
+    use crate::exsdotp::simd::{lane, set_lane};
+    let w = f.width();
+    if w == 64 {
+        return op(a, b);
+    }
+    let mut out = 0u64;
+    for i in 0..f.lanes_in_64() {
+        out = set_lane(out, i, w, op(lane(a, i, w), lane(b, i, w)));
+    }
+    out
+}
+
+fn lanewise3(f: FpFormat, a: u64, b: u64, c: u64, op: impl Fn(u64, u64, u64) -> u64) -> u64 {
+    use crate::exsdotp::simd::{lane, set_lane};
+    let w = f.width();
+    if w == 64 {
+        return op(a, b, c);
+    }
+    let mut out = 0u64;
+    for i in 0..f.lanes_in_64() {
+        out = set_lane(out, i, w, op(lane(a, i, w), lane(b, i, w), lane(c, i, w)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP16, FP32, FP64};
+    use crate::softfloat::{from_f64, to_f64, RoundingMode};
+
+    #[test]
+    fn pipeline_depths_match_paper() {
+        // §IV-A: "3 levels of pipeline registers for the SDOTP operation
+        // group, 3 for the ADDMUL, 2 for the CAST, and 1 for the COMP".
+        assert_eq!(OpGroup::Sdotp.pipeline_stages(), 3);
+        assert_eq!(OpGroup::AddMul.pipeline_stages(), 3);
+        assert_eq!(OpGroup::Conv.pipeline_stages(), 2);
+        assert_eq!(OpGroup::Comp.pipeline_stages(), 1);
+    }
+
+    #[test]
+    fn group_dispatch() {
+        let ex = FpuOp::ExSdotp { w: OpWidth::BtoH, rs1: 0, rs2: 0, rd: 0 };
+        assert_eq!(ex.group(), OpGroup::Sdotp);
+        assert_eq!(FpuOp::Fmadd { fmt: ScalarFmt::D, rs1: 0, rs2: 0, rs3: 0 }.group(), OpGroup::AddMul);
+        assert_eq!(FpuOp::Fcvt { to: ScalarFmt::S, from: ScalarFmt::H, rs1: 0 }.group(), OpGroup::Conv);
+        assert_eq!(FpuOp::Fsgnj { fmt: ScalarFmt::H, rs1: 0, rs2: 0 }.group(), OpGroup::Comp);
+    }
+
+    #[test]
+    fn peak_flop_matches_table3_columns() {
+        // Table III: FP8 16/16, FP16 8/8 (expanding/non-expanding).
+        let fpu = Fpu;
+        let csr = FpCsr::default();
+        assert_eq!(fpu.peak_flop_per_cycle(&FpuOp::ExSdotp { w: OpWidth::BtoH, rs1: 0, rs2: 0, rd: 0 }, &csr), 16);
+        assert_eq!(fpu.peak_flop_per_cycle(&FpuOp::Fmadd { fmt: ScalarFmt::B, rs1: 0, rs2: 0, rs3: 0 }, &csr), 16);
+        assert_eq!(fpu.peak_flop_per_cycle(&FpuOp::ExSdotp { w: OpWidth::HtoS, rs1: 0, rs2: 0, rd: 0 }, &csr), 8);
+        assert_eq!(fpu.peak_flop_per_cycle(&FpuOp::Fmadd { fmt: ScalarFmt::H, rs1: 0, rs2: 0, rs3: 0 }, &csr), 8);
+        // FP64 FMA: 2 FLOP/cycle.
+        assert_eq!(fpu.peak_flop_per_cycle(&FpuOp::Fmadd { fmt: ScalarFmt::D, rs1: 0, rs2: 0, rs3: 0 }, &csr), 2);
+    }
+
+    #[test]
+    fn numerics_route_through_softfloat() {
+        let fpu = Fpu;
+        let csr = FpCsr::default();
+        let a = from_f64(2.0, FP64, RoundingMode::Rne);
+        let b = from_f64(3.0, FP64, RoundingMode::Rne);
+        let c = from_f64(1.0, FP64, RoundingMode::Rne);
+        let r = fpu.execute(FpuOp::Fmadd { fmt: ScalarFmt::D, rs1: a, rs2: b, rs3: c }, &csr);
+        assert_eq!(f64::from_bits(r.value), 7.0);
+        assert_eq!(r.latency, 3);
+
+        // SIMD exsdotp: 4 FP16 pairs -> 2 FP32 accumulators.
+        let h = |v: f64| from_f64(v, FP16, RoundingMode::Rne);
+        let rs1 = h(1.0) | (h(2.0) << 16) | (h(3.0) << 32) | (h(4.0) << 48);
+        let rs2 = h(1.0) | (h(1.0) << 16) | (h(1.0) << 32) | (h(1.0) << 48);
+        let r = fpu.execute(FpuOp::ExSdotp { w: OpWidth::HtoS, rs1, rs2, rd: 0 }, &csr);
+        assert_eq!(to_f64(r.value & 0xffff_ffff, FP32), 3.0); // 1+2
+        assert_eq!(to_f64(r.value >> 32, FP32), 7.0); // 3+4
+        assert_eq!(r.flops, 8);
+    }
+
+    #[test]
+    fn alt_csr_bit_retargets_the_same_op() {
+        let fpu = Fpu;
+        let std = FpCsr::default();
+        let alt = FpCsr { src_is_alt: true, ..FpCsr::default() };
+        // The same bit pattern means different values under FP8 vs
+        // FP8alt, so the same op must produce different results.
+        let rs1 = 0x3838_3838_3838_3838u64; // FP8alt 1.0 x8
+        let rs2 = rs1;
+        let r_std = fpu.execute(FpuOp::ExSdotp { w: OpWidth::BtoH, rs1, rs2, rd: 0 }, &std);
+        let r_alt = fpu.execute(FpuOp::ExSdotp { w: OpWidth::BtoH, rs1, rs2, rd: 0 }, &alt);
+        assert_ne!(r_std.value, r_alt.value);
+        // Under FP8alt, 0x38 = 1.0 -> each accumulator = 1+1 = 2.0 (FP16).
+        assert_eq!(to_f64(r_alt.value & 0xffff, FP16), 2.0);
+    }
+}

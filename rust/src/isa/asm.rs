@@ -1,0 +1,298 @@
+//! Textual assembly: disassembler and a line-oriented assembler.
+//!
+//! The kernel generators emit `Vec<Instr>` directly; the assembler
+//! exists for debugging (dumping generated kernels in readable form,
+//! Table II trace inspection) and for writing small test programs by
+//! hand. Syntax follows RISC-V conventions with the Snitch/MiniFloat-NN
+//! mnemonics (`exsdotp.s.h`, `exvsum.h.b`, `frep.o`, `scfgwi`, ...).
+
+use super::instr::{FReg, Instr, OpWidth, Reg, ScalarFmt};
+
+fn ls_suffix(f: ScalarFmt) -> &'static str {
+    match f {
+        ScalarFmt::D => "d",
+        ScalarFmt::S => "w",
+        ScalarFmt::H => "h",
+        ScalarFmt::B => "b",
+    }
+}
+
+fn parse_ls(s: &str) -> Option<ScalarFmt> {
+    Some(match s {
+        "d" => ScalarFmt::D,
+        "w" => ScalarFmt::S,
+        "h" => ScalarFmt::H,
+        "b" => ScalarFmt::B,
+        _ => return None,
+    })
+}
+
+fn fmt_suffix(f: ScalarFmt) -> &'static str {
+    match f {
+        ScalarFmt::D => "d",
+        ScalarFmt::S => "s",
+        ScalarFmt::H => "h",
+        ScalarFmt::B => "b",
+    }
+}
+
+fn parse_fmt(s: &str) -> Option<ScalarFmt> {
+    Some(match s {
+        "d" => ScalarFmt::D,
+        "s" => ScalarFmt::S,
+        "h" => ScalarFmt::H,
+        "b" => ScalarFmt::B,
+        _ => return None,
+    })
+}
+
+fn width_suffix(w: OpWidth) -> &'static str {
+    match w {
+        OpWidth::HtoS => "s.h", // dst.src
+        OpWidth::BtoH => "h.b",
+    }
+}
+
+fn parse_width(s: &str) -> Option<OpWidth> {
+    Some(match s {
+        "s.h" => OpWidth::HtoS,
+        "h.b" => OpWidth::BtoH,
+        _ => return None,
+    })
+}
+
+/// Render one instruction as assembly text.
+pub fn disassemble(i: &Instr) -> String {
+    use Instr::*;
+    let x = |r: Reg| format!("x{}", r.0);
+    let f = |r: FReg| format!("f{}", r.0);
+    match *i {
+        Lui { rd, imm } => format!("lui {}, {:#x}", x(rd), imm),
+        Addi { rd, rs1, imm } => format!("addi {}, {}, {}", x(rd), x(rs1), imm),
+        Add { rd, rs1, rs2 } => format!("add {}, {}, {}", x(rd), x(rs1), x(rs2)),
+        Sub { rd, rs1, rs2 } => format!("sub {}, {}, {}", x(rd), x(rs1), x(rs2)),
+        Mul { rd, rs1, rs2 } => format!("mul {}, {}, {}", x(rd), x(rs1), x(rs2)),
+        Slli { rd, rs1, shamt } => format!("slli {}, {}, {}", x(rd), x(rs1), shamt),
+        Srli { rd, rs1, shamt } => format!("srli {}, {}, {}", x(rd), x(rs1), shamt),
+        Beq { rs1, rs2, offset } => format!("beq {}, {}, {}", x(rs1), x(rs2), offset),
+        Bne { rs1, rs2, offset } => format!("bne {}, {}, {}", x(rs1), x(rs2), offset),
+        Blt { rs1, rs2, offset } => format!("blt {}, {}, {}", x(rs1), x(rs2), offset),
+        Bge { rs1, rs2, offset } => format!("bge {}, {}, {}", x(rs1), x(rs2), offset),
+        Jal { rd, offset } => format!("jal {}, {}", x(rd), offset),
+        Lw { rd, rs1, imm } => format!("lw {}, {}({})", x(rd), imm, x(rs1)),
+        Sw { rs1, rs2, imm } => format!("sw {}, {}({})", x(rs2), imm, x(rs1)),
+        FLoad { fmt, fd, rs1, imm } => format!("fl{} {}, {}({})", ls_suffix(fmt), f(fd), imm, x(rs1)),
+        FStore { fmt, rs1, fs, imm } => format!("fs{} {}, {}({})", ls_suffix(fmt), f(fs), imm, x(rs1)),
+        Fmadd { fmt, fd, fs1, fs2, fs3 } => {
+            format!("fmadd.{} {}, {}, {}, {}", fmt_suffix(fmt), f(fd), f(fs1), f(fs2), f(fs3))
+        }
+        Fadd { fmt, fd, fs1, fs2 } => format!("fadd.{} {}, {}, {}", fmt_suffix(fmt), f(fd), f(fs1), f(fs2)),
+        Fmul { fmt, fd, fs1, fs2 } => format!("fmul.{} {}, {}, {}", fmt_suffix(fmt), f(fd), f(fs1), f(fs2)),
+        Fsgnj { fmt, fd, fs1, fs2 } => format!("fsgnj.{} {}, {}, {}", fmt_suffix(fmt), f(fd), f(fs1), f(fs2)),
+        Fcvt { to, from, fd, fs1 } => {
+            format!("fcvt.{}.{} {}, {}", fmt_suffix(to), fmt_suffix(from), f(fd), f(fs1))
+        }
+        FmvXW { rd, fs1 } => format!("fmv.x.w {}, {}", x(rd), f(fs1)),
+        FmvWX { fd, rs1 } => format!("fmv.w.x {}, {}", f(fd), x(rs1)),
+        ExSdotp { w, fd, fs1, fs2 } => format!("exsdotp.{} {}, {}, {}", width_suffix(w), f(fd), f(fs1), f(fs2)),
+        ExVsum { w, fd, fs1 } => format!("exvsum.{} {}, {}", width_suffix(w), f(fd), f(fs1)),
+        Vsum { w, fd, fs1 } => format!("vsum.{} {}, {}", width_suffix(w), f(fd), f(fs1)),
+        Csrrwi { rd, csr, imm } => format!("csrrwi {}, {:#x}, {}", x(rd), csr, imm),
+        Csrrw { rd, csr, rs1 } => format!("csrrw {}, {:#x}, {}", x(rd), csr, x(rs1)),
+        Csrrs { rd, csr, rs1 } => format!("csrrs {}, {:#x}, {}", x(rd), csr, x(rs1)),
+        ScfgWi { rs1, cfg } => format!("scfgwi {}, {}", x(rs1), cfg),
+        FrepO { rep, n_inst } => format!("frep.o {}, {}", x(rep), n_inst),
+        FrepI { rep, n_inst } => format!("frep.i {}, {}", x(rep), n_inst),
+        DmSrc { rs1 } => format!("dmsrc {}", x(rs1)),
+        DmDst { rs1 } => format!("dmdst {}", x(rs1)),
+        DmCpy { rd, rs1 } => format!("dmcpyi {}, {}", x(rd), x(rs1)),
+        DmStat { rd } => format!("dmstati {}", x(rd)),
+        Barrier => "barrier".to_string(),
+        Halt => "halt".to_string(),
+    }
+}
+
+/// Render a whole program with line numbers (kernel dumps).
+pub fn disassemble_program(prog: &[Instr]) -> String {
+    prog.iter().enumerate().map(|(n, i)| format!("{n:4}: {}\n", disassemble(i))).collect()
+}
+
+fn parse_xreg(s: &str) -> Option<Reg> {
+    let t = s.trim().trim_end_matches(',');
+    t.strip_prefix('x')?.parse::<u8>().ok().filter(|&n| n < 32).map(Reg)
+}
+
+fn parse_freg(s: &str) -> Option<FReg> {
+    let t = s.trim().trim_end_matches(',');
+    t.strip_prefix('f')?.parse::<u8>().ok().filter(|&n| n < 32).map(FReg)
+}
+
+fn parse_imm(s: &str) -> Option<i32> {
+    let t = s.trim().trim_end_matches(',');
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("-0x")) {
+        let v = i64::from_str_radix(hex, 16).ok()?;
+        Some(if t.starts_with('-') { -(v as i32) } else { v as i32 })
+    } else {
+        t.parse().ok()
+    }
+}
+
+/// Parse `imm(xN)` memory operands.
+fn parse_mem(s: &str) -> Option<(i32, Reg)> {
+    let t = s.trim().trim_end_matches(',');
+    let open = t.find('(')?;
+    let imm = parse_imm(&t[..open])?;
+    let reg = parse_xreg(t[open + 1..].trim_end_matches(')'))?;
+    Some((imm, reg))
+}
+
+/// Assemble one line. Comments (`#`) and empty lines yield `None`.
+pub fn assemble_line(line: &str) -> Option<Instr> {
+    use Instr::*;
+    let line = line.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return None;
+    }
+    let mut parts = line.split_whitespace();
+    let mnemonic = parts.next()?;
+    let ops: Vec<&str> = parts.collect();
+    let (base, suffix) = match mnemonic.split_once('.') {
+        Some((b, s)) => (b, s),
+        None => (mnemonic, ""),
+    };
+    Some(match (base, suffix) {
+        ("lui", _) => Lui { rd: parse_xreg(ops[0])?, imm: parse_imm(ops[1])? },
+        ("addi", _) => Addi { rd: parse_xreg(ops[0])?, rs1: parse_xreg(ops[1])?, imm: parse_imm(ops[2])? },
+        ("add", _) => Add { rd: parse_xreg(ops[0])?, rs1: parse_xreg(ops[1])?, rs2: parse_xreg(ops[2])? },
+        ("sub", _) => Sub { rd: parse_xreg(ops[0])?, rs1: parse_xreg(ops[1])?, rs2: parse_xreg(ops[2])? },
+        ("mul", _) => Mul { rd: parse_xreg(ops[0])?, rs1: parse_xreg(ops[1])?, rs2: parse_xreg(ops[2])? },
+        ("slli", _) => Slli { rd: parse_xreg(ops[0])?, rs1: parse_xreg(ops[1])?, shamt: parse_imm(ops[2])? as u8 },
+        ("srli", _) => Srli { rd: parse_xreg(ops[0])?, rs1: parse_xreg(ops[1])?, shamt: parse_imm(ops[2])? as u8 },
+        ("beq", _) => Beq { rs1: parse_xreg(ops[0])?, rs2: parse_xreg(ops[1])?, offset: parse_imm(ops[2])? },
+        ("bne", _) => Bne { rs1: parse_xreg(ops[0])?, rs2: parse_xreg(ops[1])?, offset: parse_imm(ops[2])? },
+        ("blt", _) => Blt { rs1: parse_xreg(ops[0])?, rs2: parse_xreg(ops[1])?, offset: parse_imm(ops[2])? },
+        ("bge", _) => Bge { rs1: parse_xreg(ops[0])?, rs2: parse_xreg(ops[1])?, offset: parse_imm(ops[2])? },
+        ("jal", _) => Jal { rd: parse_xreg(ops[0])?, offset: parse_imm(ops[1])? },
+        ("lw", _) => {
+            let (imm, rs1) = parse_mem(ops[1])?;
+            Lw { rd: parse_xreg(ops[0])?, rs1, imm }
+        }
+        ("sw", _) => {
+            let (imm, rs1) = parse_mem(ops[1])?;
+            Sw { rs1, rs2: parse_xreg(ops[0])?, imm }
+        }
+        ("fld", _) | ("flw", _) | ("flh", _) | ("flb", _) => {
+            let (imm, rs1) = parse_mem(ops[1])?;
+            FLoad { fmt: parse_ls(&base[2..3])?, fd: parse_freg(ops[0])?, rs1, imm }
+        }
+        ("fsd", _) | ("fsw", _) | ("fsh", _) | ("fsb", _) => {
+            let (imm, rs1) = parse_mem(ops[1])?;
+            FStore { fmt: parse_ls(&base[2..3])?, rs1, fs: parse_freg(ops[0])?, imm }
+        }
+        ("fmadd", s) => Fmadd {
+            fmt: parse_fmt(s)?,
+            fd: parse_freg(ops[0])?,
+            fs1: parse_freg(ops[1])?,
+            fs2: parse_freg(ops[2])?,
+            fs3: parse_freg(ops[3])?,
+        },
+        ("fadd", s) => {
+            Fadd { fmt: parse_fmt(s)?, fd: parse_freg(ops[0])?, fs1: parse_freg(ops[1])?, fs2: parse_freg(ops[2])? }
+        }
+        ("fmul", s) => {
+            Fmul { fmt: parse_fmt(s)?, fd: parse_freg(ops[0])?, fs1: parse_freg(ops[1])?, fs2: parse_freg(ops[2])? }
+        }
+        ("fsgnj", s) => {
+            Fsgnj { fmt: parse_fmt(s)?, fd: parse_freg(ops[0])?, fs1: parse_freg(ops[1])?, fs2: parse_freg(ops[2])? }
+        }
+        ("fcvt", s) => {
+            let (to, from) = s.split_once('.')?;
+            Fcvt { to: parse_fmt(to)?, from: parse_fmt(from)?, fd: parse_freg(ops[0])?, fs1: parse_freg(ops[1])? }
+        }
+        ("fmv", "x.w") => FmvXW { rd: parse_xreg(ops[0])?, fs1: parse_freg(ops[1])? },
+        ("fmv", "w.x") => FmvWX { fd: parse_freg(ops[0])?, rs1: parse_xreg(ops[1])? },
+        ("exsdotp", s) => {
+            ExSdotp { w: parse_width(s)?, fd: parse_freg(ops[0])?, fs1: parse_freg(ops[1])?, fs2: parse_freg(ops[2])? }
+        }
+        ("exvsum", s) => ExVsum { w: parse_width(s)?, fd: parse_freg(ops[0])?, fs1: parse_freg(ops[1])? },
+        ("vsum", s) => Vsum { w: parse_width(s)?, fd: parse_freg(ops[0])?, fs1: parse_freg(ops[1])? },
+        ("csrrwi", _) => {
+            Csrrwi { rd: parse_xreg(ops[0])?, csr: parse_imm(ops[1])? as u16, imm: parse_imm(ops[2])? as u8 }
+        }
+        ("csrrw", _) => Csrrw { rd: parse_xreg(ops[0])?, csr: parse_imm(ops[1])? as u16, rs1: parse_xreg(ops[2])? },
+        ("csrrs", _) => Csrrs { rd: parse_xreg(ops[0])?, csr: parse_imm(ops[1])? as u16, rs1: parse_xreg(ops[2])? },
+        ("scfgwi", _) => ScfgWi { rs1: parse_xreg(ops[0])?, cfg: parse_imm(ops[1])? as u16 },
+        ("frep", "o") => FrepO { rep: parse_xreg(ops[0])?, n_inst: parse_imm(ops[1])? as u8 },
+        ("frep", "i") => FrepI { rep: parse_xreg(ops[0])?, n_inst: parse_imm(ops[1])? as u8 },
+        ("dmsrc", _) => DmSrc { rs1: parse_xreg(ops[0])? },
+        ("dmdst", _) => DmDst { rs1: parse_xreg(ops[0])? },
+        ("dmcpyi", _) => DmCpy { rd: parse_xreg(ops[0])?, rs1: parse_xreg(ops[1])? },
+        ("dmstati", _) => DmStat { rd: parse_xreg(ops[0])? },
+        ("barrier", _) => Barrier,
+        ("halt", _) => Halt,
+        _ => return None,
+    })
+}
+
+/// Assemble a multi-line program.
+pub fn assemble(src: &str) -> Vec<Instr> {
+    src.lines().filter_map(assemble_line).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::regs::*;
+
+    #[test]
+    fn disasm_asm_roundtrip() {
+        use Instr::*;
+        let prog = vec![
+            Lui { rd: x(5), imm: 0x12345 },
+            Addi { rd: x(5), rs1: x(6), imm: -7 },
+            Fmadd { fmt: ScalarFmt::H, fd: f(4), fs1: FT0, fs2: FT1, fs3: f(4) },
+            ExSdotp { w: OpWidth::HtoS, fd: f(3), fs1: FT0, fs2: FT1 },
+            ExVsum { w: OpWidth::BtoH, fd: f(3), fs1: f(4) },
+            Vsum { w: OpWidth::HtoS, fd: f(3), fs1: f(4) },
+            Fcvt { to: ScalarFmt::S, from: ScalarFmt::H, fd: f(3), fs1: f(4) },
+            FrepO { rep: x(20), n_inst: 4 },
+            ScfgWi { rs1: x(5), cfg: 737 },
+            Lw { rd: x(7), rs1: x(2), imm: 16 },
+            FStore { fmt: ScalarFmt::D, rs1: x(10), fs: f(9), imm: -8 },
+            FStore { fmt: ScalarFmt::H, rs1: x(10), fs: f(9), imm: 6 },
+            FLoad { fmt: ScalarFmt::B, fd: f(9), rs1: x(10), imm: 3 },
+            Csrrwi { rd: ZERO, csr: 3, imm: 1 },
+            Barrier,
+            Halt,
+        ];
+        for i in &prog {
+            let text = disassemble(i);
+            let back = assemble_line(&text).unwrap_or_else(|| panic!("parse failed: '{text}'"));
+            assert_eq!(&back, i, "text was '{text}'");
+        }
+    }
+
+    #[test]
+    fn assemble_program_with_comments() {
+        let src = "
+            # zero out x5
+            addi x5, x0, 0
+            addi x6, x0, 64    # loop bound
+            fmadd.d f4, f1, f2, f4
+            bne x5, x6, -1
+            halt
+        ";
+        let prog = assemble(src);
+        assert_eq!(prog.len(), 5);
+        assert!(matches!(prog[2], Instr::Fmadd { fmt: ScalarFmt::D, .. }));
+        assert!(matches!(prog[4], Instr::Halt));
+    }
+
+    #[test]
+    fn disassemble_program_numbers_lines() {
+        let p = vec![Instr::Halt, Instr::Barrier];
+        let text = disassemble_program(&p);
+        assert!(text.contains("0: halt"));
+        assert!(text.contains("1: barrier"));
+    }
+}

@@ -1,0 +1,136 @@
+//! The FP control/status register with the MiniFloat-NN extension bits.
+//!
+//! §III-E: "Due to the limited encoding space, we did not replicate the
+//! same instruction for different FP formats sharing the same width.
+//! Instead, the alternative formats – FP16alt and FP8alt – are
+//! controlled by two additional bits, `src_is_alt` and `dst_is_alt`, in
+//! the FP control and status register. An FP16alt kernel will then
+//! differ from an FP16 kernel by a single CSR write."
+
+use crate::formats::{FpFormat, FP16, FP16ALT, FP32, FP64, FP8, FP8ALT};
+use crate::isa::instr::{OpWidth, ScalarFmt};
+use crate::softfloat::RoundingMode;
+
+/// CSR addresses (fcsr standard + Snitch/MiniFloat-NN custom).
+pub mod addr {
+    /// Standard `fcsr` (frm+fflags); we expose frm bits 7:5 and the alt
+    /// bits at 9:8 (a free custom field).
+    pub const FCSR: u16 = 0x003;
+    /// Snitch SSR enable CSR.
+    pub const SSR: u16 = 0x7c0;
+    /// Cluster hardware-barrier CSR (reads stall until all cores arrive).
+    pub const BARRIER: u16 = 0x7c2;
+    /// Hart id.
+    pub const MHARTID: u16 = 0xf14;
+}
+
+/// The FP CSR state relevant to the extension.
+#[derive(Clone, Copy, Debug)]
+pub struct FpCsr {
+    /// Dynamic rounding mode.
+    pub frm: RoundingMode,
+    /// Select FP16alt/FP8alt as the *source* format of width-selected ops.
+    pub src_is_alt: bool,
+    /// Select FP16alt as the *destination* format of expanding ops.
+    pub dst_is_alt: bool,
+}
+
+impl Default for FpCsr {
+    fn default() -> Self {
+        Self { frm: RoundingMode::Rne, src_is_alt: false, dst_is_alt: false }
+    }
+}
+
+impl FpCsr {
+    /// Raw fcsr value (frm at 7:5, src_is_alt bit 8, dst_is_alt bit 9).
+    pub fn to_bits(&self) -> u32 {
+        (self.frm.to_frm() << 5) | ((self.src_is_alt as u32) << 8) | ((self.dst_is_alt as u32) << 9)
+    }
+
+    /// Decode from a raw fcsr value (invalid frm falls back to RNE).
+    pub fn from_bits(v: u32) -> Self {
+        Self {
+            frm: RoundingMode::from_frm((v >> 5) & 0b111).unwrap_or(RoundingMode::Rne),
+            src_is_alt: v & (1 << 8) != 0,
+            dst_is_alt: v & (1 << 9) != 0,
+        }
+    }
+
+    /// Resolve the source format of a width-selected SIMD instruction.
+    pub fn src_format(&self, w: OpWidth) -> FpFormat {
+        match (w, self.src_is_alt) {
+            (OpWidth::HtoS, false) => FP16,
+            (OpWidth::HtoS, true) => FP16ALT,
+            (OpWidth::BtoH, false) => FP8,
+            (OpWidth::BtoH, true) => FP8ALT,
+        }
+    }
+
+    /// Resolve the destination format of an expanding SIMD instruction.
+    pub fn dst_format(&self, w: OpWidth) -> FpFormat {
+        match (w, self.dst_is_alt) {
+            (OpWidth::HtoS, _) => FP32, // FP32 has no alt companion
+            (OpWidth::BtoH, false) => FP16,
+            (OpWidth::BtoH, true) => FP16ALT,
+        }
+    }
+
+    /// Resolve a scalar/vectorial format selector (`.h`/`.b` honour
+    /// `src_is_alt`).
+    pub fn scalar_format(&self, f: ScalarFmt) -> FpFormat {
+        match (f, self.src_is_alt) {
+            (ScalarFmt::D, _) => FP64,
+            (ScalarFmt::S, _) => FP32,
+            (ScalarFmt::H, false) => FP16,
+            (ScalarFmt::H, true) => FP16ALT,
+            (ScalarFmt::B, false) => FP8,
+            (ScalarFmt::B, true) => FP8ALT,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_roundtrip() {
+        for frm in [RoundingMode::Rne, RoundingMode::Rtz, RoundingMode::Rup] {
+            for src_alt in [false, true] {
+                for dst_alt in [false, true] {
+                    let c = FpCsr { frm, src_is_alt: src_alt, dst_is_alt: dst_alt };
+                    let back = FpCsr::from_bits(c.to_bits());
+                    assert_eq!(back.frm, frm);
+                    assert_eq!(back.src_is_alt, src_alt);
+                    assert_eq!(back.dst_is_alt, dst_alt);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alt_bit_retargets_formats_with_one_write() {
+        // §III-E's claim: same instruction, different format, one CSR
+        // write apart.
+        let mut csr = FpCsr::default();
+        assert_eq!(csr.src_format(OpWidth::HtoS), FP16);
+        assert_eq!(csr.src_format(OpWidth::BtoH), FP8);
+        assert_eq!(csr.dst_format(OpWidth::BtoH), FP16);
+        csr = FpCsr::from_bits(csr.to_bits() | (1 << 8) | (1 << 9));
+        assert_eq!(csr.src_format(OpWidth::HtoS), FP16ALT);
+        assert_eq!(csr.src_format(OpWidth::BtoH), FP8ALT);
+        assert_eq!(csr.dst_format(OpWidth::BtoH), FP16ALT);
+        assert_eq!(csr.dst_format(OpWidth::HtoS), FP32);
+    }
+
+    #[test]
+    fn scalar_format_resolution() {
+        let csr = FpCsr::default();
+        assert_eq!(csr.scalar_format(ScalarFmt::D), FP64);
+        assert_eq!(csr.scalar_format(ScalarFmt::S), FP32);
+        assert_eq!(csr.scalar_format(ScalarFmt::H), FP16);
+        let alt = FpCsr { src_is_alt: true, ..FpCsr::default() };
+        assert_eq!(alt.scalar_format(ScalarFmt::H), FP16ALT);
+        assert_eq!(alt.scalar_format(ScalarFmt::B), FP8ALT);
+    }
+}

@@ -1,0 +1,429 @@
+//! 32-bit binary encodings.
+//!
+//! Standard RISC-V formats (R/I/S/B/U/J, R4 for FMA, OP-FP) for the base
+//! ISA, and the custom opcodes Snitch and MiniFloat-NN claim:
+//!
+//! * `custom-1` (0x2b): the MiniFloat-NN extension. R-type; `funct3`
+//!   selects the operation (0 = exsdotp, 1 = exvsum, 2 = vsum) and
+//!   `funct7[0]` the width pair (0 = 16→32, 1 = 8→16). `rd` is both
+//!   accumulator source and destination, exactly as in §III-E.
+//! * `custom-0` (0x0b): `scfgwi` (SSR config write).
+//! * `custom-2` (0x5b): `frep.o` / `frep.i`, barrier, halt.
+//! * `custom-3` (0x7b): the DMA core's `dmsrc/dmdst/dmcpyi/dmstati`.
+//!
+//! Branch/jump offsets are kept in *instruction* units by the simulator
+//! and scaled by 4 in the encoding, so the encoded form is exactly what
+//! a real binary would hold.
+
+use super::instr::{FReg, Instr, OpWidth, Reg, ScalarFmt};
+
+const OP_LUI: u32 = 0x37;
+const OP_IMM: u32 = 0x13;
+const OP_REG: u32 = 0x33;
+const OP_BRANCH: u32 = 0x63;
+const OP_JAL: u32 = 0x6f;
+const OP_LOAD: u32 = 0x03;
+const OP_STORE: u32 = 0x23;
+const OP_LOAD_FP: u32 = 0x07;
+const OP_STORE_FP: u32 = 0x27;
+const OP_FMADD: u32 = 0x43;
+const OP_FP: u32 = 0x53;
+const OP_SYSTEM: u32 = 0x73;
+const OP_CUSTOM0: u32 = 0x0b; // scfgwi
+const OP_CUSTOM1: u32 = 0x2b; // minifloat-nn
+const OP_CUSTOM2: u32 = 0x5b; // frep / barrier / halt
+const OP_CUSTOM3: u32 = 0x7b; // dma
+
+/// Load/store funct3 per the RISC-V F/D/Zfh convention (flb=0, flh=1,
+/// flw=2, fld=3).
+fn ls_f3(f: ScalarFmt) -> u32 {
+    match f {
+        ScalarFmt::B => 0,
+        ScalarFmt::H => 1,
+        ScalarFmt::S => 2,
+        ScalarFmt::D => 3,
+    }
+}
+
+fn f3_ls(b: u32) -> Option<ScalarFmt> {
+    Some(match b {
+        0 => ScalarFmt::B,
+        1 => ScalarFmt::H,
+        2 => ScalarFmt::S,
+        3 => ScalarFmt::D,
+        _ => return None,
+    })
+}
+
+fn fmt_bits(f: ScalarFmt) -> u32 {
+    match f {
+        ScalarFmt::S => 0b00,
+        ScalarFmt::D => 0b01,
+        ScalarFmt::H => 0b10,
+        ScalarFmt::B => 0b11,
+    }
+}
+
+fn bits_fmt(b: u32) -> ScalarFmt {
+    match b & 0b11 {
+        0b00 => ScalarFmt::S,
+        0b01 => ScalarFmt::D,
+        0b10 => ScalarFmt::H,
+        _ => ScalarFmt::B,
+    }
+}
+
+fn r_type(op: u32, rd: u32, f3: u32, rs1: u32, rs2: u32, f7: u32) -> u32 {
+    op | (rd << 7) | (f3 << 12) | (rs1 << 15) | (rs2 << 20) | (f7 << 25)
+}
+
+fn i_type(op: u32, rd: u32, f3: u32, rs1: u32, imm: i32) -> u32 {
+    op | (rd << 7) | (f3 << 12) | (rs1 << 15) | (((imm as u32) & 0xfff) << 20)
+}
+
+fn s_type(op: u32, f3: u32, rs1: u32, rs2: u32, imm: i32) -> u32 {
+    let imm = imm as u32;
+    op | ((imm & 0x1f) << 7) | (f3 << 12) | (rs1 << 15) | (rs2 << 20) | (((imm >> 5) & 0x7f) << 25)
+}
+
+fn b_type(op: u32, f3: u32, rs1: u32, rs2: u32, imm: i32) -> u32 {
+    let imm = imm as u32; // byte offset, imm[0] implicitly 0
+    op | (((imm >> 11) & 1) << 7)
+        | (((imm >> 1) & 0xf) << 8)
+        | (f3 << 12)
+        | (rs1 << 15)
+        | (rs2 << 20)
+        | (((imm >> 5) & 0x3f) << 25)
+        | (((imm >> 12) & 1) << 31)
+}
+
+fn u_type(op: u32, rd: u32, imm: i32) -> u32 {
+    op | (rd << 7) | ((imm as u32) << 12)
+}
+
+fn j_type(op: u32, rd: u32, imm: i32) -> u32 {
+    let imm = imm as u32;
+    op | (rd << 7)
+        | (((imm >> 12) & 0xff) << 12)
+        | (((imm >> 11) & 1) << 20)
+        | (((imm >> 1) & 0x3ff) << 21)
+        | (((imm >> 20) & 1) << 31)
+}
+
+fn i_imm(w: u32) -> i32 {
+    ((w as i32) >> 20) as i32
+}
+
+fn s_imm(w: u32) -> i32 {
+    let lo = (w >> 7) & 0x1f;
+    let hi = (w >> 25) & 0x7f;
+    (((hi << 5) | lo) as i32) << 20 >> 20
+}
+
+fn b_imm(w: u32) -> i32 {
+    let imm = (((w >> 31) & 1) << 12) | (((w >> 7) & 1) << 11) | (((w >> 25) & 0x3f) << 5) | (((w >> 8) & 0xf) << 1);
+    ((imm as i32) << 19) >> 19
+}
+
+fn j_imm(w: u32) -> i32 {
+    let imm =
+        (((w >> 31) & 1) << 20) | (((w >> 12) & 0xff) << 12) | (((w >> 20) & 1) << 11) | (((w >> 21) & 0x3ff) << 1);
+    ((imm as i32) << 11) >> 11
+}
+
+fn rd(w: u32) -> u32 {
+    (w >> 7) & 0x1f
+}
+
+fn f3(w: u32) -> u32 {
+    (w >> 12) & 0x7
+}
+
+fn rs1(w: u32) -> u32 {
+    (w >> 15) & 0x1f
+}
+
+fn rs2(w: u32) -> u32 {
+    (w >> 20) & 0x1f
+}
+
+fn f7(w: u32) -> u32 {
+    (w >> 25) & 0x7f
+}
+
+/// Encode an instruction to its 32-bit form.
+pub fn encode(i: &Instr) -> u32 {
+    use Instr::*;
+    match *i {
+        Lui { rd: r, imm } => u_type(OP_LUI, r.0 as u32, imm),
+        Addi { rd: r, rs1: a, imm } => i_type(OP_IMM, r.0 as u32, 0, a.0 as u32, imm),
+        Slli { rd: r, rs1: a, shamt } => i_type(OP_IMM, r.0 as u32, 1, a.0 as u32, shamt as i32),
+        Srli { rd: r, rs1: a, shamt } => i_type(OP_IMM, r.0 as u32, 5, a.0 as u32, shamt as i32),
+        Add { rd: r, rs1: a, rs2: b } => r_type(OP_REG, r.0 as u32, 0, a.0 as u32, b.0 as u32, 0),
+        Sub { rd: r, rs1: a, rs2: b } => r_type(OP_REG, r.0 as u32, 0, a.0 as u32, b.0 as u32, 0x20),
+        Mul { rd: r, rs1: a, rs2: b } => r_type(OP_REG, r.0 as u32, 0, a.0 as u32, b.0 as u32, 1),
+        Beq { rs1: a, rs2: b, offset } => b_type(OP_BRANCH, 0, a.0 as u32, b.0 as u32, offset * 4),
+        Bne { rs1: a, rs2: b, offset } => b_type(OP_BRANCH, 1, a.0 as u32, b.0 as u32, offset * 4),
+        Blt { rs1: a, rs2: b, offset } => b_type(OP_BRANCH, 4, a.0 as u32, b.0 as u32, offset * 4),
+        Bge { rs1: a, rs2: b, offset } => b_type(OP_BRANCH, 5, a.0 as u32, b.0 as u32, offset * 4),
+        Jal { rd: r, offset } => j_type(OP_JAL, r.0 as u32, offset * 4),
+        Lw { rd: r, rs1: a, imm } => i_type(OP_LOAD, r.0 as u32, 2, a.0 as u32, imm),
+        Sw { rs1: a, rs2: b, imm } => s_type(OP_STORE, 2, a.0 as u32, b.0 as u32, imm),
+        FLoad { fmt, fd, rs1: a, imm } => i_type(OP_LOAD_FP, fd.0 as u32, ls_f3(fmt), a.0 as u32, imm),
+        FStore { fmt, rs1: a, fs, imm } => s_type(OP_STORE_FP, ls_f3(fmt), a.0 as u32, fs.0 as u32, imm),
+        Fmadd { fmt, fd, fs1, fs2, fs3 } => {
+            OP_FMADD
+                | ((fd.0 as u32) << 7)
+                | (fmt_bits(fmt) << 25)
+                | ((fs1.0 as u32) << 15)
+                | ((fs2.0 as u32) << 20)
+                | ((fs3.0 as u32) << 27)
+        }
+        Fadd { fmt, fd, fs1, fs2 } => {
+            r_type(OP_FP, fd.0 as u32, 0, fs1.0 as u32, fs2.0 as u32, fmt_bits(fmt))
+        }
+        Fmul { fmt, fd, fs1, fs2 } => {
+            r_type(OP_FP, fd.0 as u32, 0, fs1.0 as u32, fs2.0 as u32, 0b0001000 | fmt_bits(fmt))
+        }
+        Fsgnj { fmt, fd, fs1, fs2 } => {
+            r_type(OP_FP, fd.0 as u32, 0, fs1.0 as u32, fs2.0 as u32, 0b0010000 | fmt_bits(fmt))
+        }
+        Fcvt { to, from, fd, fs1 } => {
+            // rs2 field carries the source format.
+            r_type(OP_FP, fd.0 as u32, 0, fs1.0 as u32, fmt_bits(from), 0b0100000 | fmt_bits(to))
+        }
+        FmvXW { rd: r, fs1 } => r_type(OP_FP, r.0 as u32, 0, fs1.0 as u32, 0, 0b1110000),
+        FmvWX { fd, rs1: a } => r_type(OP_FP, fd.0 as u32, 0, a.0 as u32, 0, 0b1111000),
+        ExSdotp { w, fd, fs1, fs2 } => {
+            r_type(OP_CUSTOM1, fd.0 as u32, 0, fs1.0 as u32, fs2.0 as u32, (w == OpWidth::BtoH) as u32)
+        }
+        ExVsum { w, fd, fs1 } => {
+            r_type(OP_CUSTOM1, fd.0 as u32, 1, fs1.0 as u32, 0, (w == OpWidth::BtoH) as u32)
+        }
+        Vsum { w, fd, fs1 } => {
+            r_type(OP_CUSTOM1, fd.0 as u32, 2, fs1.0 as u32, 0, (w == OpWidth::BtoH) as u32)
+        }
+        Csrrwi { rd: r, csr, imm } => i_type(OP_SYSTEM, r.0 as u32, 5, imm as u32, csr as i32),
+        Csrrw { rd: r, csr, rs1: a } => i_type(OP_SYSTEM, r.0 as u32, 1, a.0 as u32, csr as i32),
+        Csrrs { rd: r, csr, rs1: a } => i_type(OP_SYSTEM, r.0 as u32, 2, a.0 as u32, csr as i32),
+        ScfgWi { rs1: a, cfg } => i_type(OP_CUSTOM0, 0, 2, a.0 as u32, cfg as i32),
+        FrepO { rep, n_inst } => i_type(OP_CUSTOM2, 0, 0, rep.0 as u32, n_inst as i32),
+        FrepI { rep, n_inst } => i_type(OP_CUSTOM2, 0, 1, rep.0 as u32, n_inst as i32),
+        Barrier => i_type(OP_CUSTOM2, 0, 7, 0, 0),
+        Halt => i_type(OP_CUSTOM2, 0, 6, 0, 0),
+        DmSrc { rs1: a } => i_type(OP_CUSTOM3, 0, 0, a.0 as u32, 0),
+        DmDst { rs1: a } => i_type(OP_CUSTOM3, 0, 1, a.0 as u32, 0),
+        DmCpy { rd: r, rs1: a } => i_type(OP_CUSTOM3, r.0 as u32, 2, a.0 as u32, 0),
+        DmStat { rd: r } => i_type(OP_CUSTOM3, r.0 as u32, 3, 0, 0),
+    }
+}
+
+/// Decode a 32-bit word back to an instruction. `None` for encodings we
+/// don't model.
+pub fn decode(w: u32) -> Option<Instr> {
+    use Instr::*;
+    let op = w & 0x7f;
+    Some(match op {
+        OP_LUI => Lui { rd: Reg(rd(w) as u8), imm: (w >> 12) as i32 },
+        OP_IMM => match f3(w) {
+            0 => Addi { rd: Reg(rd(w) as u8), rs1: Reg(rs1(w) as u8), imm: i_imm(w) },
+            1 => Slli { rd: Reg(rd(w) as u8), rs1: Reg(rs1(w) as u8), shamt: rs2(w) as u8 },
+            5 => Srli { rd: Reg(rd(w) as u8), rs1: Reg(rs1(w) as u8), shamt: rs2(w) as u8 },
+            _ => return None,
+        },
+        OP_REG => {
+            let (r, a, b) = (Reg(rd(w) as u8), Reg(rs1(w) as u8), Reg(rs2(w) as u8));
+            match f7(w) {
+                0 => Add { rd: r, rs1: a, rs2: b },
+                0x20 => Sub { rd: r, rs1: a, rs2: b },
+                1 => Mul { rd: r, rs1: a, rs2: b },
+                _ => return None,
+            }
+        }
+        OP_BRANCH => {
+            let (a, b, off) = (Reg(rs1(w) as u8), Reg(rs2(w) as u8), b_imm(w) / 4);
+            match f3(w) {
+                0 => Beq { rs1: a, rs2: b, offset: off },
+                1 => Bne { rs1: a, rs2: b, offset: off },
+                4 => Blt { rs1: a, rs2: b, offset: off },
+                5 => Bge { rs1: a, rs2: b, offset: off },
+                _ => return None,
+            }
+        }
+        OP_JAL => Jal { rd: Reg(rd(w) as u8), offset: j_imm(w) / 4 },
+        OP_LOAD => match f3(w) {
+            2 => Lw { rd: Reg(rd(w) as u8), rs1: Reg(rs1(w) as u8), imm: i_imm(w) },
+            _ => return None,
+        },
+        OP_STORE => match f3(w) {
+            2 => Sw { rs1: Reg(rs1(w) as u8), rs2: Reg(rs2(w) as u8), imm: s_imm(w) },
+            _ => return None,
+        },
+        OP_LOAD_FP => {
+            FLoad { fmt: f3_ls(f3(w))?, fd: FReg(rd(w) as u8), rs1: Reg(rs1(w) as u8), imm: i_imm(w) }
+        }
+        OP_STORE_FP => {
+            FStore { fmt: f3_ls(f3(w))?, rs1: Reg(rs1(w) as u8), fs: FReg(rs2(w) as u8), imm: s_imm(w) }
+        }
+        OP_FMADD => Fmadd {
+            fmt: bits_fmt((w >> 25) & 0b11),
+            fd: FReg(rd(w) as u8),
+            fs1: FReg(rs1(w) as u8),
+            fs2: FReg(rs2(w) as u8),
+            fs3: FReg(((w >> 27) & 0x1f) as u8),
+        },
+        OP_FP => {
+            let fd = FReg(rd(w) as u8);
+            let a = FReg(rs1(w) as u8);
+            let b = FReg(rs2(w) as u8);
+            let f = f7(w);
+            match f >> 2 {
+                0b00000 => Fadd { fmt: bits_fmt(f), fd, fs1: a, fs2: b },
+                0b00010 => Fmul { fmt: bits_fmt(f), fd, fs1: a, fs2: b },
+                0b00100 => Fsgnj { fmt: bits_fmt(f), fd, fs1: a, fs2: b },
+                0b01000 => Fcvt { to: bits_fmt(f), from: bits_fmt(rs2(w)), fd, fs1: a },
+                0b11100 => FmvXW { rd: Reg(rd(w) as u8), fs1: a },
+                0b11110 => FmvWX { fd, rs1: Reg(rs1(w) as u8) },
+                _ => return None,
+            }
+        }
+        OP_CUSTOM1 => {
+            let wdt = if f7(w) & 1 == 1 { OpWidth::BtoH } else { OpWidth::HtoS };
+            let fd = FReg(rd(w) as u8);
+            let a = FReg(rs1(w) as u8);
+            match f3(w) {
+                0 => ExSdotp { w: wdt, fd, fs1: a, fs2: FReg(rs2(w) as u8) },
+                1 => ExVsum { w: wdt, fd, fs1: a },
+                2 => Vsum { w: wdt, fd, fs1: a },
+                _ => return None,
+            }
+        }
+        OP_SYSTEM => {
+            let csr = ((w >> 20) & 0xfff) as u16;
+            match f3(w) {
+                1 => Csrrw { rd: Reg(rd(w) as u8), csr, rs1: Reg(rs1(w) as u8) },
+                2 => Csrrs { rd: Reg(rd(w) as u8), csr, rs1: Reg(rs1(w) as u8) },
+                5 => Csrrwi { rd: Reg(rd(w) as u8), csr, imm: rs1(w) as u8 },
+                _ => return None,
+            }
+        }
+        OP_CUSTOM0 => match f3(w) {
+            2 => ScfgWi { rs1: Reg(rs1(w) as u8), cfg: (i_imm(w) & 0xfff) as u16 },
+            _ => return None,
+        },
+        OP_CUSTOM2 => match f3(w) {
+            0 => FrepO { rep: Reg(rs1(w) as u8), n_inst: (i_imm(w) & 0xff) as u8 },
+            1 => FrepI { rep: Reg(rs1(w) as u8), n_inst: (i_imm(w) & 0xff) as u8 },
+            6 => Halt,
+            7 => Barrier,
+            _ => return None,
+        },
+        OP_CUSTOM3 => match f3(w) {
+            0 => DmSrc { rs1: Reg(rs1(w) as u8) },
+            1 => DmDst { rs1: Reg(rs1(w) as u8) },
+            2 => DmCpy { rd: Reg(rd(w) as u8), rs1: Reg(rs1(w) as u8) },
+            3 => DmStat { rd: Reg(rd(w) as u8) },
+            _ => return None,
+        },
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::regs::*;
+
+    fn all_sample_instrs() -> Vec<Instr> {
+        use Instr::*;
+        vec![
+            Lui { rd: x(5), imm: 0x12345 },
+            Addi { rd: x(5), rs1: x(6), imm: -7 },
+            Addi { rd: x(1), rs1: ZERO, imm: 2047 },
+            Add { rd: x(3), rs1: x(4), rs2: x(5) },
+            Sub { rd: x(3), rs1: x(4), rs2: x(5) },
+            Mul { rd: x(31), rs1: x(30), rs2: x(29) },
+            Slli { rd: x(2), rs1: x(2), shamt: 3 },
+            Srli { rd: x(2), rs1: x(2), shamt: 31 },
+            Beq { rs1: x(1), rs2: x(2), offset: -12 },
+            Bne { rs1: x(1), rs2: ZERO, offset: 100 },
+            Blt { rs1: x(8), rs2: x(9), offset: 1 },
+            Bge { rs1: x(8), rs2: x(9), offset: -1 },
+            Jal { rd: ZERO, offset: -200 },
+            Lw { rd: x(7), rs1: x(2), imm: 16 },
+            Sw { rs1: x(2), rs2: x(7), imm: -16 },
+            FLoad { fmt: ScalarFmt::D, fd: f(9), rs1: x(10), imm: 8 },
+            FLoad { fmt: ScalarFmt::H, fd: f(9), rs1: x(10), imm: 2 },
+            FStore { fmt: ScalarFmt::D, rs1: x(10), fs: f(9), imm: -8 },
+            FStore { fmt: ScalarFmt::B, rs1: x(10), fs: f(9), imm: 1 },
+            Fmadd { fmt: ScalarFmt::D, fd: f(4), fs1: f(5), fs2: f(6), fs3: f(7) },
+            Fmadd { fmt: ScalarFmt::H, fd: FT0, fs1: FT1, fs2: f(3), fs3: f(3) },
+            Fadd { fmt: ScalarFmt::S, fd: f(1), fs1: f(2), fs2: f(3) },
+            Fmul { fmt: ScalarFmt::B, fd: f(1), fs1: f(2), fs2: f(3) },
+            Fsgnj { fmt: ScalarFmt::D, fd: f(11), fs1: f(12), fs2: f(12) },
+            Fcvt { to: ScalarFmt::S, from: ScalarFmt::H, fd: f(3), fs1: f(4) },
+            FmvXW { rd: x(13), fs1: f(14) },
+            FmvWX { fd: f(14), rs1: x(13) },
+            ExSdotp { w: OpWidth::HtoS, fd: f(3), fs1: FT0, fs2: FT1 },
+            ExSdotp { w: OpWidth::BtoH, fd: f(17), fs1: f(18), fs2: f(19) },
+            ExVsum { w: OpWidth::HtoS, fd: f(3), fs1: f(4) },
+            Vsum { w: OpWidth::BtoH, fd: f(3), fs1: f(4) },
+            Csrrwi { rd: ZERO, csr: 0x003, imm: 1 },
+            Csrrw { rd: x(1), csr: 0x7c0, rs1: x(2) },
+            Csrrs { rd: x(1), csr: 0xf14, rs1: ZERO },
+            ScfgWi { rs1: x(5), cfg: 0x2e1 },
+            FrepO { rep: x(20), n_inst: 4 },
+            FrepI { rep: x(20), n_inst: 1 },
+            DmSrc { rs1: x(10) },
+            DmDst { rs1: x(11) },
+            DmCpy { rd: x(12), rs1: x(13) },
+            DmStat { rd: x(12) },
+            Barrier,
+            Halt,
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for i in all_sample_instrs() {
+            let w = encode(&i);
+            let back = decode(w).unwrap_or_else(|| panic!("decode failed for {i:?} ({w:#010x})"));
+            assert_eq!(back, i, "roundtrip mismatch ({w:#010x})");
+        }
+    }
+
+    #[test]
+    fn opcode_fields_are_riscv_shaped() {
+        // Spot-check a known encoding: addi x1, x0, 1 == 0x00100093.
+        let w = encode(&Instr::Addi { rd: x(1), rs1: ZERO, imm: 1 });
+        assert_eq!(w, 0x0010_0093);
+        // lui x5, 0x12345 == 0x123452b7.
+        let w = encode(&Instr::Lui { rd: x(5), imm: 0x12345 });
+        assert_eq!(w, 0x1234_52b7);
+        // fld f9, 8(x10) == imm=8, rs1=10, f3=3, rd=9, op=0x07.
+        let w = encode(&Instr::FLoad { fmt: ScalarFmt::D, fd: f(9), rs1: x(10), imm: 8 });
+        assert_eq!(w, (8 << 20) | (10 << 15) | (3 << 12) | (9 << 7) | 0x07);
+    }
+
+    #[test]
+    fn branch_offsets_encode_as_byte_offsets() {
+        let i = Instr::Bne { rs1: x(1), rs2: ZERO, offset: -3 };
+        let w = encode(&i);
+        assert_eq!(b_imm(w), -12);
+        assert_eq!(decode(w), Some(i));
+    }
+
+    #[test]
+    fn undecodable_patterns_return_none() {
+        assert_eq!(decode(0), None);
+        assert_eq!(decode(0xffff_ffff), None);
+    }
+
+    #[test]
+    fn minifloat_nn_opcode_is_custom1() {
+        let w = encode(&Instr::ExSdotp { w: OpWidth::HtoS, fd: f(3), fs1: f(0), fs2: f(1) });
+        assert_eq!(w & 0x7f, 0x2b);
+        let w8 = encode(&Instr::ExSdotp { w: OpWidth::BtoH, fd: f(3), fs1: f(0), fs2: f(1) });
+        assert_eq!((w8 >> 25) & 1, 1); // width bit
+    }
+}

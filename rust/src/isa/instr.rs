@@ -1,0 +1,268 @@
+//! Typed instruction forms.
+//!
+//! The simulator executes this enum directly (programs are `Vec<Instr>`
+//! — no decode in the hot loop); [`super::encode`] provides the binary
+//! encoding layer with a lossless round-trip, which is what an actual
+//! binary would store.
+
+/// Integer register `x0..x31` (`x0` hardwired to zero).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Reg(pub u8);
+
+/// FP register `f0..f31` (64-bit entries; `f0..f2` are the SSR-mapped
+/// registers `ft0..ft2` when SSRs are enabled).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct FReg(pub u8);
+
+/// Width selector for the MiniFloat-NN SIMD instructions: which pair of
+/// (source, destination) widths the instruction operates on. The actual
+/// formats are refined by the CSR `src_is_alt` / `dst_is_alt` bits.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OpWidth {
+    /// 16-bit sources → 32-bit destination (2 lanes).
+    HtoS,
+    /// 8-bit sources → 16-bit destination (4 lanes).
+    BtoH,
+}
+
+/// Scalar / vectorial FP format selector for classic F/D/smallFloat ops.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ScalarFmt {
+    /// FP64 (`.d`)
+    D,
+    /// FP32 (`.s`)
+    S,
+    /// FP16 or FP16alt per CSR (`.h`)
+    H,
+    /// FP8 or FP8alt per CSR (`.b`)
+    B,
+}
+
+impl ScalarFmt {
+    /// Storage width in bits.
+    pub const fn width(self) -> u32 {
+        match self {
+            ScalarFmt::D => 64,
+            ScalarFmt::S => 32,
+            ScalarFmt::H => 16,
+            ScalarFmt::B => 8,
+        }
+    }
+
+    /// SIMD lanes in a 64-bit register.
+    pub const fn lanes(self) -> u32 {
+        64 / self.width()
+    }
+}
+
+/// The instruction set: RV32I/M subset + F/D/smallFloat subset + Snitch
+/// SSR/FREP/DMA + the MiniFloat-NN extension.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Instr {
+    // ---- RV32I subset -------------------------------------------------
+    /// `lui rd, imm20`
+    Lui { rd: Reg, imm: i32 },
+    /// `addi rd, rs1, imm12`
+    Addi { rd: Reg, rs1: Reg, imm: i32 },
+    /// `add rd, rs1, rs2`
+    Add { rd: Reg, rs1: Reg, rs2: Reg },
+    /// `sub rd, rs1, rs2`
+    Sub { rd: Reg, rs1: Reg, rs2: Reg },
+    /// `slli rd, rs1, shamt`
+    Slli { rd: Reg, rs1: Reg, shamt: u8 },
+    /// `srli rd, rs1, shamt`
+    Srli { rd: Reg, rs1: Reg, shamt: u8 },
+    /// `mul rd, rs1, rs2` (M extension; address arithmetic)
+    Mul { rd: Reg, rs1: Reg, rs2: Reg },
+    /// `beq rs1, rs2, ±offset` (offset in *instructions*, resolved)
+    Beq { rs1: Reg, rs2: Reg, offset: i32 },
+    /// `bne rs1, rs2, ±offset`
+    Bne { rs1: Reg, rs2: Reg, offset: i32 },
+    /// `blt rs1, rs2, ±offset`
+    Blt { rs1: Reg, rs2: Reg, offset: i32 },
+    /// `bge rs1, rs2, ±offset`
+    Bge { rs1: Reg, rs2: Reg, offset: i32 },
+    /// `jal rd, ±offset`
+    Jal { rd: Reg, offset: i32 },
+    /// `lw rd, imm(rs1)`
+    Lw { rd: Reg, rs1: Reg, imm: i32 },
+    /// `sw rs2, imm(rs1)`
+    Sw { rs1: Reg, rs2: Reg, imm: i32 },
+
+    // ---- FP loads/stores (fld/flw/flh/flb, fsd/fsw/fsh/fsb) -------------
+    /// `fl<sz> fd, imm(rs1)` — FP load of `fmt.width()` bits (zero-extended
+    /// into the 64-bit register; packed-SIMD data uses the D width).
+    FLoad { fmt: ScalarFmt, fd: FReg, rs1: Reg, imm: i32 },
+    /// `fs<sz> fs, imm(rs1)` — FP store of the low `fmt.width()` bits.
+    FStore { fmt: ScalarFmt, rs1: Reg, fs: FReg, imm: i32 },
+
+    // ---- scalar / vectorial FP compute ---------------------------------
+    /// `fmadd.<fmt> fd, fs1, fs2, fs3` — scalar FMA (D/S) or, for H/B,
+    /// packed-SIMD vectorial FMA over all lanes (smallFloat `vfmac`).
+    Fmadd { fmt: ScalarFmt, fd: FReg, fs1: FReg, fs2: FReg, fs3: FReg },
+    /// `fadd.<fmt> fd, fs1, fs2` (vectorial for H/B)
+    Fadd { fmt: ScalarFmt, fd: FReg, fs1: FReg, fs2: FReg },
+    /// `fmul.<fmt> fd, fs1, fs2` (vectorial for H/B)
+    Fmul { fmt: ScalarFmt, fd: FReg, fs1: FReg, fs2: FReg },
+    /// `fsgnj.<fmt> fd, fs1, fs2` (also `fmv`: fsgnj fd, fs, fs)
+    Fsgnj { fmt: ScalarFmt, fd: FReg, fs1: FReg, fs2: FReg },
+    /// `fcvt.<to>.<from> fd, fs1` — scalar format conversion
+    Fcvt { to: ScalarFmt, from: ScalarFmt, fd: FReg, fs1: FReg },
+    /// `fmv.x.w rd, fs1` — move low 32 bits of FP reg to int reg
+    FmvXW { rd: Reg, fs1: FReg },
+    /// `fmv.w.x fd, rs1` — move int reg to low 32 bits of FP reg
+    FmvWX { fd: FReg, rs1: Reg },
+
+    // ---- MiniFloat-NN extension (§III-E) --------------------------------
+    /// `exsdotp rd, rs1, rs2` — SIMD expanding sum of dot products; `rd`
+    /// is also the accumulator.
+    ExSdotp { w: OpWidth, fd: FReg, fs1: FReg, fs2: FReg },
+    /// `exvsum rd, rs1` — SIMD expanding vector inner sum.
+    ExVsum { w: OpWidth, fd: FReg, fs1: FReg },
+    /// `vsum rd, rs1` — SIMD non-expanding vector inner sum.
+    Vsum { w: OpWidth, fd: FReg, fs1: FReg },
+
+    // ---- CSR ------------------------------------------------------------
+    /// `csrrwi rd, csr, imm5` — CSR write-immediate (rounding mode, alt
+    /// bits, SSR enable).
+    Csrrwi { rd: Reg, csr: u16, imm: u8 },
+    /// `csrrw rd, csr, rs1`
+    Csrrw { rd: Reg, csr: u16, rs1: Reg },
+    /// `csrrs rd, csr, rs1` (set bits; `rs1 = x0` → pure read)
+    Csrrs { rd: Reg, csr: u16, rs1: Reg },
+
+    // ---- Snitch SSR / FREP ----------------------------------------------
+    /// `scfgwi rs1, ssr*32+reg` — write an SSR config register (value
+    /// from `rs1`; dm/register index immediate, like Snitch).
+    ScfgWi { rs1: Reg, cfg: u16 },
+    /// `frep.o rs1, n_inst` — repeat the next `n_inst` FP instructions
+    /// `rs1` times total (outer repetition).
+    FrepO { rep: Reg, n_inst: u8 },
+    /// `frep.i rs1, n_inst` — inner repetition (each instruction
+    /// repeated back-to-back).
+    FrepI { rep: Reg, n_inst: u8 },
+
+    // ---- Snitch DMA (the 9th core) ---------------------------------------
+    /// `dmsrc rs1` — set DMA source address.
+    DmSrc { rs1: Reg },
+    /// `dmdst rs1` — set DMA destination address.
+    DmDst { rs1: Reg },
+    /// `dmcpyi rd, rs1` — start a 1-D copy of `rs1` bytes; `rd` receives
+    /// the transfer id.
+    DmCpy { rd: Reg, rs1: Reg },
+    /// `dmstati rd` — busy-wait handle: `rd` = outstanding transfers.
+    DmStat { rd: Reg },
+
+    // ---- synchronization --------------------------------------------------
+    /// Cluster hardware barrier (`csrr x0, barrier` on Snitch).
+    Barrier,
+    /// Stop this hart (custom `wfi`-like halt).
+    Halt,
+}
+
+impl Instr {
+    /// Does this instruction execute on the FP subsystem (issued through
+    /// the Snitch accelerator interface / FREP sequencer)?
+    pub fn is_fp(&self) -> bool {
+        matches!(
+            self,
+            Instr::Fmadd { .. }
+                | Instr::Fadd { .. }
+                | Instr::Fmul { .. }
+                | Instr::Fsgnj { .. }
+                | Instr::Fcvt { .. }
+                | Instr::ExSdotp { .. }
+                | Instr::ExVsum { .. }
+                | Instr::Vsum { .. }
+                | Instr::FLoad { .. }
+                | Instr::FStore { .. }
+        )
+    }
+
+    /// FP registers read by this instruction (excluding SSR semantics —
+    /// the core decides whether an `f0..f2` read hits a stream).
+    /// Allocation-free: returns a fixed array + count (this sits on the
+    /// simulator's per-cycle hot path).
+    pub fn fp_reads(&self) -> FpReads {
+        let mut r = FpReads { regs: [FReg(0); 3], n: 0 };
+        match *self {
+            Instr::Fmadd { fs1, fs2, fs3, .. } => r.set(&[fs1, fs2, fs3]),
+            Instr::Fadd { fs1, fs2, .. } | Instr::Fmul { fs1, fs2, .. } | Instr::Fsgnj { fs1, fs2, .. } => {
+                r.set(&[fs1, fs2])
+            }
+            Instr::Fcvt { fs1, .. } => r.set(&[fs1]),
+            Instr::ExSdotp { fs1, fs2, fd, .. } => r.set(&[fs1, fs2, fd]),
+            Instr::ExVsum { fs1, fd, .. } | Instr::Vsum { fs1, fd, .. } => r.set(&[fs1, fd]),
+            Instr::FStore { fs, .. } => r.set(&[fs]),
+            Instr::FmvXW { fs1, .. } => r.set(&[fs1]),
+            _ => {}
+        }
+        r
+    }
+
+    /// FP register written by this instruction.
+    pub fn fp_write(&self) -> Option<FReg> {
+        match *self {
+            Instr::Fmadd { fd, .. }
+            | Instr::Fadd { fd, .. }
+            | Instr::Fmul { fd, .. }
+            | Instr::Fsgnj { fd, .. }
+            | Instr::Fcvt { fd, .. }
+            | Instr::ExSdotp { fd, .. }
+            | Instr::ExVsum { fd, .. }
+            | Instr::Vsum { fd, .. }
+            | Instr::FLoad { fd, .. }
+            | Instr::FmvWX { fd, .. } => Some(fd),
+            _ => None,
+        }
+    }
+}
+
+/// A small fixed set of FP register reads (max 3), avoiding heap
+/// allocation on the issue path.
+#[derive(Clone, Copy, Debug)]
+pub struct FpReads {
+    regs: [FReg; 3],
+    n: u8,
+}
+
+impl FpReads {
+    fn set(&mut self, rs: &[FReg]) {
+        self.regs[..rs.len()].copy_from_slice(rs);
+        self.n = rs.len() as u8;
+    }
+
+    /// Iterate the registers.
+    pub fn iter(&self) -> impl Iterator<Item = FReg> + '_ {
+        self.regs[..self.n as usize].iter().copied()
+    }
+}
+
+/// Convenience constructors for the register names used in kernels.
+pub mod regs {
+    use super::{FReg, Reg};
+
+    /// `x0` — hardwired zero.
+    pub const ZERO: Reg = Reg(0);
+    /// `x1` — return address / scratch.
+    pub const RA: Reg = Reg(1);
+    /// `x2` — stack pointer / scratch.
+    pub const SP: Reg = Reg(2);
+
+    /// General helper: `x(n)`.
+    pub const fn x(n: u8) -> Reg {
+        Reg(n)
+    }
+
+    /// General helper: `f(n)`.
+    pub const fn f(n: u8) -> FReg {
+        FReg(n)
+    }
+
+    /// SSR-mapped stream registers.
+    pub const FT0: FReg = FReg(0);
+    /// Stream register 1.
+    pub const FT1: FReg = FReg(1);
+    /// Stream register 2 (commonly the write stream).
+    pub const FT2: FReg = FReg(2);
+}

@@ -1,0 +1,35 @@
+//! The MiniFloat-NN RISC-V ISA extension (§III-E) plus the subset of
+//! RV32I/M, F/D, and the Snitch custom extensions (SSR, FREP, DMA) that
+//! the evaluation kernels need.
+//!
+//! The paper's extension adds three SIMD instructions on top of the
+//! smallFloat extension:
+//!
+//! ```text
+//! exsdotp rd, rs1, rs2   # rd_i += rs1_{2i}·rs2_{2i} + rs1_{2i+1}·rs2_{2i+1}
+//! exvsum  rd, rs1        # rd_i += rs1_{2i} + rs1_{2i+1}   (expanding)
+//! vsum    rd, rs1        # rd_i  = rs1_{2i} + rs1_{2i+1} + rd_i
+//! ```
+//!
+//! `rd` doubles as the accumulator input (rs3), packed in the wider
+//! destination format. Because encoding space is scarce, the
+//! *alternative* formats (FP16alt, FP8alt) are not separate opcodes:
+//! two bits in the FP CSR — `src_is_alt` and `dst_is_alt` — retarget the
+//! same instruction, so "an FP16alt kernel differs from an FP16 kernel
+//! by a single CSR write" (§III-E). [`csr::FpCsr`] models this.
+//!
+//! * [`instr`] — the instruction forms as a typed enum.
+//! * [`encode`] — 32-bit instruction encodings (R/I/S/B/U/J/R4 plus the
+//!   custom-opcode encodings for the extension) with a full
+//!   encode/decode round-trip.
+//! * [`asm`] — a small assembler/disassembler for writing kernels and
+//!   debugging traces.
+//! * [`csr`] — the FP CSR with `frm`, `src_is_alt`, `dst_is_alt`.
+
+pub mod asm;
+pub mod csr;
+pub mod encode;
+pub mod instr;
+
+pub use csr::FpCsr;
+pub use instr::{FReg, Instr, OpWidth, Reg, ScalarFmt};

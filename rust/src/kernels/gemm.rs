@@ -1,0 +1,417 @@
+//! The GEMM kernel generators and their run harness.
+
+use super::layout::{pack_matrix, pack_matrix_ld, unpack_matrix, MatrixOrder};
+use crate::cluster::{Cluster, ClusterCfg, TCDM_BASE};
+use crate::core::CoreStats;
+use crate::formats::FpFormat;
+use crate::isa::csr::addr as csr;
+use crate::isa::instr::regs::*;
+use crate::isa::instr::{Instr, OpWidth, Reg, ScalarFmt};
+
+/// Which Table II kernel family.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum GemmKind {
+    /// Scalar FP64 FMA kernel (8-column unroll) — the classic Snitch GEMM.
+    FmaF64,
+    /// Packed-SIMD FMA kernel (`.s` = 2×FP32 or `.h` = 4×FP16 lanes).
+    FmaSimd(ScalarFmt),
+    /// Expanding sum-of-dot-product kernel (16→32 or 8→16).
+    ExSdotp(OpWidth),
+}
+
+impl GemmKind {
+    /// Source element format (inputs A, B).
+    pub fn src_fmt(&self) -> FpFormat {
+        match self {
+            GemmKind::FmaF64 => crate::formats::FP64,
+            GemmKind::FmaSimd(ScalarFmt::S) => crate::formats::FP32,
+            GemmKind::FmaSimd(ScalarFmt::H) => crate::formats::FP16,
+            GemmKind::FmaSimd(f) => panic!("unsupported SIMD FMA format {f:?}"),
+            GemmKind::ExSdotp(OpWidth::HtoS) => crate::formats::FP16,
+            GemmKind::ExSdotp(OpWidth::BtoH) => crate::formats::FP8,
+        }
+    }
+
+    /// Output element format (C).
+    pub fn dst_fmt(&self) -> FpFormat {
+        match self {
+            GemmKind::ExSdotp(OpWidth::HtoS) => crate::formats::FP32,
+            GemmKind::ExSdotp(OpWidth::BtoH) => crate::formats::FP16,
+            _ => self.src_fmt(),
+        }
+    }
+
+    /// Source lanes per 64-bit word.
+    pub fn lanes(&self) -> usize {
+        (64 / self.src_fmt().width()) as usize
+    }
+
+    /// Output-column unroll factor (accumulators in flight).
+    pub fn unroll(&self) -> usize {
+        match self {
+            GemmKind::FmaF64 => 8,
+            _ => 4,
+        }
+    }
+
+    /// Short label (Table II column).
+    pub fn label(&self) -> &'static str {
+        match self {
+            GemmKind::FmaF64 => "FP64 FMA",
+            GemmKind::FmaSimd(ScalarFmt::S) => "FP32 FMA",
+            GemmKind::FmaSimd(_) => "FP16 FMA",
+            GemmKind::ExSdotp(OpWidth::HtoS) => "FP16->FP32 ExSdotp",
+            GemmKind::ExSdotp(OpWidth::BtoH) => "FP8->FP16 ExSdotp",
+        }
+    }
+
+    /// B matrix storage order this kernel streams.
+    pub fn b_order(&self) -> MatrixOrder {
+        match self {
+            GemmKind::FmaF64 => MatrixOrder::RowMajor,
+            _ => MatrixOrder::ColMajor,
+        }
+    }
+}
+
+/// A sized GEMM problem bound to a kernel kind.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmKernel {
+    /// Kernel family.
+    pub kind: GemmKind,
+    /// Output rows.
+    pub m: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Inner dimension.
+    pub k: usize,
+    /// Compute cores.
+    pub n_cores: usize,
+}
+
+/// Result of a simulated GEMM run.
+pub struct GemmResult {
+    /// Total cluster cycles.
+    pub cycles: u64,
+    /// C matrix decoded to f64 (row-major).
+    pub c: Vec<f64>,
+    /// FLOP performed (2·M·N·K).
+    pub flops: u64,
+    /// Aggregate core stats.
+    pub stats: CoreStats,
+}
+
+impl GemmResult {
+    /// FLOP per cycle across the cluster (Fig. 8's y-axis).
+    pub fn flop_per_cycle(&self) -> f64 {
+        self.flops as f64 / self.cycles as f64
+    }
+}
+
+impl GemmKernel {
+    /// Bind a problem. Sizes must satisfy the kernel's divisibility
+    /// requirements (`M % cores == 0`, `N % unroll == 0`, `K % lanes == 0`).
+    pub fn new(kind: GemmKind, m: usize, n: usize, k: usize) -> Self {
+        let kern = GemmKernel { kind, m, n, k, n_cores: 8 };
+        assert_eq!(m % kern.n_cores, 0, "M must divide across cores");
+        assert_eq!(n % kind.unroll(), 0, "N must divide by the unroll factor");
+        assert_eq!(k % kind.lanes(), 0, "K must divide by the SIMD width");
+        kern
+    }
+
+    /// Paper-style size label (`M×N`, with K = M implied in Table II).
+    pub fn size_label(&self) -> String {
+        format!("{}x{}", self.m, self.n)
+    }
+
+    /// Total FLOP (1 MAC = 2 FLOP; 1 ExSdotp = 4 FLOP — same count).
+    pub fn flops(&self) -> u64 {
+        2 * (self.m * self.n * self.k) as u64
+    }
+
+    // ------------------------------------------------------ memory layout
+
+    fn src_bytes(&self) -> usize {
+        self.kind.src_fmt().width() as usize / 8
+    }
+
+    fn dst_bytes(&self) -> usize {
+        self.kind.dst_fmt().width() as usize / 8
+    }
+
+    /// TCDM base address of A (row-major, src fmt).
+    pub fn a_base(&self) -> u64 {
+        TCDM_BASE
+    }
+
+    /// TCDM base address of B (order per kernel, src fmt).
+    pub fn b_base(&self) -> u64 {
+        align64(self.a_base() + (self.m * self.k * self.src_bytes()) as u64)
+    }
+
+    /// B leading dimension in elements: the logical extent plus one
+    /// 64-bit padding word whenever a major line would otherwise be a
+    /// multiple of the bank-group size (lines aliasing onto one bank
+    /// group serialize the whole cluster — the kernels pad, like the
+    /// hand-written Snitch GEMMs).
+    pub fn b_ld(&self) -> usize {
+        let (extent, sw) = match self.kind.b_order() {
+            MatrixOrder::RowMajor => (self.n, self.src_bytes()),
+            MatrixOrder::ColMajor => (self.k, self.src_bytes()),
+        };
+        if (extent * sw) % 64 == 0 {
+            extent + 8 / sw
+        } else {
+            extent
+        }
+    }
+
+    fn b_bytes_padded(&self) -> usize {
+        let lines = match self.kind.b_order() {
+            MatrixOrder::RowMajor => self.k,
+            MatrixOrder::ColMajor => self.n,
+        };
+        lines * self.b_ld() * self.src_bytes()
+    }
+
+    /// TCDM base address of C (row-major, dst fmt).
+    pub fn c_base(&self) -> u64 {
+        align64(self.b_base() + self.b_bytes_padded() as u64)
+    }
+
+    /// Logical TCDM footprint in bytes — the paper's "fits in the 128 kB
+    /// local memory" criterion counts data, not anti-aliasing padding.
+    pub fn footprint(&self) -> u64 {
+        ((self.m * self.k + self.k * self.n) * self.src_bytes() + self.m * self.n * self.dst_bytes()) as u64
+    }
+
+    /// Physical footprint including padding and alignment.
+    pub fn footprint_padded(&self) -> u64 {
+        self.c_base() + (self.m * self.n * self.dst_bytes()) as u64 - TCDM_BASE
+    }
+
+    // ------------------------------------------------------ program
+
+    /// Generate the per-core program.
+    pub fn program(&self, core_id: u32) -> Vec<Instr> {
+        let mut p = Vec::with_capacity(128);
+        let u = self.kind.unroll();
+        let l = self.kind.lanes();
+        let sw = self.src_bytes();
+        let dw = self.dst_bytes();
+        let (m, n, k) = (self.m, self.n, self.k);
+        let rows = m / self.n_cores;
+        let blocks = n / u;
+        let kc = k / l; // inner-loop iterations (words per A-row sweep)
+
+        // ---- SSR configuration (once per run) -------------------------
+        // ft0 streams A: [kc words] × [blocks (restart)] × [rows].
+        let a_row0 = self.a_base() + (core_id as usize * k * sw) as u64;
+        let a_row_stride = (self.n_cores * k * sw) as i64;
+        scfg(&mut p, 0, crate::core::cfg_regs::BOUND0, kc as i64);
+        scfg(&mut p, 0, crate::core::cfg_regs::BOUND0 + 1, blocks as i64);
+        scfg(&mut p, 0, crate::core::cfg_regs::BOUND0 + 2, rows as i64);
+        scfg(&mut p, 0, crate::core::cfg_regs::STRIDE0, 8);
+        scfg(&mut p, 0, crate::core::cfg_regs::STRIDE0 + 1, 0);
+        scfg(&mut p, 0, crate::core::cfg_regs::STRIDE0 + 2, a_row_stride);
+        scfg(&mut p, 0, crate::core::cfg_regs::REPEAT, u as i64);
+        scfg(&mut p, 0, crate::core::cfg_regs::RPTR0 + 2, a_row0 as i64);
+
+        // ft1 streams B.
+        match self.kind {
+            GemmKind::FmaF64 => {
+                // Row-major B: [8 cols] × [k rows] × [blocks] × [rows(0)].
+                scfg(&mut p, 1, crate::core::cfg_regs::BOUND0, u as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::BOUND0 + 1, k as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::BOUND0 + 2, blocks as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::BOUND0 + 3, rows as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::STRIDE0, 8);
+                scfg(&mut p, 1, crate::core::cfg_regs::STRIDE0 + 1, (self.b_ld() * 8) as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::STRIDE0 + 2, (u * 8) as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::STRIDE0 + 3, 0);
+                scfg(&mut p, 1, crate::core::cfg_regs::RPTR0 + 3, self.b_base() as i64);
+            }
+            _ => {
+                // Column-major B: [u cols] × [kc words] × [blocks] × [rows(0)].
+                let col_bytes = (self.b_ld() * sw) as i64;
+                scfg(&mut p, 1, crate::core::cfg_regs::BOUND0, u as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::BOUND0 + 1, kc as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::BOUND0 + 2, blocks as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::BOUND0 + 3, rows as i64);
+                scfg(&mut p, 1, crate::core::cfg_regs::STRIDE0, col_bytes);
+                scfg(&mut p, 1, crate::core::cfg_regs::STRIDE0 + 1, 8);
+                scfg(&mut p, 1, crate::core::cfg_regs::STRIDE0 + 2, u as i64 * col_bytes);
+                scfg(&mut p, 1, crate::core::cfg_regs::STRIDE0 + 3, 0);
+                scfg(&mut p, 1, crate::core::cfg_regs::RPTR0 + 3, self.b_base() as i64);
+            }
+        }
+
+        // ---- scalar setup ---------------------------------------------
+        p.push(Instr::FmvWX { fd: f(31), rs1: ZERO }); // f31 = +0.0 (zeroing source)
+        p.push(Instr::Csrrwi { rd: ZERO, csr: csr::SSR, imm: 1 });
+        li(&mut p, x(6), kc as i64 - 1); // FREP repetition count (body runs kc times)
+        li(&mut p, x(20), rows as i64); // row loop counter
+        // C pointer for this core's first row.
+        li(&mut p, x(22), (self.c_base() + (core_id as usize * n * dw) as u64) as i64);
+        // Row skip: advance from end of row i to start of row i+n_cores.
+        li(&mut p, x(24), ((self.n_cores - 1) * n * dw) as i64);
+
+        // ---- row loop ----------------------------------------------------
+        let row_loop_start = p.len() as i32;
+        li(&mut p, x(21), blocks as i64); // block loop counter
+
+        // ---- block loop ---------------------------------------------------
+        let block_loop_start = p.len() as i32;
+        // Zero the accumulators (FP-side, stays ordered in the FP queue).
+        for a in 0..u {
+            p.push(Instr::Fsgnj { fmt: ScalarFmt::D, fd: f(4 + a as u8), fs1: f(31), fs2: f(31) });
+        }
+        // The hot loop: one FREP over `u` independent compute ops.
+        p.push(Instr::FrepO { rep: x(6), n_inst: u as u8 });
+        for a in 0..u {
+            let acc = f(4 + a as u8);
+            match self.kind {
+                GemmKind::FmaF64 => {
+                    p.push(Instr::Fmadd { fmt: ScalarFmt::D, fd: acc, fs1: FT0, fs2: FT1, fs3: acc })
+                }
+                GemmKind::FmaSimd(fmt) => {
+                    p.push(Instr::Fmadd { fmt, fd: acc, fs1: FT0, fs2: FT1, fs3: acc })
+                }
+                GemmKind::ExSdotp(w) => p.push(Instr::ExSdotp { w, fd: acc, fs1: FT0, fs2: FT1 }),
+            }
+        }
+        // Epilogue: reduce lanes and store C.
+        match self.kind {
+            GemmKind::FmaF64 => {
+                for a in 0..u {
+                    p.push(Instr::FStore {
+                        fmt: ScalarFmt::D,
+                        rs1: x(22),
+                        fs: f(4 + a as u8),
+                        imm: (a * 8) as i32,
+                    });
+                }
+            }
+            GemmKind::FmaSimd(ScalarFmt::S) | GemmKind::ExSdotp(OpWidth::HtoS) => {
+                // 2 FP32 lanes → 1 value: zero t, vsum, store word. The
+                // phases are interleaved across the 4 columns so the
+                // 3-cycle vsum latency hides behind independent work.
+                for a in 0..u {
+                    p.push(Instr::Fsgnj { fmt: ScalarFmt::D, fd: f(20 + a as u8), fs1: f(31), fs2: f(31) });
+                }
+                for a in 0..u {
+                    p.push(Instr::Vsum { w: OpWidth::HtoS, fd: f(20 + a as u8), fs1: f(4 + a as u8) });
+                }
+                for a in 0..u {
+                    p.push(Instr::FStore {
+                        fmt: ScalarFmt::S,
+                        rs1: x(22),
+                        fs: f(20 + a as u8),
+                        imm: (a * dw) as i32,
+                    });
+                }
+            }
+            GemmKind::FmaSimd(_) | GemmKind::ExSdotp(OpWidth::BtoH) => {
+                // 4 FP16 lanes → 1 value: two vsum levels, phase-ordered
+                // across columns for the same latency-hiding reason.
+                for a in 0..u {
+                    p.push(Instr::Fsgnj { fmt: ScalarFmt::D, fd: f(20 + a as u8), fs1: f(31), fs2: f(31) });
+                }
+                for a in 0..u {
+                    p.push(Instr::Vsum { w: OpWidth::BtoH, fd: f(20 + a as u8), fs1: f(4 + a as u8) });
+                }
+                for a in 0..u {
+                    p.push(Instr::Fsgnj { fmt: ScalarFmt::D, fd: f(25 + a as u8), fs1: f(31), fs2: f(31) });
+                }
+                for a in 0..u {
+                    p.push(Instr::Vsum { w: OpWidth::BtoH, fd: f(25 + a as u8), fs1: f(20 + a as u8) });
+                }
+                for a in 0..u {
+                    p.push(Instr::FStore {
+                        fmt: ScalarFmt::H,
+                        rs1: x(22),
+                        fs: f(25 + a as u8),
+                        imm: (a * dw) as i32,
+                    });
+                }
+            }
+        }
+        // Advance C pointer to the next block; loop.
+        p.push(Instr::Addi { rd: x(22), rs1: x(22), imm: (u * dw) as i32 });
+        p.push(Instr::Addi { rd: x(21), rs1: x(21), imm: -1 });
+        let off = block_loop_start - p.len() as i32;
+        p.push(Instr::Bne { rs1: x(21), rs2: ZERO, offset: off });
+
+        // Next row (skip the rows owned by other cores).
+        p.push(Instr::Add { rd: x(22), rs1: x(22), rs2: x(24) });
+        p.push(Instr::Addi { rd: x(20), rs1: x(20), imm: -1 });
+        let off = row_loop_start - p.len() as i32;
+        p.push(Instr::Bne { rs1: x(20), rs2: ZERO, offset: off });
+
+        p.push(Instr::Halt);
+        p
+    }
+
+    // ------------------------------------------------------ harness
+
+    /// Pack inputs, run on a simulated cluster, decode C.
+    /// `a` is M×K and `b` is K×N, both row-major f64 (quantized to the
+    /// source format on packing).
+    pub fn run(&self, a: &[f64], b: &[f64]) -> GemmResult {
+        let src = self.kind.src_fmt();
+        let dst = self.kind.dst_fmt();
+        let a_pack = pack_matrix(a, self.m, self.k, src, MatrixOrder::RowMajor);
+        let b_pack = pack_matrix_ld(b, self.k, self.n, src, self.kind.b_order(), self.b_ld());
+
+        // The simulated TCDM gets a little headroom over the paper's
+        // 128 kB so the two largest problems still fit WITH the
+        // anti-aliasing padding; feasibility (Table II) is checked on
+        // the logical footprint.
+        let cfg = ClusterCfg {
+            n_cores: self.n_cores as u32,
+            tcdm_size: (136 * 1024).max((self.footprint_padded() as u32 + 4095) & !4095),
+            // GEMM kernels never touch global memory; don't allocate
+            // (and memset) the default 16 MiB per run.
+            global_size: 4096,
+            ..ClusterCfg::default()
+        };
+        assert!(
+            self.footprint() <= 128 * 1024,
+            "GEMM {} does not fit the paper's 128 kB TCDM",
+            self.size_label(),
+        );
+        let mut cl = Cluster::new(cfg, |id| self.program(id));
+        cl.store_bytes(self.a_base(), &a_pack);
+        cl.store_bytes(self.b_base(), &b_pack);
+
+        let cycles = cl.run(200_000_000);
+        let c_bytes = cl.load_bytes(self.c_base(), self.m * self.n * self.dst_bytes());
+        let c = unpack_matrix(&c_bytes, self.m, self.n, dst, MatrixOrder::RowMajor);
+        GemmResult { cycles, c, flops: self.flops(), stats: cl.stats() }
+    }
+}
+
+fn align64(a: u64) -> u64 {
+    (a + 63) & !63
+}
+
+/// Emit an SSR config write: `li x5, value; scfgwi x5, streamer*32+reg`.
+fn scfg(p: &mut Vec<Instr>, streamer: u16, reg: u16, value: i64) {
+    li(p, x(5), value);
+    p.push(Instr::ScfgWi { rs1: x(5), cfg: streamer * 32 + reg });
+}
+
+/// Emit `li rd, value` (addi, or lui+addi).
+pub(crate) fn li(p: &mut Vec<Instr>, rd: Reg, value: i64) {
+    let v = value as i32;
+    if (-2048..2048).contains(&v) {
+        p.push(Instr::Addi { rd, rs1: ZERO, imm: v });
+    } else {
+        let hi = (v + 0x800) >> 12;
+        let lo = v - (hi << 12);
+        p.push(Instr::Lui { rd, imm: hi });
+        if lo != 0 {
+            p.push(Instr::Addi { rd, rs1: rd, imm: lo });
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Host-side matrix packing: `f64` matrices quantized into minifloat
+//! encodings and laid out in TCDM the way the kernels stream them.
+
+use crate::formats::FpFormat;
+use crate::softfloat::{from_f64, to_f64, RoundingMode};
+
+/// Storage order for packing.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MatrixOrder {
+    /// Row-major (`data[r][c]` at `r*cols + c`).
+    RowMajor,
+    /// Column-major (`data[r][c]` at `c*rows + r`).
+    ColMajor,
+}
+
+/// Quantize `data` (rows×cols, row-major f64) into `fmt` encodings
+/// packed in the given order. Returns raw bytes (little-endian lanes).
+pub fn pack_matrix(data: &[f64], rows: usize, cols: usize, fmt: FpFormat, order: MatrixOrder) -> Vec<u8> {
+    let ld = match order {
+        MatrixOrder::RowMajor => cols,
+        MatrixOrder::ColMajor => rows,
+    };
+    pack_matrix_ld(data, rows, cols, fmt, order, ld)
+}
+
+/// [`pack_matrix`] with an explicit leading dimension `ld` (elements
+/// per stored major line, ≥ the logical extent). Padding elements are
+/// zero — GEMM kernels pad the leading dimension so that major lines do
+/// not alias onto the same TCDM bank group (§IV-B kernels do the same).
+pub fn pack_matrix_ld(
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+    fmt: FpFormat,
+    order: MatrixOrder,
+    ld: usize,
+) -> Vec<u8> {
+    assert_eq!(data.len(), rows * cols);
+    let w = fmt.width() as usize / 8;
+    let lines = match order {
+        MatrixOrder::RowMajor => {
+            assert!(ld >= cols);
+            rows
+        }
+        MatrixOrder::ColMajor => {
+            assert!(ld >= rows);
+            cols
+        }
+    };
+    let mut out = vec![0u8; lines * ld * w];
+    for r in 0..rows {
+        for c in 0..cols {
+            let bits = from_f64(data[r * cols + c], fmt, RoundingMode::Rne);
+            let idx = match order {
+                MatrixOrder::RowMajor => r * ld + c,
+                MatrixOrder::ColMajor => c * ld + r,
+            };
+            out[idx * w..(idx + 1) * w].copy_from_slice(&bits.to_le_bytes()[..w]);
+        }
+    }
+    out
+}
+
+/// Decode a packed matrix back to f64 (row-major output).
+pub fn unpack_matrix(bytes: &[u8], rows: usize, cols: usize, fmt: FpFormat, order: MatrixOrder) -> Vec<f64> {
+    let w = fmt.width() as usize / 8;
+    assert!(bytes.len() >= rows * cols * w);
+    let mut out = vec![0f64; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let idx = match order {
+                MatrixOrder::RowMajor => r * cols + c,
+                MatrixOrder::ColMajor => c * rows + r,
+            };
+            let mut buf = [0u8; 8];
+            buf[..w].copy_from_slice(&bytes[idx * w..(idx + 1) * w]);
+            out[r * cols + c] = to_f64(u64::from_le_bytes(buf), fmt);
+        }
+    }
+    out
+}
+
+/// Quantize a host matrix to the grid of `fmt` (RNE), staying in f64 —
+/// what the kernel actually computes on after packing.
+pub fn quantize_f64(data: &[f64], fmt: FpFormat) -> Vec<f64> {
+    data.iter().map(|&x| to_f64(from_f64(x, fmt, RoundingMode::Rne), fmt)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP16, FP64, FP8};
+
+    #[test]
+    fn pack_unpack_roundtrip_row_major() {
+        let data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let p = pack_matrix(&data, 2, 3, FP16, MatrixOrder::RowMajor);
+        assert_eq!(p.len(), 12);
+        assert_eq!(unpack_matrix(&p, 2, 3, FP16, MatrixOrder::RowMajor), data);
+    }
+
+    #[test]
+    fn col_major_transposes_layout() {
+        let data = vec![1.0, 2.0, 3.0, 4.0];
+        let p = pack_matrix(&data, 2, 2, FP64, MatrixOrder::ColMajor);
+        // Column-major order: a00, a10, a01, a11.
+        let vals: Vec<f64> =
+            p.chunks(8).map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap()))).collect();
+        assert_eq!(vals, vec![1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(unpack_matrix(&p, 2, 2, FP64, MatrixOrder::ColMajor), data);
+    }
+
+    #[test]
+    fn quantization_snaps_to_grid() {
+        let q = quantize_f64(&[1.1, 0.3], FP8);
+        assert_eq!(q, vec![1.0, 0.3125]);
+    }
+}

@@ -1,0 +1,33 @@
+//! GEMM kernel generators (§IV-B).
+//!
+//! The paper implements "a collection of FMA- and ExSdotp-based GEMM
+//! kernels for different formats and problem sizes ... compiled with an
+//! extended LLVM-12 using intrinsics", all built on SSR + FREP. We
+//! reproduce the same kernel *structure* as instruction-sequence
+//! generators:
+//!
+//! * every core owns the output rows `i ≡ core_id (mod 8)`;
+//! * the SSRs are configured **once** per core with 3-D/4-D affine
+//!   patterns covering the whole row sweep (`A` via `ft0` with element
+//!   repetition, `B` via `ft1`);
+//! * the inner loop is a single `frep` over `U` independent
+//!   accumulators (one per unrolled output column), so the 3-cycle FPU
+//!   latency is hidden without any branch or load instruction;
+//! * the epilogue reduces packed accumulator lanes with `vsum` and
+//!   stores `C` — the part whose cost the expanding ExSdotp kernels
+//!   halve relative to non-expanding SIMD FMA kernels (§IV-B's ~10%).
+//!
+//! `C = A·B` with `A: M×K` row-major, `B: K×N` column-major for packed
+//! kernels (row-major for the scalar FP64 kernel), `C: M×N` row-major.
+//! GEMM sizes are labeled `M×N` with `K = M`, matching Table II (the
+//! memory-footprint arithmetic only works out under this reading).
+
+pub mod gemm;
+pub mod layout;
+pub mod reference;
+#[cfg(test)]
+mod tests;
+
+pub use gemm::{GemmKernel, GemmKind};
+pub use layout::{pack_matrix, unpack_matrix, MatrixOrder};
+pub use reference::{kernel_reference, reference_gemm_f64};

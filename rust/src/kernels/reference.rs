@@ -1,0 +1,132 @@
+//! Bit-exact references for the GEMM kernels.
+//!
+//! [`kernel_reference`] replays the *identical* accumulation order and
+//! arithmetic units the generated kernel uses (per-lane partial sums,
+//! vsum reduction tree, single rounding per ExSdotp), so a simulated run
+//! must match it **bit for bit** — this pins down the SSR address
+//! patterns and the whole data-movement pipeline, independent of FP
+//! error tolerances. [`reference_gemm_f64`] is the loose oracle: plain
+//! f64 GEMM for relative-error sanity bounds.
+
+use super::gemm::{GemmKind, GemmKernel};
+use super::layout::quantize_f64;
+use crate::exsdotp::simd::{lane, set_lane, SimdExSdotp};
+use crate::formats::FP64;
+use crate::isa::instr::{OpWidth, ScalarFmt};
+use crate::softfloat::{self, from_f64, to_f64, RoundingMode};
+
+/// Plain f64 GEMM (C = A·B), row-major.
+pub fn reference_gemm_f64(a: &[f64], b: &[f64], m: usize, n: usize, k: usize) -> Vec<f64> {
+    let mut c = vec![0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Bit-exact replay of the kernel's accumulation order. Inputs are the
+/// same f64 matrices handed to [`GemmKernel::run`]; output is C decoded
+/// to f64, which must equal the simulated C exactly.
+pub fn kernel_reference(kern: &GemmKernel, a: &[f64], b: &[f64]) -> Vec<f64> {
+    let src = kern.kind.src_fmt();
+    let (m, n, k) = (kern.m, kern.n, kern.k);
+    let aq = quantize_f64(a, src);
+    let bq = quantize_f64(b, src);
+    let rm = RoundingMode::Rne;
+    let mut c = vec![0f64; m * n];
+
+    match kern.kind {
+        GemmKind::FmaF64 => {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0u64; // +0.0
+                    for kk in 0..k {
+                        let av = aq[i * k + kk].to_bits();
+                        let bv = bq[kk * n + j].to_bits();
+                        acc = softfloat::fma(FP64, av, bv, acc, rm);
+                    }
+                    c[i * n + j] = f64::from_bits(acc);
+                }
+            }
+        }
+        GemmKind::FmaSimd(fmt) => {
+            // Lane-parallel partial sums over k, then the vsum tree.
+            let l = kern.kind.lanes();
+            let f = src;
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0u64; // packed lanes, all +0.0
+                    for kc in 0..k / l {
+                        let mut aw = 0u64;
+                        let mut bw = 0u64;
+                        for lane_i in 0..l {
+                            let kk = kc * l + lane_i;
+                            aw |= from_f64(aq[i * k + kk], f, rm) << (lane_i as u32 * f.width());
+                            bw |= from_f64(bq[kk * n + j], f, rm) << (lane_i as u32 * f.width());
+                        }
+                        acc = lanewise_fma(f, aw, bw, acc, rm);
+                    }
+                    c[i * n + j] = vsum_reduce(kern.kind, acc, rm);
+                    let _ = fmt;
+                }
+            }
+        }
+        GemmKind::ExSdotp(w) => {
+            let l = kern.kind.lanes();
+            let simd = SimdExSdotp::new(src, kern.kind.dst_fmt());
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0u64;
+                    for kc in 0..k / l {
+                        let mut aw = 0u64;
+                        let mut bw = 0u64;
+                        for lane_i in 0..l {
+                            let kk = kc * l + lane_i;
+                            aw |= from_f64(aq[i * k + kk], src, rm) << (lane_i as u32 * src.width());
+                            bw |= from_f64(bq[kk * n + j], src, rm) << (lane_i as u32 * src.width());
+                        }
+                        acc = simd.exsdotp(aw, bw, acc, rm);
+                    }
+                    c[i * n + j] = vsum_reduce(kern.kind, acc, rm);
+                    let _ = w;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Lanewise FMA over packed words (mirrors the PE's vectorial FMA).
+fn lanewise_fma(f: crate::formats::FpFormat, a: u64, b: u64, c: u64, rm: RoundingMode) -> u64 {
+    let w = f.width();
+    let mut out = 0u64;
+    for i in 0..f.lanes_in_64() {
+        out = set_lane(out, i, w, softfloat::fma(f, lane(a, i, w), lane(b, i, w), lane(c, i, w), rm));
+    }
+    out
+}
+
+/// The kernel's epilogue reduction: fold packed accumulator lanes with
+/// the same `vsum` tree the generated code uses; decode lane 0.
+fn vsum_reduce(kind: GemmKind, acc: u64, rm: RoundingMode) -> f64 {
+    match kind {
+        GemmKind::FmaF64 => f64::from_bits(acc),
+        GemmKind::FmaSimd(ScalarFmt::S) | GemmKind::ExSdotp(OpWidth::HtoS) => {
+            let unit = SimdExSdotp::new(crate::formats::FP16, crate::formats::FP32);
+            let t = unit.vsum(acc, 0, rm);
+            to_f64(lane(t, 0, 32), crate::formats::FP32)
+        }
+        GemmKind::FmaSimd(_) | GemmKind::ExSdotp(OpWidth::BtoH) => {
+            let unit = SimdExSdotp::new(crate::formats::FP8, crate::formats::FP16);
+            let t = unit.vsum(acc, 0, rm);
+            let t2 = unit.vsum(t, 0, rm);
+            to_f64(lane(t2, 0, 16), crate::formats::FP16)
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! # minifloat-nn
+//!
+//! Reproduction of **"MiniFloat-NN and ExSdotp: An ISA Extension and a
+//! Modular Open Hardware Unit for Low-Precision Training on RISC-V cores"**
+//! (Bertaccini, Paulin, Fischer, Mach, Benini — 2022).
+//!
+//! The crate models the paper's full hardware/software stack:
+//!
+//! * [`formats`] — parametric floating-point format descriptors (FP64,
+//!   FP32, FP16, FP16alt, FP8, FP8alt and user-defined minifloats).
+//! * [`softfloat`] — bit-accurate IEEE-754 emulation for any format:
+//!   add/mul/FMA/expanding-FMA, casts, comparisons, all five RISC-V
+//!   rounding modes.
+//! * [`exsdotp`] — the paper's core contribution: the fused expanding
+//!   sum-of-dot-product datapath (§III-B), the ExVsum/Vsum reuse of the
+//!   same datapath (§III-C), the discrete two-ExFMA-cascade baseline, and
+//!   the 64-bit SIMD wrapper (§III-D).
+//! * [`fpu`] — the extended-FPnew model: operation groups, pipeline
+//!   depths, per-op bookkeeping used by the timing and energy models.
+//! * [`isa`] — the MiniFloat-NN RISC-V ISA extension: instruction forms,
+//!   32-bit encodings, assembler/disassembler, FP CSR with the
+//!   `src_is_alt` / `dst_is_alt` bits (§III-E).
+//! * [`core`] — the Snitch PE model: pseudo dual-issue sequencer, FP
+//!   scoreboard, SSR stream semantic registers, FREP hardware loop.
+//! * [`cluster`] — the 8-compute-core + DMA-core cluster sharing a
+//!   32-bank scratchpad (TCDM) with bank-conflict arbitration (Fig. 6).
+//! * [`kernels`] — GEMM program generators (FMA-based and ExSdotp-based)
+//!   mirroring the paper's SSR+FREP kernel structure (§IV-B).
+//! * [`area`] — parametric gate-count area/timing model (Fig. 7).
+//! * [`energy`] — per-op energy model (Table III, §IV-C).
+//! * [`accuracy`] — the Gaussian dot-product accumulation accuracy
+//!   harness (Table IV).
+//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) from Rust.
+//! * [`coordinator`] — the L3 training driver: batching, step loop,
+//!   metrics for the end-to-end low-precision-training workload.
+//!
+//! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
+//! reproduced tables and figures.
+
+pub mod accuracy;
+pub mod area;
+pub mod cluster;
+pub mod coordinator;
+pub mod core;
+pub mod energy;
+pub mod exsdotp;
+pub mod formats;
+pub mod fpu;
+pub mod isa;
+pub mod kernels;
+pub mod report;
+pub mod runtime;
+pub mod softfloat;
+pub mod util;
+pub mod wide;
+
+pub use formats::{FpFormat, FP16, FP16ALT, FP32, FP64, FP8, FP8ALT};
+pub use softfloat::{RoundingMode, SoftFloat};

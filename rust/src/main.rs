@@ -1,0 +1,92 @@
+//! `repro` — the reproduction CLI.
+//!
+//! One subcommand per paper table/figure plus the end-to-end training
+//! driver. Run `repro help` for the list.
+
+use anyhow::Result;
+use minifloat_nn::coordinator::{Precision, Trainer};
+use minifloat_nn::report;
+use minifloat_nn::util::cli::Args;
+
+const HELP: &str = "\
+repro — reproduction of 'MiniFloat-NN and ExSdotp' (Bertaccini et al., 2022)
+
+USAGE: repro <command> [options]
+
+Paper artifacts:
+  table1            supported format combinations of the ExSdotp unit
+  table2            GEMM cycle counts on the simulated 8-core cluster
+  table3            FPU/cluster performance + energy-efficiency rows
+  table4            accuracy of ExSdotp vs ExFMA cascade vs FP64 golden
+  fig7a             fused-vs-cascade area/critical-path model
+  fig7b             extended-FPU area breakdown + cluster area
+  fig8              FLOP/cycle chart for all kernels and sizes
+  formats           Fig. 1 format table
+  fig2              register-file utilization argument
+  all               everything above, in order
+
+End-to-end (three-layer stack, artifacts required — `make artifacts`):
+  train             train the HFP8 MLP via PJRT   [--steps N] [--precision hfp8|fp32]
+                    [--seed S] [--artifacts DIR] [--quiet]
+
+Options:
+  --seed S          RNG seed for simulated workloads (default 42)
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let seed: u64 = args.get("seed", 42);
+    match args.command.as_deref() {
+        Some("table1") => print!("{}", report::table1_text()),
+        Some("table2") => {
+            let rows = report::run_table2(seed);
+            print!("{}", report::table2_text(&rows));
+        }
+        Some("table3") => print!("{}", report::table3_text(seed)),
+        Some("table4") => print!("{}", report::table4_text(seed)),
+        Some("fig7a") => print!("{}", report::fig7a_text()),
+        Some("fig7b") => print!("{}", report::fig7b_text()),
+        Some("fig8") => {
+            let rows = report::run_table2(seed);
+            print!("{}", report::fig8_text(&rows));
+        }
+        Some("formats") => print!("{}", report::formats_text()),
+        Some("fig2") => print!("{}", report::fig2_text()),
+        Some("all") => {
+            print!("{}", report::formats_text());
+            println!();
+            print!("{}", report::fig2_text());
+            println!();
+            print!("{}", report::table1_text());
+            println!();
+            let rows = report::run_table2(seed);
+            print!("{}", report::table2_text(&rows));
+            println!();
+            print!("{}", report::fig8_text(&rows));
+            println!();
+            print!("{}", report::fig7a_text());
+            println!();
+            print!("{}", report::fig7b_text());
+            println!();
+            print!("{}", report::table3_text(seed));
+            println!();
+            print!("{}", report::table4_text(seed));
+        }
+        Some("train") => {
+            let steps: usize = args.get("steps", 300);
+            let dir = args.get_str("artifacts", "artifacts");
+            let precision = match args.get_str("precision", "hfp8").as_str() {
+                "fp32" => Precision::Fp32,
+                _ => Precision::Hfp8,
+            };
+            let log_every = if args.has_flag("quiet") { 0 } else { 20 };
+            println!("training ({precision:?}) for {steps} steps on the spiral task...");
+            let mut tr = Trainer::new(&dir, precision, seed)?;
+            let final_loss = tr.train(steps, log_every)?;
+            let acc = tr.accuracy()?;
+            println!("final loss {final_loss:.4}   accuracy {:.1}%", acc * 100.0);
+        }
+        _ => print!("{HELP}"),
+    }
+    Ok(())
+}

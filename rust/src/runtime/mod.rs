@@ -1,0 +1,155 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! Rust — Python never runs on this path.
+//!
+//! The interchange format is **HLO text** (`artifacts/*.hlo.txt`),
+//! produced once by `python/compile/aot.py`. Text, not serialized
+//! protos: jax ≥ 0.5 emits 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids
+//! (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A tensor: row-major f32 data + shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    /// Row-major data.
+    pub data: Vec<f32>,
+    /// Dimensions (empty = scalar).
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// Build from data + shape (checked).
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>().max(1), "shape/data mismatch");
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    /// A zero tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![0.0; shape.iter().product::<usize>().max(1)], shape: shape.to_vec() }
+    }
+
+    /// Total elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        Ok(Tensor { data: lit.to_vec::<f32>()?, shape: dims })
+    }
+}
+
+/// The PJRT client wrapper (CPU).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned() })
+    }
+
+    /// Load `name.hlo.txt` from an artifacts directory.
+    pub fn load_artifact(&self, dir: impl AsRef<Path>, name: &str) -> Result<Executable> {
+        let mut p = PathBuf::from(dir.as_ref());
+        p.push(format!("{name}.hlo.txt"));
+        self.load(p)
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (diagnostics).
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs; returns the flattened tuple of
+    /// f32 tensor outputs (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("gemm_fp8_fp16.hlo.txt").exists().then_some(p)
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.len(), 4);
+        let z = Tensor::zeros(&[3, 5]);
+        assert_eq!(z.data.len(), 15);
+    }
+
+    #[test]
+    fn gemm_artifact_executes_and_matches_quantized_semantics() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_artifact(&dir, "gemm_fp8_fp16").unwrap();
+
+        // Identity × small values: quantization (FP8) must show through.
+        let n = 32;
+        let mut a = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            a.data[i * n + i] = 1.0;
+        }
+        let mut b = Tensor::zeros(&[n, n]);
+        for (i, v) in b.data.iter_mut().enumerate() {
+            *v = 0.1 + (i % 7) as f32 * 0.31; // values NOT on the FP8 grid
+        }
+        let out = exe.run(&[a, b.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![n, n]);
+        // Each output element = FP8-quantized b element (identity A).
+        use crate::formats::FP8;
+        use crate::softfloat::{from_f64, to_f64, RoundingMode};
+        for (o, x) in out[0].data.iter().zip(&b.data) {
+            let q = to_f64(from_f64(*x as f64, FP8, RoundingMode::Rne), FP8) as f32;
+            assert_eq!(*o, q, "runtime GEMM output must carry FP8-quantized operand {x}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Bridges between host `f64` and arbitrary-format encodings.
+//!
+//! `to_f64` is exact for every format up to 64 bits wide (FP64's
+//! significand and exponent range dominate all of them); `from_f64`
+//! performs a single correct rounding into the target format. These are
+//! the I/O boundary of the emulation — used to initialize matrices and
+//! read back results, never inside an emulated datapath.
+
+use super::ops::cast;
+use super::round::RoundingMode;
+use crate::formats::{FpFormat, FP64};
+
+/// Decode `bits` (format `fmt`) to the exactly equal `f64`.
+///
+/// Exact because every FP8/FP16/FP32 value is representable in FP64
+/// (widening casts are exact).
+pub fn to_f64(bits: u64, fmt: FpFormat) -> f64 {
+    if fmt == FP64 {
+        return f64::from_bits(bits);
+    }
+    f64::from_bits(cast(fmt, FP64, bits, RoundingMode::Rne))
+}
+
+/// Encode `x` into `fmt` with one correct rounding in mode `rm`.
+pub fn from_f64(x: f64, fmt: FpFormat, rm: RoundingMode) -> u64 {
+    if fmt == FP64 {
+        return x.to_bits();
+    }
+    cast(FP64, fmt, x.to_bits(), rm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP16, FP32, FP8, FP8ALT, PAPER_FORMATS};
+
+    #[test]
+    fn f64_roundtrip_exact_for_all_narrow_encodings() {
+        // Every finite narrow encoding → f64 → back must be the identity.
+        for fmt in PAPER_FORMATS {
+            if fmt.width() > 16 {
+                continue;
+            }
+            for bits in 0..(1u64 << fmt.width()) {
+                if fmt.is_nan(bits) {
+                    continue;
+                }
+                let x = to_f64(bits, fmt);
+                let back = from_f64(x, fmt, RoundingMode::Rne);
+                assert_eq!(back, bits, "fmt={} bits={bits:#x} x={x}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(to_f64(0x3c00, FP16), 1.0);
+        assert_eq!(to_f64(0xc000, FP16), -2.0);
+        assert_eq!(to_f64(0x3c, FP8), 1.0); // e5m2: 0 01111 00
+        assert_eq!(to_f64(0x38, FP8ALT), 1.0); // e4m3: 0 0111 000
+        assert_eq!(from_f64(1.5, FP32, RoundingMode::Rne), 0x3fc0_0000);
+        // FP8 max finite = 1.75 * 2^15 = 57344.
+        assert_eq!(to_f64(FP8.max_finite(false), FP8), 57344.0);
+        // FP8alt max finite = 1.875 * 2^7 = 240.
+        assert_eq!(to_f64(FP8ALT.max_finite(false), FP8ALT), 240.0);
+        // FP16 min subnormal = 2^-24.
+        assert_eq!(to_f64(1, FP16), 2.0_f64.powi(-24));
+    }
+
+    #[test]
+    fn f32_agrees_with_native() {
+        for x in [0.0f32, -0.0, 1.0, -1.5, 3.141592653589793, 1e-40, f32::MAX, f32::MIN_POSITIVE, 1e38] {
+            assert_eq!(to_f64(x.to_bits() as u64, FP32), x as f64);
+            assert_eq!(from_f64(x as f64, FP32, RoundingMode::Rne), x.to_bits() as u64);
+        }
+    }
+
+    #[test]
+    fn rounding_into_narrow_formats() {
+        // 1.1 is not representable in FP8 (e5m2): nearest values are 1.0
+        // and 1.25 → RNE picks 1.0.
+        assert_eq!(to_f64(from_f64(1.1, FP8, RoundingMode::Rne), FP8), 1.0);
+        assert_eq!(to_f64(from_f64(1.1, FP8, RoundingMode::Rup), FP8), 1.25);
+        // Overflow saturates or goes to inf by mode.
+        assert_eq!(from_f64(1e6, FP8, RoundingMode::Rne), FP8.infinity(false));
+        assert_eq!(from_f64(1e6, FP8, RoundingMode::Rtz), FP8.max_finite(false));
+    }
+}

@@ -1,0 +1,84 @@
+//! Bit-accurate software floating-point for arbitrary [`FpFormat`]s.
+//!
+//! This is the numerical substrate of the reproduction: every FPU
+//! operation the MiniFloat-NN PE executes (§III) is emulated here with
+//! full IEEE-754 semantics — subnormals, signed zeros, infinities, NaN
+//! propagation, and all five RISC-V rounding modes.
+//!
+//! Operations are *single-rounded*: internal computation is exact (wide
+//! integer significands + sticky bits) and rounding happens once at the
+//! end, exactly like the hardware units they model. The expanding FMA
+//! ([`ops::ex_fma`]) multiplies in a narrow source format and
+//! adds/rounds in a wider destination format, mirroring the ExFMA units
+//! of FPnew that the paper uses as its baseline (§II-B).
+//!
+//! The ExSdotp *fused* three-term datapath lives in [`crate::exsdotp`];
+//! it shares [`round::round_pack`] with this module so the two rounding
+//! behaviours (once vs. twice) can be compared apples-to-apples, which
+//! is precisely the paper's Table IV experiment.
+
+pub mod convert;
+pub mod ops;
+pub mod round;
+#[cfg(test)]
+mod tests;
+pub mod unpack;
+
+pub use convert::{from_f64, to_f64};
+pub use ops::{add, cast, cmp, ex_fma, fma, max, min, mul, sub, FpClass};
+pub use round::{round_pack, RoundingMode};
+pub use unpack::{unpack, Class, Unpacked};
+
+use crate::formats::FpFormat;
+
+/// Convenience handle binding a format to the free-function API.
+///
+/// ```no_run
+/// use minifloat_nn::{SoftFloat, RoundingMode, FP16};
+/// let sf = SoftFloat::new(FP16);
+/// let one = sf.from_f64(1.0);
+/// let two = sf.add(one, one, RoundingMode::Rne);
+/// assert_eq!(sf.to_f64(two), 2.0);
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct SoftFloat {
+    /// The bound format.
+    pub fmt: FpFormat,
+}
+
+impl SoftFloat {
+    /// Bind a format.
+    pub const fn new(fmt: FpFormat) -> Self {
+        Self { fmt }
+    }
+
+    /// Encode an `f64` into this format (correctly rounded, RNE).
+    pub fn from_f64(&self, x: f64) -> u64 {
+        convert::from_f64(x, self.fmt, RoundingMode::Rne)
+    }
+
+    /// Decode to `f64` (exact for all formats up to FP64).
+    pub fn to_f64(&self, bits: u64) -> f64 {
+        convert::to_f64(bits, self.fmt)
+    }
+
+    /// IEEE addition.
+    pub fn add(&self, a: u64, b: u64, rm: RoundingMode) -> u64 {
+        ops::add(self.fmt, a, b, rm)
+    }
+
+    /// IEEE subtraction.
+    pub fn sub(&self, a: u64, b: u64, rm: RoundingMode) -> u64 {
+        ops::sub(self.fmt, a, b, rm)
+    }
+
+    /// IEEE multiplication.
+    pub fn mul(&self, a: u64, b: u64, rm: RoundingMode) -> u64 {
+        ops::mul(self.fmt, a, b, rm)
+    }
+
+    /// Fused multiply-add `a*b + c`, single rounding.
+    pub fn fma(&self, a: u64, b: u64, c: u64, rm: RoundingMode) -> u64 {
+        ops::fma(self.fmt, a, b, c, rm)
+    }
+}

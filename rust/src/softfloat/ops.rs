@@ -1,0 +1,353 @@
+//! IEEE-754 operations over arbitrary formats.
+//!
+//! All operations unpack exactly, compute exactly on wide integer
+//! significands, and round once via [`round_pack`]. The expanding FMA
+//! ([`ex_fma`]) is the paper's ExFMA baseline: sources in a narrow
+//! format, addend/result in a wider one, one rounding per FMA — so a
+//! *cascade* of two `ex_fma` calls rounds twice, which is exactly the
+//! behaviour the fused ExSdotp unit improves on (§II-B, Fig. 3).
+
+use super::round::{round_pack, RoundingMode};
+use super::unpack::{unpack, Class, Unpacked};
+use crate::formats::FpFormat;
+use std::cmp::Ordering;
+
+/// Working normalization point: significand MSB is placed at this bit.
+/// 120 leaves room for a 106-bit FP64 product plus guard bits in a u128.
+const NORM_BIT: u32 = 120;
+
+/// RISC-V `fclass`-style value classification.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FpClass {
+    /// −∞
+    NegInf,
+    /// Negative normal.
+    NegNormal,
+    /// Negative subnormal.
+    NegSubnormal,
+    /// −0
+    NegZero,
+    /// +0
+    PosZero,
+    /// Positive subnormal.
+    PosSubnormal,
+    /// Positive normal.
+    PosNormal,
+    /// +∞
+    PosInf,
+    /// Signaling NaN (MSB of mantissa clear).
+    SignalingNan,
+    /// Quiet NaN.
+    QuietNan,
+}
+
+/// Classify an encoding (RISC-V `fclass` semantics).
+pub fn classify(fmt: FpFormat, bits: u64) -> FpClass {
+    let u = unpack(fmt, bits);
+    match u.class {
+        Class::NaN => {
+            let (_, _, man) = fmt.split(bits & fmt.width_mask());
+            if man >> (fmt.man_bits - 1) & 1 == 1 {
+                FpClass::QuietNan
+            } else {
+                FpClass::SignalingNan
+            }
+        }
+        Class::Inf => {
+            if u.sign {
+                FpClass::NegInf
+            } else {
+                FpClass::PosInf
+            }
+        }
+        Class::Zero => {
+            if u.sign {
+                FpClass::NegZero
+            } else {
+                FpClass::PosZero
+            }
+        }
+        Class::Subnormal => {
+            if u.sign {
+                FpClass::NegSubnormal
+            } else {
+                FpClass::PosSubnormal
+            }
+        }
+        Class::Normal => {
+            if u.sign {
+                FpClass::NegNormal
+            } else {
+                FpClass::PosNormal
+            }
+        }
+    }
+}
+
+/// A finite nonzero value normalized so the significand MSB is at
+/// [`NORM_BIT`]: `value = (-1)^sign * mant * 2^(e_msb - NORM_BIT)`.
+#[derive(Clone, Copy, Debug)]
+struct Norm {
+    sign: bool,
+    e_msb: i32,
+    mant: u128,
+}
+
+/// Normalize an exact (sign, exp, mant≠0) triple.
+fn normalize(sign: bool, exp: i32, mant: u128) -> Norm {
+    debug_assert!(mant != 0);
+    let msb = 127 - mant.leading_zeros();
+    let e_msb = exp + msb as i32;
+    let mant = if msb < NORM_BIT { mant << (NORM_BIT - msb) } else { mant >> (msb - NORM_BIT) };
+    // The right-shift branch is unreachable for inputs ≤ 120 bits, which
+    // covers every caller (products are ≤ 106 bits).
+    Norm { sign, e_msb, mant }
+}
+
+/// Exact signed addition of two normalized values. Returns
+/// `(sign, exp_of_lsb, mant, sticky)` ready for [`round_pack`]; a zero
+/// mant with `sticky=false` means an exact zero (sign decided by caller).
+fn add_norm(x: Norm, y: Norm) -> (bool, i32, u128, bool) {
+    // Order by magnitude.
+    let (big, small) = if (x.e_msb, x.mant) >= (y.e_msb, y.mant) { (x, y) } else { (y, x) };
+    let shift = (big.e_msb - small.e_msb) as u32;
+    let base = big.e_msb - NORM_BIT as i32; // weight of working LSB
+
+    let (small_aligned, sticky) = if shift == 0 {
+        (small.mant, false)
+    } else if shift > 126 {
+        (0u128, true)
+    } else {
+        (small.mant >> shift, small.mant & ((1u128 << shift) - 1) != 0)
+    };
+
+    if big.sign == small.sign {
+        // Magnitudes add; sum can carry one bit past NORM_BIT (fits).
+        (big.sign, base, big.mant + small_aligned, sticky)
+    } else {
+        // Magnitudes subtract. `big >= small_aligned` by construction.
+        // If sticky, the true small is slightly larger than its aligned
+        // truncation, so borrow one working ulp and keep sticky set.
+        let diff = big.mant - small_aligned - if sticky { 1 } else { 0 };
+        (big.sign, base, diff, sticky)
+    }
+}
+
+/// IEEE addition `a + b` in `fmt`.
+pub fn add(fmt: FpFormat, a: u64, b: u64, rm: RoundingMode) -> u64 {
+    let ua = unpack(fmt, a);
+    let ub = unpack(fmt, b);
+    if ua.is_nan() || ub.is_nan() {
+        return fmt.quiet_nan();
+    }
+    match (ua.is_inf(), ub.is_inf()) {
+        (true, true) => {
+            return if ua.sign == ub.sign { fmt.infinity(ua.sign) } else { fmt.quiet_nan() };
+        }
+        (true, false) => return fmt.infinity(ua.sign),
+        (false, true) => return fmt.infinity(ub.sign),
+        _ => {}
+    }
+    match (ua.is_zero(), ub.is_zero()) {
+        (true, true) => {
+            let sign = if ua.sign == ub.sign { ua.sign } else { rm == RoundingMode::Rdn };
+            return fmt.zero(sign);
+        }
+        (true, false) => return b & fmt.width_mask(),
+        (false, true) => return a & fmt.width_mask(),
+        _ => {}
+    }
+    let na = normalize(ua.sign, ua.exp, ua.mant);
+    let nb = normalize(ub.sign, ub.exp, ub.mant);
+    let (sign, exp, mant, sticky) = add_norm(na, nb);
+    if mant == 0 && !sticky {
+        return fmt.zero(rm == RoundingMode::Rdn);
+    }
+    round_pack(sign, exp, mant, sticky, fmt, rm)
+}
+
+/// IEEE subtraction `a - b` in `fmt`.
+pub fn sub(fmt: FpFormat, a: u64, b: u64, rm: RoundingMode) -> u64 {
+    let nb = (b ^ fmt.sign_mask()) & fmt.width_mask();
+    add(fmt, a, nb, rm)
+}
+
+/// IEEE multiplication `a * b` in `fmt`.
+pub fn mul(fmt: FpFormat, a: u64, b: u64, rm: RoundingMode) -> u64 {
+    ex_mul(fmt, fmt, a, b, rm)
+}
+
+/// Expanding multiplication: operands in `src`, result in `dst`.
+pub fn ex_mul(src: FpFormat, dst: FpFormat, a: u64, b: u64, rm: RoundingMode) -> u64 {
+    let ua = unpack(src, a);
+    let ub = unpack(src, b);
+    if ua.is_nan() || ub.is_nan() {
+        return dst.quiet_nan();
+    }
+    if (ua.is_inf() && ub.is_zero()) || (ua.is_zero() && ub.is_inf()) {
+        return dst.quiet_nan();
+    }
+    let sign = ua.sign ^ ub.sign;
+    if ua.is_inf() || ub.is_inf() {
+        return dst.infinity(sign);
+    }
+    if ua.is_zero() || ub.is_zero() {
+        return dst.zero(sign);
+    }
+    round_pack(sign, ua.exp + ub.exp, ua.mant * ub.mant, false, dst, rm)
+}
+
+/// Fused multiply-add `a*b + c`, everything in `fmt`, single rounding.
+pub fn fma(fmt: FpFormat, a: u64, b: u64, c: u64, rm: RoundingMode) -> u64 {
+    ex_fma(fmt, fmt, a, b, c, rm)
+}
+
+/// Expanding fused multiply-add: `a, b` in `src`; `c` and the result in
+/// `dst`; single rounding. This models one ExFMA unit (§II-B) — the
+/// paper's baseline building block whose cascade the ExSdotp replaces.
+pub fn ex_fma(src: FpFormat, dst: FpFormat, a: u64, b: u64, c: u64, rm: RoundingMode) -> u64 {
+    let ua = unpack(src, a);
+    let ub = unpack(src, b);
+    let uc = unpack(dst, c);
+    if ua.is_nan() || ub.is_nan() || uc.is_nan() {
+        return dst.quiet_nan();
+    }
+    if (ua.is_inf() && ub.is_zero()) || (ua.is_zero() && ub.is_inf()) {
+        return dst.quiet_nan();
+    }
+    let psign = ua.sign ^ ub.sign;
+    if ua.is_inf() || ub.is_inf() {
+        // Product is ±∞.
+        if uc.is_inf() && uc.sign != psign {
+            return dst.quiet_nan();
+        }
+        return dst.infinity(psign);
+    }
+    if uc.is_inf() {
+        return dst.infinity(uc.sign);
+    }
+    if ua.is_zero() || ub.is_zero() {
+        // Exact-zero product: result is c (with the 0+0 sign rule).
+        if uc.is_zero() {
+            let sign = if psign == uc.sign { psign } else { rm == RoundingMode::Rdn };
+            return dst.zero(sign);
+        }
+        return c & dst.width_mask();
+    }
+    let prod = normalize(psign, ua.exp + ub.exp, ua.mant * ub.mant);
+    if uc.is_zero() {
+        return round_pack(prod.sign, prod.e_msb - NORM_BIT as i32, prod.mant, false, dst, rm);
+    }
+    let nc = normalize(uc.sign, uc.exp, uc.mant);
+    let (sign, exp, mant, sticky) = add_norm(prod, nc);
+    if mant == 0 && !sticky {
+        return dst.zero(rm == RoundingMode::Rdn);
+    }
+    round_pack(sign, exp, mant, sticky, dst, rm)
+}
+
+/// Format conversion (RISC-V `fcvt` between FP formats), correctly
+/// rounded. Widening conversions are always exact.
+pub fn cast(from: FpFormat, to: FpFormat, bits: u64, rm: RoundingMode) -> u64 {
+    let u = unpack(from, bits);
+    match u.class {
+        Class::NaN => to.quiet_nan(),
+        Class::Inf => to.infinity(u.sign),
+        Class::Zero => to.zero(u.sign),
+        _ => round_pack(u.sign, u.exp, u.mant, false, to, rm),
+    }
+}
+
+/// IEEE comparison. `None` if unordered (either operand NaN).
+pub fn cmp(fmt: FpFormat, a: u64, b: u64) -> Option<Ordering> {
+    let ua = unpack(fmt, a);
+    let ub = unpack(fmt, b);
+    if ua.is_nan() || ub.is_nan() {
+        return None;
+    }
+    if ua.is_zero() && ub.is_zero() {
+        return Some(Ordering::Equal); // −0 == +0
+    }
+    Some(cmp_value(&ua, &ub))
+}
+
+fn cmp_value(ua: &Unpacked, ub: &Unpacked) -> Ordering {
+    match (ua.sign, ub.sign) {
+        (false, true) => return Ordering::Greater,
+        (true, false) => return Ordering::Less,
+        _ => {}
+    }
+    let mag = cmp_mag(ua, ub);
+    if ua.sign {
+        mag.reverse()
+    } else {
+        mag
+    }
+}
+
+fn cmp_mag(ua: &Unpacked, ub: &Unpacked) -> Ordering {
+    // Compare |a| vs |b| for finite (possibly zero) values.
+    if ua.is_zero() || ub.is_zero() {
+        return (!ua.is_zero() as u8).cmp(&(!ub.is_zero() as u8));
+    }
+    if ua.is_inf() || ub.is_inf() {
+        return (ua.is_inf() as u8).cmp(&(ub.is_inf() as u8));
+    }
+    let ea = ua.exp + 127 - ua.mant.leading_zeros() as i32;
+    let eb = ub.exp + 127 - ub.mant.leading_zeros() as i32;
+    ea.cmp(&eb).then_with(|| {
+        // Same MSB weight: align and compare significands.
+        let la = ua.mant.leading_zeros();
+        let lb = ub.mant.leading_zeros();
+        (ua.mant << la).cmp(&(ub.mant << lb))
+    })
+}
+
+/// RISC-V `fmin`: NaN-suppressing minimum with −0 < +0.
+pub fn min(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    minmax(fmt, a, b, true)
+}
+
+/// RISC-V `fmax`: NaN-suppressing maximum with −0 < +0.
+pub fn max(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    minmax(fmt, a, b, false)
+}
+
+fn minmax(fmt: FpFormat, a: u64, b: u64, want_min: bool) -> u64 {
+    let a = a & fmt.width_mask();
+    let b = b & fmt.width_mask();
+    match (fmt.is_nan(a), fmt.is_nan(b)) {
+        (true, true) => return fmt.quiet_nan(),
+        (true, false) => return b,
+        (false, true) => return a,
+        _ => {}
+    }
+    // −0/+0 ordering: treat sign-distinct zeros as ordered.
+    if fmt.is_zero(a) && fmt.is_zero(b) && fmt.sign(a) != fmt.sign(b) {
+        let neg = if fmt.sign(a) { a } else { b };
+        let pos = if fmt.sign(a) { b } else { a };
+        return if want_min { neg } else { pos };
+    }
+    let ord = cmp(fmt, a, b).expect("NaNs handled above");
+    let a_is_it = if want_min { ord != Ordering::Greater } else { ord != Ordering::Less };
+    if a_is_it {
+        a
+    } else {
+        b
+    }
+}
+
+/// Sign-injection ops (RISC-V `fsgnj`, `fsgnjn`, `fsgnjx`).
+pub fn sgnj(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    (a & !fmt.sign_mask() & fmt.width_mask()) | (b & fmt.sign_mask())
+}
+
+/// `fsgnjn`: a with negated sign of b.
+pub fn sgnjn(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    (a & !fmt.sign_mask() & fmt.width_mask()) | ((b ^ fmt.sign_mask()) & fmt.sign_mask())
+}
+
+/// `fsgnjx`: a with sign(a) xor sign(b).
+pub fn sgnjx(fmt: FpFormat, a: u64, b: u64) -> u64 {
+    (a & fmt.width_mask()) ^ (b & fmt.sign_mask())
+}

@@ -1,0 +1,267 @@
+//! The single shared rounding/packing step.
+//!
+//! All emulated units — scalar FPU ops, the ExFMA cascade baseline, and
+//! the fused ExSdotp datapath — terminate in [`round_pack`]: an exact
+//! (significand, exponent, sticky) triple is rounded once into a target
+//! [`FpFormat`]. Centralizing this guarantees that accuracy differences
+//! measured in Table IV come from the *datapath* (one rounding vs. two),
+//! not from inconsistent rounding implementations.
+
+use crate::formats::FpFormat;
+
+/// RISC-V `frm` rounding modes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RoundingMode {
+    /// Round to nearest, ties to even (`frm=000`).
+    Rne,
+    /// Round towards zero (`frm=001`).
+    Rtz,
+    /// Round down, towards −∞ (`frm=010`).
+    Rdn,
+    /// Round up, towards +∞ (`frm=011`).
+    Rup,
+    /// Round to nearest, ties to max magnitude (`frm=100`).
+    Rmm,
+}
+
+impl RoundingMode {
+    /// RISC-V `frm` encoding.
+    pub const fn to_frm(self) -> u32 {
+        match self {
+            RoundingMode::Rne => 0b000,
+            RoundingMode::Rtz => 0b001,
+            RoundingMode::Rdn => 0b010,
+            RoundingMode::Rup => 0b011,
+            RoundingMode::Rmm => 0b100,
+        }
+    }
+
+    /// Decode a RISC-V `frm` field.
+    pub const fn from_frm(frm: u32) -> Option<Self> {
+        match frm {
+            0b000 => Some(RoundingMode::Rne),
+            0b001 => Some(RoundingMode::Rtz),
+            0b010 => Some(RoundingMode::Rdn),
+            0b011 => Some(RoundingMode::Rup),
+            0b100 => Some(RoundingMode::Rmm),
+            _ => None,
+        }
+    }
+
+    /// Should the magnitude be incremented, given the rounding digits?
+    ///
+    /// * `sign` — sign of the value being rounded
+    /// * `lsb` — least significant kept bit
+    /// * `round` — first dropped bit
+    /// * `sticky` — OR of all remaining dropped bits
+    #[inline]
+    pub fn increment(self, sign: bool, lsb: bool, round: bool, sticky: bool) -> bool {
+        match self {
+            RoundingMode::Rne => round && (sticky || lsb),
+            RoundingMode::Rtz => false,
+            RoundingMode::Rdn => sign && (round || sticky),
+            RoundingMode::Rup => !sign && (round || sticky),
+            RoundingMode::Rmm => round,
+        }
+    }
+
+    /// On overflow, does this mode saturate to max-finite instead of
+    /// producing infinity (per IEEE 754 §4.3 directed-rounding rules)?
+    #[inline]
+    pub fn overflow_to_max_finite(self, sign: bool) -> bool {
+        match self {
+            RoundingMode::Rne | RoundingMode::Rmm => false,
+            RoundingMode::Rtz => true,
+            RoundingMode::Rdn => !sign, // +overflow stays at +maxfinite
+            RoundingMode::Rup => sign,  // −overflow stays at −maxfinite
+        }
+    }
+}
+
+/// Round and pack an exact finite nonzero-or-zero magnitude into `fmt`.
+///
+/// The input value is `(-1)^sign * (mant + ε) * 2^exp` where `mant` is an
+/// unsigned significand of arbitrary position (not necessarily
+/// normalized), and `ε ∈ (0,1)` is present iff `sticky` is set (bits
+/// already discarded below the LSB weight of `mant`).
+///
+/// Handles normal/subnormal boundaries, overflow (to ±∞ or ±max-finite
+/// depending on mode), and total underflow (to ±0 or the minimum
+/// subnormal for directed modes).
+pub fn round_pack(sign: bool, exp: i32, mant: u128, sticky: bool, fmt: FpFormat, rm: RoundingMode) -> u64 {
+    if mant == 0 {
+        if !sticky {
+            return fmt.zero(sign);
+        }
+        // Magnitude is a pure sticky residue: strictly between 0 and one
+        // LSB of whatever grid — rounds to zero except in directed modes
+        // pointing away from zero.
+        return if rm.increment(sign, false, false, true) {
+            fmt.min_subnormal() | if sign { fmt.sign_mask() } else { 0 }
+        } else {
+            fmt.zero(sign)
+        };
+    }
+
+    let man_bits = fmt.man_bits;
+    let p = fmt.precision();
+    let msb = 127 - mant.leading_zeros() as i32; // position of MSB within mant
+    let e_msb = exp + msb; // value ∈ [2^e_msb, 2^(e_msb+1))
+
+    // LSB weight of the destination grid: normal grid follows the MSB,
+    // but never below the subnormal grid floor.
+    let lsb_w_normal = e_msb - (p as i32 - 1);
+    let lsb_w_floor = fmt.emin() - man_bits as i32;
+    let lsb_w = lsb_w_normal.max(lsb_w_floor);
+
+    // Align mant so that its LSB sits at lsb_w.
+    let shift = lsb_w - exp;
+    let (kept, round, sticky) = if shift <= 0 {
+        // Exact: shift left (there is always room: kept has ≤ p bits).
+        ((mant) << (-shift) as u32, false, sticky)
+    } else if shift as u32 > 127 {
+        (0u128, false, true) // everything dropped
+    } else {
+        let sh = shift as u32;
+        let kept = mant >> sh;
+        let dropped = mant & ((1u128 << sh) - 1);
+        let round = (dropped >> (sh - 1)) & 1 == 1;
+        let sticky_new = (dropped & ((1u128 << (sh - 1)) - 1)) != 0 || sticky;
+        (kept, round, sticky_new)
+    };
+
+    let mut kept = kept;
+    let mut lsb_w = lsb_w;
+    if rm.increment(sign, kept & 1 == 1, round, sticky) {
+        kept += 1;
+        if kept >> p != 0 {
+            // Carry out of the significand: renormalize.
+            kept >>= 1;
+            lsb_w += 1;
+        }
+    }
+
+    if kept == 0 {
+        return fmt.zero(sign);
+    }
+
+    if kept >> man_bits == 0 {
+        // Subnormal (LSB is pinned at the grid floor here by construction).
+        debug_assert_eq!(lsb_w, lsb_w_floor);
+        return fmt.assemble(sign, 0, kept as u64);
+    }
+
+    // Normal: kept has exactly p significant bits.
+    debug_assert_eq!(kept >> man_bits, 1, "kept must be normalized to p bits");
+    let e_res = lsb_w + man_bits as i32; // unbiased exponent
+    if e_res > fmt.emax() {
+        return if rm.overflow_to_max_finite(sign) {
+            fmt.max_finite(sign)
+        } else {
+            fmt.infinity(sign)
+        };
+    }
+    let exp_field = (e_res + fmt.bias()) as u64;
+    fmt.assemble(sign, exp_field, (kept as u64) & fmt.man_mask())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP16, FP32, FP8};
+
+    #[test]
+    fn exact_small_integers() {
+        // 1.0 in FP32: mant=1, exp=0.
+        assert_eq!(round_pack(false, 0, 1, false, FP32, RoundingMode::Rne), 0x3f80_0000);
+        // 2.0
+        assert_eq!(round_pack(false, 1, 1, false, FP32, RoundingMode::Rne), 0x4000_0000);
+        // 3.0 = 11b * 2^0
+        assert_eq!(round_pack(false, 0, 3, false, FP32, RoundingMode::Rne), 0x4040_0000);
+        // -1.5 in FP16 = 1.1b
+        assert_eq!(round_pack(true, -1, 3, false, FP16, RoundingMode::Rne), 0xbe00);
+    }
+
+    #[test]
+    fn ties_to_even() {
+        // FP8 (e5m2): 1.0 = 0x3c, next up 1.25 = 0x3d. 1.125 is a tie →
+        // rounds to even (1.0).
+        let tie = round_pack(false, -3, 9, false, FP8, RoundingMode::Rne); // 9/8
+        assert_eq!(tie, 0x3c);
+        // 1.375 ties to 1.5 (odd lsb → up to even).
+        let tie2 = round_pack(false, -3, 11, false, FP8, RoundingMode::Rne); // 11/8
+        assert_eq!(tie2, 0x3e);
+        // A sticky bit breaks the tie upward.
+        let no_tie = round_pack(false, -3, 9, true, FP8, RoundingMode::Rne);
+        assert_eq!(no_tie, 0x3d);
+    }
+
+    #[test]
+    fn directed_modes() {
+        // 1 + tiny in FP32.
+        let up = round_pack(false, 0, 1, true, FP32, RoundingMode::Rup);
+        assert_eq!(up, 0x3f80_0001);
+        let dn = round_pack(false, 0, 1, true, FP32, RoundingMode::Rdn);
+        assert_eq!(dn, 0x3f80_0000);
+        let tz = round_pack(false, 0, 1, true, FP32, RoundingMode::Rtz);
+        assert_eq!(tz, 0x3f80_0000);
+        // Negative: RDN moves away from zero.
+        let ndn = round_pack(true, 0, 1, true, FP32, RoundingMode::Rdn);
+        assert_eq!(ndn, 0xbf80_0001);
+    }
+
+    #[test]
+    fn overflow_behaviour() {
+        // 2^16 overflows FP16 (emax=15).
+        let inf = round_pack(false, 16, 1, false, FP16, RoundingMode::Rne);
+        assert_eq!(inf, FP16.infinity(false));
+        let sat = round_pack(false, 16, 1, false, FP16, RoundingMode::Rtz);
+        assert_eq!(sat, FP16.max_finite(false));
+        let rdn_pos = round_pack(false, 16, 1, false, FP16, RoundingMode::Rdn);
+        assert_eq!(rdn_pos, FP16.max_finite(false));
+        let rdn_neg = round_pack(true, 16, 1, false, FP16, RoundingMode::Rdn);
+        assert_eq!(rdn_neg, FP16.infinity(true));
+    }
+
+    #[test]
+    fn subnormals() {
+        // FP16 min subnormal = 2^-24.
+        assert_eq!(round_pack(false, -24, 1, false, FP16, RoundingMode::Rne), 0x0001);
+        // Half of it rounds to zero (tie to even).
+        assert_eq!(round_pack(false, -25, 1, false, FP16, RoundingMode::Rne), 0x0000);
+        // Slightly more than half rounds up.
+        assert_eq!(round_pack(false, -25, 1, true, FP16, RoundingMode::Rne), 0x0001);
+        // Largest subnormal: (2^10 - 1) * 2^-24.
+        assert_eq!(round_pack(false, -24, 1023, false, FP16, RoundingMode::Rne), 0x03ff);
+        // One ulp more is the smallest normal.
+        assert_eq!(round_pack(false, -24, 1024, false, FP16, RoundingMode::Rne), 0x0400);
+    }
+
+    #[test]
+    fn subnormal_rounds_up_to_normal() {
+        // Largest subnormal + more than half ulp → min normal.
+        assert_eq!(round_pack(false, -24, 1023, true, FP16, RoundingMode::Rup), 0x0400);
+    }
+
+    #[test]
+    fn pure_sticky_underflow() {
+        assert_eq!(round_pack(false, -1000, 0, true, FP16, RoundingMode::Rne), 0x0000);
+        assert_eq!(round_pack(false, -1000, 0, true, FP16, RoundingMode::Rup), 0x0001);
+        assert_eq!(round_pack(true, -1000, 0, true, FP16, RoundingMode::Rdn), 0x8001);
+        assert_eq!(round_pack(true, -1000, 0, true, FP16, RoundingMode::Rup), 0x8000);
+    }
+
+    #[test]
+    fn frm_roundtrip() {
+        for rm in [
+            RoundingMode::Rne,
+            RoundingMode::Rtz,
+            RoundingMode::Rdn,
+            RoundingMode::Rup,
+            RoundingMode::Rmm,
+        ] {
+            assert_eq!(RoundingMode::from_frm(rm.to_frm()), Some(rm));
+        }
+        assert_eq!(RoundingMode::from_frm(0b101), None);
+    }
+}

@@ -1,0 +1,476 @@
+//! Cross-validation of the softfloat core.
+//!
+//! Three independent oracles:
+//! 1. **Native f32/f64 hardware** — FP32/FP64 add/mul/FMA must agree
+//!    bit-for-bit with the host FPU (IEEE RNE), including NaN → our
+//!    canonical qNaN policy.
+//! 2. **Exact f64 arithmetic for narrow formats** — FP8/FP8alt
+//!    operations are exact in f64 (≤4-bit significands, tiny exponent
+//!    range), so `round(f64-exact)` is a correct single-rounding oracle;
+//!    we test *exhaustively* over all 256×256 operand pairs.
+//! 3. **Algebraic properties** — commutativity, sign symmetry,
+//!    monotonicity, cast roundtrips — via the in-crate property driver.
+
+use super::ops::*;
+use super::round::RoundingMode;
+use crate::formats::*;
+use crate::softfloat::{from_f64, to_f64};
+use crate::util::prop::{for_all, FpGen};
+
+const RMS: [RoundingMode; 5] = [
+    RoundingMode::Rne,
+    RoundingMode::Rtz,
+    RoundingMode::Rdn,
+    RoundingMode::Rup,
+    RoundingMode::Rmm,
+];
+
+/// Compare results treating every NaN as equivalent (we always produce
+/// the canonical quiet NaN; hardware may produce payloads).
+fn same(fmt: FpFormat, ours: u64, reference: u64) -> bool {
+    if fmt.is_nan(ours) && fmt.is_nan(reference) {
+        return true;
+    }
+    ours == reference
+}
+
+// ---------------------------------------------------------------- FP32 vs native
+
+#[test]
+fn fp32_add_matches_hardware() {
+    for_all("fp32 add vs f32", 20_000, |rng| {
+        let g = FpGen::new(FP32);
+        let (a, b) = (g.any(rng), g.any(rng));
+        let ours = add(FP32, a, b, RoundingMode::Rne);
+        let hw = (f32::from_bits(a as u32) + f32::from_bits(b as u32)).to_bits() as u64;
+        assert!(same(FP32, ours, hw), "a={a:#010x} b={b:#010x} ours={ours:#010x} hw={hw:#010x}");
+    });
+}
+
+#[test]
+fn fp32_mul_matches_hardware() {
+    for_all("fp32 mul vs f32", 20_000, |rng| {
+        let g = FpGen::new(FP32);
+        let (a, b) = (g.any(rng), g.any(rng));
+        let ours = mul(FP32, a, b, RoundingMode::Rne);
+        let hw = (f32::from_bits(a as u32) * f32::from_bits(b as u32)).to_bits() as u64;
+        assert!(same(FP32, ours, hw), "a={a:#010x} b={b:#010x} ours={ours:#010x} hw={hw:#010x}");
+    });
+}
+
+#[test]
+fn fp32_fma_matches_hardware() {
+    for_all("fp32 fma vs f32::mul_add", 20_000, |rng| {
+        let g = FpGen::new(FP32);
+        let (a, b, c) = (g.any(rng), g.any(rng), g.any(rng));
+        let ours = fma(FP32, a, b, c, RoundingMode::Rne);
+        let hw = f32::from_bits(a as u32)
+            .mul_add(f32::from_bits(b as u32), f32::from_bits(c as u32))
+            .to_bits() as u64;
+        assert!(
+            same(FP32, ours, hw),
+            "a={a:#010x} b={b:#010x} c={c:#010x} ours={ours:#010x} hw={hw:#010x}"
+        );
+    });
+}
+
+#[test]
+fn fp64_add_mul_match_hardware() {
+    for_all("fp64 ops vs f64", 20_000, |rng| {
+        let g = FpGen::new(FP64);
+        let (a, b) = (g.any(rng), g.any(rng));
+        let s = add(FP64, a, b, RoundingMode::Rne);
+        let hs = (f64::from_bits(a) + f64::from_bits(b)).to_bits();
+        assert!(same(FP64, s, hs), "add a={a:#x} b={b:#x}");
+        let p = mul(FP64, a, b, RoundingMode::Rne);
+        let hp = (f64::from_bits(a) * f64::from_bits(b)).to_bits();
+        assert!(same(FP64, p, hp), "mul a={a:#x} b={b:#x}");
+    });
+}
+
+#[test]
+fn fp64_fma_matches_hardware() {
+    for_all("fp64 fma vs f64::mul_add", 10_000, |rng| {
+        let g = FpGen::new(FP64);
+        let (a, b, c) = (g.any(rng), g.any(rng), g.any(rng));
+        let ours = fma(FP64, a, b, c, RoundingMode::Rne);
+        let hw = f64::from_bits(a).mul_add(f64::from_bits(b), f64::from_bits(c)).to_bits();
+        assert!(same(FP64, ours, hw), "a={a:#x} b={b:#x} c={c:#x}");
+    });
+}
+
+// ------------------------------------------------- FP8/FP8alt exhaustive vs f64
+
+/// f64 computation is exact for any two FP8/FP8alt/FP16 operands under
+/// +, ×; rounding that exact value into the narrow format once is the
+/// IEEE-correct result.
+fn check_narrow_binop(
+    fmt: FpFormat,
+    rm: RoundingMode,
+    is_add: bool,
+    op: impl Fn(f64, f64) -> f64,
+    ours: impl Fn(u64, u64) -> u64,
+) {
+    let w = fmt.width();
+    for a in 0..(1u64 << w) {
+        for b in 0..(1u64 << w) {
+            let got = ours(a, b);
+            let fa = to_f64(a, fmt);
+            let fb = to_f64(b, fmt);
+            let exact = op(fa, fb);
+            let mut want = from_f64(exact, fmt, rm);
+            // The host FPU runs in RNE, so the sign of an exact-zero sum
+            // doesn't reflect `rm`; patch it with the IEEE rule.
+            if is_add && exact == 0.0 && !exact.is_nan() {
+                let sign = if fa == 0.0 && fa.is_sign_negative() == fb.is_sign_negative() && fb == 0.0 {
+                    fa.is_sign_negative()
+                } else {
+                    rm == RoundingMode::Rdn
+                };
+                want = fmt.zero(sign);
+            }
+            // `from_f64(exact)` is single-rounded because `exact` is
+            // exactly representable in f64.
+            assert!(
+                same(fmt, got, want),
+                "{} rm={rm:?} a={a:#x} b={b:#x} got={got:#x} want={want:#x}",
+                fmt.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fp8_add_exhaustive_all_modes() {
+    for rm in RMS {
+        check_narrow_binop(FP8, rm, true, |x, y| x + y, |a, b| add(FP8, a, b, rm));
+    }
+}
+
+#[test]
+fn fp8alt_add_exhaustive_all_modes() {
+    for rm in RMS {
+        check_narrow_binop(FP8ALT, rm, true, |x, y| x + y, |a, b| add(FP8ALT, a, b, rm));
+    }
+}
+
+#[test]
+fn fp8_mul_exhaustive_all_modes() {
+    for rm in RMS {
+        check_narrow_binop(FP8, rm, false, |x, y| x * y, |a, b| mul(FP8, a, b, rm));
+    }
+}
+
+#[test]
+fn fp8alt_mul_exhaustive_all_modes() {
+    for rm in RMS {
+        check_narrow_binop(FP8ALT, rm, false, |x, y| x * y, |a, b| mul(FP8ALT, a, b, rm));
+    }
+}
+
+#[test]
+fn fp16_add_random_vs_exact_f64() {
+    // FP16 sums are exact in f64 (≤ 50 significant bits needed).
+    for_all("fp16 add vs exact", 50_000, |rng| {
+        let g = FpGen::new(FP16);
+        let (a, b) = (g.any(rng), g.any(rng));
+        for rm in RMS {
+            let got = add(FP16, a, b, rm);
+            let fa = to_f64(a, FP16);
+            let fb = to_f64(b, FP16);
+            let exact = fa + fb;
+            let mut want = from_f64(exact, FP16, rm);
+            if exact == 0.0 {
+                let sign = if fa == 0.0 && fb == 0.0 && fa.is_sign_negative() == fb.is_sign_negative() {
+                    fa.is_sign_negative()
+                } else {
+                    rm == RoundingMode::Rdn
+                };
+                want = FP16.zero(sign);
+            }
+            assert!(same(FP16, got, want), "rm={rm:?} a={a:#x} b={b:#x}");
+        }
+    });
+}
+
+#[test]
+fn fp16_mul_random_vs_exact_f64() {
+    // FP16 products are exact in f64 (22 significant bits).
+    for_all("fp16 mul vs exact", 50_000, |rng| {
+        let g = FpGen::new(FP16);
+        let (a, b) = (g.any(rng), g.any(rng));
+        for rm in RMS {
+            let got = mul(FP16, a, b, rm);
+            let want = from_f64(to_f64(a, FP16) * to_f64(b, FP16), FP16, rm);
+            assert!(same(FP16, got, want), "rm={rm:?} a={a:#x} b={b:#x}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------- expanding FMA
+
+#[test]
+fn ex_fma_fp16_to_fp32_vs_hardware() {
+    // FP16 sources are exact f32 values, and f32::mul_add rounds once —
+    // exactly the ExFMA semantics for src=FP16, dst=FP32.
+    for_all("exfma 16->32 vs f32 mul_add", 30_000, |rng| {
+        let g = FpGen::new(FP16);
+        let gd = FpGen::new(FP32);
+        let (a, b, c) = (g.any(rng), g.any(rng), gd.any(rng));
+        let ours = ex_fma(FP16, FP32, a, b, c, RoundingMode::Rne);
+        let af = to_f64(a, FP16) as f32;
+        let bf = to_f64(b, FP16) as f32;
+        let hw = af.mul_add(bf, f32::from_bits(c as u32)).to_bits() as u64;
+        assert!(same(FP32, ours, hw), "a={a:#x} b={b:#x} c={c:#x} ours={ours:#x} hw={hw:#x}");
+    });
+}
+
+#[test]
+fn ex_fma_fp8_to_fp16_vs_exact_f64() {
+    // An FP8×FP8 product (≤ 6 significant bits) plus an FP16 addend is
+    // exact in f64 (needs ≤ 64+11 bits? No: product exp range ±30, FP16
+    // grid down to 2^-24 — max alignment ~60 bits, plus 11 mantissa bits
+    // exceeds 53!). Use exhaustive small-exponent filtering instead:
+    // restrict c to values whose exponent is within ±20 of the product
+    // so f64 holds the sum exactly.
+    let gs = FpGen::new(FP8);
+    let gd = FpGen::new(FP16);
+    for_all("exfma 8->16 vs exact", 50_000, |rng| {
+        let (a, b, c) = (gs.any(rng), gs.any(rng), gd.any(rng));
+        let pa = to_f64(a, FP8) * to_f64(b, FP8); // exact: 6 bits
+        let cv = to_f64(c, FP16);
+        // Skip cases where the f64 sum might be inexact (alignment > 47).
+        if pa != 0.0 && cv != 0.0 && pa.is_finite() && cv.is_finite() {
+            let ea = pa.abs().log2();
+            let ec = cv.abs().log2();
+            if (ea - ec).abs() > 40.0 {
+                return;
+            }
+        }
+        let ours = ex_fma(FP8, FP16, a, b, c, RoundingMode::Rne);
+        let want = from_f64(pa + cv, FP16, RoundingMode::Rne);
+        assert!(same(FP16, ours, want), "a={a:#x} b={b:#x} c={c:#x}");
+    });
+}
+
+// ---------------------------------------------------------------------- casts
+
+#[test]
+fn widening_casts_are_exact_and_roundtrip() {
+    let pairs = [(FP8, FP16), (FP8ALT, FP16), (FP16, FP32), (FP16ALT, FP32), (FP8, FP32), (FP32, FP64)];
+    for (narrow, wide) in pairs {
+        if narrow.width() > 16 {
+            continue;
+        }
+        for bits in 0..(1u64 << narrow.width()) {
+            let up = cast(narrow, wide, bits, RoundingMode::Rne);
+            if narrow.is_nan(bits) {
+                assert!(wide.is_nan(up));
+                continue;
+            }
+            assert_eq!(to_f64(up, wide), to_f64(bits, narrow), "{}→{} bits={bits:#x}", narrow.name(), wide.name());
+            let down = cast(wide, narrow, up, RoundingMode::Rne);
+            assert_eq!(down, bits, "{}→{}→back bits={bits:#x}", narrow.name(), wide.name());
+        }
+    }
+}
+
+#[test]
+fn fp32_to_fp16_cast_matches_exact() {
+    for_all("cast 32→16", 50_000, |rng| {
+        let g = FpGen::new(FP32);
+        let a = g.any(rng);
+        for rm in RMS {
+            let got = cast(FP32, FP16, a, rm);
+            let want = from_f64(f32::from_bits(a as u32) as f64, FP16, rm);
+            assert!(same(FP16, got, want), "a={a:#x} rm={rm:?}");
+        }
+    });
+}
+
+#[test]
+fn cast_fp16_fp16alt_loses_precision_predictably() {
+    // 1 + 2^-10 is representable in FP16 (10 mantissa bits) but not in
+    // FP16alt (7 bits) — RNE snaps to 1.0.
+    let x = from_f64(1.0 + 2f64.powi(-10), FP16, RoundingMode::Rne);
+    assert_eq!(to_f64(x, FP16), 1.0 + 2f64.powi(-10));
+    let y = cast(FP16, FP16ALT, x, RoundingMode::Rne);
+    assert_eq!(to_f64(y, FP16ALT), 1.0);
+    // And FP16alt's range exceeds FP16's: 2^100 survives 16alt→32 but
+    // overflows 16.
+    let big = from_f64(2f64.powi(100), FP16ALT, RoundingMode::Rne);
+    assert_eq!(to_f64(big, FP16ALT), 2f64.powi(100));
+    assert!(FP16.is_inf(cast(FP16ALT, FP16, big, RoundingMode::Rne)));
+}
+
+// ------------------------------------------------------------------ properties
+
+#[test]
+fn add_mul_commute() {
+    for fmt in PAPER_FORMATS {
+        let g = FpGen::new(fmt);
+        for_all("commutativity", 5_000, |rng| {
+            let (a, b) = (g.any(rng), g.any(rng));
+            for rm in RMS {
+                assert!(same(fmt, add(fmt, a, b, rm), add(fmt, b, a, rm)));
+                assert!(same(fmt, mul(fmt, a, b, rm), mul(fmt, b, a, rm)));
+            }
+        });
+    }
+}
+
+#[test]
+fn mul_sign_symmetry() {
+    for fmt in [FP16, FP8, FP8ALT] {
+        let g = FpGen::new(fmt);
+        for_all("sign symmetry", 5_000, |rng| {
+            let (a, b) = (g.finite(rng), g.finite(rng));
+            let p = mul(fmt, a, b, RoundingMode::Rne);
+            let pn = mul(fmt, a ^ fmt.sign_mask(), b, RoundingMode::Rne);
+            if !fmt.is_nan(p) {
+                assert_eq!(p ^ fmt.sign_mask(), pn);
+            }
+        });
+    }
+}
+
+#[test]
+fn rounding_mode_bracketing() {
+    // RDN ≤ RNE ≤ RUP as real values, for finite results.
+    for fmt in [FP16, FP8, FP8ALT, FP16ALT] {
+        let g = FpGen::new(fmt);
+        for_all("bracketing", 5_000, |rng| {
+            let (a, b) = (g.finite(rng), g.finite(rng));
+            let dn = to_f64(add(fmt, a, b, RoundingMode::Rdn), fmt);
+            let ne = to_f64(add(fmt, a, b, RoundingMode::Rne), fmt);
+            let up = to_f64(add(fmt, a, b, RoundingMode::Rup), fmt);
+            if dn.is_finite() && up.is_finite() {
+                assert!(dn <= ne && ne <= up, "a={a:#x} b={b:#x} dn={dn} ne={ne} up={up}");
+            }
+        });
+    }
+}
+
+#[test]
+fn fma_reduces_to_mul_when_c_zero_and_to_add_when_b_one() {
+    for fmt in [FP16, FP8ALT] {
+        let g = FpGen::new(fmt);
+        let one = from_f64(1.0, fmt, RoundingMode::Rne);
+        for_all("fma degenerate", 5_000, |rng| {
+            let (a, c) = (g.finite(rng), g.finite(rng));
+            // a*1 + c == a + c
+            assert!(same(
+                fmt,
+                fma(fmt, a, one, c, RoundingMode::Rne),
+                add(fmt, a, c, RoundingMode::Rne)
+            ));
+        });
+    }
+}
+
+#[test]
+fn nan_propagation_everywhere() {
+    for fmt in PAPER_FORMATS {
+        let nan = fmt.quiet_nan();
+        let one = from_f64(1.0, fmt, RoundingMode::Rne);
+        assert!(fmt.is_nan(add(fmt, nan, one, RoundingMode::Rne)));
+        assert!(fmt.is_nan(mul(fmt, nan, one, RoundingMode::Rne)));
+        assert!(fmt.is_nan(fma(fmt, nan, one, one, RoundingMode::Rne)));
+        assert!(fmt.is_nan(fma(fmt, one, one, nan, RoundingMode::Rne)));
+        assert!(FP32.is_nan(cast(fmt, FP32, nan, RoundingMode::Rne)));
+    }
+}
+
+#[test]
+fn inf_arithmetic() {
+    for fmt in PAPER_FORMATS {
+        let inf = fmt.infinity(false);
+        let ninf = fmt.infinity(true);
+        let one = from_f64(1.0, fmt, RoundingMode::Rne);
+        let zero = fmt.zero(false);
+        assert_eq!(add(fmt, inf, one, RoundingMode::Rne), inf);
+        assert!(fmt.is_nan(add(fmt, inf, ninf, RoundingMode::Rne)));
+        assert!(fmt.is_nan(mul(fmt, inf, zero, RoundingMode::Rne)));
+        assert_eq!(mul(fmt, inf, ninf, RoundingMode::Rne), ninf);
+        assert!(fmt.is_nan(fma(fmt, zero, inf, one, RoundingMode::Rne)));
+    }
+}
+
+#[test]
+fn signed_zero_rules() {
+    for fmt in [FP16, FP8, FP32] {
+        let pz = fmt.zero(false);
+        let nz = fmt.zero(true);
+        assert_eq!(add(fmt, pz, nz, RoundingMode::Rne), pz);
+        assert_eq!(add(fmt, pz, nz, RoundingMode::Rdn), nz);
+        assert_eq!(add(fmt, nz, nz, RoundingMode::Rne), nz);
+        // x + (−x) = +0 (RNE), −0 (RDN).
+        let x = from_f64(1.5, fmt, RoundingMode::Rne);
+        let mx = x | fmt.sign_mask();
+        assert_eq!(add(fmt, x, mx, RoundingMode::Rne), pz);
+        assert_eq!(add(fmt, x, mx, RoundingMode::Rdn), nz);
+    }
+}
+
+// ---------------------------------------------------------------- compare / minmax
+
+#[test]
+fn compare_and_minmax() {
+    use std::cmp::Ordering;
+    let one = from_f64(1.0, FP16, RoundingMode::Rne);
+    let two = from_f64(2.0, FP16, RoundingMode::Rne);
+    let m1 = one | FP16.sign_mask();
+    assert_eq!(cmp(FP16, one, two), Some(Ordering::Less));
+    assert_eq!(cmp(FP16, two, one), Some(Ordering::Greater));
+    assert_eq!(cmp(FP16, m1, one), Some(Ordering::Less));
+    assert_eq!(cmp(FP16, FP16.zero(true), FP16.zero(false)), Some(Ordering::Equal));
+    assert_eq!(cmp(FP16, FP16.quiet_nan(), one), None);
+
+    assert_eq!(min(FP16, one, two), one);
+    assert_eq!(max(FP16, m1, one), one);
+    // NaN-suppressing.
+    assert_eq!(min(FP16, FP16.quiet_nan(), two), two);
+    assert_eq!(max(FP16, two, FP16.quiet_nan()), two);
+    assert_eq!(min(FP16, FP16.quiet_nan(), FP16.quiet_nan()), FP16.quiet_nan());
+    // −0 < +0 for min/max.
+    assert_eq!(min(FP16, FP16.zero(false), FP16.zero(true)), FP16.zero(true));
+    assert_eq!(max(FP16, FP16.zero(false), FP16.zero(true)), FP16.zero(false));
+}
+
+#[test]
+fn compare_agrees_with_f64_ordering() {
+    for fmt in [FP16, FP8, FP8ALT, FP16ALT] {
+        let g = FpGen::new(fmt);
+        for_all("cmp vs f64", 10_000, |rng| {
+            let (a, b) = (g.any(rng), g.any(rng));
+            let ours = cmp(fmt, a, b);
+            let fa = to_f64(a, fmt);
+            let fb = to_f64(b, fmt);
+            let want = fa.partial_cmp(&fb);
+            assert_eq!(ours, want, "{} a={a:#x} b={b:#x}", fmt.name());
+        });
+    }
+}
+
+#[test]
+fn sign_injection() {
+    let x = from_f64(1.5, FP16, RoundingMode::Rne);
+    let neg = from_f64(-2.0, FP16, RoundingMode::Rne);
+    assert_eq!(to_f64(sgnj(FP16, x, neg), FP16), -1.5);
+    assert_eq!(to_f64(sgnjn(FP16, x, neg), FP16), 1.5);
+    assert_eq!(to_f64(sgnjx(FP16, neg, neg), FP16), 2.0);
+}
+
+#[test]
+fn classify_all_classes() {
+    assert_eq!(classify(FP16, FP16.infinity(true)), FpClass::NegInf);
+    assert_eq!(classify(FP16, from_f64(-1.0, FP16, RoundingMode::Rne)), FpClass::NegNormal);
+    assert_eq!(classify(FP16, 0x8001), FpClass::NegSubnormal);
+    assert_eq!(classify(FP16, 0x8000), FpClass::NegZero);
+    assert_eq!(classify(FP16, 0x0000), FpClass::PosZero);
+    assert_eq!(classify(FP16, 0x0001), FpClass::PosSubnormal);
+    assert_eq!(classify(FP16, 0x3c00), FpClass::PosNormal);
+    assert_eq!(classify(FP16, FP16.infinity(false)), FpClass::PosInf);
+    assert_eq!(classify(FP16, FP16.quiet_nan()), FpClass::QuietNan);
+    assert_eq!(classify(FP16, 0x7d00 & !0x0200), FpClass::SignalingNan);
+}

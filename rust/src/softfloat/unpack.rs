@@ -1,0 +1,141 @@
+//! Decoding format encodings into exact (sign, exponent, significand)
+//! triples.
+
+use crate::formats::FpFormat;
+
+/// IEEE value class.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Class {
+    /// ±0.
+    Zero,
+    /// Subnormal (nonzero, zero exponent field).
+    Subnormal,
+    /// Normal finite.
+    Normal,
+    /// ±∞.
+    Inf,
+    /// Any NaN (we do not distinguish signaling: FPnew quietens all).
+    NaN,
+}
+
+/// An exactly decoded value: for finite nonzero, `value = (-1)^sign *
+/// mant * 2^exp` with `mant` the integer significand (hidden bit
+/// included for normals).
+#[derive(Clone, Copy, Debug)]
+pub struct Unpacked {
+    /// Sign bit.
+    pub sign: bool,
+    /// Power-of-two weight of `mant`'s LSB.
+    pub exp: i32,
+    /// Integer significand (0 for zero/inf/nan).
+    pub mant: u128,
+    /// Value class.
+    pub class: Class,
+}
+
+impl Unpacked {
+    /// True for Zero/Subnormal/Normal.
+    pub fn is_finite(&self) -> bool {
+        matches!(self.class, Class::Zero | Class::Subnormal | Class::Normal)
+    }
+
+    /// True for NaN.
+    pub fn is_nan(&self) -> bool {
+        matches!(self.class, Class::NaN)
+    }
+
+    /// True for ±∞.
+    pub fn is_inf(&self) -> bool {
+        matches!(self.class, Class::Inf)
+    }
+
+    /// True for ±0.
+    pub fn is_zero(&self) -> bool {
+        matches!(self.class, Class::Zero)
+    }
+}
+
+/// Decode `bits` (an encoding in `fmt`, low `fmt.width()` bits) exactly.
+pub fn unpack(fmt: FpFormat, bits: u64) -> Unpacked {
+    let bits = bits & fmt.width_mask();
+    let (sign, exp_field, man_field) = fmt.split(bits);
+    if exp_field == fmt.exp_special() {
+        return Unpacked {
+            sign,
+            exp: 0,
+            mant: 0,
+            class: if man_field == 0 { Class::Inf } else { Class::NaN },
+        };
+    }
+    if exp_field == 0 {
+        if man_field == 0 {
+            return Unpacked { sign, exp: 0, mant: 0, class: Class::Zero };
+        }
+        // Subnormal: value = man_field * 2^(emin - man_bits).
+        return Unpacked {
+            sign,
+            exp: fmt.emin() - fmt.man_bits as i32,
+            mant: man_field as u128,
+            class: Class::Subnormal,
+        };
+    }
+    // Normal: value = (1.man) * 2^(exp_field - bias)
+    //               = (man_field | hidden) * 2^(exp_field - bias - man_bits).
+    Unpacked {
+        sign,
+        exp: exp_field as i32 - fmt.bias() - fmt.man_bits as i32,
+        mant: (man_field | (1 << fmt.man_bits)) as u128,
+        class: Class::Normal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP16, FP32, FP8ALT, PAPER_FORMATS};
+    use crate::softfloat::round::{round_pack, RoundingMode};
+
+    #[test]
+    fn unpack_classes() {
+        assert!(matches!(unpack(FP16, 0x0000).class, Class::Zero));
+        assert!(matches!(unpack(FP16, 0x8000).class, Class::Zero));
+        assert!(matches!(unpack(FP16, 0x0001).class, Class::Subnormal));
+        assert!(matches!(unpack(FP16, 0x3c00).class, Class::Normal));
+        assert!(matches!(unpack(FP16, 0x7c00).class, Class::Inf));
+        assert!(matches!(unpack(FP16, 0x7e00).class, Class::NaN));
+    }
+
+    #[test]
+    fn unpack_values() {
+        // FP32 1.0
+        let u = unpack(FP32, 0x3f80_0000);
+        assert_eq!((u.mant as i64).checked_shl(0).unwrap(), 1 << 23);
+        assert_eq!(u.exp, -23);
+        // FP8alt 1.5 = 0 0111 100
+        let u = unpack(FP8ALT, 0b0_0111_100);
+        assert_eq!(u.mant, 0b1100);
+        assert_eq!(u.exp, -3);
+        assert!(!u.sign);
+    }
+
+    #[test]
+    fn unpack_roundpack_roundtrip_all_finite() {
+        // Every finite encoding must survive unpack → round_pack exactly,
+        // in every rounding mode (it is already on the grid).
+        for fmt in PAPER_FORMATS {
+            if fmt.width() > 16 {
+                continue; // exhaustive only for narrow formats
+            }
+            for bits in 0..(1u64 << fmt.width()) {
+                if fmt.is_nan(bits) || fmt.is_inf(bits) {
+                    continue;
+                }
+                let u = unpack(fmt, bits);
+                for rm in [RoundingMode::Rne, RoundingMode::Rtz, RoundingMode::Rup, RoundingMode::Rdn, RoundingMode::Rmm] {
+                    let re = round_pack(u.sign, u.exp, u.mant, false, fmt, rm);
+                    assert_eq!(re, bits, "fmt={} bits={bits:#x} rm={rm:?}", fmt.name());
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a plain `main()` that builds a
+//! [`Bencher`] and registers closures. The harness warms up, then runs
+//! timed batches until a time budget is spent, reporting median / mean /
+//! stddev per iteration plus optional throughput.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    /// Benchmark label.
+    pub name: String,
+    /// Median time per iteration.
+    pub median: Duration,
+    /// Mean time per iteration.
+    pub mean: Duration,
+    /// Standard deviation across batch means.
+    pub stddev: Duration,
+    /// Iterations measured in total.
+    pub iters: u64,
+    /// Optional user-provided items/iteration for throughput reporting.
+    pub items_per_iter: Option<f64>,
+}
+
+/// Measurement harness.
+pub struct Bencher {
+    /// Per-benchmark wall-clock budget.
+    pub budget: Duration,
+    /// Warmup duration before measurement.
+    pub warmup: Duration,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    /// Harness with defaults (1 s budget, 200 ms warmup). Override via
+    /// env `BENCH_BUDGET_MS` / `BENCH_WARMUP_MS` (useful in CI).
+    pub fn new() -> Self {
+        let ms = |var: &str, default: u64| {
+            std::env::var(var).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+        };
+        Bencher {
+            budget: Duration::from_millis(ms("BENCH_BUDGET_MS", 1000)),
+            warmup: Duration::from_millis(ms("BENCH_WARMUP_MS", 200)),
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which performs one iteration per call and returns a
+    /// value that is black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        self.bench_items(name, None, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Like [`Self::bench`] but records `items` processed per iteration so
+    /// the report includes throughput (e.g. FLOP/s or ops/s).
+    pub fn bench_throughput<T>(&mut self, name: &str, items: f64, mut f: impl FnMut() -> T) -> &Stats {
+        self.bench_items(name, Some(items), move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    fn bench_items(&mut self, name: &str, items: Option<f64>, mut f: impl FnMut()) -> &Stats {
+        // Warmup and batch-size calibration.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        // Aim for ~50 batches within the budget.
+        let batch = ((self.budget.as_secs_f64() / 50.0 / per_iter.max(1e-9)).ceil() as u64).max(1);
+
+        let mut batch_means: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.budget {
+            let b0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            batch_means.push(b0.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+        }
+        batch_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = batch_means[batch_means.len() / 2];
+        let mean = batch_means.iter().sum::<f64>() / batch_means.len() as f64;
+        let var = batch_means.iter().map(|m| (m - mean) * (m - mean)).sum::<f64>() / batch_means.len() as f64;
+
+        let stats = Stats {
+            name: name.to_string(),
+            median: Duration::from_secs_f64(median),
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            iters: total_iters,
+            items_per_iter: items,
+        };
+        print_stats(&stats);
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// All results collected so far.
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+}
+
+fn print_stats(s: &Stats) {
+    let fmt_d = |d: Duration| {
+        let ns = d.as_nanos() as f64;
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.3} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    };
+    let mut line = format!(
+        "{:<44} median {:>10}  mean {:>10} ± {:>9}  ({} iters)",
+        s.name,
+        fmt_d(s.median),
+        fmt_d(s.mean),
+        fmt_d(s.stddev),
+        s.iters
+    );
+    if let Some(items) = s.items_per_iter {
+        let rate = items / s.median.as_secs_f64();
+        line += &if rate > 1e9 {
+            format!("  [{:.2} G/s]", rate / 1e9)
+        } else if rate > 1e6 {
+            format!("  [{:.2} M/s]", rate / 1e6)
+        } else {
+            format!("  [{:.2} k/s]", rate / 1e3)
+        };
+    }
+    println!("{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("BENCH_BUDGET_MS", "50");
+        std::env::set_var("BENCH_WARMUP_MS", "10");
+        let mut b = Bencher::new();
+        let s = b.bench("noop-ish", || std::hint::black_box(3u64).wrapping_mul(7)).clone();
+        assert!(s.iters > 0);
+        assert!(s.median.as_nanos() < 1_000_000);
+        assert_eq!(b.results().len(), 1);
+    }
+}

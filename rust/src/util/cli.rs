@@ -1,0 +1,99 @@
+//! Minimal CLI argument parsing for the `repro` binary (clap is
+//! unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; unknown options are collected and reported by the caller.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First positional argument (the subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` options, keys without the `--`.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s (no value).
+    pub flags: Vec<String>,
+    /// Remaining positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Option lookup with a default, parsed to any `FromStr` type.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.options.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// String option lookup.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(argv("table2 extra --size 128x128 --fmt=fp8 --verbose"));
+        assert_eq!(a.command.as_deref(), Some("table2"));
+        assert_eq!(a.get_str("size", ""), "128x128");
+        assert_eq!(a.get_str("fmt", ""), "fp8");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(argv("train --steps 300"));
+        assert_eq!(a.get::<u64>("steps", 10), 300);
+        assert_eq!(a.get::<u64>("batch", 32), 32);
+        assert_eq!(a.get::<f64>("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(argv("x --a --b v"));
+        assert!(a.has_flag("a"));
+        assert_eq!(a.get_str("b", ""), "v");
+    }
+}

@@ -1,0 +1,20 @@
+//! Self-contained utilities replacing crates unavailable in the offline
+//! build environment (`rand`, `criterion`, `proptest`, `clap`).
+//!
+//! * [`rng`] — splitmix64/xoshiro256** PRNG with uniform and Gaussian
+//!   (Box–Muller) sampling; deterministic, seedable, used by the
+//!   accuracy harness (Table IV needs Gaussian inputs) and the property
+//!   tests.
+//! * [`bench`] — a minimal measurement harness (warmup + timed
+//!   iterations, median/mean/stddev) for the `cargo bench` targets.
+//! * [`prop`] — a tiny property-testing driver: run a closure over N
+//!   seeded random cases and report the failing seed on panic.
+//! * [`cli`] — flag/option parsing for the `repro` binary.
+
+pub mod bench;
+pub mod cli;
+pub mod prop;
+pub mod rng;
+
+pub use bench::Bencher;
+pub use rng::Rng;

@@ -1,0 +1,115 @@
+//! Tiny property-testing driver (proptest is unavailable offline).
+//!
+//! [`for_all`] runs a property over `n` seeded random cases; on failure
+//! it reports the case index and seed so the exact input can be replayed
+//! by re-seeding [`crate::util::rng::Rng`]. Generators for interesting
+//! float encodings live in [`FpGen`] — they bias toward the boundary
+//! values (zeros, subnormals, infs, NaNs, max-finite) where IEEE bugs
+//! hide, the same trick proptest strategies would use.
+
+use super::rng::Rng;
+use crate::formats::FpFormat;
+
+/// Run `prop` over `n` random cases. Panics with seed diagnostics on the
+/// first failing case.
+pub fn for_all(name: &str, n: u64, mut prop: impl FnMut(&mut Rng)) {
+    let base_seed = 0x5eed_0000u64;
+    for case in 0..n {
+        let seed = base_seed ^ (case.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random generator of format encodings, boundary-biased.
+pub struct FpGen {
+    /// Format to generate encodings for.
+    pub fmt: FpFormat,
+}
+
+impl FpGen {
+    /// Generator for `fmt`.
+    pub fn new(fmt: FpFormat) -> Self {
+        Self { fmt }
+    }
+
+    /// Any bit pattern, with 25% probability drawn from the boundary set
+    /// (±0, min/max subnormal, min normal, max finite, ±inf, NaN, ±1).
+    pub fn any(&self, rng: &mut Rng) -> u64 {
+        if rng.below(4) == 0 {
+            self.edge(rng)
+        } else {
+            rng.next_u64() & self.fmt.width_mask()
+        }
+    }
+
+    /// A finite value (any sign), boundary-biased.
+    pub fn finite(&self, rng: &mut Rng) -> u64 {
+        loop {
+            let b = self.any(rng);
+            if !self.fmt.is_nan(b) && !self.fmt.is_inf(b) {
+                return b;
+            }
+        }
+    }
+
+    /// A boundary encoding.
+    pub fn edge(&self, rng: &mut Rng) -> u64 {
+        let f = self.fmt;
+        let one = crate::softfloat::from_f64(1.0, f, crate::softfloat::RoundingMode::Rne);
+        let edges = [
+            f.zero(false),
+            f.zero(true),
+            f.min_subnormal(),
+            f.min_subnormal() | f.sign_mask(),
+            f.min_normal() - 1, // max subnormal
+            f.min_normal(),
+            f.max_finite(false),
+            f.max_finite(true),
+            f.infinity(false),
+            f.infinity(true),
+            f.quiet_nan(),
+            one,
+            one | f.sign_mask(),
+        ];
+        edges[rng.below(edges.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::FP16;
+
+    #[test]
+    fn for_all_runs_all_cases() {
+        let mut count = 0;
+        for_all("counting", 25, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn for_all_propagates_failures() {
+        for_all("failing", 10, |rng| {
+            assert!(rng.below(3) != 1, "eventually hits 1");
+        });
+    }
+
+    #[test]
+    fn generators_respect_format_width() {
+        let g = FpGen::new(FP16);
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            assert_eq!(g.any(&mut rng) >> 16, 0);
+            let f = g.finite(&mut rng);
+            assert!(!FP16.is_nan(f) && !FP16.is_inf(f));
+        }
+    }
+}

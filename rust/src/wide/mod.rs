@@ -1,0 +1,271 @@
+//! Fixed-width 768-bit signed integer arithmetic.
+//!
+//! The ExSdotp datapath (§III-B) manipulates significands of width
+//! `2*p_dst + p_src + 5` (e.g. 77 bits for a 16→32-bit unit, and 135 bits
+//! for a hypothetical 32→64-bit instance), and the *exact* reference used
+//! to validate the datapath needs to align three addends over the full
+//! exponent range of the destination format (over 500 bits for FP16alt
+//! sources with FP32 destinations). [`WideInt`] covers both with headroom while staying a
+//! cheap, fixed-size value type — no heap allocation in the simulator's
+//! hot loop.
+
+/// Number of 64-bit limbs.
+pub const LIMBS: usize = 12;
+
+/// A 768-bit two's-complement signed integer. Limb 0 is least
+/// significant.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct WideInt(pub [u64; LIMBS]);
+
+impl WideInt {
+    /// Zero.
+    pub const ZERO: WideInt = WideInt([0; LIMBS]);
+
+    /// Construct from an unsigned 128-bit value.
+    pub fn from_u128(v: u128) -> Self {
+        let mut l = [0u64; LIMBS];
+        l[0] = v as u64;
+        l[1] = (v >> 64) as u64;
+        WideInt(l)
+    }
+
+    /// Construct from a signed 128-bit value (sign-extended).
+    pub fn from_i128(v: i128) -> Self {
+        let mut w = Self::from_u128(v as u128);
+        if v < 0 {
+            for limb in w.0.iter_mut().skip(2) {
+                *limb = u64::MAX;
+            }
+        }
+        w
+    }
+
+    /// True if the value is zero.
+    pub fn is_zero(&self) -> bool {
+        self.0.iter().all(|&l| l == 0)
+    }
+
+    /// True if the value is negative (two's complement sign).
+    pub fn is_negative(&self) -> bool {
+        (self.0[LIMBS - 1] >> 63) != 0
+    }
+
+    /// Wrapping addition.
+    pub fn wrapping_add(self, rhs: WideInt) -> WideInt {
+        let mut out = [0u64; LIMBS];
+        let mut carry = 0u64;
+        for i in 0..LIMBS {
+            let (s1, c1) = self.0[i].overflowing_add(rhs.0[i]);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        WideInt(out)
+    }
+
+    /// Two's-complement negation.
+    pub fn neg(self) -> WideInt {
+        let mut out = [0u64; LIMBS];
+        for i in 0..LIMBS {
+            out[i] = !self.0[i];
+        }
+        WideInt(out).wrapping_add(WideInt::from_u128(1))
+    }
+
+    /// Wrapping subtraction.
+    pub fn wrapping_sub(self, rhs: WideInt) -> WideInt {
+        self.wrapping_add(rhs.neg())
+    }
+
+    /// Absolute value (as the same type; MIN overflows, never hit here).
+    pub fn abs(self) -> WideInt {
+        if self.is_negative() {
+            self.neg()
+        } else {
+            self
+        }
+    }
+
+    /// Logical left shift by `n` bits (0..384).
+    pub fn shl(self, n: u32) -> WideInt {
+        debug_assert!((n as usize) < LIMBS * 64);
+        if n == 0 {
+            return self;
+        }
+        let limb_shift = (n / 64) as usize;
+        let bit_shift = n % 64;
+        let mut out = [0u64; LIMBS];
+        for i in (0..LIMBS).rev() {
+            if i < limb_shift {
+                continue;
+            }
+            let lo = self.0[i - limb_shift];
+            let mut v = if bit_shift == 0 { lo } else { lo << bit_shift };
+            if bit_shift != 0 && i > limb_shift {
+                v |= self.0[i - limb_shift - 1] >> (64 - bit_shift);
+            }
+            out[i] = v;
+        }
+        WideInt(out)
+    }
+
+    /// Logical right shift by `n` bits (0..384).
+    pub fn shr(self, n: u32) -> WideInt {
+        debug_assert!((n as usize) < LIMBS * 64);
+        if n == 0 {
+            return self;
+        }
+        let limb_shift = (n / 64) as usize;
+        let bit_shift = n % 64;
+        let mut out = [0u64; LIMBS];
+        for i in 0..LIMBS {
+            if i + limb_shift >= LIMBS {
+                break;
+            }
+            let hi = self.0[i + limb_shift];
+            let mut v = if bit_shift == 0 { hi } else { hi >> bit_shift };
+            if bit_shift != 0 && i + limb_shift + 1 < LIMBS {
+                v |= self.0[i + limb_shift + 1] << (64 - bit_shift);
+            }
+            out[i] = v;
+        }
+        WideInt(out)
+    }
+
+    /// Position of the most significant set bit (0-based), or `None` if
+    /// zero. Only meaningful for non-negative values.
+    pub fn msb(&self) -> Option<u32> {
+        for i in (0..LIMBS).rev() {
+            if self.0[i] != 0 {
+                return Some(i as u32 * 64 + 63 - self.0[i].leading_zeros());
+            }
+        }
+        None
+    }
+
+    /// True if any bit strictly below position `n` is set (sticky-bit
+    /// computation for rounding). Only for non-negative values.
+    pub fn any_below(&self, n: u32) -> bool {
+        let limb = (n / 64) as usize;
+        let bit = n % 64;
+        for i in 0..limb.min(LIMBS) {
+            if self.0[i] != 0 {
+                return true;
+            }
+        }
+        if limb < LIMBS && bit > 0 && (self.0[limb] & ((1u64 << bit) - 1)) != 0 {
+            return true;
+        }
+        false
+    }
+
+    /// Bit at position `n` (0-based).
+    pub fn bit(&self, n: u32) -> bool {
+        let limb = (n / 64) as usize;
+        if limb >= LIMBS {
+            return false;
+        }
+        (self.0[limb] >> (n % 64)) & 1 == 1
+    }
+
+    /// Extract bits `[lo, lo+len)` as a u128 (`len <= 128`). Only for
+    /// non-negative values.
+    pub fn extract_u128(&self, lo: u32, len: u32) -> u128 {
+        debug_assert!(len <= 128);
+        let shifted = self.shr(lo);
+        let v = (shifted.0[0] as u128) | ((shifted.0[1] as u128) << 64);
+        if len == 128 {
+            v
+        } else {
+            v & ((1u128 << len) - 1)
+        }
+    }
+
+    /// Compare magnitudes of two non-negative values.
+    pub fn cmp_mag(&self, rhs: &WideInt) -> std::cmp::Ordering {
+        for i in (0..LIMBS).rev() {
+            match self.0[i].cmp(&rhs.0[i]) {
+                std::cmp::Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        std::cmp::Ordering::Equal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = WideInt::from_u128(0x1234_5678_9abc_def0_1122_3344_5566_7788);
+        let b = WideInt::from_u128(0xffff_ffff_ffff_ffff_ffff_ffff_ffff_ffff);
+        let s = a.wrapping_add(b);
+        assert_eq!(s.wrapping_sub(b), a);
+        assert_eq!(s.wrapping_sub(a), b);
+    }
+
+    #[test]
+    fn neg_and_sign() {
+        let a = WideInt::from_u128(42);
+        assert!(!a.is_negative());
+        let n = a.neg();
+        assert!(n.is_negative());
+        assert_eq!(n.neg(), a);
+        assert_eq!(WideInt::from_i128(-42), n);
+        assert_eq!(n.abs(), a);
+    }
+
+    #[test]
+    fn shift_roundtrip() {
+        let a = WideInt::from_u128(0xdead_beef_cafe_babe);
+        for n in [0u32, 1, 7, 63, 64, 65, 127, 128, 200, 300] {
+            let x = a.shl(n);
+            assert_eq!(x.shr(n), a, "shift roundtrip n={n}");
+        }
+    }
+
+    #[test]
+    fn shl_carries_across_limbs() {
+        let a = WideInt::from_u128(1);
+        let x = a.shl(LIMBS as u32 * 64 - 1);
+        assert!(x.is_negative()); // bit 383 is the sign bit
+        assert_eq!(x.0[LIMBS - 1], 1u64 << 63);
+    }
+
+    #[test]
+    fn msb_positions() {
+        assert_eq!(WideInt::ZERO.msb(), None);
+        assert_eq!(WideInt::from_u128(1).msb(), Some(0));
+        assert_eq!(WideInt::from_u128(0x8000_0000_0000_0000).msb(), Some(63));
+        assert_eq!(WideInt::from_u128(1).shl(200).msb(), Some(200));
+    }
+
+    #[test]
+    fn sticky_any_below() {
+        let v = WideInt::from_u128(0b1010_0000);
+        assert!(!v.any_below(5));
+        assert!(v.any_below(6));
+        assert!(v.any_below(8));
+        let big = WideInt::from_u128(1).shl(130);
+        assert!(!big.any_below(130));
+        assert!(big.any_below(131));
+    }
+
+    #[test]
+    fn extract_bits() {
+        let v = WideInt::from_u128(0xabcd).shl(100);
+        assert_eq!(v.extract_u128(100, 16), 0xabcd);
+        assert_eq!(v.extract_u128(104, 8), 0xbc);
+    }
+
+    #[test]
+    fn cmp_mag_ordering() {
+        let a = WideInt::from_u128(5).shl(300);
+        let b = WideInt::from_u128(6).shl(300);
+        assert_eq!(a.cmp_mag(&b), std::cmp::Ordering::Less);
+        assert_eq!(b.cmp_mag(&a), std::cmp::Ordering::Greater);
+        assert_eq!(a.cmp_mag(&a), std::cmp::Ordering::Equal);
+    }
+}

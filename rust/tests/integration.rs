@@ -1,0 +1,102 @@
+//! Cross-module integration tests (`cargo test --test integration`):
+//! the reproduction pipeline end to end, including — when artifacts are
+//! present — the PJRT runtime path.
+
+use minifloat_nn::coordinator::{Precision, Trainer};
+use minifloat_nn::isa::instr::{OpWidth, ScalarFmt};
+use minifloat_nn::kernels::{kernel_reference, GemmKernel, GemmKind};
+use minifloat_nn::report;
+use minifloat_nn::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let p = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&p).join("train_step_hfp8.hlo.txt").exists().then_some(p)
+}
+
+#[test]
+fn table2_subset_reproduces_paper_shape() {
+    // The three headline cells at 64×64, with the paper's ordering and
+    // ±15% cycle agreement.
+    let mut rng = Rng::new(42);
+    let mut cycles = std::collections::HashMap::new();
+    for (kind, paper) in [
+        (GemmKind::FmaSimd(ScalarFmt::H), 12232u64),
+        (GemmKind::ExSdotp(OpWidth::HtoS), 10968),
+        (GemmKind::ExSdotp(OpWidth::BtoH), 7019),
+    ] {
+        let (m, n, k) = (64, 64, 64);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+        let run = GemmKernel::new(kind, m, n, k).run(&a, &b);
+        let dev = (run.cycles as f64 - paper as f64).abs() / paper as f64;
+        assert!(dev < 0.15, "{}: {} vs paper {paper} ({:.0}% off)", kind.label(), run.cycles, dev * 100.0);
+        cycles.insert(kind.label(), run.cycles);
+    }
+    assert!(cycles["FP16->FP32 ExSdotp"] < cycles["FP16 FMA"]);
+    assert!(cycles["FP8->FP16 ExSdotp"] < cycles["FP16->FP32 ExSdotp"]);
+}
+
+#[test]
+fn report_generators_produce_all_artifacts() {
+    assert!(report::table1_text().contains("ExSdotp/ExVsum"));
+    assert!(report::formats_text().contains("FP8alt"));
+    assert!(report::fig2_text().contains("16 FLOP/cycle"));
+    assert!(report::fig7a_text().contains("ratio"));
+    assert!(report::fig7b_text().contains("SDOTP"));
+    let t3 = report::table3_text(1);
+    assert!(t3.contains("GFLOPS/W"));
+    let t4 = report::table4_text(1);
+    assert!(t4.contains("ExSdotp") && t4.contains("ExFMA"));
+}
+
+#[test]
+fn gemm_sim_matches_reference_through_full_stack_128() {
+    // One big problem through the whole simulator, bit-exact.
+    let (m, n, k) = (32, 32, 64);
+    let mut rng = Rng::new(5);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    let kern = GemmKernel::new(GemmKind::ExSdotp(OpWidth::BtoH), m, n, k);
+    let run = kern.run(&a, &b);
+    let want = kernel_reference(&kern, &a, &b);
+    assert_eq!(run.c, want);
+}
+
+#[test]
+fn e2e_training_via_pjrt_converges() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let mut tr = Trainer::new(&dir, Precision::Hfp8, 42).expect("trainer");
+    let first = tr.step().expect("step");
+    for _ in 0..79 {
+        tr.step().expect("step");
+    }
+    let last = tr.recent_loss(10);
+    assert!(last.is_finite() && first.is_finite());
+    assert!(last < first * 0.75, "loss did not drop: {first} -> {last}");
+    let acc = tr.accuracy().expect("accuracy");
+    assert!(acc > 0.5, "accuracy {acc} too low after 80 steps");
+}
+
+#[test]
+fn e2e_hfp8_matches_fp32_closely() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let mut losses = vec![];
+    for p in [Precision::Hfp8, Precision::Fp32] {
+        let mut tr = Trainer::new(&dir, p, 7).expect("trainer");
+        for _ in 0..120 {
+            tr.step().expect("step");
+        }
+        losses.push(tr.recent_loss(20));
+    }
+    let (hfp8, fp32) = (losses[0], losses[1]);
+    assert!(
+        (hfp8 - fp32).abs() < 0.4,
+        "HFP8 ({hfp8}) should track the fp32 baseline ({fp32}) on this task"
+    );
+}
