@@ -9,9 +9,9 @@
 //! cargo run --release --example train_minifloat -- [--steps 300] [--seed 42]
 //! ```
 
-use anyhow::Result;
 use minifloat_nn::coordinator::{Precision, Trainer};
 use minifloat_nn::util::cli::Args;
+use minifloat_nn::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));

@@ -1,6 +1,8 @@
-//! Table IV regeneration harness + accumulation throughput.
+//! Table IV regeneration harness + accumulation throughput: the
+//! descriptor-driven path vs the monomorphized fast path (bit-identical
+//! results — the speedup is what makes wide sweeps tractable).
 
-use minifloat_nn::accuracy::accumulate;
+use minifloat_nn::accuracy::{accumulate, accumulate_fast};
 use minifloat_nn::report;
 use minifloat_nn::util::bench::Bencher;
 use minifloat_nn::{FP16, FP32, FP8};
@@ -13,4 +15,10 @@ fn main() {
     let mut b = Bencher::new();
     b.bench_throughput("accumulate 2000 fp16->fp32", 2000.0, || accumulate(FP16, FP32, 2000, 1).err_exsdotp);
     b.bench_throughput("accumulate 2000 fp8->fp16", 2000.0, || accumulate(FP8, FP16, 2000, 1).err_exsdotp);
+    b.bench_throughput("fast accumulate 2000 fp16->fp32", 2000.0, || {
+        accumulate_fast(FP16, FP32, 2000, 1).err_exsdotp
+    });
+    b.bench_throughput("fast accumulate 2000 fp8->fp16", 2000.0, || {
+        accumulate_fast(FP8, FP16, 2000, 1).err_exsdotp
+    });
 }

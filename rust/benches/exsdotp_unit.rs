@@ -2,7 +2,9 @@
 //! throughput, plus the SIMD wrapper — the per-lane cost that bounds
 //! the cluster simulator's speed.
 
+use minifloat_nn::exsdotp::fast::{exsdotp_m, simd_exsdotp_m};
 use minifloat_nn::exsdotp::{exsdotp_cascade, exsdotp_exact, ExSdotpUnit, SimdExSdotp};
+use minifloat_nn::formats::{Fp16, Fp32, Fp8};
 use minifloat_nn::util::bench::Bencher;
 use minifloat_nn::util::rng::Rng;
 use minifloat_nn::{RoundingMode, FP16, FP32, FP8};
@@ -51,6 +53,29 @@ fn main() {
         let mut acc = 0u64;
         for i in 0..1024 {
             acc = simd.exsdotp(w64[i], w64[(i + 1) & 1023], acc, rm);
+        }
+        acc
+    });
+
+    println!("\n== monomorphized Tier-A kernels (same datapath, compile-time formats) ==");
+    b.bench_throughput("fast fused 16->32 x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for i in 0..1024 {
+            acc = exsdotp_m::<Fp16, Fp32>(v16[i], v16[(i + 1) & 1023], v16[(i + 2) & 1023], v16[(i + 3) & 1023], acc & 0x7f7fffff, rm);
+        }
+        acc
+    });
+    b.bench_throughput("fast fused 8->16 x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for i in 0..1024 {
+            acc = exsdotp_m::<Fp8, Fp16>(v8[i], v8[(i + 1) & 1023], v8[(i + 2) & 1023], v8[(i + 3) & 1023], acc & 0x7bff, rm);
+        }
+        acc
+    });
+    b.bench_throughput("fast SIMD 8->16 (4 units) x1024", 1024.0, || {
+        let mut acc = 0u64;
+        for i in 0..1024 {
+            acc = simd_exsdotp_m::<Fp8, Fp16>(w64[i], w64[(i + 1) & 1023], acc, rm);
         }
         acc
     });

@@ -1,0 +1,93 @@
+//! The batch-engine headline benchmark: per-element descriptor-driven
+//! GEMM vs the monomorphized batch engine, FP8→FP16 at the paper's
+//! 128-class sizes.
+//!
+//! * *per-element baseline*: `kernel_reference` — the descriptor-driven
+//!   replay that packs and dispatches every lane individually (what
+//!   every accuracy/validation sweep had to run through before Tier B).
+//! * *batched*: `batch::gemm` (`ExecMode::Functional`) — packed
+//!   registers, monomorphized kernels, rows in parallel.
+//!
+//! Both produce bit-identical C (verified here before timing). The run
+//! appends a trajectory point to `BENCH_gemm.json` in the working
+//! directory so CI can track the speedup over time.
+
+use minifloat_nn::batch;
+use minifloat_nn::isa::instr::OpWidth;
+use minifloat_nn::kernels::{kernel_reference, GemmKernel, GemmKind};
+use minifloat_nn::softfloat::RoundingMode;
+use minifloat_nn::util::bench::Bencher;
+use minifloat_nn::util::rng::Rng;
+use std::io::Write;
+
+fn main() {
+    let kind = GemmKind::ExSdotp(OpWidth::BtoH);
+    let (m, n, k) = (128, 128, 128);
+    let mut rng = Rng::new(42);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    let kern = GemmKernel::new(kind, m, n, k);
+    let flops = kern.flops() as f64;
+
+    // Bit-identity gate before any timing: a fast wrong answer is
+    // worthless.
+    let want = kernel_reference(&kern, &a, &b);
+    let got = batch::gemm(kind, m, n, k, &a, &b, RoundingMode::Rne);
+    let identical = want
+        .iter()
+        .zip(&got)
+        .all(|(w, g)| w.to_bits() == g.to_bits() || (w.is_nan() && g.is_nan()));
+    assert!(identical, "batch::gemm diverged from the per-element reference");
+    println!("bit-identity: batch::gemm == kernel_reference on {m}x{n}x{k} FP8->FP16 ✓\n");
+
+    println!("== FP8->FP16 {m}x{n}x{k} GEMM: per-element baseline vs batch engine ==");
+    let mut bench = Bencher::new();
+    let per_elem = bench
+        .bench_throughput("per-element (kernel_reference)", flops, || kernel_reference(&kern, &a, &b))
+        .median
+        .as_secs_f64();
+    let batched = bench
+        .bench_throughput("batched (batch::gemm, parallel rows)", flops, || {
+            batch::gemm(kind, m, n, k, &a, &b, RoundingMode::Rne)
+        })
+        .median
+        .as_secs_f64();
+    let batched_serial = {
+        std::env::set_var("MINIFLOAT_NN_THREADS", "1");
+        let s = bench
+            .bench_throughput("batched (single thread)", flops, || {
+                batch::gemm(kind, m, n, k, &a, &b, RoundingMode::Rne)
+            })
+            .median
+            .as_secs_f64();
+        std::env::remove_var("MINIFLOAT_NN_THREADS");
+        s
+    };
+
+    let speedup = per_elem / batched;
+    let speedup_serial = per_elem / batched_serial;
+    println!("\nspeedup: {speedup:.1}x parallel, {speedup_serial:.1}x single-thread (target: >= 10x)");
+
+    // Trajectory point for CI.
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let json = format!(
+        "{{\"bench\":\"gemm_fp8_fp16_{m}x{n}x{k}\",\"unix_time\":{ts},\
+         \"per_element_ms\":{:.3},\"batched_ms\":{:.3},\"batched_serial_ms\":{:.3},\
+         \"speedup\":{speedup:.2},\"speedup_serial\":{speedup_serial:.2},\
+         \"gflops_batched\":{:.3},\"bit_identical\":true}}\n",
+        per_elem * 1e3,
+        batched * 1e3,
+        batched_serial * 1e3,
+        flops / batched / 1e9,
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open("BENCH_gemm.json") {
+        Ok(mut f) => {
+            let _ = f.write_all(json.as_bytes());
+            println!("trajectory point appended to BENCH_gemm.json");
+        }
+        Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
+    }
+}

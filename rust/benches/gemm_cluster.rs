@@ -4,7 +4,7 @@
 //! measures how fast the cycle-level simulation itself runs.
 
 use minifloat_nn::isa::instr::{OpWidth, ScalarFmt};
-use minifloat_nn::kernels::{GemmKernel, GemmKind};
+use minifloat_nn::kernels::{ExecMode, GemmKernel, GemmKind};
 use minifloat_nn::report;
 use minifloat_nn::util::bench::Bencher;
 use minifloat_nn::util::rng::Rng;
@@ -30,5 +30,20 @@ fn main() {
         let kern = GemmKernel::new(kind, m, n, k);
         let cycles = kern.run(&a, &bm).cycles as f64;
         b.bench_throughput(label, cycles, || kern.run(&a, &bm).cycles);
+    }
+
+    println!("\n== ExecMode::Functional (batch engine) on the same problems ==");
+    let mut rng = Rng::new(9);
+    for (kind, label) in [
+        (GemmKind::FmaF64, "fun FP64 64x64"),
+        (GemmKind::FmaSimd(ScalarFmt::H), "fun FP16 64x64"),
+        (GemmKind::ExSdotp(OpWidth::BtoH), "fun FP8->16 64x64"),
+    ] {
+        let (m, n, k) = (64, 64, 64);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+        let bm: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+        let kern = GemmKernel::new(kind, m, n, k);
+        let flops = kern.flops() as f64;
+        b.bench_throughput(label, flops, || kern.run_mode(&a, &bm, ExecMode::Functional).c.len());
     }
 }

@@ -7,8 +7,11 @@
 //! converted to FP32/FP16 for the error calculation."
 
 use crate::exsdotp::cascade::exsdotp_cascade;
+use crate::exsdotp::fast::exsdotp_m;
 use crate::exsdotp::unit::ExSdotpUnit;
+use crate::formats::spec::{ExpandTo, FormatSpec};
 use crate::formats::FpFormat;
+use crate::softfloat::fast::{ex_fma_m, from_f64_m, to_f64_m};
 use crate::softfloat::{from_f64, to_f64, RoundingMode};
 use crate::util::rng::Rng;
 
@@ -59,6 +62,52 @@ pub fn accumulate(src: FpFormat, dst: FpFormat, n: usize, seed: u64) -> Accuracy
     AccuracyPoint { n, err_exsdotp: rel(acc_fused), err_exfma: rel(acc_casc) }
 }
 
+/// [`accumulate`] on the monomorphized Tier-A kernels: bit-identical
+/// results (same datapaths, compile-time formats — asserted by the
+/// differential tests), several times faster, which is what makes wide
+/// Table IV-style sweeps (`table4_averaged` with hundreds of draws, or
+/// the `n ≫ 2000` regimes of the FP8-training literature) tractable.
+/// Falls back to the descriptor path for non-Table I pairs.
+pub fn accumulate_fast(src: FpFormat, dst: FpFormat, n: usize, seed: u64) -> AccuracyPoint {
+    crate::with_expanding_pair!(src, dst, S, D, { accumulate_m::<S, D>(n, seed) }, {
+        accumulate(src, dst, n, seed)
+    })
+}
+
+/// Monomorphized accumulation experiment — the same draw sequence and
+/// datapaths as [`accumulate`], dispatched at compile time.
+fn accumulate_m<S: ExpandTo<D>, D: FormatSpec>(n: usize, seed: u64) -> AccuracyPoint {
+    let rm = RoundingMode::Rne;
+    let mut rng = Rng::new(seed);
+
+    let mut acc_fused = D::FMT.zero(false);
+    let mut acc_casc = D::FMT.zero(false);
+    let mut acc_f64 = 0f64;
+
+    for _ in 0..n / 2 {
+        let q = |r: &mut Rng| from_f64_m::<S>(r.gaussian(), rm);
+        let (a, b, c, d) = (q(&mut rng), q(&mut rng), q(&mut rng), q(&mut rng));
+        acc_fused = exsdotp_m::<S, D>(a, b, c, d, acc_fused, rm);
+        // The two-ExFMA cascade, monomorphized: c·d + e first, then a·b.
+        let inner = ex_fma_m::<S, D>(c, d, acc_casc, rm);
+        acc_casc = ex_fma_m::<S, D>(a, b, inner, rm);
+        let (af, bf, cf, df) =
+            (to_f64_m::<S>(a), to_f64_m::<S>(b), to_f64_m::<S>(c), to_f64_m::<S>(d));
+        acc_f64 = af.mul_add(bf, acc_f64);
+        acc_f64 = cf.mul_add(df, acc_f64);
+    }
+
+    let golden = to_f64_m::<D>(from_f64_m::<D>(acc_f64, rm));
+    let rel = |x: u64| {
+        if golden == 0.0 {
+            (to_f64_m::<D>(x) - golden).abs()
+        } else {
+            ((to_f64_m::<D>(x) - golden) / golden).abs()
+        }
+    };
+    AccuracyPoint { n, err_exsdotp: rel(acc_fused), err_exfma: rel(acc_casc) }
+}
+
 /// The full Table IV grid: FP16→FP32 and FP8→FP16, n ∈ {500,1000,2000}.
 pub fn table4(seed: u64) -> Vec<(FpFormat, FpFormat, AccuracyPoint)> {
     use crate::formats::{FP16, FP32, FP8};
@@ -72,7 +121,9 @@ pub fn table4(seed: u64) -> Vec<(FpFormat, FpFormat, AccuracyPoint)> {
 }
 
 /// Averaged over many seeds (the paper reports a single draw; averaging
-/// shows the trend is not seed luck).
+/// shows the trend is not seed luck). Runs on [`accumulate_fast`] —
+/// bit-identical to the descriptor path, so the averages are exactly
+/// those the slow path would produce.
 pub fn table4_averaged(seeds: u64) -> Vec<(FpFormat, FpFormat, usize, f64, f64)> {
     use crate::formats::{FP16, FP32, FP8};
     let mut out = Vec::new();
@@ -81,7 +132,7 @@ pub fn table4_averaged(seeds: u64) -> Vec<(FpFormat, FpFormat, usize, f64, f64)>
             let mut s_fused = 0.0;
             let mut s_casc = 0.0;
             for seed in 0..seeds {
-                let p = accumulate(src, dst, n, 1000 + seed);
+                let p = accumulate_fast(src, dst, n, 1000 + seed);
                 s_fused += p.err_exsdotp;
                 s_casc += p.err_exfma;
             }
@@ -160,6 +211,29 @@ mod tests {
         assert_eq!(t.len(), 6);
         assert_eq!(t[0].2.n, 500);
         assert_eq!(t[5].2.n, 2000);
+    }
+
+    #[test]
+    fn fast_path_bit_identical_to_descriptor_path() {
+        // accumulate_fast must reproduce accumulate exactly — same draw
+        // sequence, same datapaths, compile-time formats. Relative
+        // errors are f64-exact equal, not approximately equal.
+        use crate::formats::{FP16ALT, FP8ALT};
+        for (src, dst) in [(FP16, FP32), (FP16ALT, FP32), (FP8, FP16), (FP8ALT, FP16), (FP8, FP16ALT), (FP8ALT, FP16ALT)] {
+            for n in [100usize, 501, 1000] {
+                for seed in [1u64, 42, 977] {
+                    let slow = accumulate(src, dst, n, seed);
+                    let fast = accumulate_fast(src, dst, n, seed);
+                    assert_eq!(slow.err_exsdotp.to_bits(), fast.err_exsdotp.to_bits(), "{}→{} n={n} seed={seed}", src.name(), dst.name());
+                    assert_eq!(slow.err_exfma.to_bits(), fast.err_exfma.to_bits(), "{}→{} n={n} seed={seed}", src.name(), dst.name());
+                }
+            }
+        }
+        // Custom formats fall back to the descriptor path.
+        let e5m1 = FpFormat::new(5, 1);
+        let a = accumulate(e5m1, FP16, 200, 3);
+        let b = accumulate_fast(e5m1, FP16, 200, 3);
+        assert_eq!(a.err_exsdotp.to_bits(), b.err_exsdotp.to_bits());
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Tier B of the batch numerics engine: slice-level operations over
+//! packed 64-bit registers.
+//!
+//! The cycle-accurate cluster pushes every simulated FP instruction
+//! through a runtime-`FpFormat`-dispatched `unpack → compute →
+//! round_pack` chain — perfect for studying the machine, hopeless for
+//! *using* the numerics at scale (a 128×128×128 FP8 GEMM is two million
+//! ExSdotp lane evaluations, each re-deriving format parameters). This
+//! module is the scale path:
+//!
+//! * operands live packed in `u64` words, exactly as the 64-bit FP
+//!   register file holds them (§III-D), and move through the
+//!   monomorphized Tier-A kernels ([`crate::softfloat::fast`],
+//!   [`crate::exsdotp::fast`]) with no per-lane re-dispatch;
+//! * slice operations ([`exsdotp_accumulate`], [`cast_slice`],
+//!   [`gemm`]) iterate whole registers and parallelize across output
+//!   rows with [`crate::util::parallel`] (scoped threads; rayon is
+//!   unavailable offline);
+//! * every operation replays the **identical accumulation order** of
+//!   the generated GEMM kernels (packed-lane partial sums, `vsum`
+//!   epilogue tree), so results are bit-identical to the simulated
+//!   cluster's C matrix — the differential tests in this module and the
+//!   `ExecMode` equivalence tests in [`crate::kernels`] pin that down.
+//!
+//! This is the engine behind `ExecMode::Functional`
+//! ([`crate::kernels::gemm::ExecMode`]) and the accuracy-sweep fast
+//! path ([`crate::accuracy`]).
+
+#[cfg(test)]
+mod tests;
+
+use crate::exsdotp::fast::{simd_exsdotp_m, vsum_tree_m};
+use crate::exsdotp::simd::SimdExSdotp;
+use crate::formats::spec::{ExpandTo, FormatSpec, Fp16, Fp16alt, Fp32, Fp64, Fp8, Fp8alt};
+use crate::formats::FpFormat;
+use crate::kernels::gemm::GemmKind;
+use crate::softfloat::fast::{cast_m, fma_m, from_f64_m, to_f64_m};
+use crate::softfloat::{cast, RoundingMode};
+use crate::util::parallel::par_chunks_mut;
+
+/// Elements per parallel work chunk for flat slice operations.
+const CAST_CHUNK: usize = 8192;
+
+/// Dispatch a runtime [`FpFormat`] to its compile-time [`FormatSpec`]
+/// type, binding it as `$S` within `$body`. Falls through (no-op) for
+/// non-paper formats so the caller's fallback code runs; `$body` must
+/// diverge (e.g. `return`) when it fully handles the case.
+macro_rules! with_spec {
+    ($fmt:expr, $S:ident, $body:block) => {
+        match ($fmt.exp_bits, $fmt.man_bits) {
+            (5, 2) => {
+                type $S = Fp8;
+                $body
+            }
+            (4, 3) => {
+                type $S = Fp8alt;
+                $body
+            }
+            (5, 10) => {
+                type $S = Fp16;
+                $body
+            }
+            (8, 7) => {
+                type $S = Fp16alt;
+                $body
+            }
+            (8, 23) => {
+                type $S = Fp32;
+                $body
+            }
+            (11, 52) => {
+                type $S = Fp64;
+                $body
+            }
+            _ => {}
+        }
+    };
+}
+
+// ---------------------------------------------------------------- casts
+
+/// Cast every element of `bits` (encodings in `from`, one per `u64`)
+/// into `to`, correctly rounded. Monomorphizes over the six paper
+/// formats (36 specialized pairs) and falls back to the descriptor path
+/// for custom formats; parallel over chunks either way.
+pub fn cast_slice(from: FpFormat, to: FpFormat, bits: &[u64], rm: RoundingMode) -> Vec<u64> {
+    let mut out = vec![0u64; bits.len()];
+    with_spec!(from, S, {
+        with_spec!(to, D, {
+            cast_into_m::<S, D>(bits, &mut out, rm);
+            return out;
+        })
+    });
+    // Fallback: custom formats go through the runtime descriptors.
+    par_chunks_mut(&mut out, CAST_CHUNK, |ci, chunk| {
+        let base = ci * CAST_CHUNK;
+        for (off, o) in chunk.iter_mut().enumerate() {
+            *o = cast(from, to, bits[base + off], rm);
+        }
+    });
+    out
+}
+
+/// Monomorphized slice cast `S → D` into a preallocated output.
+pub fn cast_into_m<S: FormatSpec, D: FormatSpec>(bits: &[u64], out: &mut [u64], rm: RoundingMode) {
+    assert_eq!(bits.len(), out.len());
+    par_chunks_mut(out, CAST_CHUNK, |ci, chunk| {
+        let base = ci * CAST_CHUNK;
+        for (off, o) in chunk.iter_mut().enumerate() {
+            *o = cast_m::<S, D>(bits[base + off], rm);
+        }
+    });
+}
+
+// --------------------------------------------------------- accumulation
+
+/// Fold packed source registers through the SIMD ExSdotp datapath:
+/// `acc = exsdotp(rs1[i], rs2[i], acc)` over the whole slice, exactly
+/// the register-level loop a GEMM inner kernel executes. `acc0` and the
+/// result are packed `dst` lanes.
+///
+/// Dispatches to the monomorphized kernel for Table I's six expanding
+/// pairs; custom formats use the descriptor-driven SIMD wrapper.
+pub fn exsdotp_accumulate(
+    src: FpFormat,
+    dst: FpFormat,
+    rs1: &[u64],
+    rs2: &[u64],
+    acc0: u64,
+    rm: RoundingMode,
+) -> u64 {
+    assert_eq!(rs1.len(), rs2.len(), "operand streams must pair up");
+    crate::with_expanding_pair!(
+        src,
+        dst,
+        S,
+        D,
+        { exsdotp_accumulate_m::<S, D>(rs1, rs2, acc0, rm) },
+        {
+            let simd = SimdExSdotp::new(src, dst);
+            rs1.iter().zip(rs2).fold(acc0, |acc, (&x, &y)| simd.exsdotp(x, y, acc, rm))
+        }
+    )
+}
+
+/// Monomorphized [`exsdotp_accumulate`].
+#[inline]
+pub fn exsdotp_accumulate_m<S: ExpandTo<D>, D: FormatSpec>(
+    rs1: &[u64],
+    rs2: &[u64],
+    acc0: u64,
+    rm: RoundingMode,
+) -> u64 {
+    debug_assert_eq!(rs1.len(), rs2.len());
+    rs1.iter().zip(rs2).fold(acc0, |acc, (&x, &y)| simd_exsdotp_m::<S, D>(x, y, acc, rm))
+}
+
+// -------------------------------------------------------------- packing
+
+/// Quantize a row-major f64 matrix into packed `u64` words, `F::LANES`
+/// elements per word along rows (the layout SSR stream `ft0` delivers
+/// to the kernels). `cols` must divide by the lane count.
+pub fn pack_rows_m<F: FormatSpec>(data: &[f64], rows: usize, cols: usize, rm: RoundingMode) -> Vec<u64> {
+    let l = F::LANES as usize;
+    assert_eq!(data.len(), rows * cols);
+    assert_eq!(cols % l, 0, "cols must divide by the SIMD width");
+    let wpr = cols / l;
+    let mut out = vec![0u64; rows * wpr];
+    par_chunks_mut(&mut out, wpr.max(1), |r, row| {
+        for (w, word) in row.iter_mut().enumerate() {
+            let mut packed = 0u64;
+            for lane_i in 0..l {
+                let v = from_f64_m::<F>(data[r * cols + w * l + lane_i], rm);
+                packed |= v << (lane_i as u32 * F::WIDTH);
+            }
+            *word = packed;
+        }
+    });
+    out
+}
+
+/// Quantize a row-major f64 matrix into packed words running down each
+/// *column* (`F::LANES` consecutive row elements of one column per
+/// word) — the layout stream `ft1` delivers for column-major B. `rows`
+/// must divide by the lane count. Output is column-major: column `j`
+/// occupies words `[j*rows/LANES, (j+1)*rows/LANES)`.
+pub fn pack_cols_m<F: FormatSpec>(data: &[f64], rows: usize, cols: usize, rm: RoundingMode) -> Vec<u64> {
+    let l = F::LANES as usize;
+    assert_eq!(data.len(), rows * cols);
+    assert_eq!(rows % l, 0, "rows must divide by the SIMD width");
+    let wpc = rows / l;
+    let mut out = vec![0u64; cols * wpc];
+    par_chunks_mut(&mut out, wpc.max(1), |j, col| {
+        for (w, word) in col.iter_mut().enumerate() {
+            let mut packed = 0u64;
+            for lane_i in 0..l {
+                let v = from_f64_m::<F>(data[(w * l + lane_i) * cols + j], rm);
+                packed |= v << (lane_i as u32 * F::WIDTH);
+            }
+            *word = packed;
+        }
+    });
+    out
+}
+
+// ----------------------------------------------------------------- GEMM
+
+/// Functional GEMM `C = A·B` on the batch engine: same numerics, same
+/// accumulation order, same `vsum` epilogue as the generated cluster
+/// kernels — bit-identical C — but iterating packed registers directly
+/// and parallelizing across output rows.
+///
+/// `a` is `m×k`, `b` is `k×n`, both row-major f64 (quantized to the
+/// kernel's source format on packing, like [`GemmKind`]'s simulated
+/// path); returns row-major `m×n` C decoded to f64.
+pub fn gemm(kind: GemmKind, m: usize, n: usize, k: usize, a: &[f64], b: &[f64], rm: RoundingMode) -> Vec<f64> {
+    use crate::isa::instr::{OpWidth, ScalarFmt};
+    assert_eq!(a.len(), m * k, "A must be m×k");
+    assert_eq!(b.len(), k * n, "B must be k×n");
+    match kind {
+        GemmKind::FmaF64 => gemm_fma64(m, n, k, a, b, rm),
+        GemmKind::FmaSimd(ScalarFmt::S) => gemm_fma_simd::<Fp32, Fp16, Fp32>(m, n, k, a, b, rm),
+        GemmKind::FmaSimd(ScalarFmt::H) => gemm_fma_simd::<Fp16, Fp8, Fp16>(m, n, k, a, b, rm),
+        GemmKind::FmaSimd(f) => panic!("unsupported SIMD FMA format {f:?}"),
+        GemmKind::ExSdotp(OpWidth::HtoS) => gemm_m::<Fp16, Fp32>(m, n, k, a, b, rm),
+        GemmKind::ExSdotp(OpWidth::BtoH) => gemm_m::<Fp8, Fp16>(m, n, k, a, b, rm),
+    }
+}
+
+/// Monomorphized expanding-GEMM core (`ExSdotp` kernels): packed SIMD
+/// ExSdotp inner loop + `vsum` tree epilogue, rows in parallel.
+pub fn gemm_m<S: ExpandTo<D>, D: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+) -> Vec<f64> {
+    let l = S::LANES as usize;
+    assert_eq!(k % l, 0, "K must divide by the SIMD width");
+    let wpr = k / l;
+    let ap = pack_rows_m::<S>(a, m, k, rm);
+    let bp = pack_cols_m::<S>(b, k, n, rm);
+    let mut c = vec![0f64; m * n];
+    par_chunks_mut(&mut c, n.max(1), |i, row| {
+        let aw = &ap[i * wpr..(i + 1) * wpr];
+        for (j, out) in row.iter_mut().enumerate() {
+            let bw = &bp[j * wpr..(j + 1) * wpr];
+            let mut acc = 0u64; // all destination lanes +0.0
+            for (&x, &y) in aw.iter().zip(bw) {
+                acc = simd_exsdotp_m::<S, D>(x, y, acc, rm);
+            }
+            *out = to_f64_m::<D>(vsum_tree_m::<S, D>(acc, rm));
+        }
+    });
+    c
+}
+
+/// Packed-SIMD FMA GEMM (`FmaSimd` kernels): lanewise FMA partial sums
+/// in `F`, reduced with the `(RS → RD)` `vsum` tree the corresponding
+/// generated kernel uses in its epilogue.
+fn gemm_fma_simd<F: FormatSpec, RS: ExpandTo<RD>, RD: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+) -> Vec<f64> {
+    let l = F::LANES as usize;
+    assert_eq!(k % l, 0, "K must divide by the SIMD width");
+    let wpr = k / l;
+    let ap = pack_rows_m::<F>(a, m, k, rm);
+    let bp = pack_cols_m::<F>(b, k, n, rm);
+    let mut c = vec![0f64; m * n];
+    par_chunks_mut(&mut c, n.max(1), |i, row| {
+        let aw = &ap[i * wpr..(i + 1) * wpr];
+        for (j, out) in row.iter_mut().enumerate() {
+            let bw = &bp[j * wpr..(j + 1) * wpr];
+            let mut acc = 0u64;
+            for (&x, &y) in aw.iter().zip(bw) {
+                acc = simd_fma_m::<F>(x, y, acc, rm);
+            }
+            *out = to_f64_m::<RD>(vsum_tree_m::<RS, RD>(acc, rm));
+        }
+    });
+    c
+}
+
+/// Scalar FP64 FMA GEMM (the classic Snitch kernel's numerics).
+fn gemm_fma64(m: usize, n: usize, k: usize, a: &[f64], b: &[f64], rm: RoundingMode) -> Vec<f64> {
+    // Pack B transposed so the inner loop walks contiguous memory.
+    let mut bt = vec![0u64; n * k];
+    par_chunks_mut(&mut bt, k.max(1), |j, col| {
+        for (kk, w) in col.iter_mut().enumerate() {
+            *w = b[kk * n + j].to_bits();
+        }
+    });
+    let mut c = vec![0f64; m * n];
+    par_chunks_mut(&mut c, n.max(1), |i, row| {
+        for (j, out) in row.iter_mut().enumerate() {
+            let mut acc = 0u64; // +0.0
+            for kk in 0..k {
+                acc = fma_m::<Fp64>(a[i * k + kk].to_bits(), bt[j * k + kk], acc, rm);
+            }
+            *out = f64::from_bits(acc);
+        }
+    });
+    c
+}
+
+/// Lanewise FMA over packed words (monomorphized twin of the PE's
+/// vectorial FMA; constant trip count after monomorphization).
+#[inline]
+pub fn simd_fma_m<F: FormatSpec>(rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) -> u64 {
+    // `u64::MAX >> (64 - WIDTH)` is shift-safe for every width up to 64
+    // (a single 64-bit lane degenerates to one scalar FMA).
+    let mask = u64::MAX >> (64 - F::WIDTH);
+    let mut out = 0u64;
+    for i in 0..F::LANES {
+        let sh = i * F::WIDTH;
+        let v = fma_m::<F>((rs1 >> sh) & mask, (rs2 >> sh) & mask, (rd >> sh) & mask, rm);
+        out |= (v & mask) << sh;
+    }
+    out
+}
+

@@ -10,7 +10,7 @@
 pub mod data;
 
 use crate::runtime::{Executable, Runtime, Tensor};
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use data::SpiralDataset;
 
 /// Model shape constants — must match `python/compile/model.py`
@@ -119,7 +119,7 @@ impl Trainer {
         inputs.push(x);
         inputs.push(y);
         let mut out = self.step_exe.run(&inputs)?;
-        anyhow::ensure!(out.len() == 7, "train_step returns 6 params + loss, got {}", out.len());
+        crate::ensure!(out.len() == 7, "train_step returns 6 params + loss, got {}", out.len());
         let loss = out.pop().unwrap().data[0];
         self.params.tensors = out;
         let step = self.history.len();

@@ -25,7 +25,7 @@
 //! through the FP CSR (`src_is_alt` / `dst_is_alt`).
 
 use super::ssr::Ssr;
-use crate::exsdotp::simd::{lane, set_lane, SimdExSdotp};
+use crate::exsdotp::simd::{lane, set_lane, SimdExSdotp, SimdOp};
 use crate::formats::FpFormat;
 use crate::isa::csr::{addr as csr_addr, FpCsr};
 use crate::isa::instr::{FReg, Instr, OpWidth, Reg};
@@ -482,7 +482,7 @@ impl Core {
                 let (a, b) = (self.read_fp(fs1, bus), self.read_fp(fs2, bus));
                 let acc = self.read_fp(fd, bus);
                 let out = simd.exsdotp(a, b, acc, rm);
-                self.stats.flops += 4 * simd.n_units() as u64;
+                self.stats.flops += simd.flops(SimdOp::ExSdotp);
                 self.stats.ops_sdotp += 1;
                 self.write_fp(fd, out, latency::SDOTP, bus);
             }
@@ -491,7 +491,7 @@ impl Core {
                 let a = self.read_fp(fs1, bus);
                 let acc = self.read_fp(fd, bus);
                 let out = simd.exvsum(a, acc, rm);
-                self.stats.flops += 2 * simd.n_units() as u64;
+                self.stats.flops += simd.flops(SimdOp::ExVsum);
                 self.stats.ops_sdotp += 1;
                 self.write_fp(fd, out, latency::SDOTP, bus);
             }
@@ -500,7 +500,7 @@ impl Core {
                 let a = self.read_fp(fs1, bus);
                 let acc = self.read_fp(fd, bus);
                 let out = simd.vsum(a, acc, rm);
-                self.stats.flops += simd.n_units() as u64;
+                self.stats.flops += simd.flops(SimdOp::Vsum);
                 self.stats.ops_sdotp += 1;
                 self.write_fp(fd, out, latency::SDOTP, bus);
             }

@@ -1,0 +1,190 @@
+//! Monomorphized ExSdotp kernels — Tier A of the batch numerics engine.
+//!
+//! Compile-time-dispatched twins of [`super::unit::ExSdotpUnit`] and
+//! [`super::simd::SimdExSdotp`]: generic over a
+//! [`FormatSpec`](crate::formats::FormatSpec) `(src, dst)` pair bounded
+//! by [`ExpandTo`](crate::formats::ExpandTo), so only Table I's six
+//! hardware-legal expanding combinations instantiate. Each function
+//! builds the unit with constant formats and calls the **same**
+//! `#[inline]` datapath implementation — one specialized code path per
+//! pair, bit-identical to the descriptor-driven API by construction.
+//!
+//! This is what the slice-level engine ([`crate::batch`]) runs in its
+//! inner loops: the SIMD wrappers have constant lane counts and widths
+//! (the `for` trip counts below are compile-time constants after
+//! monomorphization), so there is no per-lane re-dispatch left.
+
+use super::unit::ExSdotpUnit;
+use crate::formats::spec::{ExpandTo, FormatSpec};
+use crate::softfloat::round::RoundingMode;
+
+/// The `S → D` unit instance with compile-time formats. The
+/// `S: ExpandTo<D>` bound enforces statically what
+/// [`ExSdotpUnit::new`] asserts at runtime (Table I legality).
+#[inline]
+pub fn unit_m<S: ExpandTo<D>, D: FormatSpec>() -> ExSdotpUnit {
+    ExSdotpUnit { src: S::FMT, dst: D::FMT }
+}
+
+/// Monomorphized scalar `a×b + c×d + e` (eq. 1).
+#[inline]
+pub fn exsdotp_m<S: ExpandTo<D>, D: FormatSpec>(a: u64, b: u64, c: u64, d: u64, e: u64, rm: RoundingMode) -> u64 {
+    unit_m::<S, D>().exsdotp(a, b, c, d, e, rm)
+}
+
+/// Monomorphized scalar ExVsum `a + c + e` (eq. 5).
+#[inline]
+pub fn exvsum_m<S: ExpandTo<D>, D: FormatSpec>(a: u64, c: u64, e: u64, rm: RoundingMode) -> u64 {
+    unit_m::<S, D>().exvsum(a, c, e, rm)
+}
+
+/// Monomorphized scalar Vsum `a + c + e`, all in `D` (eq. 6).
+#[inline]
+pub fn vsum_m<S: ExpandTo<D>, D: FormatSpec>(a: u64, c: u64, e: u64, rm: RoundingMode) -> u64 {
+    unit_m::<S, D>().vsum(a, c, e, rm)
+}
+
+/// Monomorphized SIMD `exsdotp rd, rs1, rs2`: all `D::LANES` units in
+/// one call, constant lane plumbing.
+#[inline]
+pub fn simd_exsdotp_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) -> u64 {
+    let unit = unit_m::<S, D>();
+    let mut out = rd;
+    for i in 0..D::LANES {
+        let a = lane_c::<S>(rs1, 2 * i);
+        let b = lane_c::<S>(rs2, 2 * i);
+        let c = lane_c::<S>(rs1, 2 * i + 1);
+        let d = lane_c::<S>(rs2, 2 * i + 1);
+        let e = lane_c::<D>(rd, i);
+        out = set_lane_c::<D>(out, i, unit.exsdotp(a, b, c, d, e, rm));
+    }
+    out
+}
+
+/// Monomorphized SIMD `exvsum rd, rs1`.
+#[inline]
+pub fn simd_exvsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: RoundingMode) -> u64 {
+    let unit = unit_m::<S, D>();
+    let mut out = rd;
+    for i in 0..D::LANES {
+        let a = lane_c::<S>(rs1, 2 * i);
+        let c = lane_c::<S>(rs1, 2 * i + 1);
+        let e = lane_c::<D>(rd, i);
+        out = set_lane_c::<D>(out, i, unit.exvsum(a, c, e, rm));
+    }
+    out
+}
+
+/// Monomorphized SIMD `vsum rd, rs1` (pairwise reduction of `D` lanes;
+/// upper `rd` lanes pass through).
+#[inline]
+pub fn simd_vsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: RoundingMode) -> u64 {
+    let unit = unit_m::<S, D>();
+    let mut out = rd;
+    for i in 0..D::LANES / 2 {
+        let a = lane_c::<D>(rs1, 2 * i);
+        let c = lane_c::<D>(rs1, 2 * i + 1);
+        let e = lane_c::<D>(rd, i);
+        out = set_lane_c::<D>(out, i, unit.vsum(a, c, e, rm));
+    }
+    out
+}
+
+/// Fold a packed accumulator register down to its low lane with the
+/// kernels' `vsum` tree (one level for 2 destination lanes, two levels
+/// for 4 — exactly the epilogue the generated GEMM programs execute).
+#[inline]
+pub fn vsum_tree_m<S: ExpandTo<D>, D: FormatSpec>(acc: u64, rm: RoundingMode) -> u64 {
+    let mut t = acc;
+    let mut lanes = D::LANES;
+    while lanes > 1 {
+        t = simd_vsum_m::<S, D>(t, 0, rm);
+        lanes /= 2;
+    }
+    lane_c::<D>(t, 0)
+}
+
+/// Compile-time-width lane extract (`F::WIDTH < 64` for every
+/// expanding-pair member, so the shift is always in range).
+#[inline]
+fn lane_c<F: FormatSpec>(reg: u64, i: u32) -> u64 {
+    (reg >> (i * F::WIDTH)) & ((1u64 << F::WIDTH) - 1)
+}
+
+/// Compile-time-width lane insert.
+#[inline]
+fn set_lane_c<F: FormatSpec>(reg: u64, i: u32, val: u64) -> u64 {
+    let mask = ((1u64 << F::WIDTH) - 1) << (i * F::WIDTH);
+    (reg & !mask) | ((val << (i * F::WIDTH)) & mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exsdotp::simd::{lane, SimdExSdotp};
+    use crate::formats::spec::{Fp16, Fp16alt, Fp32, Fp8, Fp8alt};
+    use crate::formats::FpFormat;
+    use crate::util::prop::{for_all, FpGen};
+
+    const RMS: [RoundingMode; 5] = [
+        RoundingMode::Rne,
+        RoundingMode::Rtz,
+        RoundingMode::Rdn,
+        RoundingMode::Rup,
+        RoundingMode::Rmm,
+    ];
+
+    fn same(fmt: FpFormat, x: u64, y: u64) -> bool {
+        (fmt.is_nan(x) && fmt.is_nan(y)) || x == y
+    }
+
+    /// One differential sweep: monomorphized vs descriptor-driven, all
+    /// rounding modes, boundary-biased inputs (NaN/Inf/subnormal/±0).
+    fn diff_sweep<S: ExpandTo<D>, D: FormatSpec>(cases: u64) {
+        let unit = ExSdotpUnit::new(S::FMT, D::FMT);
+        let simd = SimdExSdotp::new(S::FMT, D::FMT);
+        let gs = FpGen::new(S::FMT);
+        let gd = FpGen::new(D::FMT);
+        for_all("fast exsdotp vs descriptor", cases, |rng| {
+            let (a, b, c, d) = (gs.any(rng), gs.any(rng), gs.any(rng), gs.any(rng));
+            let e = gd.any(rng);
+            let (rs1, rs2, rd) = (rng.next_u64(), rng.next_u64(), rng.next_u64());
+            for rm in RMS {
+                assert_eq!(exsdotp_m::<S, D>(a, b, c, d, e, rm), unit.exsdotp(a, b, c, d, e, rm));
+                assert_eq!(exvsum_m::<S, D>(a, c, e, rm), unit.exvsum(a, c, e, rm));
+                assert_eq!(vsum_m::<S, D>(e, e, e, rm), unit.vsum(e, e, e, rm));
+                assert_eq!(simd_exsdotp_m::<S, D>(rs1, rs2, rd, rm), simd.exsdotp(rs1, rs2, rd, rm));
+                assert_eq!(simd_exvsum_m::<S, D>(rs1, rd, rm), simd.exvsum(rs1, rd, rm));
+                assert_eq!(simd_vsum_m::<S, D>(rs1, rd, rm), simd.vsum(rs1, rd, rm));
+            }
+        });
+    }
+
+    #[test]
+    fn fast_tier_bit_identical_all_pairs() {
+        // All six Table I expanding pairs compile (ExpandTo) and agree.
+        diff_sweep::<Fp16, Fp32>(4_000);
+        diff_sweep::<Fp16alt, Fp32>(4_000);
+        diff_sweep::<Fp8, Fp16>(4_000);
+        diff_sweep::<Fp8, Fp16alt>(4_000);
+        diff_sweep::<Fp8alt, Fp16>(4_000);
+        diff_sweep::<Fp8alt, Fp16alt>(4_000);
+    }
+
+    #[test]
+    fn vsum_tree_matches_kernel_epilogue() {
+        // The tree must reproduce the generated kernels' epilogue: one
+        // vsum level for 16→32, two for 8→16, reading lane 0.
+        let rm = RoundingMode::Rne;
+        let s1632 = SimdExSdotp::new(crate::formats::FP16, crate::formats::FP32);
+        let s816 = SimdExSdotp::new(crate::formats::FP8, crate::formats::FP16);
+        for_all("vsum tree", 5_000, |rng| {
+            let acc = rng.next_u64();
+            let want32 = lane(s1632.vsum(acc, 0, rm), 0, 32);
+            assert!(same(crate::formats::FP32, vsum_tree_m::<Fp16, Fp32>(acc, rm), want32));
+            let t = s816.vsum(acc, 0, rm);
+            let want16 = lane(s816.vsum(t, 0, rm), 0, 16);
+            assert!(same(crate::formats::FP16, vsum_tree_m::<Fp8, Fp16>(acc, rm), want16));
+        });
+    }
+}

@@ -31,9 +31,13 @@
 //!   with operand packing/unpacking.
 //! * [`table1`] — the supported source/destination format combinations
 //!   (Table I) as a queryable matrix.
+//! * [`fast`] — monomorphized twins of [`unit`] and [`simd`] (constant
+//!   formats via [`crate::formats::FormatSpec`]), the per-lane kernels
+//!   behind the slice-level engine in [`crate::batch`].
 
 pub mod cascade;
 pub mod exact;
+pub mod fast;
 pub mod simd;
 pub mod table1;
 #[cfg(test)]
@@ -42,6 +46,7 @@ pub mod unit;
 
 pub use cascade::{exsdotp_cascade, exvsum_cascade};
 pub use exact::{exsdotp_exact, vsum_exact};
+pub use fast::{exsdotp_m, simd_exsdotp_m, vsum_tree_m};
 pub use simd::{SimdExSdotp, SimdOp};
 pub use table1::{supported, OpKind};
 pub use unit::ExSdotpUnit;

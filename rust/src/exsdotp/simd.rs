@@ -35,17 +35,30 @@ pub struct SimdExSdotp {
     pub unit: ExSdotpUnit,
 }
 
-/// Extract lane `i` of width `w` bits from a 64-bit register.
+/// Extract lane `i` of width `w` bits from a 64-bit register. Lanes
+/// beyond the register (`i·w ≥ 64`) do not exist and read as zero —
+/// guarded explicitly, since `reg >> 64` would panic in debug builds
+/// and is undefined-behaviour-adjacent (wrapping) in release.
 #[inline]
 pub fn lane(reg: u64, i: u32, w: u32) -> u64 {
-    (reg >> (i * w)) & if w >= 64 { u64::MAX } else { (1u64 << w) - 1 }
+    let shift = i * w;
+    if shift >= 64 {
+        return 0;
+    }
+    (reg >> shift) & if w >= 64 { u64::MAX } else { (1u64 << w) - 1 }
 }
 
-/// Insert `val` as lane `i` of width `w` into `reg`.
+/// Insert `val` as lane `i` of width `w` into `reg`. Writes to lanes
+/// beyond the register (`i·w ≥ 64`) are dropped (same guard as
+/// [`lane`]).
 #[inline]
 pub fn set_lane(reg: u64, i: u32, w: u32, val: u64) -> u64 {
-    let mask = if w >= 64 { u64::MAX } else { ((1u64 << w) - 1) << (i * w) };
-    (reg & !mask) | ((val << (i * w)) & mask)
+    let shift = i * w;
+    if shift >= 64 {
+        return reg;
+    }
+    let mask = if w >= 64 { u64::MAX } else { ((1u64 << w) - 1) << shift };
+    (reg & !mask) | ((val << shift) & mask)
 }
 
 impl SimdExSdotp {
@@ -59,12 +72,25 @@ impl SimdExSdotp {
         self.unit.dst.lanes_in_64()
     }
 
+    /// Active unit pairs for the non-expanding Vsum: `rd_i = rs1_{2i} +
+    /// rs1_{2i+1} + rd_i` consumes two `dst` lanes per result, so only
+    /// `n_units/2` units participate (zero for a single-lane
+    /// destination, where no pair exists and `rd` passes through).
+    pub fn vsum_pairs(&self) -> u32 {
+        self.n_units() / 2
+    }
+
     /// FLOP performed by one SIMD instruction of kind `op` (the paper
-    /// counts 1 ExSdotp = 4 FLOP, a three-term add = 2 FLOP).
+    /// counts 1 ExSdotp = 4 FLOP, a three-term add = 2 FLOP). Counts
+    /// follow the *active* units: all `n_units` for ExSdotp/ExVsum,
+    /// [`Self::vsum_pairs`] for Vsum — consistent with what
+    /// [`Self::execute`] actually computes, including single-lane
+    /// destination configurations where Vsum performs no work.
     pub fn flops(&self, op: SimdOp) -> u64 {
         match op {
             SimdOp::ExSdotp => 4 * self.n_units() as u64,
-            SimdOp::ExVsum | SimdOp::Vsum => 2 * self.n_units() as u64 / 2,
+            SimdOp::ExVsum => 2 * self.n_units() as u64,
+            SimdOp::Vsum => 2 * self.vsum_pairs() as u64,
         }
     }
 
@@ -108,12 +134,13 @@ impl SimdExSdotp {
     }
 
     /// SIMD `vsum rd, rs1`: pairwise reduction of `dst`-format lanes of
-    /// rs1 into the low lanes of rd; upper lanes pass through.
+    /// rs1 into the low lanes of rd; upper lanes pass through. With a
+    /// single-lane destination there is no pair to fold and `rd` passes
+    /// through unchanged (consistent with [`Self::flops`] reporting 0).
     pub fn vsum(&self, rs1: u64, rd: u64, rm: RoundingMode) -> u64 {
         let dw = self.unit.dst.width();
-        let pairs = self.n_units() / 2;
         let mut out = rd;
-        for i in 0..pairs.max(1) {
+        for i in 0..self.vsum_pairs() {
             let a = lane(rs1, 2 * i, dw);
             let c = lane(rs1, 2 * i + 1, dw);
             let e = lane(rd, i, dw);

@@ -390,6 +390,43 @@ fn simd_unit_counts_match_paper() {
 }
 
 #[test]
+fn lane_helpers_tolerate_out_of_register_indices() {
+    // Regression: `lane`/`set_lane` computed `reg >> (i*w)` which panics
+    // in debug (and wraps in release) once i*w >= 64 — reachable for
+    // single-lane (64-bit destination) configurations.
+    let reg = 0xdead_beef_cafe_babe_u64;
+    assert_eq!(lane(reg, 1, 64), 0);
+    assert_eq!(lane(reg, 2, 32), 0);
+    assert_eq!(lane(reg, 8, 8), 0);
+    assert_eq!(set_lane(reg, 1, 64, 0x42), reg);
+    assert_eq!(set_lane(reg, 4, 16, 0x42), reg);
+    // In-register lanes are unaffected by the guard.
+    assert_eq!(lane(reg, 0, 64), reg);
+    assert_eq!(lane(reg, 3, 16), 0xdead);
+}
+
+#[test]
+fn vsum_and_flops_consistent_per_op() {
+    // flops() must report exactly the work execute() performs.
+    let s1632 = SimdExSdotp::new(FP16, FP32);
+    let s816 = SimdExSdotp::new(FP8, FP16);
+    assert_eq!(s1632.vsum_pairs(), 1);
+    assert_eq!(s816.vsum_pairs(), 2);
+    assert_eq!(s1632.flops(SimdOp::Vsum), 2);
+    assert_eq!(s816.flops(SimdOp::Vsum), 4);
+    assert_eq!(s1632.flops(SimdOp::ExVsum), 4);
+    assert_eq!(s816.flops(SimdOp::ExVsum), 8);
+    // Vsum only touches the low `pairs` destination lanes; the rest of
+    // rd passes through.
+    let rs1 = 0x3c00_3c00_3c00_3c00; // four FP16 ones
+    let rd = 0xaaaa_bbbb_0000_0000;
+    let out = s816.vsum(rs1, rd, RoundingMode::Rne);
+    assert_eq!(lane(out, 2, 16), 0xbbbb);
+    assert_eq!(lane(out, 3, 16), 0xaaaa);
+    assert_eq!(to_f64(lane(out, 0, 16), FP16), 2.0);
+}
+
+#[test]
 fn simd_vsum_reduces_accumulator_pairs() {
     // After SIMD ExSdotp, rd holds packed partial sums; vsum folds them.
     let simd = SimdExSdotp::new(FP16, FP32);

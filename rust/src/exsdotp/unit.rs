@@ -78,6 +78,10 @@ impl ExSdotpUnit {
     }
 
     /// `a×b + c×d + e` — the fused expanding sum of dot products (eq. 1).
+    ///
+    /// `#[inline]`: [`crate::exsdotp::fast`] calls this with constant
+    /// formats; inlining lets each (src, dst) instantiation specialize.
+    #[inline]
     pub fn exsdotp(&self, a: u64, b: u64, c: u64, d: u64, e: u64, rm: RoundingMode) -> u64 {
         let (src, dst) = (self.src, self.dst);
         let ua = unpack(src, a);
@@ -105,6 +109,7 @@ impl ExSdotpUnit {
 
     /// `a + c + e` with `a, c` in the source format — ExVsum (eq. 5),
     /// implemented exactly as the hardware does: `b = d = 1`.
+    #[inline]
     pub fn exvsum(&self, a: u64, c: u64, e: u64, rm: RoundingMode) -> u64 {
         let one = crate::softfloat::from_f64(1.0, self.src, RoundingMode::Rne);
         self.exsdotp(a, one, c, one, e, rm)
@@ -114,6 +119,7 @@ impl ExSdotpUnit {
     /// non-expanding Vsum (eq. 6): multipliers bypassed, three-term
     /// adder reused. Operand width grows to `dst` via the `a_vs`/`c_vs`
     /// register-field extension (§III-C).
+    #[inline]
     pub fn vsum(&self, a: u64, c: u64, e: u64, rm: RoundingMode) -> u64 {
         let dst = self.dst;
         let ua = unpack(dst, a);
@@ -129,6 +135,7 @@ impl ExSdotpUnit {
 
     /// The fused three-term addition (steps 2–6 above). `p_pad` is the
     /// stage-4 widening amount (= p_src in hardware).
+    #[inline]
     fn three_term(&self, t0: TermOrInf, t1: TermOrInf, t2: TermOrInf, p_pad: u32, rm: RoundingMode) -> u64 {
         let dst = self.dst;
 

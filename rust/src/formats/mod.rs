@@ -24,6 +24,10 @@
 //! follows the IEEE-754 directives for rounding and subnormal number
 //! handling", §III-A).
 
+pub mod spec;
+
+pub use spec::{ExpandTo, FormatSpec, Fp16, Fp16alt, Fp32, Fp64, Fp8, Fp8alt};
+
 /// A binary interchange floating-point format: 1 sign bit, `exp_bits`
 /// exponent bits (biased), `man_bits` mantissa bits with a hidden leading
 /// one for normal values.
@@ -151,6 +155,7 @@ impl FpFormat {
     }
 
     /// Split an encoding into (sign, biased exponent field, mantissa field).
+    #[inline]
     pub fn split(&self, bits: u64) -> (bool, u64, u64) {
         let sign = bits & self.sign_mask() != 0;
         let exp = (bits >> self.man_bits) & self.exp_special();
@@ -160,6 +165,7 @@ impl FpFormat {
 
     /// Assemble an encoding from (sign, biased exponent field, mantissa
     /// field). Fields must already be in range.
+    #[inline]
     pub fn assemble(&self, sign: bool, exp: u64, man: u64) -> u64 {
         debug_assert!(exp <= self.exp_special());
         debug_assert!(man <= self.man_mask());

@@ -1,0 +1,183 @@
+//! Compile-time format descriptors — Tier A of the batch numerics
+//! engine.
+//!
+//! [`super::FpFormat`] is a *runtime* descriptor: every arithmetic
+//! routine that takes one re-derives widths, masks and biases per call,
+//! which is what the hardware's parameterized generate-time elaboration
+//! emphatically does **not** do. [`FormatSpec`] is the generate-time
+//! equivalent: a zero-sized type per format whose parameters are
+//! associated `const`s, so a generic function instantiated at a
+//! `FormatSpec` monomorphizes into format-specialized code — the masks
+//! and shift amounts constant-fold exactly like an elaborated FPnew
+//! instance bakes them into gates.
+//!
+//! The runtime API stays the source of truth: every fast kernel
+//! ([`crate::softfloat::fast`], [`crate::exsdotp::fast`]) calls the
+//! *same* implementation functions with [`FormatSpec::FMT`], so the two
+//! tiers are bit-identical by construction (and differential tests in
+//! [`crate::batch`] pin that down).
+//!
+//! [`ExpandTo`] encodes Table I's legal expanding pairs in the type
+//! system: `exsdotp_m::<S, D>` only compiles for the six combinations
+//! the hardware instantiates.
+
+use super::FpFormat;
+
+/// A floating-point format known at compile time. All parameters are
+/// associated constants derived from `EXP_BITS`/`MAN_BITS`, mirroring
+/// [`FpFormat`]'s methods one for one.
+pub trait FormatSpec: Copy + Send + Sync + 'static {
+    /// Number of exponent bits.
+    const EXP_BITS: u32;
+    /// Number of explicit mantissa bits.
+    const MAN_BITS: u32;
+
+    /// The equivalent runtime descriptor (bridge to the descriptor API).
+    const FMT: FpFormat = FpFormat::new(Self::EXP_BITS, Self::MAN_BITS);
+    /// Total storage width in bits.
+    const WIDTH: u32 = 1 + Self::EXP_BITS + Self::MAN_BITS;
+    /// SIMD lanes in a 64-bit register.
+    const LANES: u32 = 64 / Self::WIDTH;
+    /// Precision `p` = mantissa bits + hidden bit.
+    const PRECISION: u32 = Self::MAN_BITS + 1;
+    /// Exponent bias.
+    const BIAS: i32 = (1 << (Self::EXP_BITS - 1)) - 1;
+}
+
+/// FP8 (e5m2).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp8;
+/// FP8alt (e4m3, fully IEEE: has inf).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp8alt;
+/// IEEE binary16.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp16;
+/// bfloat16 layout with IEEE semantics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp16alt;
+/// IEEE binary32.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp32;
+/// IEEE binary64.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fp64;
+
+impl FormatSpec for Fp8 {
+    const EXP_BITS: u32 = 5;
+    const MAN_BITS: u32 = 2;
+}
+
+impl FormatSpec for Fp8alt {
+    const EXP_BITS: u32 = 4;
+    const MAN_BITS: u32 = 3;
+}
+
+impl FormatSpec for Fp16 {
+    const EXP_BITS: u32 = 5;
+    const MAN_BITS: u32 = 10;
+}
+
+impl FormatSpec for Fp16alt {
+    const EXP_BITS: u32 = 8;
+    const MAN_BITS: u32 = 7;
+}
+
+impl FormatSpec for Fp32 {
+    const EXP_BITS: u32 = 8;
+    const MAN_BITS: u32 = 23;
+}
+
+impl FormatSpec for Fp64 {
+    const EXP_BITS: u32 = 11;
+    const MAN_BITS: u32 = 52;
+}
+
+/// Marker for the expanding source→destination pairs the ExSdotp unit
+/// supports (Table I): monomorphized expanding kernels bound on
+/// `S: ExpandTo<D>` can only be instantiated at hardware-legal pairs.
+pub trait ExpandTo<D: FormatSpec>: FormatSpec {}
+
+impl ExpandTo<Fp32> for Fp16 {}
+impl ExpandTo<Fp32> for Fp16alt {}
+impl ExpandTo<Fp16> for Fp8 {}
+impl ExpandTo<Fp16alt> for Fp8 {}
+impl ExpandTo<Fp16> for Fp8alt {}
+impl ExpandTo<Fp16alt> for Fp8alt {}
+
+/// Dispatch a runtime `(src, dst)` [`FpFormat`] pair to the matching
+/// compile-time [`ExpandTo`] pair, binding the types as `$S`/`$D`
+/// within `$body`; evaluates `$fallback` for pairs outside Table I.
+/// The single source of truth for the six legal expanding pairs on the
+/// runtime→compile-time boundary — used by `batch::exsdotp_accumulate`
+/// and `accuracy::accumulate_fast`.
+#[macro_export]
+macro_rules! with_expanding_pair {
+    ($src:expr, $dst:expr, $S:ident, $D:ident, $body:block, $fallback:block) => {
+        match ($src.exp_bits, $src.man_bits, $dst.exp_bits, $dst.man_bits) {
+            (5, 10, 8, 23) => {
+                type $S = $crate::formats::spec::Fp16;
+                type $D = $crate::formats::spec::Fp32;
+                $body
+            }
+            (8, 7, 8, 23) => {
+                type $S = $crate::formats::spec::Fp16alt;
+                type $D = $crate::formats::spec::Fp32;
+                $body
+            }
+            (5, 2, 5, 10) => {
+                type $S = $crate::formats::spec::Fp8;
+                type $D = $crate::formats::spec::Fp16;
+                $body
+            }
+            (5, 2, 8, 7) => {
+                type $S = $crate::formats::spec::Fp8;
+                type $D = $crate::formats::spec::Fp16alt;
+                $body
+            }
+            (4, 3, 5, 10) => {
+                type $S = $crate::formats::spec::Fp8alt;
+                type $D = $crate::formats::spec::Fp16;
+                $body
+            }
+            (4, 3, 8, 7) => {
+                type $S = $crate::formats::spec::Fp8alt;
+                type $D = $crate::formats::spec::Fp16alt;
+                $body
+            }
+            _ => $fallback,
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP16, FP16ALT, FP32, FP64, FP8, FP8ALT};
+
+    #[test]
+    fn specs_bridge_to_the_runtime_descriptors() {
+        assert_eq!(Fp8::FMT, FP8);
+        assert_eq!(Fp8alt::FMT, FP8ALT);
+        assert_eq!(Fp16::FMT, FP16);
+        assert_eq!(Fp16alt::FMT, FP16ALT);
+        assert_eq!(Fp32::FMT, FP32);
+        assert_eq!(Fp64::FMT, FP64);
+    }
+
+    #[test]
+    fn derived_consts_match_descriptor_methods() {
+        fn check<F: FormatSpec>() {
+            assert_eq!(F::WIDTH, F::FMT.width());
+            assert_eq!(F::LANES, F::FMT.lanes_in_64());
+            assert_eq!(F::PRECISION, F::FMT.precision());
+            assert_eq!(F::BIAS, F::FMT.bias());
+        }
+        check::<Fp8>();
+        check::<Fp8alt>();
+        check::<Fp16>();
+        check::<Fp16alt>();
+        check::<Fp32>();
+        check::<Fp64>();
+    }
+}

@@ -110,15 +110,15 @@ impl Fpu {
             }
             FpuOp::ExSdotp { w, rs1, rs2, rd } => {
                 let simd = self.simd(w, csr);
-                (simd.exsdotp(rs1, rs2, rd, rm), 4 * simd.n_units() as u64)
+                (simd.exsdotp(rs1, rs2, rd, rm), simd.flops(crate::exsdotp::SimdOp::ExSdotp))
             }
             FpuOp::ExVsum { w, rs1, rd } => {
                 let simd = self.simd(w, csr);
-                (simd.exvsum(rs1, rd, rm), 2 * simd.n_units() as u64)
+                (simd.exvsum(rs1, rd, rm), simd.flops(crate::exsdotp::SimdOp::ExVsum))
             }
             FpuOp::Vsum { w, rs1, rd } => {
                 let simd = self.simd(w, csr);
-                (simd.vsum(rs1, rd, rm), simd.n_units() as u64)
+                (simd.vsum(rs1, rd, rm), simd.flops(crate::exsdotp::SimdOp::Vsum))
             }
             FpuOp::Fcvt { to, from, rs1 } => {
                 let tf = csr.scalar_format(to);

@@ -7,6 +7,32 @@ use crate::formats::FpFormat;
 use crate::isa::csr::addr as csr;
 use crate::isa::instr::regs::*;
 use crate::isa::instr::{Instr, OpWidth, Reg, ScalarFmt};
+use crate::softfloat::RoundingMode;
+
+/// How to execute a bound GEMM problem.
+///
+/// The two modes produce **bit-identical C matrices** (asserted by the
+/// differential tests): they run the same numerics in the same
+/// accumulation order. They differ in what else you get and what it
+/// costs:
+///
+/// * [`ExecMode::CycleAccurate`] — simulate the 8-core cluster cycle by
+///   cycle: exact cycle counts, stall breakdowns, bank-conflict
+///   behaviour. The mode behind Table II / Fig. 8. Cost: every lane of
+///   every instruction wades through the full machine model.
+/// * [`ExecMode::Functional`] — run the batch engine
+///   ([`crate::batch::gemm`]): packed registers, monomorphized
+///   kernels, rows in parallel. Orders of magnitude faster; cycles come
+///   from the analytic issue-slot model ([`GemmKernel::model_cycles`])
+///   instead of simulation, and per-instruction stats are not
+///   collected. The mode for accuracy sweeps and large-scale runs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ExecMode {
+    /// Cycle-by-cycle cluster simulation (exact timing, slow).
+    CycleAccurate,
+    /// Batch-engine execution (bit-identical C, modeled timing, fast).
+    Functional,
+}
 
 /// Which Table II kernel family.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -353,6 +379,54 @@ impl GemmKernel {
     }
 
     // ------------------------------------------------------ harness
+
+    /// Execute in the given [`ExecMode`]. Both modes return the same C
+    /// bits; see the mode docs for the timing/stats trade-off.
+    pub fn run_mode(&self, a: &[f64], b: &[f64], mode: ExecMode) -> GemmResult {
+        match mode {
+            ExecMode::CycleAccurate => self.run(a, b),
+            ExecMode::Functional => {
+                let c = crate::batch::gemm(self.kind, self.m, self.n, self.k, a, b, RoundingMode::Rne);
+                GemmResult {
+                    cycles: self.model_cycles(),
+                    c,
+                    flops: self.flops(),
+                    stats: CoreStats::default(),
+                }
+            }
+        }
+    }
+
+    /// Analytic cycle model for [`ExecMode::Functional`]: counts the FP
+    /// issue slots of the generated program, which bound runtime on the
+    /// pseudo-dual-issue PE (one FP issue per cycle; integer loop
+    /// control runs in the shadow of FP compute).
+    ///
+    /// Per core: each of `rows × blocks` accumulator blocks zeroes `U`
+    /// accumulators, issues `U·kc` compute ops under FREP, and runs the
+    /// kernel's epilogue (`vsum` tree + stores); small per-block,
+    /// per-row and startup overheads cover the non-hidden scalar work.
+    /// An *issue-slot* estimate, deliberately blind to bank conflicts
+    /// and RAW stalls — designed to land within ~±15% of the simulator
+    /// on the Table II grid (the `model_cycles_tracks_simulation` test
+    /// keeps it honest with a generous band).
+    pub fn model_cycles(&self) -> u64 {
+        let u = self.kind.unroll() as u64;
+        let kc = (self.k / self.kind.lanes()) as u64;
+        let rows = (self.m / self.n_cores) as u64;
+        let blocks = (self.n / self.kind.unroll()) as u64;
+        // Epilogue FP issues per block, by kernel family (see program()).
+        let epilogue = match self.kind {
+            GemmKind::FmaF64 => u,                                     // stores
+            GemmKind::FmaSimd(ScalarFmt::S) => 3 * u,                  // zero+vsum+store
+            GemmKind::ExSdotp(OpWidth::HtoS) => 3 * u,                 // zero+vsum+store
+            _ => 5 * u,                                                // two vsum levels
+        };
+        let per_block = u + u * kc + epilogue + 2; // +2: C-pointer bump, branch shadow
+        let per_row = blocks * per_block + 5;
+        let startup = 40; // SSR configuration + scalar setup
+        rows * per_row + startup
+    }
 
     /// Pack inputs, run on a simulated cluster, decode C.
     /// `a` is M×K and `b` is K×N, both row-major f64 (quantized to the

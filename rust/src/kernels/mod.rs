@@ -28,6 +28,6 @@ pub mod reference;
 #[cfg(test)]
 mod tests;
 
-pub use gemm::{GemmKernel, GemmKind};
+pub use gemm::{ExecMode, GemmKernel, GemmKind};
 pub use layout::{pack_matrix, unpack_matrix, MatrixOrder};
 pub use reference::{kernel_reference, reference_gemm_f64};

@@ -134,6 +134,41 @@ fn exsdotp_beats_fma_at_same_source_width() {
 }
 
 #[test]
+fn functional_mode_matches_simulation_at_scale() {
+    // Larger than the batch module's unit tests: one 32×32 (K=64)
+    // FP8→FP16 problem through the full simulator vs the batch engine.
+    let (m, n, k) = (32, 32, 64);
+    let (a, b) = random_mats(m, n, k, 5);
+    let kern = GemmKernel::new(GemmKind::ExSdotp(OpWidth::BtoH), m, n, k);
+    let sim = kern.run_mode(&a, &b, super::gemm::ExecMode::CycleAccurate);
+    let fun = kern.run_mode(&a, &b, super::gemm::ExecMode::Functional);
+    assert_eq!(sim.c, fun.c, "Functional C must be bit-identical to the simulated C");
+}
+
+#[test]
+fn model_cycles_tracks_simulation() {
+    // The Functional-mode issue-slot model must land near the simulated
+    // cycle counts on the paper-anchored 64×64 kernels. It ignores bank
+    // conflicts and RAW stalls by design, so the band is generous.
+    let (a, b) = random_mats(64, 64, 64, 77);
+    for kind in [
+        GemmKind::FmaSimd(ScalarFmt::H),
+        GemmKind::ExSdotp(OpWidth::HtoS),
+        GemmKind::ExSdotp(OpWidth::BtoH),
+    ] {
+        let kern = GemmKernel::new(kind, 64, 64, 64);
+        let sim = kern.run(&a, &b).cycles as f64;
+        let model = kern.model_cycles() as f64;
+        let ratio = model / sim;
+        assert!(
+            (0.65..1.35).contains(&ratio),
+            "{}: model {model} vs simulated {sim} (ratio {ratio:.2})",
+            kind.label()
+        );
+    }
+}
+
+#[test]
 fn footprint_matches_table2_feasibility() {
     // The paper: FP8→16 fits 128×256; FP16-only fits 128×128; FP64 only
     // 64×64 (within 128 kB).

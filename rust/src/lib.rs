@@ -7,10 +7,16 @@
 //! The crate models the paper's full hardware/software stack:
 //!
 //! * [`formats`] — parametric floating-point format descriptors (FP64,
-//!   FP32, FP16, FP16alt, FP8, FP8alt and user-defined minifloats).
+//!   FP32, FP16, FP16alt, FP8, FP8alt and user-defined minifloats),
+//!   plus the compile-time [`formats::spec`] layer (`FormatSpec`) that
+//!   the monomorphized fast tiers instantiate at.
 //! * [`softfloat`] — bit-accurate IEEE-754 emulation for any format:
 //!   add/mul/FMA/expanding-FMA, casts, comparisons, all five RISC-V
-//!   rounding modes.
+//!   rounding modes; [`softfloat::fast`] is the monomorphized twin.
+//! * [`batch`] — the slice-level batch numerics engine: packed-register
+//!   GEMM, accumulation and cast sweeps on the monomorphized kernels,
+//!   parallel across rows — bit-identical to the simulated cluster
+//!   (`ExecMode::Functional` runs on it).
 //! * [`exsdotp`] — the paper's core contribution: the fused expanding
 //!   sum-of-dot-product datapath (§III-B), the ExVsum/Vsum reuse of the
 //!   same datapath (§III-C), the discrete two-ExFMA-cascade baseline, and
@@ -40,6 +46,7 @@
 
 pub mod accuracy;
 pub mod area;
+pub mod batch;
 pub mod cluster;
 pub mod coordinator;
 pub mod core;
@@ -56,4 +63,5 @@ pub mod util;
 pub mod wide;
 
 pub use formats::{FpFormat, FP16, FP16ALT, FP32, FP64, FP8, FP8ALT};
+pub use kernels::gemm::ExecMode;
 pub use softfloat::{RoundingMode, SoftFloat};

@@ -1,13 +1,29 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
-//! Rust — Python never runs on this path.
+//! PJRT runtime boundary: load AOT-compiled HLO artifacts and execute
+//! them from Rust — Python never runs on this path.
 //!
 //! The interchange format is **HLO text** (`artifacts/*.hlo.txt`),
-//! produced once by `python/compile/aot.py`. Text, not serialized
-//! protos: jax ≥ 0.5 emits 64-bit instruction ids that the crate's
-//! xla_extension 0.5.1 rejects, while the text parser reassigns ids
-//! (see /opt/xla-example/README.md).
+//! produced once by `python/compile/aot.py`.
+//!
+//! ## Offline build
+//!
+//! The PJRT client itself lives behind the `xla` crate, which is not
+//! available in the offline build environment (no crates.io registry).
+//! This module therefore compiles the *boundary* — [`Tensor`],
+//! [`Runtime`], [`Executable`] keep their full API — but
+//! [`Runtime::cpu`] reports an explanatory error instead of creating a
+//! client. Everything upstream of the boundary (the coordinator's batch
+//! loop, dataset, metrics) still builds and tests; the e2e training
+//! tests skip when no backend/artifacts are present, exactly as they
+//! skip when `make artifacts` has not run.
+//!
+//! The original xla-backed implementation (client creation, HLO
+//! compile, literal conversion, execute) is preserved verbatim in git
+//! history — seed commit `0260bbf`, this file — and drops back in once
+//! the build environment can resolve the `xla` crate. A cargo feature
+//! can't gate it today: optional registry dependencies still enter
+//! lockfile resolution, which fails offline.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// A tensor: row-major f32 data + shape.
@@ -40,43 +56,37 @@ impl Tensor {
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        Ok(Tensor { data: lit.to_vec::<f32>()?, shape: dims })
-    }
 }
 
 /// The PJRT client wrapper (CPU).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    _priv: (),
 }
 
 impl Runtime {
     /// Create a CPU PJRT client.
+    ///
+    /// In the offline build this always fails: the `xla` crate that
+    /// provides the PJRT bindings cannot be vendored without a registry.
     pub fn cpu() -> Result<Self> {
-        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+        crate::bail!(
+            "PJRT backend unavailable: the offline build has no `xla` crate. \
+             The coordinator and its batch/dataset layers still run; only \
+             artifact execution requires the PJRT-enabled build."
+        )
     }
 
     /// PJRT platform name (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "unavailable".to_string()
     }
 
     /// Load and compile an HLO-text artifact.
     pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
         let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned() })
+        // Reading the artifact validates the path even without a client.
+        std::fs::read_to_string(path).with_context(|| format!("reading HLO text {}", path.display()))?;
+        crate::bail!("PJRT backend unavailable: cannot compile {}", path.display())
     }
 
     /// Load `name.hlo.txt` from an artifacts directory.
@@ -89,19 +99,16 @@ impl Runtime {
 
 /// A compiled artifact ready to execute.
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
     /// Artifact name (diagnostics).
     pub name: String,
+    _priv: (),
 }
 
 impl Executable {
     /// Execute with f32 tensor inputs; returns the flattened tuple of
     /// f32 tensor outputs (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        crate::bail!("PJRT backend unavailable: cannot execute {}", self.name)
     }
 }
 
@@ -109,47 +116,19 @@ impl Executable {
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> Option<PathBuf> {
-        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        p.join("gemm_fp8_fp16.hlo.txt").exists().then_some(p)
-    }
-
     #[test]
     fn tensor_shape_checks() {
         let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
         assert_eq!(t.len(), 4);
         let z = Tensor::zeros(&[3, 5]);
         assert_eq!(z.data.len(), 15);
+        assert!(!z.is_empty());
+        assert_eq!(Tensor::zeros(&[]).len(), 1); // scalar
     }
 
     #[test]
-    fn gemm_artifact_executes_and_matches_quantized_semantics() {
-        let Some(dir) = artifacts_dir() else {
-            eprintln!("skipping: artifacts not built (run `make artifacts`)");
-            return;
-        };
-        let rt = Runtime::cpu().unwrap();
-        let exe = rt.load_artifact(&dir, "gemm_fp8_fp16").unwrap();
-
-        // Identity × small values: quantization (FP8) must show through.
-        let n = 32;
-        let mut a = Tensor::zeros(&[n, n]);
-        for i in 0..n {
-            a.data[i * n + i] = 1.0;
-        }
-        let mut b = Tensor::zeros(&[n, n]);
-        for (i, v) in b.data.iter_mut().enumerate() {
-            *v = 0.1 + (i % 7) as f32 * 0.31; // values NOT on the FP8 grid
-        }
-        let out = exe.run(&[a, b.clone()]).unwrap();
-        assert_eq!(out.len(), 1);
-        assert_eq!(out[0].shape, vec![n, n]);
-        // Each output element = FP8-quantized b element (identity A).
-        use crate::formats::FP8;
-        use crate::softfloat::{from_f64, to_f64, RoundingMode};
-        for (o, x) in out[0].data.iter().zip(&b.data) {
-            let q = to_f64(from_f64(*x as f64, FP8, RoundingMode::Rne), FP8) as f32;
-            assert_eq!(*o, q, "runtime GEMM output must carry FP8-quantized operand {x}");
-        }
+    fn offline_runtime_reports_unavailable() {
+        let err = Runtime::cpu().err().expect("offline build must not create a client");
+        assert!(err.to_string().contains("PJRT backend unavailable"), "{err}");
     }
 }

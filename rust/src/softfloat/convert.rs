@@ -14,6 +14,7 @@ use crate::formats::{FpFormat, FP64};
 ///
 /// Exact because every FP8/FP16/FP32 value is representable in FP64
 /// (widening casts are exact).
+#[inline]
 pub fn to_f64(bits: u64, fmt: FpFormat) -> f64 {
     if fmt == FP64 {
         return f64::from_bits(bits);
@@ -22,6 +23,7 @@ pub fn to_f64(bits: u64, fmt: FpFormat) -> f64 {
 }
 
 /// Encode `x` into `fmt` with one correct rounding in mode `rm`.
+#[inline]
 pub fn from_f64(x: f64, fmt: FpFormat, rm: RoundingMode) -> u64 {
     if fmt == FP64 {
         return x.to_bits();

@@ -1,0 +1,138 @@
+//! Monomorphized softfloat kernels — Tier A of the batch numerics
+//! engine.
+//!
+//! Every function here is the compile-time-dispatched twin of a
+//! [`crate::softfloat`] routine: generic over [`FormatSpec`] (and, for
+//! expanding ops, a `(src, dst)` pair), calling the **same**
+//! implementation with the constant [`FormatSpec::FMT`]. Because the
+//! shared implementations are `#[inline]`, each instantiation
+//! constant-folds the format parameters into fixed shifts, masks and
+//! grid positions — the software analogue of elaborating one hardware
+//! instance per format, and the reason the batch engine
+//! ([`crate::batch`]) runs circles around the descriptor-dispatched
+//! path without being able to diverge from it numerically.
+//!
+//! Naming: `*_m` = monomorphized. `add_m::<Fp16>` is `add(FP16, ..)`,
+//! `ex_fma_m::<Fp8, Fp16>` is `ex_fma(FP8, FP16, ..)`, and so on.
+
+use super::convert;
+use super::ops;
+use super::round::{round_pack, RoundingMode};
+use super::unpack::{unpack, Unpacked};
+use crate::formats::spec::FormatSpec;
+
+/// Monomorphized [`unpack`].
+#[inline]
+pub fn unpack_m<F: FormatSpec>(bits: u64) -> Unpacked {
+    unpack(F::FMT, bits)
+}
+
+/// Monomorphized [`round_pack`].
+#[inline]
+pub fn round_pack_m<F: FormatSpec>(sign: bool, exp: i32, mant: u128, sticky: bool, rm: RoundingMode) -> u64 {
+    round_pack(sign, exp, mant, sticky, F::FMT, rm)
+}
+
+/// Monomorphized IEEE addition.
+#[inline]
+pub fn add_m<F: FormatSpec>(a: u64, b: u64, rm: RoundingMode) -> u64 {
+    ops::add(F::FMT, a, b, rm)
+}
+
+/// Monomorphized IEEE multiplication.
+#[inline]
+pub fn mul_m<F: FormatSpec>(a: u64, b: u64, rm: RoundingMode) -> u64 {
+    ops::mul(F::FMT, a, b, rm)
+}
+
+/// Monomorphized fused multiply-add.
+#[inline]
+pub fn fma_m<F: FormatSpec>(a: u64, b: u64, c: u64, rm: RoundingMode) -> u64 {
+    ops::fma(F::FMT, a, b, c, rm)
+}
+
+/// Monomorphized expanding FMA: `a, b` in `S`; `c`, result in `D`.
+#[inline]
+pub fn ex_fma_m<S: FormatSpec, D: FormatSpec>(a: u64, b: u64, c: u64, rm: RoundingMode) -> u64 {
+    ops::ex_fma(S::FMT, D::FMT, a, b, c, rm)
+}
+
+/// Monomorphized format conversion `S → D`.
+#[inline]
+pub fn cast_m<S: FormatSpec, D: FormatSpec>(bits: u64, rm: RoundingMode) -> u64 {
+    ops::cast(S::FMT, D::FMT, bits, rm)
+}
+
+/// Monomorphized `f64 → F` encoding.
+#[inline]
+pub fn from_f64_m<F: FormatSpec>(x: f64, rm: RoundingMode) -> u64 {
+    convert::from_f64(x, F::FMT, rm)
+}
+
+/// Monomorphized `F → f64` decoding (exact).
+#[inline]
+pub fn to_f64_m<F: FormatSpec>(bits: u64) -> f64 {
+    convert::to_f64(bits, F::FMT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::spec::{Fp16, Fp32, Fp8, Fp8alt};
+    use crate::formats::{FP16, FP32, FP8, FP8ALT};
+    use crate::softfloat::{add, cast, ex_fma, fma, from_f64, mul, to_f64};
+    use crate::util::prop::{for_all, FpGen};
+
+    const RMS: [RoundingMode; 5] = [
+        RoundingMode::Rne,
+        RoundingMode::Rtz,
+        RoundingMode::Rdn,
+        RoundingMode::Rup,
+        RoundingMode::Rmm,
+    ];
+
+    #[test]
+    fn monomorphized_ops_bit_identical_to_descriptor_path() {
+        // Exhaustive over FP8 encodings (incl. NaN/Inf/subnormal/±0),
+        // every rounding mode.
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                for rm in RMS {
+                    assert_eq!(add_m::<Fp8>(a, b, rm), add(FP8, a, b, rm));
+                    assert_eq!(mul_m::<Fp8>(a, b, rm), mul(FP8, a, b, rm));
+                    assert_eq!(cast_m::<Fp8, Fp16>(a, rm), cast(FP8, FP16, a, rm));
+                    assert_eq!(cast_m::<Fp8alt, Fp16>(a, rm), cast(FP8ALT, FP16, a, rm));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn monomorphized_fma_and_exfma_match_randomized() {
+        let g16 = FpGen::new(FP16);
+        let g32 = FpGen::new(FP32);
+        for_all("fast fma/ex_fma vs descriptor", 20_000, |rng| {
+            let (a, b) = (g16.any(rng), g16.any(rng));
+            let c16 = g16.any(rng);
+            let c32 = g32.any(rng);
+            for rm in RMS {
+                assert_eq!(fma_m::<Fp16>(a, b, c16, rm), fma(FP16, a, b, c16, rm));
+                assert_eq!(ex_fma_m::<Fp16, Fp32>(a, b, c32, rm), ex_fma(FP16, FP32, a, b, c32, rm));
+            }
+        });
+    }
+
+    #[test]
+    fn monomorphized_conversions_match() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        for _ in 0..10_000 {
+            let x = rng.gaussian() * 2f64.powi((rng.below(41) as i32) - 20);
+            for rm in RMS {
+                assert_eq!(from_f64_m::<Fp8>(x, rm), from_f64(x, FP8, rm));
+                assert_eq!(from_f64_m::<Fp16>(x, rm), from_f64(x, FP16, rm));
+            }
+            let b16 = rng.next_u64() & 0xffff;
+            assert_eq!(to_f64_m::<Fp16>(b16).to_bits(), to_f64(b16, FP16).to_bits());
+        }
+    }
+}

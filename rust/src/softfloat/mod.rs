@@ -16,8 +16,17 @@
 //! it shares [`round::round_pack`] with this module so the two rounding
 //! behaviours (once vs. twice) can be compared apples-to-apples, which
 //! is precisely the paper's Table IV experiment.
+//!
+//! Two dispatch tiers expose the same numerics:
+//!
+//! * the functions in this module take a runtime [`FpFormat`] — the
+//!   flexible descriptor API every simulator layer uses;
+//! * [`fast`] provides monomorphized twins (`add_m::<Fp16>`, …) that
+//!   call the *same* implementations with compile-time formats, for the
+//!   batch engine's hot loops ([`crate::batch`]).
 
 pub mod convert;
+pub mod fast;
 pub mod ops;
 pub mod round;
 #[cfg(test)]

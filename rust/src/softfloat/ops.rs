@@ -94,6 +94,7 @@ struct Norm {
 }
 
 /// Normalize an exact (sign, exp, mant≠0) triple.
+#[inline]
 fn normalize(sign: bool, exp: i32, mant: u128) -> Norm {
     debug_assert!(mant != 0);
     let msb = 127 - mant.leading_zeros();
@@ -107,6 +108,7 @@ fn normalize(sign: bool, exp: i32, mant: u128) -> Norm {
 /// Exact signed addition of two normalized values. Returns
 /// `(sign, exp_of_lsb, mant, sticky)` ready for [`round_pack`]; a zero
 /// mant with `sticky=false` means an exact zero (sign decided by caller).
+#[inline]
 fn add_norm(x: Norm, y: Norm) -> (bool, i32, u128, bool) {
     // Order by magnitude.
     let (big, small) = if (x.e_msb, x.mant) >= (y.e_msb, y.mant) { (x, y) } else { (y, x) };
@@ -134,6 +136,7 @@ fn add_norm(x: Norm, y: Norm) -> (bool, i32, u128, bool) {
 }
 
 /// IEEE addition `a + b` in `fmt`.
+#[inline]
 pub fn add(fmt: FpFormat, a: u64, b: u64, rm: RoundingMode) -> u64 {
     let ua = unpack(fmt, a);
     let ub = unpack(fmt, b);
@@ -173,11 +176,13 @@ pub fn sub(fmt: FpFormat, a: u64, b: u64, rm: RoundingMode) -> u64 {
 }
 
 /// IEEE multiplication `a * b` in `fmt`.
+#[inline]
 pub fn mul(fmt: FpFormat, a: u64, b: u64, rm: RoundingMode) -> u64 {
     ex_mul(fmt, fmt, a, b, rm)
 }
 
 /// Expanding multiplication: operands in `src`, result in `dst`.
+#[inline]
 pub fn ex_mul(src: FpFormat, dst: FpFormat, a: u64, b: u64, rm: RoundingMode) -> u64 {
     let ua = unpack(src, a);
     let ub = unpack(src, b);
@@ -198,6 +203,7 @@ pub fn ex_mul(src: FpFormat, dst: FpFormat, a: u64, b: u64, rm: RoundingMode) ->
 }
 
 /// Fused multiply-add `a*b + c`, everything in `fmt`, single rounding.
+#[inline]
 pub fn fma(fmt: FpFormat, a: u64, b: u64, c: u64, rm: RoundingMode) -> u64 {
     ex_fma(fmt, fmt, a, b, c, rm)
 }
@@ -205,6 +211,7 @@ pub fn fma(fmt: FpFormat, a: u64, b: u64, c: u64, rm: RoundingMode) -> u64 {
 /// Expanding fused multiply-add: `a, b` in `src`; `c` and the result in
 /// `dst`; single rounding. This models one ExFMA unit (§II-B) — the
 /// paper's baseline building block whose cascade the ExSdotp replaces.
+#[inline]
 pub fn ex_fma(src: FpFormat, dst: FpFormat, a: u64, b: u64, c: u64, rm: RoundingMode) -> u64 {
     let ua = unpack(src, a);
     let ub = unpack(src, b);
@@ -248,6 +255,7 @@ pub fn ex_fma(src: FpFormat, dst: FpFormat, a: u64, b: u64, c: u64, rm: Rounding
 
 /// Format conversion (RISC-V `fcvt` between FP formats), correctly
 /// rounded. Widening conversions are always exact.
+#[inline]
 pub fn cast(from: FpFormat, to: FpFormat, bits: u64, rm: RoundingMode) -> u64 {
     let u = unpack(from, bits);
     match u.class {

@@ -88,6 +88,10 @@ impl RoundingMode {
 /// Handles normal/subnormal boundaries, overflow (to ±∞ or ±max-finite
 /// depending on mode), and total underflow (to ±0 or the minimum
 /// subnormal for directed modes).
+///
+/// `#[inline]`: the monomorphized fast tier calls this with a constant
+/// format, folding the grid arithmetic per instantiation.
+#[inline]
 pub fn round_pack(sign: bool, exp: i32, mant: u128, sticky: bool, fmt: FpFormat, rm: RoundingMode) -> u64 {
     if mant == 0 {
         if !sticky {

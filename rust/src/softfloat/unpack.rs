@@ -56,6 +56,11 @@ impl Unpacked {
 }
 
 /// Decode `bits` (an encoding in `fmt`, low `fmt.width()` bits) exactly.
+///
+/// `#[inline]`: when called with a constant format (the monomorphized
+/// [`crate::softfloat::fast`] tier) the field extraction folds to fixed
+/// shifts/masks.
+#[inline]
 pub fn unpack(fmt: FpFormat, bits: u64) -> Unpacked {
     let bits = bits & fmt.width_mask();
     let (sign, exp_field, man_field) = fmt.split(bits);

@@ -1,0 +1,148 @@
+//! Minimal error handling in the spirit of `anyhow` (unavailable
+//! offline): a boxed, message-chaining [`Error`], a crate-wide
+//! [`Result`] alias, a [`Context`] extension trait and the
+//! [`ensure!`](crate::ensure)/[`bail!`](crate::bail) macros.
+//!
+//! Only the subset the coordinator/runtime layers actually use is
+//! implemented; the API shapes match `anyhow` so swapping the real
+//! crate back in (once the build environment has a registry) is a
+//! one-line import change.
+
+use std::fmt;
+
+/// A chain of error messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` with [`Error`] as the failure type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, m: impl fmt::Display) -> Self {
+        self.chain.insert(0, m.to_string());
+        self
+    }
+
+    /// The messages, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Multi-line like anyhow's {:?}: message plus a cause list.
+        writeln!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            writeln!(f, "\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                writeln!(f, "    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error`: the blanket conversion below would otherwise
+// overlap with core's reflexive `impl From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Context`-style extension: attach a message to the error
+/// path of a `Result` or to `None`.
+pub trait Context<T> {
+    /// Wrap the error with `msg`.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with a lazily-built message.
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse().context("parsing a number")?;
+        ensure!(v < 100, "{v} out of range");
+        Ok(v)
+    }
+
+    #[test]
+    fn context_chains_and_displays() {
+        let e = parse("abc").unwrap_err();
+        let text = e.to_string();
+        assert!(text.starts_with("parsing a number:"), "{text}");
+        assert_eq!(e.chain().len(), 2);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn ensure_and_ok_paths() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("420").is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        assert_eq!(Some(7).context("fine").unwrap(), 7);
+    }
+}

@@ -1,5 +1,6 @@
 //! Self-contained utilities replacing crates unavailable in the offline
-//! build environment (`rand`, `criterion`, `proptest`, `clap`).
+//! build environment (`rand`, `criterion`, `proptest`, `clap`, `rayon`,
+//! `anyhow`).
 //!
 //! * [`rng`] — splitmix64/xoshiro256** PRNG with uniform and Gaussian
 //!   (Box–Muller) sampling; deterministic, seedable, used by the
@@ -10,9 +11,14 @@
 //! * [`prop`] — a tiny property-testing driver: run a closure over N
 //!   seeded random cases and report the failing seed on panic.
 //! * [`cli`] — flag/option parsing for the `repro` binary.
+//! * [`parallel`] — scoped-thread chunk parallelism for the batch
+//!   numerics engine ([`crate::batch`]).
+//! * [`error`] — `anyhow`-style `Result`/`Context`/`ensure!`/`bail!`.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 

@@ -1,0 +1,98 @@
+//! Scoped-thread data parallelism (rayon is unavailable offline).
+//!
+//! One primitive is enough for the batch numerics engine:
+//! [`par_chunks_mut`] splits a mutable slice into fixed-size chunks and
+//! fans contiguous chunk ranges out over `std::thread::scope` workers.
+//! Each chunk is processed by exactly one worker, so the result is
+//! deterministic and independent of the thread count — the batch GEMM
+//! relies on that to stay bit-identical to the serial reference.
+//!
+//! Worker count defaults to `std::thread::available_parallelism()`;
+//! `MINIFLOAT_NN_THREADS=1` forces serial execution (useful when
+//! bisecting or benchmarking the single-core path).
+
+/// Number of worker threads to use.
+pub fn worker_count() -> usize {
+    if let Ok(v) = std::env::var("MINIFLOAT_NN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f(chunk_index, chunk)` to consecutive `chunk_len`-sized chunks
+/// of `data` (the last chunk may be shorter), distributing contiguous
+/// chunk ranges across worker threads.
+pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(data: &mut [T], chunk_len: usize, f: F) {
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if data.is_empty() {
+        return;
+    }
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let threads = worker_count().min(n_chunks);
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    // Split on chunk boundaries into one contiguous span per worker.
+    let chunks_per_worker = (n_chunks + threads - 1) / threads;
+    let span = chunks_per_worker * chunk_len;
+    std::thread::scope(|s| {
+        for (t, part) in data.chunks_mut(span).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, c) in part.chunks_mut(chunk_len).enumerate() {
+                    f(t * chunks_per_worker + j, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let mut v = vec![0u64; 1003]; // deliberately not a multiple of 16
+        par_chunks_mut(&mut v, 16, |idx, chunk| {
+            for (off, x) in chunk.iter_mut().enumerate() {
+                *x = (idx * 16 + off) as u64 + 1;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u64 + 1, "element {i} touched incorrectly");
+        }
+    }
+
+    #[test]
+    fn result_is_thread_count_independent() {
+        let run = || {
+            let mut v = vec![0u64; 257];
+            par_chunks_mut(&mut v, 8, |idx, chunk| {
+                for (off, x) in chunk.iter_mut().enumerate() {
+                    *x = (idx as u64) << 32 | off as u64;
+                }
+            });
+            v
+        };
+        // Same output regardless of how the scheduler slices it.
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let mut e: Vec<u32> = vec![];
+        par_chunks_mut(&mut e, 4, |_, _| panic!("no chunks expected"));
+        let mut one = vec![7u32];
+        par_chunks_mut(&mut one, 4, |idx, c| {
+            assert_eq!(idx, 0);
+            c[0] = 9;
+        });
+        assert_eq!(one, vec![9]);
+    }
+}
