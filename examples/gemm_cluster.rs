@@ -1,47 +1,41 @@
 //! Run a GEMM kernel on the simulated MiniFloat-NN cluster and inspect
 //! the machine: cycles, utilization, stall breakdown, generated
-//! assembly.
+//! assembly — driven through the typed `Session`/`GemmPlan` API.
 //!
 //! ```sh
 //! cargo run --release --example gemm_cluster -- [--size 64x64] [--kernel fp8]
 //! ```
 //! kernels: fp64 | fp32 | fp16 | fp16to32 | fp8
 
+use minifloat_nn::api;
 use minifloat_nn::isa::asm::disassemble_program;
-use minifloat_nn::isa::instr::{OpWidth, ScalarFmt};
-use minifloat_nn::kernels::{reference_gemm_f64, GemmKernel, GemmKind};
+use minifloat_nn::kernels::reference_gemm_f64;
+use minifloat_nn::prelude::*;
 use minifloat_nn::util::cli::Args;
-use minifloat_nn::util::rng::Rng;
 
-fn main() {
+fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let size = args.get_str("size", "64x64");
-    let (m, n) = size.split_once('x').map(|(a, b)| (a.parse().unwrap(), b.parse().unwrap())).unwrap_or((64, 64));
+    let (m, n) = api::parse_size(&args.get_str("size", "64x64"))?;
     let k = m;
-    let kind = match args.get_str("kernel", "fp8").as_str() {
-        "fp64" => GemmKind::FmaF64,
-        "fp32" => GemmKind::FmaSimd(ScalarFmt::S),
-        "fp16" => GemmKind::FmaSimd(ScalarFmt::H),
-        "fp16to32" => GemmKind::ExSdotp(OpWidth::HtoS),
-        _ => GemmKind::ExSdotp(OpWidth::BtoH),
-    };
+    let kind = api::parse_kernel(&args.get_str("kernel", "fp8"))?;
 
-    let kern = GemmKernel::new(kind, m, n, k);
+    let session = Session::builder().mode(ExecMode::CycleAccurate).seed(7).build();
+    let plan = session.gemm().kind(kind).dims(m, n, k)?;
     println!("kernel: {}   problem: {m}x{n} (K={k})", kind.label());
-    println!("TCDM footprint: {} bytes (logical)", kern.footprint());
+    println!("TCDM footprint: {} bytes (logical)", plan.kernel().footprint());
 
     // Show what one core actually executes.
-    println!("\ngenerated program (core 0):\n{}", disassemble_program(&kern.program(0)));
+    println!("\ngenerated program (core 0):\n{}", disassemble_program(&plan.kernel().program(0)));
 
-    let mut rng = Rng::new(7);
+    let mut rng = session.rng();
     let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
     let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
-    let run = kern.run(&a, &b);
+    let run = plan.run_f64(&a, &b)?;
 
-    let s = run.stats;
-    println!("cycles            : {}", run.cycles);
+    let s = run.stats.expect("cycle-accurate runs collect stats");
+    println!("cycles            : {} ({})", run.cycles.unwrap_or(0), run.timing_label());
     println!("FLOP              : {}", run.flops);
-    println!("FLOP/cycle        : {:.2}", run.flop_per_cycle());
+    println!("FLOP/cycle        : {:.2}", run.flop_per_cycle().unwrap_or(0.0));
     println!("FP ops issued     : {}", s.fp_issued);
     println!("SSR elements      : {}", s.ssr_elems);
     println!("stalls (RAW)      : {}", s.stall_raw);
@@ -50,9 +44,11 @@ fn main() {
 
     // Sanity: compare a few entries against the f64 oracle.
     let gold = reference_gemm_f64(&a, &b, m, n, k);
+    let c = run.c_f64();
     let mut worst = 0f64;
-    for (g, r) in gold.iter().zip(&run.c) {
+    for (g, r) in gold.iter().zip(&c) {
         worst = worst.max((g - r).abs() / g.abs().max(1.0));
     }
     println!("worst rel. error vs f64: {worst:.3e} (expected: set by the source format)");
+    Ok(())
 }

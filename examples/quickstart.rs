@@ -1,15 +1,38 @@
-//! Quickstart: the library's core objects in ~60 lines.
+//! Quickstart: the typed front door, then the low-level objects.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use minifloat_nn::exsdotp::{exsdotp_cascade, exsdotp_exact, ExSdotpUnit};
+use minifloat_nn::prelude::*;
 use minifloat_nn::softfloat::{from_f64, to_f64};
-use minifloat_nn::{RoundingMode, FP16, FP32, FP8};
 
-fn main() {
+fn main() -> Result<()> {
     let rm = RoundingMode::Rne;
+
+    // --- the typed API: Session → MfTensor → GemmPlan → RunReport ----
+    // FP8 sources, FP16 expanding accumulation — the paper's headline
+    // kernel — validated at plan-build time, run on the batch engine.
+    let session = Session::builder().mode(ExecMode::Functional).seed(42).build();
+    let mut rng = session.rng();
+    let a: Vec<f64> = (0..16 * 16).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..16 * 16).map(|_| rng.gaussian() * 0.25).collect();
+    // A packs row-major, B column-major — the layouts the kernel
+    // streams, so run() feeds the packed words to the engine directly
+    // (zero decode/re-pack).
+    let ta = session.tensor(&a, 16, 16, FP8)?; // 8 lanes per 64-bit word
+    let tb = session.tensor_with_layout(&b, 16, 16, FP8, Layout::ColMajor)?;
+    let report = session.gemm().src(FP8).acc(FP16).dims(16, 16, 16)?.run(&ta, &tb)?;
+    println!(
+        "FP8->FP16 16x16 GEMM: {} FLOP, {:.1} FLOP/cycle (modeled), C[0][0] = {:.4}",
+        report.flops,
+        report.flop_per_cycle().unwrap_or(0.0),
+        report.c.get(0, 0)
+    );
+    // Unsupported combinations are typed errors, not panics:
+    let err = session.gemm().src(FP8).acc(FP32).dims(16, 16, 16).unwrap_err();
+    println!("rejected at plan build: {err}\n");
 
     // --- minifloat encode/decode -------------------------------------
     let x = from_f64(1.1, FP8, rm);
@@ -47,4 +70,5 @@ fn main() {
     );
 
     println!("quickstart OK");
+    Ok(())
 }

@@ -9,7 +9,8 @@
 //! cargo run --release --example train_minifloat -- [--steps 300] [--seed 42]
 //! ```
 
-use minifloat_nn::coordinator::{Precision, Trainer};
+use minifloat_nn::api::Session;
+use minifloat_nn::coordinator::Precision;
 use minifloat_nn::util::cli::Args;
 use minifloat_nn::util::error::Result;
 
@@ -21,10 +22,13 @@ fn main() -> Result<()> {
 
     println!("=== E2E: HFP8 (FP8alt fwd / FP8 bwd, FP16 acc) vs FP32, {steps} steps ===\n");
 
+    // One session owns the run policy (here: the seed); both precision
+    // arms train from the same starting point.
+    let session = Session::builder().seed(seed).build();
     let mut results = Vec::new();
     for precision in [Precision::Hfp8, Precision::Fp32] {
         println!("--- {precision:?} ---");
-        let mut tr = Trainer::new(&dir, precision, seed)?;
+        let mut tr = session.trainer(&dir, precision)?;
         for i in 0..steps {
             let loss = tr.step()?;
             if i % (steps / 10).max(1) == 0 {

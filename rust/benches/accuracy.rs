@@ -1,24 +1,28 @@
 //! Table IV regeneration harness + accumulation throughput: the
-//! descriptor-driven path vs the monomorphized fast path (bit-identical
-//! results — the speedup is what makes wide sweeps tractable).
+//! descriptor-driven path vs the monomorphized fast path, both driven
+//! through typed `AccumulatePlan`s (bit-identical results — the speedup
+//! is what makes wide sweeps tractable).
 
-use minifloat_nn::accuracy::{accumulate, accumulate_fast};
+use minifloat_nn::prelude::*;
 use minifloat_nn::report;
 use minifloat_nn::util::bench::Bencher;
-use minifloat_nn::{FP16, FP32, FP8};
 
 fn main() {
     println!("== regenerating Table IV ==");
     print!("{}", report::table4_text(42));
 
     println!("\n== accumulation harness throughput ==");
+    // CycleAccurate sessions run the descriptor-driven unit path,
+    // Functional sessions the monomorphized fast path.
+    let slow = Session::builder().mode(ExecMode::CycleAccurate).seed(1).build();
+    let fast = Session::builder().mode(ExecMode::Functional).seed(1).build();
     let mut b = Bencher::new();
-    b.bench_throughput("accumulate 2000 fp16->fp32", 2000.0, || accumulate(FP16, FP32, 2000, 1).err_exsdotp);
-    b.bench_throughput("accumulate 2000 fp8->fp16", 2000.0, || accumulate(FP8, FP16, 2000, 1).err_exsdotp);
-    b.bench_throughput("fast accumulate 2000 fp16->fp32", 2000.0, || {
-        accumulate_fast(FP16, FP32, 2000, 1).err_exsdotp
-    });
-    b.bench_throughput("fast accumulate 2000 fp8->fp16", 2000.0, || {
-        accumulate_fast(FP8, FP16, 2000, 1).err_exsdotp
-    });
+    for (label, session) in [("descriptor", &slow), ("fast", &fast)] {
+        for (src, dst, name) in [(FP16, FP32, "fp16->fp32"), (FP8, FP16, "fp8->fp16")] {
+            let plan = session.accumulate().src(src).acc(dst).n(2000).expect("valid plan");
+            b.bench_throughput(&format!("{label} accumulate 2000 {name}"), 2000.0, || {
+                plan.run().err_exsdotp
+            });
+        }
+    }
 }

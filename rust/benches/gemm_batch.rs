@@ -1,68 +1,70 @@
 //! The batch-engine headline benchmark: per-element descriptor-driven
-//! GEMM vs the monomorphized batch engine, FP8→FP16 at the paper's
+//! GEMM vs the typed API's functional path, FP8→FP16 at the paper's
 //! 128-class sizes.
 //!
 //! * *per-element baseline*: `kernel_reference` — the descriptor-driven
 //!   replay that packs and dispatches every lane individually (what
 //!   every accuracy/validation sweep had to run through before Tier B).
-//! * *batched*: `batch::gemm` (`ExecMode::Functional`) — packed
-//!   registers, monomorphized kernels, rows in parallel.
+//! * *batched*: the redesigned surface — `Session::gemm()` plans on
+//!   `ExecMode::Functional` (packed registers, monomorphized kernels,
+//!   rows in parallel), so the trajectory measures what users actually
+//!   call.
 //!
-//! Both produce bit-identical C (verified here before timing). The run
-//! appends a trajectory point to `BENCH_gemm.json` in the working
-//! directory so CI can track the speedup over time.
+//! All paths produce bit-identical C (verified here before timing,
+//! including the deprecated `batch::gemm` shim). The run appends a
+//! trajectory point to `BENCH_gemm.json` in the working directory so CI
+//! can track the speedup over time.
 
-use minifloat_nn::batch;
 use minifloat_nn::isa::instr::OpWidth;
-use minifloat_nn::kernels::{kernel_reference, GemmKernel, GemmKind};
-use minifloat_nn::softfloat::RoundingMode;
+use minifloat_nn::kernels::kernel_reference;
+use minifloat_nn::prelude::*;
 use minifloat_nn::util::bench::Bencher;
-use minifloat_nn::util::rng::Rng;
 use std::io::Write;
 
 fn main() {
     let kind = GemmKind::ExSdotp(OpWidth::BtoH);
     let (m, n, k) = (128, 128, 128);
-    let mut rng = Rng::new(42);
+    let session = Session::builder().mode(ExecMode::Functional).seed(42).build();
+    let serial = Session::builder().mode(ExecMode::Functional).seed(42).threads(1).build();
+    let mut rng = session.rng();
     let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
     let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
-    let kern = GemmKernel::new(kind, m, n, k);
+    let plan = session.gemm().kind(kind).dims(m, n, k).expect("valid plan");
+    let serial_plan = serial.gemm().kind(kind).dims(m, n, k).expect("valid plan");
+    let kern = *plan.kernel();
     let flops = kern.flops() as f64;
 
     // Bit-identity gate before any timing: a fast wrong answer is
-    // worthless.
+    // worthless. Reference replay == new API == deprecated shim.
     let want = kernel_reference(&kern, &a, &b);
-    let got = batch::gemm(kind, m, n, k, &a, &b, RoundingMode::Rne);
-    let identical = want
-        .iter()
-        .zip(&got)
-        .all(|(w, g)| w.to_bits() == g.to_bits() || (w.is_nan() && g.is_nan()));
-    assert!(identical, "batch::gemm diverged from the per-element reference");
-    println!("bit-identity: batch::gemm == kernel_reference on {m}x{n}x{k} FP8->FP16 ✓\n");
+    let got = plan.run_f64(&a, &b).expect("valid run").c_f64();
+    #[allow(deprecated)]
+    let shim = minifloat_nn::batch::gemm(kind, m, n, k, &a, &b, RoundingMode::Rne);
+    let identical = |x: &[f64], y: &[f64]| {
+        x.iter().zip(y).all(|(w, g)| w.to_bits() == g.to_bits() || (w.is_nan() && g.is_nan()))
+    };
+    assert!(identical(&want, &got), "plan API diverged from the per-element reference");
+    assert!(identical(&want, &shim), "deprecated batch::gemm shim diverged");
+    println!("bit-identity: Session plan == batch::gemm == kernel_reference on {m}x{n}x{k} FP8->FP16 ✓\n");
 
-    println!("== FP8->FP16 {m}x{n}x{k} GEMM: per-element baseline vs batch engine ==");
+    println!("== FP8->FP16 {m}x{n}x{k} GEMM: per-element baseline vs typed-API batch engine ==");
     let mut bench = Bencher::new();
     let per_elem = bench
         .bench_throughput("per-element (kernel_reference)", flops, || kernel_reference(&kern, &a, &b))
         .median
         .as_secs_f64();
     let batched = bench
-        .bench_throughput("batched (batch::gemm, parallel rows)", flops, || {
-            batch::gemm(kind, m, n, k, &a, &b, RoundingMode::Rne)
+        .bench_throughput("batched (Session::gemm plan, parallel rows)", flops, || {
+            plan.run_f64(&a, &b).expect("valid run").c
         })
         .median
         .as_secs_f64();
-    let batched_serial = {
-        std::env::set_var("MINIFLOAT_NN_THREADS", "1");
-        let s = bench
-            .bench_throughput("batched (single thread)", flops, || {
-                batch::gemm(kind, m, n, k, &a, &b, RoundingMode::Rne)
-            })
-            .median
-            .as_secs_f64();
-        std::env::remove_var("MINIFLOAT_NN_THREADS");
-        s
-    };
+    let batched_serial = bench
+        .bench_throughput("batched (Session with threads(1))", flops, || {
+            serial_plan.run_f64(&a, &b).expect("valid run").c
+        })
+        .median
+        .as_secs_f64();
 
     let speedup = per_elem / batched;
     let speedup_serial = per_elem / batched_serial;
@@ -77,7 +79,7 @@ fn main() {
         "{{\"bench\":\"gemm_fp8_fp16_{m}x{n}x{k}\",\"unix_time\":{ts},\
          \"per_element_ms\":{:.3},\"batched_ms\":{:.3},\"batched_serial_ms\":{:.3},\
          \"speedup\":{speedup:.2},\"speedup_serial\":{speedup_serial:.2},\
-         \"gflops_batched\":{:.3},\"bit_identical\":true}}\n",
+         \"gflops_batched\":{:.3},\"bit_identical\":true,\"api\":\"session_plan\"}}\n",
         per_elem * 1e3,
         batched * 1e3,
         batched_serial * 1e3,

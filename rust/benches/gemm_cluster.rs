@@ -1,13 +1,13 @@
 //! Table II / Fig. 8 regeneration harness + simulator throughput.
 //!
 //! Prints the full Table II grid (simulated vs paper cycles) and
-//! measures how fast the cycle-level simulation itself runs.
+//! measures how fast the cycle-level simulation itself runs — both
+//! engines driven through the typed `Session`/`GemmPlan` API.
 
 use minifloat_nn::isa::instr::{OpWidth, ScalarFmt};
-use minifloat_nn::kernels::{ExecMode, GemmKernel, GemmKind};
+use minifloat_nn::prelude::*;
 use minifloat_nn::report;
 use minifloat_nn::util::bench::Bencher;
-use minifloat_nn::util::rng::Rng;
 
 fn main() {
     println!("== regenerating Table II / Fig. 8 (simulated cluster) ==");
@@ -16,34 +16,38 @@ fn main() {
     println!();
     print!("{}", report::fig8_text(&rows));
 
+    let kinds = [
+        (GemmKind::FmaF64, "FP64 64x64"),
+        (GemmKind::FmaSimd(ScalarFmt::H), "FP16 64x64"),
+        (GemmKind::ExSdotp(OpWidth::BtoH), "FP8->16 64x64"),
+    ];
+
     println!("\n== simulator throughput (simulated cycles / wall second) ==");
     let mut b = Bencher::new();
-    let mut rng = Rng::new(9);
-    for (kind, label) in [
-        (GemmKind::FmaF64, "sim FP64 64x64"),
-        (GemmKind::FmaSimd(ScalarFmt::H), "sim FP16 64x64"),
-        (GemmKind::ExSdotp(OpWidth::BtoH), "sim FP8->16 64x64"),
-    ] {
+    let sim = Session::builder().mode(ExecMode::CycleAccurate).seed(9).build();
+    let mut rng = sim.rng();
+    for (kind, label) in kinds {
         let (m, n, k) = (64, 64, 64);
         let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
         let bm: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
-        let kern = GemmKernel::new(kind, m, n, k);
-        let cycles = kern.run(&a, &bm).cycles as f64;
-        b.bench_throughput(label, cycles, || kern.run(&a, &bm).cycles);
+        let plan = sim.gemm().kind(kind).dims(m, n, k).expect("valid plan");
+        let cycles = plan.run_f64(&a, &bm).expect("valid run").cycles.unwrap_or(0) as f64;
+        b.bench_throughput(&format!("sim {label}"), cycles, || {
+            plan.run_f64(&a, &bm).expect("valid run").cycles
+        });
     }
 
     println!("\n== ExecMode::Functional (batch engine) on the same problems ==");
-    let mut rng = Rng::new(9);
-    for (kind, label) in [
-        (GemmKind::FmaF64, "fun FP64 64x64"),
-        (GemmKind::FmaSimd(ScalarFmt::H), "fun FP16 64x64"),
-        (GemmKind::ExSdotp(OpWidth::BtoH), "fun FP8->16 64x64"),
-    ] {
+    let fun = Session::builder().mode(ExecMode::Functional).seed(9).build();
+    let mut rng = fun.rng();
+    for (kind, label) in kinds {
         let (m, n, k) = (64, 64, 64);
         let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
         let bm: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
-        let kern = GemmKernel::new(kind, m, n, k);
-        let flops = kern.flops() as f64;
-        b.bench_throughput(label, flops, || kern.run_mode(&a, &bm, ExecMode::Functional).c.len());
+        let plan = fun.gemm().kind(kind).dims(m, n, k).expect("valid plan");
+        let flops = plan.kernel().flops() as f64;
+        b.bench_throughput(&format!("fun {label}"), flops, || {
+            plan.run_f64(&a, &bm).expect("valid run").c
+        });
     }
 }

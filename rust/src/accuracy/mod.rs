@@ -108,12 +108,31 @@ fn accumulate_m<S: ExpandTo<D>, D: FormatSpec>(n: usize, seed: u64) -> AccuracyP
     AccuracyPoint { n, err_exsdotp: rel(acc_fused), err_exfma: rel(acc_casc) }
 }
 
+/// Seed for draw `i` of an averaged sweep — the single source of truth
+/// for sweep seed derivation, shared by [`table4_averaged`] and the
+/// typed accumulation plans ([`crate::api::AccumulatePlan::sweep`]).
+/// Both the descriptor path ([`accumulate`]) and the fast path
+/// ([`accumulate_fast`]) consume these seeds identically, so
+/// fused-vs-cascade errors agree bit for bit across paths for any draw
+/// (pinned by `sweep_seeds_identical_across_paths`).
+pub fn sweep_seed(draw: u64) -> u64 {
+    1000 + draw
+}
+
+/// The Table IV format pairs (source → expanding destination) — the
+/// single grid definition shared by [`table4`], [`table4_averaged`]
+/// and the report/plan renderers.
+pub const TABLE4_PAIRS: [(FpFormat, FpFormat); 2] =
+    [(crate::formats::FP16, crate::formats::FP32), (crate::formats::FP8, crate::formats::FP16)];
+
+/// The Table IV accumulation lengths.
+pub const TABLE4_NS: [usize; 3] = [500, 1000, 2000];
+
 /// The full Table IV grid: FP16→FP32 and FP8→FP16, n ∈ {500,1000,2000}.
 pub fn table4(seed: u64) -> Vec<(FpFormat, FpFormat, AccuracyPoint)> {
-    use crate::formats::{FP16, FP32, FP8};
     let mut out = Vec::new();
-    for (src, dst) in [(FP16, FP32), (FP8, FP16)] {
-        for n in [500usize, 1000, 2000] {
+    for (src, dst) in TABLE4_PAIRS {
+        for n in TABLE4_NS {
             out.push((src, dst, accumulate(src, dst, n, seed)));
         }
     }
@@ -125,14 +144,13 @@ pub fn table4(seed: u64) -> Vec<(FpFormat, FpFormat, AccuracyPoint)> {
 /// bit-identical to the descriptor path, so the averages are exactly
 /// those the slow path would produce.
 pub fn table4_averaged(seeds: u64) -> Vec<(FpFormat, FpFormat, usize, f64, f64)> {
-    use crate::formats::{FP16, FP32, FP8};
     let mut out = Vec::new();
-    for (src, dst) in [(FP16, FP32), (FP8, FP16)] {
-        for n in [500usize, 1000, 2000] {
+    for (src, dst) in TABLE4_PAIRS {
+        for n in TABLE4_NS {
             let mut s_fused = 0.0;
             let mut s_casc = 0.0;
-            for seed in 0..seeds {
-                let p = accumulate_fast(src, dst, n, 1000 + seed);
+            for draw in 0..seeds {
+                let p = accumulate_fast(src, dst, n, sweep_seed(draw));
                 s_fused += p.err_exsdotp;
                 s_casc += p.err_exfma;
             }
@@ -234,6 +252,39 @@ mod tests {
         let a = accumulate(e5m1, FP16, 200, 3);
         let b = accumulate_fast(e5m1, FP16, 200, 3);
         assert_eq!(a.err_exsdotp.to_bits(), b.err_exsdotp.to_bits());
+    }
+
+    #[test]
+    fn sweep_seeds_identical_across_paths() {
+        // The averaged sweep and the fast path must derive draw seeds
+        // from the same helper: for every sweep seed, the descriptor
+        // path and the monomorphized path report f64-identical fused
+        // AND cascade errors (this is what makes `table4_averaged`'s
+        // means exactly those the slow path would produce).
+        for (src, dst) in [(FP16, FP32), (FP8, FP16)] {
+            for draw in 0..6u64 {
+                let seed = sweep_seed(draw);
+                let slow = accumulate(src, dst, 500, seed);
+                let fast = accumulate_fast(src, dst, 500, seed);
+                assert_eq!(
+                    slow.err_exsdotp.to_bits(),
+                    fast.err_exsdotp.to_bits(),
+                    "fused err diverged: {}→{} draw {draw}",
+                    src.name(),
+                    dst.name()
+                );
+                assert_eq!(
+                    slow.err_exfma.to_bits(),
+                    fast.err_exfma.to_bits(),
+                    "cascade err diverged: {}→{} draw {draw}",
+                    src.name(),
+                    dst.name()
+                );
+            }
+        }
+        // And the schedule itself is the documented one.
+        assert_eq!(sweep_seed(0), 1000);
+        assert_eq!(sweep_seed(31), 1031);
     }
 
     #[test]

@@ -1,0 +1,91 @@
+//! The crate's typed front door: [`Session`] / [`MfTensor`] /
+//! [`GemmPlan`].
+//!
+//! Everything below this module — softfloat, the batch engine, the
+//! kernel generators, the cycle-accurate cluster — predates it and
+//! speaks in raw `f64` slices, positional `(m, n, k)` sizes, and
+//! runtime format values, with panics on unsupported combinations.
+//! This module is the single coherent surface over that stack:
+//!
+//! * [`MfTensor`] — an owned packed-`u64` tensor that carries its
+//!   [`FpFormat`](crate::formats::FpFormat), shape, and storage layout
+//!   ([`Layout`]), with `from_f64` / `to_f64` / `cast` / `view`.
+//! * [`Session`] — execution policy (engine, rounding, seed, thread
+//!   budget, cycle-model toggle) owned once instead of threaded through
+//!   every call.
+//! * [`GemmPlan`] / [`AccumulatePlan`] — validated op builders:
+//!   `session.gemm().src(FP8).acc(FP16).dims(m, n, k)?.run(&a, &b)?`
+//!   returns a structured [`RunReport`]; every invalid format pair,
+//!   shape mismatch, or infeasible problem is a typed
+//!   [`Error`](crate::util::error::Error) at plan-build time, never a
+//!   panic mid-run.
+//!
+//! The pre-API free functions remain as thin deprecated shims for one
+//! release; the differential tests in this module pin the new surface
+//! bit-identical to them.
+//!
+//! ```
+//! use minifloat_nn::prelude::*;
+//!
+//! # fn main() -> minifloat_nn::util::error::Result<()> {
+//! let session = Session::builder().mode(ExecMode::Functional).seed(7).build();
+//! let mut rng = session.rng();
+//! let a: Vec<f64> = (0..16 * 16).map(|_| rng.gaussian() * 0.25).collect();
+//! let b: Vec<f64> = (0..16 * 16).map(|_| rng.gaussian() * 0.25).collect();
+//! let report = session.gemm().src(FP8).acc(FP16).dims(16, 16, 16)?.run_f64(&a, &b)?;
+//! assert_eq!(report.c.shape(), (16, 16));
+//! println!("{} FLOP in {:?} cycles", report.flops, report.cycles);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod plan;
+pub mod session;
+pub mod tensor;
+#[cfg(test)]
+mod tests;
+
+pub use plan::{AccumulatePlan, AccumulatePlanBuilder, GemmPlan, GemmPlanBuilder, RunReport};
+pub use session::{Session, SessionBuilder};
+pub use tensor::{Layout, MfTensor, MfTensorView};
+
+use crate::bail;
+use crate::kernels::gemm::{ExecMode, GemmKind};
+use crate::util::error::Result;
+
+// ---------------------------------------------------------- CLI parsing
+//
+// Shared by the `repro` binary and unit-testable without spawning it.
+
+/// Parse an `MxN` problem size (e.g. `128x128`).
+pub fn parse_size(s: &str) -> Result<(usize, usize)> {
+    let parsed = s
+        .split_once('x')
+        .and_then(|(a, b)| Some((a.trim().parse::<usize>().ok()?, b.trim().parse::<usize>().ok()?)));
+    match parsed {
+        Some((m, n)) if m > 0 && n > 0 => Ok((m, n)),
+        _ => bail!("--size must be MxN with positive integers (e.g. 128x128), got '{s}'"),
+    }
+}
+
+/// Parse a kernel-family name (`fp64|fp32|fp16|fp16to32|fp8`).
+pub fn parse_kernel(s: &str) -> Result<GemmKind> {
+    use crate::isa::instr::{OpWidth, ScalarFmt};
+    match s {
+        "fp64" => Ok(GemmKind::FmaF64),
+        "fp32" => Ok(GemmKind::FmaSimd(ScalarFmt::S)),
+        "fp16" => Ok(GemmKind::FmaSimd(ScalarFmt::H)),
+        "fp16to32" => Ok(GemmKind::ExSdotp(OpWidth::HtoS)),
+        "fp8" => Ok(GemmKind::ExSdotp(OpWidth::BtoH)),
+        other => bail!("--kernel must be fp64|fp32|fp16|fp16to32|fp8, got '{other}'"),
+    }
+}
+
+/// Parse an execution-mode name (`functional|cycle`).
+pub fn parse_mode(s: &str) -> Result<ExecMode> {
+    match s {
+        "cycle" => Ok(ExecMode::CycleAccurate),
+        "functional" => Ok(ExecMode::Functional),
+        other => bail!("--mode must be functional|cycle, got '{other}'"),
+    }
+}

@@ -1,0 +1,391 @@
+//! Validated op builders: [`GemmPlan`] and [`AccumulatePlan`].
+//!
+//! A plan is built in two steps — choose formats (or a kernel family),
+//! then bind sizes — and **every** invalid combination is rejected with
+//! a typed [`crate::util::error::Error`] at plan-build time: unsupported
+//! format pairs, divisibility violations, problems that overflow the
+//! simulated 128 kB TCDM, rounding modes the cycle-accurate cluster
+//! cannot honor. Nothing panics after `dims()`/`n()` return `Ok`.
+
+use super::session::Session;
+use super::tensor::{expect_fmt, MfTensor};
+use crate::accuracy::{self, AccuracyPoint};
+use crate::core::CoreStats;
+use crate::formats::FpFormat;
+use crate::kernels::gemm::{ExecMode, GemmKernel, GemmKind};
+use crate::softfloat::RoundingMode;
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// Builder returned by [`Session::gemm`]. Pick the kernel either by
+/// format pair ([`GemmPlanBuilder::src`] + [`GemmPlanBuilder::acc`]) or
+/// directly by family ([`GemmPlanBuilder::kind`]); [`GemmPlanBuilder::dims`]
+/// validates and finalizes.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmPlanBuilder<'s> {
+    session: &'s Session,
+    src: Option<FpFormat>,
+    acc: Option<FpFormat>,
+    kind: Option<GemmKind>,
+}
+
+impl<'s> GemmPlanBuilder<'s> {
+    pub(crate) fn new(session: &'s Session) -> Self {
+        GemmPlanBuilder { session, src: None, acc: None, kind: None }
+    }
+
+    /// Source element format of A and B.
+    pub fn src(mut self, fmt: FpFormat) -> Self {
+        self.src = Some(fmt);
+        self
+    }
+
+    /// Accumulation / output format of C.
+    pub fn acc(mut self, fmt: FpFormat) -> Self {
+        self.acc = Some(fmt);
+        self
+    }
+
+    /// Select the kernel family directly (alternative to `src`/`acc`).
+    pub fn kind(mut self, kind: GemmKind) -> Self {
+        self.kind = Some(kind);
+        self
+    }
+
+    /// Bind the problem size (`C = A·B` with A `m×k`, B `k×n`) and
+    /// validate everything: format pair, kernel kind, divisibility,
+    /// rounding-mode compatibility, and (cycle-accurate mode) the
+    /// paper's 128 kB TCDM footprint.
+    pub fn dims(self, m: usize, n: usize, k: usize) -> Result<GemmPlan<'s>> {
+        let kind = match (self.kind, self.src, self.acc) {
+            (Some(kind), src, acc) => {
+                kind.validate()?;
+                if let Some(s) = src {
+                    ensure!(
+                        kind.try_src_fmt()? == s,
+                        "kind {:?} streams {} sources, but .src({}) was requested",
+                        kind,
+                        kind.try_src_fmt()?.name(),
+                        s.name()
+                    );
+                }
+                if let Some(a) = acc {
+                    ensure!(
+                        kind.try_dst_fmt()? == a,
+                        "kind {:?} accumulates into {}, but .acc({}) was requested",
+                        kind,
+                        kind.try_dst_fmt()?.name(),
+                        a.name()
+                    );
+                }
+                kind
+            }
+            (None, Some(s), Some(a)) => GemmKind::for_formats(s, a)?,
+            (None, Some(_), None) => bail!("missing accumulation format: call .acc(..) (or .kind(..))"),
+            (None, None, _) => bail!("missing formats: call .src(..).acc(..) or .kind(..)"),
+        };
+        if self.session.mode() == ExecMode::CycleAccurate {
+            ensure!(
+                self.session.rounding() == RoundingMode::Rne,
+                "the cycle-accurate cluster rounds RNE; use RoundingMode::Rne or ExecMode::Functional \
+                 (requested {:?})",
+                self.session.rounding()
+            );
+        }
+        let kern = GemmKernel::try_new(kind, m, n, k)?;
+        if self.session.mode() == ExecMode::CycleAccurate {
+            ensure!(
+                kern.footprint() <= 128 * 1024,
+                "{} {} needs {} bytes of TCDM but the simulated cluster has 128 kB; \
+                 the functional engine (ExecMode::Functional / --mode functional) runs \
+                 larger problems",
+                kind.label(),
+                kern.size_label(),
+                kern.footprint()
+            );
+        }
+        Ok(GemmPlan { session: self.session, kern })
+    }
+}
+
+/// A fully validated GEMM: kernel family + sizes + the session policy
+/// that will run it. Constructed only through [`GemmPlanBuilder::dims`],
+/// so a `GemmPlan` in hand is proof the problem is runnable.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmPlan<'s> {
+    session: &'s Session,
+    kern: GemmKernel,
+}
+
+impl GemmPlan<'_> {
+    /// The kernel family this plan runs.
+    pub fn kind(&self) -> GemmKind {
+        self.kern.kind
+    }
+
+    /// `(m, n, k)`.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.kern.m, self.kern.n, self.kern.k)
+    }
+
+    /// The underlying kernel descriptor (program generator, cycle
+    /// model, TCDM layout) — the machine-model escape hatch.
+    pub fn kernel(&self) -> &GemmKernel {
+        &self.kern
+    }
+
+    /// Source element format.
+    pub fn src_fmt(&self) -> FpFormat {
+        self.kern.kind.try_src_fmt().expect("plan kinds are validated")
+    }
+
+    /// Accumulation / output format.
+    pub fn acc_fmt(&self) -> FpFormat {
+        self.kern.kind.try_dst_fmt().expect("plan kinds are validated")
+    }
+
+    /// Run on row-major `f64` matrices (quantized to the source format
+    /// on packing, exactly like the pre-API free functions).
+    pub fn run_f64(&self, a: &[f64], b: &[f64]) -> Result<RunReport> {
+        let (m, n, k) = self.dims();
+        ensure!(a.len() == m * k, "A must be {m}x{k} = {} elements, got {}", m * k, a.len());
+        ensure!(b.len() == k * n, "B must be {k}x{n} = {} elements, got {}", k * n, b.len());
+        let t0 = std::time::Instant::now();
+        let mode = self.session.mode();
+        let (c, cycles, stats) = self.session.scoped(|| match mode {
+            ExecMode::CycleAccurate => {
+                let r = self.kern.run(a, b);
+                (r.c, Some(r.cycles), Some(r.stats))
+            }
+            ExecMode::Functional => {
+                let c = crate::batch::gemm_dispatch(self.kern.kind, m, n, k, a, b, self.session.rounding());
+                let cycles = self.session.cycle_model_enabled().then(|| self.kern.model_cycles());
+                (c, cycles, None)
+            }
+        });
+        let wall = t0.elapsed();
+        // C values are on the destination grid, so re-encoding is exact
+        // (scoped: the packer parallelizes under the thread budget too).
+        let c = self.session.scoped(|| MfTensor::from_f64(&c, m, n, self.acc_fmt(), RoundingMode::Rne))?;
+        Ok(RunReport { c, cycles, flops: self.kern.flops(), stats, mode, packed_input: false, wall })
+    }
+
+    /// Run on typed tensors. `a` must be `m×k` and `b` `k×n`, both in
+    /// the plan's source format (cast first otherwise); any storage
+    /// layout is accepted.
+    ///
+    /// When the functional engine is selected and the tensors already
+    /// sit in the layouts the kernel streams (A row-major, B
+    /// column-major) with an expanding kernel family, the packed words
+    /// feed the batch engine **directly** — zero decode/re-pack. All
+    /// other combinations restream from the decoded values, which is
+    /// exact for on-grid tensors; both routes produce the same C
+    /// (pinned by the `tensor_run_*` differential tests).
+    pub fn run(&self, a: &MfTensor, b: &MfTensor) -> Result<RunReport> {
+        use super::tensor::Layout;
+        let (m, n, k) = self.dims();
+        expect_fmt(a, self.src_fmt(), "A")?;
+        expect_fmt(b, self.src_fmt(), "B")?;
+        ensure!(a.shape() == (m, k), "A must be {m}x{k}, got {}x{}", a.rows(), a.cols());
+        ensure!(b.shape() == (k, n), "B must be {k}x{n}, got {}x{}", b.rows(), b.cols());
+        if self.session.mode() == ExecMode::Functional
+            && a.layout() == Layout::RowMajor
+            && b.layout() == Layout::ColMajor
+        {
+            let t0 = std::time::Instant::now();
+            let rm = self.session.rounding();
+            let packed = self.session.scoped(|| {
+                crate::batch::gemm_packed(self.src_fmt(), self.acc_fmt(), m, n, k, a.words(), b.words(), rm)
+            });
+            if let Some(c) = packed {
+                let wall = t0.elapsed();
+                let cycles = self.session.cycle_model_enabled().then(|| self.kern.model_cycles());
+                let c =
+                    self.session.scoped(|| MfTensor::from_f64(&c, m, n, self.acc_fmt(), RoundingMode::Rne))?;
+                return Ok(RunReport {
+                    c,
+                    cycles,
+                    flops: self.kern.flops(),
+                    stats: None,
+                    mode: ExecMode::Functional,
+                    packed_input: true,
+                    wall,
+                });
+            }
+        }
+        self.run_f64(&a.to_f64(), &b.to_f64())
+    }
+}
+
+/// Structured result of a plan run: the C tensor plus timing and (in
+/// cycle-accurate mode) per-core machine stats.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// The output matrix, typed and packed in the accumulation format.
+    pub c: MfTensor,
+    /// Cluster cycles: simulated ([`ExecMode::CycleAccurate`]), the
+    /// analytic issue-slot estimate ([`ExecMode::Functional`] with the
+    /// cycle model on), or `None` (cycle model off).
+    pub cycles: Option<u64>,
+    /// FLOP performed (2·M·N·K).
+    pub flops: u64,
+    /// Aggregate core stats (cycle-accurate runs only).
+    pub stats: Option<CoreStats>,
+    /// Which engine produced this report.
+    pub mode: ExecMode,
+    /// True when the operands' packed words fed the batch engine
+    /// directly ([`GemmPlan::run`]'s zero-repack route); false on the
+    /// quantize-from-f64 route and in cycle-accurate mode.
+    pub packed_input: bool,
+    /// Wall-clock time of the run.
+    pub wall: std::time::Duration,
+}
+
+impl RunReport {
+    /// FLOP per cycle across the cluster (Fig. 8's y-axis), when a
+    /// cycle count is available.
+    pub fn flop_per_cycle(&self) -> Option<f64> {
+        self.cycles.map(|cy| self.flops as f64 / cy as f64)
+    }
+
+    /// The output decoded to row-major `f64`.
+    pub fn c_f64(&self) -> Vec<f64> {
+        self.c.to_f64()
+    }
+
+    /// Human label for where [`RunReport::cycles`] came from.
+    pub fn timing_label(&self) -> &'static str {
+        match (self.mode, self.cycles.is_some()) {
+            (ExecMode::CycleAccurate, _) => "simulated",
+            (ExecMode::Functional, true) => "issue-slot model",
+            (ExecMode::Functional, false) => "disabled",
+        }
+    }
+}
+
+// ------------------------------------------------------------ accuracy
+
+/// Builder returned by [`Session::accumulate`] — the Table IV
+/// experiment (accumulate `n` Gaussian dot products through the fused
+/// ExSdotp unit and the two-ExFMA cascade, against an FP64 golden).
+#[derive(Clone, Copy, Debug)]
+pub struct AccumulatePlanBuilder<'s> {
+    session: &'s Session,
+    src: Option<FpFormat>,
+    acc: Option<FpFormat>,
+}
+
+impl<'s> AccumulatePlanBuilder<'s> {
+    pub(crate) fn new(session: &'s Session) -> Self {
+        AccumulatePlanBuilder { session, src: None, acc: None }
+    }
+
+    /// Source format of the dot-product inputs.
+    pub fn src(mut self, fmt: FpFormat) -> Self {
+        self.src = Some(fmt);
+        self
+    }
+
+    /// Accumulation (destination) format.
+    pub fn acc(mut self, fmt: FpFormat) -> Self {
+        self.acc = Some(fmt);
+        self
+    }
+
+    /// Bind the number of dot products and validate the format pair
+    /// against the ExSdotp datapath constraints (§III-B): the exact
+    /// products must fit the padded accumulator (`2·p_src ≤ p_dst`) and
+    /// the destination must cover the source dynamic range. These are
+    /// the conditions the raw [`crate::exsdotp::ExSdotpUnit`] asserts —
+    /// surfaced here as typed errors instead.
+    pub fn n(self, n: usize) -> Result<AccumulatePlan<'s>> {
+        let (Some(src), Some(dst)) = (self.src, self.acc) else {
+            bail!("missing formats: call .src(..).acc(..) before .n(..)");
+        };
+        ensure!(n >= 2, "n ({n}) must be at least one dot-product pair");
+        // Both accumulation engines round RNE internally (the Table IV
+        // experiment is defined that way); honoring any other session
+        // mode is impossible, so reject instead of silently ignoring it.
+        ensure!(
+            self.session.rounding() == RoundingMode::Rne,
+            "the accumulation harness rounds RNE (the Table IV setup); use RoundingMode::Rne \
+             (requested {:?})",
+            self.session.rounding()
+        );
+        ensure!(
+            2 * src.precision() <= dst.precision(),
+            "ExSdotp requires 2*p_src <= p_dst, got {} (p={}) -> {} (p={})",
+            src.name(),
+            src.precision(),
+            dst.name(),
+            dst.precision()
+        );
+        ensure!(
+            dst.exp_bits >= src.exp_bits,
+            "destination dynamic range must cover the source ({} -> {})",
+            src.name(),
+            dst.name()
+        );
+        ensure!(
+            2 * dst.precision() + src.precision() + 5 <= 127,
+            "internal datapath field for {} -> {} exceeds the 128-bit model width",
+            src.name(),
+            dst.name()
+        );
+        Ok(AccumulatePlan { session: self.session, src, dst, n })
+    }
+}
+
+/// A validated accumulation experiment. [`ExecMode::Functional`]
+/// sessions run the monomorphized fast path
+/// ([`crate::accuracy::accumulate_fast`]); [`ExecMode::CycleAccurate`]
+/// sessions run the descriptor-driven unit path
+/// ([`crate::accuracy::accumulate`]). The two are bit-identical for the
+/// paper's format pairs (pinned by differential tests), so the choice
+/// only trades speed for dispatch fidelity.
+#[derive(Clone, Copy, Debug)]
+pub struct AccumulatePlan<'s> {
+    session: &'s Session,
+    src: FpFormat,
+    dst: FpFormat,
+    n: usize,
+}
+
+impl AccumulatePlan<'_> {
+    /// `(src, dst)` formats.
+    pub fn formats(&self) -> (FpFormat, FpFormat) {
+        (self.src, self.dst)
+    }
+
+    /// Dot products per run.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// One draw with an explicit seed.
+    pub fn run_seeded(&self, seed: u64) -> AccuracyPoint {
+        match self.session.mode() {
+            ExecMode::Functional => accuracy::accumulate_fast(self.src, self.dst, self.n, seed),
+            ExecMode::CycleAccurate => accuracy::accumulate(self.src, self.dst, self.n, seed),
+        }
+    }
+
+    /// One draw with the session seed (a Table IV cell).
+    pub fn run(&self) -> AccuracyPoint {
+        self.run_seeded(self.session.seed())
+    }
+
+    /// `draws` independent draws on the shared sweep-seed schedule
+    /// ([`crate::accuracy::sweep_seed`] — the same seeds
+    /// `accuracy::table4_averaged` uses, so sweeps agree across paths).
+    pub fn sweep(&self, draws: u64) -> Vec<AccuracyPoint> {
+        (0..draws).map(|d| self.run_seeded(accuracy::sweep_seed(d))).collect()
+    }
+
+    /// Mean fused / cascade relative error over [`AccumulatePlan::sweep`].
+    pub fn mean(&self, draws: u64) -> (f64, f64) {
+        let pts = self.sweep(draws);
+        let s: (f64, f64) = pts.iter().fold((0.0, 0.0), |(f, c), p| (f + p.err_exsdotp, c + p.err_exfma));
+        (s.0 / draws as f64, s.1 / draws as f64)
+    }
+}

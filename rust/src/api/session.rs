@@ -1,0 +1,183 @@
+//! [`Session`] — execution policy for the typed API.
+//!
+//! Every pre-API entry point threaded the same knobs positionally:
+//! an [`ExecMode`], a [`RoundingMode`], a seed, a thread count, and
+//! (implicitly) whether the functional path should bother modeling
+//! cycles. A `Session` owns that policy once; plans built from it
+//! ([`Session::gemm`], [`Session::accumulate`]) inherit it.
+
+use super::plan::{AccumulatePlanBuilder, GemmPlanBuilder};
+use super::tensor::{Layout, MfTensor};
+use crate::coordinator::{Precision, Trainer};
+use crate::formats::FpFormat;
+use crate::kernels::gemm::ExecMode;
+use crate::softfloat::RoundingMode;
+use crate::util::error::Result;
+use crate::util::parallel::with_worker_count;
+use crate::util::rng::Rng;
+
+/// Immutable execution policy: which engine runs the work, how results
+/// round, where randomness comes from, and how wide the batch engine
+/// fans out. Build one with [`Session::builder`] (or take
+/// `Session::default()`: functional engine, RNE, seed 42, all cores,
+/// cycle model on).
+#[derive(Clone, Copy, Debug)]
+pub struct Session {
+    mode: ExecMode,
+    rm: RoundingMode,
+    seed: u64,
+    threads: Option<usize>,
+    cycle_model: bool,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session {
+            mode: ExecMode::Functional,
+            rm: RoundingMode::Rne,
+            seed: 42,
+            threads: None,
+            cycle_model: true,
+        }
+    }
+}
+
+impl Session {
+    /// Start building a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder { inner: Session::default() }
+    }
+
+    /// The default policy (functional engine, RNE, seed 42).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Execution engine for plans built from this session.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Rounding mode applied to quantization and functional-engine runs.
+    pub fn rounding(&self) -> RoundingMode {
+        self.rm
+    }
+
+    /// Seed for [`Session::rng`] and the accuracy plans.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Thread budget for the batch engine (`None` = all cores).
+    pub fn threads(&self) -> Option<usize> {
+        self.threads
+    }
+
+    /// Whether functional GEMM runs attach the analytic issue-slot
+    /// cycle estimate to their report.
+    pub fn cycle_model_enabled(&self) -> bool {
+        self.cycle_model
+    }
+
+    /// Start a typed GEMM plan: `session.gemm().src(FP8).acc(FP16)
+    /// .dims(m, n, k)?` validates everything up front and returns a
+    /// runnable [`crate::api::GemmPlan`].
+    pub fn gemm(&self) -> GemmPlanBuilder<'_> {
+        GemmPlanBuilder::new(self)
+    }
+
+    /// Start a typed accumulation plan (the Table IV experiment):
+    /// `session.accumulate().src(FP8).acc(FP16).n(2000)?`.
+    pub fn accumulate(&self) -> AccumulatePlanBuilder<'_> {
+        AccumulatePlanBuilder::new(self)
+    }
+
+    /// A deterministic RNG seeded with the session seed.
+    pub fn rng(&self) -> Rng {
+        Rng::new(self.seed)
+    }
+
+    /// Quantize a row-major `f64` matrix into a row-major [`MfTensor`]
+    /// using the session's rounding mode (and thread budget — packing
+    /// parallelizes across rows).
+    pub fn tensor(&self, data: &[f64], rows: usize, cols: usize, fmt: FpFormat) -> Result<MfTensor> {
+        self.scoped(|| MfTensor::from_f64(data, rows, cols, fmt, self.rm))
+    }
+
+    /// [`Session::tensor`] with an explicit storage layout. Pack B
+    /// column-major ([`crate::api::Layout::ColMajor`]) to hit
+    /// [`crate::api::GemmPlan::run`]'s zero-repack fast path — that is
+    /// the layout the packed kernels stream B in.
+    pub fn tensor_with_layout(
+        &self,
+        data: &[f64],
+        rows: usize,
+        cols: usize,
+        fmt: FpFormat,
+        layout: Layout,
+    ) -> Result<MfTensor> {
+        self.scoped(|| MfTensor::from_f64_with_layout(data, rows, cols, fmt, layout, self.rm))
+    }
+
+    /// Construct the end-to-end training driver with the session's
+    /// seed (the PJRT-backed coordinator; see `examples/train_minifloat.rs`).
+    pub fn trainer(&self, artifacts_dir: &str, precision: Precision) -> Result<Trainer> {
+        Trainer::new(artifacts_dir, precision, self.seed)
+    }
+
+    /// Run `f` under this session's thread budget (no-op when unset).
+    pub(crate) fn scoped<R>(&self, f: impl FnOnce() -> R) -> R {
+        match self.threads {
+            Some(n) => with_worker_count(n, f),
+            None => f(),
+        }
+    }
+}
+
+/// Builder for [`Session`]; every knob is optional.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionBuilder {
+    inner: Session,
+}
+
+impl SessionBuilder {
+    /// Select the execution engine (default [`ExecMode::Functional`]).
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.inner.mode = mode;
+        self
+    }
+
+    /// Select the rounding mode (default RNE). Note the cycle-accurate
+    /// cluster always rounds RNE — GEMM plan builders reject other
+    /// modes when paired with [`ExecMode::CycleAccurate`].
+    pub fn rounding(mut self, rm: RoundingMode) -> Self {
+        self.inner.rm = rm;
+        self
+    }
+
+    /// Seed the session RNG and the accuracy plans (default 42).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.inner.seed = seed;
+        self
+    }
+
+    /// Cap the batch engine's worker threads (default: all cores).
+    /// Results are bit-identical at any thread count.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.inner.threads = Some(n.max(1));
+        self
+    }
+
+    /// Toggle the analytic cycle model for functional runs (default
+    /// on). With it off, functional [`crate::api::RunReport`]s carry
+    /// no cycle estimate.
+    pub fn cycle_model(mut self, on: bool) -> Self {
+        self.inner.cycle_model = on;
+        self
+    }
+
+    /// Finish.
+    pub fn build(self) -> Session {
+        self.inner
+    }
+}

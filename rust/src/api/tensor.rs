@@ -1,0 +1,338 @@
+//! [`MfTensor`] — an owned, typed minifloat tensor.
+//!
+//! The pre-API surface passed matrices around as raw `&[f64]` slices
+//! plus positional `(rows, cols)` and a loose [`FpFormat`] — three
+//! things that had to be kept consistent by hand at every call site.
+//! `MfTensor` binds them together: the elements live **packed** in
+//! `u64` words exactly as the 64-bit FP register file holds them
+//! (§III-D: 2×FP32, 4×FP16, 8×FP8 lanes per word), alongside their
+//! format, shape, and storage layout. Packing uses the same
+//! `from_f64` quantization the kernels apply, so a tensor built with
+//! [`MfTensor::from_f64`] holds bit-for-bit the words the batch engine
+//! and the simulated cluster would stream.
+
+use crate::formats::FpFormat;
+use crate::kernels::layout::MatrixOrder;
+use crate::softfloat::{from_f64, to_f64, RoundingMode};
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// Storage layout of a tensor's packed words (re-export of the kernel
+/// layer's [`MatrixOrder`]: row-major packs lanes along rows, the way
+/// SSR stream `ft0` delivers A; column-major packs lanes down columns,
+/// the way `ft1` delivers B to the packed kernels).
+pub type Layout = MatrixOrder;
+
+/// An owned matrix of minifloat encodings, packed `fmt.lanes_in_64()`
+/// elements per `u64` word along the major dimension.
+///
+/// Invariants (enforced by every constructor):
+/// * the major extent (cols for row-major, rows for column-major)
+///   divides by the format's lane count, so words never straddle lines;
+/// * `words.len() == lines * extent / lanes`.
+///
+/// Equality (`PartialEq`) is bit-equality of format, shape, layout and
+/// packed words — what the differential tests compare.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MfTensor {
+    fmt: FpFormat,
+    rows: usize,
+    cols: usize,
+    layout: Layout,
+    words: Vec<u64>,
+}
+
+/// A borrowed view of an [`MfTensor`] (same accessors, no ownership) —
+/// hand these to readers that must not clone the packed storage.
+#[derive(Clone, Copy, Debug)]
+pub struct MfTensorView<'a> {
+    fmt: FpFormat,
+    rows: usize,
+    cols: usize,
+    layout: Layout,
+    words: &'a [u64],
+}
+
+/// `(lines, extent)` of the major dimension for a layout.
+fn major(rows: usize, cols: usize, layout: Layout) -> (usize, usize) {
+    match layout {
+        Layout::RowMajor => (rows, cols),
+        Layout::ColMajor => (cols, rows),
+    }
+}
+
+fn check_shape(fmt: FpFormat, rows: usize, cols: usize, layout: Layout) -> Result<usize> {
+    ensure!(
+        fmt.exp_bits >= 2 && fmt.man_bits >= 1 && fmt.width() <= 64,
+        "unsupported format e{}m{}: need exp_bits >= 2, man_bits >= 1, width <= 64",
+        fmt.exp_bits,
+        fmt.man_bits
+    );
+    ensure!(rows > 0 && cols > 0, "tensor shape {rows}x{cols} must be non-empty");
+    let lanes = fmt.lanes_in_64() as usize;
+    let (lines, extent) = major(rows, cols, layout);
+    ensure!(
+        extent % lanes == 0,
+        "{} extent ({extent}) must divide by {}'s {lanes} lanes per 64-bit word",
+        match layout {
+            Layout::RowMajor => "row",
+            Layout::ColMajor => "column",
+        },
+        fmt.name()
+    );
+    Ok(lines * (extent / lanes))
+}
+
+impl MfTensor {
+    /// Quantize a row-major `f64` matrix into a row-major packed tensor
+    /// (the layout GEMM expects for A and C). `cols` must divide by the
+    /// format's lane count.
+    pub fn from_f64(data: &[f64], rows: usize, cols: usize, fmt: FpFormat, rm: RoundingMode) -> Result<Self> {
+        Self::from_f64_with_layout(data, rows, cols, fmt, Layout::RowMajor, rm)
+    }
+
+    /// [`MfTensor::from_f64`] with an explicit storage layout (`data`
+    /// is row-major `f64` either way; the layout controls how lanes are
+    /// packed into words). Bit-identical to the batch engine's
+    /// row/column packers for the six paper formats.
+    pub fn from_f64_with_layout(
+        data: &[f64],
+        rows: usize,
+        cols: usize,
+        fmt: FpFormat,
+        layout: Layout,
+        rm: RoundingMode,
+    ) -> Result<Self> {
+        ensure!(
+            data.len() == rows * cols,
+            "data length ({}) does not match the {rows}x{cols} shape",
+            data.len()
+        );
+        let n_words = check_shape(fmt, rows, cols, layout)?;
+        // Paper formats pack on the batch engine's monomorphized,
+        // row-parallel packers (bit-identical by construction — same
+        // `from_f64` quantization, same lane order).
+        let fast = match layout {
+            Layout::RowMajor => crate::batch::pack_rows(fmt, data, rows, cols, rm),
+            Layout::ColMajor => crate::batch::pack_cols(fmt, data, rows, cols, rm),
+        };
+        if let Some(words) = fast {
+            return Ok(MfTensor { fmt, rows, cols, layout, words });
+        }
+        // Custom formats: descriptor-driven fallback, same layout.
+        let lanes = fmt.lanes_in_64() as usize;
+        let (lines, extent) = major(rows, cols, layout);
+        let wpl = extent / lanes;
+        let mut words = vec![0u64; n_words];
+        for line in 0..lines {
+            for w in 0..wpl {
+                let mut packed = 0u64;
+                for lane_i in 0..lanes {
+                    let e = w * lanes + lane_i;
+                    let (r, c) = match layout {
+                        Layout::RowMajor => (line, e),
+                        Layout::ColMajor => (e, line),
+                    };
+                    packed |= from_f64(data[r * cols + c], fmt, rm) << (lane_i as u32 * fmt.width());
+                }
+                words[line * wpl + w] = packed;
+            }
+        }
+        Ok(MfTensor { fmt, rows, cols, layout, words })
+    }
+
+    /// Adopt already-packed words (e.g. read back from a simulated
+    /// TCDM). Validates the word count against shape/format/layout.
+    pub fn from_bits(words: Vec<u64>, rows: usize, cols: usize, fmt: FpFormat, layout: Layout) -> Result<Self> {
+        let n_words = check_shape(fmt, rows, cols, layout)?;
+        ensure!(
+            words.len() == n_words,
+            "word count ({}) does not match {rows}x{cols} {} packed as {:?} ({n_words} words)",
+            words.len(),
+            fmt.name(),
+            layout
+        );
+        Ok(MfTensor { fmt, rows, cols, layout, words })
+    }
+
+    /// Cast every element into `to` (correctly rounded, single
+    /// rounding), repacking at the new lane width. The target format
+    /// must satisfy the same extent-divisibility invariant.
+    pub fn cast(&self, to: FpFormat, rm: RoundingMode) -> Result<MfTensor> {
+        let n_words = check_shape(to, self.rows, self.cols, self.layout)?;
+        let lanes_to = to.lanes_in_64() as usize;
+        let (lines, extent) = major(self.rows, self.cols, self.layout);
+        // Gather encodings line by line, cast on the (monomorphized
+        // where possible) slice path, repack.
+        let mut elems = Vec::with_capacity(self.rows * self.cols);
+        for line in 0..lines {
+            for e in 0..extent {
+                elems.push(self.view().line_bits(line, e));
+            }
+        }
+        let cast = crate::batch::cast_slice(self.fmt, to, &elems, rm);
+        let wpl = extent / lanes_to;
+        let mut words = vec![0u64; n_words];
+        for line in 0..lines {
+            for w in 0..wpl {
+                let mut packed = 0u64;
+                for lane_i in 0..lanes_to {
+                    let e = w * lanes_to + lane_i;
+                    packed |= cast[line * extent + e] << (lane_i as u32 * to.width());
+                }
+                words[line * wpl + w] = packed;
+            }
+        }
+        Ok(MfTensor { fmt: to, rows: self.rows, cols: self.cols, layout: self.layout, words })
+    }
+
+    /// Repack into the other storage layout (same format, same values).
+    pub fn with_layout(&self, layout: Layout) -> Result<MfTensor> {
+        if layout == self.layout {
+            return Ok(self.clone());
+        }
+        // Decode is exact (values are on the format grid), so a
+        // round-trip through f64 preserves every encoding except
+        // non-canonical NaN payloads, which the register file does not
+        // distinguish either.
+        Self::from_f64_with_layout(&self.to_f64(), self.rows, self.cols, self.fmt, layout, RoundingMode::Rne)
+    }
+
+    /// Borrow as a view.
+    pub fn view(&self) -> MfTensorView<'_> {
+        MfTensorView {
+            fmt: self.fmt,
+            rows: self.rows,
+            cols: self.cols,
+            layout: self.layout,
+            words: &self.words,
+        }
+    }
+
+    /// Decode to a row-major `f64` matrix (exact for every format up to
+    /// 64 bits wide).
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.view().to_f64()
+    }
+
+    /// Decode one element.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.view().get(r, c)
+    }
+
+    /// Raw encoding of one element.
+    pub fn bits(&self, r: usize, c: usize) -> u64 {
+        self.view().bits(r, c)
+    }
+
+    /// Element format.
+    pub fn fmt(&self) -> FpFormat {
+        self.fmt
+    }
+
+    /// `(rows, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Storage layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// The packed words (lanes along the major dimension).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Always false (constructors reject empty shapes); here so
+    /// clippy's `len`-without-`is_empty` convention holds.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+impl<'a> MfTensorView<'a> {
+    /// Encoding at `(line, e)` in major coordinates.
+    fn line_bits(&self, line: usize, e: usize) -> u64 {
+        let lanes = self.fmt.lanes_in_64() as usize;
+        let (_, extent) = major(self.rows, self.cols, self.layout);
+        let wpl = extent / lanes;
+        let word = self.words[line * wpl + e / lanes];
+        (word >> ((e % lanes) as u32 * self.fmt.width())) & self.fmt.width_mask()
+    }
+
+    /// Raw encoding of element `(r, c)`.
+    pub fn bits(&self, r: usize, c: usize) -> u64 {
+        assert!(r < self.rows && c < self.cols, "index ({r},{c}) out of {}x{}", self.rows, self.cols);
+        let (line, e) = match self.layout {
+            Layout::RowMajor => (r, c),
+            Layout::ColMajor => (c, r),
+        };
+        self.line_bits(line, e)
+    }
+
+    /// Decode element `(r, c)`.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        to_f64(self.bits(r, c), self.fmt)
+    }
+
+    /// Decode to a row-major `f64` matrix.
+    pub fn to_f64(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.push(self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// Element format.
+    pub fn fmt(&self) -> FpFormat {
+        self.fmt
+    }
+
+    /// `(rows, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Storage layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// The packed words.
+    pub fn words(&self) -> &'a [u64] {
+        self.words
+    }
+}
+
+/// Guard used by [`crate::api::GemmPlan::run`]: a tensor handed to a
+/// plan must already be in the format the kernel streams.
+pub(crate) fn expect_fmt(t: &MfTensor, want: FpFormat, role: &str) -> Result<()> {
+    if t.fmt() != want {
+        bail!(
+            "{role} tensor is {} but the plan's kernel streams {}; cast it first (MfTensor::cast)",
+            t.fmt().name(),
+            want.name()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,352 @@
+//! API-layer tests: the typed surface must be bit-identical to the
+//! pre-redesign free-function path, and every argument error must be a
+//! typed `Error`, not a panic.
+
+use super::*;
+use crate::batch::{pack_cols_m, pack_rows_m};
+use crate::formats::spec::Fp8;
+use crate::formats::{FpFormat, FP16, FP32, FP64, FP8, FP8ALT};
+use crate::isa::instr::{OpWidth, ScalarFmt};
+use crate::kernels::gemm::{ExecMode, GemmKernel, GemmKind};
+use crate::kernels::layout::quantize_f64;
+use crate::softfloat::RoundingMode;
+use crate::util::rng::Rng;
+
+fn mats(m: usize, n: usize, k: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    (a, b)
+}
+
+// ------------------------------------------------------- differential
+
+#[test]
+fn new_api_bit_identical_to_free_functions_both_modes() {
+    // The acceptance gate: FP8→FP16 and FP16→FP32, both ExecModes —
+    // C from the plan API must match the pre-redesign paths bit for bit
+    // (GemmKernel::run_mode and the deprecated batch::gemm shim).
+    let (m, n, k) = (16, 16, 16);
+    let (a, b) = mats(m, n, k, 11);
+    for (src, dst, kind) in [
+        (FP8, FP16, GemmKind::ExSdotp(OpWidth::BtoH)),
+        (FP16, FP32, GemmKind::ExSdotp(OpWidth::HtoS)),
+    ] {
+        for mode in [ExecMode::Functional, ExecMode::CycleAccurate] {
+            let old = GemmKernel::new(kind, m, n, k).run_mode(&a, &b, mode);
+            let session = Session::builder().mode(mode).build();
+            let report = session
+                .gemm()
+                .src(src)
+                .acc(dst)
+                .dims(m, n, k)
+                .expect("valid plan")
+                .run_f64(&a, &b)
+                .expect("valid run");
+            assert_eq!(bits_of(&report.c_f64()), bits_of(&old.c), "{}→{} {mode:?}", src.name(), dst.name());
+            if mode == ExecMode::Functional {
+                #[allow(deprecated)]
+                let shim = crate::batch::gemm(kind, m, n, k, &a, &b, RoundingMode::Rne);
+                assert_eq!(bits_of(&report.c_f64()), bits_of(&shim), "deprecated shim diverged");
+                assert_eq!(report.cycles, Some(GemmKernel::new(kind, m, n, k).model_cycles()));
+            } else {
+                assert_eq!(report.cycles, Some(old.cycles));
+                assert!(report.stats.is_some(), "cycle-accurate runs collect stats");
+            }
+            assert_eq!(report.c.fmt(), dst);
+            assert_eq!(report.c.shape(), (m, n));
+        }
+    }
+}
+
+fn bits_of(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn tensor_run_equals_run_f64() {
+    let (m, n, k) = (16, 16, 16);
+    let (a, b) = mats(m, n, k, 3);
+    let session = Session::new();
+    let plan = session.gemm().src(FP8).acc(FP16).dims(m, n, k).unwrap();
+    let ta = session.tensor(&a, m, k, FP8).unwrap();
+    let tb = session.tensor(&b, k, n, FP8).unwrap();
+    let from_tensors = plan.run(&ta, &tb).unwrap();
+    let from_slices = plan.run_f64(&a, &b).unwrap();
+    // B is row-major here, so this exercises the decode fallback route.
+    assert!(!from_tensors.packed_input);
+    assert_eq!(from_tensors.c, from_slices.c);
+}
+
+#[test]
+fn packed_tensor_fast_path_matches_f64_path() {
+    // A row-major + B column-major on a functional session takes the
+    // zero-repack packed-word route through batch::gemm_packed; it must
+    // produce the same C as the quantize-from-f64 route, for both
+    // expanding kernel families.
+    let (m, n, k) = (16, 16, 16);
+    let (a, b) = mats(m, n, k, 31);
+    let session = Session::new();
+    for (src, dst) in [(FP8, FP16), (FP16, FP32)] {
+        let plan = session.gemm().src(src).acc(dst).dims(m, n, k).unwrap();
+        let ta = session.tensor(&a, m, k, src).unwrap();
+        let tb = session.tensor_with_layout(&b, k, n, src, Layout::ColMajor).unwrap();
+        let fast = plan.run(&ta, &tb).unwrap();
+        let slow = plan.run_f64(&a, &b).unwrap();
+        assert!(fast.packed_input, "{}→{}: packed route must actually run", src.name(), dst.name());
+        assert!(!slow.packed_input);
+        assert_eq!(fast.c, slow.c, "{}→{}", src.name(), dst.name());
+        assert_eq!(fast.cycles, slow.cycles);
+    }
+}
+
+#[test]
+fn thread_budget_is_bit_identical() {
+    let (m, n, k) = (16, 16, 16);
+    let (a, b) = mats(m, n, k, 5);
+    let wide = Session::new();
+    let narrow = Session::builder().threads(1).build();
+    let cw = wide.gemm().src(FP8).acc(FP16).dims(m, n, k).unwrap().run_f64(&a, &b).unwrap();
+    let cn = narrow.gemm().src(FP8).acc(FP16).dims(m, n, k).unwrap().run_f64(&a, &b).unwrap();
+    assert_eq!(cw.c, cn.c);
+}
+
+#[test]
+fn cycle_model_toggle_controls_report_cycles() {
+    let (m, n, k) = (16, 16, 16);
+    let (a, b) = mats(m, n, k, 6);
+    let off = Session::builder().cycle_model(false).build();
+    let r = off.gemm().src(FP8).acc(FP16).dims(m, n, k).unwrap().run_f64(&a, &b).unwrap();
+    assert_eq!(r.cycles, None);
+    assert_eq!(r.flop_per_cycle(), None);
+    assert_eq!(r.timing_label(), "disabled");
+}
+
+// ------------------------------------------------------- plan errors
+
+#[test]
+fn plan_rejects_invalid_format_pairs() {
+    let session = Session::new();
+    let err = session.gemm().src(FP8).acc(FP32).dims(16, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("no GEMM kernel for FP8->FP32"), "{err}");
+    let err = session.gemm().src(FP8ALT).acc(FP16).dims(16, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("no GEMM kernel"), "{err}");
+    let err = session.gemm().src(FP8).dims(16, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("missing accumulation format"), "{err}");
+    let err = session.gemm().dims(16, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("missing formats"), "{err}");
+}
+
+#[test]
+fn plan_rejects_unsupported_simd_fma_kind() {
+    // The former `panic!` in GemmKind::src_fmt, surfaced as a typed
+    // error through the plan builder.
+    let session = Session::new();
+    for bad in [GemmKind::FmaSimd(ScalarFmt::D), GemmKind::FmaSimd(ScalarFmt::B)] {
+        let err = session.gemm().kind(bad).dims(16, 16, 16).unwrap_err();
+        assert!(
+            err.to_string().contains("unsupported SIMD FMA format"),
+            "wrong message for {bad:?}: {err}"
+        );
+        assert!(bad.validate().is_err());
+        assert!(bad.try_src_fmt().is_err());
+        assert!(bad.try_dst_fmt().is_err());
+    }
+}
+
+#[test]
+fn plan_rejects_kind_format_mismatch() {
+    let session = Session::new();
+    let err = session.gemm().kind(GemmKind::FmaF64).src(FP8).dims(16, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("streams FP64 sources"), "{err}");
+}
+
+#[test]
+fn plan_rejects_bad_dims() {
+    let session = Session::new();
+    let err = session.gemm().src(FP8).acc(FP16).dims(10, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("M (10)"), "{err}");
+    let err = session.gemm().src(FP8).acc(FP16).dims(16, 15, 16).unwrap_err();
+    assert!(err.to_string().contains("N (15)"), "{err}");
+    let err = session.gemm().src(FP8).acc(FP16).dims(16, 16, 12).unwrap_err();
+    assert!(err.to_string().contains("K (12)"), "{err}");
+    let err = session.gemm().src(FP64).acc(FP64).dims(0, 8, 8).unwrap_err();
+    assert!(err.to_string().contains("positive"), "{err}");
+}
+
+#[test]
+fn plan_rejects_tcdm_overflow_in_cycle_mode() {
+    let cycle = Session::builder().mode(ExecMode::CycleAccurate).build();
+    let err = cycle.gemm().kind(GemmKind::FmaF64).dims(256, 256, 256).unwrap_err();
+    assert!(err.to_string().contains("128 kB"), "{err}");
+    // The same problem is fine on the functional engine.
+    assert!(Session::new().gemm().kind(GemmKind::FmaF64).dims(256, 256, 256).is_ok());
+}
+
+#[test]
+fn plan_rejects_non_rne_rounding_with_cycle_accurate() {
+    let s = Session::builder().mode(ExecMode::CycleAccurate).rounding(RoundingMode::Rtz).build();
+    let err = s.gemm().src(FP8).acc(FP16).dims(16, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("rounds RNE"), "{err}");
+}
+
+#[test]
+fn run_rejects_wrong_operand_shapes_and_formats() {
+    let session = Session::new();
+    let plan = session.gemm().src(FP8).acc(FP16).dims(16, 16, 16).unwrap();
+    let (a, b) = mats(16, 16, 16, 8);
+    let err = plan.run_f64(&a[..100], &b).unwrap_err();
+    assert!(err.to_string().contains("A must be 16x16"), "{err}");
+    let wrong_fmt = session.tensor(&a, 16, 16, FP16).unwrap();
+    let ok_b = session.tensor(&b, 16, 16, FP8).unwrap();
+    let err = plan.run(&wrong_fmt, &ok_b).unwrap_err();
+    assert!(err.to_string().contains("cast it first"), "{err}");
+    let small = session.tensor(&a[..16 * 8], 8, 16, FP8).unwrap();
+    let err = plan.run(&small, &ok_b).unwrap_err();
+    assert!(err.to_string().contains("A must be 16x16"), "{err}");
+}
+
+// ----------------------------------------------------------- tensors
+
+#[test]
+fn tensor_packing_matches_batch_engine_packers() {
+    let (rows, cols) = (8, 16);
+    let mut rng = Rng::new(19);
+    let data: Vec<f64> = (0..rows * cols).map(|_| rng.gaussian()).collect();
+    let rm = RoundingMode::Rne;
+    let row = MfTensor::from_f64(&data, rows, cols, FP8, rm).unwrap();
+    assert_eq!(row.words(), &pack_rows_m::<Fp8>(&data, rows, cols, rm)[..]);
+    let col = MfTensor::from_f64_with_layout(&data, rows, cols, FP8, Layout::ColMajor, rm).unwrap();
+    assert_eq!(col.words(), &pack_cols_m::<Fp8>(&data, rows, cols, rm)[..]);
+    // Decoding either layout recovers the quantized matrix, row-major.
+    let q = quantize_f64(&data, FP8);
+    assert_eq!(row.to_f64(), q);
+    assert_eq!(col.to_f64(), q);
+    assert_eq!(row.with_layout(Layout::ColMajor).unwrap(), col);
+
+    // Custom (non-paper) formats take the descriptor-driven fallback
+    // packer; quantization must still match the softfloat grid.
+    let e6m9 = FpFormat::new(6, 9); // width 16, 4 lanes — not a paper format
+    let t = MfTensor::from_f64(&data, rows, cols, e6m9, rm).unwrap();
+    for r in 0..rows {
+        for c in 0..cols {
+            let want = crate::softfloat::from_f64(data[r * cols + c], e6m9, rm);
+            assert_eq!(t.bits(r, c), want, "({r},{c})");
+        }
+    }
+}
+
+#[test]
+fn tensor_get_view_and_bits() {
+    let data = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+    let t = MfTensor::from_f64(&data, 2, 4, FP16, RoundingMode::Rne).unwrap();
+    assert_eq!(t.get(0, 0), 1.0);
+    assert_eq!(t.get(1, 3), 8.0);
+    assert_eq!(t.view().get(1, 0), 5.0);
+    assert_eq!(t.bits(0, 0), crate::softfloat::from_f64(1.0, FP16, RoundingMode::Rne));
+    assert_eq!(t.len(), 8);
+    assert_eq!(t.layout(), Layout::RowMajor);
+    // from_bits round-trips the packed words.
+    let rebuilt = MfTensor::from_bits(t.words().to_vec(), 2, 4, FP16, Layout::RowMajor).unwrap();
+    assert_eq!(rebuilt, t);
+}
+
+#[test]
+fn tensor_cast_matches_cast_slice() {
+    let mut rng = Rng::new(23);
+    let data: Vec<f64> = (0..8 * 8).map(|_| rng.gaussian()).collect();
+    let rm = RoundingMode::Rne;
+    let t8 = MfTensor::from_f64(&data, 8, 8, FP8, rm).unwrap();
+    let t16 = t8.cast(FP16, rm).unwrap();
+    assert_eq!(t16.fmt(), FP16);
+    for r in 0..8 {
+        for c in 0..8 {
+            let want = crate::softfloat::cast(FP8, FP16, t8.bits(r, c), rm);
+            assert_eq!(t16.bits(r, c), want, "({r},{c})");
+        }
+    }
+    // Casting back down is a value-level round trip for FP8-grid data.
+    let back = t16.cast(FP8, rm).unwrap();
+    assert_eq!(back.to_f64(), t8.to_f64());
+}
+
+#[test]
+fn tensor_shape_validation() {
+    let data = vec![0.0; 12];
+    let err = MfTensor::from_f64(&data, 3, 4, FP8, RoundingMode::Rne).unwrap_err();
+    assert!(err.to_string().contains("8 lanes"), "{err}");
+    let err = MfTensor::from_f64(&data, 4, 4, FP8, RoundingMode::Rne).unwrap_err();
+    assert!(err.to_string().contains("does not match"), "{err}");
+    let err = MfTensor::from_bits(vec![0; 3], 2, 8, FP8, Layout::RowMajor).unwrap_err();
+    assert!(err.to_string().contains("word count"), "{err}");
+}
+
+// ---------------------------------------------------------- accuracy
+
+#[test]
+fn accumulate_plan_matches_engine_paths() {
+    type Engine = fn(FpFormat, FpFormat, usize, u64) -> crate::accuracy::AccuracyPoint;
+    for (mode, gold) in [
+        (ExecMode::Functional, crate::accuracy::accumulate_fast as Engine),
+        (ExecMode::CycleAccurate, crate::accuracy::accumulate as Engine),
+    ] {
+        let session = Session::builder().mode(mode).seed(77).build();
+        let plan = session.accumulate().src(FP8).acc(FP16).n(500).unwrap();
+        let got = plan.run();
+        let want = gold(FP8, FP16, 500, 77);
+        assert_eq!(got.err_exsdotp.to_bits(), want.err_exsdotp.to_bits(), "{mode:?}");
+        assert_eq!(got.err_exfma.to_bits(), want.err_exfma.to_bits(), "{mode:?}");
+    }
+}
+
+#[test]
+fn accumulate_sweep_matches_table4_averaged() {
+    // plan.mean(draws) must reproduce accuracy::table4_averaged's
+    // numbers exactly (same sweep_seed schedule, same engine).
+    let session = Session::new();
+    let rows = crate::accuracy::table4_averaged(4);
+    for &(src, dst, n, want_f, want_c) in &rows {
+        let (got_f, got_c) = session.accumulate().src(src).acc(dst).n(n).unwrap().mean(4);
+        assert_eq!(got_f.to_bits(), want_f.to_bits(), "{}→{} n={n}", src.name(), dst.name());
+        assert_eq!(got_c.to_bits(), want_c.to_bits(), "{}→{} n={n}", src.name(), dst.name());
+    }
+}
+
+#[test]
+fn accumulate_plan_rejects_bad_pairs() {
+    let session = Session::new();
+    let err = session.accumulate().src(FP16).acc(FP16).n(500).unwrap_err();
+    assert!(err.to_string().contains("2*p_src <= p_dst"), "{err}");
+    let err = session.accumulate().src(FP8).acc(FP16).n(1).unwrap_err();
+    assert!(err.to_string().contains("at least one dot-product pair"), "{err}");
+    let err = session.accumulate().src(FP8).n(500).unwrap_err();
+    assert!(err.to_string().contains("missing formats"), "{err}");
+    // The harness cannot honor a non-RNE session; that is a typed
+    // error, not a silently-ignored knob.
+    let rtz = Session::builder().rounding(RoundingMode::Rtz).build();
+    let err = rtz.accumulate().src(FP8).acc(FP16).n(500).unwrap_err();
+    assert!(err.to_string().contains("rounds RNE"), "{err}");
+    // FP8alt (e4m3) has p=4; 2·4=8 ≤ 11, exp range 4 ≤ 5: legal.
+    assert!(session.accumulate().src(FP8ALT).acc(FP16).n(500).is_ok());
+}
+
+// --------------------------------------------------------- CLI parse
+
+#[test]
+fn parse_helpers_accept_valid_and_reject_invalid() {
+    assert_eq!(parse_size("128x128").unwrap(), (128, 128));
+    assert_eq!(parse_size("64x256").unwrap(), (64, 256));
+    for bad in ["banana", "128", "x128", "128x", "0x64", "-8x8", "8x-8"] {
+        let err = parse_size(bad).unwrap_err();
+        assert!(err.to_string().contains("--size must be MxN"), "{bad}: {err}");
+    }
+    assert_eq!(parse_kernel("fp8").unwrap(), GemmKind::ExSdotp(OpWidth::BtoH));
+    assert_eq!(parse_kernel("fp16to32").unwrap(), GemmKind::ExSdotp(OpWidth::HtoS));
+    assert_eq!(parse_kernel("fp64").unwrap(), GemmKind::FmaF64);
+    let err = parse_kernel("fp12").unwrap_err();
+    assert!(err.to_string().contains("--kernel must be"), "{err}");
+    assert_eq!(parse_mode("cycle").unwrap(), ExecMode::CycleAccurate);
+    assert_eq!(parse_mode("functional").unwrap(), ExecMode::Functional);
+    let err = parse_mode("warp").unwrap_err();
+    assert!(err.to_string().contains("--mode must be"), "{err}");
+}

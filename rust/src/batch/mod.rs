@@ -203,6 +203,26 @@ pub fn pack_cols_m<F: FormatSpec>(data: &[f64], rows: usize, cols: usize, rm: Ro
     out
 }
 
+/// Runtime-dispatched [`pack_rows_m`]: monomorphized (parallel) packing
+/// for the six paper formats, `None` for custom formats so the caller
+/// can fall back to a descriptor-driven loop. Crate-internal — typed
+/// tensors ([`crate::api::MfTensor`]) are the public route, so the
+/// validated front door stays the only one.
+pub(crate) fn pack_rows(fmt: FpFormat, data: &[f64], rows: usize, cols: usize, rm: RoundingMode) -> Option<Vec<u64>> {
+    with_spec!(fmt, S, {
+        return Some(pack_rows_m::<S>(data, rows, cols, rm));
+    });
+    None
+}
+
+/// Runtime-dispatched [`pack_cols_m`] (see [`pack_rows`]).
+pub(crate) fn pack_cols(fmt: FpFormat, data: &[f64], rows: usize, cols: usize, rm: RoundingMode) -> Option<Vec<u64>> {
+    with_spec!(fmt, S, {
+        return Some(pack_cols_m::<S>(data, rows, cols, rm));
+    });
+    None
+}
+
 // ----------------------------------------------------------------- GEMM
 
 /// Functional GEMM `C = A·B` on the batch engine: same numerics, same
@@ -213,7 +233,27 @@ pub fn pack_cols_m<F: FormatSpec>(data: &[f64], rows: usize, cols: usize, rm: Ro
 /// `a` is `m×k`, `b` is `k×n`, both row-major f64 (quantized to the
 /// kernel's source format on packing, like [`GemmKind`]'s simulated
 /// path); returns row-major `m×n` C decoded to f64.
+#[deprecated(
+    since = "0.3.0",
+    note = "build a typed plan via `api::Session::gemm` instead; this shim stays \
+            for one release so differential tests can pin new-vs-old bit-identity"
+)]
 pub fn gemm(kind: GemmKind, m: usize, n: usize, k: usize, a: &[f64], b: &[f64], rm: RoundingMode) -> Vec<f64> {
+    gemm_dispatch(kind, m, n, k, a, b, rm)
+}
+
+/// The engine behind the deprecated [`gemm`] shim and
+/// `ExecMode::Functional` — crate-internal so all public traffic flows
+/// through the typed plan API ([`crate::api::GemmPlan`]).
+pub(crate) fn gemm_dispatch(
+    kind: GemmKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+) -> Vec<f64> {
     use crate::isa::instr::{OpWidth, ScalarFmt};
     assert_eq!(a.len(), m * k, "A must be m×k");
     assert_eq!(b.len(), k * n, "B must be k×n");
@@ -237,11 +277,29 @@ pub fn gemm_m<S: ExpandTo<D>, D: FormatSpec>(
     b: &[f64],
     rm: RoundingMode,
 ) -> Vec<f64> {
+    let ap = pack_rows_m::<S>(a, m, k, rm);
+    let bp = pack_cols_m::<S>(b, k, n, rm);
+    gemm_packed_m::<S, D>(m, n, k, &ap, &bp, rm)
+}
+
+/// [`gemm_m`] on **pre-packed** operands: `ap` holds A's rows packed
+/// `S::LANES` per word ([`pack_rows_m`] layout), `bp` holds B's columns
+/// packed the same way ([`pack_cols_m`] layout). This is the zero-repack
+/// entry [`crate::api::GemmPlan::run`] uses when handed [`crate::api::MfTensor`]s
+/// whose storage already matches the kernel's streams.
+pub fn gemm_packed_m<S: ExpandTo<D>, D: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    ap: &[u64],
+    bp: &[u64],
+    rm: RoundingMode,
+) -> Vec<f64> {
     let l = S::LANES as usize;
     assert_eq!(k % l, 0, "K must divide by the SIMD width");
     let wpr = k / l;
-    let ap = pack_rows_m::<S>(a, m, k, rm);
-    let bp = pack_cols_m::<S>(b, k, n, rm);
+    assert_eq!(ap.len(), m * wpr, "packed A must be m*k/lanes words");
+    assert_eq!(bp.len(), n * wpr, "packed B must be n*k/lanes words");
     let mut c = vec![0f64; m * n];
     par_chunks_mut(&mut c, n.max(1), |i, row| {
         let aw = &ap[i * wpr..(i + 1) * wpr];
@@ -255,6 +313,33 @@ pub fn gemm_m<S: ExpandTo<D>, D: FormatSpec>(
         }
     });
     c
+}
+
+/// Runtime-dispatched [`gemm_packed_m`] for the expanding (`ExSdotp`)
+/// kernel families: `Some(C)` when `(src, dst)` is one of Table I's six
+/// monomorphized pairs, `None` otherwise (caller falls back to the
+/// f64 path). Operands are pre-packed words in the [`pack_rows_m`] /
+/// [`pack_cols_m`] layouts. Crate-internal: the validated
+/// [`crate::api::GemmPlan`] is the public route (its builder guarantees
+/// the shape/divisibility invariants these asserts assume).
+pub(crate) fn gemm_packed(
+    src: FpFormat,
+    dst: FpFormat,
+    m: usize,
+    n: usize,
+    k: usize,
+    ap: &[u64],
+    bp: &[u64],
+    rm: RoundingMode,
+) -> Option<Vec<f64>> {
+    crate::with_expanding_pair!(
+        src,
+        dst,
+        S,
+        D,
+        { Some(gemm_packed_m::<S, D>(m, n, k, ap, bp, rm)) },
+        { None }
+    )
 }
 
 /// Packed-SIMD FMA GEMM (`FmaSimd` kernels): lanewise FMA partial sums

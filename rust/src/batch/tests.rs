@@ -121,7 +121,7 @@ fn batch_gemm_bit_identical_to_kernel_reference_all_kinds() {
     let (a, b) = random_mats(m, n, k, 2024);
     for kind in all_kinds() {
         let kern = GemmKernel::new(kind, m, n, k);
-        let got = gemm(kind, m, n, k, &a, &b, RoundingMode::Rne);
+        let got = gemm_dispatch(kind, m, n, k, &a, &b, RoundingMode::Rne);
         let want = kernel_reference(&kern, &a, &b);
         for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
             assert!(
@@ -174,7 +174,7 @@ fn gemm_handles_special_inputs_like_the_reference() {
     let b: Vec<f64> = (0..k * n).map(|_| spice(&mut rng)).collect();
     for kind in [GemmKind::ExSdotp(OpWidth::BtoH), GemmKind::ExSdotp(OpWidth::HtoS)] {
         let kern = GemmKernel::new(kind, m, n, k);
-        let got = gemm(kind, m, n, k, &a, &b, RoundingMode::Rne);
+        let got = gemm_dispatch(kind, m, n, k, &a, &b, RoundingMode::Rne);
         let want = kernel_reference(&kern, &a, &b);
         for (g, w) in got.iter().zip(&want) {
             assert!(g.to_bits() == w.to_bits() || (g.is_nan() && w.is_nan()), "{}: {g} vs {w}", kind.label());

@@ -8,6 +8,7 @@ use crate::isa::csr::addr as csr;
 use crate::isa::instr::regs::*;
 use crate::isa::instr::{Instr, OpWidth, Reg, ScalarFmt};
 use crate::softfloat::RoundingMode;
+use crate::util::error::{Error, Result};
 
 /// How to execute a bound GEMM problem.
 ///
@@ -21,7 +22,7 @@ use crate::softfloat::RoundingMode;
 ///   behaviour. The mode behind Table II / Fig. 8. Cost: every lane of
 ///   every instruction wades through the full machine model.
 /// * [`ExecMode::Functional`] — run the batch engine
-///   ([`crate::batch::gemm`]): packed registers, monomorphized
+///   (`batch::gemm_dispatch`): packed registers, monomorphized
 ///   kernels, rows in parallel. Orders of magnitude faster; cycles come
 ///   from the analytic issue-slot model ([`GemmKernel::model_cycles`])
 ///   instead of simulation, and per-instruction stats are not
@@ -46,24 +47,78 @@ pub enum GemmKind {
 }
 
 impl GemmKind {
-    /// Source element format (inputs A, B).
-    pub fn src_fmt(&self) -> FpFormat {
+    /// Source element format (inputs A, B), validated: `FmaSimd` only
+    /// has `.s` (2×FP32) and `.h` (4×FP16) kernel variants — other
+    /// [`ScalarFmt`]s return a typed error instead of panicking. This is
+    /// the check the plan builder ([`crate::api::Session::gemm`])
+    /// surfaces at plan-build time.
+    pub fn try_src_fmt(&self) -> Result<FpFormat> {
         match self {
-            GemmKind::FmaF64 => crate::formats::FP64,
-            GemmKind::FmaSimd(ScalarFmt::S) => crate::formats::FP32,
-            GemmKind::FmaSimd(ScalarFmt::H) => crate::formats::FP16,
-            GemmKind::FmaSimd(f) => panic!("unsupported SIMD FMA format {f:?}"),
-            GemmKind::ExSdotp(OpWidth::HtoS) => crate::formats::FP16,
-            GemmKind::ExSdotp(OpWidth::BtoH) => crate::formats::FP8,
+            GemmKind::FmaF64 => Ok(crate::formats::FP64),
+            GemmKind::FmaSimd(ScalarFmt::S) => Ok(crate::formats::FP32),
+            GemmKind::FmaSimd(ScalarFmt::H) => Ok(crate::formats::FP16),
+            GemmKind::FmaSimd(f) => Err(Error::msg(format!(
+                "unsupported SIMD FMA format {f:?}: packed-FMA GEMM kernels exist \
+                 for .s (2xFP32) and .h (4xFP16) only (use GemmKind::FmaF64 for FP64)"
+            ))),
+            GemmKind::ExSdotp(OpWidth::HtoS) => Ok(crate::formats::FP16),
+            GemmKind::ExSdotp(OpWidth::BtoH) => Ok(crate::formats::FP8),
         }
     }
 
-    /// Output element format (C).
-    pub fn dst_fmt(&self) -> FpFormat {
+    /// Output element format (C), validated like [`GemmKind::try_src_fmt`].
+    pub fn try_dst_fmt(&self) -> Result<FpFormat> {
         match self {
-            GemmKind::ExSdotp(OpWidth::HtoS) => crate::formats::FP32,
-            GemmKind::ExSdotp(OpWidth::BtoH) => crate::formats::FP16,
-            _ => self.src_fmt(),
+            GemmKind::ExSdotp(OpWidth::HtoS) => Ok(crate::formats::FP32),
+            GemmKind::ExSdotp(OpWidth::BtoH) => Ok(crate::formats::FP16),
+            _ => self.try_src_fmt(),
+        }
+    }
+
+    /// Check that this kind names a kernel the hardware (and this crate)
+    /// actually implements.
+    pub fn validate(&self) -> Result<()> {
+        self.try_src_fmt().map(|_| ())
+    }
+
+    /// Resolve a `(source, accumulation)` format pair to its Table II
+    /// kernel family — the typed front door the plan builder uses.
+    /// Unsupported pairs are a typed error, not a panic.
+    pub fn for_formats(src: FpFormat, dst: FpFormat) -> Result<GemmKind> {
+        use crate::formats::{FP16, FP32, FP64, FP8};
+        match (src, dst) {
+            (s, d) if s == FP64 && d == FP64 => Ok(GemmKind::FmaF64),
+            (s, d) if s == FP32 && d == FP32 => Ok(GemmKind::FmaSimd(ScalarFmt::S)),
+            (s, d) if s == FP16 && d == FP16 => Ok(GemmKind::FmaSimd(ScalarFmt::H)),
+            (s, d) if s == FP16 && d == FP32 => Ok(GemmKind::ExSdotp(OpWidth::HtoS)),
+            (s, d) if s == FP8 && d == FP16 => Ok(GemmKind::ExSdotp(OpWidth::BtoH)),
+            _ => Err(Error::msg(format!(
+                "no GEMM kernel for {}->{}: supported pairs are FP64->FP64 (FMA), \
+                 FP32->FP32 (SIMD FMA), FP16->FP16 (SIMD FMA), FP16->FP32 (ExSdotp), \
+                 FP8->FP16 (ExSdotp)",
+                src.name(),
+                dst.name()
+            ))),
+        }
+    }
+
+    /// Source element format (inputs A, B).
+    ///
+    /// Panics for kinds [`GemmKind::validate`] rejects; the typed API
+    /// validates before ever reaching this (prefer [`GemmKind::try_src_fmt`]).
+    pub fn src_fmt(&self) -> FpFormat {
+        match self.try_src_fmt() {
+            Ok(f) => f,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Output element format (C). Panics like [`GemmKind::src_fmt`];
+    /// prefer [`GemmKind::try_dst_fmt`].
+    pub fn dst_fmt(&self) -> FpFormat {
+        match self.try_dst_fmt() {
+            Ok(f) => f,
+            Err(e) => panic!("{e}"),
         }
     }
 
@@ -135,14 +190,38 @@ impl GemmResult {
 }
 
 impl GemmKernel {
-    /// Bind a problem. Sizes must satisfy the kernel's divisibility
-    /// requirements (`M % cores == 0`, `N % unroll == 0`, `K % lanes == 0`).
+    /// Bind a problem, validating the kernel kind and the divisibility
+    /// requirements (`M % cores == 0`, `N % unroll == 0`,
+    /// `K % lanes == 0`) as typed errors. The front door for the plan
+    /// builder ([`crate::api::GemmPlanBuilder::dims`]).
+    pub fn try_new(kind: GemmKind, m: usize, n: usize, k: usize) -> Result<Self> {
+        kind.validate()?;
+        let n_cores = 8;
+        crate::ensure!(
+            m > 0 && m % n_cores == 0,
+            "M ({m}) must be a positive multiple of {n_cores} (compute cores)"
+        );
+        crate::ensure!(
+            n > 0 && n % kind.unroll() == 0,
+            "N ({n}) must be a positive multiple of the kernel's unroll factor ({})",
+            kind.unroll()
+        );
+        crate::ensure!(
+            k > 0 && k % kind.lanes() == 0,
+            "K ({k}) must be a positive multiple of the kernel's SIMD width ({})",
+            kind.lanes()
+        );
+        Ok(GemmKernel { kind, m, n, k, n_cores })
+    }
+
+    /// Bind a problem. Panics on sizes [`GemmKernel::try_new`] rejects —
+    /// kept as the pre-plan-API shim; prefer `try_new` (or the typed
+    /// plan builder) in new code.
     pub fn new(kind: GemmKind, m: usize, n: usize, k: usize) -> Self {
-        let kern = GemmKernel { kind, m, n, k, n_cores: 8 };
-        assert_eq!(m % kern.n_cores, 0, "M must divide across cores");
-        assert_eq!(n % kind.unroll(), 0, "N must divide by the unroll factor");
-        assert_eq!(k % kind.lanes(), 0, "K must divide by the SIMD width");
-        kern
+        match Self::try_new(kind, m, n, k) {
+            Ok(kern) => kern,
+            Err(e) => panic!("{e}"),
+        }
     }
 
     /// Paper-style size label (`M×N`, with K = M implied in Table II).
@@ -386,7 +465,7 @@ impl GemmKernel {
         match mode {
             ExecMode::CycleAccurate => self.run(a, b),
             ExecMode::Functional => {
-                let c = crate::batch::gemm(self.kind, self.m, self.n, self.k, a, b, RoundingMode::Rne);
+                let c = crate::batch::gemm_dispatch(self.kind, self.m, self.n, self.k, a, b, RoundingMode::Rne);
                 GemmResult {
                     cycles: self.model_cycles(),
                     c,

@@ -4,6 +4,33 @@
 //! Modular Open Hardware Unit for Low-Precision Training on RISC-V cores"**
 //! (Bertaccini, Paulin, Fischer, Mach, Benini — 2022).
 //!
+//! ## Entry point: the typed [`api`]
+//!
+//! The crate's front door is the [`api`] module (re-exported through
+//! [`prelude`]): build a [`api::Session`] holding execution policy,
+//! quantize matrices into typed [`api::MfTensor`]s, and run validated
+//! [`api::GemmPlan`]s / [`api::AccumulatePlan`]s that return structured
+//! [`api::RunReport`]s. All argument errors — unsupported format pairs,
+//! shape mismatches, infeasible problems — surface as typed
+//! [`util::error::Error`]s at plan-build time.
+//!
+//! ```
+//! use minifloat_nn::prelude::*;
+//!
+//! # fn main() -> minifloat_nn::util::error::Result<()> {
+//! let session = Session::builder().mode(ExecMode::Functional).build();
+//! let mut rng = session.rng();
+//! let a: Vec<f64> = (0..16 * 16).map(|_| rng.gaussian() * 0.25).collect();
+//! let b: Vec<f64> = (0..16 * 16).map(|_| rng.gaussian() * 0.25).collect();
+//! // FP8 sources, FP16 expanding accumulation (the paper's headline kernel).
+//! let report = session.gemm().src(FP8).acc(FP16).dims(16, 16, 16)?.run_f64(&a, &b)?;
+//! println!("{:.1} FLOP/cycle", report.flop_per_cycle().unwrap_or(0.0));
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! ## The stack underneath
+//!
 //! The crate models the paper's full hardware/software stack:
 //!
 //! * [`formats`] — parametric floating-point format descriptors (FP64,
@@ -45,6 +72,7 @@
 //! reproduced tables and figures.
 
 pub mod accuracy;
+pub mod api;
 pub mod area;
 pub mod batch;
 pub mod cluster;
@@ -65,3 +93,18 @@ pub mod wide;
 pub use formats::{FpFormat, FP16, FP16ALT, FP32, FP64, FP8, FP8ALT};
 pub use kernels::gemm::ExecMode;
 pub use softfloat::{RoundingMode, SoftFloat};
+
+/// One-line import for the typed API:
+/// `use minifloat_nn::prelude::*;` brings in the session/tensor/plan
+/// types, the six paper formats, and the execution/rounding enums.
+pub mod prelude {
+    pub use crate::accuracy::AccuracyPoint;
+    pub use crate::api::{
+        AccumulatePlan, AccumulatePlanBuilder, GemmPlan, GemmPlanBuilder, Layout, MfTensor,
+        MfTensorView, RunReport, Session, SessionBuilder,
+    };
+    pub use crate::formats::{FpFormat, FP16, FP16ALT, FP32, FP64, FP8, FP8ALT};
+    pub use crate::kernels::gemm::{ExecMode, GemmKind};
+    pub use crate::softfloat::RoundingMode;
+    pub use crate::util::error::{Error, Result};
+}

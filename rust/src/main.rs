@@ -3,7 +3,8 @@
 //! One subcommand per paper table/figure plus the end-to-end training
 //! driver. Run `repro help` for the list.
 
-use minifloat_nn::coordinator::{Precision, Trainer};
+use minifloat_nn::api::{self, Session};
+use minifloat_nn::coordinator::Precision;
 use minifloat_nn::report;
 use minifloat_nn::util::cli::Args;
 use minifloat_nn::util::error::Result;
@@ -57,73 +58,35 @@ fn main() -> Result<()> {
         Some("formats") => print!("{}", report::formats_text()),
         Some("fig2") => print!("{}", report::fig2_text()),
         Some("gemm") => {
-            use minifloat_nn::isa::instr::{OpWidth, ScalarFmt};
-            use minifloat_nn::kernels::{reference_gemm_f64, ExecMode, GemmKernel, GemmKind};
-            use minifloat_nn::util::rng::Rng;
-            let size = args.get_str("size", "128x128");
-            let Some((m, n)) = size
-                .split_once('x')
-                .and_then(|(a, b)| Some((a.parse::<usize>().ok()?, b.parse::<usize>().ok()?)))
-            else {
-                minifloat_nn::bail!("--size must be MxN (e.g. 128x128), got '{size}'");
-            };
+            use minifloat_nn::kernels::reference_gemm_f64;
+            // All argument validation happens in the typed API: parse
+            // helpers for the flags, the plan builder for the problem
+            // (format pair, divisibility, TCDM feasibility) — bad input
+            // is a typed error and a nonzero exit, never a panic.
+            let (m, n) = api::parse_size(&args.get_str("size", "128x128"))?;
             let k = m;
-            let kernel = args.get_str("kernel", "fp8");
-            let kind = match kernel.as_str() {
-                "fp64" => GemmKind::FmaF64,
-                "fp32" => GemmKind::FmaSimd(ScalarFmt::S),
-                "fp16" => GemmKind::FmaSimd(ScalarFmt::H),
-                "fp16to32" => GemmKind::ExSdotp(OpWidth::HtoS),
-                "fp8" => GemmKind::ExSdotp(OpWidth::BtoH),
-                other => minifloat_nn::bail!("--kernel must be fp64|fp32|fp16|fp16to32|fp8, got '{other}'"),
-            };
-            let mode_s = args.get_str("mode", "functional");
-            let mode = match mode_s.as_str() {
-                "cycle" => ExecMode::CycleAccurate,
-                "functional" => ExecMode::Functional,
-                other => minifloat_nn::bail!("--mode must be functional|cycle, got '{other}'"),
-            };
-            // Validate the kernel's divisibility constraints up front so
-            // bad sizes produce a CLI error, not a panic.
-            minifloat_nn::ensure!(m > 0 && m % 8 == 0, "M ({m}) must be a positive multiple of 8 (compute cores)");
-            minifloat_nn::ensure!(
-                n > 0 && n % kind.unroll() == 0,
-                "N ({n}) must be a positive multiple of the kernel's unroll factor ({})",
-                kind.unroll()
-            );
-            minifloat_nn::ensure!(
-                k % kind.lanes() == 0,
-                "K ({k}) must be a multiple of the kernel's SIMD width ({})",
-                kind.lanes()
-            );
-            let kern = GemmKernel::new(kind, m, n, k);
-            if mode == ExecMode::CycleAccurate {
-                minifloat_nn::ensure!(
-                    kern.footprint() <= 128 * 1024,
-                    "{} {} does not fit the simulated 128 kB TCDM; use --mode functional for larger problems",
-                    kind.label(),
-                    kern.size_label()
-                );
-            }
-            let mut rng = Rng::new(seed);
+            let kind = api::parse_kernel(&args.get_str("kernel", "fp8"))?;
+            let mode = api::parse_mode(&args.get_str("mode", "functional"))?;
+            let session = Session::builder().mode(mode).seed(seed).build();
+            let plan = session.gemm().kind(kind).dims(m, n, k)?;
+            let mut rng = session.rng();
             let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
             let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
-            let t0 = std::time::Instant::now();
-            let run = kern.run_mode(&a, &b, mode);
-            let wall = t0.elapsed();
+            let run = plan.run_f64(&a, &b)?;
             let gold = reference_gemm_f64(&a, &b, m, n, k);
+            let c = run.c_f64();
             let mut worst = 0f64;
-            for (g, r) in gold.iter().zip(&run.c) {
+            for (g, r) in gold.iter().zip(&c) {
                 worst = worst.max((g - r).abs() / g.abs().max(1.0));
             }
             println!("kernel {}   size {m}x{n} (K={k})   mode {mode:?}", kind.label());
-            println!("cycles       : {} ({})", run.cycles, match mode {
-                ExecMode::CycleAccurate => "simulated",
-                ExecMode::Functional => "issue-slot model",
-            });
+            match run.cycles {
+                Some(cy) => println!("cycles       : {cy} ({})", run.timing_label()),
+                None => println!("cycles       : - (cycle model disabled)"),
+            }
             println!("FLOP         : {}", run.flops);
-            println!("FLOP/cycle   : {:.2}", run.flop_per_cycle());
-            println!("wall time    : {:.3} ms", wall.as_secs_f64() * 1e3);
+            println!("FLOP/cycle   : {:.2}", run.flop_per_cycle().unwrap_or(0.0));
+            println!("wall time    : {:.3} ms", run.wall.as_secs_f64() * 1e3);
             // |Δ|/max(|gold|,1): relative error for large outputs,
             // absolute for near-zero ones (a pure ratio blows up there).
             println!("worst |err|/max(|gold|,1) vs f64: {worst:.3e}");
@@ -157,7 +120,7 @@ fn main() -> Result<()> {
             };
             let log_every = if args.has_flag("quiet") { 0 } else { 20 };
             println!("training ({precision:?}) for {steps} steps on the spiral task...");
-            let mut tr = Trainer::new(&dir, precision, seed)?;
+            let mut tr = Session::builder().seed(seed).build().trainer(&dir, precision)?;
             let final_loss = tr.train(steps, log_every)?;
             let acc = tr.accuracy()?;
             println!("final loss {final_loss:.4}   accuracy {:.1}%", acc * 100.0);

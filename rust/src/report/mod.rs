@@ -2,14 +2,13 @@
 //! each returning formatted text (consumed by the `repro` CLI and
 //! recorded in EXPERIMENTS.md).
 
-use crate::accuracy;
+use crate::api::Session;
 use crate::area;
 use crate::energy::{self, ComputeClass, EnergyTable};
 use crate::exsdotp::table1::{supported, OpKind};
 use crate::formats::{FP16, FP16ALT, FP32, FP8, FP8ALT, PAPER_FORMATS};
 use crate::isa::instr::{OpWidth, ScalarFmt};
-use crate::kernels::{GemmKernel, GemmKind};
-use crate::util::rng::Rng;
+use crate::kernels::{ExecMode, GemmKind};
 
 /// The Table II / Fig. 8 grid: kernels × sizes, paper cycle counts for
 /// comparison. Sizes are `M×N` with `K = M`.
@@ -43,23 +42,25 @@ pub struct Table2Row {
     pub flop_per_cycle: f64,
 }
 
-/// Run the full Table II grid (also provides Fig. 8's series).
+/// Run the full Table II grid (also provides Fig. 8's series) on a
+/// cycle-accurate [`Session`].
 pub fn run_table2(seed: u64) -> Vec<Table2Row> {
-    let mut rng = Rng::new(seed);
+    let session = Session::builder().mode(ExecMode::CycleAccurate).seed(seed).build();
+    let mut rng = session.rng();
     TABLE2_GRID
         .iter()
         .map(|&(kind, m, n, paper)| {
             let k = m;
             let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
             let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
-            let kern = GemmKernel::new(kind, m, n, k);
-            let run = kern.run(&a, &b);
+            let plan = session.gemm().kind(kind).dims(m, n, k).expect("Table II grid entries are valid");
+            let run = plan.run_f64(&a, &b).expect("Table II operands are well-formed");
             Table2Row {
                 kind,
-                size: kern.size_label(),
-                cycles: run.cycles,
+                size: plan.kernel().size_label(),
+                cycles: run.cycles.expect("cycle-accurate runs always carry cycles"),
                 paper,
-                flop_per_cycle: run.flop_per_cycle(),
+                flop_per_cycle: run.flop_per_cycle().unwrap_or(0.0),
             }
         })
         .collect()
@@ -196,31 +197,56 @@ pub fn fig7b_text() -> String {
     s
 }
 
-/// Render Table IV (accuracy vs FP64 golden).
+/// Render Table IV (accuracy vs FP64 golden). Single-draw rows run on
+/// the descriptor-path ([`ExecMode::CycleAccurate`]) accumulation
+/// plans, the averaged sweep on the functional fast path — the two are
+/// bit-identical (see [`crate::accuracy::sweep_seed`]), so the rendered
+/// numbers match the pre-API `accuracy::table4` / `table4_averaged`
+/// output exactly.
 pub fn table4_text(seed: u64) -> String {
+    let single = Session::builder().mode(ExecMode::CycleAccurate).seed(seed).build();
+    let sweep = Session::builder().mode(ExecMode::Functional).seed(seed).build();
     let mut s = String::new();
     s += "Table IV — relative error vs FP64 golden (single draw, like the paper)\n";
     s += &format!("{:<10} {:<14} {:>6} {:>14} {:>14}\n", "op", "format", "n", "ExSdotp", "ExFMA");
-    for (src, dst, p) in accuracy::table4(seed) {
-        s += &format!(
-            "{:<10} {:<14} {:>6} {:>14.2e} {:>14.2e}\n",
-            "accum",
-            format!("{}->{}", src.name(), dst.name()),
-            p.n,
-            p.err_exsdotp,
-            p.err_exfma
-        );
+    for (src, dst) in crate::accuracy::TABLE4_PAIRS {
+        for n in crate::accuracy::TABLE4_NS {
+            let p = single
+                .accumulate()
+                .src(src)
+                .acc(dst)
+                .n(n)
+                .expect("Table IV pairs are valid")
+                .run();
+            s += &format!(
+                "{:<10} {:<14} {:>6} {:>14.2e} {:>14.2e}\n",
+                "accum",
+                format!("{}->{}", src.name(), dst.name()),
+                p.n,
+                p.err_exsdotp,
+                p.err_exfma
+            );
+        }
     }
     s += "\nAveraged over 32 draws (reproduction robustness check):\n";
-    for (src, dst, n, f, c) in accuracy::table4_averaged(32) {
-        s += &format!(
-            "{:<10} {:<14} {:>6} {:>14.2e} {:>14.2e}\n",
-            "mean",
-            format!("{}->{}", src.name(), dst.name()),
-            n,
-            f,
-            c
-        );
+    for (src, dst) in crate::accuracy::TABLE4_PAIRS {
+        for n in crate::accuracy::TABLE4_NS {
+            let (f, c) = sweep
+                .accumulate()
+                .src(src)
+                .acc(dst)
+                .n(n)
+                .expect("Table IV pairs are valid")
+                .mean(32);
+            s += &format!(
+                "{:<10} {:<14} {:>6} {:>14.2e} {:>14.2e}\n",
+                "mean",
+                format!("{}->{}", src.name(), dst.name()),
+                n,
+                f,
+                c
+            );
+        }
     }
     s
 }
@@ -248,13 +274,16 @@ pub fn table3_text(seed: u64) -> String {
     }
 
     s += "\nCluster rows (simulated GEMM, energy model):\n";
-    let mut rng = Rng::new(seed);
+    let session = Session::builder().mode(ExecMode::CycleAccurate).seed(seed).build();
+    let mut rng = session.rng();
     let mut run = |kind: GemmKind, m: usize, n: usize, class: ComputeClass, label: &str, paper: &str| {
         let k = m;
         let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
         let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
-        let r = GemmKernel::new(kind, m, n, k).run(&a, &b);
-        let e = energy::estimate(&r.stats, r.cycles, class, &t);
+        let plan = session.gemm().kind(kind).dims(m, n, k).expect("Table III rows are valid");
+        let r = plan.run_f64(&a, &b).expect("Table III operands are well-formed");
+        let stats = r.stats.expect("cycle-accurate runs collect stats");
+        let e = energy::estimate(&stats, r.cycles.unwrap_or(0), class, &t);
         format!(
             "  {:<34} {:>6.1} GFLOPS  {:>6.0} mW  {:>6.0} GFLOPS/W   (paper: {})\n",
             label, e.gflops, e.avg_mw, e.gflops_per_w, paper

@@ -11,14 +11,40 @@
 //! `MINIFLOAT_NN_THREADS=1` forces serial execution (useful when
 //! bisecting or benchmarking the single-core path).
 
+use std::cell::Cell;
+
+thread_local! {
+    /// Per-thread worker-count override (see [`with_worker_count`]).
+    static WORKER_OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
 /// Number of worker threads to use.
 pub fn worker_count() -> usize {
+    if let Some(n) = WORKER_OVERRIDE.with(|c| c.get()) {
+        return n.max(1);
+    }
     if let Ok(v) = std::env::var("MINIFLOAT_NN_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
         }
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f` with the worker count pinned to `n` on this thread (and any
+/// [`par_chunks_mut`] fan-out it performs). Unlike the
+/// `MINIFLOAT_NN_THREADS` env var this is scoped and thread-local, so a
+/// `Session` thread budget cannot race with other sessions in the same
+/// process. The previous override is restored even if `f` panics.
+pub fn with_worker_count<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            WORKER_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = Restore(WORKER_OVERRIDE.with(|c| c.replace(Some(n.max(1)))));
+    f()
 }
 
 /// Apply `f(chunk_index, chunk)` to consecutive `chunk_len`-sized chunks
@@ -82,6 +108,20 @@ mod tests {
         };
         // Same output regardless of how the scheduler slices it.
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn worker_override_is_scoped() {
+        let outside = worker_count();
+        let inside = with_worker_count(1, worker_count);
+        assert_eq!(inside, 1);
+        assert_eq!(worker_count(), outside, "override must not leak");
+        // Nested overrides restore the outer one.
+        with_worker_count(3, || {
+            assert_eq!(worker_count(), 3);
+            with_worker_count(2, || assert_eq!(worker_count(), 2));
+            assert_eq!(worker_count(), 3);
+        });
     }
 
     #[test]

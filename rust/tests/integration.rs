@@ -1,23 +1,32 @@
 //! Cross-module integration tests (`cargo test --test integration`):
-//! the reproduction pipeline end to end, including — when artifacts are
-//! present — the PJRT runtime path.
+//! the reproduction pipeline end to end through the typed API
+//! ([`minifloat_nn::prelude`]), the `repro` binary's argument
+//! validation, and — when artifacts are present — the PJRT runtime
+//! path.
 
-use minifloat_nn::coordinator::{Precision, Trainer};
+use minifloat_nn::coordinator::Precision;
 use minifloat_nn::isa::instr::{OpWidth, ScalarFmt};
-use minifloat_nn::kernels::{kernel_reference, GemmKernel, GemmKind};
+use minifloat_nn::kernels::{kernel_reference, GemmKernel};
+use minifloat_nn::prelude::*;
 use minifloat_nn::report;
-use minifloat_nn::util::rng::Rng;
 
 fn artifacts_dir() -> Option<String> {
     let p = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     std::path::Path::new(&p).join("train_step_hfp8.hlo.txt").exists().then_some(p)
 }
 
+fn gaussian_mats(m: usize, n: usize, k: usize, rng: &mut minifloat_nn::util::rng::Rng) -> (Vec<f64>, Vec<f64>) {
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    (a, b)
+}
+
 #[test]
 fn table2_subset_reproduces_paper_shape() {
     // The three headline cells at 64×64, with the paper's ordering and
-    // ±15% cycle agreement.
-    let mut rng = Rng::new(42);
+    // ±15% cycle agreement — run through Session/GemmPlan.
+    let session = Session::builder().mode(ExecMode::CycleAccurate).seed(42).build();
+    let mut rng = session.rng();
     let mut cycles = std::collections::HashMap::new();
     for (kind, paper) in [
         (GemmKind::FmaSimd(ScalarFmt::H), 12232u64),
@@ -25,12 +34,13 @@ fn table2_subset_reproduces_paper_shape() {
         (GemmKind::ExSdotp(OpWidth::BtoH), 7019),
     ] {
         let (m, n, k) = (64, 64, 64);
-        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
-        let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
-        let run = GemmKernel::new(kind, m, n, k).run(&a, &b);
-        let dev = (run.cycles as f64 - paper as f64).abs() / paper as f64;
-        assert!(dev < 0.15, "{}: {} vs paper {paper} ({:.0}% off)", kind.label(), run.cycles, dev * 100.0);
-        cycles.insert(kind.label(), run.cycles);
+        let (a, b) = gaussian_mats(m, n, k, &mut rng);
+        let plan = session.gemm().kind(kind).dims(m, n, k).expect("valid plan");
+        let run = plan.run_f64(&a, &b).expect("valid run");
+        let got = run.cycles.expect("cycle-accurate run");
+        let dev = (got as f64 - paper as f64).abs() / paper as f64;
+        assert!(dev < 0.15, "{}: {} vs paper {paper} ({:.0}% off)", kind.label(), got, dev * 100.0);
+        cycles.insert(kind.label(), got);
     }
     assert!(cycles["FP16->FP32 ExSdotp"] < cycles["FP16 FMA"]);
     assert!(cycles["FP8->FP16 ExSdotp"] < cycles["FP16->FP32 ExSdotp"]);
@@ -51,16 +61,105 @@ fn report_generators_produce_all_artifacts() {
 
 #[test]
 fn gemm_sim_matches_reference_through_full_stack_128() {
-    // One big problem through the whole simulator, bit-exact.
+    // One big problem through the whole simulator via the typed API,
+    // bit-exact against the per-element reference replay.
     let (m, n, k) = (32, 32, 64);
-    let mut rng = Rng::new(5);
-    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
-    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    let session = Session::builder().mode(ExecMode::CycleAccurate).seed(5).build();
+    let mut rng = session.rng();
+    let (a, b) = gaussian_mats(m, n, k, &mut rng);
+    let plan = session.gemm().src(FP8).acc(FP16).dims(m, n, k).expect("valid plan");
+    let run = plan.run_f64(&a, &b).expect("valid run");
     let kern = GemmKernel::new(GemmKind::ExSdotp(OpWidth::BtoH), m, n, k);
-    let run = kern.run(&a, &b);
     let want = kernel_reference(&kern, &a, &b);
-    assert_eq!(run.c, want);
+    assert_eq!(run.c_f64(), want);
 }
+
+#[test]
+fn new_api_pins_bit_identity_with_pre_redesign_path() {
+    // Acceptance gate (redundant with the in-crate api::tests, but
+    // exercised here as an external consumer would): FP8→FP16 and
+    // FP16→FP32, both ExecModes, new plan API vs the old free-function
+    // path, bit-identical C.
+    let (m, n, k) = (16, 16, 16);
+    let mut rng = minifloat_nn::util::rng::Rng::new(99);
+    let (a, b) = gaussian_mats(m, n, k, &mut rng);
+    for (src, acc, kind) in [
+        (FP8, FP16, GemmKind::ExSdotp(OpWidth::BtoH)),
+        (FP16, FP32, GemmKind::ExSdotp(OpWidth::HtoS)),
+    ] {
+        for mode in [ExecMode::Functional, ExecMode::CycleAccurate] {
+            let session = Session::builder().mode(mode).build();
+            let new = session
+                .gemm()
+                .src(src)
+                .acc(acc)
+                .dims(m, n, k)
+                .expect("valid plan")
+                .run_f64(&a, &b)
+                .expect("valid run");
+            let old = GemmKernel::new(kind, m, n, k).run_mode(&a, &b, mode);
+            let new_bits: Vec<u64> = new.c_f64().iter().map(|x| x.to_bits()).collect();
+            let old_bits: Vec<u64> = old.c.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(new_bits, old_bits, "{}→{} {mode:?}", src.name(), acc.name());
+        }
+    }
+}
+
+// ------------------------------------------------------ CLI validation
+
+fn repro(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("spawn repro binary")
+}
+
+/// Bad arguments must produce a clean typed error on stderr and exit
+/// code 1 — not a panic (which would exit 101).
+fn assert_clean_cli_error(args: &[&str], needle: &str) {
+    let out = repro(args);
+    assert!(!out.status.success(), "{args:?} unexpectedly succeeded");
+    assert_eq!(out.status.code(), Some(1), "{args:?} should exit 1 (a panic exits 101)");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains(needle), "{args:?} stderr missing '{needle}':\n{stderr}");
+    assert!(!stderr.contains("panicked"), "{args:?} panicked:\n{stderr}");
+}
+
+#[test]
+fn cli_rejects_malformed_size() {
+    assert_clean_cli_error(&["gemm", "--size", "banana"], "--size must be MxN");
+    assert_clean_cli_error(&["gemm", "--size", "0x64"], "--size must be MxN");
+    // Well-formed but kernel-infeasible sizes get the divisibility error.
+    assert_clean_cli_error(&["gemm", "--size", "10x10"], "must be a positive multiple");
+}
+
+#[test]
+fn cli_rejects_unknown_kernel() {
+    assert_clean_cli_error(&["gemm", "--kernel", "fp12"], "--kernel must be fp64|fp32|fp16|fp16to32|fp8");
+}
+
+#[test]
+fn cli_rejects_unknown_mode() {
+    assert_clean_cli_error(&["gemm", "--mode", "warp"], "--mode must be functional|cycle");
+}
+
+#[test]
+fn cli_rejects_oversized_cycle_accurate_problem() {
+    assert_clean_cli_error(&["gemm", "--size", "256x256", "--kernel", "fp64", "--mode", "cycle"], "128 kB");
+    // The hint must name the CLI flag, not just the API enum.
+    assert_clean_cli_error(&["gemm", "--size", "256x256", "--kernel", "fp64", "--mode", "cycle"], "--mode functional");
+}
+
+#[test]
+fn cli_gemm_smoke_runs_through_the_api() {
+    let out = repro(&["gemm", "--size", "16x16", "--kernel", "fp8", "--mode", "functional"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("FP8->FP16 ExSdotp"), "{stdout}");
+    assert!(stdout.contains("issue-slot model"), "{stdout}");
+}
+
+// --------------------------------------------------------- PJRT (e2e)
 
 #[test]
 fn e2e_training_via_pjrt_converges() {
@@ -68,7 +167,8 @@ fn e2e_training_via_pjrt_converges() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return;
     };
-    let mut tr = Trainer::new(&dir, Precision::Hfp8, 42).expect("trainer");
+    let session = Session::builder().seed(42).build();
+    let mut tr = session.trainer(&dir, Precision::Hfp8).expect("trainer");
     let first = tr.step().expect("step");
     for _ in 0..79 {
         tr.step().expect("step");
@@ -86,9 +186,10 @@ fn e2e_hfp8_matches_fp32_closely() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return;
     };
+    let session = Session::builder().seed(7).build();
     let mut losses = vec![];
     for p in [Precision::Hfp8, Precision::Fp32] {
-        let mut tr = Trainer::new(&dir, p, 7).expect("trainer");
+        let mut tr = session.trainer(&dir, p).expect("trainer");
         for _ in 0..120 {
             tr.step().expect("step");
         }
