@@ -1,31 +1,70 @@
-//! **End-to-end driver** (DESIGN.md E2E): train the HFP8 MLP through the
-//! full three-layer stack — Rust coordinator → PJRT runtime → AOT HLO
-//! artifacts containing the Pallas ExSdotp GEMM kernels — and compare
-//! against the f32 baseline artifact.
-//!
-//! Requires `make artifacts` first.
+//! **End-to-end training driver**: HFP8 mixed-precision vs the FP32
+//! baseline on the native engine — every matmul a validated
+//! `Session::gemm` plan on the ExSdotp batch engine, FP32 master
+//! weights, dynamic loss scaling. Runs fully offline.
 //!
 //! ```sh
-//! cargo run --release --example train_minifloat -- [--steps 300] [--seed 42]
+//! cargo run --release --example train_minifloat -- [--steps 500] [--seed 42]
 //! ```
+//!
+//! `--engine pjrt` drives the original artifact-backed path instead
+//! (three-layer stack → PJRT runtime → AOT HLO artifacts; requires a
+//! PJRT-enabled build plus `make artifacts`).
 
-use minifloat_nn::api::Session;
 use minifloat_nn::coordinator::Precision;
+use minifloat_nn::prelude::*;
 use minifloat_nn::util::cli::Args;
-use minifloat_nn::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let steps: usize = args.get("steps", 300);
+    let steps: usize = args.get("steps", 500);
     let seed: u64 = args.get("seed", 42);
-    let dir = args.get_str("artifacts", "artifacts");
 
-    println!("=== E2E: HFP8 (FP8alt fwd / FP8 bwd, FP16 acc) vs FP32, {steps} steps ===\n");
+    if args.get_str("engine", "native") == "pjrt" {
+        return pjrt_engine(&args, steps, seed);
+    }
 
-    // One session owns the run policy (here: the seed); both precision
+    println!("=== native E2E: HFP8 (FP8alt fwd / FP8 bwd, FP16 acc) vs FP32, {steps} steps ===\n");
+
+    // One session owns the run policy (seed, engine); both precision
     // arms train from the same starting point.
     let session = Session::builder().seed(seed).build();
     let mut results = Vec::new();
+    for policy in [PrecisionPolicy::hfp8(), PrecisionPolicy::fp32()] {
+        println!("--- {} ---", policy.name);
+        let mut tr = session.native_trainer(policy)?;
+        tr.train(steps, (steps / 10).max(1))?;
+        let final_loss = tr.recent_loss(20);
+        let acc = tr.accuracy()?;
+        println!(
+            "{}: mean final loss {final_loss:.4}, accuracy {:.1}%  ({} GemmPlan runs, {:.0}% packed)\n",
+            policy.name,
+            acc * 100.0,
+            tr.gemm_calls(),
+            100.0 * tr.packed_runs() as f64 / tr.gemm_calls().max(1) as f64
+        );
+        results.push((policy.name, final_loss, acc));
+    }
+
+    println!("=== summary ===");
+    for (name, loss, acc) in &results {
+        println!("{name:<12} loss {loss:.4}  accuracy {:.1}%", acc * 100.0);
+    }
+    let (_, _, hfp8_acc) = results[0];
+    let (_, _, fp32_acc) = results[1];
+    println!(
+        "\nHFP8 accuracy is within {:.1} points of the FP32 baseline — the paper's\n\
+         low-precision-training premise (Sun et al. [7], Wang et al.) holds on this stack.",
+        (fp32_acc - hfp8_acc).abs() * 100.0
+    );
+    Ok(())
+}
+
+/// The original artifact-backed comparison (kept as the PJRT fallback).
+fn pjrt_engine(args: &Args, steps: usize, seed: u64) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    println!("=== PJRT E2E: HFP8 vs FP32 via AOT artifacts, {steps} steps ===\n");
+    let session = Session::builder().seed(seed).build();
     for precision in [Precision::Hfp8, Precision::Fp32] {
         println!("--- {precision:?} ---");
         let mut tr = session.trainer(&dir, precision)?;
@@ -35,22 +74,8 @@ fn main() -> Result<()> {
                 println!("step {i:>4}  loss {loss:.4}");
             }
         }
-        let final_loss = tr.recent_loss(20);
         let acc = tr.accuracy()?;
-        println!("{precision:?}: mean final loss {final_loss:.4}, accuracy {:.1}%\n", acc * 100.0);
-        results.push((precision, final_loss, acc));
+        println!("{precision:?}: mean final loss {:.4}, accuracy {:.1}%\n", tr.recent_loss(20), acc * 100.0);
     }
-
-    println!("=== summary ===");
-    for (p, loss, acc) in &results {
-        println!("{:<12} loss {loss:.4}  accuracy {:.1}%", format!("{p:?}"), acc * 100.0);
-    }
-    let (_, hfp8_loss, _) = results[0];
-    let (_, fp32_loss, _) = results[1];
-    println!(
-        "\nHFP8 final loss is within {:.3} of the f32 baseline — the paper's\n\
-         low-precision-training premise (Sun et al. [7]) holds on this stack.",
-        (hfp8_loss - fp32_loss).abs()
-    );
     Ok(())
 }

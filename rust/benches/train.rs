@@ -1,0 +1,63 @@
+//! Native-training throughput: steps/s per precision policy.
+//!
+//! One "step" is the full mixed-precision recipe — batch sampling,
+//! forward (3 GEMM plans), loss, backward (6 GEMM plans), loss-scale
+//! bookkeeping, optimizer update on the FP32 masters. Before timing,
+//! the harness gates on routing: for expanding-pair policies every
+//! plan must have taken the packed zero-repack fast path.
+//!
+//! Appends one trajectory point per policy to `BENCH_train.json` in
+//! the working directory so CI can track steps/s over time.
+
+use minifloat_nn::prelude::*;
+use minifloat_nn::util::bench::Bencher;
+use std::io::Write;
+
+fn main() {
+    let session = Session::builder().seed(42).build();
+    let mut bench = Bencher::new();
+    let mut json = String::new();
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+
+    println!("== native training step throughput (spiral, 8->32->32->8 MLP, batch 64) ==\n");
+    for policy in PrecisionPolicy::presets() {
+        let mut tr = session.native_trainer(policy).expect("valid train plan");
+        // Warm + routing gate: every GEMM of an expanding-pair policy
+        // must hit the packed fast path (a fast wrong route is
+        // worthless to measure).
+        for _ in 0..3 {
+            tr.step().expect("step");
+        }
+        let expanding = policy.fwd != policy.acc;
+        if expanding {
+            assert_eq!(
+                tr.packed_runs(),
+                tr.gemm_calls(),
+                "{}: expanding-pair GEMMs must all run the packed fast path",
+                policy.name
+            );
+        }
+        let stats = bench.bench(&format!("train step [{}]", policy.name), || {
+            tr.step().expect("step")
+        });
+        let ms = stats.median.as_secs_f64() * 1e3;
+        let steps_per_s = 1.0 / stats.median.as_secs_f64();
+        json += &format!(
+            "{{\"bench\":\"native_train_step\",\"unix_time\":{ts},\"policy\":\"{}\",\
+             \"ms_per_step\":{ms:.3},\"steps_per_s\":{steps_per_s:.1},\
+             \"packed_fast_path\":{}}}\n",
+            policy.name, expanding
+        );
+    }
+
+    match std::fs::OpenOptions::new().create(true).append(true).open("BENCH_train.json") {
+        Ok(mut f) => {
+            let _ = f.write_all(json.as_bytes());
+            println!("\ntrajectory points appended to BENCH_train.json");
+        }
+        Err(e) => eprintln!("could not write BENCH_train.json: {e}"),
+    }
+}

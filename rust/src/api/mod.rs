@@ -42,12 +42,14 @@
 pub mod plan;
 pub mod session;
 pub mod tensor;
+pub mod train;
 #[cfg(test)]
 mod tests;
 
 pub use plan::{AccumulatePlan, AccumulatePlanBuilder, GemmPlan, GemmPlanBuilder, RunReport};
 pub use session::{Session, SessionBuilder};
 pub use tensor::{Layout, MfTensor, MfTensorView};
+pub use train::{TrainPlan, TrainPlanBuilder};
 
 use crate::bail;
 use crate::kernels::gemm::{ExecMode, GemmKind};
@@ -88,4 +90,29 @@ pub fn parse_mode(s: &str) -> Result<ExecMode> {
         "functional" => Ok(ExecMode::Functional),
         other => bail!("--mode must be functional|cycle, got '{other}'"),
     }
+}
+
+/// Which engine drives `repro train`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainEngine {
+    /// The offline native trainer ([`Session::train`]).
+    Native,
+    /// The artifact-backed PJRT coordinator ([`Session::trainer`]).
+    Pjrt,
+}
+
+/// Parse a training-engine name (`native|pjrt`).
+pub fn parse_engine(s: &str) -> Result<TrainEngine> {
+    match s {
+        "native" => Ok(TrainEngine::Native),
+        "pjrt" => Ok(TrainEngine::Pjrt),
+        other => bail!("--engine must be native|pjrt, got '{other}'"),
+    }
+}
+
+/// Parse a precision-policy name (`fp32|fp16|fp16alt|fp8|hfp8`) —
+/// thin re-export of [`crate::nn::PrecisionPolicy::parse`] so the CLI
+/// keeps one import.
+pub fn parse_policy(s: &str) -> Result<crate::nn::PrecisionPolicy> {
+    crate::nn::PrecisionPolicy::parse(s)
 }

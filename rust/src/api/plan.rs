@@ -17,21 +17,56 @@ use crate::softfloat::RoundingMode;
 use crate::util::error::Result;
 use crate::{bail, ensure};
 
+/// Map one of Table I's six expanding `(src, dst)` pairs onto the
+/// kernel family that streams its width class. The alt variants
+/// (FP8alt, FP16alt) run the *same* kernel — the FP CSR's
+/// `src_is_alt`/`dst_is_alt` bits (§III-E) retarget the datapath without
+/// changing the program or its timing — so the issue-slot cycle model
+/// carries over unchanged. Returns `None` for pairs outside Table I.
+pub(crate) fn expanding_family(src: FpFormat, dst: FpFormat) -> Option<GemmKind> {
+    use crate::formats::spec::FormatSpec;
+    use crate::isa::instr::OpWidth;
+    crate::with_expanding_pair!(src, dst, S, D, {
+        Some(match (S::WIDTH, D::WIDTH) {
+            (8, _) => GemmKind::ExSdotp(OpWidth::BtoH),
+            _ => GemmKind::ExSdotp(OpWidth::HtoS),
+        })
+    }, {
+        None
+    })
+}
+
+/// Transpose a row-major `rows×cols` matrix into `cols×rows`.
+fn transpose_f64(src: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    debug_assert_eq!(src.len(), rows * cols);
+    let mut out = vec![0f64; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = src[r * cols + c];
+        }
+    }
+    out
+}
+
 /// Builder returned by [`Session::gemm`]. Pick the kernel either by
 /// format pair ([`GemmPlanBuilder::src`] + [`GemmPlanBuilder::acc`]) or
-/// directly by family ([`GemmPlanBuilder::kind`]); [`GemmPlanBuilder::dims`]
-/// validates and finalizes.
+/// directly by family ([`GemmPlanBuilder::kind`]); optionally mark an
+/// operand transposed ([`GemmPlanBuilder::transpose_a`] /
+/// [`GemmPlanBuilder::transpose_b`] — the training backward-pass
+/// shapes); [`GemmPlanBuilder::dims`] validates and finalizes.
 #[derive(Clone, Copy, Debug)]
 pub struct GemmPlanBuilder<'s> {
     session: &'s Session,
     src: Option<FpFormat>,
     acc: Option<FpFormat>,
     kind: Option<GemmKind>,
+    ta: bool,
+    tb: bool,
 }
 
 impl<'s> GemmPlanBuilder<'s> {
     pub(crate) fn new(session: &'s Session) -> Self {
-        GemmPlanBuilder { session, src: None, acc: None, kind: None }
+        GemmPlanBuilder { session, src: None, acc: None, kind: None, ta: false, tb: false }
     }
 
     /// Source element format of A and B.
@@ -49,6 +84,22 @@ impl<'s> GemmPlanBuilder<'s> {
     /// Select the kernel family directly (alternative to `src`/`acc`).
     pub fn kind(mut self, kind: GemmKind) -> Self {
         self.kind = Some(kind);
+        self
+    }
+
+    /// Compute `C = Aᵀ·B`: the A operand is handed over *untransposed*
+    /// as `k×m` (the weight-gradient shape `Xᵀ·G` of the training
+    /// backward pass). Functional engine only.
+    pub fn transpose_a(mut self) -> Self {
+        self.ta = true;
+        self
+    }
+
+    /// Compute `C = A·Bᵀ`: the B operand is handed over *untransposed*
+    /// as `n×k` (the input-gradient shape `G·Wᵀ` of the training
+    /// backward pass). Functional engine only.
+    pub fn transpose_b(mut self) -> Self {
+        self.tb = true;
         self
     }
 
@@ -80,10 +131,47 @@ impl<'s> GemmPlanBuilder<'s> {
                 }
                 kind
             }
-            (None, Some(s), Some(a)) => GemmKind::for_formats(s, a)?,
+            (None, Some(s), Some(a)) => match GemmKind::for_formats(s, a) {
+                Ok(kind) => kind,
+                // Alt-format expanding pairs (FP8alt→FP16, FP16alt→FP32,
+                // …) are hardware-legal via the FP CSR's alt bits but the
+                // kernel generators stream the nominal formats, so they
+                // run on the functional batch engine only.
+                Err(e) => match expanding_family(s, a) {
+                    Some(kind) => {
+                        ensure!(
+                            self.session.mode() == ExecMode::Functional,
+                            "the simulated kernels stream nominal formats only; the alt-format \
+                             pair {}->{} (FP CSR src_is_alt/dst_is_alt, §III-E) runs on the \
+                             functional engine — use ExecMode::Functional / --mode functional",
+                            s.name(),
+                            a.name()
+                        );
+                        kind
+                    }
+                    None => return Err(e),
+                },
+            },
             (None, Some(_), None) => bail!("missing accumulation format: call .acc(..) (or .kind(..))"),
             (None, None, _) => bail!("missing formats: call .src(..).acc(..) or .kind(..)"),
         };
+        let (src_fmt, acc_fmt) = match (self.src, self.acc) {
+            (Some(s), Some(a)) => (s, a),
+            _ => (kind.try_src_fmt()?, kind.try_dst_fmt()?),
+        };
+        if self.ta || self.tb {
+            ensure!(
+                !(self.ta && self.tb),
+                "transpose_a and transpose_b cannot be combined (no A^T*B^T kernel; \
+                 swap the operands of a single-transpose plan instead)"
+            );
+            ensure!(
+                self.session.mode() == ExecMode::Functional,
+                "transposed GEMM shapes (A^T*B / A*B^T — the training backward pass) run on \
+                 the functional batch engine; the kernel generators stream A*B only. Use \
+                 ExecMode::Functional / --mode functional"
+            );
+        }
         if self.session.mode() == ExecMode::CycleAccurate {
             ensure!(
                 self.session.rounding() == RoundingMode::Rne,
@@ -104,7 +192,7 @@ impl<'s> GemmPlanBuilder<'s> {
                 kern.footprint()
             );
         }
-        Ok(GemmPlan { session: self.session, kern })
+        Ok(GemmPlan { session: self.session, kern, src: src_fmt, acc: acc_fmt, ta: self.ta, tb: self.tb })
     }
 }
 
@@ -115,6 +203,10 @@ impl<'s> GemmPlanBuilder<'s> {
 pub struct GemmPlan<'s> {
     session: &'s Session,
     kern: GemmKernel,
+    src: FpFormat,
+    acc: FpFormat,
+    ta: bool,
+    tb: bool,
 }
 
 impl GemmPlan<'_> {
@@ -128,37 +220,75 @@ impl GemmPlan<'_> {
         (self.kern.m, self.kern.n, self.kern.k)
     }
 
+    /// `(transpose_a, transpose_b)` — which operands arrive untransposed
+    /// for a transposed product (see [`GemmPlanBuilder::transpose_a`]).
+    pub fn transposes(&self) -> (bool, bool) {
+        (self.ta, self.tb)
+    }
+
     /// The underlying kernel descriptor (program generator, cycle
     /// model, TCDM layout) — the machine-model escape hatch.
     pub fn kernel(&self) -> &GemmKernel {
         &self.kern
     }
 
-    /// Source element format.
+    /// Source element format (may be an alt variant of the kernel
+    /// family's nominal format — same width class, CSR-selected).
     pub fn src_fmt(&self) -> FpFormat {
-        self.kern.kind.try_src_fmt().expect("plan kinds are validated")
+        self.src
     }
 
     /// Accumulation / output format.
     pub fn acc_fmt(&self) -> FpFormat {
-        self.kern.kind.try_dst_fmt().expect("plan kinds are validated")
+        self.acc
     }
 
     /// Run on row-major `f64` matrices (quantized to the source format
-    /// on packing, exactly like the pre-API free functions).
+    /// on packing, exactly like the pre-API free functions). Transposed
+    /// plans take their marked operand *untransposed*: `k×m` for A under
+    /// [`GemmPlanBuilder::transpose_a`], `n×k` for B under
+    /// [`GemmPlanBuilder::transpose_b`].
     pub fn run_f64(&self, a: &[f64], b: &[f64]) -> Result<RunReport> {
         let (m, n, k) = self.dims();
-        ensure!(a.len() == m * k, "A must be {m}x{k} = {} elements, got {}", m * k, a.len());
-        ensure!(b.len() == k * n, "B must be {k}x{n} = {} elements, got {}", k * n, b.len());
+        let (ar, ac) = if self.ta { (k, m) } else { (m, k) };
+        let (br, bc) = if self.tb { (n, k) } else { (k, n) };
+        ensure!(a.len() == ar * ac, "A must be {ar}x{ac} = {} elements, got {}", ar * ac, a.len());
+        ensure!(b.len() == br * bc, "B must be {br}x{bc} = {} elements, got {}", br * bc, b.len());
         let t0 = std::time::Instant::now();
         let mode = self.session.mode();
         let (c, cycles, stats) = self.session.scoped(|| match mode {
             ExecMode::CycleAccurate => {
+                // Builder invariant: cycle-accurate plans are nominal
+                // formats, untransposed.
                 let r = self.kern.run(a, b);
                 (r.c, Some(r.cycles), Some(r.stats))
             }
             ExecMode::Functional => {
-                let c = crate::batch::gemm_dispatch(self.kern.kind, m, n, k, a, b, self.session.rounding());
+                let rm = self.session.rounding();
+                let c = match crate::batch::gemm_expanding(self.src, self.acc, self.ta, self.tb, m, n, k, a, b, rm)
+                {
+                    Some(c) => c,
+                    None => {
+                        // Non-expanding family (the FMA kernels):
+                        // materialize the logical operands and run the
+                        // kind dispatcher.
+                        let at;
+                        let bt;
+                        let a2: &[f64] = if self.ta {
+                            at = transpose_f64(a, k, m);
+                            &at
+                        } else {
+                            a
+                        };
+                        let b2: &[f64] = if self.tb {
+                            bt = transpose_f64(b, n, k);
+                            &bt
+                        } else {
+                            b
+                        };
+                        crate::batch::gemm_dispatch(self.kern.kind, m, n, k, a2, b2, rm)
+                    }
+                };
                 let cycles = self.session.cycle_model_enabled().then(|| self.kern.model_cycles());
                 (c, cycles, None)
             }
@@ -170,28 +300,31 @@ impl GemmPlan<'_> {
         Ok(RunReport { c, cycles, flops: self.kern.flops(), stats, mode, packed_input: false, wall })
     }
 
-    /// Run on typed tensors. `a` must be `m×k` and `b` `k×n`, both in
-    /// the plan's source format (cast first otherwise); any storage
-    /// layout is accepted.
+    /// Run on typed tensors. `a` must be `m×k` and `b` `k×n` (the
+    /// marked operand untransposed — `k×m` / `n×k` — for transposed
+    /// plans), both in the plan's source format (cast first otherwise);
+    /// any storage layout is accepted.
     ///
-    /// When the functional engine is selected and the tensors already
-    /// sit in the layouts the kernel streams (A row-major, B
-    /// column-major) with an expanding kernel family, the packed words
-    /// feed the batch engine **directly** — zero decode/re-pack. All
-    /// other combinations restream from the decoded values, which is
-    /// exact for on-grid tensors; both routes produce the same C
-    /// (pinned by the `tensor_run_*` differential tests).
+    /// When the functional engine is selected and each tensor's storage
+    /// already provides the stream the kernel wants — logical-A rows
+    /// packed along `k`, logical-B columns packed along `k`; a transpose
+    /// flips which [`crate::api::Layout`] that is — the packed words feed the batch
+    /// engine **directly**: zero decode/re-pack. All other combinations
+    /// restream from the decoded values, which is exact for on-grid
+    /// tensors; both routes produce the same C (pinned by the
+    /// `tensor_run_*` differential tests).
     pub fn run(&self, a: &MfTensor, b: &MfTensor) -> Result<RunReport> {
         use super::tensor::Layout;
         let (m, n, k) = self.dims();
         expect_fmt(a, self.src_fmt(), "A")?;
         expect_fmt(b, self.src_fmt(), "B")?;
-        ensure!(a.shape() == (m, k), "A must be {m}x{k}, got {}x{}", a.rows(), a.cols());
-        ensure!(b.shape() == (k, n), "B must be {k}x{n}, got {}x{}", b.rows(), b.cols());
-        if self.session.mode() == ExecMode::Functional
-            && a.layout() == Layout::RowMajor
-            && b.layout() == Layout::ColMajor
-        {
+        let (ar, ac) = if self.ta { (k, m) } else { (m, k) };
+        let (br, bc) = if self.tb { (n, k) } else { (k, n) };
+        ensure!(a.shape() == (ar, ac), "A must be {ar}x{ac}, got {}x{}", a.rows(), a.cols());
+        ensure!(b.shape() == (br, bc), "B must be {br}x{bc}, got {}x{}", b.rows(), b.cols());
+        let a_streams = a.layout() == if self.ta { Layout::ColMajor } else { Layout::RowMajor };
+        let b_streams = b.layout() == if self.tb { Layout::RowMajor } else { Layout::ColMajor };
+        if self.session.mode() == ExecMode::Functional && a_streams && b_streams {
             let t0 = std::time::Instant::now();
             let rm = self.session.rounding();
             let packed = self.session.scoped(|| {

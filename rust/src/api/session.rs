@@ -8,11 +8,14 @@
 
 use super::plan::{AccumulatePlanBuilder, GemmPlanBuilder};
 use super::tensor::{Layout, MfTensor};
+use super::train::TrainPlanBuilder;
 use crate::coordinator::{Precision, Trainer};
 use crate::formats::FpFormat;
 use crate::kernels::gemm::ExecMode;
+use crate::nn::policy::PrecisionPolicy;
+use crate::nn::train::NativeTrainer;
 use crate::softfloat::RoundingMode;
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 use crate::util::parallel::with_worker_count;
 use crate::util::rng::Rng;
 
@@ -119,10 +122,31 @@ impl Session {
         self.scoped(|| MfTensor::from_f64_with_layout(data, rows, cols, fmt, layout, self.rm))
     }
 
-    /// Construct the end-to-end training driver with the session's
-    /// seed (the PJRT-backed coordinator; see `examples/train_minifloat.rs`).
+    /// Start a typed native-training plan: the offline mixed-precision
+    /// trainer whose every matmul runs through [`Session::gemm`] plans
+    /// (`session.train().policy(PrecisionPolicy::hfp8()).build()?`).
+    pub fn train(&self) -> TrainPlanBuilder<'_> {
+        TrainPlanBuilder::new(self)
+    }
+
+    /// Convenience: a ready [`crate::nn::NativeTrainer`] with the given
+    /// precision policy and default task/model (spiral, 32 hidden,
+    /// batch 64, Adam). Equivalent to
+    /// `self.train().policy(policy).build()?.trainer()`.
+    pub fn native_trainer(&self, policy: PrecisionPolicy) -> Result<NativeTrainer> {
+        self.train().policy(policy).build()?.trainer()
+    }
+
+    /// Construct the **artifact-backed** (PJRT) training driver with
+    /// the session's seed — the fallback engine; it needs a
+    /// PJRT-enabled build plus `make artifacts`. Offline, prefer the
+    /// native engine: [`Session::train`] / [`Session::native_trainer`]
+    /// (`repro train --engine native`).
     pub fn trainer(&self, artifacts_dir: &str, precision: Precision) -> Result<Trainer> {
-        Trainer::new(artifacts_dir, precision, self.seed)
+        Trainer::new(artifacts_dir, precision, self.seed).context(
+            "constructing the PJRT (artifact-backed) trainer; the native engine trains \
+             offline without artifacts — use Session::train() / `repro train --engine native`",
+        )
     }
 
     /// Run `f` under this session's thread budget (no-op when unset).

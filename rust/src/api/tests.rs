@@ -129,7 +129,7 @@ fn plan_rejects_invalid_format_pairs() {
     let session = Session::new();
     let err = session.gemm().src(FP8).acc(FP32).dims(16, 16, 16).unwrap_err();
     assert!(err.to_string().contains("no GEMM kernel for FP8->FP32"), "{err}");
-    let err = session.gemm().src(FP8ALT).acc(FP16).dims(16, 16, 16).unwrap_err();
+    let err = session.gemm().src(FP16).acc(FP8).dims(16, 16, 16).unwrap_err();
     assert!(err.to_string().contains("no GEMM kernel"), "{err}");
     let err = session.gemm().src(FP8).dims(16, 16, 16).unwrap_err();
     assert!(err.to_string().contains("missing accumulation format"), "{err}");
@@ -349,4 +349,156 @@ fn parse_helpers_accept_valid_and_reject_invalid() {
     assert_eq!(parse_mode("functional").unwrap(), ExecMode::Functional);
     let err = parse_mode("warp").unwrap_err();
     assert!(err.to_string().contains("--mode must be"), "{err}");
+}
+
+// ------------------------------------------- alt pairs and transposes
+
+#[test]
+fn alt_expanding_pairs_run_functionally_and_match_the_monomorphized_engine() {
+    use crate::batch::gemm_m;
+    use crate::formats::spec::{Fp16, Fp16alt, Fp32, Fp8alt};
+    let (m, n, k) = (16, 16, 16);
+    let (a, b) = mats(m, n, k, 40);
+    let session = Session::builder().mode(ExecMode::Functional).build();
+    // FP8alt→FP16 (the HFP8 forward pair).
+    let run = session
+        .gemm()
+        .src(FP8ALT)
+        .acc(FP16)
+        .dims(m, n, k)
+        .expect("alt pair is functional-legal")
+        .run_f64(&a, &b)
+        .expect("run");
+    let want = gemm_m::<Fp8alt, Fp16>(m, n, k, &a, &b, RoundingMode::Rne);
+    assert_eq!(bits_of(&run.c_f64()), bits_of(&want));
+    assert_eq!(run.c.fmt(), FP16);
+    // FP16alt→FP32.
+    let run = session
+        .gemm()
+        .src(crate::formats::FP16ALT)
+        .acc(FP32)
+        .dims(m, n, k)
+        .expect("alt pair")
+        .run_f64(&a, &b)
+        .expect("run");
+    let want = gemm_m::<Fp16alt, Fp32>(m, n, k, &a, &b, RoundingMode::Rne);
+    assert_eq!(bits_of(&run.c_f64()), bits_of(&want));
+}
+
+#[test]
+fn alt_pairs_are_rejected_cycle_accurately() {
+    let session = Session::builder().mode(ExecMode::CycleAccurate).build();
+    let err = session.gemm().src(FP8ALT).acc(FP16).dims(16, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("src_is_alt"), "{err}");
+    assert!(err.to_string().contains("functional"), "{err}");
+}
+
+/// Reference: C = Aᵀ·B via pre-transposing on the host and running the
+/// plain plan — the transposed plan must be bit-identical.
+fn host_transpose(x: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    let mut out = vec![0f64; x.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = x[r * cols + c];
+        }
+    }
+    out
+}
+
+#[test]
+fn transposed_plans_match_pretransposed_plain_plans() {
+    let session = Session::builder().mode(ExecMode::Functional).build();
+    let (m, n, k) = (16, 8, 24);
+    for (src, acc) in [(FP8, FP16), (FP16, FP32), (FP32, FP32), (FP64, FP64)] {
+        // A^T·B: raw A is k×m.
+        let mut rng = Rng::new(71);
+        let a_raw: Vec<f64> = (0..k * m).map(|_| rng.gaussian() * 0.25).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+        let tn = session
+            .gemm()
+            .src(src)
+            .acc(acc)
+            .transpose_a()
+            .dims(m, n, k)
+            .expect("plan")
+            .run_f64(&a_raw, &b)
+            .expect("run");
+        let plain = session
+            .gemm()
+            .src(src)
+            .acc(acc)
+            .dims(m, n, k)
+            .expect("plan")
+            .run_f64(&host_transpose(&a_raw, k, m), &b)
+            .expect("run");
+        assert_eq!(bits_of(&tn.c_f64()), bits_of(&plain.c_f64()), "{}: A^T·B", src.name());
+        // A·B^T: raw B is n×k.
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+        let b_raw: Vec<f64> = (0..n * k).map(|_| rng.gaussian() * 0.25).collect();
+        let nt = session
+            .gemm()
+            .src(src)
+            .acc(acc)
+            .transpose_b()
+            .dims(m, n, k)
+            .expect("plan")
+            .run_f64(&a, &b_raw)
+            .expect("run");
+        let plain = session
+            .gemm()
+            .src(src)
+            .acc(acc)
+            .dims(m, n, k)
+            .expect("plan")
+            .run_f64(&a, &host_transpose(&b_raw, n, k))
+            .expect("run");
+        assert_eq!(bits_of(&nt.c_f64()), bits_of(&plain.c_f64()), "{}: A·B^T", src.name());
+    }
+}
+
+#[test]
+fn transposed_tensor_runs_take_the_packed_route() {
+    // The training backward pass feeds tensors whose storage already
+    // streams the kernel: A^T·B wants A column-major + B column-major,
+    // A·B^T wants both row-major. Assert the zero-repack route actually
+    // runs and agrees with the f64 path.
+    let session = Session::builder().mode(ExecMode::Functional).build();
+    let (m, n, k) = (8, 8, 16);
+    let mut rng = Rng::new(90);
+    let a_raw: Vec<f64> = (0..k * m).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    let plan = session.gemm().src(FP8).acc(FP16).transpose_a().dims(m, n, k).expect("plan");
+    let at = session.tensor_with_layout(&a_raw, k, m, FP8, Layout::ColMajor).expect("tensor");
+    let bt = session.tensor_with_layout(&b, k, n, FP8, Layout::ColMajor).expect("tensor");
+    let fast = plan.run(&at, &bt).expect("run");
+    assert!(fast.packed_input, "A^T·B with matching layouts must run packed");
+    let slow = plan.run_f64(&a_raw, &b).expect("run");
+    assert_eq!(fast.c, slow.c);
+
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b_raw: Vec<f64> = (0..n * k).map(|_| rng.gaussian() * 0.25).collect();
+    let plan = session.gemm().src(FP8).acc(FP16).transpose_b().dims(m, n, k).expect("plan");
+    let at = session.tensor(&a, m, k, FP8).expect("tensor");
+    let bt = session.tensor(&b_raw, n, k, FP8).expect("tensor");
+    let fast = plan.run(&at, &bt).expect("run");
+    assert!(fast.packed_input, "A·B^T with matching layouts must run packed");
+    let slow = plan.run_f64(&a, &b_raw).expect("run");
+    assert_eq!(fast.c, slow.c);
+}
+
+#[test]
+fn transpose_builder_rejections() {
+    let session = Session::builder().mode(ExecMode::Functional).build();
+    let err =
+        session.gemm().src(FP8).acc(FP16).transpose_a().transpose_b().dims(16, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("cannot be combined"), "{err}");
+    let cyc = Session::builder().mode(ExecMode::CycleAccurate).build();
+    let err = cyc.gemm().src(FP8).acc(FP16).transpose_a().dims(16, 16, 16).unwrap_err();
+    assert!(err.to_string().contains("functional batch engine"), "{err}");
+    // Transposed operand shape errors name the raw (untransposed) shape.
+    let plan = session.gemm().src(FP8).acc(FP16).transpose_a().dims(16, 16, 16).expect("plan");
+    let bad = session.tensor(&vec![0.0; 16 * 8], 16, 8, FP8).expect("tensor");
+    let good = session.tensor(&vec![0.0; 16 * 16], 16, 16, FP8).expect("tensor");
+    let err = plan.run(&bad, &good).unwrap_err();
+    assert!(err.to_string().contains("A must be 16x16"), "{err}");
 }

@@ -1,0 +1,199 @@
+//! [`TrainPlan`] — the validated front door to native mixed-precision
+//! training, mirroring [`crate::api::GemmPlan`]'s builder style.
+//!
+//! `session.train().policy(PrecisionPolicy::hfp8()).build()?` checks
+//! everything a run needs before any compute happens: the policy's
+//! format pairs resolve to runnable GEMM plans, the model/batch
+//! dimensions divide by the lane and unroll requirements of *all three*
+//! GEMM shapes (forward, `Xᵀ·G`, `G·Wᵀ`), the dataset is non-degenerate,
+//! and the session drives the functional engine. A `TrainPlan` in hand
+//! is proof the training loop cannot hit a shape panic.
+//!
+//! ```
+//! use minifloat_nn::prelude::*;
+//!
+//! # fn main() -> minifloat_nn::util::error::Result<()> {
+//! let session = Session::builder().seed(1).build();
+//! let plan = session.train().policy(PrecisionPolicy::hfp8()).hidden(16).build()?;
+//! let mut tr = plan.trainer()?;
+//! tr.train(5, 0)?;
+//! assert_eq!(tr.history.len(), 5);
+//! # Ok(())
+//! # }
+//! ```
+
+use super::session::Session;
+use crate::ensure;
+use crate::kernels::gemm::ExecMode;
+use crate::nn::data::{DataSpec, IN_DIM, OUT_DIM};
+use crate::nn::layer::Activation;
+use crate::nn::optim::OptimSpec;
+use crate::nn::policy::PrecisionPolicy;
+use crate::nn::train::NativeTrainer;
+use crate::util::error::Result;
+
+/// Builder returned by [`Session::train`]; every knob has a sensible
+/// default (HFP8 policy, spiral dataset, 32 hidden units, batch 64,
+/// Adam at 4e-3, ReLU).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainPlanBuilder<'s> {
+    session: &'s Session,
+    policy: PrecisionPolicy,
+    data: DataSpec,
+    hidden: usize,
+    batch: usize,
+    act: Activation,
+    optim: OptimSpec,
+}
+
+impl<'s> TrainPlanBuilder<'s> {
+    pub(crate) fn new(session: &'s Session) -> Self {
+        TrainPlanBuilder {
+            session,
+            policy: PrecisionPolicy::hfp8(),
+            data: DataSpec::Spiral { n_per_class: 300 },
+            hidden: 32,
+            batch: 64,
+            act: Activation::Relu,
+            optim: OptimSpec::adam(4e-3),
+        }
+    }
+
+    /// Select the precision policy (default HFP8).
+    pub fn policy(mut self, policy: PrecisionPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Select the dataset (default three-arm spiral, 300/arm).
+    pub fn dataset(mut self, data: DataSpec) -> Self {
+        self.data = data;
+        self
+    }
+
+    /// Hidden width of the two hidden layers (default 32).
+    pub fn hidden(mut self, hidden: usize) -> Self {
+        self.hidden = hidden;
+        self
+    }
+
+    /// Batch size (default 64).
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    /// Activation between linear layers (default ReLU).
+    pub fn activation(mut self, act: Activation) -> Self {
+        self.act = act;
+        self
+    }
+
+    /// Optimizer + hyperparameters (default Adam at 4e-3).
+    pub fn optimizer(mut self, optim: OptimSpec) -> Self {
+        self.optim = optim;
+        self
+    }
+
+    /// Validate everything and return the runnable plan.
+    pub fn build(self) -> Result<TrainPlan> {
+        self.policy.validate()?;
+        ensure!(
+            self.session.mode() == ExecMode::Functional,
+            "native training runs on the functional batch engine (the backward GEMM shapes \
+             have no cycle-accurate kernels); build the session with ExecMode::Functional"
+        );
+        // Dimension requirements across all three GEMM shapes: every
+        // one of {batch, hidden, IN_DIM, OUT_DIM} appears as an M
+        // (multiple of the 8 cluster cores), an N (multiple of the
+        // 4-wide unroll) and a K (multiple of the SIMD lane count ≤ 8)
+        // in some plan, so a single "multiple of 8" rule covers all.
+        let lanes = self.policy.max_lanes().max(8);
+        for (what, v) in [("batch size", self.batch), ("hidden width", self.hidden)] {
+            ensure!(
+                v > 0 && v % lanes == 0,
+                "{what} ({v}) must be a positive multiple of {lanes} so every forward and \
+                 backward GEMM shape packs cleanly (SIMD lanes, unroll, and core count)"
+            );
+        }
+        ensure!(
+            self.data.len() >= self.batch,
+            "dataset would have {} samples but the batch size is {}",
+            self.data.len(),
+            self.batch
+        );
+        // Probe-build one plan per role so unsupported policy/dimension
+        // combinations surface here, typed, not mid-loop.
+        self.session.gemm().src(self.policy.fwd).acc(self.policy.acc).dims(
+            self.batch,
+            self.hidden,
+            IN_DIM,
+        )?;
+        self.session
+            .gemm()
+            .src(self.policy.bwd)
+            .acc(self.policy.acc)
+            .transpose_a()
+            .dims(IN_DIM, self.hidden, self.batch)?;
+        self.session
+            .gemm()
+            .src(self.policy.bwd)
+            .acc(self.policy.acc)
+            .transpose_b()
+            .dims(self.batch, self.hidden, OUT_DIM)?;
+        Ok(TrainPlan {
+            session: *self.session,
+            policy: self.policy,
+            data: self.data,
+            hidden: self.hidden,
+            batch: self.batch,
+            act: self.act,
+            optim: self.optim,
+        })
+    }
+}
+
+/// A fully validated training configuration. Constructed only through
+/// [`TrainPlanBuilder::build`]; [`TrainPlan::trainer`] materializes the
+/// stateful [`NativeTrainer`] (dataset, model init, optimizer state).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainPlan {
+    session: Session,
+    policy: PrecisionPolicy,
+    data: DataSpec,
+    hidden: usize,
+    batch: usize,
+    act: Activation,
+    optim: OptimSpec,
+}
+
+impl TrainPlan {
+    /// The precision policy.
+    pub fn policy(&self) -> PrecisionPolicy {
+        self.policy
+    }
+
+    /// `(hidden, batch)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.hidden, self.batch)
+    }
+
+    /// Build the stateful trainer (deterministic from the session seed:
+    /// dataset generation, weight init and batch sampling all derive
+    /// from it).
+    pub fn trainer(&self) -> Result<NativeTrainer> {
+        // Same dataset-seed salt the PJRT coordinator applies, so both
+        // engines train on identical points for a given session seed.
+        let data = self.data.generate(self.session.seed() ^ 0xD47A);
+        data.validate()?;
+        Ok(NativeTrainer::assemble(
+            self.session,
+            self.policy,
+            data,
+            self.hidden,
+            self.batch,
+            self.act,
+            self.optim,
+        ))
+    }
+}

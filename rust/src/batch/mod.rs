@@ -342,6 +342,80 @@ pub(crate) fn gemm_packed(
     )
 }
 
+// ------------------------------------------------ backward-pass shapes
+//
+// Training needs two more GEMM shapes (Wang et al. 2018, "Training DNNs
+// with 8-bit Floating Point Numbers"): the weight gradient `Aᵀ·G` and
+// the input gradient `G·Bᵀ`. A transpose only changes *which packer*
+// produces an operand's register stream — rows of `Aᵀ` are columns of
+// `A` — so both shapes run the identical [`gemm_packed_m`] inner kernel
+// (same ExSdotp accumulation order, same `vsum` epilogue, bit-identical
+// to what the cluster would compute on pre-transposed data) with no
+// extra data motion.
+
+/// `C = Aᵀ·B` on the batch engine. `a` is `k×m` row-major f64 (the
+/// *untransposed* operand, e.g. forward activations `X`), `b` is `k×n`
+/// row-major f64; returns row-major `m×n` C. `k` must divide by the
+/// SIMD width — both streams pack *down* the shared inner dimension.
+pub fn gemm_tn_m<S: ExpandTo<D>, D: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+) -> Vec<f64> {
+    let ap = pack_cols_m::<S>(a, k, m, rm); // columns of A = rows of Aᵀ
+    let bp = pack_cols_m::<S>(b, k, n, rm);
+    gemm_packed_m::<S, D>(m, n, k, &ap, &bp, rm)
+}
+
+/// `C = A·Bᵀ` on the batch engine. `a` is `m×k` row-major f64, `b` is
+/// `n×k` row-major f64 (the *untransposed* operand, e.g. a weight
+/// matrix streamed against output gradients); returns row-major `m×n` C.
+pub fn gemm_nt_m<S: ExpandTo<D>, D: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+) -> Vec<f64> {
+    let ap = pack_rows_m::<S>(a, m, k, rm);
+    let bp = pack_rows_m::<S>(b, n, k, rm); // rows of B = columns of Bᵀ
+    gemm_packed_m::<S, D>(m, n, k, &ap, &bp, rm)
+}
+
+/// Runtime-dispatched expanding GEMM over all three shapes (`A·B`,
+/// `Aᵀ·B`, `A·Bᵀ`): `Some(C)` for Table I's six monomorphized pairs,
+/// `None` otherwise (including the unsupported `Aᵀ·Bᵀ`). Operand
+/// shapes follow [`gemm_m`] / [`gemm_tn_m`] / [`gemm_nt_m`].
+/// Crate-internal: [`crate::api::GemmPlan`]'s `transpose_a`/`transpose_b`
+/// builders are the public route.
+pub(crate) fn gemm_expanding(
+    src: FpFormat,
+    dst: FpFormat,
+    trans_a: bool,
+    trans_b: bool,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+) -> Option<Vec<f64>> {
+    crate::with_expanding_pair!(src, dst, S, D, {
+        match (trans_a, trans_b) {
+            (false, false) => Some(gemm_m::<S, D>(m, n, k, a, b, rm)),
+            (true, false) => Some(gemm_tn_m::<S, D>(m, n, k, a, b, rm)),
+            (false, true) => Some(gemm_nt_m::<S, D>(m, n, k, a, b, rm)),
+            (true, true) => None,
+        }
+    }, {
+        None
+    })
+}
+
 /// Packed-SIMD FMA GEMM (`FmaSimd` kernels): lanewise FMA partial sums
 /// in `F`, reduced with the `(RS → RD)` `vsum` tree the corresponding
 /// generated kernel uses in its epilogue.

@@ -235,3 +235,42 @@ fn packing_layouts_match_expectations() {
     // column 1, word 0, lane 2 = element (row 2, col 1) = 5.0
     assert_eq!(lane(cols[2], 2, 16), from_f64(5.0, crate::formats::FP16, RoundingMode::Rne));
 }
+
+// ------------------------------------------------ backward-pass shapes
+
+#[test]
+fn transposed_gemms_are_bit_identical_to_pretransposed_plain_gemms() {
+    // gemm_tn_m / gemm_nt_m only swap which packer builds each stream,
+    // so against a host-side pre-transpose of the same operand they
+    // must reproduce gemm_m bit for bit — for every expanding pair.
+    let (m, n, k) = (8, 12, 16);
+    let transpose = |x: &[f64], rows: usize, cols: usize| -> Vec<f64> {
+        let mut out = vec![0f64; x.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = x[r * cols + c];
+            }
+        }
+        out
+    };
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let mut rng = Rng::new(123);
+    let a_raw: Vec<f64> = (0..k * m).map(|_| rng.gaussian() * 0.3).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.3).collect();
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.3).collect();
+    let b_raw: Vec<f64> = (0..n * k).map(|_| rng.gaussian() * 0.3).collect();
+    for (src, dst) in expanding_pairs() {
+        let rm = RoundingMode::Rne;
+        let tn = gemm_expanding(src, dst, true, false, m, n, k, &a_raw, &b, rm).expect("pair");
+        let want = gemm_expanding(src, dst, false, false, m, n, k, &transpose(&a_raw, k, m), &b, rm)
+            .expect("pair");
+        assert_eq!(bits(&tn), bits(&want), "{}→{} A^T·B", src.name(), dst.name());
+        let nt = gemm_expanding(src, dst, false, true, m, n, k, &a, &b_raw, rm).expect("pair");
+        let want = gemm_expanding(src, dst, false, false, m, n, k, &a, &transpose(&b_raw, n, k), rm)
+            .expect("pair");
+        assert_eq!(bits(&nt), bits(&want), "{}→{} A·B^T", src.name(), dst.name());
+    }
+    // Double transpose and non-expanding pairs stay unsupported here.
+    assert!(gemm_expanding(crate::formats::FP8, crate::formats::FP16, true, true, m, n, k, &a, &b, RoundingMode::Rne).is_none());
+    assert!(gemm_expanding(crate::formats::FP32, crate::formats::FP32, true, false, m, n, k, &a_raw, &b, RoundingMode::Rne).is_none());
+}

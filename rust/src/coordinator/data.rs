@@ -1,114 +1,7 @@
-//! Synthetic three-arm spiral dataset (the classic toy classification
-//! workload) with the same embedding as `python/compile/model.py`.
+//! Re-export shim: [`SpiralDataset`] moved to [`crate::nn::data`] when
+//! the native training subsystem generalized the dataset layer (it owns
+//! the padded [`crate::nn::data::Dataset`] form too). This path stays so
+//! the PJRT coordinator and downstream imports keep compiling; new code
+//! should import from `nn::data`.
 
-use crate::runtime::Tensor;
-use crate::util::rng::Rng;
-
-/// Spiral points with labels, pre-embedded into the model's input space.
-pub struct SpiralDataset {
-    /// Embedded features, row-major (n × FEATURES).
-    pub x: Vec<[f32; 4]>,
-    /// Class labels (0..3).
-    pub y: Vec<u8>,
-}
-
-impl SpiralDataset {
-    /// Generate `n_per_class` points per arm (3 arms).
-    pub fn generate(n_per_class: usize, seed: u64) -> Self {
-        let mut rng = Rng::new(seed);
-        let mut x = Vec::with_capacity(3 * n_per_class);
-        let mut y = Vec::with_capacity(3 * n_per_class);
-        for class in 0..3u8 {
-            for i in 0..n_per_class {
-                let t = 0.1 + 0.9 * (i as f64 / (n_per_class - 1).max(1) as f64);
-                let theta = t * 4.5 + class as f64 * 2.1 + rng.gaussian() * 0.1;
-                let r = t;
-                let (px, py) = (r * theta.cos(), r * theta.sin());
-                x.push(Self::embed(px as f32, py as f32));
-                y.push(class);
-            }
-        }
-        // Shuffle (deterministic).
-        for i in (1..x.len()).rev() {
-            let j = rng.below(i as u64 + 1) as usize;
-            x.swap(i, j);
-            y.swap(i, j);
-        }
-        SpiralDataset { x, y }
-    }
-
-    /// The (x, y, r², 1) embedding (matches `model.embed`).
-    pub fn embed(px: f32, py: f32) -> [f32; 4] {
-        [px, py, px * px + py * py, 1.0]
-    }
-
-    /// Number of samples.
-    pub fn len(&self) -> usize {
-        self.x.len()
-    }
-
-    /// True if empty.
-    pub fn is_empty(&self) -> bool {
-        self.x.is_empty()
-    }
-
-    /// Random batch as (features, one-hot labels) tensors.
-    pub fn batch(&self, size: usize, rng: &mut Rng) -> (Tensor, Tensor) {
-        let mut xs = Vec::with_capacity(size * 4);
-        let mut ys = vec![0f32; size * 4];
-        for b in 0..size {
-            let i = rng.below(self.x.len() as u64) as usize;
-            xs.extend_from_slice(&self.x[i]);
-            ys[b * 4 + self.y[i] as usize] = 1.0;
-        }
-        (Tensor::new(xs, &[size, 4]), Tensor::new(ys, &[size, 4]))
-    }
-
-    /// Sequential batch starting at `start` (for evaluation sweeps);
-    /// returns raw labels.
-    pub fn ordered_batch(&self, start: usize, size: usize) -> (Tensor, Vec<u8>) {
-        let mut xs = Vec::with_capacity(size * 4);
-        let mut labels = Vec::with_capacity(size);
-        for b in 0..size {
-            let i = (start + b) % self.x.len();
-            xs.extend_from_slice(&self.x[i]);
-            labels.push(self.y[i]);
-        }
-        (Tensor::new(xs, &[size, 4]), labels)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn generates_balanced_classes() {
-        let d = SpiralDataset::generate(50, 1);
-        assert_eq!(d.len(), 150);
-        for c in 0..3u8 {
-            assert_eq!(d.y.iter().filter(|&&y| y == c).count(), 50);
-        }
-    }
-
-    #[test]
-    fn batches_have_one_hot_labels() {
-        let d = SpiralDataset::generate(50, 2);
-        let mut rng = Rng::new(3);
-        let (x, y) = d.batch(16, &mut rng);
-        assert_eq!(x.shape, vec![16, 4]);
-        assert_eq!(y.shape, vec![16, 4]);
-        for b in 0..16 {
-            let row = &y.data[b * 4..(b + 1) * 4];
-            assert_eq!(row.iter().sum::<f32>(), 1.0);
-        }
-    }
-
-    #[test]
-    fn deterministic_generation() {
-        let a = SpiralDataset::generate(20, 9);
-        let b = SpiralDataset::generate(20, 9);
-        assert_eq!(a.x, b.x);
-        assert_eq!(a.y, b.y);
-    }
-}
+pub use crate::nn::data::SpiralDataset;

@@ -1,4 +1,4 @@
-//! L3 coordinator: the end-to-end low-precision-training driver.
+//! L3 coordinator: the **artifact-backed** (PJRT) training driver.
 //!
 //! The paper's contribution lives at the ISA/FPU level, so the
 //! coordinator is deliberately thin (per the architecture): it owns the
@@ -6,6 +6,12 @@
 //! drives the AOT-compiled HFP8 training artifacts through the PJRT
 //! runtime. Python authored the compute graph once, at build time; all
 //! of training runs from this Rust loop.
+//!
+//! Offline builds have no PJRT backend, so this engine is the
+//! *fallback* (`repro train --engine pjrt`); the default training path
+//! is the native subsystem ([`crate::nn`], via
+//! [`crate::api::Session::train`]), which needs no artifacts and routes
+//! every matmul through the minifloat batch engine.
 
 pub mod data;
 

@@ -65,8 +65,13 @@
 //!   harness (Table IV).
 //! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) from Rust.
-//! * [`coordinator`] — the L3 training driver: batching, step loop,
-//!   metrics for the end-to-end low-precision-training workload.
+//! * [`coordinator`] — the artifact-backed (PJRT) training driver:
+//!   batching, step loop, metrics.
+//! * [`nn`] — the **native** mixed-precision training subsystem:
+//!   layers with hand-written backward passes, a reverse-mode tape
+//!   over typed minifloat activations, FP32-master optimizers and
+//!   dynamic loss scaling — every matmul a validated [`api::GemmPlan`]
+//!   on the ExSdotp batch engine ([`api::Session::train`]).
 //!
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
 //! reproduced tables and figures.
@@ -84,6 +89,7 @@ pub mod formats;
 pub mod fpu;
 pub mod isa;
 pub mod kernels;
+pub mod nn;
 pub mod report;
 pub mod runtime;
 pub mod softfloat;
@@ -96,15 +102,19 @@ pub use softfloat::{RoundingMode, SoftFloat};
 
 /// One-line import for the typed API:
 /// `use minifloat_nn::prelude::*;` brings in the session/tensor/plan
-/// types, the six paper formats, and the execution/rounding enums.
+/// types (including the native-training plan), the six paper formats,
+/// and the execution/rounding enums.
 pub mod prelude {
     pub use crate::accuracy::AccuracyPoint;
     pub use crate::api::{
         AccumulatePlan, AccumulatePlanBuilder, GemmPlan, GemmPlanBuilder, Layout, MfTensor,
-        MfTensorView, RunReport, Session, SessionBuilder,
+        MfTensorView, RunReport, Session, SessionBuilder, TrainPlan, TrainPlanBuilder,
     };
     pub use crate::formats::{FpFormat, FP16, FP16ALT, FP32, FP64, FP8, FP8ALT};
     pub use crate::kernels::gemm::{ExecMode, GemmKind};
+    pub use crate::nn::{
+        Activation, DataSpec, NativeTrainer, OptimSpec, PrecisionPolicy, StepRecord,
+    };
     pub use crate::softfloat::RoundingMode;
     pub use crate::util::error::{Error, Result};
 }

@@ -5,6 +5,7 @@
 
 use minifloat_nn::api::{self, Session};
 use minifloat_nn::coordinator::Precision;
+use minifloat_nn::nn::{Activation, DataSpec, OptimSpec};
 use minifloat_nn::report;
 use minifloat_nn::util::cli::Args;
 use minifloat_nn::util::error::Result;
@@ -30,9 +31,14 @@ Workloads:
   gemm              run one GEMM      [--size 128x128] [--kernel fp64|fp32|fp16|fp16to32|fp8]
                     [--mode functional|cycle]  (functional = batch engine, bit-identical C)
 
-End-to-end (three-layer stack, artifacts required — `make artifacts`):
-  train             train the HFP8 MLP via PJRT   [--steps N] [--precision hfp8|fp32]
-                    [--seed S] [--artifacts DIR] [--quiet]
+End-to-end training:
+  train             mixed-precision training on the minifloat batch engine
+                    [--engine native|pjrt]  (default native: offline, every matmul a GemmPlan)
+                    [--precision fp32|fp16|fp16alt|fp8|hfp8]  (default hfp8)
+                    [--steps N] [--dataset spiral|rings] [--hidden H] [--batch B]
+                    [--optim adam|sgd] [--lr X] [--act relu|gelu] [--seed S] [--quiet]
+                    (--engine pjrt drives the AOT artifacts instead; needs `make artifacts`
+                     and a PJRT-enabled build; [--artifacts DIR], hfp8|fp32 only)
 
 Options:
   --seed S          RNG seed for simulated workloads (default 42)
@@ -112,18 +118,72 @@ fn main() -> Result<()> {
             print!("{}", report::table4_text(seed));
         }
         Some("train") => {
-            let steps: usize = args.get("steps", 300);
-            let dir = args.get_str("artifacts", "artifacts");
-            let precision = match args.get_str("precision", "hfp8").as_str() {
-                "fp32" => Precision::Fp32,
-                _ => Precision::Hfp8,
-            };
             let log_every = if args.has_flag("quiet") { 0 } else { 20 };
-            println!("training ({precision:?}) for {steps} steps on the spiral task...");
-            let mut tr = Session::builder().seed(seed).build().trainer(&dir, precision)?;
-            let final_loss = tr.train(steps, log_every)?;
-            let acc = tr.accuracy()?;
-            println!("final loss {final_loss:.4}   accuracy {:.1}%", acc * 100.0);
+            match api::parse_engine(&args.get_str("engine", "native"))? {
+                api::TrainEngine::Native => {
+                    let steps: usize = args.get("steps", 500);
+                    let policy = api::parse_policy(&args.get_str("precision", "hfp8"))?;
+                    let lr: f64 = args.get("lr", 4e-3);
+                    let optim = match args.get_str("optim", "adam").as_str() {
+                        "adam" => OptimSpec::adam(lr),
+                        "sgd" => OptimSpec::sgd(lr),
+                        other => {
+                            return Err(minifloat_nn::util::error::Error::msg(format!(
+                                "--optim must be adam|sgd, got '{other}'"
+                            )))
+                        }
+                    };
+                    let session = Session::builder().seed(seed).build();
+                    let mut tr = session
+                        .train()
+                        .policy(policy)
+                        .dataset(DataSpec::parse(&args.get_str("dataset", "spiral"))?)
+                        .hidden(args.get("hidden", 32))
+                        .batch(args.get("batch", 64))
+                        .activation(Activation::parse(&args.get_str("act", "relu"))?)
+                        .optimizer(optim)
+                        .build()?
+                        .trainer()?;
+                    println!(
+                        "native training: policy {} ({} fwd / {} bwd, {} acc), {steps} steps",
+                        policy.name,
+                        policy.fwd.name(),
+                        policy.bwd.name(),
+                        policy.acc.name()
+                    );
+                    let final_loss = tr.train(steps, log_every)?;
+                    let acc = tr.accuracy()?;
+                    print!("{}", report::train_curve_text(&tr.history));
+                    println!(
+                        "final loss {final_loss:.4}   accuracy {:.1}%   ({} GemmPlan runs, \
+                         {:.0}% packed fast path, {} skipped steps, loss scale {})",
+                        acc * 100.0,
+                        tr.gemm_calls(),
+                        100.0 * tr.packed_runs() as f64 / tr.gemm_calls().max(1) as f64,
+                        tr.skipped_steps(),
+                        tr.loss_scale()
+                    );
+                }
+                api::TrainEngine::Pjrt => {
+                    let steps: usize = args.get("steps", 300);
+                    let dir = args.get_str("artifacts", "artifacts");
+                    let precision = match args.get_str("precision", "hfp8").as_str() {
+                        "fp32" => Precision::Fp32,
+                        "hfp8" => Precision::Hfp8,
+                        other => {
+                            return Err(minifloat_nn::util::error::Error::msg(format!(
+                                "--engine pjrt compiles artifacts for hfp8|fp32 only, got \
+                                 '{other}' (the native engine supports every policy)"
+                            )))
+                        }
+                    };
+                    println!("training ({precision:?}) for {steps} steps on the spiral task...");
+                    let mut tr = Session::builder().seed(seed).build().trainer(&dir, precision)?;
+                    let final_loss = tr.train(steps, log_every)?;
+                    let acc = tr.accuracy()?;
+                    println!("final loss {final_loss:.4}   accuracy {:.1}%", acc * 100.0);
+                }
+            }
         }
         _ => print!("{HELP}"),
     }

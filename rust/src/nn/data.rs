@@ -1,0 +1,361 @@
+//! Synthetic classification datasets for the training subsystem.
+//!
+//! [`SpiralDataset`] (moved here from `coordinator::data`, which
+//! re-exports it for the PJRT path) keeps its original 4-wide embedding
+//! and `runtime::Tensor` batch API. [`Dataset`] is the native trainer's
+//! generalized form: features are padded to [`IN_DIM`] — a multiple of
+//! the widest SIMD lane count (8×FP8 per 64-bit word), so every batch
+//! packs cleanly into the GEMM streams — and batches come back as plain
+//! host slices plus raw labels.
+
+use crate::runtime::Tensor;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::{bail, ensure};
+
+/// Padded feature width: 4 real features + 4 zeros, sized so the input
+/// dimension divides by every policy's lane count (8 for FP8/FP8alt).
+pub const IN_DIM: usize = 8;
+/// Padded logit width (same lane-alignment argument; unused tail
+/// classes never appear as labels).
+pub const OUT_DIM: usize = 8;
+
+/// Spiral points with labels, pre-embedded into the model's input space.
+pub struct SpiralDataset {
+    /// Embedded features, row-major (n × FEATURES).
+    pub x: Vec<[f32; 4]>,
+    /// Class labels (0..3).
+    pub y: Vec<u8>,
+}
+
+impl SpiralDataset {
+    /// Generate `n_per_class` points per arm (3 arms).
+    pub fn generate(n_per_class: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(3 * n_per_class);
+        let mut y = Vec::with_capacity(3 * n_per_class);
+        for class in 0..3u8 {
+            for i in 0..n_per_class {
+                let t = 0.1 + 0.9 * (i as f64 / (n_per_class - 1).max(1) as f64);
+                let theta = t * 4.5 + class as f64 * 2.1 + rng.gaussian() * 0.1;
+                let r = t;
+                let (px, py) = (r * theta.cos(), r * theta.sin());
+                x.push(Self::embed(px as f32, py as f32));
+                y.push(class);
+            }
+        }
+        // Shuffle (deterministic).
+        for i in (1..x.len()).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            x.swap(i, j);
+            y.swap(i, j);
+        }
+        SpiralDataset { x, y }
+    }
+
+    /// The (x, y, r², 1) embedding (matches `model.embed`).
+    pub fn embed(px: f32, py: f32) -> [f32; 4] {
+        [px, py, px * px + py * py, 1.0]
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    /// Random batch as (features, one-hot labels) tensors.
+    pub fn batch(&self, size: usize, rng: &mut Rng) -> (Tensor, Tensor) {
+        let mut xs = Vec::with_capacity(size * 4);
+        let mut ys = vec![0f32; size * 4];
+        for b in 0..size {
+            let i = rng.below(self.x.len() as u64) as usize;
+            xs.extend_from_slice(&self.x[i]);
+            ys[b * 4 + self.y[i] as usize] = 1.0;
+        }
+        (Tensor::new(xs, &[size, 4]), Tensor::new(ys, &[size, 4]))
+    }
+
+    /// Sequential batch starting at `start` (for evaluation sweeps);
+    /// returns raw labels.
+    pub fn ordered_batch(&self, start: usize, size: usize) -> (Tensor, Vec<u8>) {
+        let mut xs = Vec::with_capacity(size * 4);
+        let mut labels = Vec::with_capacity(size);
+        for b in 0..size {
+            let i = (start + b) % self.x.len();
+            xs.extend_from_slice(&self.x[i]);
+            labels.push(self.y[i]);
+        }
+        (Tensor::new(xs, &[size, 4]), labels)
+    }
+}
+
+// ----------------------------------------------------- native datasets
+
+/// Which synthetic task a [`crate::api::TrainPlan`] trains on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataSpec {
+    /// The three-arm spiral (the PJRT workload's task).
+    Spiral {
+        /// Points per arm.
+        n_per_class: usize,
+    },
+    /// Two concentric rings — a second scenario with a different
+    /// decision-boundary shape (radial instead of angular).
+    Rings {
+        /// Points per ring.
+        n_per_class: usize,
+    },
+}
+
+impl DataSpec {
+    /// Parse a CLI-style dataset name at the default size.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "spiral" => Ok(DataSpec::Spiral { n_per_class: 300 }),
+            "rings" => Ok(DataSpec::Rings { n_per_class: 300 }),
+            other => bail!("--dataset must be spiral|rings, got '{other}'"),
+        }
+    }
+
+    /// Samples the spec will generate (known without materializing).
+    pub fn len(&self) -> usize {
+        match *self {
+            DataSpec::Spiral { n_per_class } => 3 * n_per_class,
+            DataSpec::Rings { n_per_class } => 2 * n_per_class,
+        }
+    }
+
+    /// True when the spec would generate nothing.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Logical class count of the generated dataset.
+    pub fn classes(&self) -> usize {
+        match *self {
+            DataSpec::Spiral { .. } => 3,
+            DataSpec::Rings { .. } => 2,
+        }
+    }
+
+    /// Materialize the dataset.
+    pub fn generate(&self, seed: u64) -> Dataset {
+        match *self {
+            DataSpec::Spiral { n_per_class } => Dataset::spiral(n_per_class, seed),
+            DataSpec::Rings { n_per_class } => Dataset::rings(n_per_class, seed),
+        }
+    }
+}
+
+/// A lane-padded classification dataset for the native trainer.
+pub struct Dataset {
+    /// Features, row-major `len()×IN_DIM` (4 real features + zero pad).
+    pub x: Vec<f64>,
+    /// Labels, `< classes`.
+    pub y: Vec<u8>,
+    /// Logical class count.
+    pub classes: usize,
+}
+
+fn pad_features(px: f64, py: f64, out: &mut Vec<f64>) {
+    let e = SpiralDataset::embed(px as f32, py as f32);
+    out.extend(e.iter().map(|&v| v as f64));
+    out.extend(std::iter::repeat(0.0).take(IN_DIM - 4));
+}
+
+impl Dataset {
+    /// The spiral task, padded for the native trainer — same generator
+    /// (and therefore the same points, bit-for-bit) as
+    /// [`SpiralDataset::generate`].
+    pub fn spiral(n_per_class: usize, seed: u64) -> Dataset {
+        let s = SpiralDataset::generate(n_per_class, seed);
+        let mut x = Vec::with_capacity(s.len() * IN_DIM);
+        for row in &s.x {
+            x.extend(row.iter().map(|&v| v as f64));
+            x.extend(std::iter::repeat(0.0).take(IN_DIM - 4));
+        }
+        Dataset { x, y: s.y, classes: 3 }
+    }
+
+    /// Two concentric rings (classes 0 and 1) with radial noise,
+    /// embedded and padded like the spiral. The r² embedding feature
+    /// makes this nearly linearly separable — a fast-converging
+    /// contrast scenario to the spiral.
+    pub fn rings(n_per_class: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(2 * n_per_class * IN_DIM);
+        let mut y = Vec::with_capacity(2 * n_per_class);
+        for class in 0..2u8 {
+            let r0 = 0.35 + 0.5 * class as f64;
+            for _ in 0..n_per_class {
+                let theta = rng.range(0.0, 2.0 * std::f64::consts::PI);
+                let r = r0 + rng.gaussian() * 0.05;
+                pad_features(r * theta.cos(), r * theta.sin(), &mut x);
+                y.push(class);
+            }
+        }
+        // Shuffle (deterministic), mirroring the spiral generator.
+        let n = y.len();
+        for i in (1..n).rev() {
+            let j = rng.below(i as u64 + 1) as usize;
+            for e in 0..IN_DIM {
+                x.swap(i * IN_DIM + e, j * IN_DIM + e);
+            }
+            y.swap(i, j);
+        }
+        Dataset { x, y, classes: 2 }
+    }
+
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Random batch: `size×IN_DIM` features + raw labels.
+    pub fn batch(&self, size: usize, rng: &mut Rng) -> (Vec<f64>, Vec<u8>) {
+        let mut xs = Vec::with_capacity(size * IN_DIM);
+        let mut labels = Vec::with_capacity(size);
+        for _ in 0..size {
+            let i = rng.below(self.len() as u64) as usize;
+            xs.extend_from_slice(&self.x[i * IN_DIM..(i + 1) * IN_DIM]);
+            labels.push(self.y[i]);
+        }
+        (xs, labels)
+    }
+
+    /// Sequential batch starting at `start` (evaluation sweeps).
+    pub fn ordered_batch(&self, start: usize, size: usize) -> (Vec<f64>, Vec<u8>) {
+        let mut xs = Vec::with_capacity(size * IN_DIM);
+        let mut labels = Vec::with_capacity(size);
+        for b in 0..size {
+            let i = (start + b) % self.len();
+            xs.extend_from_slice(&self.x[i * IN_DIM..(i + 1) * IN_DIM]);
+            labels.push(self.y[i]);
+        }
+        (xs, labels)
+    }
+
+    /// Sanity-check invariants (trainer-build time).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.is_empty(), "dataset is empty");
+        ensure!(self.x.len() == self.len() * IN_DIM, "feature matrix is not len x IN_DIM");
+        ensure!(self.classes >= 2 && self.classes <= OUT_DIM, "classes must be in 2..={OUT_DIM}");
+        ensure!(
+            self.y.iter().all(|&l| (l as usize) < self.classes),
+            "a label exceeds the class count"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_balanced_classes() {
+        let d = SpiralDataset::generate(50, 1);
+        assert_eq!(d.len(), 150);
+        for c in 0..3u8 {
+            assert_eq!(d.y.iter().filter(|&&y| y == c).count(), 50);
+        }
+    }
+
+    #[test]
+    fn batches_have_one_hot_labels() {
+        let d = SpiralDataset::generate(50, 2);
+        let mut rng = Rng::new(3);
+        let (x, y) = d.batch(16, &mut rng);
+        assert_eq!(x.shape, vec![16, 4]);
+        assert_eq!(y.shape, vec![16, 4]);
+        for b in 0..16 {
+            let row = &y.data[b * 4..(b + 1) * 4];
+            assert_eq!(row.iter().sum::<f32>(), 1.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = SpiralDataset::generate(20, 9);
+        let b = SpiralDataset::generate(20, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn deterministic_batches_same_seed() {
+        // Same generation seed + same batch RNG seed ⇒ identical batch
+        // *sequences*, for both dataset APIs (the regression the native
+        // trainer's reproducibility rests on).
+        let (a, b) = (SpiralDataset::generate(40, 7), SpiralDataset::generate(40, 7));
+        let (mut ra, mut rb) = (Rng::new(11), Rng::new(11));
+        for _ in 0..5 {
+            let (xa, ya) = a.batch(16, &mut ra);
+            let (xb, yb) = b.batch(16, &mut rb);
+            assert_eq!(xa.data, xb.data);
+            assert_eq!(ya.data, yb.data);
+        }
+        let (da, db) = (Dataset::spiral(40, 7), Dataset::spiral(40, 7));
+        let (mut ra, mut rb) = (Rng::new(11), Rng::new(11));
+        for _ in 0..5 {
+            let (xa, la) = da.batch(16, &mut ra);
+            let (xb, lb) = db.batch(16, &mut rb);
+            assert_eq!(xa, xb);
+            assert_eq!(la, lb);
+        }
+    }
+
+    #[test]
+    fn padded_dataset_mirrors_spiral_points() {
+        let s = SpiralDataset::generate(30, 4);
+        let d = Dataset::spiral(30, 4);
+        d.validate().unwrap();
+        assert_eq!(d.len(), s.len());
+        assert_eq!(d.y, s.y);
+        for i in 0..d.len() {
+            let row = &d.x[i * IN_DIM..(i + 1) * IN_DIM];
+            for e in 0..4 {
+                assert_eq!(row[e], s.x[i][e] as f64);
+            }
+            assert!(row[4..].iter().all(|&v| v == 0.0), "pad lanes must be zero");
+        }
+    }
+
+    #[test]
+    fn rings_are_balanced_and_valid() {
+        let d = Dataset::rings(64, 5);
+        d.validate().unwrap();
+        assert_eq!(d.len(), 128);
+        assert_eq!(d.classes, 2);
+        for c in 0..2u8 {
+            assert_eq!(d.y.iter().filter(|&&y| y == c).count(), 64);
+        }
+        // Mean squared radius separates the classes by construction
+        // (0.35² vs 0.85², noise σ = 0.05).
+        let (mut inner, mut outer, mut ni, mut no) = (0f64, 0f64, 0usize, 0usize);
+        for i in 0..d.len() {
+            let r2 = d.x[i * IN_DIM + 2];
+            match d.y[i] {
+                0 => {
+                    inner += r2;
+                    ni += 1;
+                }
+                _ => {
+                    outer += r2;
+                    no += 1;
+                }
+            }
+        }
+        assert!(inner / ni as f64 + 0.2 < outer / no as f64, "ring radii are not separated");
+    }
+}

@@ -1,0 +1,68 @@
+//! The subsystem's single matmul door: every forward and backward GEMM
+//! is built as a validated [`crate::api::GemmPlan`] and executed here —
+//! there is no other multiply path in `nn`, which is what makes "no f64
+//! shortcut on the compute path" an invariant rather than a convention.
+//! The context counts plan executions and packed-fast-path hits so
+//! tests (and the trainer's summary) can *assert* the routing instead
+//! of trusting it.
+
+use crate::api::{MfTensor, Session};
+use crate::formats::FpFormat;
+use crate::util::error::Result;
+
+/// GEMM router + instrumentation for one trainer (or one test).
+pub struct GemmCtx<'s> {
+    session: &'s Session,
+    /// Accumulation / output format for every plan built here.
+    pub acc: FpFormat,
+    /// Plans executed.
+    pub calls: u64,
+    /// Plans whose operands fed the batch engine packed (zero
+    /// decode/re-pack — `RunReport::packed_input`).
+    pub packed: u64,
+}
+
+impl<'s> GemmCtx<'s> {
+    /// A context accumulating into `acc`.
+    pub fn new(session: &'s Session, acc: FpFormat) -> Self {
+        GemmCtx { session, acc, calls: 0, packed: 0 }
+    }
+
+    /// The session plans are built from.
+    pub fn session(&self) -> &'s Session {
+        self.session
+    }
+
+    /// `C = op(A)·op(B)` through a validated [`crate::api::GemmPlan`]: `op` is a
+    /// transpose when the corresponding flag is set, and `(m, n, k)` are
+    /// the *logical* product dimensions (output `m×n`, inner `k`).
+    /// Operands must already be [`MfTensor`]s in `src` — the caller
+    /// chooses layouts; matching the kernel streams keeps the run on
+    /// the packed fast path. Returns C decoded to row-major f64.
+    pub fn matmul(
+        &mut self,
+        src: FpFormat,
+        a: &MfTensor,
+        b: &MfTensor,
+        m: usize,
+        n: usize,
+        k: usize,
+        ta: bool,
+        tb: bool,
+    ) -> Result<Vec<f64>> {
+        let mut builder = self.session.gemm().src(src).acc(self.acc);
+        if ta {
+            builder = builder.transpose_a();
+        }
+        if tb {
+            builder = builder.transpose_b();
+        }
+        let plan = builder.dims(m, n, k)?;
+        let run = plan.run(a, b)?;
+        self.calls += 1;
+        if run.packed_input {
+            self.packed += 1;
+        }
+        Ok(run.c_f64())
+    }
+}

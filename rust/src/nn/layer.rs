@@ -1,0 +1,426 @@
+//! Layers with hand-written forward/backward passes.
+//!
+//! Every multiply in [`Linear`] — the forward product `X·W`, the weight
+//! gradient `Xᵀ·G`, the input gradient `G·Wᵀ` — is a validated
+//! [`crate::api::GemmPlan`] executed through [`GemmCtx`], operands
+//! quantized to the policy's minifloat formats and accumulated in the
+//! wider ExSdotp destination format. Elementwise work (bias add,
+//! activation functions, softmax) runs in host precision but is
+//! re-gridded to the accumulation format where the hardware's epilogue
+//! would round, so inter-layer activations always sit on the `acc`
+//! grid.
+//!
+//! Gradients flowing through `backward` are **loss-scaled** (see
+//! [`crate::nn::policy::LossScaler`]); layers store them scaled and the
+//! trainer unscales once before the optimizer step.
+
+use crate::api::{Layout, Session};
+use crate::ensure;
+use crate::formats::FpFormat;
+use crate::nn::engine::GemmCtx;
+use crate::nn::policy::PrecisionPolicy;
+use crate::nn::tape::Tape;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+// -------------------------------------------------------------- linear
+
+/// A fully-connected layer: `Y = X·W + b` with FP32 master parameters
+/// and minifloat compute.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    /// Input width (must divide by the policy's widest lane count).
+    pub in_dim: usize,
+    /// Output width (same divisibility requirement).
+    pub out_dim: usize,
+    /// Master weights, `in_dim×out_dim` row-major, FP32.
+    pub w: Vec<f32>,
+    /// Master bias, FP32.
+    pub b: Vec<f32>,
+    /// Weight gradient of the last backward pass (loss-scaled).
+    pub gw: Vec<f32>,
+    /// Bias gradient of the last backward pass (loss-scaled).
+    pub gb: Vec<f32>,
+}
+
+impl Linear {
+    /// He-style initialization (matches `coordinator::Params::init`).
+    pub fn init(in_dim: usize, out_dim: usize, rng: &mut Rng) -> Self {
+        let scale = (2.0 / in_dim as f64).sqrt();
+        Linear {
+            in_dim,
+            out_dim,
+            w: (0..in_dim * out_dim).map(|_| (rng.gaussian() * scale) as f32).collect(),
+            b: vec![0.0; out_dim],
+            gw: vec![0.0; in_dim * out_dim],
+            gb: vec![0.0; out_dim],
+        }
+    }
+
+    fn w_f64(&self) -> Vec<f64> {
+        self.w.iter().map(|&v| v as f64).collect()
+    }
+
+    /// Forward: quantize `x` (`batch×in_dim` row-major) and the master
+    /// weights to the policy's forward format, run the plan, add the
+    /// bias, round the result onto the accumulation grid. Saves the
+    /// quantized input tensor when a tape is supplied.
+    pub fn forward(
+        &self,
+        ctx: &mut GemmCtx,
+        policy: &PrecisionPolicy,
+        x: &[f64],
+        batch: usize,
+        tape: Option<&mut Tape>,
+    ) -> Result<Vec<f64>> {
+        ensure!(
+            x.len() == batch * self.in_dim,
+            "Linear forward: input must be {batch}x{} = {} values, got {}",
+            self.in_dim,
+            batch * self.in_dim,
+            x.len()
+        );
+        let session = ctx.session();
+        // A row-major, B column-major: the layouts the kernel streams,
+        // so the plan's zero-repack route runs.
+        let xt = session.tensor(x, batch, self.in_dim, policy.fwd)?;
+        let w64 = self.w_f64();
+        let wt = session.tensor_with_layout(&w64, self.in_dim, self.out_dim, policy.fwd, Layout::ColMajor)?;
+        let mut y = ctx.matmul(policy.fwd, &xt, &wt, batch, self.out_dim, self.in_dim, false, false)?;
+        for bi in 0..batch {
+            for j in 0..self.out_dim {
+                y[bi * self.out_dim + j] += self.b[j] as f64;
+            }
+        }
+        // Epilogue rounding: the bias add happens in the accumulation
+        // precision on hardware, so re-grid the result there.
+        let y = ctx.session().tensor(&y, batch, self.out_dim, policy.acc)?.to_f64();
+        if let Some(t) = tape {
+            t.push_mf(xt);
+        }
+        Ok(y)
+    }
+
+    /// Backward: consumes the output gradient `g` (`batch×out_dim`,
+    /// loss-scaled) and the saved input activation, produces the input
+    /// gradient, and stores the (still scaled) parameter gradients in
+    /// [`Linear::gw`] / [`Linear::gb`].
+    ///
+    /// Both GEMMs follow Wang et al.'s recipe — operands cast to the
+    /// (range-oriented) backward format, accumulated wide:
+    /// `dW = Xᵀ·G` streams the saved activation re-cast from the
+    /// forward format (the FP8-training memory story: nothing wider was
+    /// kept), `dX = G·Wᵀ` streams the master weights cast down.
+    pub fn backward(
+        &mut self,
+        ctx: &mut GemmCtx,
+        policy: &PrecisionPolicy,
+        g: &[f64],
+        batch: usize,
+        tape: &mut Tape,
+    ) -> Result<Vec<f64>> {
+        ensure!(
+            g.len() == batch * self.out_dim,
+            "Linear backward: gradient must be {batch}x{} = {} values, got {}",
+            self.out_dim,
+            batch * self.out_dim,
+            g.len()
+        );
+        let session = ctx.session();
+        let rm = session.rounding();
+        let x_saved = tape.pop_mf()?;
+        ensure!(
+            x_saved.shape() == (batch, self.in_dim),
+            "Linear backward: saved activation is {}x{}, expected {batch}x{}",
+            x_saved.rows(),
+            x_saved.cols(),
+            self.in_dim
+        );
+        // dW = Xᵀ·G  (in×out, inner batch): both streams pack *down*
+        // the batch dimension, i.e. column-major storage.
+        let x_bwd = if x_saved.fmt() == policy.bwd { x_saved } else { x_saved.cast(policy.bwd, rm)? };
+        let x_col = x_bwd.with_layout(Layout::ColMajor)?;
+        let g_col = session.tensor_with_layout(g, batch, self.out_dim, policy.bwd, Layout::ColMajor)?;
+        let dw = ctx.matmul(policy.bwd, &x_col, &g_col, self.in_dim, self.out_dim, batch, true, false)?;
+        // dX = G·Wᵀ  (batch×in, inner out): both streams pack along
+        // rows — G's rows and W's rows (columns of Wᵀ).
+        let g_row = ctx.session().tensor(g, batch, self.out_dim, policy.bwd)?;
+        let w64 = self.w_f64();
+        let w_row = ctx.session().tensor(&w64, self.in_dim, self.out_dim, policy.bwd)?;
+        let dx = ctx.matmul(policy.bwd, &g_row, &w_row, batch, self.in_dim, self.out_dim, false, true)?;
+        for (o, v) in self.gw.iter_mut().zip(&dw) {
+            *o = *v as f32;
+        }
+        // Bias gradient: a pure reduction over the batch (elementwise,
+        // not a matmul) in host precision.
+        for j in 0..self.out_dim {
+            let mut s = 0f64;
+            for bi in 0..batch {
+                s += g[bi * self.out_dim + j];
+            }
+            self.gb[j] = s as f32;
+        }
+        Ok(dx)
+    }
+}
+
+// --------------------------------------------------------- activations
+
+/// Elementwise nonlinearity between linear layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    /// `max(0, x)`.
+    Relu,
+    /// GELU (tanh approximation).
+    Gelu,
+}
+
+const SQRT_2_OVER_PI: f64 = 0.797_884_560_802_865_4;
+const GELU_C: f64 = 0.044_715;
+
+fn gelu(x: f64) -> f64 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + GELU_C * x * x * x)).tanh())
+}
+
+fn gelu_prime(x: f64) -> f64 {
+    let u = SQRT_2_OVER_PI * (x + GELU_C * x * x * x);
+    let t = u.tanh();
+    let du = SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+impl Activation {
+    /// Parse a CLI-style name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "relu" => Ok(Activation::Relu),
+            "gelu" => Ok(Activation::Gelu),
+            other => crate::bail!("--act must be relu|gelu, got '{other}'"),
+        }
+    }
+
+    /// Forward over a `rows×cols` host matrix. The pre-activation is
+    /// saved on the tape quantized to `acc` — exact, because linear
+    /// epilogues already rounded it onto that grid.
+    pub fn forward(
+        &self,
+        session: &Session,
+        acc: FpFormat,
+        x: &[f64],
+        rows: usize,
+        cols: usize,
+        tape: Option<&mut Tape>,
+    ) -> Result<Vec<f64>> {
+        ensure!(x.len() == rows * cols, "activation input must be {rows}x{cols}");
+        let y = match self {
+            Activation::Relu => x.iter().map(|&v| v.max(0.0)).collect(),
+            Activation::Gelu => x.iter().map(|&v| gelu(v)).collect(),
+        };
+        if let Some(t) = tape {
+            t.push_mf(session.tensor(x, rows, cols, acc)?);
+        }
+        Ok(y)
+    }
+
+    /// Backward: `g ⊙ f'(x)` from the saved pre-activation.
+    pub fn backward(&self, g: &[f64], tape: &mut Tape) -> Result<Vec<f64>> {
+        let x = tape.pop_mf()?.to_f64();
+        ensure!(
+            x.len() == g.len(),
+            "activation backward: gradient has {} values but the saved input has {}",
+            g.len(),
+            x.len()
+        );
+        Ok(match self {
+            Activation::Relu => x.iter().zip(g).map(|(&xv, &gv)| if xv > 0.0 { gv } else { 0.0 }).collect(),
+            Activation::Gelu => x.iter().zip(g).map(|(&xv, &gv)| gv * gelu_prime(xv)).collect(),
+        })
+    }
+}
+
+// ------------------------------------------------- softmax cross-entropy
+
+/// Fused softmax + cross-entropy over padded logits.
+///
+/// Logit rows are `width` wide (lane-padded); labels index the first
+/// `classes` entries. The padded tail participates in the softmax —
+/// training pushes it down like any wrong class — but never appears as
+/// a label, and evaluation argmaxes over the logical classes only.
+#[derive(Clone, Copy, Debug)]
+pub struct SoftmaxXent {
+    /// Padded logit width.
+    pub width: usize,
+    /// Logical class count (`labels < classes <= width`).
+    pub classes: usize,
+}
+
+impl SoftmaxXent {
+    /// Mean cross-entropy loss; saves the probabilities (host slot —
+    /// they never feed a GEMM) when a tape is supplied.
+    pub fn forward(&self, logits: &[f64], labels: &[u8], tape: Option<&mut Tape>) -> Result<f64> {
+        let batch = labels.len();
+        ensure!(
+            logits.len() == batch * self.width,
+            "loss forward: logits must be {batch}x{} values, got {}",
+            self.width,
+            logits.len()
+        );
+        let mut probs = vec![0f64; logits.len()];
+        let mut loss = 0f64;
+        for (bi, &label) in labels.iter().enumerate() {
+            ensure!(
+                (label as usize) < self.classes,
+                "label {label} out of range (classes = {})",
+                self.classes
+            );
+            let row = &logits[bi * self.width..(bi + 1) * self.width];
+            let max = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut sum = 0f64;
+            for (j, &v) in row.iter().enumerate() {
+                let e = (v - max).exp();
+                probs[bi * self.width + j] = e;
+                sum += e;
+            }
+            for p in &mut probs[bi * self.width..(bi + 1) * self.width] {
+                *p /= sum;
+            }
+            // log-sum-exp form: finite even when p[label] underflows.
+            loss += max + sum.ln() - row[label as usize];
+        }
+        if let Some(t) = tape {
+            t.push_host(probs);
+        }
+        Ok(loss / batch as f64)
+    }
+
+    /// Gradient w.r.t. the logits, pre-multiplied by `scale` (the loss
+    /// scale) and averaged over the batch: `(p - onehot)·scale/batch`.
+    pub fn backward(&self, labels: &[u8], scale: f64, tape: &mut Tape) -> Result<Vec<f64>> {
+        let probs = tape.pop_host()?;
+        let batch = labels.len();
+        ensure!(
+            probs.len() == batch * self.width,
+            "loss backward: saved probabilities are {} values, expected {batch}x{}",
+            probs.len(),
+            self.width
+        );
+        let mut g = probs;
+        for (bi, &label) in labels.iter().enumerate() {
+            g[bi * self.width + label as usize] -= 1.0;
+        }
+        let f = scale / batch as f64;
+        for v in &mut g {
+            *v *= f;
+        }
+        Ok(g)
+    }
+}
+
+// ------------------------------------------------------------------ MLP
+
+/// The training MLP: `Linear → act → Linear → act → Linear → softmax`.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    /// The linear layers (input → hidden → hidden → output).
+    pub layers: Vec<Linear>,
+    /// Activation between linear layers.
+    pub act: Activation,
+    /// The loss head.
+    pub loss: SoftmaxXent,
+}
+
+impl Mlp {
+    /// Build the three-layer MLP.
+    pub fn new(
+        in_dim: usize,
+        hidden: usize,
+        out_dim: usize,
+        classes: usize,
+        act: Activation,
+        rng: &mut Rng,
+    ) -> Self {
+        Mlp {
+            layers: vec![
+                Linear::init(in_dim, hidden, rng),
+                Linear::init(hidden, hidden, rng),
+                Linear::init(hidden, out_dim, rng),
+            ],
+            act,
+            loss: SoftmaxXent { width: out_dim, classes },
+        }
+    }
+
+    /// Forward to logits. Pass a tape to save for backward, or `None`
+    /// for evaluation.
+    pub fn forward(
+        &self,
+        ctx: &mut GemmCtx,
+        policy: &PrecisionPolicy,
+        x: &[f64],
+        batch: usize,
+        mut tape: Option<&mut Tape>,
+    ) -> Result<Vec<f64>> {
+        let n = self.layers.len();
+        let mut h = x.to_vec();
+        for (i, l) in self.layers.iter().enumerate() {
+            h = l.forward(ctx, policy, &h, batch, tape.as_deref_mut())?;
+            if i + 1 < n {
+                h = self.act.forward(ctx.session(), policy.acc, &h, batch, l.out_dim, tape.as_deref_mut())?;
+            }
+        }
+        Ok(h)
+    }
+
+    /// Backward from the logit gradient; fills every layer's `gw`/`gb`
+    /// (loss-scaled) and drains the tape.
+    pub fn backward(
+        &mut self,
+        ctx: &mut GemmCtx,
+        policy: &PrecisionPolicy,
+        g_logits: &[f64],
+        batch: usize,
+        tape: &mut Tape,
+    ) -> Result<()> {
+        let mut g = g_logits.to_vec();
+        for i in (0..self.layers.len()).rev() {
+            g = self.layers[i].backward(ctx, policy, &g, batch, tape)?;
+            if i > 0 {
+                g = self.act.backward(&g, tape)?;
+            }
+        }
+        ensure!(tape.is_empty(), "backward pass left {} unconsumed tape slots", tape.len());
+        Ok(())
+    }
+
+    /// True when every stored gradient is finite (the loss-scaling
+    /// overflow check).
+    pub fn grads_finite(&self) -> bool {
+        self.layers
+            .iter()
+            .all(|l| l.gw.iter().all(|v| v.is_finite()) && l.gb.iter().all(|v| v.is_finite()))
+    }
+
+    /// Multiply every stored gradient by `s` (the 1/scale unscale).
+    pub fn scale_grads(&mut self, s: f32) {
+        for l in &mut self.layers {
+            for v in &mut l.gw {
+                *v *= s;
+            }
+            for v in &mut l.gb {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Master parameters paired with their gradients, in a stable order
+    /// (`w1, b1, w2, b2, w3, b3`) — what the optimizer steps.
+    pub fn params_mut(&mut self) -> Vec<crate::nn::optim::ParamMut<'_>> {
+        let mut out = Vec::new();
+        for l in self.layers.iter_mut() {
+            let Linear { w, b, gw, gb, .. } = l;
+            out.push(crate::nn::optim::ParamMut { value: w.as_mut_slice(), grad: gw.as_slice() });
+            out.push(crate::nn::optim::ParamMut { value: b.as_mut_slice(), grad: gb.as_slice() });
+        }
+        out
+    }
+}

@@ -1,0 +1,76 @@
+//! Native mixed-precision training: a pure-Rust, offline-runnable NN
+//! subsystem whose **every matmul routes through the typed
+//! [`crate::api::GemmPlan`] minifloat path** — the same ExSdotp
+//! accumulation order the simulated cluster executes, bit-identical to
+//! it, with no f64 shortcut anywhere on the compute path.
+//!
+//! The paper's workload is low-precision NN *training*, but the
+//! artifact-backed path ([`crate::coordinator`] → PJRT) cannot execute
+//! offline. This subsystem closes that gap natively, reproducing the
+//! mixed-precision recipes of Wang et al. 2018 ("Training DNNs with
+//! 8-bit Floating Point Numbers") and Noune et al. 2022 ("8-bit
+//! Numerical Formats for DNNs") on top of the ExSdotp datapath:
+//!
+//! * minifloat GEMMs with **wider ExSdotp accumulation** (FP8/FP8alt
+//!   operands into FP16, FP16/FP16alt into FP32 — Table I's expanding
+//!   pairs, alt variants via the CSR alt bits);
+//! * **FP32 master weights** in the optimizer, cast down to the compute
+//!   format at every step ([`optim`]);
+//! * **dynamic loss scaling** with overflow backoff for the narrow
+//!   backward formats ([`policy::LossScaler`]);
+//! * per-tensor [`policy::PrecisionPolicy`] — e.g. the HFP8 recipe:
+//!   FP8alt (e4m3) forward, FP8 (e5m2) backward, FP16 accumulation.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`policy`] | precision policies + dynamic loss scaling |
+//! | [`engine`] | the GEMM router: builds/runs `GemmPlan`s, counts calls |
+//! | [`tape`]   | minimal reverse-mode tape over `MfTensor` activations |
+//! | [`layer`]  | Linear, ReLU/GELU, softmax-cross-entropy (fwd + bwd) |
+//! | [`optim`]  | SGD with momentum, Adam — FP32 master weights |
+//! | [`data`]   | synthetic datasets (spiral, rings), lane-padded |
+//! | [`train`]  | [`train::NativeTrainer`] — the step loop |
+//!
+//! ## Layering
+//!
+//! `nn` sits **above** the numerics stack and calls only the [`crate::api`]
+//! surface (`Session` / `MfTensor` / `GemmPlan`) and, through it, the
+//! [`crate::batch`] engine. It must never call `kernels`, `cluster`,
+//! or `core` directly — the typed plan layer is where problems are
+//! validated and where the functional/cycle-accurate engines stay
+//! interchangeable. The `api::train` module (`Session::train()` /
+//! `Session::native_trainer`) is the sanctioned front door that
+//! constructs the types in here.
+//!
+//! ```
+//! use minifloat_nn::prelude::*;
+//!
+//! # fn main() -> minifloat_nn::util::error::Result<()> {
+//! let session = Session::builder().seed(7).build();
+//! let mut tr = session.native_trainer(PrecisionPolicy::hfp8())?;
+//! tr.train(10, 0)?; // 10 HFP8 steps on the spiral task, all GEMMs through GemmPlan
+//! assert_eq!(tr.gemm_calls(), 10 * 9); // 3 forward + 6 backward plans per step
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod data;
+pub mod engine;
+pub mod layer;
+pub mod optim;
+pub mod policy;
+pub mod tape;
+pub mod train;
+
+#[cfg(test)]
+mod tests;
+
+pub use data::{DataSpec, Dataset};
+pub use engine::GemmCtx;
+pub use layer::{Activation, Linear, Mlp, SoftmaxXent};
+pub use optim::{Optim, OptimSpec, ParamMut};
+pub use policy::{LossScaler, PrecisionPolicy};
+pub use tape::Tape;
+pub use train::{NativeTrainer, StepRecord};

@@ -1,0 +1,135 @@
+//! Optimizers over FP32 master weights.
+//!
+//! The mixed-precision recipe (Wang et al. 2018 §3) keeps a
+//! full-precision master copy of every parameter: minifloat rounding
+//! happens *on the way down* — when [`crate::nn::layer::Linear`] casts
+//! the masters to the compute format each step — never in the update
+//! itself, so tiny gradient contributions accumulate instead of being
+//! swallowed by the 8-bit grid. Update arithmetic runs in f64 and
+//! stores back to the f32 masters.
+
+use crate::ensure;
+use crate::util::error::Result;
+
+/// One parameter tensor paired with its gradient (already unscaled).
+pub struct ParamMut<'a> {
+    /// FP32 master values, updated in place.
+    pub value: &'a mut [f32],
+    /// Gradient of the last backward pass.
+    pub grad: &'a [f32],
+}
+
+/// Optimizer selection + hyperparameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimSpec {
+    /// SGD with classical momentum: `m ← μ·m + g`, `w ← w − lr·m`.
+    Sgd {
+        /// Learning rate.
+        lr: f64,
+        /// Momentum coefficient μ.
+        momentum: f64,
+    },
+    /// Adam (Kingma & Ba) with bias correction.
+    Adam {
+        /// Learning rate.
+        lr: f64,
+        /// First-moment decay β₁.
+        beta1: f64,
+        /// Second-moment decay β₂.
+        beta2: f64,
+        /// Denominator fuzz ε.
+        eps: f64,
+    },
+}
+
+impl OptimSpec {
+    /// SGD with the conventional μ = 0.9.
+    pub fn sgd(lr: f64) -> Self {
+        OptimSpec::Sgd { lr, momentum: 0.9 }
+    }
+
+    /// Adam with the conventional β₁ = 0.9, β₂ = 0.999, ε = 1e-8.
+    pub fn adam(lr: f64) -> Self {
+        OptimSpec::Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    /// Learning rate.
+    pub fn lr(&self) -> f64 {
+        match *self {
+            OptimSpec::Sgd { lr, .. } | OptimSpec::Adam { lr, .. } => lr,
+        }
+    }
+}
+
+/// Optimizer state: per-parameter moment buffers, FP32 like the masters.
+pub struct Optim {
+    spec: OptimSpec,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Optim {
+    /// Fresh optimizer (state allocates lazily on the first step).
+    pub fn new(spec: OptimSpec) -> Self {
+        Optim { spec, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+
+    /// The spec this optimizer runs.
+    pub fn spec(&self) -> OptimSpec {
+        self.spec
+    }
+
+    /// Steps applied so far (skipped steps do not count).
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// Apply one update to every parameter. The parameter list must be
+    /// stable across calls (same tensors, same order) — state buffers
+    /// are positional.
+    pub fn step(&mut self, params: &mut [ParamMut<'_>]) -> Result<()> {
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| vec![0.0; p.value.len()]).collect();
+            if matches!(self.spec, OptimSpec::Adam { .. }) {
+                self.v = params.iter().map(|p| vec![0.0; p.value.len()]).collect();
+            }
+        }
+        ensure!(
+            self.m.len() == params.len(),
+            "optimizer state tracks {} parameters but {} were passed (the list must be stable)",
+            self.m.len(),
+            params.len()
+        );
+        self.t += 1;
+        match self.spec {
+            OptimSpec::Sgd { lr, momentum } => {
+                for (p, mbuf) in params.iter_mut().zip(self.m.iter_mut()) {
+                    ensure!(p.value.len() == p.grad.len(), "parameter/gradient length mismatch");
+                    for ((w, &g), mv) in p.value.iter_mut().zip(p.grad).zip(mbuf.iter_mut()) {
+                        let m = momentum * *mv as f64 + g as f64;
+                        *mv = m as f32;
+                        *w = (*w as f64 - lr * m) as f32;
+                    }
+                }
+            }
+            OptimSpec::Adam { lr, beta1, beta2, eps } => {
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                for ((p, mbuf), vbuf) in params.iter_mut().zip(self.m.iter_mut()).zip(self.v.iter_mut()) {
+                    ensure!(p.value.len() == p.grad.len(), "parameter/gradient length mismatch");
+                    for (i, (w, &g)) in p.value.iter_mut().zip(p.grad).enumerate() {
+                        let g = g as f64;
+                        let m = beta1 * mbuf[i] as f64 + (1.0 - beta1) * g;
+                        let v = beta2 * vbuf[i] as f64 + (1.0 - beta2) * g * g;
+                        mbuf[i] = m as f32;
+                        vbuf[i] = v as f32;
+                        let update = lr * (m / bc1) / ((v / bc2).sqrt() + eps);
+                        *w = (*w as f64 - update) as f32;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,237 @@
+//! Precision policies and dynamic loss scaling.
+//!
+//! A [`PrecisionPolicy`] names, per tensor role, which minifloat format
+//! each GEMM operand is cast to and which wider format the ExSdotp
+//! datapath accumulates in — the software half of the paper's
+//! mixed-precision story. The presets mirror the literature:
+//!
+//! | preset | fwd operands | bwd operands | accumulate | loss scaling |
+//! |---|---|---|---|---|
+//! | [`PrecisionPolicy::fp32`]    | FP32    | FP32    | FP32 | static 1 |
+//! | [`PrecisionPolicy::fp16`]    | FP16    | FP16    | FP32 | dynamic |
+//! | [`PrecisionPolicy::fp16alt`] | FP16alt | FP16alt | FP32 | static 1 |
+//! | [`PrecisionPolicy::fp8`]     | FP8     | FP8     | FP16 | dynamic |
+//! | [`PrecisionPolicy::hfp8`]    | FP8alt  | FP8     | FP16 | dynamic |
+//!
+//! HFP8 (Sun et al. / Wang et al.) is the headline recipe: e4m3 for the
+//! forward pass (precision-bound), e5m2 for gradients (range-bound),
+//! FP16 ExSdotp accumulation, FP32 master weights in the optimizer.
+//!
+//! [`LossScaler`] implements dynamic loss scaling with overflow
+//! backoff (Noune et al. §loss scaling, NVIDIA AMP-style): gradients
+//! are computed pre-multiplied by `scale`; a non-finite gradient skips
+//! the optimizer step and halves the scale, while `growth_interval`
+//! consecutive good steps double it.
+
+use crate::formats::{FpFormat, FP16, FP16ALT, FP32, FP8, FP8ALT};
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// Per-tensor-role formats for mixed-precision training. Construct via
+/// the presets or literal struct syntax; [`PrecisionPolicy::validate`]
+/// checks the pairs against the ExSdotp/FMA kernel families.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrecisionPolicy {
+    /// Short human name (`fp32`, `hfp8`, …).
+    pub name: &'static str,
+    /// Operand format for forward GEMMs (activations and weights).
+    pub fwd: FpFormat,
+    /// Operand format for backward GEMMs (gradients, and the weights /
+    /// saved activations re-cast for them).
+    pub bwd: FpFormat,
+    /// Accumulation / output format of every GEMM (the ExSdotp
+    /// destination; equal to the operand format for the FMA families).
+    pub acc: FpFormat,
+    /// Initial loss scale (1.0 = unscaled).
+    pub init_loss_scale: f64,
+    /// Whether the loss scale adapts (overflow backoff / growth).
+    pub dynamic_loss_scale: bool,
+}
+
+impl PrecisionPolicy {
+    /// Full-FP32 baseline (packed-SIMD FMA kernels, no scaling).
+    pub fn fp32() -> Self {
+        PrecisionPolicy {
+            name: "fp32",
+            fwd: FP32,
+            bwd: FP32,
+            acc: FP32,
+            init_loss_scale: 1.0,
+            dynamic_loss_scale: false,
+        }
+    }
+
+    /// FP16 operands with FP32 ExSdotp accumulation; dynamic loss
+    /// scaling covers FP16's limited gradient range.
+    pub fn fp16() -> Self {
+        PrecisionPolicy {
+            name: "fp16",
+            fwd: FP16,
+            bwd: FP16,
+            acc: FP32,
+            init_loss_scale: 1024.0,
+            dynamic_loss_scale: true,
+        }
+    }
+
+    /// FP16alt (bfloat16 layout) operands with FP32 accumulation — the
+    /// FP32-range format, so no scaling is needed.
+    pub fn fp16alt() -> Self {
+        PrecisionPolicy {
+            name: "fp16alt",
+            fwd: FP16ALT,
+            bwd: FP16ALT,
+            acc: FP32,
+            init_loss_scale: 1.0,
+            dynamic_loss_scale: false,
+        }
+    }
+
+    /// FP8 (e5m2) everywhere with FP16 accumulation.
+    pub fn fp8() -> Self {
+        PrecisionPolicy {
+            name: "fp8",
+            fwd: FP8,
+            bwd: FP8,
+            acc: FP16,
+            init_loss_scale: 256.0,
+            dynamic_loss_scale: true,
+        }
+    }
+
+    /// The hybrid-FP8 recipe: FP8alt (e4m3) forward, FP8 (e5m2)
+    /// backward, FP16 ExSdotp accumulation (Sun et al., the precision
+    /// the `train_step_hfp8` artifact compiles).
+    pub fn hfp8() -> Self {
+        PrecisionPolicy {
+            name: "hfp8",
+            fwd: FP8ALT,
+            bwd: FP8,
+            acc: FP16,
+            init_loss_scale: 256.0,
+            dynamic_loss_scale: true,
+        }
+    }
+
+    /// Parse a CLI-style policy name.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fp32" => Ok(Self::fp32()),
+            "fp16" => Ok(Self::fp16()),
+            "fp16alt" => Ok(Self::fp16alt()),
+            "fp8" => Ok(Self::fp8()),
+            "hfp8" => Ok(Self::hfp8()),
+            other => bail!("--precision must be fp32|fp16|fp16alt|fp8|hfp8, got '{other}'"),
+        }
+    }
+
+    /// All presets (bench / report sweeps), widest first.
+    pub fn presets() -> [PrecisionPolicy; 5] {
+        [Self::fp32(), Self::fp16alt(), Self::fp16(), Self::fp8(), Self::hfp8()]
+    }
+
+    /// The widest SIMD lane count any operand format uses — model
+    /// dimensions must divide by this so every GEMM shape (forward and
+    /// both backward transposes) packs cleanly.
+    pub fn max_lanes(&self) -> usize {
+        (self.fwd.lanes_in_64().max(self.bwd.lanes_in_64()).max(self.acc.lanes_in_64())) as usize
+    }
+
+    /// Check that both `(operand, acc)` pairs name a runnable plan
+    /// (an expanding ExSdotp pair or a same-format FMA family) — the
+    /// same resolution [`crate::api::GemmPlanBuilder::dims`] performs,
+    /// surfaced at trainer-build time.
+    pub fn validate(&self) -> Result<()> {
+        for (role, fmt) in [("forward", self.fwd), ("backward", self.bwd)] {
+            let expanding = crate::api::plan::expanding_family(fmt, self.acc).is_some();
+            let fma_family = fmt == self.acc && (fmt == FP32 || fmt == FP16 || fmt == crate::formats::FP64);
+            ensure!(
+                expanding || fma_family,
+                "policy '{}': {role} pair {}->{} is neither a Table I expanding pair nor a \
+                 same-format FMA family",
+                self.name,
+                fmt.name(),
+                self.acc.name()
+            );
+        }
+        ensure!(
+            self.init_loss_scale.is_finite() && self.init_loss_scale >= 1.0,
+            "policy '{}': initial loss scale must be finite and >= 1, got {}",
+            self.name,
+            self.init_loss_scale
+        );
+        Ok(())
+    }
+}
+
+/// Dynamic loss scaling with overflow backoff.
+///
+/// The trainer multiplies the loss gradient by [`LossScaler::scale`]
+/// before the backward pass (lifting small gradients above the narrow
+/// format's underflow threshold) and divides it back out before the
+/// optimizer step. [`LossScaler::update`] consumes the step's
+/// gradient-finiteness verdict and returns whether the step should
+/// apply: an overflowed step is *skipped* (the standard AMP recipe) and
+/// the scale halves; `growth_interval` consecutive good steps double it
+/// again, probing for the largest safe scale.
+#[derive(Clone, Debug)]
+pub struct LossScaler {
+    scale: f64,
+    dynamic: bool,
+    /// Consecutive finite steps before the scale doubles.
+    pub growth_interval: u32,
+    good_steps: u32,
+    /// Total overflowed (skipped) steps observed.
+    pub overflows: u64,
+}
+
+/// Scale ceiling: far above anything useful, far below f64 overflow.
+const MAX_SCALE: f64 = (1u64 << 24) as f64;
+
+impl LossScaler {
+    /// Scaler for a policy (fixed at 1.0 when the policy is static).
+    pub fn for_policy(p: &PrecisionPolicy) -> Self {
+        LossScaler {
+            scale: p.init_loss_scale,
+            dynamic: p.dynamic_loss_scale,
+            growth_interval: 200,
+            good_steps: 0,
+            overflows: 0,
+        }
+    }
+
+    /// Current loss scale.
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Force a scale (testing / resuming); keeps the dynamic flag.
+    pub fn set_scale(&mut self, scale: f64) {
+        self.scale = scale.clamp(1.0, MAX_SCALE);
+        self.good_steps = 0;
+    }
+
+    /// Record one step's outcome. Returns `true` when the optimizer
+    /// step should apply (gradients were finite), `false` when it must
+    /// be skipped. Non-finite gradients always skip — even under a
+    /// static policy, applying an inf/NaN update would destroy the
+    /// master weights.
+    pub fn update(&mut self, grads_finite: bool) -> bool {
+        if !grads_finite {
+            self.overflows += 1;
+            if self.dynamic {
+                self.scale = (self.scale * 0.5).max(1.0);
+            }
+            self.good_steps = 0;
+            return false;
+        }
+        if self.dynamic {
+            self.good_steps += 1;
+            if self.good_steps >= self.growth_interval {
+                self.scale = (self.scale * 2.0).min(MAX_SCALE);
+                self.good_steps = 0;
+            }
+        }
+        true
+    }
+}

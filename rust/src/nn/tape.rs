@@ -1,0 +1,102 @@
+//! A minimal reverse-mode tape over [`MfTensor`]-backed activations.
+//!
+//! Layers push what their backward pass needs during the forward pass
+//! and pop it back — in reverse order, because the tape is a stack —
+//! during the backward pass. The GEMM-feeding activations are saved as
+//! quantized [`MfTensor`]s (the *exact* low-precision operands the
+//! forward GEMMs streamed, which is also the memory-saving recipe of
+//! FP8 training: nothing wider than the compute format is retained);
+//! host-precision slots exist for values that never touch a GEMM
+//! (softmax probabilities, activation masks).
+//!
+//! Pops are type- and shape-checked: popping the wrong slot kind is a
+//! typed [`crate::util::error::Error`] naming both kinds, which turns
+//! a mis-ordered backward implementation into a diagnosable failure
+//! instead of silent garbage.
+
+use crate::api::MfTensor;
+use crate::util::error::Result;
+use crate::bail;
+
+/// One saved value.
+#[derive(Clone, Debug)]
+enum Slot {
+    /// A quantized activation — the words a forward GEMM streamed.
+    Mf(MfTensor),
+    /// Host-precision data that never feeds a GEMM.
+    Host(Vec<f64>),
+}
+
+impl Slot {
+    fn kind(&self) -> &'static str {
+        match self {
+            Slot::Mf(_) => "MfTensor",
+            Slot::Host(_) => "host",
+        }
+    }
+}
+
+/// The tape: a stack of saved-for-backward values.
+#[derive(Clone, Debug, Default)]
+pub struct Tape {
+    slots: Vec<Slot>,
+}
+
+impl Tape {
+    /// An empty tape.
+    pub fn new() -> Self {
+        Tape::default()
+    }
+
+    /// Save a quantized activation.
+    pub fn push_mf(&mut self, t: MfTensor) {
+        self.slots.push(Slot::Mf(t));
+    }
+
+    /// Save host-precision data.
+    pub fn push_host(&mut self, v: Vec<f64>) {
+        self.slots.push(Slot::Host(v));
+    }
+
+    /// Pop the most recent slot as a quantized activation.
+    pub fn pop_mf(&mut self) -> Result<MfTensor> {
+        match self.slots.pop() {
+            Some(Slot::Mf(t)) => Ok(t),
+            Some(other) => bail!(
+                "tape order violation: expected an MfTensor slot, found a {} slot \
+                 (backward passes must pop in exact reverse push order)",
+                other.kind()
+            ),
+            None => bail!("tape underflow: backward pass popped more slots than forward pushed"),
+        }
+    }
+
+    /// Pop the most recent slot as host data.
+    pub fn pop_host(&mut self) -> Result<Vec<f64>> {
+        match self.slots.pop() {
+            Some(Slot::Host(v)) => Ok(v),
+            Some(other) => bail!(
+                "tape order violation: expected a host slot, found a {} slot \
+                 (backward passes must pop in exact reverse push order)",
+                other.kind()
+            ),
+            None => bail!("tape underflow: backward pass popped more slots than forward pushed"),
+        }
+    }
+
+    /// Slots currently saved.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when no slots are saved (a completed backward pass must
+    /// leave the tape empty — the trainer asserts this).
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Drop all saved slots (evaluation-mode reuse).
+    pub fn clear(&mut self) {
+        self.slots.clear();
+    }
+}

@@ -1,0 +1,377 @@
+//! Subsystem tests: every layer's backward pass against f64 central
+//! finite differences (tolerances scaled to the policy's format
+//! epsilon), the loss-scaling overflow/backoff path, GEMM-plan routing
+//! assertions, and bit-level determinism.
+
+use super::data::{Dataset, IN_DIM, OUT_DIM};
+use super::engine::GemmCtx;
+use super::layer::{Activation, Linear, Mlp, SoftmaxXent};
+use super::optim::{Optim, OptimSpec, ParamMut};
+use super::policy::{LossScaler, PrecisionPolicy};
+use super::tape::Tape;
+use crate::api::Session;
+use crate::util::rng::Rng;
+
+fn session() -> Session {
+    Session::builder().seed(77).build()
+}
+
+/// `|fd - an| <= atol + rtol*max(|fd|, |an|)` with a diagnostic.
+fn assert_close(fd: f64, an: f64, atol: f64, rtol: f64, what: &str) {
+    let tol = atol + rtol * fd.abs().max(an.abs());
+    assert!(
+        (fd - an).abs() <= tol,
+        "{what}: finite-difference {fd:.6e} vs analytic {an:.6e} (tol {tol:.2e})"
+    );
+}
+
+/// Per-policy FD step + tolerances, scaled to the *operand* epsilon
+/// (2^-p): the staircase of the quantized forward bounds how small `h`
+/// may be, and operand rounding bounds how closely the analytic
+/// backward can match the true secant.
+fn fd_params(p: &PrecisionPolicy) -> (f64, f64, f64) {
+    let eps = 2f64.powi(-(p.fwd.precision().min(p.bwd.precision()) as i32));
+    match p.fwd.width() {
+        32 => (1e-3, 1e-4, 1e-2),           // (h, atol, rtol) — FP32: tight
+        _ => (2e-2, 5e-3, 300.0 * eps),     // FP16: eps = 2^-11 → rtol ≈ 0.15
+    }
+}
+
+// ---------------------------------------------------------- Linear FD
+
+/// Scalar probe loss `L = Σ y ⊙ R` over a layer output.
+fn probe_loss(y: &[f64], r: &[f64]) -> f64 {
+    y.iter().zip(r).map(|(a, b)| a * b).sum()
+}
+
+#[test]
+fn linear_backward_matches_finite_differences() {
+    let session = session();
+    let (batch, in_dim, out_dim) = (8, 8, 8);
+    for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp16()] {
+        let (h, atol, rtol) = fd_params(&policy);
+        let mut rng = Rng::new(31);
+        let mut layer = Linear::init(in_dim, out_dim, &mut rng);
+        let x: Vec<f64> = (0..batch * in_dim).map(|_| rng.gaussian() * 0.5).collect();
+        let r: Vec<f64> = (0..batch * out_dim).map(|_| rng.gaussian()).collect();
+        let fwd = |layer: &Linear, x: &[f64]| -> f64 {
+            let mut ctx = GemmCtx::new(&session, policy.acc);
+            let y = layer.forward(&mut ctx, &policy, x, batch, None).expect("forward");
+            probe_loss(&y, &r)
+        };
+        // Analytic pass: dL/dy = R.
+        let mut ctx = GemmCtx::new(&session, policy.acc);
+        let mut tape = Tape::new();
+        layer.forward(&mut ctx, &policy, &x, batch, Some(&mut tape)).expect("forward");
+        let dx = layer.backward(&mut ctx, &policy, &r, batch, &mut tape).expect("backward");
+        let mut rng_pick = Rng::new(5);
+        // Weight gradient.
+        for _ in 0..6 {
+            let i = rng_pick.below((in_dim * out_dim) as u64) as usize;
+            let orig = layer.w[i];
+            layer.w[i] = (orig as f64 + h) as f32;
+            let lp = fwd(&layer, &x);
+            layer.w[i] = (orig as f64 - h) as f32;
+            let lm = fwd(&layer, &x);
+            layer.w[i] = orig;
+            assert_close((lp - lm) / (2.0 * h), layer.gw[i] as f64, atol, rtol,
+                &format!("{} dW[{i}]", policy.name));
+        }
+        // Bias gradient.
+        for _ in 0..3 {
+            let j = rng_pick.below(out_dim as u64) as usize;
+            let orig = layer.b[j];
+            layer.b[j] = (orig as f64 + h) as f32;
+            let lp = fwd(&layer, &x);
+            layer.b[j] = (orig as f64 - h) as f32;
+            let lm = fwd(&layer, &x);
+            layer.b[j] = orig;
+            assert_close((lp - lm) / (2.0 * h), layer.gb[j] as f64, atol, rtol,
+                &format!("{} db[{j}]", policy.name));
+        }
+        // Input gradient.
+        let mut x2 = x.clone();
+        for _ in 0..6 {
+            let i = rng_pick.below((batch * in_dim) as u64) as usize;
+            let orig = x2[i];
+            x2[i] = orig + h;
+            let lp = fwd(&layer, &x2);
+            x2[i] = orig - h;
+            let lm = fwd(&layer, &x2);
+            x2[i] = orig;
+            assert_close((lp - lm) / (2.0 * h), dx[i], atol, rtol,
+                &format!("{} dX[{i}]", policy.name));
+        }
+    }
+}
+
+// ------------------------------------------------------ activation FD
+
+#[test]
+fn activation_backward_matches_finite_differences() {
+    // Host math is exact f64, so the FD tolerance is pure curvature;
+    // GELU is smooth, ReLU is checked away from its kink.
+    let session = session();
+    let acc = crate::formats::FP32;
+    let mut rng = Rng::new(9);
+    let x: Vec<f64> = (0..32).map(|_| rng.gaussian()).collect();
+    let r: Vec<f64> = (0..32).map(|_| rng.gaussian()).collect();
+    let h = 1e-5;
+    for act in [Activation::Relu, Activation::Gelu] {
+        let mut tape = Tape::new();
+        act.forward(&session, acc, &x, 4, 8, Some(&mut tape)).expect("forward");
+        let dx = act.backward(&r, &mut tape).expect("backward");
+        for i in 0..x.len() {
+            if act == Activation::Relu && x[i].abs() < 10.0 * h {
+                continue; // FD is undefined across the kink
+            }
+            let mut xp = x.clone();
+            xp[i] = x[i] + h;
+            let lp = probe_loss(&act.forward(&session, acc, &xp, 4, 8, None).unwrap(), &r);
+            xp[i] = x[i] - h;
+            let lm = probe_loss(&act.forward(&session, acc, &xp, 4, 8, None).unwrap(), &r);
+            assert_close((lp - lm) / (2.0 * h), dx[i], 1e-6, 1e-5, &format!("{act:?} dX[{i}]"));
+        }
+    }
+}
+
+#[test]
+fn softmax_xent_backward_matches_finite_differences() {
+    let loss = SoftmaxXent { width: OUT_DIM, classes: 3 };
+    let mut rng = Rng::new(13);
+    let batch = 6;
+    let logits: Vec<f64> = (0..batch * OUT_DIM).map(|_| rng.gaussian()).collect();
+    let labels: Vec<u8> = (0..batch).map(|_| rng.below(3) as u8).collect();
+    let mut tape = Tape::new();
+    loss.forward(&logits, &labels, Some(&mut tape)).expect("forward");
+    let g = loss.backward(&labels, 1.0, &mut tape).expect("backward");
+    let h = 1e-6;
+    for i in 0..logits.len() {
+        let mut lp = logits.clone();
+        lp[i] += h;
+        let up = loss.forward(&lp, &labels, None).unwrap();
+        lp[i] = logits[i] - h;
+        let dn = loss.forward(&lp, &labels, None).unwrap();
+        assert_close((up - dn) / (2.0 * h), g[i], 1e-8, 1e-5, &format!("dlogits[{i}]"));
+    }
+}
+
+// -------------------------------------------------------- MLP-level FD
+
+#[test]
+fn mlp_weight_gradients_match_finite_differences() {
+    // End-to-end: three linears + GELU (smooth — no ReLU kinks under
+    // the FD probe) + softmax-xent, gradients of sampled master-weight
+    // coordinates vs central differences of the whole quantized forward.
+    let session = session();
+    let (batch, hidden) = (8, 8);
+    for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp16()] {
+        // Deeper chain ⇒ staircase noise from every quantization point
+        // compounds; widen the FD step and the floors accordingly.
+        let (h, atol, rtol) = match policy.fwd.width() {
+            32 => (1e-3, 5e-4, 2e-2),
+            _ => (3e-2, 2e-2, 0.2),
+        };
+        let mut rng = Rng::new(21);
+        let mut model = Mlp::new(IN_DIM, hidden, OUT_DIM, 3, Activation::Gelu, &mut rng);
+        let data = Dataset::spiral(20, 3);
+        let (x, labels) = data.ordered_batch(0, batch);
+        let loss_of = |model: &Mlp| -> f64 {
+            let mut ctx = GemmCtx::new(&session, policy.acc);
+            let logits = model.forward(&mut ctx, &policy, &x, batch, None).expect("forward");
+            model.loss.forward(&logits, &labels, None).expect("loss")
+        };
+        // Analytic gradients (scale 1.0).
+        {
+            let mut ctx = GemmCtx::new(&session, policy.acc);
+            let mut tape = Tape::new();
+            let logits = model.forward(&mut ctx, &policy, &x, batch, Some(&mut tape)).expect("fwd");
+            model.loss.forward(&logits, &labels, Some(&mut tape)).expect("loss");
+            let g0 = model.loss.backward(&labels, 1.0, &mut tape).expect("loss bwd");
+            model.backward(&mut ctx, &policy, &g0, batch, &mut tape).expect("bwd");
+        }
+        let mut rng_pick = Rng::new(8);
+        for li in 0..model.layers.len() {
+            for _ in 0..4 {
+                let n = model.layers[li].w.len();
+                let i = rng_pick.below(n as u64) as usize;
+                let orig = model.layers[li].w[i];
+                model.layers[li].w[i] = (orig as f64 + h) as f32;
+                let lp = loss_of(&model);
+                model.layers[li].w[i] = (orig as f64 - h) as f32;
+                let lm = loss_of(&model);
+                model.layers[li].w[i] = orig;
+                assert_close(
+                    (lp - lm) / (2.0 * h),
+                    model.layers[li].gw[i] as f64,
+                    atol,
+                    rtol,
+                    &format!("{} layer{li} dW[{i}]", policy.name),
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- loss scaling
+
+#[test]
+fn loss_scaler_grows_and_backs_off() {
+    let mut s = LossScaler::for_policy(&PrecisionPolicy::hfp8());
+    s.growth_interval = 3;
+    let s0 = s.scale();
+    assert!(s.update(true) && s.update(true));
+    assert_eq!(s.scale(), s0);
+    assert!(s.update(true));
+    assert_eq!(s.scale(), s0 * 2.0, "doubles after growth_interval good steps");
+    assert!(!s.update(false), "overflow must skip the step");
+    assert_eq!(s.scale(), s0, "halves on overflow");
+    assert_eq!(s.overflows, 1);
+    // Static policies never move the scale but still skip bad steps.
+    let mut f = LossScaler::for_policy(&PrecisionPolicy::fp32());
+    assert!(!f.update(false));
+    assert_eq!(f.scale(), 1.0);
+}
+
+#[test]
+fn forced_fp8_overflow_skips_step_and_backs_off() {
+    // Drive the scale high enough that the scaled logit gradient
+    // overflows FP8 (e5m2 max 57344) on quantization: the step must be
+    // skipped (masters untouched), the scale halved, and training must
+    // continue cleanly afterwards.
+    let session = Session::builder().seed(3).build();
+    let mut tr = session.native_trainer(PrecisionPolicy::hfp8()).expect("trainer");
+    let huge = (1u64 << 24) as f64;
+    tr.set_loss_scale(huge);
+    let w_before = tr.model().layers[0].w.clone();
+    let rec = tr.step().expect("step");
+    assert!(rec.skipped, "overflowed step must be skipped");
+    assert!(rec.loss.is_finite(), "forward pass is unaffected by the gradient scale");
+    assert_eq!(rec.scale, huge);
+    assert_eq!(tr.loss_scale(), huge / 2.0, "scale must back off");
+    assert_eq!(tr.skipped_steps(), 1);
+    assert_eq!(tr.model().layers[0].w, w_before, "skipped step must not touch the masters");
+    // Subsequent (sane-scale) steps apply again.
+    tr.set_loss_scale(256.0);
+    let rec = tr.step().expect("step");
+    assert!(!rec.skipped);
+    assert_ne!(tr.model().layers[0].w, w_before, "recovered step must update the masters");
+}
+
+// ----------------------------------------------------- routing / misc
+
+#[test]
+fn every_training_matmul_is_a_packed_gemm_plan() {
+    // The acceptance invariant: 9 GemmPlan executions per step (3
+    // forward + 6 backward), and for an expanding-pair policy every
+    // single one feeds the batch engine packed — no decode/re-pack, no
+    // f64 shortcut.
+    let session = Session::builder().seed(11).build();
+    for policy in [PrecisionPolicy::hfp8(), PrecisionPolicy::fp8(), PrecisionPolicy::fp16()] {
+        let mut tr = session.native_trainer(policy).expect("trainer");
+        for _ in 0..3 {
+            tr.step().expect("step");
+        }
+        assert_eq!(tr.gemm_calls(), 3 * 9, "{}: 9 plans per step", policy.name);
+        assert_eq!(
+            tr.packed_runs(),
+            tr.gemm_calls(),
+            "{}: every plan must take the packed fast path",
+            policy.name
+        );
+    }
+}
+
+#[test]
+fn training_is_bit_deterministic() {
+    let mk = || {
+        let session = Session::builder().seed(42).build();
+        let mut tr = session.native_trainer(PrecisionPolicy::hfp8()).expect("trainer");
+        tr.train(10, 0).expect("train");
+        tr
+    };
+    let (a, b) = (mk(), mk());
+    for (ra, rb) in a.history.iter().zip(&b.history) {
+        assert_eq!(ra.loss.to_bits(), rb.loss.to_bits());
+        assert_eq!(ra.skipped, rb.skipped);
+    }
+    for (la, lb) in a.model().layers.iter().zip(&b.model().layers) {
+        assert_eq!(la.w, lb.w);
+        assert_eq!(la.b, lb.b);
+    }
+}
+
+#[test]
+fn tape_enforces_pop_order_and_kind() {
+    let session = session();
+    let mut tape = Tape::new();
+    tape.push_host(vec![1.0, 2.0]);
+    let err = tape.pop_mf().unwrap_err();
+    assert!(err.to_string().contains("tape order violation"), "{err}");
+    assert!(tape.is_empty());
+    let err = tape.pop_host().unwrap_err();
+    assert!(err.to_string().contains("tape underflow"), "{err}");
+    let t = session.tensor(&[1.0; 64], 8, 8, crate::formats::FP8).expect("tensor");
+    tape.push_mf(t);
+    let err = tape.pop_host().unwrap_err();
+    assert!(err.to_string().contains("expected a host slot"), "{err}");
+}
+
+#[test]
+fn relu_backward_is_an_exact_mask() {
+    let session = session();
+    let acc = crate::formats::FP16;
+    let x = [-2.0, -0.5, 0.0, 0.25, 1.5, -1.0, 3.0, 0.125];
+    let g = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+    let mut tape = Tape::new();
+    let y = Activation::Relu.forward(&session, acc, &x, 2, 4, Some(&mut tape)).unwrap();
+    assert_eq!(y, vec![0.0, 0.0, 0.0, 0.25, 1.5, 0.0, 3.0, 0.125]);
+    let dx = Activation::Relu.backward(&g, &mut tape).unwrap();
+    assert_eq!(dx, vec![0.0, 0.0, 0.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+}
+
+#[test]
+fn optimizers_descend_a_quadratic() {
+    // Sanity on the update rules: minimize ½‖w‖² (gradient = w).
+    for spec in [OptimSpec::sgd(0.1), OptimSpec::adam(0.1)] {
+        let mut w = vec![1.0f32, -2.0, 0.5, 3.0];
+        let mut opt = Optim::new(spec);
+        for _ in 0..200 {
+            let grad: Vec<f32> = w.clone();
+            let mut params = [ParamMut { value: w.as_mut_slice(), grad: grad.as_slice() }];
+            opt.step(&mut params).expect("step");
+        }
+        let norm: f32 = w.iter().map(|v| v * v).sum();
+        assert!(norm < 1e-2, "{spec:?} failed to descend: {w:?}");
+    }
+}
+
+#[test]
+fn hfp8_loss_decreases_quickly() {
+    // Wiring smoke (the full convergence gate lives in the integration
+    // suite): 120 HFP8 steps must cut the loss substantially.
+    let session = Session::builder().seed(42).build();
+    let mut tr = session.native_trainer(PrecisionPolicy::hfp8()).expect("trainer");
+    let first = tr.step().expect("step").loss;
+    tr.train(119, 0).expect("train");
+    let last = tr.recent_loss(10);
+    assert!(first.is_finite() && last.is_finite());
+    assert!(last < first * 0.75, "loss did not drop: {first} -> {last}");
+}
+
+#[test]
+fn policy_validation_rejects_bad_pairs() {
+    let bad = PrecisionPolicy {
+        name: "bad",
+        fwd: crate::formats::FP8,
+        bwd: crate::formats::FP8,
+        acc: crate::formats::FP32, // FP8→FP32 is not a Table I pair
+        init_loss_scale: 1.0,
+        dynamic_loss_scale: false,
+    };
+    let err = bad.validate().unwrap_err();
+    assert!(err.to_string().contains("neither a Table I expanding pair"), "{err}");
+    for p in PrecisionPolicy::presets() {
+        p.validate().unwrap_or_else(|e| panic!("preset {} invalid: {e}", p.name));
+    }
+}

@@ -1,0 +1,208 @@
+//! [`NativeTrainer`] — the mixed-precision training loop.
+//!
+//! One step is the full Wang et al. 2018 recipe end to end:
+//!
+//! 1. sample a batch, forward through the MLP (minifloat GEMMs,
+//!    ExSdotp accumulation, FP32-master weights cast down);
+//! 2. softmax-cross-entropy loss; seed the backward pass with the
+//!    logit gradient **pre-multiplied by the loss scale**;
+//! 3. backward through the tape (two GEMMs per linear layer —
+//!    `Xᵀ·G` and `G·Wᵀ` — in the backward format);
+//! 4. finiteness check → [`crate::nn::policy::LossScaler::update`]:
+//!    overflowed steps are skipped and the scale backs off;
+//! 5. unscale the gradients and step the optimizer on the FP32 masters.
+//!
+//! Every matmul is a validated [`crate::api::GemmPlan`]; the trainer
+//! counts plan executions ([`NativeTrainer::gemm_calls`]) and packed
+//! fast-path hits ([`NativeTrainer::packed_runs`]) so that routing is
+//! asserted by tests, not assumed. Construct through the typed front
+//! door: [`crate::api::Session::train`] /
+//! [`crate::api::Session::native_trainer`].
+
+use crate::api::Session;
+use crate::nn::data::{Dataset, IN_DIM, OUT_DIM};
+use crate::nn::engine::GemmCtx;
+use crate::nn::layer::{Activation, Mlp};
+use crate::nn::optim::{Optim, OptimSpec};
+use crate::nn::policy::{LossScaler, PrecisionPolicy};
+use crate::nn::tape::Tape;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// One training step's record.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    /// Step index.
+    pub step: usize,
+    /// Training loss of the batch (before the update).
+    pub loss: f64,
+    /// Loss scale the step ran with.
+    pub scale: f64,
+    /// True when the step overflowed and the update was skipped.
+    pub skipped: bool,
+}
+
+/// The native mixed-precision training driver.
+pub struct NativeTrainer {
+    session: Session,
+    policy: PrecisionPolicy,
+    model: Mlp,
+    optim: Optim,
+    scaler: LossScaler,
+    data: Dataset,
+    rng: Rng,
+    batch: usize,
+    /// Per-step records (loss curve, scale trajectory, skips).
+    pub history: Vec<StepRecord>,
+    gemm_calls: u64,
+    packed_runs: u64,
+}
+
+impl NativeTrainer {
+    /// Assemble a trainer. Validation happened in
+    /// [`crate::api::TrainPlanBuilder::build`]; this only wires state.
+    pub(crate) fn assemble(
+        session: Session,
+        policy: PrecisionPolicy,
+        data: Dataset,
+        hidden: usize,
+        batch: usize,
+        act: Activation,
+        optim: OptimSpec,
+    ) -> Self {
+        let mut init_rng = session.rng();
+        let model = Mlp::new(IN_DIM, hidden, OUT_DIM, data.classes, act, &mut init_rng);
+        let scaler = LossScaler::for_policy(&policy);
+        NativeTrainer {
+            session,
+            policy,
+            model,
+            optim: Optim::new(optim),
+            scaler,
+            data,
+            rng: Rng::new(session.seed() ^ 0x5339),
+            batch,
+            history: Vec::new(),
+            gemm_calls: 0,
+            packed_runs: 0,
+        }
+    }
+
+    /// The active precision policy.
+    pub fn policy(&self) -> &PrecisionPolicy {
+        &self.policy
+    }
+
+    /// The model (read access for inspection/tests).
+    pub fn model(&self) -> &Mlp {
+        &self.model
+    }
+
+    /// Current loss scale.
+    pub fn loss_scale(&self) -> f64 {
+        self.scaler.scale()
+    }
+
+    /// Force the loss scale (testing the backoff path; resuming runs).
+    pub fn set_loss_scale(&mut self, scale: f64) {
+        self.scaler.set_scale(scale);
+    }
+
+    /// GEMM plans executed so far (forward + backward + evaluation).
+    pub fn gemm_calls(&self) -> u64 {
+        self.gemm_calls
+    }
+
+    /// How many of those fed the batch engine packed (zero
+    /// decode/re-pack). Expanding-pair policies hit this on every plan.
+    pub fn packed_runs(&self) -> u64 {
+        self.packed_runs
+    }
+
+    /// Steps skipped by loss-scaling overflow backoff.
+    pub fn skipped_steps(&self) -> u64 {
+        self.history.iter().filter(|r| r.skipped).count() as u64
+    }
+
+    /// Run one SGD/Adam step on a random batch; returns the record.
+    pub fn step(&mut self) -> Result<StepRecord> {
+        let (x, labels) = self.data.batch(self.batch, &mut self.rng);
+        let scale = self.scaler.scale();
+        let mut ctx = GemmCtx::new(&self.session, self.policy.acc);
+        let mut tape = Tape::new();
+        let logits = self.model.forward(&mut ctx, &self.policy, &x, self.batch, Some(&mut tape))?;
+        let loss = self.model.loss.forward(&logits, &labels, Some(&mut tape))?;
+        let g0 = self.model.loss.backward(&labels, scale, &mut tape)?;
+        self.model.backward(&mut ctx, &self.policy, &g0, self.batch, &mut tape)?;
+        self.gemm_calls += ctx.calls;
+        self.packed_runs += ctx.packed;
+        // A non-finite *loss* (forward overflow) skips exactly like a
+        // gradient overflow.
+        let finite = loss.is_finite() && self.model.grads_finite();
+        let apply = self.scaler.update(finite);
+        if apply {
+            self.model.scale_grads((1.0 / scale) as f32);
+            let mut params = self.model.params_mut();
+            self.optim.step(&mut params)?;
+        }
+        let record =
+            StepRecord { step: self.history.len(), loss, scale, skipped: !apply };
+        self.history.push(record);
+        Ok(record)
+    }
+
+    /// Train for `steps` batches, logging every `log_every` (0 = quiet);
+    /// returns the final loss.
+    pub fn train(&mut self, steps: usize, log_every: usize) -> Result<f64> {
+        let mut last = f64::NAN;
+        for i in 0..steps {
+            let r = self.step()?;
+            last = r.loss;
+            if log_every > 0 && (i % log_every == 0 || i + 1 == steps) {
+                let skip = if r.skipped { "  [overflow: step skipped]" } else { "" };
+                println!("step {i:>4}  loss {:.4}  scale {:>6}{skip}", r.loss, r.scale);
+            }
+        }
+        Ok(last)
+    }
+
+    /// Classification accuracy over the whole dataset (forward passes
+    /// in the policy's forward precision, argmax over the logical
+    /// classes). Walks full batches; the tail remainder (< batch) is
+    /// skipped, exactly like the PJRT evaluator.
+    pub fn accuracy(&mut self) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut ctx = GemmCtx::new(&self.session, self.policy.acc);
+        let mut idx = 0;
+        while idx + self.batch <= self.data.len() {
+            let (x, labels) = self.data.ordered_batch(idx, self.batch);
+            let logits = self.model.forward(&mut ctx, &self.policy, &x, self.batch, None)?;
+            for (b, &label) in labels.iter().enumerate() {
+                let row = &logits[b * OUT_DIM..b * OUT_DIM + self.data.classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                correct += (pred == label as usize) as usize;
+                total += 1;
+            }
+            idx += self.batch;
+        }
+        self.gemm_calls += ctx.calls;
+        self.packed_runs += ctx.packed;
+        Ok(correct as f64 / total.max(1) as f64)
+    }
+
+    /// Mean loss over the most recent `n` non-skipped steps.
+    pub fn recent_loss(&self, n: usize) -> f64 {
+        let applied: Vec<f64> =
+            self.history.iter().rev().filter(|r| !r.skipped).take(n).map(|r| r.loss).collect();
+        if applied.is_empty() {
+            return f64::NAN;
+        }
+        applied.iter().sum::<f64>() / applied.len() as f64
+    }
+}

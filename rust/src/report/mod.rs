@@ -315,3 +315,26 @@ pub fn table3_text(seed: u64) -> String {
     );
     s
 }
+
+// ------------------------------------------------------ native training
+
+/// Compact loss-curve summary for a native training run: ~10 evenly
+/// spaced rows of (step, loss, loss scale) plus overflow-skip counts —
+/// the text the `repro train --engine native` summary and the training
+/// example print.
+pub fn train_curve_text(history: &[crate::nn::StepRecord]) -> String {
+    if history.is_empty() {
+        return "(no training steps recorded)\n".to_string();
+    }
+    let mut s = String::from("step     loss      scale   skipped-so-far\n");
+    let rows = 10usize.min(history.len());
+    let stride = ((history.len() + rows - 1) / rows).max(1);
+    let mut skipped = 0usize;
+    for (i, r) in history.iter().enumerate() {
+        skipped += r.skipped as usize;
+        if i % stride == 0 || i + 1 == history.len() {
+            s += &format!("{:>4}  {:>9.4}  {:>7}   {:>3}\n", r.step, r.loss, r.scale, skipped);
+        }
+    }
+    s
+}

@@ -201,3 +201,72 @@ fn e2e_hfp8_matches_fp32_closely() {
         "HFP8 ({hfp8}) should track the fp32 baseline ({fp32}) on this task"
     );
 }
+
+// ------------------------------------------------- native training CLI
+
+#[test]
+fn cli_train_pjrt_fails_cleanly_and_names_the_native_engine() {
+    // Offline there is no PJRT backend: `train --engine pjrt` must be a
+    // typed error (exit 1, no panic) that tells the user the native
+    // engine works. Skip when artifacts + a PJRT build are present.
+    if artifacts_dir().is_some() {
+        eprintln!("skipping: artifacts present, PJRT may actually run");
+        return;
+    }
+    assert_clean_cli_error(&["train", "--engine", "pjrt", "--steps", "1"], "--engine native");
+    assert_clean_cli_error(&["train", "--engine", "pjrt", "--steps", "1"], "PJRT");
+}
+
+#[test]
+fn cli_train_rejects_bad_arguments() {
+    assert_clean_cli_error(&["train", "--engine", "warp"], "--engine must be native|pjrt");
+    assert_clean_cli_error(&["train", "--precision", "fp12"], "--precision must be fp32|fp16|fp16alt|fp8|hfp8");
+    assert_clean_cli_error(&["train", "--dataset", "mnist"], "--dataset must be spiral|rings");
+    assert_clean_cli_error(&["train", "--optim", "lamb"], "--optim must be adam|sgd");
+    assert_clean_cli_error(&["train", "--act", "swish"], "--act must be relu|gelu");
+    // Lane-infeasible hidden width is a typed plan-build error.
+    assert_clean_cli_error(&["train", "--hidden", "20"], "multiple of 8");
+}
+
+#[test]
+fn cli_train_native_smoke() {
+    let out = repro(&["train", "--steps", "5", "--quiet", "--precision", "hfp8"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("native training: policy hfp8"), "{stdout}");
+    assert!(stdout.contains("packed fast path"), "{stdout}");
+}
+
+// ------------------------------------------- native training (blocking)
+
+#[test]
+fn native_training_convergence_smoke() {
+    // The subsystem's acceptance gate, run natively (no artifacts, no
+    // PJRT): HFP8 — FP8alt forward / FP8 backward operands, FP16
+    // ExSdotp accumulation, FP32 master weights, dynamic loss scaling —
+    // must solve the spiral task and land within 2 points of the native
+    // FP32 baseline, with every matmul a packed GemmPlan run.
+    let session = Session::builder().seed(42).build();
+    let mut accs = Vec::new();
+    for policy in [PrecisionPolicy::hfp8(), PrecisionPolicy::fp32()] {
+        let mut tr = session.native_trainer(policy).expect("trainer");
+        tr.train(500, 0).expect("train");
+        let acc = tr.accuracy().expect("accuracy");
+        if policy.fwd != policy.acc {
+            assert_eq!(
+                tr.packed_runs(),
+                tr.gemm_calls(),
+                "{}: every GEMM must run the packed plan route",
+                policy.name
+            );
+        }
+        accs.push((policy.name, acc));
+    }
+    let (hfp8, fp32) = (accs[0].1, accs[1].1);
+    assert!(hfp8 >= 0.90, "HFP8 accuracy {hfp8} below the 90% gate");
+    assert!(fp32 >= 0.90, "FP32 baseline accuracy {fp32} below the 90% gate");
+    assert!(
+        fp32 - hfp8 <= 0.02,
+        "HFP8 ({hfp8}) must land within 2 points of the FP32 baseline ({fp32})"
+    );
+}
