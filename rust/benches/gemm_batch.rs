@@ -10,10 +10,9 @@
 //!   rows in parallel), so the trajectory measures what users actually
 //!   call.
 //!
-//! All paths produce bit-identical C (verified here before timing,
-//! including the deprecated `batch::gemm` shim). The run appends a
-//! trajectory point to `BENCH_gemm.json` in the working directory so CI
-//! can track the speedup over time.
+//! All paths produce bit-identical C (verified here before timing).
+//! The run appends a trajectory point to `BENCH_gemm.json` in the
+//! working directory so CI can track the speedup over time.
 
 use minifloat_nn::isa::instr::OpWidth;
 use minifloat_nn::kernels::kernel_reference;
@@ -35,17 +34,14 @@ fn main() {
     let flops = kern.flops() as f64;
 
     // Bit-identity gate before any timing: a fast wrong answer is
-    // worthless. Reference replay == new API == deprecated shim.
+    // worthless. Per-element reference replay == typed plan API.
     let want = kernel_reference(&kern, &a, &b);
     let got = plan.run_f64(&a, &b).expect("valid run").c_f64();
-    #[allow(deprecated)]
-    let shim = minifloat_nn::batch::gemm(kind, m, n, k, &a, &b, RoundingMode::Rne);
     let identical = |x: &[f64], y: &[f64]| {
         x.iter().zip(y).all(|(w, g)| w.to_bits() == g.to_bits() || (w.is_nan() && g.is_nan()))
     };
     assert!(identical(&want, &got), "plan API diverged from the per-element reference");
-    assert!(identical(&want, &shim), "deprecated batch::gemm shim diverged");
-    println!("bit-identity: Session plan == batch::gemm == kernel_reference on {m}x{n}x{k} FP8->FP16 ✓\n");
+    println!("bit-identity: Session plan == kernel_reference on {m}x{n}x{k} FP8->FP16 ✓\n");
 
     println!("== FP8->FP16 {m}x{n}x{k} GEMM: per-element baseline vs typed-API batch engine ==");
     let mut bench = Bencher::new();

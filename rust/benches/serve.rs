@@ -1,0 +1,127 @@
+//! Serving throughput: dynamic batching vs a batch-of-1 baseline.
+//!
+//! Both servers replay the *same* seeded open-loop trace over the same
+//! two frozen tenants (HFP8 + FP32). The unbatched baseline runs
+//! `max_batch = 1`, so every request occupies a full 8-row padded GEMM
+//! alone; the batched server coalesces up to 64 requests per dispatch.
+//! Before any timing, the run gates on correctness:
+//!
+//! * determinism — two replays (and shard counts 1 vs 4) must produce
+//!   bit-identical responses and identical stats;
+//! * routing — every expanding-pair tenant GEMM must take the packed
+//!   zero-repack route (the frozen weights were packed for exactly
+//!   that);
+//! * **throughput — the batched path must be at least 2x the unbatched
+//!   baseline** (the CI-blocking gate: if batching stops paying for
+//!   itself, the subsystem lost its reason to exist).
+//!
+//! Appends a trajectory point to `BENCH_serve.json` in the working
+//! directory, next to `BENCH_gemm.json` and `BENCH_train.json`.
+
+use minifloat_nn::prelude::*;
+use minifloat_nn::serve::sim;
+use minifloat_nn::util::bench::Bencher;
+use std::io::Write;
+
+fn frozen(session: &Session, policy: PrecisionPolicy, steps: usize) -> InferenceModel {
+    let mut tr = session.native_trainer(policy).expect("valid train plan");
+    tr.train(steps, 0).expect("train");
+    InferenceModel::freeze(session, tr.model(), tr.policy()).expect("freeze")
+}
+
+fn main() {
+    let session = Session::builder().seed(42).build();
+    let n_requests = 384;
+    println!("== serving: dynamic batching vs batch-of-1, {n_requests}-request open-loop trace ==\n");
+
+    let hfp8 = frozen(&session, PrecisionPolicy::hfp8(), 24);
+    let fp32 = frozen(&session, PrecisionPolicy::fp32(), 24);
+    let plan_with = |max_batch: usize, shards: usize| {
+        session
+            .server()
+            .tenant("hfp8", hfp8.clone())
+            .tenant("fp32", fp32.clone())
+            .max_batch(max_batch)
+            .max_wait_ticks(4)
+            .shards(shards)
+            .build()
+            .expect("valid serve plan")
+    };
+    let batched = plan_with(64, 4);
+    let unbatched = plan_with(1, 4);
+    // High arrival rate (8/tick) so the batcher actually has queues to
+    // coalesce — the regime batching exists for.
+    let trace =
+        sim::Trace::open_loop(42, &[8, 8], n_requests, 1.0 / 8.0, None).expect("trace");
+
+    // Gate 1: determinism across runs and shard counts, plus routing.
+    let run = |plan: &ServePlan| {
+        let mut server = plan.server();
+        let responses = sim::replay(&mut server, &trace).expect("replay");
+        (responses, server.stats().clone())
+    };
+    let (r1, s1) = run(&batched);
+    let (r2, s2) = run(&batched);
+    let (r3, s3) = run(&plan_with(64, 1));
+    assert_eq!(r1.len(), n_requests);
+    let bits = |rs: &[minifloat_nn::serve::Response]| -> Vec<Vec<u64>> {
+        rs.iter().map(|r| r.logits.iter().map(|v| v.to_bits()).collect()).collect()
+    };
+    assert_eq!(bits(&r1), bits(&r2), "same trace must replay bit-identically");
+    assert_eq!(bits(&r1), bits(&r3), "shard count must not change a single bit");
+    assert_eq!(s1.summary_json(), s2.summary_json(), "stats must replay identically");
+    assert_eq!(s1.summary_json(), s3.summary_json(), "stats must be shard-count independent");
+    assert_eq!(
+        s1.tenants[0].packed_runs, s1.tenants[0].gemm_calls,
+        "hfp8 tenant: every GEMM must take the packed zero-repack route"
+    );
+    assert!(s1.tenants[0].gemm_calls > 0 && s1.tenants[1].gemm_calls > 0);
+    println!(
+        "determinism: 2 runs x shards {{1,4}} bit-identical; hfp8 routing 100% packed ✓\n"
+    );
+
+    // Gate 2 setup: time both paths on wall clock.
+    let mut bench = Bencher::new();
+    let batched_s = bench
+        .bench_throughput("batched (max_batch 64)", n_requests as f64, || run(&batched).0)
+        .median
+        .as_secs_f64();
+    let unbatched_s = bench
+        .bench_throughput("unbatched (max_batch 1)", n_requests as f64, || run(&unbatched).0)
+        .median
+        .as_secs_f64();
+    let batched_rps = n_requests as f64 / batched_s;
+    let unbatched_rps = n_requests as f64 / unbatched_s;
+    let speedup = batched_rps / unbatched_rps;
+    println!(
+        "\nthroughput: batched {batched_rps:.0} req/s vs unbatched {unbatched_rps:.0} req/s \
+         ({speedup:.1}x, gate: >= 2x)"
+    );
+
+    // Trajectory point first (a failed gate should still leave data),
+    // then the blocking assert.
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let json = format!(
+        "{{\"bench\":\"serve_open_loop_{n_requests}req\",\"unix_time\":{ts},\
+         \"batched_rps\":{batched_rps:.1},\"unbatched_rps\":{unbatched_rps:.1},\
+         \"speedup\":{speedup:.2},\"deterministic\":true,\"stats\":{}}}\n",
+        s1.summary_json()
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open("BENCH_serve.json") {
+        Ok(mut f) => {
+            let _ = f.write_all(json.as_bytes());
+            println!("trajectory point appended to BENCH_serve.json");
+        }
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+
+    assert!(
+        speedup >= 2.0,
+        "dynamic batching must deliver at least 2x the batch-of-1 throughput \
+         (got {speedup:.2}x) — the serving layer's reason to exist"
+    );
+    println!("throughput gate passed: {speedup:.1}x >= 2x ✓");
+}

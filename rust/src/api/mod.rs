@@ -20,9 +20,10 @@
 //!   [`Error`](crate::util::error::Error) at plan-build time, never a
 //!   panic mid-run.
 //!
-//! The pre-API free functions remain as thin deprecated shims for one
-//! release; the differential tests in this module pin the new surface
-//! bit-identical to them.
+//! The pre-API free functions are gone (the deprecated `batch::gemm`
+//! shim served its one release and has been removed); the differential
+//! tests in this module pin the typed surface bit-identical to the
+//! kernel-level reference paths instead.
 //!
 //! ```
 //! use minifloat_nn::prelude::*;
@@ -40,6 +41,7 @@
 //! ```
 
 pub mod plan;
+pub mod serve;
 pub mod session;
 pub mod tensor;
 pub mod train;
@@ -47,6 +49,7 @@ pub mod train;
 mod tests;
 
 pub use plan::{AccumulatePlan, AccumulatePlanBuilder, GemmPlan, GemmPlanBuilder, RunReport};
+pub use serve::{ServePlan, ServePlanBuilder};
 pub use session::{Session, SessionBuilder};
 pub use tensor::{Layout, MfTensor, MfTensorView};
 pub use train::{TrainPlan, TrainPlanBuilder};

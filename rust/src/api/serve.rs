@@ -1,0 +1,176 @@
+//! [`ServePlan`] — the validated front door to the serving subsystem,
+//! mirroring [`crate::api::GemmPlan`] / [`crate::api::TrainPlan`]'s
+//! builder style.
+//!
+//! `session.server().tenant("hfp8", model).max_batch(64).build()?`
+//! checks everything a server needs before any request exists: the
+//! session drives the functional engine, tenant names are unique,
+//! the knobs are sane, and — per tenant, per layer — a **probe
+//! [`crate::api::GemmPlan`]** is built for both the smallest padded
+//! batch and the largest one, so an unsupported policy pair or a
+//! lane-infeasible layer width is a typed error here, never a panic
+//! (or a mid-trace failure) later.
+//!
+//! ```
+//! use minifloat_nn::prelude::*;
+//! use minifloat_nn::serve::InferenceModel;
+//!
+//! # fn main() -> minifloat_nn::util::error::Result<()> {
+//! let session = Session::builder().seed(3).build();
+//! let mut tr = session.native_trainer(PrecisionPolicy::hfp8())?;
+//! tr.train(5, 0)?;
+//! let model = InferenceModel::freeze(&session, tr.model(), tr.policy())?;
+//! let plan = session.server().tenant("prod", model).max_batch(32).build()?;
+//! let server = plan.server();
+//! assert_eq!(server.tenants().len(), 1);
+//! # Ok(())
+//! # }
+//! ```
+
+use super::session::Session;
+use crate::ensure;
+use crate::kernels::gemm::ExecMode;
+use crate::serve::batcher::{pad_rows, BatchPolicy, ROW_PAD};
+use crate::serve::model::InferenceModel;
+use crate::serve::worker::{Server, Tenant};
+use crate::util::error::Result;
+
+/// Range-check the serving knobs. Shared by [`ServePlanBuilder::build`]
+/// and the `repro serve` CLI, which wants to reject a bad knob *before*
+/// spending seconds training in-process tenant models.
+pub fn validate_knobs(max_batch: usize, max_wait_ticks: u64, shards: usize) -> Result<()> {
+    ensure!(
+        (1..=4096).contains(&max_batch),
+        "max_batch ({max_batch}) must be in 1..=4096 (--max-batch)"
+    );
+    ensure!((1..=256).contains(&shards), "shard count ({shards}) must be in 1..=256 (--shards)");
+    // Bounded so tick arithmetic (`arrival + max_wait`, the drain
+    // bound) can never overflow u64 within any plausible trace.
+    ensure!(
+        max_wait_ticks <= 1 << 40,
+        "max_wait_ticks ({max_wait_ticks}) must be at most 2^40 (--max-wait)"
+    );
+    Ok(())
+}
+
+/// Builder returned by [`Session::server`]; add at least one tenant,
+/// every knob has a sensible default (batch 32, wait 4 ticks, 1 shard).
+#[derive(Clone, Debug)]
+pub struct ServePlanBuilder<'s> {
+    session: &'s Session,
+    tenants: Vec<Tenant>,
+    max_batch: usize,
+    max_wait_ticks: u64,
+    shards: usize,
+}
+
+impl<'s> ServePlanBuilder<'s> {
+    pub(crate) fn new(session: &'s Session) -> Self {
+        ServePlanBuilder { session, tenants: Vec::new(), max_batch: 32, max_wait_ticks: 4, shards: 1 }
+    }
+
+    /// Register a tenant: a name plus its frozen model. Call once per
+    /// tenant; names must be unique.
+    pub fn tenant(mut self, name: &str, model: InferenceModel) -> Self {
+        self.tenants.push(Tenant { name: name.to_string(), model });
+        self
+    }
+
+    /// Largest logical batch one dispatch coalesces (default 32;
+    /// `--max-batch` on the CLI).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    /// Longest a request may queue before its tenant dispatches anyway
+    /// (default 4 ticks; `--max-wait` on the CLI).
+    pub fn max_wait_ticks(mut self, t: u64) -> Self {
+        self.max_wait_ticks = t;
+        self
+    }
+
+    /// Parallel shards in the worker pool (default 1; `--shards` on
+    /// the CLI). Responses are bit-identical at any shard count.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n;
+        self
+    }
+
+    /// Validate everything and return the runnable plan.
+    pub fn build(self) -> Result<ServePlan> {
+        ensure!(
+            self.session.mode() == ExecMode::Functional,
+            "serving runs on the functional batch engine (request batches are not \
+             cycle-accurate workloads); build the session with ExecMode::Functional"
+        );
+        ensure!(
+            !self.tenants.is_empty(),
+            "a server needs at least one tenant (ServePlanBuilder::tenant / --tenants)"
+        );
+        validate_knobs(self.max_batch, self.max_wait_ticks, self.shards)?;
+        for (i, t) in self.tenants.iter().enumerate() {
+            ensure!(!t.name.is_empty(), "tenant {i} has an empty name");
+            ensure!(
+                !self.tenants[..i].iter().any(|o| o.name == t.name),
+                "duplicate tenant name '{}'",
+                t.name
+            );
+            t.model.validate()?;
+            t.model.policy().validate()?;
+            // Probe-build one GEMM plan per layer at the smallest and
+            // largest padded batch shapes, so every plan the shards will
+            // ever build is known runnable (typed errors here, not
+            // mid-trace).
+            for rows in [ROW_PAD, pad_rows(self.max_batch)] {
+                for l in t.model.layers() {
+                    self.session
+                        .gemm()
+                        .src(t.model.policy().fwd)
+                        .acc(t.model.policy().acc)
+                        .dims(rows, l.out_dim, l.in_dim)?;
+                }
+            }
+        }
+        Ok(ServePlan {
+            session: *self.session,
+            tenants: self.tenants,
+            policy: BatchPolicy { max_batch: self.max_batch, max_wait_ticks: self.max_wait_ticks },
+            shards: self.shards,
+        })
+    }
+}
+
+/// A fully validated serving configuration. Constructed only through
+/// [`ServePlanBuilder::build`]; [`ServePlan::server`] materializes the
+/// stateful [`Server`] (queues, shard pool, stats).
+#[derive(Clone, Debug)]
+pub struct ServePlan {
+    session: Session,
+    tenants: Vec<Tenant>,
+    policy: BatchPolicy,
+    shards: usize,
+}
+
+impl ServePlan {
+    /// The batching knobs.
+    pub fn batch_policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Shards the server will run.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Registered tenant names, in index order.
+    pub fn tenant_names(&self) -> Vec<&str> {
+        self.tenants.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// Build a fresh server (clones the frozen models, so one plan can
+    /// spawn several servers — e.g. the shard-count determinism tests).
+    pub fn server(&self) -> Server {
+        Server::assemble(self.session, self.tenants.clone(), self.policy, self.shards)
+    }
+}

@@ -7,6 +7,7 @@
 //! ([`Session::gemm`], [`Session::accumulate`]) inherit it.
 
 use super::plan::{AccumulatePlanBuilder, GemmPlanBuilder};
+use super::serve::ServePlanBuilder;
 use super::tensor::{Layout, MfTensor};
 use super::train::TrainPlanBuilder;
 use crate::coordinator::{Precision, Trainer};
@@ -127,6 +128,13 @@ impl Session {
     /// (`session.train().policy(PrecisionPolicy::hfp8()).build()?`).
     pub fn train(&self) -> TrainPlanBuilder<'_> {
         TrainPlanBuilder::new(self)
+    }
+
+    /// Start a typed serving plan: the multi-tenant batched inference
+    /// server over frozen [`crate::serve::InferenceModel`]s
+    /// (`session.server().tenant("prod", model).max_batch(64).build()?`).
+    pub fn server(&self) -> ServePlanBuilder<'_> {
+        ServePlanBuilder::new(self)
     }
 
     /// Convenience: a ready [`crate::nn::NativeTrainer`] with the given

@@ -13,7 +13,7 @@
 //!   monomorphized Tier-A kernels ([`crate::softfloat::fast`],
 //!   [`crate::exsdotp::fast`]) with no per-lane re-dispatch;
 //! * slice operations ([`exsdotp_accumulate`], [`cast_slice`],
-//!   [`gemm`]) iterate whole registers and parallelize across output
+//!   [`gemm_m`]) iterate whole registers and parallelize across output
 //!   rows with [`crate::util::parallel`] (scoped threads; rayon is
 //!   unavailable offline);
 //! * every operation replays the **identical accumulation order** of
@@ -225,26 +225,15 @@ pub(crate) fn pack_cols(fmt: FpFormat, data: &[f64], rows: usize, cols: usize, r
 
 // ----------------------------------------------------------------- GEMM
 
-/// Functional GEMM `C = A·B` on the batch engine: same numerics, same
-/// accumulation order, same `vsum` epilogue as the generated cluster
-/// kernels — bit-identical C — but iterating packed registers directly
-/// and parallelizing across output rows.
-///
-/// `a` is `m×k`, `b` is `k×n`, both row-major f64 (quantized to the
-/// kernel's source format on packing, like [`GemmKind`]'s simulated
-/// path); returns row-major `m×n` C decoded to f64.
-#[deprecated(
-    since = "0.3.0",
-    note = "build a typed plan via `api::Session::gemm` instead; this shim stays \
-            for one release so differential tests can pin new-vs-old bit-identity"
-)]
-pub fn gemm(kind: GemmKind, m: usize, n: usize, k: usize, a: &[f64], b: &[f64], rm: RoundingMode) -> Vec<f64> {
-    gemm_dispatch(kind, m, n, k, a, b, rm)
-}
-
-/// The engine behind the deprecated [`gemm`] shim and
-/// `ExecMode::Functional` — crate-internal so all public traffic flows
-/// through the typed plan API ([`crate::api::GemmPlan`]).
+/// Functional GEMM `C = A·B` on the batch engine — the engine behind
+/// `ExecMode::Functional`: same numerics, same accumulation order, same
+/// `vsum` epilogue as the generated cluster kernels (bit-identical C),
+/// but iterating packed registers directly and parallelizing across
+/// output rows. `a` is `m×k`, `b` is `k×n`, both row-major f64
+/// (quantized to the kernel's source format on packing). Crate-internal
+/// so all public traffic flows through the typed plan API
+/// ([`crate::api::GemmPlan`]); the deprecated `gemm` shim that used to
+/// front this is gone.
 pub(crate) fn gemm_dispatch(
     kind: GemmKind,
     m: usize,

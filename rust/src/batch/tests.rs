@@ -1,8 +1,9 @@
 //! Differential validation of the batch engine: the fast tiers must be
 //! **bit-identical** to the descriptor-driven softfloat/ExSdotp path —
-//! across format pairs, rounding modes and special values — and
-//! `batch::gemm` must reproduce the generated kernels' C matrices
-//! exactly (same accumulation order, same epilogue tree).
+//! across format pairs, rounding modes and special values — and the
+//! batch GEMM engine (`gemm_dispatch` and the monomorphized kernels
+//! behind it) must reproduce the generated kernels' C matrices exactly
+//! (same accumulation order, same epilogue tree).
 
 use super::*;
 use crate::exsdotp::simd::{lane, set_lane};
@@ -116,7 +117,7 @@ fn cast_slice_matches_scalar_casts_with_specials() {
 #[test]
 fn batch_gemm_bit_identical_to_kernel_reference_all_kinds() {
     // The reference replays the generated kernels' accumulation order
-    // per element; batch::gemm must match it bit for bit.
+    // per element; gemm_dispatch must match it bit for bit.
     let (m, n, k) = (16, 24, 32);
     let (a, b) = random_mats(m, n, k, 2024);
     for kind in all_kinds() {

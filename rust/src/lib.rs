@@ -72,6 +72,12 @@
 //!   over typed minifloat activations, FP32-master optimizers and
 //!   dynamic loss scaling — every matmul a validated [`api::GemmPlan`]
 //!   on the ExSdotp batch engine ([`api::Session::train`]).
+//! * [`serve`] — multi-tenant batched inference serving: frozen
+//!   [`serve::InferenceModel`] snapshots with pre-packed weights
+//!   (every request GEMM on the zero-repack route), deadline-aware
+//!   queues, a dynamic batcher, a shard pool, and a seeded
+//!   virtual-time load generator — deterministic down to the bit
+//!   ([`api::Session::server`]).
 //!
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
 //! reproduced tables and figures.
@@ -92,6 +98,7 @@ pub mod kernels;
 pub mod nn;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod softfloat;
 pub mod util;
 pub mod wide;
@@ -102,19 +109,21 @@ pub use softfloat::{RoundingMode, SoftFloat};
 
 /// One-line import for the typed API:
 /// `use minifloat_nn::prelude::*;` brings in the session/tensor/plan
-/// types (including the native-training plan), the six paper formats,
-/// and the execution/rounding enums.
+/// types (including the native-training and serving plans), the six
+/// paper formats, and the execution/rounding enums.
 pub mod prelude {
     pub use crate::accuracy::AccuracyPoint;
     pub use crate::api::{
         AccumulatePlan, AccumulatePlanBuilder, GemmPlan, GemmPlanBuilder, Layout, MfTensor,
-        MfTensorView, RunReport, Session, SessionBuilder, TrainPlan, TrainPlanBuilder,
+        MfTensorView, RunReport, ServePlan, ServePlanBuilder, Session, SessionBuilder, TrainPlan,
+        TrainPlanBuilder,
     };
     pub use crate::formats::{FpFormat, FP16, FP16ALT, FP32, FP64, FP8, FP8ALT};
     pub use crate::kernels::gemm::{ExecMode, GemmKind};
     pub use crate::nn::{
         Activation, DataSpec, NativeTrainer, OptimSpec, PrecisionPolicy, StepRecord,
     };
+    pub use crate::serve::{InferenceModel, ServeStats, Server};
     pub use crate::softfloat::RoundingMode;
     pub use crate::util::error::{Error, Result};
 }

@@ -5,10 +5,12 @@
 
 use minifloat_nn::api::{self, Session};
 use minifloat_nn::coordinator::Precision;
-use minifloat_nn::nn::{Activation, DataSpec, OptimSpec};
+use minifloat_nn::nn::{Activation, DataSpec, OptimSpec, PrecisionPolicy};
 use minifloat_nn::report;
+use minifloat_nn::serve::{sim, InferenceModel};
 use minifloat_nn::util::cli::Args;
 use minifloat_nn::util::error::Result;
+use minifloat_nn::{bail, ensure};
 
 const HELP: &str = "\
 repro — reproduction of 'MiniFloat-NN and ExSdotp' (Bertaccini et al., 2022)
@@ -37,8 +39,19 @@ End-to-end training:
                     [--precision fp32|fp16|fp16alt|fp8|hfp8]  (default hfp8)
                     [--steps N] [--dataset spiral|rings] [--hidden H] [--batch B]
                     [--optim adam|sgd] [--lr X] [--act relu|gelu] [--seed S] [--quiet]
+                    [--save FILE]  (freeze the trained model into a serving checkpoint)
                     (--engine pjrt drives the AOT artifacts instead; needs `make artifacts`
                      and a PJRT-enabled build; [--artifacts DIR], hfp8|fp32 only)
+
+Serving:
+  serve             multi-tenant batched inference serving (virtual time, deterministic)
+                    [--tenants P1,P2,...]  comma-separated precision policies, one tenant
+                                           each, trained in-process (default hfp8,fp32)
+                    [--checkpoint FILE]    serve a saved model instead (see train --save)
+                    [--requests N] [--max-batch B] [--max-wait T] [--shards S]
+                    [--load open|closed] [--clients N] [--deadline T] [--train-steps N]
+                    [--rate R]  mean arrivals per tick for the open loop
+                    [--seed S] [--json]
 
 Options:
   --seed S          RNG seed for simulated workloads (default 42)
@@ -46,7 +59,9 @@ Options:
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let seed: u64 = args.get("seed", 42);
+    // Strict: a typo'd seed must not silently become the default — the
+    // serving/accuracy workloads advertise seeded reproducibility.
+    let seed: u64 = args.try_get("seed", 42)?;
     match args.command.as_deref() {
         Some("table1") => print!("{}", report::table1_text()),
         Some("table2") => {
@@ -121,9 +136,9 @@ fn main() -> Result<()> {
             let log_every = if args.has_flag("quiet") { 0 } else { 20 };
             match api::parse_engine(&args.get_str("engine", "native"))? {
                 api::TrainEngine::Native => {
-                    let steps: usize = args.get("steps", 500);
+                    let steps: usize = args.try_get("steps", 500)?;
                     let policy = api::parse_policy(&args.get_str("precision", "hfp8"))?;
-                    let lr: f64 = args.get("lr", 4e-3);
+                    let lr: f64 = args.try_get("lr", 4e-3)?;
                     let optim = match args.get_str("optim", "adam").as_str() {
                         "adam" => OptimSpec::adam(lr),
                         "sgd" => OptimSpec::sgd(lr),
@@ -138,8 +153,8 @@ fn main() -> Result<()> {
                         .train()
                         .policy(policy)
                         .dataset(DataSpec::parse(&args.get_str("dataset", "spiral"))?)
-                        .hidden(args.get("hidden", 32))
-                        .batch(args.get("batch", 64))
+                        .hidden(args.try_get("hidden", 32)?)
+                        .batch(args.try_get("batch", 64)?)
                         .activation(Activation::parse(&args.get_str("act", "relu"))?)
                         .optimizer(optim)
                         .build()?
@@ -163,9 +178,19 @@ fn main() -> Result<()> {
                         tr.skipped_steps(),
                         tr.loss_scale()
                     );
+                    if let Some(path) = args.options.get("save") {
+                        let frozen = InferenceModel::freeze(tr.session(), tr.model(), tr.policy())?;
+                        frozen.save(path)?;
+                        println!(
+                            "checkpoint saved to {path} ({} layers, policy {}) — serve it with \
+                             `repro serve --checkpoint {path}`",
+                            frozen.layers().len(),
+                            frozen.policy().name
+                        );
+                    }
                 }
                 api::TrainEngine::Pjrt => {
-                    let steps: usize = args.get("steps", 300);
+                    let steps: usize = args.try_get("steps", 300)?;
                     let dir = args.get_str("artifacts", "artifacts");
                     let precision = match args.get_str("precision", "hfp8").as_str() {
                         "fp32" => Precision::Fp32,
@@ -183,6 +208,111 @@ fn main() -> Result<()> {
                     let acc = tr.accuracy()?;
                     println!("final loss {final_loss:.4}   accuracy {:.1}%", acc * 100.0);
                 }
+            }
+        }
+        Some("serve") => {
+            // All argument validation is typed: numeric flags parse
+            // strictly up front (a typo is an error, not a silent
+            // default), everything structural in the ServePlanBuilder —
+            // bad input is exit code 1 with a message, never a panic.
+            let max_batch: usize = args.try_get("max-batch", 32)?;
+            let max_wait: u64 = args.try_get("max-wait", 4)?;
+            let shards: usize = args.try_get("shards", 4)?;
+            let requests: usize = args.try_get("requests", 512)?;
+            let deadline: u64 = args.try_get("deadline", 0)?;
+            let deadline = (deadline > 0).then_some(deadline);
+            // Reject out-of-range knobs *before* the tenant-training
+            // loop spends seconds of GEMM work.
+            minifloat_nn::api::serve::validate_knobs(max_batch, max_wait, shards)?;
+            let session = Session::builder().seed(seed).build();
+            let mut tenants: Vec<(String, InferenceModel)> = Vec::new();
+            if let Some(path) = args.options.get("checkpoint") {
+                ensure!(
+                    !args.options.contains_key("tenants") && !args.options.contains_key("train-steps"),
+                    "--checkpoint serves the saved model alone; it conflicts with \
+                     --tenants/--train-steps (drop one or the other)"
+                );
+                let model = InferenceModel::load(&session, path)?;
+                tenants.push((model.policy().name.to_string(), model));
+            } else {
+                let spec = args.get_str("tenants", "hfp8,fp32");
+                let train_steps: usize = args.try_get("train-steps", 120)?;
+                ensure!(train_steps > 0, "--train-steps must be positive");
+                for name in spec.split(',') {
+                    let name = name.trim();
+                    if name.is_empty() {
+                        bail!(
+                            "--tenants must be a non-empty comma-separated list of \
+                             fp32|fp16|fp16alt|fp8|hfp8, got '{spec}'"
+                        );
+                    }
+                    let policy = PrecisionPolicy::parse(name).map_err(|_| {
+                        minifloat_nn::util::error::Error::msg(format!(
+                            "--tenants must list precision policies \
+                             (fp32|fp16|fp16alt|fp8|hfp8), got '{name}'"
+                        ))
+                    })?;
+                    if tenants.iter().any(|(n, _)| n == name) {
+                        bail!("--tenants lists '{name}' twice; tenant names must be unique");
+                    }
+                    // Per-tenant seed salt so tenants do not share weights.
+                    let tseed = seed ^ (0x5E21 + tenants.len() as u64);
+                    let tsession = Session::builder().seed(tseed).build();
+                    let mut tr = tsession.native_trainer(policy)?;
+                    // Progress goes to stderr so `--json` leaves stdout
+                    // as one parseable JSON line.
+                    eprintln!("training tenant '{name}' for {train_steps} steps...");
+                    tr.train(train_steps, 0)?;
+                    tenants.push((name.to_string(), InferenceModel::freeze(&session, tr.model(), tr.policy())?));
+                }
+            }
+            let mut builder =
+                session.server().max_batch(max_batch).max_wait_ticks(max_wait).shards(shards);
+            for (name, model) in tenants {
+                builder = builder.tenant(&name, model);
+            }
+            let plan = builder.build()?;
+            let mut server = plan.server();
+            let in_dims: Vec<usize> =
+                server.tenants().iter().map(|t| t.model.in_dim()).collect();
+            let responses = match args.get_str("load", "open").as_str() {
+                "open" => {
+                    let rate: f64 = args.try_get("rate", 4.0)?;
+                    ensure!(
+                        rate.is_finite() && rate > 0.0,
+                        "--rate must be a positive arrival rate per tick, got {rate}"
+                    );
+                    let trace = sim::Trace::open_loop(
+                        seed ^ 0x7E1,
+                        &in_dims,
+                        requests,
+                        1.0 / rate,
+                        deadline,
+                    )?;
+                    sim::replay(&mut server, &trace)?
+                }
+                "closed" => {
+                    let clients: usize = args.try_get("clients", 16)?;
+                    sim::closed_loop(&mut server, clients, requests, 1, seed ^ 0x7E1, deadline)?
+                }
+                other => bail!("--load must be open|closed, got '{other}'"),
+            };
+            let names: Vec<String> =
+                server.tenants().iter().map(|t| t.name.clone()).collect();
+            if args.has_flag("json") {
+                println!("{}", server.stats().summary_json());
+            } else {
+                println!(
+                    "served {} responses over {} virtual ticks ({} tenants, {} shards, \
+                     max batch {}, max wait {})",
+                    responses.len(),
+                    server.now(),
+                    names.len(),
+                    server.shard_count(),
+                    plan.batch_policy().max_batch,
+                    plan.batch_policy().max_wait_ticks
+                );
+                print!("{}", report::serve_stats_text(server.stats(), &names));
             }
         }
         _ => print!("{HELP}"),

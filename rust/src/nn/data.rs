@@ -162,10 +162,22 @@ pub struct Dataset {
     pub classes: usize,
 }
 
-fn pad_features(px: f64, py: f64, out: &mut Vec<f64>) {
+/// Embed a 2-D point exactly as the datasets do — through
+/// [`SpiralDataset::embed`]'s f32 arithmetic (`[x, y, r², 1]`), widened
+/// back to f64 and zero-padded to `width` lanes; widths below the 4
+/// embedding lanes are clamped to 4 (the embedding is never truncated).
+/// The serving load generator ([`crate::serve::sim`]) uses this so
+/// generated request features are bit-faithful to the training feature
+/// pipeline.
+pub fn embed_padded(px: f64, py: f64, width: usize) -> Vec<f64> {
     let e = SpiralDataset::embed(px as f32, py as f32);
-    out.extend(e.iter().map(|&v| v as f64));
-    out.extend(std::iter::repeat(0.0).take(IN_DIM - 4));
+    let mut out: Vec<f64> = e.iter().map(|&v| v as f64).collect();
+    out.resize(width.max(4), 0.0);
+    out
+}
+
+fn pad_features(px: f64, py: f64, out: &mut Vec<f64>) {
+    out.extend(embed_padded(px, py, IN_DIM));
 }
 
 impl Dataset {

@@ -14,7 +14,7 @@
 //! [`crate::nn::policy::LossScaler`]); layers store them scaled and the
 //! trainer unscales once before the optimizer step.
 
-use crate::api::{Layout, Session};
+use crate::api::{Layout, MfTensor, Session};
 use crate::ensure;
 use crate::formats::FpFormat;
 use crate::nn::engine::GemmCtx;
@@ -24,6 +24,50 @@ use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 // -------------------------------------------------------------- linear
+
+/// One linear forward step against an already-prepared weight tensor
+/// (`policy.fwd`; column-major storage hits the packed zero-repack
+/// route): quantize `x` row-major, run the plan, add the bias in host
+/// precision, re-grid the result onto `policy.acc`. Returns the output
+/// and the quantized input (what a tape saves for backward).
+///
+/// This is the **single** implementation of the linear epilogue: the
+/// training [`Linear::forward`] (which quantizes its FP32 masters every
+/// step) and the frozen serving path
+/// ([`crate::serve::InferenceModel`], which packed its weights once)
+/// both call it, so the two can never silently diverge.
+pub fn linear_forward_with(
+    ctx: &mut GemmCtx,
+    policy: &PrecisionPolicy,
+    wt: &MfTensor,
+    bias: &[f32],
+    x: &[f64],
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+) -> Result<(Vec<f64>, MfTensor)> {
+    ensure!(
+        x.len() == batch * in_dim,
+        "linear forward: input must be {batch}x{in_dim} = {} values, got {}",
+        batch * in_dim,
+        x.len()
+    );
+    ensure!(bias.len() == out_dim, "linear forward: bias must be {out_dim} values, got {}", bias.len());
+    let session = ctx.session();
+    // A row-major, B column-major: the layouts the kernel streams,
+    // so the plan's zero-repack route runs.
+    let xt = session.tensor(x, batch, in_dim, policy.fwd)?;
+    let mut y = ctx.matmul(policy.fwd, &xt, wt, batch, out_dim, in_dim, false, false)?;
+    for bi in 0..batch {
+        for j in 0..out_dim {
+            y[bi * out_dim + j] += bias[j] as f64;
+        }
+    }
+    // Epilogue rounding: the bias add happens in the accumulation
+    // precision on hardware, so re-grid the result there.
+    let y = session.tensor(&y, batch, out_dim, policy.acc)?.to_f64();
+    Ok((y, xt))
+}
 
 /// A fully-connected layer: `Y = X·W + b` with FP32 master parameters
 /// and minifloat compute.
@@ -73,28 +117,11 @@ impl Linear {
         batch: usize,
         tape: Option<&mut Tape>,
     ) -> Result<Vec<f64>> {
-        ensure!(
-            x.len() == batch * self.in_dim,
-            "Linear forward: input must be {batch}x{} = {} values, got {}",
-            self.in_dim,
-            batch * self.in_dim,
-            x.len()
-        );
         let session = ctx.session();
-        // A row-major, B column-major: the layouts the kernel streams,
-        // so the plan's zero-repack route runs.
-        let xt = session.tensor(x, batch, self.in_dim, policy.fwd)?;
         let w64 = self.w_f64();
         let wt = session.tensor_with_layout(&w64, self.in_dim, self.out_dim, policy.fwd, Layout::ColMajor)?;
-        let mut y = ctx.matmul(policy.fwd, &xt, &wt, batch, self.out_dim, self.in_dim, false, false)?;
-        for bi in 0..batch {
-            for j in 0..self.out_dim {
-                y[bi * self.out_dim + j] += self.b[j] as f64;
-            }
-        }
-        // Epilogue rounding: the bias add happens in the accumulation
-        // precision on hardware, so re-grid the result there.
-        let y = ctx.session().tensor(&y, batch, self.out_dim, policy.acc)?.to_f64();
+        let (y, xt) =
+            linear_forward_with(ctx, policy, &wt, &self.b, x, batch, self.in_dim, self.out_dim)?;
         if let Some(t) = tape {
             t.push_mf(xt);
         }
@@ -369,6 +396,22 @@ impl Mlp {
             }
         }
         Ok(h)
+    }
+
+    /// Inference-only forward: no tape, no activation recording, no
+    /// loss-scale plumbing — the hot path [`crate::serve`] freezes and
+    /// serves. Delegates to [`Mlp::forward`] with no tape (the tape
+    /// only *saves* operands; it never changes the compute), so the
+    /// two entry points cannot diverge; the `nn` tests pin the
+    /// bit-identity anyway.
+    pub fn forward_inference(
+        &self,
+        ctx: &mut GemmCtx,
+        policy: &PrecisionPolicy,
+        x: &[f64],
+        batch: usize,
+    ) -> Result<Vec<f64>> {
+        self.forward(ctx, policy, x, batch, None)
     }
 
     /// Backward from the logit gradient; fills every layer's `gw`/`gb`

@@ -283,6 +283,37 @@ fn every_training_matmul_is_a_packed_gemm_plan() {
 }
 
 #[test]
+fn forward_inference_is_bit_identical_to_training_forward() {
+    // The no-tape inference entry point (the serving hot path) must
+    // produce bit-for-bit the logits the training-path forward computes
+    // — with a tape (a training step's forward) and without one.
+    let session = session();
+    for policy in [PrecisionPolicy::hfp8(), PrecisionPolicy::fp32()] {
+        let mut tr = session.native_trainer(policy).expect("trainer");
+        tr.train(3, 0).expect("train");
+        let mut rng = Rng::new(5);
+        let batch = 16;
+        let x: Vec<f64> = (0..batch * IN_DIM)
+            .map(|i| if i % IN_DIM < 4 { rng.gaussian() * 0.5 } else { 0.0 })
+            .collect();
+        let model = tr.model().clone();
+        let mut ctx = GemmCtx::new(&session, policy.acc);
+        let inference = model.forward_inference(&mut ctx, &policy, &x, batch).expect("inference");
+        let mut ctx2 = GemmCtx::new(&session, policy.acc);
+        let no_tape = model.forward(&mut ctx2, &policy, &x, batch, None).expect("forward");
+        let mut ctx3 = GemmCtx::new(&session, policy.acc);
+        let mut tape = Tape::new();
+        let taped =
+            model.forward(&mut ctx3, &policy, &x, batch, Some(&mut tape)).expect("forward");
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&inference), bits(&no_tape), "{}: tape=None path", policy.name);
+        assert_eq!(bits(&inference), bits(&taped), "{}: taped training path", policy.name);
+        assert_eq!(ctx.calls, ctx3.calls, "same number of GEMM plans either way");
+        assert!(!tape.is_empty(), "the taped pass must have recorded activations");
+    }
+}
+
+#[test]
 fn training_is_bit_deterministic() {
     let mk = || {
         let session = Session::builder().seed(42).build();

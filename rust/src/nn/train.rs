@@ -93,6 +93,14 @@ impl NativeTrainer {
         &self.policy
     }
 
+    /// The session the trainer runs under (what
+    /// [`crate::serve::InferenceModel::freeze`] needs next to
+    /// [`NativeTrainer::model`] to snapshot a trained model for
+    /// serving).
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
     /// The model (read access for inspection/tests).
     pub fn model(&self) -> &Mlp {
         &self.model
@@ -177,7 +185,7 @@ impl NativeTrainer {
         let mut idx = 0;
         while idx + self.batch <= self.data.len() {
             let (x, labels) = self.data.ordered_batch(idx, self.batch);
-            let logits = self.model.forward(&mut ctx, &self.policy, &x, self.batch, None)?;
+            let logits = self.model.forward_inference(&mut ctx, &self.policy, &x, self.batch)?;
             for (b, &label) in labels.iter().enumerate() {
                 let row = &logits[b * OUT_DIM..b * OUT_DIM + self.data.classes];
                 let pred = row

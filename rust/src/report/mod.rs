@@ -338,3 +338,52 @@ pub fn train_curve_text(history: &[crate::nn::StepRecord]) -> String {
     }
     s
 }
+
+/// Human-readable summary of a serving run: throughput, batching,
+/// latency percentiles (virtual ticks) and per-tenant GEMM routing —
+/// what `repro serve` prints after a trace replay.
+pub fn serve_stats_text(stats: &crate::serve::ServeStats, tenant_names: &[String]) -> String {
+    let mut s = String::new();
+    s += &format!(
+        "requests     : {} completed / {} submitted over {} ticks ({:.2} req/tick)\n",
+        stats.completed,
+        stats.submitted,
+        stats.ticks,
+        stats.throughput_per_tick()
+    );
+    s += &format!(
+        "batching     : {} dispatches, mean batch {:.1}, histogram {}\n",
+        stats.batches,
+        stats.mean_batch(),
+        stats
+            .batch_hist
+            .iter()
+            .map(|(size, n)| format!("{size}x{n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    let (p50, p95, p99) = stats.latency_percentiles();
+    s += &format!(
+        "latency      : p50 {p50} / p95 {p95} / p99 {p99} ticks, {} deadline misses\n",
+        stats.deadline_misses
+    );
+    s += &format!(
+        "queue depth  : max {}, mean {:.1}\n",
+        stats.queue_depth_max,
+        stats.mean_queue_depth()
+    );
+    for (t, c) in stats.tenants.iter().enumerate() {
+        let name = tenant_names.get(t).map(|n| n.as_str()).unwrap_or("?");
+        // "100%" means exactly all-packed — a single fallback run must
+        // not round away (the smoke test keys on this string).
+        let packed = if c.gemm_calls == 0 {
+            "idle".to_string()
+        } else if c.packed_runs == c.gemm_calls {
+            "100% packed fast path".to_string()
+        } else {
+            format!("{}/{} packed fast path", c.packed_runs, c.gemm_calls)
+        };
+        s += &format!("tenant {name:<8}: {} GemmPlan runs, {packed}\n", c.gemm_calls);
+    }
+    s
+}

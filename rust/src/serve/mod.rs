@@ -1,0 +1,85 @@
+//! Multi-tenant batched inference serving over the minifloat engine —
+//! the fourth pillar next to [`crate::batch`], [`crate::api`] and
+//! [`crate::nn`].
+//!
+//! The cluster exists to make large, lane-aligned low-precision GEMMs
+//! cheap; inference traffic arrives as many small, latency-bound
+//! requests. This subsystem is the standard bridge between the two:
+//! **dynamic request batching**. Requests park in per-tenant queues,
+//! a batcher coalesces them into lane-padded batches under
+//! `max_batch`/`max_wait_ticks` knobs, and a shard pool runs each batch
+//! as one forward pass over a frozen model whose weights were packed
+//! *once* into the GEMM kernels' preferred stream layout — so every
+//! request rides the zero-repack fast path the engine is built around.
+//!
+//! Everything is **offline and deterministic**: time is virtual
+//! (ticks), traffic is seeded ([`sim`]), and per-request outputs are
+//! bit-identical across runs *and across shard counts*, because each
+//! GEMM output row depends only on its own input row. That turns load
+//! tests into regression tests: a million-request trace replays
+//! bit-for-bit.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`model`]   | [`InferenceModel`]: frozen packed weights + versioned checkpoints |
+//! | [`queue`]   | [`Request`]/[`Response`] + per-tenant deadline-aware queues |
+//! | [`batcher`] | dynamic batching policy (`max_batch`, `max_wait_ticks`, row padding) |
+//! | [`worker`]  | [`worker::Shard`] pool + the [`Server`] tick loop |
+//! | [`stats`]   | [`ServeStats`]: throughput, batch histogram, p50/p95/p99 ticks |
+//! | [`sim`]     | seeded open/closed-loop load generation + [`sim::replay`] |
+//!
+//! ## Layering
+//!
+//! `serve` sits **above** the numerics stack, beside `nn`: it calls
+//! only the [`crate::api`] public surface (`Session` / `MfTensor` /
+//! `GemmPlan` via [`crate::nn::GemmCtx`]) and `nn`'s public layer
+//! types — never `batch` internals, `kernels`, `cluster` or `core`.
+//! The sanctioned front door is [`crate::api::serve`]:
+//! [`crate::api::Session::server`] →
+//! [`crate::api::ServePlanBuilder`] validates tenants, knobs and
+//! per-layer GEMM feasibility (probe plans) before a [`Server`] exists.
+//!
+//! ```
+//! use minifloat_nn::prelude::*;
+//! use minifloat_nn::serve::{sim, InferenceModel};
+//!
+//! # fn main() -> minifloat_nn::util::error::Result<()> {
+//! let session = Session::builder().seed(7).build();
+//! // Train briefly, freeze, serve.
+//! let mut tr = session.native_trainer(PrecisionPolicy::hfp8())?;
+//! tr.train(20, 0)?;
+//! let model = InferenceModel::freeze(&session, tr.model(), tr.policy())?;
+//! let mut server = session
+//!     .server()
+//!     .tenant("hfp8", model)
+//!     .max_batch(16)
+//!     .max_wait_ticks(4)
+//!     .build()?
+//!     .server();
+//! let trace = sim::Trace::open_loop(7, &[8], 64, 0.5, None)?;
+//! let responses = sim::replay(&mut server, &trace)?;
+//! assert_eq!(responses.len(), 64);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod batcher;
+pub mod model;
+pub mod queue;
+pub mod sim;
+pub mod stats;
+pub mod worker;
+
+#[cfg(test)]
+mod tests;
+
+pub use batcher::{pad_rows, BatchPolicy, ROW_PAD, SERVICE_TICKS};
+pub use model::{FrozenLayer, InferenceModel};
+pub use queue::{Request, Response, TenantQueue};
+pub use sim::{Trace, TraceEvent};
+pub use stats::{ServeStats, TenantCounters};
+// `worker::Shard` stays behind its module path: the Server manages the
+// pool; the flat namespace exports only what callers construct or read.
+pub use worker::{Server, Tenant};

@@ -1,0 +1,367 @@
+//! [`InferenceModel`] — a frozen, serving-ready snapshot of a trained
+//! [`crate::nn::Mlp`].
+//!
+//! Training re-quantizes the FP32 master weights into the policy's
+//! forward format on **every** step (they change between steps). A
+//! frozen model's weights never change, so freezing packs each layer's
+//! weight matrix **once**, column-major — the layout the GEMM kernels
+//! stream operand B in — and every request batch then takes
+//! [`crate::api::GemmPlan::run`]'s zero-repack route: the stored words
+//! feed the batch engine directly, no decode, no re-pack. Because the
+//! packed words are bit-identical to what [`crate::nn::Linear::forward`]
+//! would have built from the same masters, a frozen forward pass is
+//! bit-identical to the training-path forward (pinned by tests).
+//!
+//! ## Checkpoint format (version 1)
+//!
+//! A little-endian binary file: magic `MFNN`, format version `u32`,
+//! then the policy name, activation tag, class count and per-layer
+//! `(in, out, weights f32…, bias f32…)` records. The FP32 *masters*
+//! are stored (not the packed words): they are exact, rounding-mode
+//! independent, and re-packing on load is deterministic, so a loaded
+//! model's packed weights are bit-identical to the saved one's under
+//! the same session rounding mode.
+
+use crate::api::{Layout, MfTensor, Session};
+use crate::nn::engine::GemmCtx;
+use crate::nn::layer::{Activation, Mlp};
+use crate::nn::policy::PrecisionPolicy;
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
+
+/// Checkpoint magic bytes.
+const MAGIC: &[u8; 4] = b"MFNN";
+/// Checkpoint format version this build reads and writes.
+const VERSION: u32 = 1;
+
+/// One frozen fully-connected layer: FP32 masters (for checkpointing)
+/// plus the weights pre-packed in the forward format, column-major.
+#[derive(Clone, Debug)]
+pub struct FrozenLayer {
+    /// Input width.
+    pub in_dim: usize,
+    /// Output width.
+    pub out_dim: usize,
+    /// FP32 master weights, `in_dim×out_dim` row-major.
+    w_master: Vec<f32>,
+    /// Bias, FP32.
+    bias: Vec<f32>,
+    /// Weights quantized to the policy's forward format and packed
+    /// column-major — operand B's kernel stream layout.
+    w_packed: MfTensor,
+}
+
+/// A frozen inference model: the serving hot path.
+#[derive(Clone, Debug)]
+pub struct InferenceModel {
+    policy: PrecisionPolicy,
+    act: Activation,
+    classes: usize,
+    layers: Vec<FrozenLayer>,
+}
+
+fn act_tag(act: Activation) -> u8 {
+    match act {
+        Activation::Relu => 0,
+        Activation::Gelu => 1,
+    }
+}
+
+fn act_from_tag(tag: u8) -> Result<Activation> {
+    match tag {
+        0 => Ok(Activation::Relu),
+        1 => Ok(Activation::Gelu),
+        other => bail!("checkpoint names unknown activation tag {other}"),
+    }
+}
+
+impl InferenceModel {
+    /// Freeze a trained MLP under its training policy: quantize each
+    /// layer's masters to `policy.fwd` and pack them column-major using
+    /// the session's rounding mode.
+    pub fn freeze(session: &Session, model: &Mlp, policy: &PrecisionPolicy) -> Result<Self> {
+        policy.validate()?;
+        let mut layers = Vec::with_capacity(model.layers.len());
+        for l in &model.layers {
+            layers.push(FrozenLayer::freeze(session, policy, l.in_dim, l.out_dim, &l.w, &l.b)?);
+        }
+        let frozen = InferenceModel {
+            policy: *policy,
+            act: model.act,
+            classes: model.loss.classes,
+            layers,
+        };
+        frozen.validate()?;
+        Ok(frozen)
+    }
+
+    /// The precision policy the model serves under.
+    pub fn policy(&self) -> &PrecisionPolicy {
+        &self.policy
+    }
+
+    /// Activation between linear layers.
+    pub fn act(&self) -> Activation {
+        self.act
+    }
+
+    /// Logical class count (`<= out_dim`; the tail is lane padding).
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Input feature width.
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    /// Logit width (lane-padded).
+    pub fn out_dim(&self) -> usize {
+        self.layers[self.layers.len() - 1].out_dim
+    }
+
+    /// The frozen layers.
+    pub fn layers(&self) -> &[FrozenLayer] {
+        &self.layers
+    }
+
+    /// Structural invariants (checked on freeze and on load).
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.layers.is_empty(), "an inference model needs at least one layer");
+        for (i, l) in self.layers.iter().enumerate() {
+            ensure!(
+                l.in_dim > 0 && l.out_dim > 0,
+                "layer {i} has an empty dimension ({}x{})",
+                l.in_dim,
+                l.out_dim
+            );
+            if i + 1 < self.layers.len() {
+                ensure!(
+                    l.out_dim == self.layers[i + 1].in_dim,
+                    "layer {i} produces {} features but layer {} consumes {}",
+                    l.out_dim,
+                    i + 1,
+                    self.layers[i + 1].in_dim
+                );
+            }
+        }
+        ensure!(
+            self.classes >= 2 && self.classes <= self.out_dim(),
+            "class count ({}) must be in 2..={} (the logit width)",
+            self.classes,
+            self.out_dim()
+        );
+        Ok(())
+    }
+
+    /// Forward a padded batch (`rows` a multiple of the serving row
+    /// granularity, `rows×in_dim` row-major features) to logits.
+    ///
+    /// Each layer runs [`crate::nn::layer::linear_forward_with`] — the
+    /// *same* implementation the training forward uses, fed the
+    /// pre-packed column-major weights (zero-repack for expanding-pair
+    /// policies) — so the served pass is bit-identical to the
+    /// training-path forward by construction, not by parallel
+    /// maintenance. Each output row depends only on its own input row,
+    /// which is what makes per-request results independent of batch
+    /// composition.
+    pub fn forward(&self, ctx: &mut GemmCtx<'_>, x: &[f64], rows: usize) -> Result<Vec<f64>> {
+        ensure!(
+            x.len() == rows * self.in_dim(),
+            "inference input must be {rows}x{} = {} values, got {}",
+            self.in_dim(),
+            rows * self.in_dim(),
+            x.len()
+        );
+        ensure!(
+            ctx.acc == self.policy.acc,
+            "GemmCtx accumulates in {} but the model's policy wants {}",
+            ctx.acc.name(),
+            self.policy.acc.name()
+        );
+        let session = ctx.session();
+        let n = self.layers.len();
+        let mut h = x.to_vec();
+        for (i, l) in self.layers.iter().enumerate() {
+            let (y, _xt) = crate::nn::layer::linear_forward_with(
+                ctx,
+                &self.policy,
+                &l.w_packed,
+                &l.bias,
+                &h,
+                rows,
+                l.in_dim,
+                l.out_dim,
+            )?;
+            h = y;
+            if i + 1 < n {
+                h = self.act.forward(session, self.policy.acc, &h, rows, l.out_dim, None)?;
+            }
+        }
+        Ok(h)
+    }
+
+    // ------------------------------------------------------ checkpoints
+
+    /// Serialize to the version-1 binary checkpoint format.
+    ///
+    /// Only the named policy presets round-trip (the file stores the
+    /// policy by name); a hand-built anonymous policy is a typed error.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        ensure!(
+            PrecisionPolicy::parse(self.policy.name).map(|p| p == self.policy).unwrap_or(false),
+            "only the named policy presets can be checkpointed (policy '{}' does not \
+             round-trip through its name)",
+            self.policy.name
+        );
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        let name = self.policy.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name);
+        out.push(act_tag(self.act));
+        out.extend_from_slice(&(self.classes as u32).to_le_bytes());
+        out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            out.extend_from_slice(&(l.in_dim as u32).to_le_bytes());
+            out.extend_from_slice(&(l.out_dim as u32).to_le_bytes());
+            for w in &l.w_master {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            for b in &l.bias {
+                out.extend_from_slice(&b.to_le_bytes());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Deserialize a version-1 checkpoint, re-quantizing and re-packing
+    /// the stored masters under `session`'s rounding mode.
+    pub fn from_bytes(session: &Session, bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader { bytes, pos: 0 };
+        let magic = r.take(4)?;
+        ensure!(magic == MAGIC, "not a minifloat-nn checkpoint (bad magic bytes)");
+        let version = r.u32()?;
+        ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (this build reads version {VERSION})"
+        );
+        let name_len = r.u32()? as usize;
+        ensure!(name_len <= 64, "checkpoint policy name is implausibly long ({name_len} bytes)");
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|_| crate::util::error::Error::msg("checkpoint policy name is not UTF-8"))?;
+        let policy = PrecisionPolicy::parse(&name)
+            .with_context(|| format!("checkpoint names unknown policy '{name}'"))?;
+        let act = act_from_tag(r.u8()?)?;
+        let classes = r.u32()? as usize;
+        let n_layers = r.u32()? as usize;
+        ensure!(
+            (1..=64).contains(&n_layers),
+            "checkpoint layer count {n_layers} is outside the sane range 1..=64"
+        );
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let in_dim = r.u32()? as usize;
+            let out_dim = r.u32()? as usize;
+            ensure!(
+                in_dim * out_dim <= 1 << 24,
+                "checkpoint layer {i} is implausibly large ({in_dim}x{out_dim})"
+            );
+            let w: Vec<f32> = r.f32s(in_dim * out_dim)?;
+            let b: Vec<f32> = r.f32s(out_dim)?;
+            layers.push(FrozenLayer::freeze(session, &policy, in_dim, out_dim, &w, &b)?);
+        }
+        ensure!(r.pos == bytes.len(), "checkpoint has {} trailing bytes", bytes.len() - r.pos);
+        let model = InferenceModel { policy, act, classes, layers };
+        model.validate().context("checkpoint failed structural validation")?;
+        Ok(model)
+    }
+
+    /// Write a checkpoint file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        let bytes = self.to_bytes()?;
+        std::fs::write(path, bytes).with_context(|| format!("writing checkpoint '{path}'"))
+    }
+
+    /// Read a checkpoint file.
+    pub fn load(session: &Session, path: &str) -> Result<Self> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("opening checkpoint '{path}'"))?;
+        Self::from_bytes(session, &bytes)
+            .with_context(|| format!("reading checkpoint '{path}'"))
+    }
+}
+
+impl FrozenLayer {
+    fn freeze(
+        session: &Session,
+        policy: &PrecisionPolicy,
+        in_dim: usize,
+        out_dim: usize,
+        w: &[f32],
+        b: &[f32],
+    ) -> Result<Self> {
+        ensure!(
+            w.len() == in_dim * out_dim,
+            "layer weights must be {in_dim}x{out_dim} = {} values, got {}",
+            in_dim * out_dim,
+            w.len()
+        );
+        ensure!(b.len() == out_dim, "layer bias must be {out_dim} values, got {}", b.len());
+        let w64: Vec<f64> = w.iter().map(|&v| v as f64).collect();
+        let w_packed =
+            session.tensor_with_layout(&w64, in_dim, out_dim, policy.fwd, Layout::ColMajor)?;
+        Ok(FrozenLayer { in_dim, out_dim, w_master: w.to_vec(), bias: b.to_vec(), w_packed })
+    }
+
+    /// The pre-packed weight tensor (forward format, column-major).
+    pub fn packed_weights(&self) -> &MfTensor {
+        &self.w_packed
+    }
+
+    /// The FP32 master weights.
+    pub fn master_weights(&self) -> &[f32] {
+        &self.w_master
+    }
+
+    /// The FP32 bias.
+    pub fn bias(&self) -> &[f32] {
+        &self.bias
+    }
+}
+
+/// Bounds-checked little-endian cursor (a malformed checkpoint must be
+/// a typed error, never a slice panic).
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.bytes.len(),
+            "checkpoint is truncated (wanted {n} bytes at offset {}, file has {})",
+            self.pos,
+            self.bytes.len()
+        );
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let b = self.take(4 * n)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+}

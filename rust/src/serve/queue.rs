@@ -1,0 +1,101 @@
+//! Request/response types and the per-tenant pending queue.
+//!
+//! A [`Request`] is one inference call: a feature row for one tenant's
+//! model, stamped with its arrival tick and an optional deadline. The
+//! server parks requests in per-tenant [`TenantQueue`]s until the
+//! dynamic batcher ([`crate::serve::batcher`]) coalesces them into
+//! lane-padded GEMM batches. Time is **virtual** throughout — ticks,
+//! not wall clock — so a whole traffic trace replays bit-for-bit.
+
+use std::collections::VecDeque;
+
+/// One queued inference request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    /// Server-assigned id, unique and monotone in submission order.
+    pub id: u64,
+    /// Index of the tenant whose model serves this request.
+    pub tenant: usize,
+    /// Feature row, `in_dim` wide (the tenant model's input width).
+    pub features: Vec<f64>,
+    /// Virtual tick the request entered the queue.
+    pub arrival_tick: u64,
+    /// Absolute tick the response is due, if the client set a deadline.
+    pub deadline_tick: Option<u64>,
+}
+
+/// One completed inference.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    /// The request's id.
+    pub id: u64,
+    /// The tenant that served it.
+    pub tenant: usize,
+    /// Logit row (`out_dim` wide, on the tenant policy's accumulation
+    /// grid) — per-request bits are independent of batch composition
+    /// and shard count, which is what makes replay deterministic.
+    pub logits: Vec<f64>,
+    /// Argmax over the tenant's logical classes.
+    pub pred: usize,
+    /// Tick the request arrived.
+    pub arrival_tick: u64,
+    /// Tick the results are ready: the dispatch tick plus the uniform
+    /// service quantum ([`crate::serve::batcher::SERVICE_TICKS`]).
+    pub completion_tick: u64,
+    /// Logical batch size (requests coalesced, before lane padding).
+    pub batch_size: usize,
+    /// True when a deadline was set and the completion tick passed it.
+    pub deadline_missed: bool,
+}
+
+impl Response {
+    /// End-to-end latency in virtual ticks: queueing + batching wait
+    /// plus the service quantum.
+    pub fn latency_ticks(&self) -> u64 {
+        self.completion_tick - self.arrival_tick
+    }
+}
+
+/// FIFO of pending requests for one tenant.
+#[derive(Debug, Default)]
+pub struct TenantQueue {
+    pending: VecDeque<Request>,
+}
+
+impl TenantQueue {
+    /// An empty queue.
+    pub fn new() -> Self {
+        TenantQueue::default()
+    }
+
+    /// Park a request.
+    pub fn push(&mut self, r: Request) {
+        self.pending.push_back(r);
+    }
+
+    /// Pending requests.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True when nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Arrival tick of the oldest pending request.
+    pub fn oldest_arrival(&self) -> Option<u64> {
+        self.pending.front().map(|r| r.arrival_tick)
+    }
+
+    /// Earliest deadline among pending requests, if any carries one.
+    pub fn earliest_deadline(&self) -> Option<u64> {
+        self.pending.iter().filter_map(|r| r.deadline_tick).min()
+    }
+
+    /// Dequeue up to `n` requests in FIFO order.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        let n = n.min(self.pending.len());
+        self.pending.drain(..n).collect()
+    }
+}

@@ -1,0 +1,246 @@
+//! Seeded traffic generation and the virtual-time replay driver.
+//!
+//! There is no wall clock anywhere in the serving pipeline: arrivals,
+//! dispatches and completions all live on the tick axis, and traffic is
+//! generated from a [`crate::util::rng::Rng`] seed. A million-request
+//! trace is therefore a pure function of `(seed, knobs)` — replaying it
+//! twice, or on a different shard count, yields bit-identical
+//! responses (the determinism tests pin exactly that).
+//!
+//! Two load models:
+//!
+//! * **open loop** ([`Trace::open_loop`]) — arrivals are an exponential
+//!   (Poisson-process) stream that does not react to the server:
+//!   the back-pressure-free regime where queues and batches build.
+//! * **closed loop** ([`closed_loop`]) — a fixed population of clients,
+//!   each submitting its next request a think-time after its previous
+//!   response: arrival rate self-throttles to the server's throughput.
+
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::{bail, ensure};
+
+use super::queue::Response;
+use super::worker::Server;
+
+/// One scheduled arrival in a pre-generated trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival tick.
+    pub tick: u64,
+    /// Target tenant index.
+    pub tenant: usize,
+    /// Feature row for that tenant's model.
+    pub features: Vec<f64>,
+    /// Deadline budget in ticks from arrival, if any.
+    pub deadline_in: Option<u64>,
+}
+
+/// A replayable traffic trace (events in non-decreasing tick order).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    /// The scheduled arrivals.
+    pub events: Vec<TraceEvent>,
+}
+
+/// Sample one synthetic feature row: a 2-D point run through the
+/// datasets' own embedding ([`crate::nn::data::embed_padded`] —
+/// `[x, y, r², 1]` in f32, zero lane padding), so a model trained on
+/// spiral/rings traffic sees bit-faithfully in-distribution requests.
+pub fn sample_features(rng: &mut Rng, in_dim: usize) -> Vec<f64> {
+    let (px, py) = (rng.gaussian() * 0.5, rng.gaussian() * 0.5);
+    crate::nn::data::embed_padded(px, py, in_dim)
+}
+
+impl Trace {
+    /// Generate an open-loop trace: `n` requests, exponential
+    /// inter-arrival gaps with the given mean (in ticks), tenants drawn
+    /// uniformly. `in_dims[t]` is tenant `t`'s feature width.
+    /// Deterministic in `(seed, n, mean_gap_ticks, in_dims, deadline_in)`.
+    pub fn open_loop(
+        seed: u64,
+        in_dims: &[usize],
+        n: usize,
+        mean_gap_ticks: f64,
+        deadline_in: Option<u64>,
+    ) -> Result<Trace> {
+        ensure!(!in_dims.is_empty(), "a trace needs at least one tenant");
+        ensure!(
+            mean_gap_ticks >= 0.0 && mean_gap_ticks.is_finite(),
+            "mean inter-arrival gap must be finite and non-negative, got {mean_gap_ticks}"
+        );
+        for (t, &d) in in_dims.iter().enumerate() {
+            ensure!(d >= 4, "tenant {t} feature width ({d}) must be at least 4 (the embedding)");
+        }
+        let mut rng = Rng::new(seed);
+        let mut tick = 0u64;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Exponential gap, floored onto the tick grid. The f64→u64
+            // cast saturates and the add saturates, so an extreme mean
+            // gap cannot wrap the clock into a non-monotonic trace.
+            let u = rng.uniform();
+            tick = tick.saturating_add((-(1.0 - u).ln() * mean_gap_ticks) as u64);
+            let tenant = rng.below(in_dims.len() as u64) as usize;
+            events.push(TraceEvent {
+                tick,
+                tenant,
+                features: sample_features(&mut rng, in_dims[tenant]),
+                deadline_in,
+            });
+        }
+        Ok(Trace { events })
+    }
+
+    /// Scheduled arrivals.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when the trace is empty.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Replay a trace against a server from its current tick: submit each
+/// event when its tick comes up, tick through quiet gaps, and drain the
+/// tail. Returns all responses in completion order (sorted by id within
+/// each tick).
+pub fn replay(server: &mut Server, trace: &Trace) -> Result<Vec<Response>> {
+    let mut responses = Vec::new();
+    let base = server.now();
+    let mut idx = 0;
+    while idx < trace.events.len() {
+        // Fast-forward quiet stretches: jump to the next arrival or the
+        // next tick the batcher could dispatch, whichever comes first
+        // (keeps sparse traces O(events), not O(tick span)).
+        server.advance_to(base.saturating_add(trace.events[idx].tick));
+        let now = server.now();
+        while idx < trace.events.len() && base.saturating_add(trace.events[idx].tick) <= now {
+            let e = &trace.events[idx];
+            server.submit(e.tenant, e.features.clone(), e.deadline_in)?;
+            idx += 1;
+        }
+        responses.append(&mut server.tick()?);
+    }
+    responses.append(&mut server.drain()?);
+    Ok(responses)
+}
+
+/// Drive a closed loop: `clients` concurrent clients, each re-submitting
+/// `think_ticks` after its previous response, until `total` responses
+/// have been produced. Tenants are assigned round-robin over clients.
+pub fn closed_loop(
+    server: &mut Server,
+    clients: usize,
+    total: usize,
+    think_ticks: u64,
+    seed: u64,
+    deadline_in: Option<u64>,
+) -> Result<Vec<Response>> {
+    ensure!(clients > 0, "a closed loop needs at least one client");
+    ensure!(total >= clients, "total responses ({total}) must cover every client ({clients})");
+    let n_tenants = server.tenants().len();
+    let mut rng = Rng::new(seed);
+    let mut responses = Vec::with_capacity(total);
+    // id → client; a client re-submits one think-time after completion.
+    let mut owner = std::collections::BTreeMap::new();
+    let mut wakeups: Vec<(u64, usize)> = Vec::new(); // (tick, client)
+    let mut submitted = 0usize;
+    let submit = |server: &mut Server, rng: &mut Rng, client: usize, submitted: &mut usize| {
+        let tenant = client % n_tenants;
+        let in_dim = server.tenants()[tenant].model.in_dim();
+        let id = server.submit(tenant, sample_features(rng, in_dim), deadline_in)?;
+        *submitted += 1;
+        Ok::<u64, crate::util::error::Error>(id)
+    };
+    for client in 0..clients.min(total) {
+        let id = submit(server, &mut rng, client, &mut submitted)?;
+        owner.insert(id, client);
+    }
+    let mut rounds = 0u64;
+    while responses.len() < total {
+        // Jump quiet stretches: to the next client wakeup or the next
+        // tick the batcher could dispatch, whichever comes first
+        // (advance_to stops at the dispatch trigger when requests are
+        // pending, so large max_wait stays O(events) here too).
+        match wakeups.iter().map(|&(t, _)| t).min() {
+            Some(t) => {
+                server.advance_to(t);
+            }
+            None if server.pending() > 0 => {
+                server.advance_to(u64::MAX);
+            }
+            None => {}
+        }
+        let now = server.now();
+        let mut due: Vec<usize> =
+            wakeups.iter().filter(|&&(t, _)| t <= now).map(|&(_, c)| c).collect();
+        wakeups.retain(|&(t, _)| t > now);
+        due.sort_unstable();
+        for client in due {
+            if submitted < total {
+                let id = submit(server, &mut rng, client, &mut submitted)?;
+                owner.insert(id, client);
+            }
+        }
+        for r in server.tick()? {
+            if let Some(client) = owner.remove(&r.id) {
+                // Resubmit exactly think_ticks after the response.
+                wakeups.push((r.completion_tick.saturating_add(think_ticks), client));
+            }
+            responses.push(r);
+        }
+        // Safety valve: every iteration either submits, dispatches, or
+        // jumps to the next wakeup/trigger, so a handful of rounds per
+        // request suffices; an iteration bound (ticks can legitimately
+        // jump far under large max_wait) catches scheduler regressions
+        // instead of hanging the test.
+        rounds += 1;
+        if rounds > 10 * total as u64 + 1_000 {
+            bail!("closed loop failed to converge (scheduler bug)");
+        }
+    }
+    Ok(responses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_and_ordered() {
+        let a = Trace::open_loop(9, &[8, 8], 200, 0.5, Some(16)).unwrap();
+        let b = Trace::open_loop(9, &[8, 8], 200, 0.5, Some(16)).unwrap();
+        assert_eq!(a, b, "same seed must generate the identical trace");
+        assert_eq!(a.len(), 200);
+        assert!(a.events.windows(2).all(|w| w[0].tick <= w[1].tick), "ticks must be sorted");
+        assert!(a.events.iter().all(|e| e.features.len() == 8 && e.tenant < 2));
+        let c = Trace::open_loop(10, &[8, 8], 200, 0.5, Some(16)).unwrap();
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn trace_rejects_degenerate_knobs() {
+        assert!(Trace::open_loop(1, &[], 10, 1.0, None).is_err());
+        assert!(Trace::open_loop(1, &[2], 10, 1.0, None).is_err());
+        assert!(Trace::open_loop(1, &[8], 10, f64::NAN, None).is_err());
+        assert!(Trace::open_loop(1, &[8], 10, -1.0, None).is_err());
+    }
+
+    #[test]
+    fn features_go_through_the_dataset_embedding() {
+        let mut rng = Rng::new(3);
+        let f = sample_features(&mut rng, 8);
+        assert_eq!(f.len(), 8);
+        // Bit-faithful to the training pipeline: the stored lanes are
+        // the f32 embedding (including its f32 r² arithmetic), not a
+        // parallel f64 reimplementation.
+        let e = crate::nn::data::SpiralDataset::embed(f[0] as f32, f[1] as f32);
+        assert_eq!(f[0], e[0] as f64);
+        assert_eq!(f[2], e[2] as f64);
+        assert_eq!(f[3], 1.0);
+        assert!(f[4..].iter().all(|&v| v == 0.0));
+    }
+}

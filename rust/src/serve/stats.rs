@@ -1,0 +1,238 @@
+//! Serving telemetry: throughput, batch-size histogram, queue depth,
+//! latency percentiles — all in virtual ticks, all deterministic.
+//!
+//! Every number here is derived from the simulated clock and the
+//! request stream, never from the wall clock, so two replays of the
+//! same trace produce byte-identical summaries (the determinism tests
+//! compare [`ServeStats::summary_json`] strings directly). Wall-clock
+//! throughput is measured one layer up, in `benches/serve.rs`.
+
+use std::collections::BTreeMap;
+
+use super::queue::Response;
+
+/// Per-tenant GEMM routing counters (mirrors
+/// [`crate::nn::GemmCtx`]'s calls/packed pair, aggregated over shards).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// GEMM plans executed for this tenant.
+    pub gemm_calls: u64,
+    /// How many fed the batch engine packed (zero decode/re-pack).
+    pub packed_runs: u64,
+}
+
+/// Aggregate statistics for one server run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServeStats {
+    /// Requests accepted by [`crate::serve::Server::submit`].
+    pub submitted: u64,
+    /// Responses produced.
+    pub completed: u64,
+    /// Virtual ticks elapsed.
+    pub ticks: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Logical batch size → dispatch count.
+    pub batch_hist: BTreeMap<usize, u64>,
+    /// Per-response latency in ticks, in completion order.
+    pub latencies: Vec<u64>,
+    /// Deepest total queue backlog observed at a tick boundary.
+    pub queue_depth_max: usize,
+    /// Responses whose deadline had already passed at completion.
+    pub deadline_misses: u64,
+    /// Per-tenant GEMM routing counters.
+    pub tenants: Vec<TenantCounters>,
+    queue_depth_sum: u64,
+    depth_samples: u64,
+}
+
+impl ServeStats {
+    /// Fresh stats for `n_tenants` tenants.
+    pub fn new(n_tenants: usize) -> Self {
+        ServeStats { tenants: vec![TenantCounters::default(); n_tenants], ..Default::default() }
+    }
+
+    /// Record the total queue backlog at a tick boundary.
+    pub(crate) fn record_depth(&mut self, depth: usize) {
+        self.queue_depth_max = self.queue_depth_max.max(depth);
+        self.queue_depth_sum += depth as u64;
+        self.depth_samples += 1;
+    }
+
+    /// Record `n` quiet (no-dispatch) ticks at backlog `depth` in one
+    /// step — exactly what `n` calls to [`ServeStats::record_depth`]
+    /// would record.
+    pub(crate) fn record_quiet(&mut self, n: u64, depth: usize) {
+        if n == 0 {
+            return;
+        }
+        self.queue_depth_max = self.queue_depth_max.max(depth);
+        self.queue_depth_sum += n.saturating_mul(depth as u64);
+        self.depth_samples += n;
+    }
+
+    /// Record one dispatched batch's logical size.
+    pub(crate) fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        *self.batch_hist.entry(size).or_insert(0) += 1;
+    }
+
+    /// Record one completed response.
+    pub(crate) fn record_response(&mut self, r: &Response) {
+        self.completed += 1;
+        self.latencies.push(r.latency_ticks());
+        self.deadline_misses += r.deadline_missed as u64;
+    }
+
+    fn rank(sorted: &[u64], q: f64) -> u64 {
+        if sorted.is_empty() {
+            return 0;
+        }
+        let idx = (q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx]
+    }
+
+    /// Latency percentile (nearest-rank on the sorted latencies), in
+    /// ticks; 0 when nothing completed yet. One-off convenience —
+    /// reports wanting several ranks should call
+    /// [`ServeStats::latency_percentiles`], which sorts once.
+    pub fn latency_percentile(&self, q: f64) -> u64 {
+        let mut sorted = self.latencies.clone();
+        sorted.sort_unstable();
+        Self::rank(&sorted, q)
+    }
+
+    /// `(p50, p95, p99)` from a single sort — million-request traces
+    /// should not pay six clones and sorts per report.
+    pub fn latency_percentiles(&self) -> (u64, u64, u64) {
+        let mut sorted = self.latencies.clone();
+        sorted.sort_unstable();
+        (Self::rank(&sorted, 0.50), Self::rank(&sorted, 0.95), Self::rank(&sorted, 0.99))
+    }
+
+    /// Median latency in ticks.
+    pub fn p50(&self) -> u64 {
+        self.latency_percentile(0.50)
+    }
+
+    /// 95th-percentile latency in ticks.
+    pub fn p95(&self) -> u64 {
+        self.latency_percentile(0.95)
+    }
+
+    /// 99th-percentile latency in ticks.
+    pub fn p99(&self) -> u64 {
+        self.latency_percentile(0.99)
+    }
+
+    /// Mean logical batch size over all dispatches.
+    pub fn mean_batch(&self) -> f64 {
+        self.completed as f64 / self.batches.max(1) as f64
+    }
+
+    /// Mean total queue backlog per tick.
+    pub fn mean_queue_depth(&self) -> f64 {
+        self.queue_depth_sum as f64 / self.depth_samples.max(1) as f64
+    }
+
+    /// Completed requests per virtual tick.
+    pub fn throughput_per_tick(&self) -> f64 {
+        self.completed as f64 / self.ticks.max(1) as f64
+    }
+
+    /// Total GEMM plans executed across tenants.
+    pub fn gemm_calls(&self) -> u64 {
+        self.tenants.iter().map(|t| t.gemm_calls).sum()
+    }
+
+    /// Total packed zero-repack runs across tenants.
+    pub fn packed_runs(&self) -> u64 {
+        self.tenants.iter().map(|t| t.packed_runs).sum()
+    }
+
+    /// One deterministic JSON object (no wall clock, no floats beyond
+    /// fixed-precision formatting): the payload `benches/serve.rs`
+    /// embeds in `BENCH_serve.json` and the determinism tests compare
+    /// byte-for-byte.
+    pub fn summary_json(&self) -> String {
+        let hist: Vec<String> =
+            self.batch_hist.iter().map(|(size, n)| format!("\"{size}\":{n}")).collect();
+        let (p50, p95, p99) = self.latency_percentiles();
+        format!(
+            "{{\"submitted\":{},\"completed\":{},\"ticks\":{},\"batches\":{},\
+             \"mean_batch\":{:.3},\"throughput_per_tick\":{:.4},\
+             \"p50_ticks\":{p50},\"p95_ticks\":{p95},\"p99_ticks\":{p99},\
+             \"queue_depth_max\":{},\"deadline_misses\":{},\
+             \"gemm_calls\":{},\"packed_runs\":{},\"batch_hist\":{{{}}}}}",
+            self.submitted,
+            self.completed,
+            self.ticks,
+            self.batches,
+            self.mean_batch(),
+            self.throughput_per_tick(),
+            self.queue_depth_max,
+            self.deadline_misses,
+            self.gemm_calls(),
+            self.packed_runs(),
+            hist.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(arrival: u64, done: u64, missed: bool) -> Response {
+        Response {
+            id: 0,
+            tenant: 0,
+            logits: vec![],
+            pred: 0,
+            arrival_tick: arrival,
+            completion_tick: done,
+            batch_size: 1,
+            deadline_missed: missed,
+        }
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank() {
+        let mut s = ServeStats::new(1);
+        for lat in [4u64, 1, 3, 0, 2] {
+            s.record_response(&resp(0, lat, false));
+        }
+        assert_eq!(s.p50(), 2);
+        assert_eq!(s.latency_percentile(0.0), 0);
+        assert_eq!(s.latency_percentile(1.0), 4);
+        assert_eq!(s.p99(), 4);
+    }
+
+    #[test]
+    fn empty_stats_do_not_divide_by_zero() {
+        let s = ServeStats::new(0);
+        assert_eq!(s.p95(), 0);
+        assert_eq!(s.throughput_per_tick(), 0.0);
+        assert_eq!(s.mean_batch(), 0.0);
+        assert_eq!(s.mean_queue_depth(), 0.0);
+        assert!(s.summary_json().starts_with('{'));
+    }
+
+    #[test]
+    fn histogram_and_misses_accumulate() {
+        let mut s = ServeStats::new(2);
+        s.record_batch(4);
+        s.record_batch(4);
+        s.record_batch(1);
+        s.record_response(&resp(0, 3, true));
+        s.record_depth(7);
+        s.record_depth(3);
+        assert_eq!(s.batch_hist[&4], 2);
+        assert_eq!(s.batch_hist[&1], 1);
+        assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.queue_depth_max, 7);
+        assert_eq!(s.mean_queue_depth(), 5.0);
+        // JSON is stable: BTreeMap orders the histogram keys.
+        assert!(s.summary_json().contains("\"batch_hist\":{\"1\":1,\"4\":2}"));
+    }
+}

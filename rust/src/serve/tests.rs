@@ -1,0 +1,420 @@
+//! Serving-subsystem tests: freeze/checkpoint fidelity, batching
+//! behavior, and the acceptance gates — bit-identical replay across
+//! runs and shard counts, with every expanding-pair tenant GEMM
+//! asserted through the packed zero-repack route.
+
+use super::model::InferenceModel;
+use super::sim::{self, Trace};
+use crate::api::Session;
+use crate::nn::engine::GemmCtx;
+use crate::nn::policy::PrecisionPolicy;
+use crate::nn::Tape;
+use crate::util::rng::Rng;
+
+fn session() -> Session {
+    Session::builder().seed(77).build()
+}
+
+/// Train a small model briefly and freeze it.
+fn frozen(session: &Session, policy: PrecisionPolicy, steps: usize) -> InferenceModel {
+    let mut tr = session.native_trainer(policy).expect("trainer");
+    tr.train(steps, 0).expect("train");
+    InferenceModel::freeze(session, tr.model(), tr.policy()).expect("freeze")
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn padded_batch(rng: &mut Rng, rows: usize, in_dim: usize) -> Vec<f64> {
+    let mut x = Vec::with_capacity(rows * in_dim);
+    for _ in 0..rows {
+        x.extend(sim::sample_features(rng, in_dim));
+    }
+    x
+}
+
+// ------------------------------------------------------------- freezing
+
+#[test]
+fn frozen_forward_is_bit_identical_to_training_forward() {
+    // The zero-repack serving path (pre-packed column-major weights)
+    // must reproduce the training-path forward bit for bit.
+    let session = session();
+    for policy in [PrecisionPolicy::hfp8(), PrecisionPolicy::fp8(), PrecisionPolicy::fp32()] {
+        let mut tr = session.native_trainer(policy).expect("trainer");
+        tr.train(4, 0).expect("train");
+        let model = InferenceModel::freeze(&session, tr.model(), tr.policy()).expect("freeze");
+        let mut rng = Rng::new(9);
+        let rows = 16;
+        let x = padded_batch(&mut rng, rows, model.in_dim());
+        let mut ctx = GemmCtx::new(&session, policy.acc);
+        let served = model.forward(&mut ctx, &x, rows).expect("serve forward");
+        let mut ctx2 = GemmCtx::new(&session, policy.acc);
+        let trained =
+            tr.model().forward_inference(&mut ctx2, &policy, &x, rows).expect("train forward");
+        assert_eq!(bits(&served), bits(&trained), "{}", policy.name);
+        // Expanding-pair policies must take the packed route on every
+        // GEMM — the weights were packed for exactly that.
+        if policy.fwd != policy.acc {
+            assert_eq!(ctx.packed, ctx.calls, "{}: zero-repack route", policy.name);
+        }
+        assert_eq!(ctx.calls, model.layers().len() as u64);
+    }
+}
+
+#[test]
+fn freezing_also_works_via_taped_training_forward() {
+    // Belt and suspenders for the extraction satellite: the frozen path
+    // equals the *taped* training forward too (tape only records).
+    let session = session();
+    let policy = PrecisionPolicy::hfp8();
+    let mut tr = session.native_trainer(policy).expect("trainer");
+    tr.train(2, 0).expect("train");
+    let model = InferenceModel::freeze(&session, tr.model(), tr.policy()).expect("freeze");
+    let mut rng = Rng::new(3);
+    let x = padded_batch(&mut rng, 8, model.in_dim());
+    let mut ctx = GemmCtx::new(&session, policy.acc);
+    let served = model.forward(&mut ctx, &x, 8).expect("serve");
+    let mut tape = Tape::new();
+    let mut ctx2 = GemmCtx::new(&session, policy.acc);
+    let taped =
+        tr.model().forward(&mut ctx2, &policy, &x, 8, Some(&mut tape)).expect("taped forward");
+    assert_eq!(bits(&served), bits(&taped));
+}
+
+// ---------------------------------------------------------- checkpoints
+
+#[test]
+fn checkpoint_roundtrips_bit_exactly() {
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 4);
+    let bytes = model.to_bytes().expect("serialize");
+    let loaded = InferenceModel::from_bytes(&session, &bytes).expect("deserialize");
+    assert_eq!(loaded.policy(), model.policy());
+    assert_eq!(loaded.act(), model.act());
+    assert_eq!(loaded.classes(), model.classes());
+    assert_eq!(loaded.layers().len(), model.layers().len());
+    for (a, b) in loaded.layers().iter().zip(model.layers()) {
+        assert_eq!(a.master_weights(), b.master_weights());
+        assert_eq!(a.bias(), b.bias());
+        // Packed words re-derive identically under the same rounding.
+        assert_eq!(a.packed_weights(), b.packed_weights());
+    }
+    // And the loaded model serves identical logits.
+    let mut rng = Rng::new(21);
+    let x = padded_batch(&mut rng, 8, model.in_dim());
+    let mut c1 = GemmCtx::new(&session, model.policy().acc);
+    let mut c2 = GemmCtx::new(&session, model.policy().acc);
+    let a = model.forward(&mut c1, &x, 8).expect("forward");
+    let b = loaded.forward(&mut c2, &x, 8).expect("forward");
+    assert_eq!(bits(&a), bits(&b));
+}
+
+#[test]
+fn checkpoint_file_roundtrip_and_load_errors_are_typed() {
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::fp8(), 2);
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("mfnn_ckpt_test_{}.bin", std::process::id()));
+    let path = path.to_str().expect("utf-8 temp path").to_string();
+    model.save(&path).expect("save");
+    let loaded = InferenceModel::load(&session, &path).expect("load");
+    assert_eq!(loaded.policy().name, "fp8");
+    // Unknown path: typed error naming the file, not a panic.
+    let err = InferenceModel::load(&session, "/nonexistent/nowhere.bin").unwrap_err();
+    assert!(err.to_string().contains("checkpoint"), "{err}");
+    // Garbage: bad magic.
+    let err = InferenceModel::from_bytes(&session, b"JUNKJUNKJUNK").unwrap_err();
+    assert!(err.to_string().contains("bad magic"), "{err}");
+    // Truncation anywhere: typed, bounds-checked.
+    let bytes = model.to_bytes().expect("serialize");
+    for cut in [3, 7, 11, bytes.len() / 2, bytes.len() - 1] {
+        let err = InferenceModel::from_bytes(&session, &bytes[..cut]).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "cut at {cut}: {err}");
+    }
+    // Version from the future: named in the error.
+    let mut future = bytes.clone();
+    future[4..8].copy_from_slice(&99u32.to_le_bytes());
+    let err = InferenceModel::from_bytes(&session, &future).unwrap_err();
+    assert!(err.to_string().contains("version 99"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+// ------------------------------------------------- end-to-end serving
+
+fn two_tenant_plan(session: &Session, shards: usize) -> crate::api::ServePlan {
+    let hfp8 = frozen(session, PrecisionPolicy::hfp8(), 4);
+    let fp8 = frozen(session, PrecisionPolicy::fp8(), 4);
+    session
+        .server()
+        .tenant("hfp8", hfp8)
+        .tenant("fp8", fp8)
+        .max_batch(16)
+        .max_wait_ticks(3)
+        .shards(shards)
+        .build()
+        .expect("valid serve plan")
+}
+
+#[test]
+fn replay_is_bit_identical_across_runs_and_shard_counts() {
+    // The subsystem's acceptance gate: same seed + trace → bit-identical
+    // per-request outputs, across runs and across shard counts {1, 4},
+    // with every expanding-pair tenant GEMM on the packed route.
+    let session = session();
+    let trace = Trace::open_loop(1234, &[8, 8], 300, 0.4, Some(64)).expect("trace");
+    let mut runs = Vec::new();
+    for shards in [1usize, 1, 4] {
+        let plan = two_tenant_plan(&session, shards);
+        let mut server = plan.server();
+        assert_eq!(server.shard_count(), shards);
+        let responses = sim::replay(&mut server, &trace).expect("replay");
+        assert_eq!(responses.len(), 300);
+        runs.push((responses, server.stats().clone()));
+    }
+    let (r0, s0) = &runs[0];
+    for (ri, si) in &runs[1..] {
+        assert_eq!(r0.len(), ri.len());
+        for (a, b) in r0.iter().zip(ri) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(bits(&a.logits), bits(&b.logits), "request {}", a.id);
+            assert_eq!(a.pred, b.pred);
+            assert_eq!(a.completion_tick, b.completion_tick);
+            assert_eq!(a.batch_size, b.batch_size);
+        }
+        assert_eq!(s0.summary_json(), si.summary_json(), "stats must replay identically");
+    }
+    // Routing gate: both tenants are expanding pairs (FP8/FP8alt→FP16);
+    // every one of their GEMMs must have fed the engine packed.
+    for (t, counters) in s0.tenants.iter().enumerate() {
+        assert!(counters.gemm_calls > 0, "tenant {t} served no GEMMs");
+        assert_eq!(
+            counters.packed_runs, counters.gemm_calls,
+            "tenant {t}: every serving GEMM must take the zero-repack route"
+        );
+    }
+}
+
+#[test]
+fn per_request_outputs_are_independent_of_batch_composition() {
+    // Serve the same feature row once in a crowded batch and once
+    // nearly alone: the logits must not change — the structural
+    // property the determinism gates rest on.
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 4);
+    let plan =
+        session.server().tenant("only", model).max_batch(32).max_wait_ticks(0).build().expect("plan");
+    let mut rng = Rng::new(5);
+    let probe = sim::sample_features(&mut rng, 8);
+    let crowd: Vec<Vec<f64>> = (0..23).map(|_| sim::sample_features(&mut rng, 8)).collect();
+
+    let mut a = plan.server();
+    let probe_id = a.submit(0, probe.clone(), None).expect("submit");
+    for f in &crowd {
+        a.submit(0, f.clone(), None).expect("submit");
+    }
+    let crowded = a.drain().expect("drain");
+    let crowded_probe = crowded.iter().find(|r| r.id == probe_id).expect("probe served");
+    assert_eq!(crowded_probe.batch_size, 24);
+
+    let mut b = plan.server();
+    let lone_id = b.submit(0, probe, None).expect("submit");
+    let lone = b.drain().expect("drain");
+    let lone_probe = lone.iter().find(|r| r.id == lone_id).expect("probe served");
+    assert_eq!(lone_probe.batch_size, 1);
+
+    assert_eq!(bits(&crowded_probe.logits), bits(&lone_probe.logits));
+    assert_eq!(crowded_probe.pred, lone_probe.pred);
+}
+
+#[test]
+fn batching_coalesces_and_pads() {
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 2);
+    let plan =
+        session.server().tenant("t", model).max_batch(8).max_wait_ticks(2).build().expect("plan");
+    let mut server = plan.server();
+    let mut rng = Rng::new(1);
+    // 19 requests at tick 0: two full batches of 8 dispatch immediately,
+    // the remainder of 3 waits for the clock.
+    for _ in 0..19 {
+        server.submit(0, sim::sample_features(&mut rng, 8), None).expect("submit");
+    }
+    let first = server.tick().expect("tick");
+    assert_eq!(first.len(), 16);
+    // Dispatched at tick 0, ready one service quantum later.
+    assert!(first.iter().all(|r| r.batch_size == 8 && r.completion_tick == 1));
+    assert_eq!(server.pending(), 3);
+    let rest = server.drain().expect("drain");
+    assert_eq!(rest.len(), 3);
+    assert!(rest.iter().all(|r| r.batch_size == 3 && r.completion_tick == 3));
+    let stats = server.stats();
+    assert_eq!(stats.batch_hist.get(&8), Some(&2));
+    assert_eq!(stats.batch_hist.get(&3), Some(&1));
+    assert_eq!(stats.completed, 19);
+    assert_eq!(stats.queue_depth_max, 19);
+    assert_eq!(stats.p50(), 1);
+    assert_eq!(stats.latency_percentile(1.0), 3);
+}
+
+#[test]
+fn feasible_deadlines_are_met_and_infeasible_ones_are_counted_missed() {
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 2);
+    let plan = session
+        .server()
+        .tenant("t", model)
+        .max_batch(64)
+        .max_wait_ticks(100)
+        .build()
+        .expect("plan");
+    let mut server = plan.server();
+    let mut rng = Rng::new(2);
+    // Due at tick 3: the deadline trigger dispatches one service
+    // quantum early (tick 2), so the result lands exactly on time —
+    // long before the 100-tick wait clock.
+    server.submit(0, sim::sample_features(&mut rng, 8), Some(3)).expect("submit");
+    assert!(server.tick().expect("tick 0").is_empty());
+    assert!(server.tick().expect("tick 1").is_empty());
+    let due = server.tick().expect("tick 2");
+    assert_eq!(due.len(), 1);
+    assert_eq!(due[0].completion_tick, 3);
+    assert!(!due[0].deadline_missed, "a feasible deadline is met by construction");
+    assert_eq!(server.stats().deadline_misses, 0);
+    // A sub-quantum deadline (due the instant it arrives) is infeasible:
+    // it dispatches immediately but completes one quantum later — the
+    // miss counter must actually count it.
+    server.submit(0, sim::sample_features(&mut rng, 8), Some(0)).expect("submit");
+    let late = server.tick().expect("tick 3");
+    assert_eq!(late.len(), 1);
+    assert!(late[0].deadline_missed, "sub-quantum deadline must be recorded as missed");
+    assert_eq!(server.stats().deadline_misses, 1);
+}
+
+#[test]
+fn replay_fast_forwards_sparse_traces() {
+    // Arrivals 10k ticks apart: replay must skip the quiet gaps (O(events),
+    // not O(tick span)) while the virtual clock still covers the full
+    // span and dispatch timing stays exactly per-policy.
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 2);
+    let plan =
+        session.server().tenant("t", model).max_batch(4).max_wait_ticks(1).build().expect("plan");
+    let mut server = plan.server();
+    let mut rng = Rng::new(8);
+    let events = [0u64, 10_000, 20_000]
+        .into_iter()
+        .map(|tick| sim::TraceEvent {
+            tick,
+            tenant: 0,
+            features: sim::sample_features(&mut rng, 8),
+            deadline_in: None,
+        })
+        .collect();
+    let trace = Trace { events };
+    let responses = sim::replay(&mut server, &trace).expect("replay");
+    assert_eq!(responses.len(), 3);
+    let ticks: Vec<u64> = responses.iter().map(|r| r.completion_tick).collect();
+    // Dispatch after exactly max_wait_ticks, ready one quantum later.
+    assert_eq!(ticks, vec![2, 10_002, 20_002]);
+    assert!(server.now() >= 20_001);
+    assert_eq!(server.stats().queue_depth_max, 1);
+}
+
+#[test]
+fn closed_loop_serves_every_client_deterministically() {
+    let session = session();
+    let plan = two_tenant_plan(&session, 2);
+    let run = |plan: &crate::api::ServePlan| {
+        let mut server = plan.server();
+        sim::closed_loop(&mut server, 8, 64, 1, 99, None).expect("closed loop")
+    };
+    let a = run(&plan);
+    let b = run(&plan);
+    assert_eq!(a.len(), 64);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(bits(&x.logits), bits(&y.logits));
+        assert_eq!(x.completion_tick, y.completion_tick);
+    }
+    // Both tenants saw traffic (clients round-robin over tenants).
+    let tenants: std::collections::BTreeSet<usize> = a.iter().map(|r| r.tenant).collect();
+    assert_eq!(tenants.len(), 2);
+}
+
+#[test]
+fn mixed_precision_tenants_serve_side_by_side() {
+    // An expanding-pair tenant and an FMA-family (fp32) tenant share
+    // one server; routing counters keep them apart.
+    let session = session();
+    let hfp8 = frozen(&session, PrecisionPolicy::hfp8(), 2);
+    let fp32 = frozen(&session, PrecisionPolicy::fp32(), 2);
+    let plan = session
+        .server()
+        .tenant("hfp8", hfp8)
+        .tenant("fp32", fp32)
+        .max_batch(8)
+        .max_wait_ticks(1)
+        .build()
+        .expect("plan");
+    let mut server = plan.server();
+    let mut rng = Rng::new(4);
+    for t in [0usize, 1, 0, 1, 0, 1] {
+        server.submit(t, sim::sample_features(&mut rng, 8), None).expect("submit");
+    }
+    let responses = server.drain().expect("drain");
+    assert_eq!(responses.len(), 6);
+    let stats = server.stats();
+    assert!(stats.tenants[0].gemm_calls > 0 && stats.tenants[1].gemm_calls > 0);
+    assert_eq!(stats.tenants[0].packed_runs, stats.tenants[0].gemm_calls, "hfp8 packs");
+    assert_eq!(stats.tenants[1].packed_runs, 0, "fp32 runs the FMA family (no packed route)");
+}
+
+// --------------------------------------------------- plan validation
+
+#[test]
+fn serve_plan_rejects_bad_configurations() {
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 1);
+
+    let err = session.server().build().unwrap_err();
+    assert!(err.to_string().contains("at least one tenant"), "{err}");
+
+    let err = session.server().tenant("a", model.clone()).max_batch(0).build().unwrap_err();
+    assert!(err.to_string().contains("max_batch"), "{err}");
+    assert!(err.to_string().contains("--max-batch"), "{err}");
+
+    let err = session.server().tenant("a", model.clone()).shards(0).build().unwrap_err();
+    assert!(err.to_string().contains("shard count"), "{err}");
+
+    // Unbounded wait knobs would overflow tick arithmetic downstream.
+    let err =
+        session.server().tenant("a", model.clone()).max_wait_ticks(u64::MAX).build().unwrap_err();
+    assert!(err.to_string().contains("max_wait_ticks"), "{err}");
+
+    let err = session
+        .server()
+        .tenant("a", model.clone())
+        .tenant("a", model.clone())
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("duplicate tenant name"), "{err}");
+
+    let cycle = Session::builder().mode(crate::kernels::gemm::ExecMode::CycleAccurate).build();
+    let err = cycle.server().tenant("a", model).build().unwrap_err();
+    assert!(err.to_string().contains("functional"), "{err}");
+}
+
+#[test]
+fn server_rejects_malformed_submissions() {
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 1);
+    let plan = session.server().tenant("t", model).build().expect("plan");
+    let mut server = plan.server();
+    let err = server.submit(5, vec![0.0; 8], None).unwrap_err();
+    assert!(err.to_string().contains("unknown tenant"), "{err}");
+    let err = server.submit(0, vec![0.0; 3], None).unwrap_err();
+    assert!(err.to_string().contains("features"), "{err}");
+}

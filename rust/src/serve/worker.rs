@@ -1,0 +1,354 @@
+//! The shard pool and the [`Server`] driving it.
+//!
+//! A [`Shard`] is one parallel execution lane: it owns its own copy of
+//! the [`Session`] policy and runs each dispatched batch through a
+//! fresh [`GemmCtx`], so plan execution and routing counters never
+//! share mutable state across shards. Batches spread round-robin over
+//! the pool in formation order (so even one tenant saturates every
+//! shard), and the pool fans out over [`crate::util::parallel`] scoped
+//! threads each tick.
+//!
+//! **Determinism.** Scheduling decisions (batch formation, dispatch
+//! ticks) are made by the [`Server`] *before* the fan-out, and each
+//! output row of a GEMM depends only on its own input row, so shards
+//! are a pure wall-clock parallelism vehicle: per-request responses —
+//! logits bits, ticks, batch sizes — are identical at any shard count.
+//! The per-tick response stream is sorted by request id to keep the
+//! observable ordering shard-count independent too.
+
+use crate::api::Session;
+use crate::nn::engine::GemmCtx;
+use crate::util::error::{Error, Result};
+use crate::util::parallel::par_chunks_mut;
+use crate::{bail, ensure};
+
+use super::batcher::{pad_rows, BatchPolicy, SERVICE_TICKS};
+use super::model::InferenceModel;
+use super::queue::{Request, Response, TenantQueue};
+use super::stats::ServeStats;
+
+/// One named tenant: a frozen model served under its own precision
+/// policy, isolated from every other tenant's traffic by its queue.
+#[derive(Clone, Debug)]
+pub struct Tenant {
+    /// Human-readable tenant name (unique per server).
+    pub name: String,
+    /// The tenant's frozen model.
+    pub model: InferenceModel,
+}
+
+/// One parallel execution lane of the pool.
+#[derive(Debug)]
+pub struct Shard {
+    session: Session,
+    inbox: Vec<(usize, Vec<Request>)>,
+    outbox: Vec<Response>,
+    /// Per-tenant (gemm_calls, packed_runs) accumulated this tick.
+    counters: Vec<(u64, u64)>,
+    error: Option<Error>,
+}
+
+impl Shard {
+    fn new(session: Session, n_tenants: usize) -> Self {
+        Shard {
+            session,
+            inbox: Vec::new(),
+            outbox: Vec::new(),
+            counters: vec![(0, 0); n_tenants],
+            error: None,
+        }
+    }
+
+    /// Execute every batch in the inbox (called from the parallel
+    /// fan-out; errors are parked and surfaced after the join).
+    fn run_inbox(&mut self, tenants: &[Tenant], now: u64) {
+        let inbox = std::mem::take(&mut self.inbox);
+        for (t, batch) in inbox {
+            match self.execute(&tenants[t], t, batch, now) {
+                Ok(mut responses) => self.outbox.append(&mut responses),
+                Err(e) => {
+                    self.error = Some(e);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Run one tenant batch: pad rows to the kernel granularity, one
+    /// forward pass, slice the logical rows back out.
+    fn execute(
+        &mut self,
+        tenant: &Tenant,
+        t: usize,
+        batch: Vec<Request>,
+        now: u64,
+    ) -> Result<Vec<Response>> {
+        let model = &tenant.model;
+        let size = batch.len();
+        let rows = pad_rows(size);
+        let in_dim = model.in_dim();
+        let mut x = vec![0f64; rows * in_dim];
+        for (i, r) in batch.iter().enumerate() {
+            ensure!(
+                r.features.len() == in_dim,
+                "request {} for tenant '{}' has {} features, the model consumes {in_dim}",
+                r.id,
+                tenant.name,
+                r.features.len()
+            );
+            x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&r.features);
+        }
+        let session = self.session;
+        let mut ctx = GemmCtx::new(&session, model.policy().acc);
+        let logits = model.forward(&mut ctx, &x, rows)?;
+        self.counters[t].0 += ctx.calls;
+        self.counters[t].1 += ctx.packed;
+        let w = model.out_dim();
+        let classes = model.classes();
+        // Results are ready one service quantum after dispatch; the
+        // quantum is uniform, so completion ticks are shard-independent.
+        let done = now.saturating_add(SERVICE_TICKS);
+        Ok(batch
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let row = logits[i * w..(i + 1) * w].to_vec();
+                let pred = row[..classes]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                Response {
+                    id: r.id,
+                    tenant: t,
+                    logits: row,
+                    pred,
+                    arrival_tick: r.arrival_tick,
+                    completion_tick: done,
+                    batch_size: size,
+                    deadline_missed: r.deadline_tick.map(|d| done > d).unwrap_or(false),
+                }
+            })
+            .collect())
+    }
+}
+
+/// The multi-tenant batched inference server.
+///
+/// Construct through the typed front door —
+/// [`crate::api::Session::server`] →
+/// [`crate::api::ServePlanBuilder::build`] →
+/// [`crate::api::ServePlan::server`] — which validates tenants, knobs
+/// and per-layer GEMM feasibility before this type exists.
+pub struct Server {
+    tenants: Vec<Tenant>,
+    queues: Vec<TenantQueue>,
+    shards: Vec<Shard>,
+    policy: BatchPolicy,
+    stats: ServeStats,
+    now: u64,
+    next_id: u64,
+}
+
+impl Server {
+    /// Wire a validated configuration (done by
+    /// [`crate::api::ServePlan::server`]).
+    pub(crate) fn assemble(
+        session: Session,
+        tenants: Vec<Tenant>,
+        policy: BatchPolicy,
+        n_shards: usize,
+    ) -> Self {
+        let n_tenants = tenants.len();
+        Server {
+            queues: (0..n_tenants).map(|_| TenantQueue::new()).collect(),
+            shards: (0..n_shards).map(|_| Shard::new(session, n_tenants)).collect(),
+            stats: ServeStats::new(n_tenants),
+            tenants,
+            policy,
+            now: 0,
+            next_id: 0,
+        }
+    }
+
+    /// The tenant table (index = the id [`Server::submit`] takes).
+    pub fn tenants(&self) -> &[Tenant] {
+        &self.tenants
+    }
+
+    /// Look a tenant up by name.
+    pub fn tenant_index(&self, name: &str) -> Option<usize> {
+        self.tenants.iter().position(|t| t.name == name)
+    }
+
+    /// Current virtual tick.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Requests parked across all tenant queues.
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Accumulated statistics.
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Shards in the pool.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Enqueue a request for `tenant`, due `deadline_in` ticks from now
+    /// if set. Returns the assigned request id (monotone in submission
+    /// order — the id responses are keyed and sorted by).
+    pub fn submit(
+        &mut self,
+        tenant: usize,
+        features: Vec<f64>,
+        deadline_in: Option<u64>,
+    ) -> Result<u64> {
+        let Some(t) = self.tenants.get(tenant) else {
+            bail!("unknown tenant index {tenant} (server has {})", self.tenants.len());
+        };
+        ensure!(
+            features.len() == t.model.in_dim(),
+            "tenant '{}' consumes {} features, got {}",
+            t.name,
+            t.model.in_dim(),
+            features.len()
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queues[tenant].push(Request {
+            id,
+            tenant,
+            features,
+            arrival_tick: self.now,
+            // Saturate: a deadline near u64::MAX means "effectively
+            // never due", not an overflow panic.
+            deadline_tick: deadline_in.map(|d| self.now.saturating_add(d)),
+        });
+        self.stats.submitted += 1;
+        Ok(id)
+    }
+
+    /// Advance virtual time by one tick: sample queue depths, let the
+    /// batcher coalesce ready requests, fan the batches out over the
+    /// shard pool, and return this tick's responses sorted by request
+    /// id.
+    pub fn tick(&mut self) -> Result<Vec<Response>> {
+        self.stats.record_depth(self.pending());
+        // Batch formation is global and precedes the fan-out, so the
+        // dispatch schedule is independent of the shard count. Batches
+        // spread round-robin in formation order — keyed by a batch
+        // counter, not the tenant index, so a single-tenant server
+        // still uses the whole pool.
+        let n_shards = self.shards.len();
+        let mut any = false;
+        let mut batch_no = 0usize;
+        for (t, q) in self.queues.iter_mut().enumerate() {
+            for batch in self.policy.drain(q, self.now) {
+                self.stats.record_batch(batch.len());
+                self.shards[batch_no % n_shards].inbox.push((t, batch));
+                batch_no += 1;
+                any = true;
+            }
+        }
+        let mut responses = Vec::new();
+        if any {
+            let tenants: &[Tenant] = &self.tenants;
+            let now = self.now;
+            par_chunks_mut(&mut self.shards, 1, |_, s| s[0].run_inbox(tenants, now));
+            for shard in &mut self.shards {
+                if let Some(e) = shard.error.take() {
+                    return Err(e);
+                }
+                responses.append(&mut shard.outbox);
+                for (t, (calls, packed)) in shard.counters.iter_mut().enumerate() {
+                    self.stats.tenants[t].gemm_calls += *calls;
+                    self.stats.tenants[t].packed_runs += *packed;
+                    *calls = 0;
+                    *packed = 0;
+                }
+            }
+            responses.sort_by_key(|r| r.id);
+            for r in &responses {
+                self.stats.record_response(r);
+            }
+        }
+        self.now += 1;
+        self.stats.ticks = self.now;
+        Ok(responses)
+    }
+
+    /// The earliest tick at which the batcher could dispatch anything:
+    /// `Some(now)` when a queue is ready right now, the nearest future
+    /// wait/deadline trigger otherwise, `None` when nothing is pending.
+    fn next_dispatch_tick(&self) -> Option<u64> {
+        let mut next: Option<u64> = None;
+        for q in &self.queues {
+            if q.is_empty() {
+                continue;
+            }
+            if self.policy.should_dispatch(q, self.now) {
+                return Some(self.now);
+            }
+            // should_dispatch was false, so both triggers are strictly
+            // in the future (and the size trigger needs a new arrival,
+            // which only the caller can produce).
+            let mut t = q
+                .oldest_arrival()
+                .map(|a| a.saturating_add(self.policy.max_wait_ticks))
+                .unwrap_or(u64::MAX);
+            if let Some(d) = q.earliest_deadline() {
+                t = t.min(d.saturating_sub(super::batcher::SERVICE_TICKS));
+            }
+            next = Some(next.map_or(t, |n: u64| n.min(t)));
+        }
+        next
+    }
+
+    /// Fast-forward to `cap` or the next possible dispatch tick,
+    /// whichever is earlier — observably identical to ticking through
+    /// the skipped quiet ticks one by one (each would sample the same
+    /// queue depth and dispatch nothing) but O(1). Keeps sparse-trace
+    /// replay and large `max_wait_ticks` drains O(events) instead of
+    /// O(tick span). Returns the new current tick.
+    pub fn advance_to(&mut self, cap: u64) -> u64 {
+        let target = match self.next_dispatch_tick() {
+            Some(t) => t.min(cap),
+            None => cap,
+        };
+        if target > self.now {
+            self.stats.record_quiet(target - self.now, self.pending());
+            self.now = target;
+            self.stats.ticks = self.now;
+        }
+        self.now
+    }
+
+    /// Tick until every queue is empty, collecting the responses.
+    /// Progress is guaranteed: a non-empty queue dispatches at the
+    /// latest `max_wait_ticks` after its oldest arrival, and quiet
+    /// stretches fast-forward in O(1).
+    pub fn drain(&mut self) -> Result<Vec<Response>> {
+        let mut out = Vec::new();
+        // Every pending request arrived at or before `now`, so the wait
+        // trigger guarantees the last one dispatches within
+        // `max_wait_ticks` ticks — anything longer is a batcher bug.
+        let bound = self.now.saturating_add(self.policy.max_wait_ticks).saturating_add(1);
+        while self.pending() > 0 {
+            self.advance_to(bound);
+            out.append(&mut self.tick()?);
+            ensure!(
+                self.pending() == 0 || self.now <= bound,
+                "server failed to drain within the wait bound (a batcher bug)"
+            );
+        }
+        Ok(out)
+    }
+}

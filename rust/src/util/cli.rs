@@ -49,8 +49,28 @@ impl Args {
     }
 
     /// Option lookup with a default, parsed to any `FromStr` type.
+    /// A present-but-unparseable value silently falls back to the
+    /// default; prefer [`Args::try_get`] where a typo must not turn
+    /// into a different configuration.
     pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         self.options.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Like [`Args::get`] but a present, unparseable value is a typed
+    /// error naming the flag — not a silent fallback to the default.
+    pub fn try_get<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> crate::util::error::Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                crate::util::error::Error::msg(format!(
+                    "--{key} expects a numeric value, got '{v}'"
+                ))
+            }),
+        }
     }
 
     /// String option lookup.
@@ -88,6 +108,15 @@ mod tests {
         assert_eq!(a.get::<u64>("steps", 10), 300);
         assert_eq!(a.get::<u64>("batch", 32), 32);
         assert_eq!(a.get::<f64>("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn try_get_rejects_malformed_values() {
+        let a = Args::parse(argv("serve --max-batch 6k --requests 24"));
+        assert_eq!(a.try_get::<usize>("requests", 1).unwrap(), 24);
+        assert_eq!(a.try_get::<usize>("absent", 7).unwrap(), 7);
+        let err = a.try_get::<usize>("max-batch", 32).unwrap_err();
+        assert!(err.to_string().contains("--max-batch expects"), "{err}");
     }
 
     #[test]

@@ -237,6 +237,115 @@ fn cli_train_native_smoke() {
     assert!(stdout.contains("packed fast path"), "{stdout}");
 }
 
+// ---------------------------------------------------- serving CLI / e2e
+
+#[test]
+fn cli_serve_rejects_bad_arguments() {
+    assert_clean_cli_error(
+        &["serve", "--tenants", "fp12", "--train-steps", "1"],
+        "--tenants must list precision policies",
+    );
+    assert_clean_cli_error(
+        &["serve", "--tenants", "hfp8,hfp8", "--train-steps", "1"],
+        "lists 'hfp8' twice",
+    );
+    assert_clean_cli_error(&["serve", "--max-batch", "0", "--train-steps", "1"], "--max-batch");
+    // A numeric typo must be an error, not a silent default config.
+    assert_clean_cli_error(&["serve", "--max-batch", "6k"], "--max-batch expects");
+    assert_clean_cli_error(&["serve", "--shards", "0", "--train-steps", "1"], "shard count");
+    assert_clean_cli_error(
+        &["serve", "--load", "warp", "--tenants", "hfp8", "--train-steps", "1"],
+        "--load must be open|closed",
+    );
+    assert_clean_cli_error(&["serve", "--checkpoint", "/nonexistent/model.bin"], "checkpoint");
+    // --checkpoint and --tenants are mutually exclusive, loudly.
+    assert_clean_cli_error(
+        &["serve", "--checkpoint", "m.bin", "--tenants", "hfp8"],
+        "conflicts with",
+    );
+}
+
+#[test]
+fn cli_serve_smoke_open_loop() {
+    let out = repro(&[
+        "serve",
+        "--tenants",
+        "hfp8",
+        "--train-steps",
+        "8",
+        "--requests",
+        "24",
+        "--max-batch",
+        "8",
+        "--seed",
+        "3",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("served 24 responses"), "{stdout}");
+    assert!(stdout.contains("p50"), "{stdout}");
+    assert!(stdout.contains("tenant hfp8"), "{stdout}");
+    assert!(stdout.contains("100% packed fast path"), "{stdout}");
+}
+
+#[test]
+fn cli_train_save_then_serve_checkpoint() {
+    // The README's end-to-end story: train -> checkpoint -> serve.
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("mfnn_cli_ckpt_{}.bin", std::process::id()));
+    let path = path.to_str().expect("utf-8 temp path");
+    let out = repro(&["train", "--steps", "8", "--quiet", "--precision", "fp8", "--save", path]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("checkpoint saved"),
+        "{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let out = repro(&["serve", "--checkpoint", path, "--requests", "16", "--json"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"completed\":16"), "{stdout}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn serving_trace_is_deterministic_end_to_end() {
+    // Same seed + trace through the *library* path twice: identical
+    // response bits and identical stats JSON (the CLI --json payload).
+    use minifloat_nn::serve::{sim, InferenceModel};
+    let session = Session::builder().seed(6).build();
+    let mut tr = session.native_trainer(PrecisionPolicy::hfp8()).expect("trainer");
+    tr.train(6, 0).expect("train");
+    let model = InferenceModel::freeze(&session, tr.model(), tr.policy()).expect("freeze");
+    let plan = session
+        .server()
+        .tenant("t", model)
+        .max_batch(8)
+        .max_wait_ticks(2)
+        .shards(2)
+        .build()
+        .expect("plan");
+    let trace = sim::Trace::open_loop(11, &[8], 60, 0.5, Some(32)).expect("trace");
+    let run = || {
+        let mut server = plan.server();
+        let responses = sim::replay(&mut server, &trace).expect("replay");
+        (responses, server.stats().summary_json())
+    };
+    let (ra, ja) = run();
+    let (rb, jb) = run();
+    assert_eq!(ja, jb, "stats JSON must be byte-identical");
+    assert_eq!(ra.len(), 60);
+    for (a, b) in ra.iter().zip(&rb) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.completion_tick, b.completion_tick);
+        let (la, lb): (Vec<u64>, Vec<u64>) = (
+            a.logits.iter().map(|v| v.to_bits()).collect(),
+            b.logits.iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(la, lb, "request {}", a.id);
+    }
+}
+
 // ------------------------------------------- native training (blocking)
 
 #[test]
