@@ -1,0 +1,335 @@
+//! [`PlanInstance`] — a compiled, reusable execution of one
+//! [`crate::api::GemmPlan`].
+//!
+//! A [`crate::api::GemmPlan`] is validation: proof a problem is
+//! runnable. A `PlanInstance` is the **execution substrate** compiled
+//! from that proof once and reused across runs: it owns a
+//! [`crate::batch::Workspace`] (packed-operand scratch + staging) and
+//! optional cached packed operands, so the steady state — an nn
+//! training step, a serve dispatch — performs **zero allocation per
+//! GEMM**. Outputs are written into caller-provided buffers
+//! ([`PlanInstance::run_into`] / [`PlanInstance::run_f64_into`]);
+//! [`PlanInstance::bind_b`] + [`PlanInstance::run_reusing`] cover the
+//! fixed-operand pattern (serve's frozen weights).
+//!
+//! Reuse is capacity-only: a workspace carries no numeric state, so a
+//! run through an instance is bit-identical to the same run through
+//! the one-shot [`crate::api::GemmPlan::run`]/`run_f64` (pinned by the
+//! `instance_*` differential tests in `api::tests`).
+
+use super::plan::transpose_f64_into;
+use super::session::Session;
+use super::tensor::{expect_fmt, Layout, MfTensor};
+use crate::batch::{self, Workspace};
+use crate::core::CoreStats;
+use crate::formats::FpFormat;
+use crate::kernels::gemm::{ExecMode, GemmKernel};
+use crate::softfloat::RoundingMode;
+use crate::util::error::Result;
+use crate::{bail, ensure};
+
+/// Structured result of an instance run: [`crate::api::RunReport`]
+/// minus the owned C tensor (C went into the caller's buffer instead).
+#[derive(Clone, Debug)]
+pub struct RunInfo {
+    /// Cluster cycles: simulated, the analytic issue-slot estimate, or
+    /// `None` (functional run with the cycle model off).
+    pub cycles: Option<u64>,
+    /// FLOP performed (2·M·N·K).
+    pub flops: u64,
+    /// Aggregate core stats (cycle-accurate runs only).
+    pub stats: Option<CoreStats>,
+    /// Which engine produced this result.
+    pub mode: ExecMode,
+    /// True when the operands' packed words fed the batch engine
+    /// directly (the zero-repack route).
+    pub packed_input: bool,
+    /// Wall-clock time of the run.
+    pub wall: std::time::Duration,
+}
+
+/// A reusable, workspace-owning execution of one validated GEMM plan.
+/// Construct through [`crate::api::GemmPlan::instance`]; the instance
+/// owns a copy of the session policy, so it outlives the plan borrow
+/// and can persist across training steps / serve dispatches.
+#[derive(Debug)]
+pub struct PlanInstance {
+    session: Session,
+    kern: GemmKernel,
+    src: FpFormat,
+    acc: FpFormat,
+    ta: bool,
+    tb: bool,
+    ws: Workspace,
+    a_bound: Option<MfTensor>,
+    b_bound: Option<MfTensor>,
+    /// Re-grid the decoded C onto the accumulation grid in place
+    /// (default). The one-shot [`crate::api::GemmPlan`] wrappers turn
+    /// this off: they immediately re-encode C into a tensor, which
+    /// performs the identical rounding, so regridding first would be a
+    /// wasted O(m·n) pass.
+    regrid_output: bool,
+    runs: u64,
+    packed_runs: u64,
+}
+
+impl PlanInstance {
+    pub(crate) fn assemble(
+        session: Session,
+        kern: GemmKernel,
+        src: FpFormat,
+        acc: FpFormat,
+        ta: bool,
+        tb: bool,
+    ) -> Self {
+        PlanInstance {
+            session,
+            kern,
+            src,
+            acc,
+            ta,
+            tb,
+            ws: Workspace::new(),
+            a_bound: None,
+            b_bound: None,
+            regrid_output: true,
+            runs: 0,
+            packed_runs: 0,
+        }
+    }
+
+    /// One-shot wrapper support (see the `regrid_output` field): the
+    /// caller will re-encode C into a tensor itself, which rounds
+    /// identically, so the in-place regrid is skipped.
+    pub(crate) fn skip_output_regrid(&mut self) {
+        self.regrid_output = false;
+    }
+
+    /// `(m, n, k)`.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.kern.m, self.kern.n, self.kern.k)
+    }
+
+    /// Source element format.
+    pub fn src_fmt(&self) -> FpFormat {
+        self.src
+    }
+
+    /// Accumulation / output format.
+    pub fn acc_fmt(&self) -> FpFormat {
+        self.acc
+    }
+
+    /// `(transpose_a, transpose_b)`.
+    pub fn transposes(&self) -> (bool, bool) {
+        (self.ta, self.tb)
+    }
+
+    /// Executions so far (the plan-reuse counter: every run after the
+    /// first amortized the compile + workspace).
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// How many executions fed the batch engine packed words directly.
+    pub fn packed_runs(&self) -> u64 {
+        self.packed_runs
+    }
+
+    /// Bytes of scratch capacity the workspace currently holds.
+    pub fn workspace_bytes(&self) -> usize {
+        self.ws.capacity_bytes()
+    }
+
+    /// Row-major shape the A operand arrives in (transposed plans take
+    /// it untransposed, `k×m`).
+    fn a_shape(&self) -> (usize, usize) {
+        let (m, _, k) = self.dims();
+        if self.ta {
+            (k, m)
+        } else {
+            (m, k)
+        }
+    }
+
+    /// Row-major shape the B operand arrives in (`n×k` under
+    /// `transpose_b`).
+    fn b_shape(&self) -> (usize, usize) {
+        let (_, n, k) = self.dims();
+        if self.tb {
+            (n, k)
+        } else {
+            (k, n)
+        }
+    }
+
+    /// Run on row-major `f64` operands, writing decoded C (re-gridded
+    /// onto the accumulation format, exactly like
+    /// [`crate::api::GemmPlan::run_f64`]'s tensor re-encode) into `out`
+    /// — cleared and resized, capacity reused.
+    pub fn run_f64_into(&mut self, a: &[f64], b: &[f64], out: &mut Vec<f64>) -> Result<RunInfo> {
+        let (m, n, k) = self.dims();
+        let (ar, ac) = self.a_shape();
+        let (br, bc) = self.b_shape();
+        ensure!(a.len() == ar * ac, "A must be {ar}x{ac} = {} elements, got {}", ar * ac, a.len());
+        ensure!(b.len() == br * bc, "B must be {br}x{bc} = {} elements, got {}", br * bc, b.len());
+        let t0 = std::time::Instant::now();
+        let mode = self.session.mode();
+        let (cycles, stats) = match mode {
+            ExecMode::CycleAccurate => {
+                // Builder invariant: cycle-accurate plans are nominal
+                // formats, untransposed.
+                let r = self.kern.run(a, b);
+                out.clear();
+                out.extend_from_slice(&r.c);
+                (Some(r.cycles), Some(r.stats))
+            }
+            ExecMode::Functional => {
+                let rm = self.session.rounding();
+                let (src, acc, ta, tb) = (self.src, self.acc, self.ta, self.tb);
+                let kind = self.kern.kind;
+                let ws = &mut self.ws;
+                self.session.scoped(|| {
+                    if !batch::gemm_expanding_into(src, acc, ta, tb, m, n, k, a, b, rm, ws, out) {
+                        // Non-expanding family (the FMA kernels):
+                        // materialize the logical operands in the
+                        // workspace's transpose staging (taken out for
+                        // the nested call, then returned) and run the
+                        // kind dispatcher.
+                        let mut ta_buf = std::mem::take(&mut ws.ft_a);
+                        let mut tb_buf = std::mem::take(&mut ws.ft_b);
+                        let a2: &[f64] = if ta {
+                            transpose_f64_into(a, k, m, &mut ta_buf);
+                            &ta_buf
+                        } else {
+                            a
+                        };
+                        let b2: &[f64] = if tb {
+                            transpose_f64_into(b, n, k, &mut tb_buf);
+                            &tb_buf
+                        } else {
+                            b
+                        };
+                        batch::gemm_dispatch_into(kind, m, n, k, a2, b2, rm, ws, out);
+                        ws.ft_a = ta_buf;
+                        ws.ft_b = tb_buf;
+                    }
+                });
+                (self.session.cycle_model_enabled().then(|| self.kern.model_cycles()), None)
+            }
+        };
+        // Epilogue: C re-encoded onto the accumulation grid (always
+        // RNE, matching the plan layer's tensor re-encode).
+        if self.regrid_output {
+            let acc = self.acc;
+            self.session.scoped(|| batch::regrid_in_place(acc, out, RoundingMode::Rne));
+        }
+        self.runs += 1;
+        Ok(RunInfo {
+            cycles,
+            flops: self.kern.flops(),
+            stats,
+            mode,
+            packed_input: false,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// Run on typed tensors, writing decoded C into `out`. Identical
+    /// routing to [`crate::api::GemmPlan::run`]: when the functional
+    /// engine is selected and both tensors already provide the kernel's
+    /// streams, the packed words feed the batch engine directly (zero
+    /// decode/re-pack, `RunInfo::packed_input`); all other combinations
+    /// decode into the workspace and take the f64 route. Both routes
+    /// are bit-identical to the one-shot plan (pinned by tests).
+    pub fn run_into(&mut self, a: &MfTensor, b: &MfTensor, out: &mut Vec<f64>) -> Result<RunInfo> {
+        let (m, n, k) = self.dims();
+        expect_fmt(a, self.src, "A")?;
+        expect_fmt(b, self.src, "B")?;
+        let (ar, ac) = self.a_shape();
+        let (br, bc) = self.b_shape();
+        ensure!(a.shape() == (ar, ac), "A must be {ar}x{ac}, got {}x{}", a.rows(), a.cols());
+        ensure!(b.shape() == (br, bc), "B must be {br}x{bc}, got {}x{}", b.rows(), b.cols());
+        let a_streams = a.layout() == if self.ta { Layout::ColMajor } else { Layout::RowMajor };
+        let b_streams = b.layout() == if self.tb { Layout::RowMajor } else { Layout::ColMajor };
+        if self.session.mode() == ExecMode::Functional && a_streams && b_streams {
+            let t0 = std::time::Instant::now();
+            let rm = self.session.rounding();
+            let (src, acc) = (self.src, self.acc);
+            let hit = self
+                .session
+                .scoped(|| batch::gemm_packed_into(src, acc, m, n, k, a.words(), b.words(), rm, out));
+            if hit {
+                if self.regrid_output {
+                    self.session.scoped(|| batch::regrid_in_place(acc, out, RoundingMode::Rne));
+                }
+                self.runs += 1;
+                self.packed_runs += 1;
+                return Ok(RunInfo {
+                    cycles: self.session.cycle_model_enabled().then(|| self.kern.model_cycles()),
+                    flops: self.kern.flops(),
+                    stats: None,
+                    mode: ExecMode::Functional,
+                    packed_input: true,
+                    wall: t0.elapsed(),
+                });
+            }
+        }
+        // Fallback: decode into the workspace staging buffers (taken
+        // out for the nested call, then returned) and run f64.
+        let mut fa = std::mem::take(&mut self.ws.fa);
+        let mut fb = std::mem::take(&mut self.ws.fb);
+        a.view().to_f64_into(&mut fa);
+        b.view().to_f64_into(&mut fb);
+        let r = self.run_f64_into(&fa, &fb, out);
+        self.ws.fa = fa;
+        self.ws.fb = fb;
+        r
+    }
+
+    /// Cache the A operand (validated now, cloned into the instance)
+    /// for [`PlanInstance::run_bound`].
+    pub fn bind_a(&mut self, a: &MfTensor) -> Result<()> {
+        expect_fmt(a, self.src, "A")?;
+        let (ar, ac) = self.a_shape();
+        ensure!(a.shape() == (ar, ac), "A must be {ar}x{ac}, got {}x{}", a.rows(), a.cols());
+        self.a_bound = Some(a.clone());
+        Ok(())
+    }
+
+    /// Cache the B operand — the fixed-weights pattern: serve shards
+    /// bind a frozen layer's packed weights once and stream request
+    /// batches through [`PlanInstance::run_reusing`].
+    pub fn bind_b(&mut self, b: &MfTensor) -> Result<()> {
+        expect_fmt(b, self.src, "B")?;
+        let (br, bc) = self.b_shape();
+        ensure!(b.shape() == (br, bc), "B must be {br}x{bc}, got {}x{}", b.rows(), b.cols());
+        self.b_bound = Some(b.clone());
+        Ok(())
+    }
+
+    /// [`PlanInstance::run_into`] against the bound B operand.
+    pub fn run_reusing(&mut self, a: &MfTensor, out: &mut Vec<f64>) -> Result<RunInfo> {
+        let Some(b) = self.b_bound.take() else {
+            bail!("no bound B operand: call PlanInstance::bind_b first (or use run_into)");
+        };
+        let r = self.run_into(a, &b, out);
+        self.b_bound = Some(b);
+        r
+    }
+
+    /// [`PlanInstance::run_into`] with both operands bound (steady-state
+    /// benchmarking of a fixed problem).
+    pub fn run_bound(&mut self, out: &mut Vec<f64>) -> Result<RunInfo> {
+        ensure!(
+            self.a_bound.is_some() && self.b_bound.is_some(),
+            "both operands must be bound (bind_a + bind_b) before run_bound"
+        );
+        let a = self.a_bound.take().expect("checked above");
+        let b = self.b_bound.take().expect("checked above");
+        let r = self.run_into(&a, &b, out);
+        self.a_bound = Some(a);
+        self.b_bound = Some(b);
+        r
+    }
+}

@@ -19,6 +19,11 @@
 //!   shape mismatch, or infeasible problem is a typed
 //!   [`Error`](crate::util::error::Error) at plan-build time, never a
 //!   panic mid-run.
+//! * [`PlanInstance`] — a plan compiled once into a reusable executor:
+//!   owns its [`crate::batch::Workspace`] and cached packed operands,
+//!   writes into caller buffers (`run_into` / `run_reusing`), so the
+//!   steady state allocates nothing per GEMM. The substrate under the
+//!   nn trainer's and serve shards' hot loops.
 //!
 //! The pre-API free functions are gone (the deprecated `batch::gemm`
 //! shim served its one release and has been removed); the differential
@@ -40,6 +45,7 @@
 //! # }
 //! ```
 
+pub mod instance;
 pub mod plan;
 pub mod serve;
 pub mod session;
@@ -48,6 +54,7 @@ pub mod train;
 #[cfg(test)]
 mod tests;
 
+pub use instance::{PlanInstance, RunInfo};
 pub use plan::{AccumulatePlan, AccumulatePlanBuilder, GemmPlan, GemmPlanBuilder, RunReport};
 pub use serve::{ServePlan, ServePlanBuilder};
 pub use session::{Session, SessionBuilder};

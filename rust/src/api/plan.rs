@@ -8,7 +8,7 @@
 //! cannot honor. Nothing panics after `dims()`/`n()` return `Ok`.
 
 use super::session::Session;
-use super::tensor::{expect_fmt, MfTensor};
+use super::tensor::MfTensor;
 use crate::accuracy::{self, AccuracyPoint};
 use crate::core::CoreStats;
 use crate::formats::FpFormat;
@@ -36,16 +36,17 @@ pub(crate) fn expanding_family(src: FpFormat, dst: FpFormat) -> Option<GemmKind>
     })
 }
 
-/// Transpose a row-major `rows×cols` matrix into `cols×rows`.
-fn transpose_f64(src: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+/// Transpose a row-major `rows×cols` matrix into `cols×rows`, into a
+/// caller-provided buffer (cleared and resized; capacity reused).
+pub(crate) fn transpose_f64_into(src: &[f64], rows: usize, cols: usize, out: &mut Vec<f64>) {
     debug_assert_eq!(src.len(), rows * cols);
-    let mut out = vec![0f64; rows * cols];
+    out.clear();
+    out.resize(rows * cols, 0f64);
     for r in 0..rows {
         for c in 0..cols {
             out[c * rows + r] = src[r * cols + c];
         }
     }
-    out
 }
 
 /// Builder returned by [`Session::gemm`]. Pick the kernel either by
@@ -243,61 +244,35 @@ impl GemmPlan<'_> {
         self.acc
     }
 
+    /// Compile the plan into a reusable [`crate::api::PlanInstance`]:
+    /// an owned execution of this exact problem with its own
+    /// [`crate::batch::Workspace`] and optional cached operands, so
+    /// repeated runs (`run_into` / `run_reusing`) allocate nothing.
+    /// The instance copies the session policy (`Session` is `Copy`), so
+    /// it outlives this plan's borrow — trainers and serve shards hold
+    /// instances across steps/dispatches. One-shot callers keep using
+    /// [`GemmPlan::run`] / [`GemmPlan::run_f64`]; both paths are
+    /// bit-identical (pinned by `api::tests`).
+    pub fn instance(&self) -> super::instance::PlanInstance {
+        super::instance::PlanInstance::assemble(*self.session, self.kern, self.src, self.acc, self.ta, self.tb)
+    }
+
     /// Run on row-major `f64` matrices (quantized to the source format
     /// on packing, exactly like the pre-API free functions). Transposed
     /// plans take their marked operand *untransposed*: `k×m` for A under
     /// [`GemmPlanBuilder::transpose_a`], `n×k` for B under
     /// [`GemmPlanBuilder::transpose_b`].
+    ///
+    /// A thin wrapper over a one-shot [`crate::api::PlanInstance`] —
+    /// the instance owns the **single** implementation of the run
+    /// routing (engine selection, packed fast path, epilogue
+    /// re-encode), so the one-shot and reusable paths cannot diverge.
     pub fn run_f64(&self, a: &[f64], b: &[f64]) -> Result<RunReport> {
-        let (m, n, k) = self.dims();
-        let (ar, ac) = if self.ta { (k, m) } else { (m, k) };
-        let (br, bc) = if self.tb { (n, k) } else { (k, n) };
-        ensure!(a.len() == ar * ac, "A must be {ar}x{ac} = {} elements, got {}", ar * ac, a.len());
-        ensure!(b.len() == br * bc, "B must be {br}x{bc} = {} elements, got {}", br * bc, b.len());
-        let t0 = std::time::Instant::now();
-        let mode = self.session.mode();
-        let (c, cycles, stats) = self.session.scoped(|| match mode {
-            ExecMode::CycleAccurate => {
-                // Builder invariant: cycle-accurate plans are nominal
-                // formats, untransposed.
-                let r = self.kern.run(a, b);
-                (r.c, Some(r.cycles), Some(r.stats))
-            }
-            ExecMode::Functional => {
-                let rm = self.session.rounding();
-                let c = match crate::batch::gemm_expanding(self.src, self.acc, self.ta, self.tb, m, n, k, a, b, rm)
-                {
-                    Some(c) => c,
-                    None => {
-                        // Non-expanding family (the FMA kernels):
-                        // materialize the logical operands and run the
-                        // kind dispatcher.
-                        let at;
-                        let bt;
-                        let a2: &[f64] = if self.ta {
-                            at = transpose_f64(a, k, m);
-                            &at
-                        } else {
-                            a
-                        };
-                        let b2: &[f64] = if self.tb {
-                            bt = transpose_f64(b, n, k);
-                            &bt
-                        } else {
-                            b
-                        };
-                        crate::batch::gemm_dispatch(self.kern.kind, m, n, k, a2, b2, rm)
-                    }
-                };
-                let cycles = self.session.cycle_model_enabled().then(|| self.kern.model_cycles());
-                (c, cycles, None)
-            }
-        });
-        let wall = t0.elapsed();
-        // C values are on the destination grid, so re-encoding is exact
-        // (scoped: the packer parallelizes under the thread budget too).
-        let c = self.session.scoped(|| MfTensor::from_f64(&c, m, n, self.acc_fmt(), RoundingMode::Rne))?;
-        Ok(RunReport { c, cycles, flops: self.kern.flops(), stats, mode, packed_input: false, wall })
+        let mut inst = self.instance();
+        inst.skip_output_regrid(); // report() re-encodes with the same rounding
+        let mut c = Vec::new();
+        let info = inst.run_f64_into(a, b, &mut c)?;
+        self.report(c, info)
     }
 
     /// Run on typed tensors. `a` must be `m×k` and `b` `k×n` (the
@@ -312,41 +287,32 @@ impl GemmPlan<'_> {
     /// engine **directly**: zero decode/re-pack. All other combinations
     /// restream from the decoded values, which is exact for on-grid
     /// tensors; both routes produce the same C (pinned by the
-    /// `tensor_run_*` differential tests).
+    /// `tensor_run_*` differential tests). Like [`GemmPlan::run_f64`],
+    /// a thin wrapper over a one-shot [`crate::api::PlanInstance`].
     pub fn run(&self, a: &MfTensor, b: &MfTensor) -> Result<RunReport> {
-        use super::tensor::Layout;
-        let (m, n, k) = self.dims();
-        expect_fmt(a, self.src_fmt(), "A")?;
-        expect_fmt(b, self.src_fmt(), "B")?;
-        let (ar, ac) = if self.ta { (k, m) } else { (m, k) };
-        let (br, bc) = if self.tb { (n, k) } else { (k, n) };
-        ensure!(a.shape() == (ar, ac), "A must be {ar}x{ac}, got {}x{}", a.rows(), a.cols());
-        ensure!(b.shape() == (br, bc), "B must be {br}x{bc}, got {}x{}", b.rows(), b.cols());
-        let a_streams = a.layout() == if self.ta { Layout::ColMajor } else { Layout::RowMajor };
-        let b_streams = b.layout() == if self.tb { Layout::RowMajor } else { Layout::ColMajor };
-        if self.session.mode() == ExecMode::Functional && a_streams && b_streams {
-            let t0 = std::time::Instant::now();
-            let rm = self.session.rounding();
-            let packed = self.session.scoped(|| {
-                crate::batch::gemm_packed(self.src_fmt(), self.acc_fmt(), m, n, k, a.words(), b.words(), rm)
-            });
-            if let Some(c) = packed {
-                let wall = t0.elapsed();
-                let cycles = self.session.cycle_model_enabled().then(|| self.kern.model_cycles());
-                let c =
-                    self.session.scoped(|| MfTensor::from_f64(&c, m, n, self.acc_fmt(), RoundingMode::Rne))?;
-                return Ok(RunReport {
-                    c,
-                    cycles,
-                    flops: self.kern.flops(),
-                    stats: None,
-                    mode: ExecMode::Functional,
-                    packed_input: true,
-                    wall,
-                });
-            }
-        }
-        self.run_f64(&a.to_f64(), &b.to_f64())
+        let mut inst = self.instance();
+        inst.skip_output_regrid(); // report() re-encodes with the same rounding
+        let mut c = Vec::new();
+        let info = inst.run_into(a, b, &mut c)?;
+        self.report(c, info)
+    }
+
+    /// Materialize a [`RunReport`] from an instance run: re-encode the
+    /// (already acc-gridded) C values into a typed tensor — exact, so
+    /// the report's tensor is bit-identical to the instance's decoded
+    /// output.
+    fn report(&self, c: Vec<f64>, info: super::instance::RunInfo) -> Result<RunReport> {
+        let (m, n, _) = self.dims();
+        let c = self.session.scoped(|| MfTensor::from_f64(&c, m, n, self.acc_fmt(), RoundingMode::Rne))?;
+        Ok(RunReport {
+            c,
+            cycles: info.cycles,
+            flops: info.flops,
+            stats: info.stats,
+            mode: info.mode,
+            packed_input: info.packed_input,
+            wall: info.wall,
+        })
     }
 }
 

@@ -17,7 +17,7 @@ use crate::nn::policy::PrecisionPolicy;
 use crate::nn::train::NativeTrainer;
 use crate::softfloat::RoundingMode;
 use crate::util::error::{Context, Result};
-use crate::util::parallel::with_worker_count;
+use crate::util::parallel::ExecutorHandle;
 use crate::util::rng::Rng;
 
 /// Immutable execution policy: which engine runs the work, how results
@@ -75,6 +75,19 @@ impl Session {
     /// Thread budget for the batch engine (`None` = all cores).
     pub fn threads(&self) -> Option<usize> {
         self.threads
+    }
+
+    /// The executor this session dispatches batch work on: a handle on
+    /// the persistent process worker pool
+    /// ([`crate::util::parallel::Executor::global`]) carrying the
+    /// session's thread budget. The budget caps how many spans a
+    /// dispatch fans out to — identical semantics to the scoped-thread
+    /// era, and results are bit-identical at any budget; the pool
+    /// itself is never resized. Every `session.scoped` code path
+    /// (plans, packing, the nn/serve subsystems) runs through this
+    /// handle.
+    pub fn executor(&self) -> ExecutorHandle {
+        ExecutorHandle::with_budget(self.threads)
     }
 
     /// Whether functional GEMM runs attach the analytic issue-slot
@@ -157,12 +170,37 @@ impl Session {
         )
     }
 
-    /// Run `f` under this session's thread budget (no-op when unset).
+    /// [`Session::tensor_with_layout`] recycling `buf`'s allocation for
+    /// the packed words (capacity reuse only — bit-identical to the
+    /// allocating constructor). Pair with
+    /// [`crate::api::MfTensor::into_words`]; the nn tape and serve
+    /// shards pool buffers through this to keep the hot loops
+    /// allocation-free.
+    pub fn tensor_reusing(
+        &self,
+        data: &[f64],
+        rows: usize,
+        cols: usize,
+        fmt: FpFormat,
+        layout: Layout,
+        buf: Vec<u64>,
+    ) -> Result<MfTensor> {
+        self.scoped(|| MfTensor::from_f64_reusing(data, rows, cols, fmt, layout, self.rm, buf))
+    }
+
+    /// Round `vals` onto `fmt`'s grid in place under the session thread
+    /// budget and rounding mode — the epilogue re-encode without
+    /// materializing a tensor, bit-identical to
+    /// `self.tensor(vals, ..)?.to_f64()` by construction (same `rm`,
+    /// same quantizer).
+    pub fn regrid_in_place(&self, fmt: FpFormat, vals: &mut [f64]) {
+        self.scoped(|| crate::batch::regrid_in_place(fmt, vals, self.rm));
+    }
+
+    /// Run `f` under this session's executor handle (thread budget;
+    /// no-op when unset).
     pub(crate) fn scoped<R>(&self, f: impl FnOnce() -> R) -> R {
-        match self.threads {
-            Some(n) => with_worker_count(n, f),
-            None => f(),
-        }
+        self.executor().scoped(f)
     }
 }
 

@@ -103,6 +103,22 @@ impl MfTensor {
         layout: Layout,
         rm: RoundingMode,
     ) -> Result<Self> {
+        Self::from_f64_reusing(data, rows, cols, fmt, layout, rm, Vec::new())
+    }
+
+    /// [`MfTensor::from_f64_with_layout`] recycling `buf`'s allocation
+    /// for the packed words (its contents are irrelevant — only the
+    /// capacity is reused; pair with [`MfTensor::into_words`]).
+    /// Bit-identical to the allocating constructors.
+    pub fn from_f64_reusing(
+        data: &[f64],
+        rows: usize,
+        cols: usize,
+        fmt: FpFormat,
+        layout: Layout,
+        rm: RoundingMode,
+        mut buf: Vec<u64>,
+    ) -> Result<Self> {
         ensure!(
             data.len() == rows * cols,
             "data length ({}) does not match the {rows}x{cols} shape",
@@ -112,18 +128,19 @@ impl MfTensor {
         // Paper formats pack on the batch engine's monomorphized,
         // row-parallel packers (bit-identical by construction — same
         // `from_f64` quantization, same lane order).
-        let fast = match layout {
-            Layout::RowMajor => crate::batch::pack_rows(fmt, data, rows, cols, rm),
-            Layout::ColMajor => crate::batch::pack_cols(fmt, data, rows, cols, rm),
+        let packed = match layout {
+            Layout::RowMajor => crate::batch::pack_rows_into(fmt, data, rows, cols, rm, &mut buf),
+            Layout::ColMajor => crate::batch::pack_cols_into(fmt, data, rows, cols, rm, &mut buf),
         };
-        if let Some(words) = fast {
-            return Ok(MfTensor { fmt, rows, cols, layout, words });
+        if packed {
+            return Ok(MfTensor { fmt, rows, cols, layout, words: buf });
         }
         // Custom formats: descriptor-driven fallback, same layout.
         let lanes = fmt.lanes_in_64() as usize;
         let (lines, extent) = major(rows, cols, layout);
         let wpl = extent / lanes;
-        let mut words = vec![0u64; n_words];
+        buf.clear();
+        buf.resize(n_words, 0);
         for line in 0..lines {
             for w in 0..wpl {
                 let mut packed = 0u64;
@@ -135,10 +152,10 @@ impl MfTensor {
                     };
                     packed |= from_f64(data[r * cols + c], fmt, rm) << (lane_i as u32 * fmt.width());
                 }
-                words[line * wpl + w] = packed;
+                buf[line * wpl + w] = packed;
             }
         }
-        Ok(MfTensor { fmt, rows, cols, layout, words })
+        Ok(MfTensor { fmt, rows, cols, layout, words: buf })
     }
 
     /// Adopt already-packed words (e.g. read back from a simulated
@@ -255,6 +272,13 @@ impl MfTensor {
         &self.words
     }
 
+    /// Consume the tensor and recover its packed-word storage — the
+    /// buffer-recycling exit paired with [`MfTensor::from_f64_reusing`]
+    /// (the nn tape and serve shards pool these across steps/batches).
+    pub fn into_words(self) -> Vec<u64> {
+        self.words
+    }
+
     /// Total element count.
     pub fn len(&self) -> usize {
         self.rows * self.cols
@@ -294,13 +318,20 @@ impl<'a> MfTensorView<'a> {
 
     /// Decode to a row-major `f64` matrix.
     pub fn to_f64(&self) -> Vec<f64> {
-        let mut out = Vec::with_capacity(self.rows * self.cols);
+        let mut out = Vec::new();
+        self.to_f64_into(&mut out);
+        out
+    }
+
+    /// Decode into a caller-provided buffer (cleared; capacity reused).
+    pub fn to_f64_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(self.rows * self.cols);
         for r in 0..self.rows {
             for c in 0..self.cols {
                 out.push(self.get(r, c));
             }
         }
-        out
     }
 
     /// Element format.

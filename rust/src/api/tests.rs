@@ -80,7 +80,7 @@ fn tensor_run_equals_run_f64() {
 #[test]
 fn packed_tensor_fast_path_matches_f64_path() {
     // A row-major + B column-major on a functional session takes the
-    // zero-repack packed-word route through batch::gemm_packed; it must
+    // zero-repack packed-word route through batch::gemm_packed_into; it must
     // produce the same C as the quantize-from-f64 route, for both
     // expanding kernel families.
     let (m, n, k) = (16, 16, 16);
@@ -500,4 +500,136 @@ fn transpose_builder_rejections() {
     let good = session.tensor(&vec![0.0; 16 * 16], 16, 16, FP8).expect("tensor");
     let err = plan.run(&bad, &good).unwrap_err();
     assert!(err.to_string().contains("A must be 16x16"), "{err}");
+}
+
+// ------------------------------------------------------ plan instances
+
+#[test]
+fn instance_run_f64_bit_identical_to_plan_both_modes() {
+    // A compiled PlanInstance must reproduce the one-shot plan exactly,
+    // in both engines, across repeated runs on the same workspace.
+    let (m, n, k) = (16, 16, 16);
+    for mode in [ExecMode::Functional, ExecMode::CycleAccurate] {
+        let session = Session::builder().mode(mode).build();
+        let plan = session.gemm().src(FP8).acc(FP16).dims(m, n, k).unwrap();
+        let mut inst = plan.instance();
+        let mut out = Vec::new();
+        for seed in [3u64, 4, 5] {
+            let (a, b) = mats(m, n, k, seed);
+            let want = plan.run_f64(&a, &b).unwrap();
+            let info = inst.run_f64_into(&a, &b, &mut out).unwrap();
+            assert_eq!(bits_of(&out), bits_of(&want.c_f64()), "seed {seed} {mode:?}");
+            assert_eq!(info.cycles, want.cycles);
+            assert_eq!(info.flops, want.flops);
+            assert_eq!(info.mode, mode);
+            assert_eq!(info.stats.is_some(), want.stats.is_some());
+        }
+        assert_eq!(inst.runs(), 3);
+    }
+}
+
+#[test]
+fn instance_run_into_routes_and_matches_plan_run() {
+    // Packed fast path (A row-major, B col-major) and the decode
+    // fallback (B row-major) both match GemmPlan::run bit for bit, and
+    // the packed counter tracks the route.
+    let (m, n, k) = (16, 16, 16);
+    let session = Session::new();
+    for (src, dst) in [(FP8, FP16), (FP16, FP32)] {
+        let plan = session.gemm().src(src).acc(dst).dims(m, n, k).unwrap();
+        let mut inst = plan.instance();
+        let mut out = Vec::new();
+        let (a, b) = mats(m, n, k, 21);
+        let ta = session.tensor(&a, m, k, src).unwrap();
+        let tb_col = session.tensor_with_layout(&b, k, n, src, Layout::ColMajor).unwrap();
+        let tb_row = session.tensor(&b, k, n, src).unwrap();
+        let fast = inst.run_into(&ta, &tb_col, &mut out).unwrap();
+        assert!(fast.packed_input, "{}→{} packed route must run", src.name(), dst.name());
+        assert_eq!(bits_of(&out), bits_of(&plan.run(&ta, &tb_col).unwrap().c_f64()));
+        let slow = inst.run_into(&ta, &tb_row, &mut out).unwrap();
+        assert!(!slow.packed_input);
+        assert_eq!(bits_of(&out), bits_of(&plan.run(&ta, &tb_row).unwrap().c_f64()));
+        assert_eq!(inst.runs(), 2);
+        assert_eq!(inst.packed_runs(), 1);
+        assert!(inst.workspace_bytes() > 0, "fallback route must have populated the workspace");
+    }
+}
+
+#[test]
+fn instance_transposed_shapes_match_plan() {
+    // The backward-pass shapes through an instance == the one-shot plan.
+    let (m, n, k) = (8, 16, 24);
+    let session = Session::new();
+    let mut rng = Rng::new(88);
+    let at: Vec<f64> = (0..k * m).map(|_| rng.gaussian() * 0.25).collect(); // k×m (untransposed A)
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    let plan = session.gemm().src(FP8).acc(FP16).transpose_a().dims(m, n, k).unwrap();
+    let mut inst = plan.instance();
+    let mut out = Vec::new();
+    inst.run_f64_into(&at, &b, &mut out).unwrap();
+    assert_eq!(bits_of(&out), bits_of(&plan.run_f64(&at, &b).unwrap().c_f64()));
+    // Packed route with both streams in kernel layout (A col-major
+    // because it arrives untransposed, B col-major as usual).
+    let ta = session.tensor_with_layout(&at, k, m, FP8, Layout::ColMajor).unwrap();
+    let tb = session.tensor_with_layout(&b, k, n, FP8, Layout::ColMajor).unwrap();
+    let info = inst.run_into(&ta, &tb, &mut out).unwrap();
+    assert!(info.packed_input);
+    assert_eq!(bits_of(&out), bits_of(&plan.run(&ta, &tb).unwrap().c_f64()));
+}
+
+#[test]
+fn instance_bound_operands_match_unbound_runs() {
+    let (m, n, k) = (16, 16, 16);
+    let session = Session::new();
+    let (a, b) = mats(m, n, k, 61);
+    let plan = session.gemm().src(FP8).acc(FP16).dims(m, n, k).unwrap();
+    let ta = session.tensor(&a, m, k, FP8).unwrap();
+    let tb = session.tensor_with_layout(&b, k, n, FP8, Layout::ColMajor).unwrap();
+    let mut inst = plan.instance();
+    let mut out = Vec::new();
+    // run_reusing needs a bound B.
+    assert!(inst.run_reusing(&ta, &mut out).is_err());
+    inst.bind_b(&tb).unwrap();
+    let reused = inst.run_reusing(&ta, &mut out).unwrap();
+    assert!(reused.packed_input);
+    let want = plan.run(&ta, &tb).unwrap();
+    assert_eq!(bits_of(&out), bits_of(&want.c_f64()));
+    // Fully bound.
+    inst.bind_a(&ta).unwrap();
+    inst.run_bound(&mut out).unwrap();
+    assert_eq!(bits_of(&out), bits_of(&want.c_f64()));
+    // Format/shape validation on bind is typed.
+    let wrong_fmt = session.tensor(&b, k, n, FP16).unwrap();
+    assert!(plan.instance().bind_b(&wrong_fmt).is_err(), "FP16 B on an FP8 plan must be rejected");
+    let wrong_shape = session.tensor(&a[..8 * k], 8, k, FP8).unwrap();
+    assert!(plan.instance().bind_a(&wrong_shape).is_err(), "8×k A on a 16×k plan must be rejected");
+}
+
+#[test]
+fn session_executor_handle_reflects_thread_budget() {
+    use crate::util::parallel::{worker_count, Executor};
+    let narrow = Session::builder().threads(2).build();
+    assert_eq!(narrow.executor().budget(), Some(2));
+    assert_eq!(narrow.executor().workers(), 2);
+    assert_eq!(narrow.executor().scoped(worker_count), 2);
+    let wide = Session::new();
+    assert_eq!(wide.executor().budget(), None);
+    assert_eq!(wide.executor().workers(), Executor::global().size());
+}
+
+#[test]
+fn tensor_reusing_is_bit_identical_and_recycles() {
+    let (rows, cols) = (8, 16);
+    let (a, _) = mats(rows, 1, cols, 13); // a is rows×cols values
+    let session = Session::new();
+    let fresh = session.tensor(&a, rows, cols, FP8).unwrap();
+    // A dirty recycled buffer must not leak into the packed words.
+    let dirty = vec![0xFFFF_FFFF_FFFF_FFFFu64; 3];
+    let reused = session.tensor_reusing(&a, rows, cols, FP8, Layout::RowMajor, dirty).unwrap();
+    assert_eq!(fresh, reused);
+    let words = reused.into_words();
+    assert_eq!(words, fresh.words());
+    // Round-trip the storage back in, col-major this time.
+    let col = session.tensor_reusing(&a, rows, cols, FP8, Layout::ColMajor, words).unwrap();
+    assert_eq!(col, session.tensor_with_layout(&a, rows, cols, FP8, Layout::ColMajor).unwrap());
 }

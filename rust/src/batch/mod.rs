@@ -14,13 +14,24 @@
 //!   [`crate::exsdotp::fast`]) with no per-lane re-dispatch;
 //! * slice operations ([`exsdotp_accumulate`], [`cast_slice`],
 //!   [`gemm_m`]) iterate whole registers and parallelize across output
-//!   rows with [`crate::util::parallel`] (scoped threads; rayon is
-//!   unavailable offline);
+//!   rows with [`crate::util::parallel`] (the persistent worker pool);
 //! * every operation replays the **identical accumulation order** of
 //!   the generated GEMM kernels (packed-lane partial sums, `vsum`
 //!   epilogue tree), so results are bit-identical to the simulated
 //!   cluster's C matrix — the differential tests in this module and the
 //!   `ExecMode` equivalence tests in [`crate::kernels`] pin that down.
+//!
+//! ## `_into` variants and the [`Workspace`]
+//!
+//! Every hot entry point has an `_into` twin writing into
+//! caller-provided buffers ([`gemm_packed_into_m`], [`cast_slice_into`],
+//! [`pack_rows_into_m`], …); the allocating functions are thin wrappers
+//! that delegate to them with fresh buffers. A [`Workspace`] bundles the
+//! packed-operand and staging scratch a GEMM needs, so steady-state
+//! callers ([`crate::api::PlanInstance`], and through it the nn trainer
+//! and serve shards) pay **zero allocation per call**. A workspace is
+//! recycled capacity only — it carries no numeric state, so reuse
+//! cannot change a single output bit (pinned by differential tests).
 //!
 //! This is the engine behind `ExecMode::Functional`
 //! ([`crate::kernels::gemm::ExecMode`]) and the accuracy-sweep fast
@@ -35,7 +46,7 @@ use crate::formats::spec::{ExpandTo, FormatSpec, Fp16, Fp16alt, Fp32, Fp64, Fp8,
 use crate::formats::FpFormat;
 use crate::kernels::gemm::GemmKind;
 use crate::softfloat::fast::{cast_m, fma_m, from_f64_m, to_f64_m};
-use crate::softfloat::{cast, RoundingMode};
+use crate::softfloat::{cast, from_f64, to_f64, RoundingMode};
 use crate::util::parallel::par_chunks_mut;
 
 /// Elements per parallel work chunk for flat slice operations.
@@ -77,6 +88,47 @@ macro_rules! with_spec {
     };
 }
 
+// ------------------------------------------------------------ workspace
+
+/// Reusable scratch for the batch engine's `_into` entry points:
+/// packed operands and f64 staging. Plain recycled capacity — a
+/// workspace carries **no numeric state**, so reusing one across calls
+/// (of any shape or format) cannot change a single result bit; every
+/// buffer is cleared and resized by the operation that fills it.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Packed operand-A words (also FMA64's transposed-B bit image).
+    pub(crate) pa: Vec<u64>,
+    /// Packed operand-B words.
+    pub(crate) pb: Vec<u64>,
+    /// f64 staging for operand A (tensor decode on the fallback route).
+    pub(crate) fa: Vec<f64>,
+    /// f64 staging for operand B.
+    pub(crate) fb: Vec<f64>,
+    /// f64 staging for a transposed logical A (FMA-family fallback).
+    pub(crate) ft_a: Vec<f64>,
+    /// f64 staging for a transposed logical B (FMA-family fallback).
+    pub(crate) ft_b: Vec<f64>,
+}
+
+impl Workspace {
+    /// An empty workspace (buffers grow on first use, then stick).
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Bytes of capacity currently held across all scratch buffers
+    /// (introspection for tests and allocation accounting).
+    pub fn capacity_bytes(&self) -> usize {
+        8 * (self.pa.capacity()
+            + self.pb.capacity()
+            + self.fa.capacity()
+            + self.fb.capacity()
+            + self.ft_a.capacity()
+            + self.ft_b.capacity())
+    }
+}
+
 // ---------------------------------------------------------------- casts
 
 /// Cast every element of `bits` (encodings in `from`, one per `u64`)
@@ -84,21 +136,29 @@ macro_rules! with_spec {
 /// formats (36 specialized pairs) and falls back to the descriptor path
 /// for custom formats; parallel over chunks either way.
 pub fn cast_slice(from: FpFormat, to: FpFormat, bits: &[u64], rm: RoundingMode) -> Vec<u64> {
-    let mut out = vec![0u64; bits.len()];
+    let mut out = Vec::new();
+    cast_slice_into(from, to, bits, rm, &mut out);
+    out
+}
+
+/// [`cast_slice`] into a caller-provided buffer (cleared and resized;
+/// capacity is reused).
+pub fn cast_slice_into(from: FpFormat, to: FpFormat, bits: &[u64], rm: RoundingMode, out: &mut Vec<u64>) {
+    out.clear();
+    out.resize(bits.len(), 0);
     with_spec!(from, S, {
         with_spec!(to, D, {
-            cast_into_m::<S, D>(bits, &mut out, rm);
-            return out;
+            cast_into_m::<S, D>(bits, out, rm);
+            return;
         })
     });
     // Fallback: custom formats go through the runtime descriptors.
-    par_chunks_mut(&mut out, CAST_CHUNK, |ci, chunk| {
+    par_chunks_mut(out, CAST_CHUNK, |ci, chunk| {
         let base = ci * CAST_CHUNK;
         for (off, o) in chunk.iter_mut().enumerate() {
             *o = cast(from, to, bits[base + off], rm);
         }
     });
-    out
 }
 
 /// Monomorphized slice cast `S → D` into a preallocated output.
@@ -108,6 +168,28 @@ pub fn cast_into_m<S: FormatSpec, D: FormatSpec>(bits: &[u64], out: &mut [u64], 
         let base = ci * CAST_CHUNK;
         for (off, o) in chunk.iter_mut().enumerate() {
             *o = cast_m::<S, D>(bits[base + off], rm);
+        }
+    });
+}
+
+/// Round every value onto `fmt`'s grid in place (quantize + decode,
+/// single rounding) — the plan layer's epilogue re-encode without
+/// materializing a tensor. Bit-identical to packing the slice into an
+/// [`crate::api::MfTensor`] and decoding it back, for every format
+/// (monomorphized for the six paper formats, descriptor fallback
+/// otherwise).
+pub fn regrid_in_place(fmt: FpFormat, vals: &mut [f64], rm: RoundingMode) {
+    with_spec!(fmt, S, {
+        par_chunks_mut(vals, CAST_CHUNK, |_, chunk| {
+            for v in chunk.iter_mut() {
+                *v = to_f64_m::<S>(from_f64_m::<S>(*v, rm));
+            }
+        });
+        return;
+    });
+    par_chunks_mut(vals, CAST_CHUNK, |_, chunk| {
+        for v in chunk.iter_mut() {
+            *v = to_f64(from_f64(*v, fmt, rm), fmt);
         }
     });
 }
@@ -161,12 +243,27 @@ pub fn exsdotp_accumulate_m<S: ExpandTo<D>, D: FormatSpec>(
 /// elements per word along rows (the layout SSR stream `ft0` delivers
 /// to the kernels). `cols` must divide by the lane count.
 pub fn pack_rows_m<F: FormatSpec>(data: &[f64], rows: usize, cols: usize, rm: RoundingMode) -> Vec<u64> {
+    let mut out = Vec::new();
+    pack_rows_into_m::<F>(data, rows, cols, rm, &mut out);
+    out
+}
+
+/// [`pack_rows_m`] into a caller-provided buffer (cleared and resized;
+/// capacity is reused).
+pub fn pack_rows_into_m<F: FormatSpec>(
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+    rm: RoundingMode,
+    out: &mut Vec<u64>,
+) {
     let l = F::LANES as usize;
     assert_eq!(data.len(), rows * cols);
     assert_eq!(cols % l, 0, "cols must divide by the SIMD width");
     let wpr = cols / l;
-    let mut out = vec![0u64; rows * wpr];
-    par_chunks_mut(&mut out, wpr.max(1), |r, row| {
+    out.clear();
+    out.resize(rows * wpr, 0);
+    par_chunks_mut(out, wpr.max(1), |r, row| {
         for (w, word) in row.iter_mut().enumerate() {
             let mut packed = 0u64;
             for lane_i in 0..l {
@@ -176,7 +273,6 @@ pub fn pack_rows_m<F: FormatSpec>(data: &[f64], rows: usize, cols: usize, rm: Ro
             *word = packed;
         }
     });
-    out
 }
 
 /// Quantize a row-major f64 matrix into packed words running down each
@@ -185,12 +281,27 @@ pub fn pack_rows_m<F: FormatSpec>(data: &[f64], rows: usize, cols: usize, rm: Ro
 /// must divide by the lane count. Output is column-major: column `j`
 /// occupies words `[j*rows/LANES, (j+1)*rows/LANES)`.
 pub fn pack_cols_m<F: FormatSpec>(data: &[f64], rows: usize, cols: usize, rm: RoundingMode) -> Vec<u64> {
+    let mut out = Vec::new();
+    pack_cols_into_m::<F>(data, rows, cols, rm, &mut out);
+    out
+}
+
+/// [`pack_cols_m`] into a caller-provided buffer (cleared and resized;
+/// capacity is reused).
+pub fn pack_cols_into_m<F: FormatSpec>(
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+    rm: RoundingMode,
+    out: &mut Vec<u64>,
+) {
     let l = F::LANES as usize;
     assert_eq!(data.len(), rows * cols);
     assert_eq!(rows % l, 0, "rows must divide by the SIMD width");
     let wpc = rows / l;
-    let mut out = vec![0u64; cols * wpc];
-    par_chunks_mut(&mut out, wpc.max(1), |j, col| {
+    out.clear();
+    out.resize(cols * wpc, 0);
+    par_chunks_mut(out, wpc.max(1), |j, col| {
         for (w, word) in col.iter_mut().enumerate() {
             let mut packed = 0u64;
             for lane_i in 0..l {
@@ -200,27 +311,43 @@ pub fn pack_cols_m<F: FormatSpec>(data: &[f64], rows: usize, cols: usize, rm: Ro
             *word = packed;
         }
     });
-    out
 }
 
-/// Runtime-dispatched [`pack_rows_m`]: monomorphized (parallel) packing
-/// for the six paper formats, `None` for custom formats so the caller
-/// can fall back to a descriptor-driven loop. Crate-internal — typed
-/// tensors ([`crate::api::MfTensor`]) are the public route, so the
-/// validated front door stays the only one.
-pub(crate) fn pack_rows(fmt: FpFormat, data: &[f64], rows: usize, cols: usize, rm: RoundingMode) -> Option<Vec<u64>> {
+/// Runtime-dispatched [`pack_rows_into_m`]: monomorphized (parallel)
+/// packing into `out` for the six paper formats; returns `false`
+/// (leaving `out` untouched) for custom formats so the caller can fall
+/// back to a descriptor-driven loop. Crate-internal — typed tensors
+/// ([`crate::api::MfTensor`]) are the public route, so the validated
+/// front door stays the only one.
+pub(crate) fn pack_rows_into(
+    fmt: FpFormat,
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+    rm: RoundingMode,
+    out: &mut Vec<u64>,
+) -> bool {
     with_spec!(fmt, S, {
-        return Some(pack_rows_m::<S>(data, rows, cols, rm));
+        pack_rows_into_m::<S>(data, rows, cols, rm, out);
+        return true;
     });
-    None
+    false
 }
 
-/// Runtime-dispatched [`pack_cols_m`] (see [`pack_rows`]).
-pub(crate) fn pack_cols(fmt: FpFormat, data: &[f64], rows: usize, cols: usize, rm: RoundingMode) -> Option<Vec<u64>> {
+/// Runtime-dispatched [`pack_cols_into_m`] (see [`pack_rows_into`]).
+pub(crate) fn pack_cols_into(
+    fmt: FpFormat,
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+    rm: RoundingMode,
+    out: &mut Vec<u64>,
+) -> bool {
     with_spec!(fmt, S, {
-        return Some(pack_cols_m::<S>(data, rows, cols, rm));
+        pack_cols_into_m::<S>(data, rows, cols, rm, out);
+        return true;
     });
-    None
+    false
 }
 
 // ----------------------------------------------------------------- GEMM
@@ -232,8 +359,7 @@ pub(crate) fn pack_cols(fmt: FpFormat, data: &[f64], rows: usize, cols: usize, r
 /// output rows. `a` is `m×k`, `b` is `k×n`, both row-major f64
 /// (quantized to the kernel's source format on packing). Crate-internal
 /// so all public traffic flows through the typed plan API
-/// ([`crate::api::GemmPlan`]); the deprecated `gemm` shim that used to
-/// front this is gone.
+/// ([`crate::api::GemmPlan`]).
 pub(crate) fn gemm_dispatch(
     kind: GemmKind,
     m: usize,
@@ -243,16 +369,35 @@ pub(crate) fn gemm_dispatch(
     b: &[f64],
     rm: RoundingMode,
 ) -> Vec<f64> {
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    gemm_dispatch_into(kind, m, n, k, a, b, rm, &mut ws, &mut out);
+    out
+}
+
+/// [`gemm_dispatch`] into a caller-provided workspace + output.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_dispatch_into(
+    kind: GemmKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+    ws: &mut Workspace,
+    out: &mut Vec<f64>,
+) {
     use crate::isa::instr::{OpWidth, ScalarFmt};
     assert_eq!(a.len(), m * k, "A must be m×k");
     assert_eq!(b.len(), k * n, "B must be k×n");
     match kind {
-        GemmKind::FmaF64 => gemm_fma64(m, n, k, a, b, rm),
-        GemmKind::FmaSimd(ScalarFmt::S) => gemm_fma_simd::<Fp32, Fp16, Fp32>(m, n, k, a, b, rm),
-        GemmKind::FmaSimd(ScalarFmt::H) => gemm_fma_simd::<Fp16, Fp8, Fp16>(m, n, k, a, b, rm),
+        GemmKind::FmaF64 => gemm_fma64_into(m, n, k, a, b, rm, ws, out),
+        GemmKind::FmaSimd(ScalarFmt::S) => gemm_fma_simd_into::<Fp32, Fp16, Fp32>(m, n, k, a, b, rm, ws, out),
+        GemmKind::FmaSimd(ScalarFmt::H) => gemm_fma_simd_into::<Fp16, Fp8, Fp16>(m, n, k, a, b, rm, ws, out),
         GemmKind::FmaSimd(f) => panic!("unsupported SIMD FMA format {f:?}"),
-        GemmKind::ExSdotp(OpWidth::HtoS) => gemm_m::<Fp16, Fp32>(m, n, k, a, b, rm),
-        GemmKind::ExSdotp(OpWidth::BtoH) => gemm_m::<Fp8, Fp16>(m, n, k, a, b, rm),
+        GemmKind::ExSdotp(OpWidth::HtoS) => gemm_into_m::<Fp16, Fp32>(m, n, k, a, b, rm, ws, out),
+        GemmKind::ExSdotp(OpWidth::BtoH) => gemm_into_m::<Fp8, Fp16>(m, n, k, a, b, rm, ws, out),
     }
 }
 
@@ -266,9 +411,28 @@ pub fn gemm_m<S: ExpandTo<D>, D: FormatSpec>(
     b: &[f64],
     rm: RoundingMode,
 ) -> Vec<f64> {
-    let ap = pack_rows_m::<S>(a, m, k, rm);
-    let bp = pack_cols_m::<S>(b, k, n, rm);
-    gemm_packed_m::<S, D>(m, n, k, &ap, &bp, rm)
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    gemm_into_m::<S, D>(m, n, k, a, b, rm, &mut ws, &mut out);
+    out
+}
+
+/// [`gemm_m`] packing into `ws` and writing C into `out` (all capacity
+/// reused).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into_m<S: ExpandTo<D>, D: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+    ws: &mut Workspace,
+    out: &mut Vec<f64>,
+) {
+    pack_rows_into_m::<S>(a, m, k, rm, &mut ws.pa);
+    pack_cols_into_m::<S>(b, k, n, rm, &mut ws.pb);
+    gemm_packed_into_m::<S, D>(m, n, k, &ws.pa, &ws.pb, rm, out);
 }
 
 /// [`gemm_m`] on **pre-packed** operands: `ap` holds A's rows packed
@@ -284,34 +448,52 @@ pub fn gemm_packed_m<S: ExpandTo<D>, D: FormatSpec>(
     bp: &[u64],
     rm: RoundingMode,
 ) -> Vec<f64> {
+    let mut out = Vec::new();
+    gemm_packed_into_m::<S, D>(m, n, k, ap, bp, rm, &mut out);
+    out
+}
+
+/// [`gemm_packed_m`] into a caller-provided output (cleared and
+/// resized; capacity is reused).
+pub fn gemm_packed_into_m<S: ExpandTo<D>, D: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    ap: &[u64],
+    bp: &[u64],
+    rm: RoundingMode,
+    out: &mut Vec<f64>,
+) {
     let l = S::LANES as usize;
     assert_eq!(k % l, 0, "K must divide by the SIMD width");
     let wpr = k / l;
     assert_eq!(ap.len(), m * wpr, "packed A must be m*k/lanes words");
     assert_eq!(bp.len(), n * wpr, "packed B must be n*k/lanes words");
-    let mut c = vec![0f64; m * n];
-    par_chunks_mut(&mut c, n.max(1), |i, row| {
+    out.clear();
+    out.resize(m * n, 0f64);
+    par_chunks_mut(out, n.max(1), |i, row| {
         let aw = &ap[i * wpr..(i + 1) * wpr];
-        for (j, out) in row.iter_mut().enumerate() {
+        for (j, o) in row.iter_mut().enumerate() {
             let bw = &bp[j * wpr..(j + 1) * wpr];
             let mut acc = 0u64; // all destination lanes +0.0
             for (&x, &y) in aw.iter().zip(bw) {
                 acc = simd_exsdotp_m::<S, D>(x, y, acc, rm);
             }
-            *out = to_f64_m::<D>(vsum_tree_m::<S, D>(acc, rm));
+            *o = to_f64_m::<D>(vsum_tree_m::<S, D>(acc, rm));
         }
     });
-    c
 }
 
-/// Runtime-dispatched [`gemm_packed_m`] for the expanding (`ExSdotp`)
-/// kernel families: `Some(C)` when `(src, dst)` is one of Table I's six
-/// monomorphized pairs, `None` otherwise (caller falls back to the
-/// f64 path). Operands are pre-packed words in the [`pack_rows_m`] /
-/// [`pack_cols_m`] layouts. Crate-internal: the validated
-/// [`crate::api::GemmPlan`] is the public route (its builder guarantees
-/// the shape/divisibility invariants these asserts assume).
-pub(crate) fn gemm_packed(
+/// Runtime-dispatched [`gemm_packed_into_m`] for the expanding
+/// (`ExSdotp`) kernel families: `true` (C written into `out`) when
+/// `(src, dst)` is one of Table I's six monomorphized pairs, `false`
+/// otherwise (caller falls back to the f64 path). Operands are
+/// pre-packed words in the [`pack_rows_m`] / [`pack_cols_m`] layouts.
+/// Crate-internal: the validated [`crate::api::GemmPlan`] is the public
+/// route (its builder guarantees the shape/divisibility invariants
+/// these asserts assume).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_packed_into(
     src: FpFormat,
     dst: FpFormat,
     m: usize,
@@ -320,14 +502,18 @@ pub(crate) fn gemm_packed(
     ap: &[u64],
     bp: &[u64],
     rm: RoundingMode,
-) -> Option<Vec<f64>> {
+    out: &mut Vec<f64>,
+) -> bool {
     crate::with_expanding_pair!(
         src,
         dst,
         S,
         D,
-        { Some(gemm_packed_m::<S, D>(m, n, k, ap, bp, rm)) },
-        { None }
+        {
+            gemm_packed_into_m::<S, D>(m, n, k, ap, bp, rm, out);
+            true
+        },
+        { false }
     )
 }
 
@@ -354,9 +540,27 @@ pub fn gemm_tn_m<S: ExpandTo<D>, D: FormatSpec>(
     b: &[f64],
     rm: RoundingMode,
 ) -> Vec<f64> {
-    let ap = pack_cols_m::<S>(a, k, m, rm); // columns of A = rows of Aᵀ
-    let bp = pack_cols_m::<S>(b, k, n, rm);
-    gemm_packed_m::<S, D>(m, n, k, &ap, &bp, rm)
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    gemm_tn_into_m::<S, D>(m, n, k, a, b, rm, &mut ws, &mut out);
+    out
+}
+
+/// [`gemm_tn_m`] through a caller-provided workspace + output.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_into_m<S: ExpandTo<D>, D: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+    ws: &mut Workspace,
+    out: &mut Vec<f64>,
+) {
+    pack_cols_into_m::<S>(a, k, m, rm, &mut ws.pa); // columns of A = rows of Aᵀ
+    pack_cols_into_m::<S>(b, k, n, rm, &mut ws.pb);
+    gemm_packed_into_m::<S, D>(m, n, k, &ws.pa, &ws.pb, rm, out);
 }
 
 /// `C = A·Bᵀ` on the batch engine. `a` is `m×k` row-major f64, `b` is
@@ -370,9 +574,27 @@ pub fn gemm_nt_m<S: ExpandTo<D>, D: FormatSpec>(
     b: &[f64],
     rm: RoundingMode,
 ) -> Vec<f64> {
-    let ap = pack_rows_m::<S>(a, m, k, rm);
-    let bp = pack_rows_m::<S>(b, n, k, rm); // rows of B = columns of Bᵀ
-    gemm_packed_m::<S, D>(m, n, k, &ap, &bp, rm)
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    gemm_nt_into_m::<S, D>(m, n, k, a, b, rm, &mut ws, &mut out);
+    out
+}
+
+/// [`gemm_nt_m`] through a caller-provided workspace + output.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_into_m<S: ExpandTo<D>, D: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+    ws: &mut Workspace,
+    out: &mut Vec<f64>,
+) {
+    pack_rows_into_m::<S>(a, m, k, rm, &mut ws.pa);
+    pack_rows_into_m::<S>(b, n, k, rm, &mut ws.pb); // rows of B = columns of Bᵀ
+    gemm_packed_into_m::<S, D>(m, n, k, &ws.pa, &ws.pb, rm, out);
 }
 
 /// Runtime-dispatched expanding GEMM over all three shapes (`A·B`,
@@ -380,7 +602,11 @@ pub fn gemm_nt_m<S: ExpandTo<D>, D: FormatSpec>(
 /// `None` otherwise (including the unsupported `Aᵀ·Bᵀ`). Operand
 /// shapes follow [`gemm_m`] / [`gemm_tn_m`] / [`gemm_nt_m`].
 /// Crate-internal: [`crate::api::GemmPlan`]'s `transpose_a`/`transpose_b`
-/// builders are the public route.
+/// builders are the public route; production code runs the `_into`
+/// twin below, and this allocating form remains as the differential
+/// tests' reference entry.
+#[cfg_attr(not(test), allow(dead_code))]
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_expanding(
     src: FpFormat,
     dst: FpFormat,
@@ -393,69 +619,121 @@ pub(crate) fn gemm_expanding(
     b: &[f64],
     rm: RoundingMode,
 ) -> Option<Vec<f64>> {
-    crate::with_expanding_pair!(src, dst, S, D, {
-        match (trans_a, trans_b) {
-            (false, false) => Some(gemm_m::<S, D>(m, n, k, a, b, rm)),
-            (true, false) => Some(gemm_tn_m::<S, D>(m, n, k, a, b, rm)),
-            (false, true) => Some(gemm_nt_m::<S, D>(m, n, k, a, b, rm)),
-            (true, true) => None,
-        }
-    }, {
-        None
-    })
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    gemm_expanding_into(src, dst, trans_a, trans_b, m, n, k, a, b, rm, &mut ws, &mut out).then_some(out)
 }
 
-/// Packed-SIMD FMA GEMM (`FmaSimd` kernels): lanewise FMA partial sums
-/// in `F`, reduced with the `(RS → RD)` `vsum` tree the corresponding
-/// generated kernel uses in its epilogue.
-fn gemm_fma_simd<F: FormatSpec, RS: ExpandTo<RD>, RD: FormatSpec>(
+/// [`gemm_expanding`] through a caller-provided workspace + output:
+/// `true` when the pair/shape combination ran (C is in `out`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_expanding_into(
+    src: FpFormat,
+    dst: FpFormat,
+    trans_a: bool,
+    trans_b: bool,
     m: usize,
     n: usize,
     k: usize,
     a: &[f64],
     b: &[f64],
     rm: RoundingMode,
-) -> Vec<f64> {
+    ws: &mut Workspace,
+    out: &mut Vec<f64>,
+) -> bool {
+    crate::with_expanding_pair!(src, dst, S, D, {
+        match (trans_a, trans_b) {
+            (false, false) => {
+                gemm_into_m::<S, D>(m, n, k, a, b, rm, ws, out);
+                true
+            }
+            (true, false) => {
+                gemm_tn_into_m::<S, D>(m, n, k, a, b, rm, ws, out);
+                true
+            }
+            (false, true) => {
+                gemm_nt_into_m::<S, D>(m, n, k, a, b, rm, ws, out);
+                true
+            }
+            (true, true) => false,
+        }
+    }, {
+        false
+    })
+}
+
+/// Packed-SIMD FMA GEMM (`FmaSimd` kernels): lanewise FMA partial sums
+/// in `F`, reduced with the `(RS → RD)` `vsum` tree the corresponding
+/// generated kernel uses in its epilogue. Operands pack into `ws`, C
+/// lands in `out`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_fma_simd_into<F: FormatSpec, RS: ExpandTo<RD>, RD: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+    ws: &mut Workspace,
+    out: &mut Vec<f64>,
+) {
     let l = F::LANES as usize;
     assert_eq!(k % l, 0, "K must divide by the SIMD width");
     let wpr = k / l;
-    let ap = pack_rows_m::<F>(a, m, k, rm);
-    let bp = pack_cols_m::<F>(b, k, n, rm);
-    let mut c = vec![0f64; m * n];
-    par_chunks_mut(&mut c, n.max(1), |i, row| {
+    pack_rows_into_m::<F>(a, m, k, rm, &mut ws.pa);
+    pack_cols_into_m::<F>(b, k, n, rm, &mut ws.pb);
+    let (ap, bp) = (&ws.pa, &ws.pb);
+    out.clear();
+    out.resize(m * n, 0f64);
+    par_chunks_mut(out, n.max(1), |i, row| {
         let aw = &ap[i * wpr..(i + 1) * wpr];
-        for (j, out) in row.iter_mut().enumerate() {
+        for (j, o) in row.iter_mut().enumerate() {
             let bw = &bp[j * wpr..(j + 1) * wpr];
             let mut acc = 0u64;
             for (&x, &y) in aw.iter().zip(bw) {
                 acc = simd_fma_m::<F>(x, y, acc, rm);
             }
-            *out = to_f64_m::<RD>(vsum_tree_m::<RS, RD>(acc, rm));
+            *o = to_f64_m::<RD>(vsum_tree_m::<RS, RD>(acc, rm));
         }
     });
-    c
 }
 
-/// Scalar FP64 FMA GEMM (the classic Snitch kernel's numerics).
-fn gemm_fma64(m: usize, n: usize, k: usize, a: &[f64], b: &[f64], rm: RoundingMode) -> Vec<f64> {
-    // Pack B transposed so the inner loop walks contiguous memory.
-    let mut bt = vec![0u64; n * k];
-    par_chunks_mut(&mut bt, k.max(1), |j, col| {
+/// Scalar FP64 FMA GEMM (the classic Snitch kernel's numerics). The
+/// transposed-B bit image and C both live in the workspace/output —
+/// the last per-call allocations on this path are gone.
+#[allow(clippy::too_many_arguments)]
+fn gemm_fma64_into(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+    ws: &mut Workspace,
+    out: &mut Vec<f64>,
+) {
+    // Pack B transposed (as raw f64 bits) so the inner loop walks
+    // contiguous memory; `ws.pa` holds the bit image.
+    let bt = &mut ws.pa;
+    bt.clear();
+    bt.resize(n * k, 0);
+    par_chunks_mut(bt, k.max(1), |j, col| {
         for (kk, w) in col.iter_mut().enumerate() {
             *w = b[kk * n + j].to_bits();
         }
     });
-    let mut c = vec![0f64; m * n];
-    par_chunks_mut(&mut c, n.max(1), |i, row| {
-        for (j, out) in row.iter_mut().enumerate() {
+    let bt = &ws.pa;
+    out.clear();
+    out.resize(m * n, 0f64);
+    par_chunks_mut(out, n.max(1), |i, row| {
+        for (j, o) in row.iter_mut().enumerate() {
             let mut acc = 0u64; // +0.0
             for kk in 0..k {
                 acc = fma_m::<Fp64>(a[i * k + kk].to_bits(), bt[j * k + kk], acc, rm);
             }
-            *out = f64::from_bits(acc);
+            *o = f64::from_bits(acc);
         }
     });
-    c
 }
 
 /// Lanewise FMA over packed words (monomorphized twin of the PE's
@@ -473,4 +751,3 @@ pub fn simd_fma_m<F: FormatSpec>(rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) 
     }
     out
 }
-

@@ -275,3 +275,136 @@ fn transposed_gemms_are_bit_identical_to_pretransposed_plain_gemms() {
     assert!(gemm_expanding(crate::formats::FP8, crate::formats::FP16, true, true, m, n, k, &a, &b, RoundingMode::Rne).is_none());
     assert!(gemm_expanding(crate::formats::FP32, crate::formats::FP32, true, false, m, n, k, &a_raw, &b, RoundingMode::Rne).is_none());
 }
+
+// ------------------------------------------- executor & workspace reuse
+
+#[test]
+fn dispatch_backends_bit_identical_all_expanding_pairs() {
+    // The pooled executor, the legacy scoped-thread backend and the
+    // serial path must produce bit-identical GEMMs for every Table I
+    // pair (the chunk→index mapping is the determinism contract).
+    use crate::util::parallel::{with_dispatch, with_worker_count, Dispatch};
+    let (m, n, k) = (16, 24, 32);
+    let (a, b) = random_mats(m, n, k, 4242);
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    for (src, dst) in expanding_pairs() {
+        let run = |mode: Dispatch| {
+            with_dispatch(mode, || {
+                gemm_expanding(src, dst, false, false, m, n, k, &a, &b, RoundingMode::Rne).expect("pair")
+            })
+        };
+        let pooled = run(Dispatch::Pool);
+        let scoped = run(Dispatch::Scoped);
+        let serial = run(Dispatch::Serial);
+        assert_eq!(bits(&pooled), bits(&scoped), "{}→{} pool vs scoped", src.name(), dst.name());
+        assert_eq!(bits(&pooled), bits(&serial), "{}→{} pool vs serial", src.name(), dst.name());
+        // And at odd worker budgets over the pool.
+        for workers in [3usize, 7] {
+            let odd = with_worker_count(workers, || run(Dispatch::Pool));
+            assert_eq!(bits(&odd), bits(&pooled), "{}→{} pool @{workers} workers", src.name(), dst.name());
+        }
+    }
+}
+
+#[test]
+fn dispatch_backends_bit_identical_all_kinds() {
+    // Same contract for the FMA kernel families (fp64 / SIMD FMA).
+    use crate::util::parallel::{with_dispatch, Dispatch};
+    let (m, n, k) = (8, 8, 16);
+    let (a, b) = random_mats(m, n, k, 99);
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    for kind in all_kinds() {
+        let run = |mode: Dispatch| with_dispatch(mode, || gemm_dispatch(kind, m, n, k, &a, &b, RoundingMode::Rne));
+        let pooled = run(Dispatch::Pool);
+        assert_eq!(bits(&pooled), bits(&run(Dispatch::Scoped)), "{} pool vs scoped", kind.label());
+        assert_eq!(bits(&pooled), bits(&run(Dispatch::Serial)), "{} pool vs serial", kind.label());
+    }
+}
+
+#[test]
+fn workspace_reuse_is_bit_invisible() {
+    // One workspace threaded through different shapes, formats and
+    // transposes in sequence: every result must equal a fresh-buffer
+    // run (a workspace is capacity, not state).
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    let cases = [(8usize, 8usize, 16usize, 1u64), (16, 24, 32, 2), (8, 12, 16, 3), (16, 16, 16, 4)];
+    for (i, &(m, n, k, seed)) in cases.iter().enumerate() {
+        let (a, b) = random_mats(m, n, k, seed);
+        for (src, dst) in expanding_pairs() {
+            assert!(gemm_expanding_into(src, dst, false, false, m, n, k, &a, &b, RoundingMode::Rne, &mut ws, &mut out));
+            let fresh = gemm_expanding(src, dst, false, false, m, n, k, &a, &b, RoundingMode::Rne).expect("pair");
+            assert_eq!(bits(&out), bits(&fresh), "case {i} {}→{} reused workspace diverged", src.name(), dst.name());
+        }
+        for kind in all_kinds() {
+            gemm_dispatch_into(kind, m, n, k, &a, &b, RoundingMode::Rne, &mut ws, &mut out);
+            let fresh = gemm_dispatch(kind, m, n, k, &a, &b, RoundingMode::Rne);
+            assert_eq!(bits(&out), bits(&fresh), "case {i} {} reused workspace diverged", kind.label());
+        }
+    }
+    assert!(ws.capacity_bytes() > 0, "workspace should retain capacity after use");
+}
+
+#[test]
+fn into_variants_match_allocating_twins() {
+    use crate::formats::{FP16, FP8};
+    let (m, n, k) = (8, 8, 16);
+    let (a, b) = random_mats(m, n, k, 77);
+    let rm = RoundingMode::Rne;
+    // Packing into a reused (dirty) buffer.
+    let mut buf = vec![0xDEAD_BEEFu64; 3]; // wrong size + garbage on purpose
+    pack_rows_into_m::<Fp8>(&a, m, k, rm, &mut buf);
+    assert_eq!(buf, pack_rows_m::<Fp8>(&a, m, k, rm));
+    pack_cols_into_m::<Fp8>(&b, k, n, rm, &mut buf);
+    assert_eq!(buf, pack_cols_m::<Fp8>(&b, k, n, rm));
+    // Packed GEMM into a reused buffer.
+    let ap = pack_rows_m::<Fp8>(&a, m, k, rm);
+    let bp = pack_cols_m::<Fp8>(&b, k, n, rm);
+    let mut c = vec![f64::NAN; 1]; // garbage on purpose
+    gemm_packed_into_m::<Fp8, Fp16>(m, n, k, &ap, &bp, rm, &mut c);
+    let fresh = gemm_packed_m::<Fp8, Fp16>(m, n, k, &ap, &bp, rm);
+    assert_eq!(
+        c.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        fresh.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+    assert!(gemm_packed_into(FP8, FP16, m, n, k, &ap, &bp, rm, &mut c), "runtime dispatch must hit");
+    // Cast into a reused buffer (monomorphized pair + custom fallback).
+    let words: Vec<u64> = (0..300).collect();
+    let mut cast_buf = vec![7u64; 9000];
+    cast_slice_into(FP8, FP16, &words, rm, &mut cast_buf);
+    assert_eq!(cast_buf, cast_slice(FP8, FP16, &words, rm));
+    let e3m4 = FpFormat::new(3, 4);
+    cast_slice_into(e3m4, FP16, &words, rm, &mut cast_buf);
+    assert_eq!(cast_buf, cast_slice(e3m4, FP16, &words, rm));
+}
+
+#[test]
+fn regrid_in_place_matches_quantize_decode() {
+    use crate::formats::{FP16, FP8, FP8ALT};
+    let mut rng = Rng::new(0x9E61D);
+    let vals: Vec<f64> = (0..600)
+        .map(|i| match i % 7 {
+            0 => f64::INFINITY,
+            1 => -0.0,
+            2 => 1e-9,
+            3 => 70000.0,
+            _ => rng.gaussian() * 4.0,
+        })
+        .collect();
+    for fmt in [FP8, FP8ALT, FP16, FpFormat::new(3, 4)] {
+        for rm in RMS {
+            let mut got = vals.clone();
+            regrid_in_place(fmt, &mut got, rm);
+            for (i, &v) in vals.iter().enumerate() {
+                let want = to_f64(from_f64(v, fmt, rm), fmt);
+                assert!(
+                    got[i].to_bits() == want.to_bits() || (got[i].is_nan() && want.is_nan()),
+                    "{} rm={rm:?} v={v}: {} vs {want}",
+                    fmt.name(),
+                    got[i]
+                );
+            }
+        }
+    }
+}

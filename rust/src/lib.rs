@@ -115,8 +115,8 @@ pub mod prelude {
     pub use crate::accuracy::AccuracyPoint;
     pub use crate::api::{
         AccumulatePlan, AccumulatePlanBuilder, GemmPlan, GemmPlanBuilder, Layout, MfTensor,
-        MfTensorView, RunReport, ServePlan, ServePlanBuilder, Session, SessionBuilder, TrainPlan,
-        TrainPlanBuilder,
+        MfTensorView, PlanInstance, RunInfo, RunReport, ServePlan, ServePlanBuilder, Session,
+        SessionBuilder, TrainPlan, TrainPlanBuilder,
     };
     pub use crate::formats::{FpFormat, FP16, FP16ALT, FP32, FP64, FP8, FP8ALT};
     pub use crate::kernels::gemm::{ExecMode, GemmKind};

@@ -171,10 +171,13 @@ fn main() -> Result<()> {
                     print!("{}", report::train_curve_text(&tr.history));
                     println!(
                         "final loss {final_loss:.4}   accuracy {:.1}%   ({} GemmPlan runs, \
-                         {:.0}% packed fast path, {} skipped steps, loss scale {})",
+                         {:.0}% packed fast path, {} plan instances compiled / {} reused, \
+                         {} skipped steps, loss scale {})",
                         acc * 100.0,
                         tr.gemm_calls(),
                         100.0 * tr.packed_runs() as f64 / tr.gemm_calls().max(1) as f64,
+                        tr.plan_builds(),
+                        tr.plan_reuses(),
                         tr.skipped_steps(),
                         tr.loss_scale()
                     );

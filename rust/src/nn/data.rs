@@ -235,26 +235,43 @@ impl Dataset {
 
     /// Random batch: `size×IN_DIM` features + raw labels.
     pub fn batch(&self, size: usize, rng: &mut Rng) -> (Vec<f64>, Vec<u8>) {
-        let mut xs = Vec::with_capacity(size * IN_DIM);
-        let mut labels = Vec::with_capacity(size);
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        self.batch_into(size, rng, &mut xs, &mut labels);
+        (xs, labels)
+    }
+
+    /// [`Dataset::batch`] into caller-provided buffers (cleared;
+    /// capacity reused across steps — the trainer's per-step arena).
+    /// Same RNG consumption, so sequences are bit-identical to the
+    /// allocating form.
+    pub fn batch_into(&self, size: usize, rng: &mut Rng, xs: &mut Vec<f64>, labels: &mut Vec<u8>) {
+        xs.clear();
+        labels.clear();
         for _ in 0..size {
             let i = rng.below(self.len() as u64) as usize;
             xs.extend_from_slice(&self.x[i * IN_DIM..(i + 1) * IN_DIM]);
             labels.push(self.y[i]);
         }
-        (xs, labels)
     }
 
     /// Sequential batch starting at `start` (evaluation sweeps).
     pub fn ordered_batch(&self, start: usize, size: usize) -> (Vec<f64>, Vec<u8>) {
-        let mut xs = Vec::with_capacity(size * IN_DIM);
-        let mut labels = Vec::with_capacity(size);
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        self.ordered_batch_into(start, size, &mut xs, &mut labels);
+        (xs, labels)
+    }
+
+    /// [`Dataset::ordered_batch`] into caller-provided buffers.
+    pub fn ordered_batch_into(&self, start: usize, size: usize, xs: &mut Vec<f64>, labels: &mut Vec<u8>) {
+        xs.clear();
+        labels.clear();
         for b in 0..size {
             let i = (start + b) % self.len();
             xs.extend_from_slice(&self.x[i * IN_DIM..(i + 1) * IN_DIM]);
             labels.push(self.y[i]);
         }
-        (xs, labels)
     }
 
     /// Sanity-check invariants (trainer-build time).

@@ -1,44 +1,136 @@
 //! The subsystem's single matmul door: every forward and backward GEMM
-//! is built as a validated [`crate::api::GemmPlan`] and executed here —
+//! is built as a validated [`crate::api::GemmPlan`], **compiled once
+//! into a reusable [`crate::api::PlanInstance`]**, and executed here —
 //! there is no other multiply path in `nn`, which is what makes "no f64
 //! shortcut on the compute path" an invariant rather than a convention.
-//! The context counts plan executions and packed-fast-path hits so
-//! tests (and the trainer's summary) can *assert* the routing instead
-//! of trusting it.
+//!
+//! The context owns a small instance cache keyed by GEMM shape: a
+//! training step re-runs the same nine shapes every iteration, a serve
+//! shard the same per-layer shapes every dispatch, so the steady state
+//! is pure cache hits — no plan re-validation, no workspace
+//! allocation. The context counts plan executions, packed-fast-path
+//! hits, and instance builds vs reuses so tests (and the trainer's
+//! summary) can *assert* the routing and the reuse instead of trusting
+//! them.
 
-use crate::api::{MfTensor, Session};
+use crate::api::{MfTensor, PlanInstance, Session};
 use crate::formats::FpFormat;
 use crate::util::error::Result;
 
-/// GEMM router + instrumentation for one trainer (or one test).
-pub struct GemmCtx<'s> {
-    session: &'s Session,
+/// Cache key: one GEMM shape as the ctx sees it (the accumulation
+/// format is fixed per context).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct PlanKey {
+    src: FpFormat,
+    m: usize,
+    n: usize,
+    k: usize,
+    ta: bool,
+    tb: bool,
+}
+
+/// GEMM router + instrumentation for one trainer or one serve shard.
+/// Owns a copy of the session policy (`Session` is `Copy`), so a
+/// context persists across training steps and serve dispatches instead
+/// of being rebuilt per call.
+#[derive(Debug)]
+pub struct GemmCtx {
+    session: Session,
     /// Accumulation / output format for every plan built here.
     pub acc: FpFormat,
     /// Plans executed.
     pub calls: u64,
     /// Plans whose operands fed the batch engine packed (zero
-    /// decode/re-pack — `RunReport::packed_input`).
+    /// decode/re-pack — `RunInfo::packed_input`).
     pub packed: u64,
+    /// Instances compiled (cache misses). A steady-state trainer stays
+    /// flat here after the first step.
+    pub plan_builds: u64,
+    /// Executions that reused a compiled instance (cache hits).
+    pub plan_reuses: u64,
+    /// Compiled instances, keyed by shape. Small (a trainer holds ~9,
+    /// a shard a handful per tenant) — scanned linearly.
+    plans: Vec<(PlanKey, PlanInstance)>,
 }
 
-impl<'s> GemmCtx<'s> {
-    /// A context accumulating into `acc`.
-    pub fn new(session: &'s Session, acc: FpFormat) -> Self {
-        GemmCtx { session, acc, calls: 0, packed: 0 }
+impl GemmCtx {
+    /// A context accumulating into `acc` (copies the session policy).
+    pub fn new(session: &Session, acc: FpFormat) -> Self {
+        GemmCtx {
+            session: *session,
+            acc,
+            calls: 0,
+            packed: 0,
+            plan_builds: 0,
+            plan_reuses: 0,
+            plans: Vec::new(),
+        }
     }
 
-    /// The session plans are built from.
-    pub fn session(&self) -> &'s Session {
+    /// The session plans are built from (an owned copy — cheap,
+    /// `Session` is `Copy`).
+    pub fn session(&self) -> Session {
         self.session
     }
 
-    /// `C = op(A)·op(B)` through a validated [`crate::api::GemmPlan`]: `op` is a
-    /// transpose when the corresponding flag is set, and `(m, n, k)` are
-    /// the *logical* product dimensions (output `m×n`, inner `k`).
-    /// Operands must already be [`MfTensor`]s in `src` — the caller
-    /// chooses layouts; matching the kernel streams keeps the run on
-    /// the packed fast path. Returns C decoded to row-major f64.
+    /// Find or compile the instance for a shape; the flag reports a
+    /// cache hit (callers count it as a reuse only once the run
+    /// actually executes).
+    fn instance_for(
+        &mut self,
+        src: FpFormat,
+        m: usize,
+        n: usize,
+        k: usize,
+        ta: bool,
+        tb: bool,
+    ) -> Result<(usize, bool)> {
+        let key = PlanKey { src, m, n, k, ta, tb };
+        if let Some(i) = self.plans.iter().position(|(pk, _)| *pk == key) {
+            return Ok((i, true));
+        }
+        let mut builder = self.session.gemm().src(src).acc(self.acc);
+        if ta {
+            builder = builder.transpose_a();
+        }
+        if tb {
+            builder = builder.transpose_b();
+        }
+        let inst = builder.dims(m, n, k)?.instance();
+        self.plans.push((key, inst));
+        self.plan_builds += 1;
+        Ok((self.plans.len() - 1, false))
+    }
+
+    /// Pre-compile the (untransposed) instance for a shape without
+    /// running it — serve shards warm their per-layer plans at
+    /// assembly so the first dispatch is already steady-state.
+    pub fn warm(&mut self, src: FpFormat, m: usize, n: usize, k: usize) -> Result<()> {
+        self.instance_for(src, m, n, k, false, false).map(|_| ())
+    }
+
+    /// Compiled instances currently cached.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Drain the per-dispatch routing counters (serve shards aggregate
+    /// them per tenant per tick); the build/reuse counters persist.
+    pub fn take_counters(&mut self) -> (u64, u64) {
+        let c = (self.calls, self.packed);
+        self.calls = 0;
+        self.packed = 0;
+        c
+    }
+
+    /// `C = op(A)·op(B)` through the cached [`PlanInstance`] for the
+    /// shape: `op` is a transpose when the corresponding flag is set,
+    /// and `(m, n, k)` are the *logical* product dimensions (output
+    /// `m×n`, inner `k`). Operands must already be [`MfTensor`]s in
+    /// `src` — the caller chooses layouts; matching the kernel streams
+    /// keeps the run on the packed fast path. Returns C decoded to
+    /// row-major f64.
+    #[allow(clippy::too_many_arguments)]
     pub fn matmul(
         &mut self,
         src: FpFormat,
@@ -50,19 +142,40 @@ impl<'s> GemmCtx<'s> {
         ta: bool,
         tb: bool,
     ) -> Result<Vec<f64>> {
-        let mut builder = self.session.gemm().src(src).acc(self.acc);
-        if ta {
-            builder = builder.transpose_a();
-        }
-        if tb {
-            builder = builder.transpose_b();
-        }
-        let plan = builder.dims(m, n, k)?;
-        let run = plan.run(a, b)?;
+        let mut out = Vec::new();
+        self.matmul_into(src, a, b, m, n, k, ta, tb, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`GemmCtx::matmul`] writing C into a caller-provided buffer
+    /// (cleared and resized; capacity reused) — the zero-alloc hot
+    /// path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn matmul_into(
+        &mut self,
+        src: FpFormat,
+        a: &MfTensor,
+        b: &MfTensor,
+        m: usize,
+        n: usize,
+        k: usize,
+        ta: bool,
+        tb: bool,
+        out: &mut Vec<f64>,
+    ) -> Result<()> {
+        let (i, cached) = self.instance_for(src, m, n, k, ta, tb)?;
+        let info = self.plans[i].1.run_into(a, b, out)?;
+        // Reuses count only after a successful execution; builds count
+        // at compile time (a warmed or error-stranded instance is still
+        // a compile). So `plan_reuses <= calls` always, and on the
+        // error-free hot loop `plan_reuses == calls - plan_builds`.
         self.calls += 1;
-        if run.packed_input {
+        if cached {
+            self.plan_reuses += 1;
+        }
+        if info.packed_input {
             self.packed += 1;
         }
-        Ok(run.c_f64())
+        Ok(())
     }
 }

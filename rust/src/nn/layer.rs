@@ -2,13 +2,23 @@
 //!
 //! Every multiply in [`Linear`] — the forward product `X·W`, the weight
 //! gradient `Xᵀ·G`, the input gradient `G·Wᵀ` — is a validated
-//! [`crate::api::GemmPlan`] executed through [`GemmCtx`], operands
-//! quantized to the policy's minifloat formats and accumulated in the
-//! wider ExSdotp destination format. Elementwise work (bias add,
+//! [`crate::api::GemmPlan`] compiled to a reusable
+//! [`crate::api::PlanInstance`] and executed through [`GemmCtx`],
+//! operands quantized to the policy's minifloat formats and accumulated
+//! in the wider ExSdotp destination format. Elementwise work (bias add,
 //! activation functions, softmax) runs in host precision but is
 //! re-gridded to the accumulation format where the hardware's epilogue
 //! would round, so inter-layer activations always sit on the `acc`
 //! grid.
+//!
+//! Buffer discipline: with a tape present, the hot-path buffers —
+//! quantized activations and weights, the masters' f64 staging, layer
+//! outputs, gradient host buffers — take recycled storage from the
+//! [`Tape`] arena and hand it back once consumed, so the dominant
+//! per-step allocations disappear in the steady state (the remaining
+//! ones are inside `MfTensor::cast`/`with_layout` on the backward
+//! re-cast path). Recycling is capacity-only and cannot change a
+//! result bit.
 //!
 //! Gradients flowing through `backward` are **loss-scaled** (see
 //! [`crate::nn::policy::LossScaler`]); layers store them scaled and the
@@ -35,7 +45,8 @@ use crate::util::rng::Rng;
 /// training [`Linear::forward`] (which quantizes its FP32 masters every
 /// step) and the frozen serving path
 /// ([`crate::serve::InferenceModel`], which packed its weights once)
-/// both call it, so the two can never silently diverge.
+/// both call it (via [`linear_forward_into`]), so the two can never
+/// silently diverge.
 pub fn linear_forward_with(
     ctx: &mut GemmCtx,
     policy: &PrecisionPolicy,
@@ -46,6 +57,29 @@ pub fn linear_forward_with(
     in_dim: usize,
     out_dim: usize,
 ) -> Result<(Vec<f64>, MfTensor)> {
+    let mut y = Vec::new();
+    let xt = linear_forward_into(ctx, policy, wt, bias, x, batch, in_dim, out_dim, Vec::new(), &mut y)?;
+    Ok((y, xt))
+}
+
+/// [`linear_forward_with`] on recycled storage: the output lands in `y`
+/// (cleared and resized; capacity reused) and the quantized input packs
+/// into `xt_buf`'s allocation (grab it from the tape arena; recover it
+/// with [`MfTensor::into_words`] once consumed). Bit-identical to the
+/// allocating wrapper.
+#[allow(clippy::too_many_arguments)]
+pub fn linear_forward_into(
+    ctx: &mut GemmCtx,
+    policy: &PrecisionPolicy,
+    wt: &MfTensor,
+    bias: &[f32],
+    x: &[f64],
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+    xt_buf: Vec<u64>,
+    y: &mut Vec<f64>,
+) -> Result<MfTensor> {
     ensure!(
         x.len() == batch * in_dim,
         "linear forward: input must be {batch}x{in_dim} = {} values, got {}",
@@ -56,17 +90,18 @@ pub fn linear_forward_with(
     let session = ctx.session();
     // A row-major, B column-major: the layouts the kernel streams,
     // so the plan's zero-repack route runs.
-    let xt = session.tensor(x, batch, in_dim, policy.fwd)?;
-    let mut y = ctx.matmul(policy.fwd, &xt, wt, batch, out_dim, in_dim, false, false)?;
+    let xt = session.tensor_reusing(x, batch, in_dim, policy.fwd, Layout::RowMajor, xt_buf)?;
+    ctx.matmul_into(policy.fwd, &xt, wt, batch, out_dim, in_dim, false, false, y)?;
     for bi in 0..batch {
         for j in 0..out_dim {
             y[bi * out_dim + j] += bias[j] as f64;
         }
     }
     // Epilogue rounding: the bias add happens in the accumulation
-    // precision on hardware, so re-grid the result there.
-    let y = session.tensor(&y, batch, out_dim, policy.acc)?.to_f64();
-    Ok((y, xt))
+    // precision on hardware, so re-grid the result there (in place —
+    // bit-identical to the old tensor round-trip).
+    session.regrid_in_place(policy.acc, y);
+    Ok(xt)
 }
 
 /// A fully-connected layer: `Y = X·W + b` with FP32 master parameters
@@ -102,13 +137,24 @@ impl Linear {
     }
 
     fn w_f64(&self) -> Vec<f64> {
-        self.w.iter().map(|&v| v as f64).collect()
+        let mut out = Vec::new();
+        self.w_f64_into(&mut out);
+        out
+    }
+
+    /// Stage the FP32 masters as f64 into a recycled buffer.
+    fn w_f64_into(&self, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.w.iter().map(|&v| v as f64));
     }
 
     /// Forward: quantize `x` (`batch×in_dim` row-major) and the master
     /// weights to the policy's forward format, run the plan, add the
     /// bias, round the result onto the accumulation grid. Saves the
-    /// quantized input tensor when a tape is supplied.
+    /// quantized input tensor when a tape is supplied — and with a tape
+    /// present, *every* per-call buffer (the masters' f64 staging, the
+    /// packed weight words, the quantized input, the output) cycles
+    /// through the tape arena instead of the allocator.
     pub fn forward(
         &self,
         ctx: &mut GemmCtx,
@@ -118,14 +164,36 @@ impl Linear {
         tape: Option<&mut Tape>,
     ) -> Result<Vec<f64>> {
         let session = ctx.session();
-        let w64 = self.w_f64();
-        let wt = session.tensor_with_layout(&w64, self.in_dim, self.out_dim, policy.fwd, Layout::ColMajor)?;
-        let (y, xt) =
-            linear_forward_with(ctx, policy, &wt, &self.b, x, batch, self.in_dim, self.out_dim)?;
-        if let Some(t) = tape {
-            t.push_mf(xt);
+        match tape {
+            Some(t) => {
+                let mut w64 = t.grab_host();
+                self.w_f64_into(&mut w64);
+                let wt = session.tensor_reusing(
+                    &w64,
+                    self.in_dim,
+                    self.out_dim,
+                    policy.fwd,
+                    Layout::ColMajor,
+                    t.grab_words(),
+                )?;
+                t.recycle_host(w64);
+                let buf = t.grab_words();
+                let mut y = t.grab_host();
+                let xt =
+                    linear_forward_into(ctx, policy, &wt, &self.b, x, batch, self.in_dim, self.out_dim, buf, &mut y)?;
+                t.recycle_mf(wt);
+                t.push_mf(xt);
+                Ok(y)
+            }
+            None => {
+                let w64 = self.w_f64();
+                let wt =
+                    session.tensor_with_layout(&w64, self.in_dim, self.out_dim, policy.fwd, Layout::ColMajor)?;
+                let (y, _xt) =
+                    linear_forward_with(ctx, policy, &wt, &self.b, x, batch, self.in_dim, self.out_dim)?;
+                Ok(y)
+            }
         }
-        Ok(y)
     }
 
     /// Backward: consumes the output gradient `g` (`batch×out_dim`,
@@ -137,7 +205,8 @@ impl Linear {
     /// (range-oriented) backward format, accumulated wide:
     /// `dW = Xᵀ·G` streams the saved activation re-cast from the
     /// forward format (the FP8-training memory story: nothing wider was
-    /// kept), `dX = G·Wᵀ` streams the master weights cast down.
+    /// kept), `dX = G·Wᵀ` streams the master weights cast down. Every
+    /// intermediate tensor's storage cycles through the tape arena.
     pub fn backward(
         &mut self,
         ctx: &mut GemmCtx,
@@ -165,19 +234,35 @@ impl Linear {
         );
         // dW = Xᵀ·G  (in×out, inner batch): both streams pack *down*
         // the batch dimension, i.e. column-major storage.
-        let x_bwd = if x_saved.fmt() == policy.bwd { x_saved } else { x_saved.cast(policy.bwd, rm)? };
+        let x_bwd = if x_saved.fmt() == policy.bwd {
+            x_saved
+        } else {
+            let cast = x_saved.cast(policy.bwd, rm)?;
+            tape.recycle_mf(x_saved);
+            cast
+        };
         let x_col = x_bwd.with_layout(Layout::ColMajor)?;
-        let g_col = session.tensor_with_layout(g, batch, self.out_dim, policy.bwd, Layout::ColMajor)?;
-        let dw = ctx.matmul(policy.bwd, &x_col, &g_col, self.in_dim, self.out_dim, batch, true, false)?;
+        let g_col = session.tensor_reusing(g, batch, self.out_dim, policy.bwd, Layout::ColMajor, tape.grab_words())?;
+        let mut dw = tape.grab_host();
+        ctx.matmul_into(policy.bwd, &x_col, &g_col, self.in_dim, self.out_dim, batch, true, false, &mut dw)?;
+        tape.recycle_mf(x_col);
+        tape.recycle_mf(x_bwd);
+        tape.recycle_mf(g_col);
         // dX = G·Wᵀ  (batch×in, inner out): both streams pack along
         // rows — G's rows and W's rows (columns of Wᵀ).
-        let g_row = ctx.session().tensor(g, batch, self.out_dim, policy.bwd)?;
-        let w64 = self.w_f64();
-        let w_row = ctx.session().tensor(&w64, self.in_dim, self.out_dim, policy.bwd)?;
-        let dx = ctx.matmul(policy.bwd, &g_row, &w_row, batch, self.in_dim, self.out_dim, false, true)?;
+        let g_row = session.tensor_reusing(g, batch, self.out_dim, policy.bwd, Layout::RowMajor, tape.grab_words())?;
+        let mut w64 = tape.grab_host();
+        self.w_f64_into(&mut w64);
+        let w_row = session.tensor_reusing(&w64, self.in_dim, self.out_dim, policy.bwd, Layout::RowMajor, tape.grab_words())?;
+        tape.recycle_host(w64);
+        let mut dx = tape.grab_host();
+        ctx.matmul_into(policy.bwd, &g_row, &w_row, batch, self.in_dim, self.out_dim, false, true, &mut dx)?;
+        tape.recycle_mf(g_row);
+        tape.recycle_mf(w_row);
         for (o, v) in self.gw.iter_mut().zip(&dw) {
             *o = *v as f32;
         }
+        tape.recycle_host(dw);
         // Bias gradient: a pure reduction over the batch (elementwise,
         // not a matmul) in host precision.
         for j in 0..self.out_dim {
@@ -226,9 +311,27 @@ impl Activation {
         }
     }
 
+    /// Apply the activation elementwise in place — the inference hot
+    /// path (same math as [`Activation::forward`], no tape, no copy).
+    pub fn apply_in_place(&self, x: &mut [f64]) {
+        match self {
+            Activation::Relu => {
+                for v in x.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            Activation::Gelu => {
+                for v in x.iter_mut() {
+                    *v = gelu(*v);
+                }
+            }
+        }
+    }
+
     /// Forward over a `rows×cols` host matrix. The pre-activation is
     /// saved on the tape quantized to `acc` — exact, because linear
-    /// epilogues already rounded it onto that grid.
+    /// epilogues already rounded it onto that grid. With a tape, the
+    /// output buffer is drawn from the arena too.
     pub fn forward(
         &self,
         session: &Session,
@@ -236,32 +339,49 @@ impl Activation {
         x: &[f64],
         rows: usize,
         cols: usize,
-        tape: Option<&mut Tape>,
+        mut tape: Option<&mut Tape>,
     ) -> Result<Vec<f64>> {
         ensure!(x.len() == rows * cols, "activation input must be {rows}x{cols}");
-        let y = match self {
-            Activation::Relu => x.iter().map(|&v| v.max(0.0)).collect(),
-            Activation::Gelu => x.iter().map(|&v| gelu(v)).collect(),
+        let mut y = match tape.as_deref_mut() {
+            Some(t) => t.grab_host(),
+            None => Vec::new(),
         };
+        y.clear();
+        match self {
+            Activation::Relu => y.extend(x.iter().map(|&v| v.max(0.0))),
+            Activation::Gelu => y.extend(x.iter().map(|&v| gelu(v))),
+        }
         if let Some(t) = tape {
-            t.push_mf(session.tensor(x, rows, cols, acc)?);
+            let buf = t.grab_words();
+            t.push_mf(session.tensor_reusing(x, rows, cols, acc, Layout::RowMajor, buf)?);
         }
         Ok(y)
     }
 
-    /// Backward: `g ⊙ f'(x)` from the saved pre-activation.
+    /// Backward: `g ⊙ f'(x)` from the saved pre-activation. Both the
+    /// decoded pre-activation and the output gradient draw recycled
+    /// storage from the tape arena.
     pub fn backward(&self, g: &[f64], tape: &mut Tape) -> Result<Vec<f64>> {
-        let x = tape.pop_mf()?.to_f64();
+        let xt = tape.pop_mf()?;
+        let mut x = tape.grab_host();
+        xt.view().to_f64_into(&mut x);
+        tape.recycle_mf(xt);
         ensure!(
             x.len() == g.len(),
             "activation backward: gradient has {} values but the saved input has {}",
             g.len(),
             x.len()
         );
-        Ok(match self {
-            Activation::Relu => x.iter().zip(g).map(|(&xv, &gv)| if xv > 0.0 { gv } else { 0.0 }).collect(),
-            Activation::Gelu => x.iter().zip(g).map(|(&xv, &gv)| gv * gelu_prime(xv)).collect(),
-        })
+        let mut out = tape.grab_host();
+        out.clear();
+        match self {
+            Activation::Relu => {
+                out.extend(x.iter().zip(g).map(|(&xv, &gv)| if xv > 0.0 { gv } else { 0.0 }))
+            }
+            Activation::Gelu => out.extend(x.iter().zip(g).map(|(&xv, &gv)| gv * gelu_prime(xv))),
+        }
+        tape.recycle_host(x);
+        Ok(out)
     }
 }
 
@@ -283,8 +403,9 @@ pub struct SoftmaxXent {
 
 impl SoftmaxXent {
     /// Mean cross-entropy loss; saves the probabilities (host slot —
-    /// they never feed a GEMM) when a tape is supplied.
-    pub fn forward(&self, logits: &[f64], labels: &[u8], tape: Option<&mut Tape>) -> Result<f64> {
+    /// they never feed a GEMM) when a tape is supplied, drawing the
+    /// buffer from the tape arena.
+    pub fn forward(&self, logits: &[f64], labels: &[u8], mut tape: Option<&mut Tape>) -> Result<f64> {
         let batch = labels.len();
         ensure!(
             logits.len() == batch * self.width,
@@ -292,7 +413,12 @@ impl SoftmaxXent {
             self.width,
             logits.len()
         );
-        let mut probs = vec![0f64; logits.len()];
+        let mut probs = match tape.as_deref_mut() {
+            Some(t) => t.grab_host(),
+            None => Vec::new(),
+        };
+        probs.clear();
+        probs.resize(logits.len(), 0f64);
         let mut loss = 0f64;
         for (bi, &label) in labels.iter().enumerate() {
             ensure!(
@@ -322,6 +448,7 @@ impl SoftmaxXent {
 
     /// Gradient w.r.t. the logits, pre-multiplied by `scale` (the loss
     /// scale) and averaged over the batch: `(p - onehot)·scale/batch`.
+    /// Reuses the saved probabilities' storage for the gradient.
     pub fn backward(&self, labels: &[u8], scale: f64, tape: &mut Tape) -> Result<Vec<f64>> {
         let probs = tape.pop_host()?;
         let batch = labels.len();
@@ -378,7 +505,8 @@ impl Mlp {
     }
 
     /// Forward to logits. Pass a tape to save for backward, or `None`
-    /// for evaluation.
+    /// for evaluation. With a tape, the inter-layer activation buffers
+    /// cycle through the arena as each layer supersedes them.
     pub fn forward(
         &self,
         ctx: &mut GemmCtx,
@@ -387,12 +515,27 @@ impl Mlp {
         batch: usize,
         mut tape: Option<&mut Tape>,
     ) -> Result<Vec<f64>> {
+        /// Swap `next` in as the live activation, recycling the
+        /// superseded buffer into the arena when one is available.
+        fn advance(tape: &mut Option<&mut Tape>, h: &mut Vec<f64>, next: Vec<f64>) {
+            let old = std::mem::replace(h, next);
+            if let Some(t) = tape.as_deref_mut() {
+                t.recycle_host(old);
+            }
+        }
         let n = self.layers.len();
-        let mut h = x.to_vec();
+        let mut h = match tape.as_deref_mut() {
+            Some(t) => t.grab_host(),
+            None => Vec::new(),
+        };
+        h.clear();
+        h.extend_from_slice(x);
         for (i, l) in self.layers.iter().enumerate() {
-            h = l.forward(ctx, policy, &h, batch, tape.as_deref_mut())?;
+            let y = l.forward(ctx, policy, &h, batch, tape.as_deref_mut())?;
+            advance(&mut tape, &mut h, y);
             if i + 1 < n {
-                h = self.act.forward(ctx.session(), policy.acc, &h, batch, l.out_dim, tape.as_deref_mut())?;
+                let y = self.act.forward(&ctx.session(), policy.acc, &h, batch, l.out_dim, tape.as_deref_mut())?;
+                advance(&mut tape, &mut h, y);
             }
         }
         Ok(h)
@@ -415,7 +558,8 @@ impl Mlp {
     }
 
     /// Backward from the logit gradient; fills every layer's `gw`/`gb`
-    /// (loss-scaled) and drains the tape.
+    /// (loss-scaled) and drains the tape, recycling every intermediate
+    /// gradient buffer through the arena.
     pub fn backward(
         &mut self,
         ctx: &mut GemmCtx,
@@ -424,13 +568,18 @@ impl Mlp {
         batch: usize,
         tape: &mut Tape,
     ) -> Result<()> {
-        let mut g = g_logits.to_vec();
+        let mut g = tape.grab_host();
+        g.clear();
+        g.extend_from_slice(g_logits);
         for i in (0..self.layers.len()).rev() {
-            g = self.layers[i].backward(ctx, policy, &g, batch, tape)?;
+            let dx = self.layers[i].backward(ctx, policy, &g, batch, tape)?;
+            tape.recycle_host(std::mem::replace(&mut g, dx));
             if i > 0 {
-                g = self.act.backward(&g, tape)?;
+                let ga = self.act.backward(&g, tape)?;
+                tape.recycle_host(std::mem::replace(&mut g, ga));
             }
         }
+        tape.recycle_host(g);
         ensure!(tape.is_empty(), "backward pass left {} unconsumed tape slots", tape.len());
         Ok(())
     }

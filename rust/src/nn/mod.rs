@@ -26,8 +26,8 @@
 //! | module | role |
 //! |---|---|
 //! | [`policy`] | precision policies + dynamic loss scaling |
-//! | [`engine`] | the GEMM router: builds/runs `GemmPlan`s, counts calls |
-//! | [`tape`]   | minimal reverse-mode tape over `MfTensor` activations |
+//! | [`engine`] | the GEMM router: caches compiled `PlanInstance`s, counts calls/reuses |
+//! | [`tape`]   | reverse-mode tape over `MfTensor` activations + the step's buffer arena |
 //! | [`layer`]  | Linear, ReLU/GELU, softmax-cross-entropy (fwd + bwd) |
 //! | [`optim`]  | SGD with momentum, Adam — FP32 master weights |
 //! | [`data`]   | synthetic datasets (spiral, rings), lane-padded |

@@ -1,4 +1,5 @@
-//! A minimal reverse-mode tape over [`MfTensor`]-backed activations.
+//! A minimal reverse-mode tape over [`MfTensor`]-backed activations —
+//! and the training loop's **buffer arena**.
 //!
 //! Layers push what their backward pass needs during the forward pass
 //! and pop it back — in reverse order, because the tape is a stack —
@@ -13,10 +14,25 @@
 //! typed [`crate::util::error::Error`] naming both kinds, which turns
 //! a mis-ordered backward implementation into a diagnosable failure
 //! instead of silent garbage.
+//!
+//! ## The arena
+//!
+//! A training step allocates the same activation and gradient buffers
+//! every iteration. A persistent tape (the trainer keeps one across
+//! steps) doubles as the recycling arena: consumed slots hand their
+//! storage back ([`Tape::recycle_mf`] / [`Tape::recycle_host`]), the
+//! next step grabs it ([`Tape::grab_words`] / [`Tape::grab_host`]), and
+//! [`Tape::clear`] sweeps leftover slots into the pools. Pools hold
+//! capacity only — never values — so recycling cannot change a result
+//! bit (the dispatch-mode differential tests pin the whole step).
 
 use crate::api::MfTensor;
-use crate::util::error::Result;
 use crate::bail;
+use crate::util::error::Result;
+
+/// Buffers each spare pool retains; beyond this, storage is dropped
+/// (bounds arena memory at a handful of step-sized buffers).
+const POOL_CAP: usize = 16;
 
 /// One saved value.
 #[derive(Clone, Debug)]
@@ -36,10 +52,13 @@ impl Slot {
     }
 }
 
-/// The tape: a stack of saved-for-backward values.
+/// The tape: a stack of saved-for-backward values plus the recycled
+/// buffer pools.
 #[derive(Clone, Debug, Default)]
 pub struct Tape {
     slots: Vec<Slot>,
+    spare_words: Vec<Vec<u64>>,
+    spare_host: Vec<Vec<f64>>,
 }
 
 impl Tape {
@@ -84,6 +103,42 @@ impl Tape {
         }
     }
 
+    // ----------------------------------------------------------- arena
+
+    /// Grab a recycled packed-word buffer (or a fresh empty one) for
+    /// quantizing an activation — pair with
+    /// [`crate::api::Session::tensor_reusing`] and return the storage
+    /// via [`Tape::recycle_mf`] once the tensor is consumed.
+    pub fn grab_words(&mut self) -> Vec<u64> {
+        self.spare_words.pop().unwrap_or_default()
+    }
+
+    /// Grab a recycled host-precision buffer (or a fresh empty one).
+    pub fn grab_host(&mut self) -> Vec<f64> {
+        self.spare_host.pop().unwrap_or_default()
+    }
+
+    /// Return a consumed activation's storage to the arena.
+    pub fn recycle_mf(&mut self, t: MfTensor) {
+        if self.spare_words.len() < POOL_CAP {
+            self.spare_words.push(t.into_words());
+        }
+    }
+
+    /// Return a consumed host buffer to the arena.
+    pub fn recycle_host(&mut self, v: Vec<f64>) {
+        if self.spare_host.len() < POOL_CAP {
+            self.spare_host.push(v);
+        }
+    }
+
+    /// Buffers currently parked in the arena pools (word, host).
+    pub fn pooled(&self) -> (usize, usize) {
+        (self.spare_words.len(), self.spare_host.len())
+    }
+
+    // ----------------------------------------------------------- stack
+
     /// Slots currently saved.
     pub fn len(&self) -> usize {
         self.slots.len()
@@ -95,8 +150,14 @@ impl Tape {
         self.slots.is_empty()
     }
 
-    /// Drop all saved slots (evaluation-mode reuse).
+    /// Drop all saved slots, sweeping their storage into the arena
+    /// pools (evaluation-mode and cross-step reuse).
     pub fn clear(&mut self) {
-        self.slots.clear();
+        while let Some(slot) = self.slots.pop() {
+            match slot {
+                Slot::Mf(t) => self.recycle_mf(t),
+                Slot::Host(v) => self.recycle_host(v),
+            }
+        }
     }
 }

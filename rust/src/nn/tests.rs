@@ -406,3 +406,123 @@ fn policy_validation_rejects_bad_pairs() {
         p.validate().unwrap_or_else(|e| panic!("preset {} invalid: {e}", p.name));
     }
 }
+
+// --------------------------------------- executor / plan-instance reuse
+
+#[test]
+fn trainer_reuses_compiled_plan_instances_across_steps() {
+    // The three-layer MLP runs nine distinct GEMM shapes per step
+    // (3 forward + 6 backward). The persistent GemmCtx must compile
+    // each exactly once; every later execution — including accuracy
+    // evaluation, whose forward shapes coincide — is a cache hit.
+    let session = Session::builder().seed(5).build();
+    let mut tr = session.native_trainer(PrecisionPolicy::hfp8()).expect("trainer");
+    for _ in 0..4 {
+        tr.step().expect("step");
+    }
+    assert_eq!(tr.plan_builds(), 9, "one instance per distinct GEMM shape");
+    assert_eq!(tr.gemm_calls(), 4 * 9);
+    assert_eq!(tr.plan_reuses(), tr.gemm_calls() - tr.plan_builds());
+    assert_eq!(tr.packed_runs(), tr.gemm_calls(), "hfp8 must stay on the packed route");
+    let builds_before_eval = tr.plan_builds();
+    tr.accuracy().expect("accuracy");
+    assert_eq!(tr.plan_builds(), builds_before_eval, "evaluation reuses the forward instances");
+    assert!(tr.plan_reuses() > tr.gemm_calls() / 2);
+}
+
+#[test]
+fn training_is_bit_identical_across_dispatch_backends() {
+    // The differential suite's nn leg: a short training run (plus an
+    // accuracy pass) on the pooled executor, the legacy scoped-thread
+    // backend and the serial path must agree to the last bit — loss
+    // trajectory and final master weights.
+    use crate::util::parallel::{with_dispatch, Dispatch};
+    let run = |mode: Dispatch| {
+        with_dispatch(mode, || {
+            let session = Session::builder().seed(9).build();
+            let mut tr = session.native_trainer(PrecisionPolicy::hfp8()).expect("trainer");
+            for _ in 0..3 {
+                tr.step().expect("step");
+            }
+            let acc = tr.accuracy().expect("accuracy");
+            let losses: Vec<u64> = tr.history.iter().map(|r| r.loss.to_bits()).collect();
+            let w0: Vec<u32> = tr.model().layers[0].w.iter().map(|v| v.to_bits()).collect();
+            (losses, w0, acc.to_bits())
+        })
+    };
+    let pooled = run(Dispatch::Pool);
+    assert_eq!(pooled, run(Dispatch::Scoped), "pool vs legacy scoped threads diverged");
+    assert_eq!(pooled, run(Dispatch::Serial), "pool vs serial diverged");
+}
+
+#[test]
+fn persistent_trainer_state_matches_per_call_engine() {
+    // The trainer's persistent ctx/tape/arena against a hand-rolled
+    // step loop that rebuilds a fresh GemmCtx and Tape every iteration
+    // (the pre-executor behaviour): identical losses, identical
+    // weights. Reuse is capacity, never state.
+    let policy = PrecisionPolicy::hfp8();
+    let session = Session::builder().seed(12).build();
+    let mut tr = session.native_trainer(policy).expect("trainer");
+    for _ in 0..3 {
+        tr.step().expect("step");
+    }
+    // Reference loop: mirror TrainPlan::trainer + NativeTrainer::step
+    // with per-call contexts.
+    let data = Dataset::spiral(300, session.seed() ^ 0xD47A);
+    let mut init_rng = session.rng();
+    let mut model = Mlp::new(IN_DIM, 32, OUT_DIM, data.classes, Activation::Relu, &mut init_rng);
+    let mut optim = Optim::new(OptimSpec::adam(4e-3));
+    let mut scaler = LossScaler::for_policy(&policy);
+    let mut rng = Rng::new(session.seed() ^ 0x5339);
+    let mut losses = Vec::new();
+    for _ in 0..3 {
+        let (x, labels) = data.batch(64, &mut rng);
+        let scale = scaler.scale();
+        let mut ctx = GemmCtx::new(&session, policy.acc);
+        let mut tape = Tape::new();
+        let logits = model.forward(&mut ctx, &policy, &x, 64, Some(&mut tape)).expect("fwd");
+        let loss = model.loss.forward(&logits, &labels, Some(&mut tape)).expect("loss");
+        let g0 = model.loss.backward(&labels, scale, &mut tape).expect("g0");
+        model.backward(&mut ctx, &policy, &g0, 64, &mut tape).expect("bwd");
+        let finite = loss.is_finite() && model.grads_finite();
+        if scaler.update(finite) {
+            model.scale_grads((1.0 / scale) as f32);
+            let mut params = model.params_mut();
+            optim.step(&mut params).expect("optim");
+        }
+        losses.push(loss.to_bits());
+    }
+    let got: Vec<u64> = tr.history.iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(got, losses, "persistent executor state changed the numerics");
+    for (i, (l, r)) in tr.model().layers.iter().zip(&model.layers).enumerate() {
+        assert_eq!(
+            l.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            r.w.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "layer {i} weights diverged"
+        );
+    }
+}
+
+#[test]
+fn tape_arena_recycles_buffers() {
+    // After one full step the tape pools hold recycled storage, and a
+    // cleared tape sweeps leftover slots into the pools.
+    let session = Session::builder().seed(3).build();
+    let mut tr = session.native_trainer(PrecisionPolicy::fp32()).expect("trainer");
+    tr.step().expect("step");
+    tr.step().expect("step");
+    let mut tape = Tape::new();
+    tape.push_host(vec![1.0, 2.0]);
+    tape.push_mf(session.tensor(&[0.5; 8], 1, 8, crate::formats::FP16).expect("tensor"));
+    assert_eq!(tape.len(), 2);
+    tape.clear();
+    assert!(tape.is_empty());
+    let (words, host) = tape.pooled();
+    assert_eq!((words, host), (1, 1), "clear must sweep slots into the arena pools");
+    // grab/recycle round-trips capacity.
+    let buf = tape.grab_host();
+    assert_eq!(tape.pooled().1, 0);
+    tape.recycle_host(buf);
+    assert_eq!(tape.pooled().1, 1);
+}

@@ -12,9 +12,16 @@
 //!    overflowed steps are skipped and the scale backs off;
 //! 5. unscale the gradients and step the optimizer on the FP32 masters.
 //!
+//! The trainer owns its execution state **across steps**: one
+//! [`GemmCtx`] whose compiled [`crate::api::PlanInstance`]s (nine GEMM
+//! shapes) persist — the first step compiles them, every later step is
+//! pure reuse — plus a persistent [`Tape`] whose arena recycles
+//! activation/gradient buffers and a step arena for the sampled batch.
 //! Every matmul is a validated [`crate::api::GemmPlan`]; the trainer
-//! counts plan executions ([`NativeTrainer::gemm_calls`]) and packed
-//! fast-path hits ([`NativeTrainer::packed_runs`]) so that routing is
+//! exposes plan executions ([`NativeTrainer::gemm_calls`]), packed
+//! fast-path hits ([`NativeTrainer::packed_runs`]) and instance
+//! builds/reuses ([`NativeTrainer::plan_builds`] /
+//! [`NativeTrainer::plan_reuses`]) so that routing **and reuse** are
 //! asserted by tests, not assumed. Construct through the typed front
 //! door: [`crate::api::Session::train`] /
 //! [`crate::api::Session::native_trainer`].
@@ -42,6 +49,14 @@ pub struct StepRecord {
     pub skipped: bool,
 }
 
+/// Reusable per-step buffers for the sampled batch (the tape arena and
+/// the GemmCtx workspaces cover everything downstream).
+#[derive(Debug, Default)]
+struct StepArena {
+    x: Vec<f64>,
+    labels: Vec<u8>,
+}
+
 /// The native mixed-precision training driver.
 pub struct NativeTrainer {
     session: Session,
@@ -54,8 +69,9 @@ pub struct NativeTrainer {
     batch: usize,
     /// Per-step records (loss curve, scale trajectory, skips).
     pub history: Vec<StepRecord>,
-    gemm_calls: u64,
-    packed_runs: u64,
+    ctx: GemmCtx,
+    tape: Tape,
+    arena: StepArena,
 }
 
 impl NativeTrainer {
@@ -73,6 +89,7 @@ impl NativeTrainer {
         let mut init_rng = session.rng();
         let model = Mlp::new(IN_DIM, hidden, OUT_DIM, data.classes, act, &mut init_rng);
         let scaler = LossScaler::for_policy(&policy);
+        let ctx = GemmCtx::new(&session, policy.acc);
         NativeTrainer {
             session,
             policy,
@@ -83,8 +100,9 @@ impl NativeTrainer {
             rng: Rng::new(session.seed() ^ 0x5339),
             batch,
             history: Vec::new(),
-            gemm_calls: 0,
-            packed_runs: 0,
+            ctx,
+            tape: Tape::new(),
+            arena: StepArena::default(),
         }
     }
 
@@ -118,13 +136,25 @@ impl NativeTrainer {
 
     /// GEMM plans executed so far (forward + backward + evaluation).
     pub fn gemm_calls(&self) -> u64 {
-        self.gemm_calls
+        self.ctx.calls
     }
 
     /// How many of those fed the batch engine packed (zero
     /// decode/re-pack). Expanding-pair policies hit this on every plan.
     pub fn packed_runs(&self) -> u64 {
-        self.packed_runs
+        self.ctx.packed
+    }
+
+    /// Plan instances compiled (one per distinct GEMM shape — nine for
+    /// the three-layer MLP; flat after the first step).
+    pub fn plan_builds(&self) -> u64 {
+        self.ctx.plan_builds
+    }
+
+    /// GEMM executions that reused a compiled instance (everything
+    /// after the first step).
+    pub fn plan_reuses(&self) -> u64 {
+        self.ctx.plan_reuses
     }
 
     /// Steps skipped by loss-scaling overflow backoff.
@@ -134,16 +164,16 @@ impl NativeTrainer {
 
     /// Run one SGD/Adam step on a random batch; returns the record.
     pub fn step(&mut self) -> Result<StepRecord> {
-        let (x, labels) = self.data.batch(self.batch, &mut self.rng);
+        self.data.batch_into(self.batch, &mut self.rng, &mut self.arena.x, &mut self.arena.labels);
         let scale = self.scaler.scale();
-        let mut ctx = GemmCtx::new(&self.session, self.policy.acc);
-        let mut tape = Tape::new();
-        let logits = self.model.forward(&mut ctx, &self.policy, &x, self.batch, Some(&mut tape))?;
-        let loss = self.model.loss.forward(&logits, &labels, Some(&mut tape))?;
-        let g0 = self.model.loss.backward(&labels, scale, &mut tape)?;
-        self.model.backward(&mut ctx, &self.policy, &g0, self.batch, &mut tape)?;
-        self.gemm_calls += ctx.calls;
-        self.packed_runs += ctx.packed;
+        self.tape.clear();
+        let logits =
+            self.model.forward(&mut self.ctx, &self.policy, &self.arena.x, self.batch, Some(&mut self.tape))?;
+        let loss = self.model.loss.forward(&logits, &self.arena.labels, Some(&mut self.tape))?;
+        let g0 = self.model.loss.backward(&self.arena.labels, scale, &mut self.tape)?;
+        self.model.backward(&mut self.ctx, &self.policy, &g0, self.batch, &mut self.tape)?;
+        self.tape.recycle_host(g0);
+        self.tape.recycle_host(logits);
         // A non-finite *loss* (forward overflow) skips exactly like a
         // gradient overflow.
         let finite = loss.is_finite() && self.model.grads_finite();
@@ -153,8 +183,7 @@ impl NativeTrainer {
             let mut params = self.model.params_mut();
             self.optim.step(&mut params)?;
         }
-        let record =
-            StepRecord { step: self.history.len(), loss, scale, skipped: !apply };
+        let record = StepRecord { step: self.history.len(), loss, scale, skipped: !apply };
         self.history.push(record);
         Ok(record)
     }
@@ -177,16 +206,23 @@ impl NativeTrainer {
     /// Classification accuracy over the whole dataset (forward passes
     /// in the policy's forward precision, argmax over the logical
     /// classes). Walks full batches; the tail remainder (< batch) is
-    /// skipped, exactly like the PJRT evaluator.
+    /// skipped, exactly like the PJRT evaluator. Runs on the same
+    /// persistent context (and therefore the same compiled instances)
+    /// as training — the forward shapes are identical. The tape-free
+    /// forward still allocates its per-layer buffers: recording to the
+    /// tape arena would add a pre-activation quantization per layer per
+    /// batch, which costs more than the allocations it saves on this
+    /// cold path (a deliberate tradeoff; the hot training step is the
+    /// arena-recycled one).
     pub fn accuracy(&mut self) -> Result<f64> {
         let mut correct = 0usize;
         let mut total = 0usize;
-        let mut ctx = GemmCtx::new(&self.session, self.policy.acc);
         let mut idx = 0;
         while idx + self.batch <= self.data.len() {
-            let (x, labels) = self.data.ordered_batch(idx, self.batch);
-            let logits = self.model.forward_inference(&mut ctx, &self.policy, &x, self.batch)?;
-            for (b, &label) in labels.iter().enumerate() {
+            self.data.ordered_batch_into(idx, self.batch, &mut self.arena.x, &mut self.arena.labels);
+            let logits =
+                self.model.forward_inference(&mut self.ctx, &self.policy, &self.arena.x, self.batch)?;
+            for (b, &label) in self.arena.labels.iter().enumerate() {
                 let row = &logits[b * OUT_DIM..b * OUT_DIM + self.data.classes];
                 let pred = row
                     .iter()
@@ -197,10 +233,9 @@ impl NativeTrainer {
                 correct += (pred == label as usize) as usize;
                 total += 1;
             }
+            self.tape.recycle_host(logits);
             idx += self.batch;
         }
-        self.gemm_calls += ctx.calls;
-        self.packed_runs += ctx.packed;
         Ok(correct as f64 / total.max(1) as f64)
     }
 

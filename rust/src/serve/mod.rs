@@ -26,7 +26,7 @@
 //! | [`model`]   | [`InferenceModel`]: frozen packed weights + versioned checkpoints |
 //! | [`queue`]   | [`Request`]/[`Response`] + per-tenant deadline-aware queues |
 //! | [`batcher`] | dynamic batching policy (`max_batch`, `max_wait_ticks`, row padding) |
-//! | [`worker`]  | [`worker::Shard`] pool + the [`Server`] tick loop |
+//! | [`worker`]  | [`worker::Shard`] pool (persistent per-tenant plan instances + reused batch buffers) + the [`Server`] tick loop |
 //! | [`stats`]   | [`ServeStats`]: throughput, batch histogram, p50/p95/p99 ticks |
 //! | [`sim`]     | seeded open/closed-loop load generation + [`sim::replay`] |
 //!

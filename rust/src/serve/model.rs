@@ -157,7 +157,7 @@ impl InferenceModel {
     /// Forward a padded batch (`rows` a multiple of the serving row
     /// granularity, `rows×in_dim` row-major features) to logits.
     ///
-    /// Each layer runs [`crate::nn::layer::linear_forward_with`] — the
+    /// Each layer runs [`crate::nn::layer::linear_forward_into`] — the
     /// *same* implementation the training forward uses, fed the
     /// pre-packed column-major weights (zero-repack for expanding-pair
     /// policies) — so the served pass is bit-identical to the
@@ -165,7 +165,29 @@ impl InferenceModel {
     /// maintenance. Each output row depends only on its own input row,
     /// which is what makes per-request results independent of batch
     /// composition.
-    pub fn forward(&self, ctx: &mut GemmCtx<'_>, x: &[f64], rows: usize) -> Result<Vec<f64>> {
+    pub fn forward(&self, ctx: &mut GemmCtx, x: &[f64], rows: usize) -> Result<Vec<f64>> {
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        let mut xt_pool = Vec::new();
+        self.forward_into(ctx, x, rows, &mut out, &mut scratch, &mut xt_pool)?;
+        Ok(out)
+    }
+
+    /// [`InferenceModel::forward`] on recycled storage — the serving
+    /// hot path. Logits land in `out`; `scratch` ping-pongs the
+    /// inter-layer activations; `xt_pool` recycles the quantized-input
+    /// word storage. All three are shard-owned buffers reused across
+    /// dispatches (capacity only; bit-identical to the allocating
+    /// form).
+    pub fn forward_into(
+        &self,
+        ctx: &mut GemmCtx,
+        x: &[f64],
+        rows: usize,
+        out: &mut Vec<f64>,
+        scratch: &mut Vec<f64>,
+        xt_pool: &mut Vec<u64>,
+    ) -> Result<()> {
         ensure!(
             x.len() == rows * self.in_dim(),
             "inference input must be {rows}x{} = {} values, got {}",
@@ -179,26 +201,32 @@ impl InferenceModel {
             ctx.acc.name(),
             self.policy.acc.name()
         );
-        let session = ctx.session();
         let n = self.layers.len();
-        let mut h = x.to_vec();
+        // `scratch` carries the activations entering the next layer.
+        scratch.clear();
+        scratch.extend_from_slice(x);
         for (i, l) in self.layers.iter().enumerate() {
-            let (y, _xt) = crate::nn::layer::linear_forward_with(
+            let xt = crate::nn::layer::linear_forward_into(
                 ctx,
                 &self.policy,
                 &l.w_packed,
                 &l.bias,
-                &h,
+                scratch,
                 rows,
                 l.in_dim,
                 l.out_dim,
+                std::mem::take(xt_pool),
+                out,
             )?;
-            h = y;
+            *xt_pool = xt.into_words();
             if i + 1 < n {
-                h = self.act.forward(session, self.policy.acc, &h, rows, l.out_dim, None)?;
+                self.act.apply_in_place(out);
             }
+            std::mem::swap(scratch, out);
         }
-        Ok(h)
+        // The loop parks the final activations in `scratch`.
+        std::mem::swap(scratch, out);
+        Ok(())
     }
 
     // ------------------------------------------------------ checkpoints

@@ -418,3 +418,87 @@ fn server_rejects_malformed_submissions() {
     let err = server.submit(0, vec![0.0; 3], None).unwrap_err();
     assert!(err.to_string().contains("features"), "{err}");
 }
+
+// --------------------------------------- executor / plan-instance reuse
+
+#[test]
+fn serve_dispatch_backends_bit_identical_at_shards_1_and_4() {
+    // The differential suite's serving leg: the same trace replayed on
+    // the pooled executor, the legacy scoped-thread backend and the
+    // serial path — at shard counts {1, 4} — must produce bit-identical
+    // responses and byte-identical stats JSON.
+    use crate::util::parallel::{with_dispatch, Dispatch};
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 4);
+    let trace = Trace::open_loop(17, &[model.in_dim()], 40, 0.4, Some(32)).expect("trace");
+    let run = |mode: Dispatch, shards: usize| {
+        with_dispatch(mode, || {
+            let plan = session
+                .server()
+                .tenant("t", model.clone())
+                .max_batch(8)
+                .max_wait_ticks(2)
+                .shards(shards)
+                .build()
+                .expect("plan");
+            let mut server = plan.server();
+            let responses = sim::replay(&mut server, &trace).expect("replay");
+            let payload: Vec<(u64, u64, Vec<u64>)> = responses
+                .iter()
+                .map(|r| (r.id, r.completion_tick, bits(&r.logits)))
+                .collect();
+            (payload, server.stats().summary_json())
+        })
+    };
+    let want = run(Dispatch::Pool, 1);
+    for shards in [1usize, 4] {
+        for mode in [Dispatch::Pool, Dispatch::Scoped, Dispatch::Serial] {
+            let got = run(mode, shards);
+            assert_eq!(got, want, "{mode:?} @ {shards} shards diverged");
+        }
+    }
+}
+
+#[test]
+fn serve_shards_reuse_compiled_plan_instances() {
+    // Shards pre-warm per-layer instances at the boundary padded batch
+    // shapes, so a steady stream of full batches compiles nothing new:
+    // builds stay flat while reuses track traffic.
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 4);
+    let in_dim = model.in_dim();
+    let layers = model.layers().len() as u64;
+    let plan = session
+        .server()
+        .tenant("t", model)
+        .max_batch(8)
+        .max_wait_ticks(2)
+        .shards(2)
+        .build()
+        .expect("plan");
+    let mut server = plan.server();
+    let (builds0, reuses0) = server.plan_counters();
+    // Warm-up covered ROW_PAD == pad_rows(max_batch) == 8 here: one
+    // instance per layer per shard, zero executions yet.
+    assert_eq!(builds0, 2 * layers, "pre-warmed instances per shard per layer");
+    assert_eq!(reuses0, 0);
+    let mut rng = Rng::new(5);
+    let mut drive = |server: &mut super::worker::Server| {
+        for _ in 0..8 {
+            let f = sim::sample_features(&mut rng, in_dim);
+            server.submit(0, f, None).expect("submit");
+        }
+        server.drain().expect("drain");
+    };
+    drive(&mut server);
+    let (builds1, reuses1) = server.plan_counters();
+    assert_eq!(builds1, builds0, "full-batch dispatch must not compile new instances");
+    assert!(reuses1 >= layers, "dispatch must execute through cached instances");
+    drive(&mut server);
+    let (builds2, reuses2) = server.plan_counters();
+    assert_eq!(builds2, builds1, "steady state compiles nothing");
+    assert!(reuses2 > reuses1);
+    // Routing counters still flow into the stats as before.
+    assert!(server.stats().gemm_calls() >= 2 * layers);
+    assert_eq!(server.stats().packed_runs(), server.stats().gemm_calls(), "hfp8 stays packed");
+}

@@ -1,12 +1,20 @@
 //! The shard pool and the [`Server`] driving it.
 //!
-//! A [`Shard`] is one parallel execution lane: it owns its own copy of
-//! the [`Session`] policy and runs each dispatched batch through a
-//! fresh [`GemmCtx`], so plan execution and routing counters never
-//! share mutable state across shards. Batches spread round-robin over
-//! the pool in formation order (so even one tenant saturates every
-//! shard), and the pool fans out over [`crate::util::parallel`] scoped
-//! threads each tick.
+//! A [`Shard`] is one parallel execution lane: it owns **one
+//! persistent [`GemmCtx`] per tenant** — compiled
+//! [`crate::api::PlanInstance`]s (pre-warmed for the boundary padded
+//! batch shapes at assembly, cached thereafter) plus reusable
+//! workspaces — and per-dispatch buffers (padded input, logits,
+//! ping-pong scratch, quantized-input words), so a steady-state
+//! dispatch re-plans nothing and allocates nothing. Plan execution and
+//! routing counters never share mutable state across shards. Batches
+//! spread round-robin over the pool in formation order (so even one
+//! tenant saturates every shard). The shard fan-out itself rides
+//! per-tick scoped threads (control plane — at most `shards` spawns
+//! per dispatching tick), while every GEMM inside a shard dispatches
+//! to the persistent [`crate::util::parallel`] executor pool, so the
+//! numeric hot path uses the whole machine even when `shards` is
+//! smaller than the core count.
 //!
 //! **Determinism.** Scheduling decisions (batch formation, dispatch
 //! ticks) are made by the [`Server`] *before* the fan-out, and each
@@ -14,7 +22,9 @@
 //! are a pure wall-clock parallelism vehicle: per-request responses —
 //! logits bits, ticks, batch sizes — are identical at any shard count.
 //! The per-tick response stream is sorted by request id to keep the
-//! observable ordering shard-count independent too.
+//! observable ordering shard-count independent too. Reused contexts
+//! and buffers carry capacity, never values, so reuse is bit-invisible
+//! (pinned by the dispatch-mode and shard-count differential tests).
 
 use crate::api::Session;
 use crate::nn::engine::GemmCtx;
@@ -22,7 +32,7 @@ use crate::util::error::{Error, Result};
 use crate::util::parallel::par_chunks_mut;
 use crate::{bail, ensure};
 
-use super::batcher::{pad_rows, BatchPolicy, SERVICE_TICKS};
+use super::batcher::{pad_rows, BatchPolicy, ROW_PAD, SERVICE_TICKS};
 use super::model::InferenceModel;
 use super::queue::{Request, Response, TenantQueue};
 use super::stats::ServeStats;
@@ -37,26 +47,62 @@ pub struct Tenant {
     pub model: InferenceModel,
 }
 
-/// One parallel execution lane of the pool.
+/// One parallel execution lane of the pool: persistent per-tenant GEMM
+/// contexts plus reusable per-dispatch buffers.
 #[derive(Debug)]
 pub struct Shard {
-    session: Session,
     inbox: Vec<(usize, Vec<Request>)>,
     outbox: Vec<Response>,
     /// Per-tenant (gemm_calls, packed_runs) accumulated this tick.
     counters: Vec<(u64, u64)>,
+    /// One persistent context per tenant: compiled plan instances and
+    /// workspaces reused across dispatches.
+    ctxs: Vec<GemmCtx>,
+    /// Reused padded-input buffer.
+    x: Vec<f64>,
+    /// Reused logits buffer.
+    logits: Vec<f64>,
+    /// Reused inter-layer ping-pong scratch.
+    scratch: Vec<f64>,
+    /// Recycled quantized-input word storage.
+    xt_pool: Vec<u64>,
     error: Option<Error>,
 }
 
 impl Shard {
-    fn new(session: Session, n_tenants: usize) -> Self {
+    fn new(session: Session, tenants: &[Tenant], policy: &BatchPolicy) -> Self {
+        let mut ctxs: Vec<GemmCtx> =
+            tenants.iter().map(|t| GemmCtx::new(&session, t.model.policy().acc)).collect();
+        // Pre-warm the per-layer plan instances at the boundary padded
+        // batch shapes (the same shapes the ServePlan probe proved
+        // buildable — warm errors are therefore unreachable, and a
+        // hypothetical one would just fall back to lazy compilation on
+        // first dispatch). Intermediate padded sizes compile lazily and
+        // stay cached.
+        for (t, ctx) in tenants.iter().zip(&mut ctxs) {
+            for rows in [ROW_PAD, pad_rows(policy.max_batch)] {
+                for l in t.model.layers() {
+                    let _ = ctx.warm(t.model.policy().fwd, rows, l.out_dim, l.in_dim);
+                }
+            }
+        }
         Shard {
-            session,
             inbox: Vec::new(),
             outbox: Vec::new(),
-            counters: vec![(0, 0); n_tenants],
+            counters: vec![(0, 0); tenants.len()],
+            ctxs,
+            x: Vec::new(),
+            logits: Vec::new(),
+            scratch: Vec::new(),
+            xt_pool: Vec::new(),
             error: None,
         }
+    }
+
+    /// `(plan_builds, plan_reuses)` summed over this shard's tenant
+    /// contexts.
+    fn plan_counters(&self) -> (u64, u64) {
+        self.ctxs.iter().fold((0, 0), |(b, r), c| (b + c.plan_builds, r + c.plan_reuses))
     }
 
     /// Execute every batch in the inbox (called from the parallel
@@ -75,7 +121,8 @@ impl Shard {
     }
 
     /// Run one tenant batch: pad rows to the kernel granularity, one
-    /// forward pass, slice the logical rows back out.
+    /// forward pass on the tenant's persistent context and the shard's
+    /// reused buffers, slice the logical rows back out.
     fn execute(
         &mut self,
         tenant: &Tenant,
@@ -87,7 +134,8 @@ impl Shard {
         let size = batch.len();
         let rows = pad_rows(size);
         let in_dim = model.in_dim();
-        let mut x = vec![0f64; rows * in_dim];
+        self.x.clear();
+        self.x.resize(rows * in_dim, 0f64);
         for (i, r) in batch.iter().enumerate() {
             ensure!(
                 r.features.len() == in_dim,
@@ -96,13 +144,13 @@ impl Shard {
                 tenant.name,
                 r.features.len()
             );
-            x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&r.features);
+            self.x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&r.features);
         }
-        let session = self.session;
-        let mut ctx = GemmCtx::new(&session, model.policy().acc);
-        let logits = model.forward(&mut ctx, &x, rows)?;
-        self.counters[t].0 += ctx.calls;
-        self.counters[t].1 += ctx.packed;
+        let ctx = &mut self.ctxs[t];
+        model.forward_into(ctx, &self.x, rows, &mut self.logits, &mut self.scratch, &mut self.xt_pool)?;
+        let (calls, packed) = ctx.take_counters();
+        self.counters[t].0 += calls;
+        self.counters[t].1 += packed;
         let w = model.out_dim();
         let classes = model.classes();
         // Results are ready one service quantum after dispatch; the
@@ -112,7 +160,7 @@ impl Shard {
             .into_iter()
             .enumerate()
             .map(|(i, r)| {
-                let row = logits[i * w..(i + 1) * w].to_vec();
+                let row = self.logits[i * w..(i + 1) * w].to_vec();
                 let pred = row[..classes]
                     .iter()
                     .enumerate()
@@ -161,9 +209,10 @@ impl Server {
         n_shards: usize,
     ) -> Self {
         let n_tenants = tenants.len();
+        let shards = (0..n_shards).map(|_| Shard::new(session, &tenants, &policy)).collect();
         Server {
             queues: (0..n_tenants).map(|_| TenantQueue::new()).collect(),
-            shards: (0..n_shards).map(|_| Shard::new(session, n_tenants)).collect(),
+            shards,
             stats: ServeStats::new(n_tenants),
             tenants,
             policy,
@@ -200,6 +249,20 @@ impl Server {
     /// Shards in the pool.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// `(plan_builds, plan_reuses)` summed over every shard's
+    /// per-tenant contexts — how many GEMM executions compiled a plan
+    /// instance vs reused one. After the warm-up shapes are covered,
+    /// builds stay flat while reuses track traffic (asserted by tests;
+    /// intentionally *not* part of [`ServeStats::summary_json`], since
+    /// builds scale with the shard count while the stats JSON is
+    /// pinned shard-count independent).
+    pub fn plan_counters(&self) -> (u64, u64) {
+        self.shards.iter().fold((0, 0), |(b, r), s| {
+            let (sb, sr) = s.plan_counters();
+            (b + sb, r + sr)
+        })
     }
 
     /// Enqueue a request for `tenant`, due `deadline_in` ticks from now
@@ -262,7 +325,34 @@ impl Server {
         if any {
             let tenants: &[Tenant] = &self.tenants;
             let now = self.now;
-            par_chunks_mut(&mut self.shards, 1, |_, s| s[0].run_inbox(tenants, now));
+            // The shard fan-out runs on per-tick scoped threads, NOT on
+            // the executor pool: pool workers run nested dispatch
+            // inline, so parking shards on the pool would serialize
+            // every GEMM inside a shard and idle the remaining cores
+            // whenever shards < cores. Scoped threads here are control
+            // plane (at most `shards` spawns per dispatching tick);
+            // each shard re-pins the *ambient* dispatch mode before its
+            // GEMMs, so production stays on the persistent pool and a
+            // caller-pinned mode (the differential tests, a sanitizer
+            // run under Serial) governs the in-shard numerics even
+            // across the spawn boundary. The Scoped override applies
+            // only when the fan-out will actually spawn — an inline
+            // fan-out (one shard, or a 1-wide budget) must not be
+            // kicked back onto per-call thread churn.
+            use crate::util::parallel::{dispatch_mode, with_dispatch, worker_count, Dispatch};
+            let ambient = dispatch_mode();
+            let fanout = |shards: &mut [Shard]| {
+                par_chunks_mut(shards, 1, |_, s| {
+                    with_dispatch(ambient, || s[0].run_inbox(tenants, now))
+                });
+            };
+            // An ambient Serial pin means "single-threaded, period"
+            // (bisecting, sanitizers): honor it instead of spawning.
+            if self.shards.len() > 1 && worker_count() > 1 && ambient != Dispatch::Serial {
+                with_dispatch(Dispatch::Scoped, || fanout(&mut self.shards));
+            } else {
+                fanout(&mut self.shards);
+            }
             for shard in &mut self.shards {
                 if let Some(e) = shard.error.take() {
                     return Err(e);

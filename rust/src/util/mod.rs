@@ -11,8 +11,11 @@
 //! * [`prop`] — a tiny property-testing driver: run a closure over N
 //!   seeded random cases and report the failing seed on panic.
 //! * [`cli`] — flag/option parsing for the `repro` binary.
-//! * [`parallel`] — scoped-thread chunk parallelism for the batch
-//!   numerics engine ([`crate::batch`]).
+//! * [`parallel`] — the persistent worker-pool executor
+//!   ([`parallel::Executor`]) behind the batch numerics engine
+//!   ([`crate::batch`]), with `par_chunks_mut` as the chunked
+//!   data-parallel shim over it (legacy scoped-thread and serial
+//!   backends kept for differential testing).
 //! * [`error`] — `anyhow`-style `Result`/`Context`/`ensure!`/`bail!`.
 
 pub mod bench;

@@ -1,34 +1,75 @@
-//! Scoped-thread data parallelism (rayon is unavailable offline).
+//! The parallel execution substrate: a persistent worker pool
+//! ([`Executor`]) with the original chunked data-parallel primitive
+//! ([`par_chunks_mut`]) as a thin shim over it.
 //!
-//! One primitive is enough for the batch numerics engine:
-//! [`par_chunks_mut`] splits a mutable slice into fixed-size chunks and
-//! fans contiguous chunk ranges out over `std::thread::scope` workers.
-//! Each chunk is processed by exactly one worker, so the result is
-//! deterministic and independent of the thread count — the batch GEMM
-//! relies on that to stay bit-identical to the serial reference.
+//! The paper's cluster keeps its eight cores and their TCDM hot across
+//! an entire GEMM stream; the software analogue is a **long-lived
+//! executor**. Early revisions spawned fresh `std::thread::scope`
+//! workers on every call, which taxed the hottest paths (nn training
+//! steps, serve dispatches) with thread churn. Now a process-wide pool
+//! of workers ([`Executor::global`]) is spawned once and fed chunk
+//! spans over channels; `par_chunks_mut` keeps its exact contract:
+//!
+//! * each chunk is processed by exactly one worker and `f` receives the
+//!   **global** chunk index, so results are deterministic and
+//!   bit-identical at any worker count and under any dispatch backend
+//!   (pinned by the differential tests below);
+//! * spans are balanced on chunk boundaries — worker `t` gets
+//!   `base + (t < n_chunks % threads)` chunks, so no worker idles while
+//!   another holds two spare chunks (the old ceil-split could leave
+//!   trailing workers with zero chunks);
+//! * a dispatch **nested inside a pool worker runs inline** on that
+//!   worker (no cross-worker waiting, hence no pool deadlock); the
+//!   outermost fan-out owns the parallelism.
 //!
 //! Worker count defaults to `std::thread::available_parallelism()`;
-//! `MINIFLOAT_NN_THREADS=1` forces serial execution (useful when
-//! bisecting or benchmarking the single-core path).
+//! `MINIFLOAT_NN_THREADS` (read **once** per process, then cached)
+//! overrides it, and [`with_worker_count`] scopes a thread-local
+//! override per session. The legacy per-call scoped-thread backend
+//! survives as [`Dispatch::Scoped`] for differential tests and the
+//! steady-state benchmarks' allocate-per-call baseline.
 
 use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Mutex, OnceLock};
 
 thread_local! {
     /// Per-thread worker-count override (see [`with_worker_count`]).
     static WORKER_OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+    /// Per-thread dispatch-backend override (see [`with_dispatch`]).
+    static DISPATCH_OVERRIDE: Cell<Option<Dispatch>> = const { Cell::new(None) };
+    /// Id of the [`Executor`] pool owning this thread, if any — tagged
+    /// per pool so dispatching onto a *different* (idle) pool from a
+    /// worker still parallelizes; only a same-pool nested dispatch
+    /// inlines.
+    static POOL_WORKER_OF: Cell<Option<usize>> = const { Cell::new(None) };
 }
 
-/// Number of worker threads to use.
+/// Process-default worker count: the `MINIFLOAT_NN_THREADS` env var if
+/// set and parseable, else `available_parallelism()`. The env var is
+/// read **once** and cached — it used to be re-parsed on every call,
+/// on the hottest dispatch path.
+fn default_worker_count() -> usize {
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("MINIFLOAT_NN_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Number of worker spans a dispatch fans out to: the thread-local
+/// override if one is active, else the cached process default.
 pub fn worker_count() -> usize {
     if let Some(n) = WORKER_OVERRIDE.with(|c| c.get()) {
         return n.max(1);
     }
-    if let Ok(v) = std::env::var("MINIFLOAT_NN_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    default_worker_count()
 }
 
 /// Run `f` with the worker count pinned to `n` on this thread (and any
@@ -36,6 +77,10 @@ pub fn worker_count() -> usize {
 /// `MINIFLOAT_NN_THREADS` env var this is scoped and thread-local, so a
 /// `Session` thread budget cannot race with other sessions in the same
 /// process. The previous override is restored even if `f` panics.
+///
+/// Budget semantics are unchanged from the scoped-thread era: `n` caps
+/// the number of *spans* a dispatch splits into (and therefore the
+/// concurrency), and results are bit-identical at any value.
 pub fn with_worker_count<R>(n: usize, f: impl FnOnce() -> R) -> R {
     struct Restore(Option<usize>);
     impl Drop for Restore {
@@ -47,9 +92,316 @@ pub fn with_worker_count<R>(n: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+// ------------------------------------------------------------ dispatch
+
+/// Which backend executes a [`par_chunks_mut`] fan-out. All three run
+/// the same balanced span split and hand `f` the same global chunk
+/// indices, so they are bit-identical by construction (and pinned so
+/// by tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// The persistent process pool ([`Executor::global`]) — the default.
+    Pool,
+    /// Legacy behaviour: fresh `std::thread::scope` workers per call.
+    /// Kept as the differential-test reference and the benchmarks'
+    /// allocate-per-call baseline.
+    Scoped,
+    /// Run every chunk inline on the calling thread.
+    Serial,
+}
+
+/// The dispatch backend active on this thread (default [`Dispatch::Pool`]).
+pub fn dispatch_mode() -> Dispatch {
+    DISPATCH_OVERRIDE.with(|c| c.get()).unwrap_or(Dispatch::Pool)
+}
+
+/// Run `f` with the dispatch backend pinned on this thread; restored
+/// on exit (even across panics). Exists for differential tests and
+/// benchmarks — production code leaves the default pool in place.
+pub fn with_dispatch<R>(d: Dispatch, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Dispatch>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            DISPATCH_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = Restore(DISPATCH_OVERRIDE.with(|c| c.replace(Some(d))));
+    f()
+}
+
+// ------------------------------------------------------------ executor
+
+/// One unit of pool work: a type-erased task executed for a strided
+/// set of span indices, with a completion channel back to the
+/// dispatcher.
+struct Job {
+    /// Lifetime-erased `&(dyn Fn(usize) + Sync)`. Valid for the whole
+    /// job: [`Executor::run`] blocks until every job has reported
+    /// completion before returning (or unwinding).
+    task: *const (dyn Fn(usize) + Sync),
+    start: usize,
+    stride: usize,
+    count: usize,
+    done: Sender<std::thread::Result<()>>,
+}
+
+// SAFETY: the raw task pointer is only dereferenced while the
+// dispatching `Executor::run` frame is alive (it joins on `done`
+// messages before returning), and the pointee is `Sync`.
+unsafe impl Send for Job {}
+
+fn worker_loop(rx: Receiver<Job>, pool_id: usize) {
+    POOL_WORKER_OF.with(|f| f.set(Some(pool_id)));
+    while let Ok(job) = rx.recv() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: see `Job::task` — the dispatcher keeps the task
+            // alive until this job's completion message is received.
+            let task = unsafe { &*job.task };
+            let mut i = job.start;
+            for _ in 0..job.count {
+                task(i);
+                i += job.stride;
+            }
+        }));
+        let _ = job.done.send(result);
+    }
+}
+
+/// A persistent pool of worker threads fed over channels — the
+/// process-wide execution substrate behind [`par_chunks_mut`].
+///
+/// Workers are spawned once and live for the pool's lifetime (the
+/// global pool's lifetime is the process); a dispatch sends each used
+/// worker one `Job` and blocks until all jobs report back, so
+/// borrowed data outlives every access. Panics inside a task are
+/// caught on the worker, forwarded, and re-raised on the dispatching
+/// thread after the barrier — a panicking task cannot poison the pool.
+#[derive(Debug)]
+pub struct Executor {
+    senders: Vec<Mutex<Sender<Job>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Unique pool id (for same-pool nested-dispatch detection).
+    id: usize,
+    /// Rotating placement offset: concurrent dispatchers whose span
+    /// counts are below the pool size start at different workers
+    /// instead of piling onto workers `0..used` while the tail of the
+    /// pool idles. Placement never affects results (chunk indices are
+    /// global), only load spread.
+    next: AtomicUsize,
+}
+
+impl Executor {
+    /// Spawn a dedicated pool with `workers` threads (clamped to ≥ 1).
+    /// Dropping the pool closes the channels and joins the threads.
+    pub fn new(workers: usize) -> Executor {
+        static NEXT_POOL_ID: AtomicUsize = AtomicUsize::new(0);
+        let id = NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed);
+        let workers = workers.max(1);
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            senders.push(Mutex::new(tx));
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mfnn-pool-{i}"))
+                    .spawn(move || worker_loop(rx, id))
+                    .expect("spawning an executor pool worker"),
+            );
+        }
+        Executor { senders, handles, id, next: AtomicUsize::new(0) }
+    }
+
+    /// The shared process pool, spawned lazily on first use and sized
+    /// by the cached default worker count. Session thread budgets do
+    /// not resize it — they cap how many spans a dispatch uses.
+    pub fn global() -> &'static Executor {
+        static GLOBAL: OnceLock<Executor> = OnceLock::new();
+        GLOBAL.get_or_init(|| Executor::new(default_worker_count()))
+    }
+
+    /// Worker threads in this pool.
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Execute `task(i)` exactly once for every `i in 0..spans`,
+    /// fanning the indices out over the pool (span `i` runs on worker
+    /// `i % used`, strided, so `spans` may exceed the pool size — e.g.
+    /// a thread budget wider than the machine). Runs inline when there
+    /// is one span or when already on one of **this pool's own**
+    /// workers (same-pool nested dispatch — the deadlock case; a
+    /// different pool's worker may dispatch here in parallel freely).
+    /// Blocks until every span completed; re-raises the first task
+    /// panic after the barrier.
+    ///
+    /// Dispatch cost per call: one completion channel plus one `Job`
+    /// per used worker — a few small allocations, noise next to the
+    /// per-call `thread::scope` spawns this pool replaces (a reusable
+    /// countdown barrier could remove even that if it ever shows up in
+    /// a profile).
+    pub fn run(&self, spans: usize, task: &(dyn Fn(usize) + Sync)) {
+        if spans == 0 {
+            return;
+        }
+        if spans == 1 || POOL_WORKER_OF.with(|f| f.get()) == Some(self.id) {
+            for i in 0..spans {
+                task(i);
+            }
+            return;
+        }
+        let used = self.size().min(spans);
+        let (done_tx, done_rx) = channel();
+        // SAFETY: pure lifetime erasure of a fat pointer; the barrier
+        // below guarantees this frame never unwinds or returns while a
+        // dispatched job might still dereference it — even if the
+        // dispatch loop itself panics mid-way (the guard drains a
+        // completion message for every job already sent).
+        let task_ptr: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+        struct Barrier<'a> {
+            rx: &'a Receiver<std::thread::Result<()>>,
+            outstanding: usize,
+            tx: Option<Sender<std::thread::Result<()>>>,
+        }
+        impl Drop for Barrier<'_> {
+            fn drop(&mut self) {
+                self.tx.take();
+                while self.outstanding > 0 {
+                    // Every sent job sends exactly one message (the
+                    // worker's catch_unwind guarantees it); an Err here
+                    // means every sender is gone, i.e. nothing still
+                    // runs.
+                    if self.rx.recv().is_err() {
+                        break;
+                    }
+                    self.outstanding -= 1;
+                }
+            }
+        }
+        let mut barrier = Barrier { rx: &done_rx, outstanding: 0, tx: Some(done_tx) };
+        // Rotate the placement start so concurrent small dispatches
+        // spread over the whole pool.
+        let base = self.next.fetch_add(used, Ordering::Relaxed);
+        for t in 0..used {
+            let done = barrier.tx.as_ref().expect("sender live during dispatch").clone();
+            let job = Job {
+                task: task_ptr,
+                start: t,
+                stride: used,
+                count: (spans - t + used - 1) / used,
+                done,
+            };
+            self.senders[(base + t) % self.size()]
+                .lock()
+                .expect("executor sender lock")
+                .send(job)
+                .expect("executor worker channel closed");
+            barrier.outstanding += 1;
+        }
+        // Close our sender so a worker disappearance is observable as a
+        // channel disconnect below.
+        barrier.tx.take();
+        let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        while barrier.outstanding > 0 {
+            match barrier.rx.recv() {
+                Ok(r) => {
+                    barrier.outstanding -= 1;
+                    if let Err(p) = r {
+                        if first_panic.is_none() {
+                            first_panic = Some(p);
+                        }
+                    }
+                }
+                // A worker vanished mid-job (it cannot panic out of
+                // `worker_loop`, so this is defensive): every sender is
+                // gone, so no job is still running.
+                Err(_) => {
+                    barrier.outstanding = 0;
+                    if first_panic.is_none() {
+                        first_panic = Some(Box::new("executor worker disappeared mid-job"));
+                    }
+                }
+            }
+        }
+        if let Some(p) = first_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        // Closing the channels ends each worker's recv loop; then join.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A `Copy` pairing of the process pool with an optional thread
+/// budget — what an [`crate::api::Session`] owns. The budget caps how
+/// many spans a dispatch under [`ExecutorHandle::scoped`] fans out to;
+/// it never resizes the pool, and results are bit-identical at any
+/// value (the same determinism contract as the scoped-thread era).
+/// The shared pool is resolved **lazily**: constructing a handle and
+/// running work under [`ExecutorHandle::scoped`] never spawn threads
+/// themselves (the first actual parallel dispatch does); only the
+/// pool-introspecting accessors ([`ExecutorHandle::pool`], and
+/// [`ExecutorHandle::workers`] on a budget-less handle) force the
+/// spawn.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecutorHandle {
+    budget: Option<usize>,
+}
+
+impl ExecutorHandle {
+    /// A handle on the global pool with the given budget (`None` = all
+    /// pool workers).
+    pub fn with_budget(budget: Option<usize>) -> ExecutorHandle {
+        ExecutorHandle { budget }
+    }
+
+    /// The pool this handle dispatches on (spawned on first resolve).
+    pub fn pool(&self) -> &'static Executor {
+        Executor::global()
+    }
+
+    /// The configured budget (`None` = all pool workers).
+    pub fn budget(&self) -> Option<usize> {
+        self.budget
+    }
+
+    /// Worker spans a dispatch under this handle fans out to.
+    pub fn workers(&self) -> usize {
+        self.budget.map(|n| n.max(1)).unwrap_or_else(|| Executor::global().size())
+    }
+
+    /// Run `f` with [`worker_count`] pinned to the handle's budget
+    /// (no-op when the budget is unset).
+    pub fn scoped<R>(&self, f: impl FnOnce() -> R) -> R {
+        match self.budget {
+            Some(n) => with_worker_count(n, f),
+            None => f(),
+        }
+    }
+}
+
+// ------------------------------------------------------ par_chunks_mut
+
+/// Chunks assigned to worker `t` under the balanced split: the first
+/// `n_chunks % threads` workers take one extra chunk, so span sizes
+/// differ by at most one and every worker has work.
+fn span_chunks(n_chunks: usize, threads: usize, t: usize) -> usize {
+    n_chunks / threads + usize::from(t < n_chunks % threads)
+}
+
 /// Apply `f(chunk_index, chunk)` to consecutive `chunk_len`-sized chunks
 /// of `data` (the last chunk may be shorter), distributing contiguous
-/// chunk ranges across worker threads.
+/// balanced chunk spans across workers. A thin shim over the process
+/// [`Executor`] (or the legacy backends under [`with_dispatch`]): each
+/// chunk is processed exactly once with its global index, so the result
+/// is bit-identical across worker counts and backends.
 pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(data: &mut [T], chunk_len: usize, f: F) {
     assert!(chunk_len > 0, "chunk_len must be positive");
     if data.is_empty() {
@@ -57,25 +409,74 @@ pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(data: &mut [T], ch
     }
     let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
     let threads = worker_count().min(n_chunks);
-    if threads <= 1 {
+    let mode = dispatch_mode();
+    if threads <= 1 || mode == Dispatch::Serial {
         for (i, c) in data.chunks_mut(chunk_len).enumerate() {
             f(i, c);
         }
         return;
     }
-    // Split on chunk boundaries into one contiguous span per worker.
-    let chunks_per_worker = (n_chunks + threads - 1) / threads;
-    let span = chunks_per_worker * chunk_len;
-    std::thread::scope(|s| {
-        for (t, part) in data.chunks_mut(span).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                for (j, c) in part.chunks_mut(chunk_len).enumerate() {
-                    f(t * chunks_per_worker + j, c);
+    match mode {
+        // Serial already returned via the early inline branch above.
+        Dispatch::Serial => unreachable!("serial dispatch is handled by the inline early return"),
+        Dispatch::Scoped => {
+            // Legacy backend: one scope-spawned worker per span.
+            std::thread::scope(|s| {
+                let mut rest = data;
+                let mut first = 0usize;
+                for t in 0..threads {
+                    let n = span_chunks(n_chunks, threads, t);
+                    let take = (n * chunk_len).min(rest.len());
+                    let (part, r) = rest.split_at_mut(take);
+                    rest = r;
+                    let f = &f;
+                    let start = first;
+                    s.spawn(move || {
+                        for (j, c) in part.chunks_mut(chunk_len).enumerate() {
+                            f(start + j, c);
+                        }
+                    });
+                    first += n;
                 }
             });
         }
-    });
+        Dispatch::Pool => {
+            // Pre-split into balanced disjoint spans, then hand span
+            // indices to the pool.
+            struct Span<T> {
+                first: usize,
+                ptr: *mut T,
+                len: usize,
+            }
+            // SAFETY: spans are disjoint sub-slices of `data`, and the
+            // executor runs each span index exactly once per dispatch.
+            unsafe impl<T: Send> Send for Span<T> {}
+            unsafe impl<T: Send> Sync for Span<T> {}
+            let mut spans = Vec::with_capacity(threads);
+            {
+                let mut rest = &mut *data;
+                let mut first = 0usize;
+                for t in 0..threads {
+                    let n = span_chunks(n_chunks, threads, t);
+                    let take = (n * chunk_len).min(rest.len());
+                    let (part, r) = rest.split_at_mut(take);
+                    rest = r;
+                    spans.push(Span { first, ptr: part.as_mut_ptr(), len: part.len() });
+                    first += n;
+                }
+            }
+            let spans = &spans;
+            let f = &f;
+            Executor::global().run(threads, &|t: usize| {
+                let sp = &spans[t];
+                // SAFETY: disjoint spans, each index executed once.
+                let part = unsafe { std::slice::from_raw_parts_mut(sp.ptr, sp.len) };
+                for (j, c) in part.chunks_mut(chunk_len).enumerate() {
+                    f(sp.first + j, c);
+                }
+            });
+        }
+    }
 }
 
 #[cfg(test)]
@@ -134,5 +535,164 @@ mod tests {
             c[0] = 9;
         });
         assert_eq!(one, vec![9]);
+    }
+
+    /// Child half of `env_var_is_read_once_and_cached`: a no-op in the
+    /// normal run; under the probe marker it asserts the cache. It runs
+    /// in a `--test-threads=1` subprocess, so the mid-process
+    /// `set_var` below cannot race another test thread's `getenv`
+    /// (the reason the parent spawns it instead of mutating the env
+    /// in the shared harness process).
+    #[test]
+    fn env_cache_child_probe() {
+        let Some(marker) = std::env::var_os("MFNN_ENV_CACHE_PROBE") else {
+            return;
+        };
+        let expect: usize = marker.to_str().expect("utf-8 marker").parse().expect("numeric marker");
+        assert_eq!(worker_count(), expect, "preset MINIFLOAT_NN_THREADS must be honored at first read");
+        std::env::set_var("MINIFLOAT_NN_THREADS", (expect + 1).to_string());
+        assert_eq!(
+            worker_count(),
+            expect,
+            "worker_count must cache the env var at first read, not re-parse it"
+        );
+        std::env::remove_var("MINIFLOAT_NN_THREADS");
+        assert_eq!(worker_count(), expect);
+        // The thread-local override still wins over the cache.
+        assert_eq!(with_worker_count(expect + 2, worker_count), expect + 2);
+    }
+
+    /// Regression (the env var used to be re-parsed on every call):
+    /// changing `MINIFLOAT_NN_THREADS` after the first read must not
+    /// change the cached default. Drives the single-threaded child
+    /// probe above.
+    #[test]
+    fn env_var_is_read_once_and_cached() {
+        let exe = std::env::current_exe().expect("test executable path");
+        let out = std::process::Command::new(exe)
+            .args(["--exact", "util::parallel::tests::env_cache_child_probe", "--test-threads=1"])
+            .env("MFNN_ENV_CACHE_PROBE", "3")
+            .env("MINIFLOAT_NN_THREADS", "3")
+            .output()
+            .expect("spawning the env-cache child probe");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        assert!(
+            out.status.success(),
+            "child probe failed\nstdout: {stdout}\nstderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        // Guard against a vacuous pass from a filter mismatch: the
+        // probe must actually have run.
+        assert!(stdout.contains("1 passed"), "child probe did not run:\n{stdout}");
+    }
+
+    /// Regression for the span split: the old ceil-split could leave
+    /// trailing workers with zero chunks when `n_chunks % threads != 0`.
+    #[test]
+    fn span_split_is_balanced_on_chunk_boundaries() {
+        for threads in 1..=8usize {
+            for n_chunks in threads..=24 {
+                let sizes: Vec<usize> = (0..threads).map(|t| span_chunks(n_chunks, threads, t)).collect();
+                assert_eq!(sizes.iter().sum::<usize>(), n_chunks, "{threads} workers, {n_chunks} chunks");
+                assert!(sizes.iter().all(|&s| s >= 1), "idle worker in {sizes:?}");
+                let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "unbalanced spans {sizes:?}");
+            }
+        }
+    }
+
+    fn checkerboard(n: usize, chunk: usize) -> Vec<u64> {
+        let mut v = vec![0u64; n];
+        par_chunks_mut(&mut v, chunk, |idx, c| {
+            for (off, x) in c.iter_mut().enumerate() {
+                *x = (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ off as u64;
+            }
+        });
+        v
+    }
+
+    /// Determinism across worker counts {1, 3, 4, 7} and across all
+    /// three dispatch backends, on a chunk count that divides by none
+    /// of them.
+    #[test]
+    fn worker_counts_and_backends_are_bit_identical() {
+        let want = with_worker_count(1, || checkerboard(1003, 16));
+        for workers in [1usize, 3, 4, 7] {
+            for mode in [Dispatch::Pool, Dispatch::Scoped, Dispatch::Serial] {
+                let got =
+                    with_worker_count(workers, || with_dispatch(mode, || checkerboard(1003, 16)));
+                assert_eq!(got, want, "{workers} workers, {mode:?} backend diverged");
+            }
+        }
+    }
+
+    /// A thread budget wider than the pool must still run every span.
+    #[test]
+    fn budget_wider_than_pool_is_fine() {
+        let small = Executor::new(2);
+        let hits = std::sync::Mutex::new(vec![0u32; 7]);
+        small.run(7, &|i| hits.lock().unwrap()[i] += 1);
+        assert_eq!(*hits.lock().unwrap(), vec![1u32; 7]);
+    }
+
+    /// Nested dispatch from inside a pool worker runs inline (no
+    /// deadlock) and still covers every chunk exactly once.
+    #[test]
+    fn nested_dispatch_is_inline_and_correct() {
+        let mut outer = vec![vec![0u64; 65]; 6];
+        par_chunks_mut(&mut outer, 1, |_, rows| {
+            for row in rows {
+                par_chunks_mut(row, 8, |idx, c| {
+                    for (off, x) in c.iter_mut().enumerate() {
+                        *x += (idx * 8 + off) as u64 + 1;
+                    }
+                });
+            }
+        });
+        for row in &outer {
+            for (i, &x) in row.iter().enumerate() {
+                assert_eq!(x, i as u64 + 1);
+            }
+        }
+    }
+
+    /// A panicking task propagates to the dispatcher and the pool stays
+    /// usable afterwards.
+    #[test]
+    fn pool_survives_task_panics() {
+        let result = std::panic::catch_unwind(|| {
+            let mut v = vec![0u8; 64];
+            with_worker_count(4, || {
+                par_chunks_mut(&mut v, 8, |idx, _| {
+                    if idx == 5 {
+                        panic!("boom");
+                    }
+                });
+            });
+        });
+        assert!(result.is_err(), "task panic must propagate");
+        // The pool still works.
+        let mut v = vec![0u64; 64];
+        with_worker_count(4, || {
+            par_chunks_mut(&mut v, 8, |idx, c| {
+                for (off, x) in c.iter_mut().enumerate() {
+                    *x = (idx * 8 + off) as u64;
+                }
+            });
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u64);
+        }
+    }
+
+    /// The session-facing handle: budget caps spans, `None` means the
+    /// whole pool, and `scoped` pins the thread-local count.
+    #[test]
+    fn executor_handle_honors_budget() {
+        let h = ExecutorHandle::with_budget(Some(3));
+        assert_eq!(h.workers(), 3);
+        assert_eq!(h.scoped(worker_count), 3);
+        let all = ExecutorHandle::with_budget(None);
+        assert_eq!(all.workers(), Executor::global().size());
     }
 }
