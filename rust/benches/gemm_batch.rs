@@ -21,7 +21,16 @@
 //! threads per call — the pre-executor behaviour). The reusable path
 //! must be ≥ 1.5× faster; small GEMMs are exactly where per-call
 //! thread churn and allocator traffic used to dominate.
+//!
+//! A third set of points measures the **lane tiers at scale**:
+//! 512×512×512 GEMMs (FP8→FP16 and FP16→FP32) through a bound
+//! `PlanInstance` on the SWAR tier (lane-parallel kernels +
+//! cache-blocked tiling — the production default) vs the pinned scalar
+//! reference tier (`with_lane_tier`). Bit-identity between the tiers is
+//! asserted before timing; the FP8→FP16 point carries a **CI-blocking
+//! ≥ 2× speedup gate** (best-of-3 wall times, like the reuse gate).
 
+use minifloat_nn::batch::{with_lane_tier, LaneTier};
 use minifloat_nn::isa::instr::OpWidth;
 use minifloat_nn::kernels::kernel_reference;
 use minifloat_nn::prelude::*;
@@ -99,6 +108,101 @@ fn main() {
     }
 
     small_gemm_steady_state(&session, ts);
+    large_shape_points(&session, ts);
+}
+
+/// Large-shape lane-tier points: SWAR (default, blocked) vs the scalar
+/// reference tier at 512³. FP8→FP16 is the gated headline (SWAR must
+/// win by ≥ 2×); FP16→FP32 is a trajectory point for the wider-lane
+/// pair. Returns nothing — panics if the gate fails (CI-blocking).
+fn large_shape_points(session: &Session, ts: u64) {
+    println!("\n== large-shape lane tiers (512x512x512, SWAR vs scalar reference) ==");
+    let s8 = large_tier_point(session, ts, FP8, FP16, "gemm_large_fp8_fp16_512", Some(2.0));
+    let s16 = large_tier_point(session, ts, FP16, FP32, "gemm_large_fp16_fp32_512", None);
+    println!("tier speedups: FP8->FP16 {s8:.2}x (gate >= 2x), FP16->FP32 {s16:.2}x (advisory)");
+    assert!(
+        s8 >= 2.0,
+        "SWAR tier must beat the scalar tier by >= 2x on FP8->FP16 at 512^3 (got {s8:.2}x) — \
+         the lane-parallel kernels' reason to exist"
+    );
+    println!("SWAR gate passed: {s8:.1}x >= 2x ✓");
+}
+
+/// One tier-comparison point: bind a 512³ problem into a `PlanInstance`
+/// (packed zero-repack route, blocking precompiled), assert the tiers
+/// bit-identical, then best-of-3 the wall time of each tier. Appends a
+/// trajectory point and returns the SWAR-over-scalar speedup.
+fn large_tier_point(
+    session: &Session,
+    ts: u64,
+    src: FpFormat,
+    acc: FpFormat,
+    label: &str,
+    gate: Option<f64>,
+) -> f64 {
+    let (m, n, k) = (512usize, 512, 512);
+    let mut rng = session.rng();
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    let plan = session.gemm().src(src).acc(acc).dims(m, n, k).expect("valid plan");
+    let flops = plan.kernel().flops() as f64;
+    let ta = session.tensor(&a, m, k, src).expect("tensor A");
+    let tb = session.tensor_with_layout(&b, k, n, src, Layout::ColMajor).expect("tensor B");
+    let mut inst = plan.instance();
+    inst.bind_a(&ta).expect("bind A");
+    inst.bind_b(&tb).expect("bind B");
+    let mut out = Vec::new();
+
+    // Bit-identity gate before timing: the SWAR tier (blocked) must
+    // reproduce the scalar reference tier exactly.
+    inst.run_bound(&mut out).expect("run");
+    let swar_c = out.clone();
+    with_lane_tier(LaneTier::Scalar, || inst.run_bound(&mut out).expect("run"));
+    let identical = swar_c
+        .iter()
+        .zip(&out)
+        .all(|(w, g)| w.to_bits() == g.to_bits() || (w.is_nan() && g.is_nan()));
+    assert!(identical, "{label}: SWAR tier diverged from the scalar reference tier");
+    assert!(inst.packed_runs() == inst.runs(), "large-shape points must ride the packed route");
+
+    // Best-of-3 single-shot wall times per tier (the problem is large
+    // enough that one run is a stable sample; best-of-N absorbs shared
+    // CI runner jitter, as in the reuse gate).
+    let (mut scalar_s, mut swar_s) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        with_lane_tier(LaneTier::Scalar, || inst.run_bound(&mut out).expect("run"));
+        scalar_s = scalar_s.min(t0.elapsed().as_secs_f64());
+        let t0 = std::time::Instant::now();
+        inst.run_bound(&mut out).expect("run");
+        swar_s = swar_s.min(t0.elapsed().as_secs_f64());
+    }
+    let speedup = scalar_s / swar_s;
+    println!(
+        "{}->{} {m}x{n}x{k}: scalar {:.1} ms   swar {:.1} ms   speedup {speedup:.2}x   {:.3} GFLOPS",
+        src.name(),
+        acc.name(),
+        scalar_s * 1e3,
+        swar_s * 1e3,
+        flops / swar_s / 1e9,
+    );
+    let json = format!(
+        "{{\"bench\":\"{label}\",\"unix_time\":{ts},\
+         \"scalar_ms\":{:.3},\"swar_ms\":{:.3},\"swar_speedup\":{speedup:.2},\
+         \"gflops_swar\":{:.3},\"gate\":{},\"bit_identical\":true,\"api\":\"plan_instance\"}}\n",
+        scalar_s * 1e3,
+        swar_s * 1e3,
+        flops / swar_s / 1e9,
+        gate.map_or("null".to_string(), |g| format!("{g:.1}")),
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open("BENCH_gemm.json") {
+        Ok(mut f) => {
+            let _ = f.write_all(json.as_bytes());
+            println!("large-shape point appended to BENCH_gemm.json");
+        }
+        Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
+    }
+    speedup
 }
 
 /// Steady-state small-GEMM point + the CI-blocking reuse gate: on a

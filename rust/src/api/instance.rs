@@ -20,7 +20,7 @@
 use super::plan::transpose_f64_into;
 use super::session::Session;
 use super::tensor::{expect_fmt, Layout, MfTensor};
-use crate::batch::{self, Workspace};
+use crate::batch::{self, BlockPlan, Workspace};
 use crate::core::CoreStats;
 use crate::formats::FpFormat;
 use crate::kernels::gemm::{ExecMode, GemmKernel};
@@ -61,6 +61,11 @@ pub struct PlanInstance {
     ta: bool,
     tb: bool,
     ws: Workspace,
+    /// Cache-blocking decision for the packed route, compiled once at
+    /// assembly time (the shape is fixed per instance) and replayed on
+    /// every run — blocking is bit-invisible, so this is purely a
+    /// skip-the-per-call-planning optimization.
+    block_plan: BlockPlan,
     a_bound: Option<MfTensor>,
     b_bound: Option<MfTensor>,
     /// Re-grid the decoded C onto the accumulation grid in place
@@ -82,6 +87,16 @@ impl PlanInstance {
         ta: bool,
         tb: bool,
     ) -> Self {
+        // The packed route streams k/lanes words per output element;
+        // non-paper source formats never reach it (gemm_packed_into
+        // misses), so a defensive simple plan covers lanes that do not
+        // divide k.
+        let lanes = src.lanes_in_64() as usize;
+        let block_plan = if lanes > 0 && kern.k % lanes == 0 {
+            BlockPlan::for_problem(kern.m, kern.n, kern.k / lanes)
+        } else {
+            BlockPlan::simple()
+        };
         PlanInstance {
             session,
             kern,
@@ -89,6 +104,7 @@ impl PlanInstance {
             acc,
             ta,
             tb,
+            block_plan,
             ws: Workspace::new(),
             a_bound: None,
             b_bound: None,
@@ -256,9 +272,10 @@ impl PlanInstance {
             let t0 = std::time::Instant::now();
             let rm = self.session.rounding();
             let (src, acc) = (self.src, self.acc);
-            let hit = self
-                .session
-                .scoped(|| batch::gemm_packed_into(src, acc, m, n, k, a.words(), b.words(), rm, out));
+            let plan = &self.block_plan;
+            let hit = self.session.scoped(|| {
+                batch::gemm_packed_planned_into(src, acc, plan, m, n, k, a.words(), b.words(), rm, out)
+            });
             if hit {
                 if self.regrid_output {
                     self.session.scoped(|| batch::regrid_in_place(acc, out, RoundingMode::Rne));

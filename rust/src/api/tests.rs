@@ -606,6 +606,31 @@ fn instance_bound_operands_match_unbound_runs() {
 }
 
 #[test]
+fn instance_lane_tiers_bit_identical_at_blocked_shape() {
+    // 32×128×512 FP8→FP16 crosses the BlockPlan threshold (wpr = 64,
+    // n·wpr = 8192), so the instance's packed route runs the SWAR tier
+    // cache-blocked; the pinned scalar tier through the same instance
+    // must reproduce it bit for bit.
+    use crate::batch::{with_lane_tier, BlockPlan, LaneTier};
+    let (m, n, k) = (32, 128, 512);
+    assert!(BlockPlan::for_problem(m, n, k / 8).blocked);
+    let session = Session::new();
+    let (a, b) = mats(m, n, k, 77);
+    let plan = session.gemm().src(FP8).acc(FP16).dims(m, n, k).unwrap();
+    let ta = session.tensor(&a, m, k, FP8).unwrap();
+    let tb = session.tensor_with_layout(&b, k, n, FP8, Layout::ColMajor).unwrap();
+    let mut inst = plan.instance();
+    inst.bind_a(&ta).unwrap();
+    inst.bind_b(&tb).unwrap();
+    let mut swar = Vec::new();
+    inst.run_bound(&mut swar).unwrap();
+    let mut scalar = Vec::new();
+    with_lane_tier(LaneTier::Scalar, || inst.run_bound(&mut scalar).unwrap());
+    assert_eq!(inst.packed_runs(), inst.runs(), "both runs must ride the packed route");
+    assert_eq!(bits_of(&swar), bits_of(&scalar));
+}
+
+#[test]
 fn session_executor_handle_reflects_thread_budget() {
     use crate::util::parallel::{worker_count, Executor};
     let narrow = Session::builder().threads(2).build();

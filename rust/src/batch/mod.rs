@@ -33,6 +33,33 @@
 //! recycled capacity only — it carries no numeric state, so reuse
 //! cannot change a single output bit (pinned by differential tests).
 //!
+//! ## Lane tiers and cache blocking
+//!
+//! The expanding GEMM core runs one of two **lane tiers** — selected
+//! here and nowhere else (layering rule: layers above `batch` never
+//! pick a tier, layers below never see one):
+//!
+//! * [`LaneTier::Swar`] (default) — the lane-parallel kernels of
+//!   [`crate::exsdotp::swar`]: packed operand panels are screened for
+//!   special lanes **once per GEMM** ([`slice_all_finite`]), then the
+//!   inner loop runs the all-finite SWAR datapath with only the
+//!   running accumulator re-screened per step;
+//! * [`LaneTier::Scalar`] — the untouched PR-5 per-lane path
+//!   ([`simd_exsdotp_m`] row loop), kept verbatim as the differential
+//!   and timing reference ([`with_lane_tier`] pins it for tests and
+//!   the bench speedup gates).
+//!
+//! Both tiers are bit-identical by construction (shared `round_pack`,
+//! specials routed to the scalar kernels) and pinned by differential
+//! tests here and in [`crate::exsdotp::swar`]. Large GEMMs additionally
+//! run **cache-blocked**: a [`BlockPlan`] tiles the output into
+//! `MC×NC` blocks streamed over `KC_WORDS`-word K-panels, with the
+//! packed-operand panels in [`Workspace`] (`pa`/`pb`) as the tile
+//! storage and a per-worker stack accumulator tile. The k-outer loop
+//! order folds each output's words in the identical ascending-k
+//! sequence, so blocking cannot change a single bit either —
+//! [`BlockPlan::for_problem`] only decides *when* it pays.
+//!
 //! This is the engine behind `ExecMode::Functional`
 //! ([`crate::kernels::gemm::ExecMode`]) and the accuracy-sweep fast
 //! path ([`crate::accuracy`]).
@@ -42,12 +69,15 @@ mod tests;
 
 use crate::exsdotp::fast::{simd_exsdotp_m, vsum_tree_m};
 use crate::exsdotp::simd::SimdExSdotp;
+use crate::exsdotp::swar::{swar_exsdotp_m, swar_exsdotp_operands_finite_m, vsum_tree_swar_m};
 use crate::formats::spec::{ExpandTo, FormatSpec, Fp16, Fp16alt, Fp32, Fp64, Fp8, Fp8alt};
 use crate::formats::FpFormat;
 use crate::kernels::gemm::GemmKind;
 use crate::softfloat::fast::{cast_m, fma_m, from_f64_m, to_f64_m};
+use crate::softfloat::swar::slice_all_finite;
 use crate::softfloat::{cast, from_f64, to_f64, RoundingMode};
 use crate::util::parallel::par_chunks_mut;
+use std::cell::Cell;
 
 /// Elements per parallel work chunk for flat slice operations.
 const CAST_CHUNK: usize = 8192;
@@ -86,6 +116,107 @@ macro_rules! with_spec {
             _ => {}
         }
     };
+}
+
+// ------------------------------------------------------------ lane tier
+
+/// Which per-register kernel implementation the expanding GEMM core
+/// runs. Tier selection happens in this module only; both tiers are
+/// bit-identical (differentially pinned), so the choice is purely a
+/// throughput knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneTier {
+    /// Lane-parallel SWAR kernels ([`crate::exsdotp::swar`]) — the
+    /// default.
+    Swar,
+    /// The per-lane scalar kernels ([`crate::exsdotp::fast`]) — the
+    /// differential / timing reference.
+    Scalar,
+}
+
+thread_local! {
+    /// Per-thread lane-tier override (see [`with_lane_tier`]).
+    static LANE_TIER_OVERRIDE: Cell<Option<LaneTier>> = const { Cell::new(None) };
+}
+
+/// The lane tier active on this thread (default [`LaneTier::Swar`]).
+/// The GEMM entry points resolve this **on the calling thread** before
+/// fanning out to the worker pool, so an override scopes the whole
+/// parallel operation.
+pub fn lane_tier() -> LaneTier {
+    LANE_TIER_OVERRIDE.with(|c| c.get()).unwrap_or(LaneTier::Swar)
+}
+
+/// Run `f` with the lane tier pinned on this thread; restored on exit
+/// (even across panics). Exists for differential tests and the
+/// scalar-baseline legs of the speedup benchmarks — production code
+/// leaves the default SWAR tier in place.
+pub fn with_lane_tier<R>(t: LaneTier, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<LaneTier>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LANE_TIER_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = Restore(LANE_TIER_OVERRIDE.with(|c| c.replace(Some(t))));
+    f()
+}
+
+// ------------------------------------------------------------- blocking
+
+/// Output rows per cache block (and per parallel work chunk on the
+/// blocked path).
+pub const BLOCK_MC: usize = 16;
+/// Output columns per cache block.
+pub const BLOCK_NC: usize = 64;
+/// Packed K-dimension words per panel chunk (`KC_WORDS · 8` bytes of
+/// one operand row stream ≈ half an L1d).
+pub const BLOCK_KC_WORDS: usize = 512;
+/// Capacity of the per-worker stack accumulator tile (8 KiB).
+const ACC_TILE_WORDS: usize = BLOCK_MC * BLOCK_NC;
+
+/// A compiled blocking decision for one GEMM shape: either the simple
+/// row-streaming loop (small problems — every shape the generated
+/// cluster kernels actually run) or `MC×NC×KC` cache-blocked tiling.
+/// Blocking is loop *re-association without re-ordering*: each output
+/// element still folds its packed words in ascending-k order, so a plan
+/// never changes results — [`crate::api::PlanInstance`] compiles one at
+/// assembly time and reuses it every run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockPlan {
+    /// Rows per block.
+    pub mc: usize,
+    /// Columns per block.
+    pub nc: usize,
+    /// Packed words of K per panel chunk.
+    pub kc_words: usize,
+    /// Whether the blocked path runs at all.
+    pub blocked: bool,
+}
+
+impl BlockPlan {
+    /// The simple row-streaming loop (no tiling).
+    pub const fn simple() -> BlockPlan {
+        BlockPlan { mc: BLOCK_MC, nc: BLOCK_NC, kc_words: BLOCK_KC_WORDS, blocked: false }
+    }
+
+    /// Decide blocking for an `m×n` output over `wpr` packed words per
+    /// row stream. Tiling pays once the B-panel working set outgrows
+    /// cache and blocks are full-sized; below that the simple loop wins
+    /// (and keeps the benchmarked small-shape paths byte-for-byte on
+    /// the PR-5 code).
+    pub fn for_problem(m: usize, n: usize, wpr: usize) -> BlockPlan {
+        let blocked = m >= 2 * BLOCK_MC && n >= 2 * BLOCK_NC && n * wpr >= 1 << 13;
+        BlockPlan { blocked, ..BlockPlan::simple() }
+    }
+
+    /// A forced custom tiling (tests exercise edge geometries with it).
+    /// Tile dimensions must be nonzero and fit the stack accumulator.
+    pub fn custom(mc: usize, nc: usize, kc_words: usize) -> BlockPlan {
+        assert!(mc > 0 && nc > 0 && kc_words > 0, "degenerate block plan");
+        assert!(mc * nc <= ACC_TILE_WORDS, "tile exceeds the stack accumulator");
+        BlockPlan { mc, nc, kc_words, blocked: true }
+    }
 }
 
 // ------------------------------------------------------------ workspace
@@ -454,8 +585,31 @@ pub fn gemm_packed_m<S: ExpandTo<D>, D: FormatSpec>(
 }
 
 /// [`gemm_packed_m`] into a caller-provided output (cleared and
-/// resized; capacity is reused).
+/// resized; capacity is reused). Compiles a [`BlockPlan`] for the shape
+/// and runs the active [`LaneTier`]; see [`gemm_packed_planned_into_m`].
 pub fn gemm_packed_into_m<S: ExpandTo<D>, D: FormatSpec>(
+    m: usize,
+    n: usize,
+    k: usize,
+    ap: &[u64],
+    bp: &[u64],
+    rm: RoundingMode,
+    out: &mut Vec<f64>,
+) {
+    let plan = BlockPlan::for_problem(m, n, k / S::LANES as usize);
+    gemm_packed_planned_into_m::<S, D>(&plan, m, n, k, ap, bp, rm, out);
+}
+
+/// The expanding-GEMM core on pre-packed operands, with the blocking
+/// decision supplied by the caller (steady-state callers —
+/// [`crate::api::PlanInstance`] — compile the plan once at assembly
+/// time). Resolves the [`LaneTier`] **on the calling thread** (worker
+/// threads do not inherit thread-local overrides), screens the packed
+/// panels once for the SWAR tier, and dispatches to the simple or
+/// blocked loop. Every `(tier, plan)` combination is bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_planned_into_m<S: ExpandTo<D>, D: FormatSpec>(
+    plan: &BlockPlan,
     m: usize,
     n: usize,
     k: usize,
@@ -471,15 +625,123 @@ pub fn gemm_packed_into_m<S: ExpandTo<D>, D: FormatSpec>(
     assert_eq!(bp.len(), n * wpr, "packed B must be n*k/lanes words");
     out.clear();
     out.resize(m * n, 0f64);
-    par_chunks_mut(out, n.max(1), |i, row| {
-        let aw = &ap[i * wpr..(i + 1) * wpr];
-        for (j, o) in row.iter_mut().enumerate() {
-            let bw = &bp[j * wpr..(j + 1) * wpr];
-            let mut acc = 0u64; // all destination lanes +0.0
-            for (&x, &y) in aw.iter().zip(bw) {
-                acc = simd_exsdotp_m::<S, D>(x, y, acc, rm);
+    match lane_tier() {
+        LaneTier::Scalar => {
+            // The reference tier stays on the untouched simple loop —
+            // it is the timing baseline the speedup gates compare
+            // against, and the numeric reference the differential
+            // tests pin the SWAR tier to.
+            gemm_loops::<D, _, _>(
+                plan,
+                n,
+                wpr,
+                ap,
+                bp,
+                out,
+                |x, y, acc| simd_exsdotp_m::<S, D>(x, y, acc, rm),
+                |acc| vsum_tree_m::<S, D>(acc, rm),
+                false,
+            );
+        }
+        LaneTier::Swar => {
+            // Pack-once panel screen: one pass over the packed words
+            // decides whether the whole GEMM can run the all-finite
+            // SWAR kernel (screening only the running accumulator per
+            // step) or must keep the full per-register screen.
+            let clean = slice_all_finite::<S>(ap) && slice_all_finite::<S>(bp);
+            if clean {
+                gemm_loops::<D, _, _>(
+                    plan,
+                    n,
+                    wpr,
+                    ap,
+                    bp,
+                    out,
+                    |x, y, acc| swar_exsdotp_operands_finite_m::<S, D>(x, y, acc, rm),
+                    |acc| vsum_tree_swar_m::<S, D>(acc, rm),
+                    plan.blocked,
+                );
+            } else {
+                gemm_loops::<D, _, _>(
+                    plan,
+                    n,
+                    wpr,
+                    ap,
+                    bp,
+                    out,
+                    |x, y, acc| swar_exsdotp_m::<S, D>(x, y, acc, rm),
+                    |acc| vsum_tree_swar_m::<S, D>(acc, rm),
+                    plan.blocked,
+                );
             }
-            *o = to_f64_m::<D>(vsum_tree_m::<S, D>(acc, rm));
+        }
+    }
+}
+
+/// Shared loop structure for both tiers: `kernel` folds one packed
+/// register pair into the accumulator, `vsum` is the epilogue reduction
+/// tree. With `blocked`, the output is tiled `plan.mc × plan.nc` with
+/// K streamed in `plan.kc_words` panels — the accumulator tile persists
+/// across K-panels on the worker's stack, so each output element still
+/// folds its words in ascending-k order (bit-identical to the simple
+/// loop by construction).
+#[allow(clippy::too_many_arguments)]
+fn gemm_loops<D: FormatSpec, K, V>(
+    plan: &BlockPlan,
+    n: usize,
+    wpr: usize,
+    ap: &[u64],
+    bp: &[u64],
+    out: &mut [f64],
+    kernel: K,
+    vsum: V,
+    blocked: bool,
+) where
+    K: Fn(u64, u64, u64) -> u64 + Sync,
+    V: Fn(u64) -> u64 + Sync,
+{
+    if !blocked {
+        par_chunks_mut(out, n.max(1), |i, row| {
+            let aw = &ap[i * wpr..(i + 1) * wpr];
+            for (j, o) in row.iter_mut().enumerate() {
+                let bw = &bp[j * wpr..(j + 1) * wpr];
+                let mut acc = 0u64; // all destination lanes +0.0
+                for (&x, &y) in aw.iter().zip(bw) {
+                    acc = kernel(x, y, acc);
+                }
+                *o = to_f64_m::<D>(vsum(acc));
+            }
+        });
+        return;
+    }
+    let (mc, nc, kc) = (plan.mc, plan.nc, plan.kc_words);
+    debug_assert!(mc * nc <= ACC_TILE_WORDS);
+    par_chunks_mut(out, (mc * n).max(1), |bi, rows| {
+        let i0 = bi * mc;
+        let block_rows = rows.len() / n; // last block may be short
+        let mut tile = [0u64; ACC_TILE_WORDS];
+        for jb in (0..n).step_by(nc) {
+            let ncb = nc.min(n - jb);
+            tile[..block_rows * nc].fill(0); // all destination lanes +0.0
+            for kb in (0..wpr).step_by(kc) {
+                let kcb = kc.min(wpr - kb);
+                for ii in 0..block_rows {
+                    let aw = &ap[(i0 + ii) * wpr + kb..][..kcb];
+                    for jj in 0..ncb {
+                        let bw = &bp[(jb + jj) * wpr + kb..][..kcb];
+                        let mut acc = tile[ii * nc + jj];
+                        for (&x, &y) in aw.iter().zip(bw) {
+                            acc = kernel(x, y, acc);
+                        }
+                        tile[ii * nc + jj] = acc;
+                    }
+                }
+            }
+            for ii in 0..block_rows {
+                for jj in 0..ncb {
+                    rows[ii * n + jb + jj] = to_f64_m::<D>(vsum(tile[ii * nc + jj]));
+                }
+            }
         }
     });
 }
@@ -491,7 +753,10 @@ pub fn gemm_packed_into_m<S: ExpandTo<D>, D: FormatSpec>(
 /// pre-packed words in the [`pack_rows_m`] / [`pack_cols_m`] layouts.
 /// Crate-internal: the validated [`crate::api::GemmPlan`] is the public
 /// route (its builder guarantees the shape/divisibility invariants
-/// these asserts assume).
+/// these asserts assume). Production traffic moved to the precompiled
+/// [`gemm_packed_planned_into`]; this unplanned twin remains as the
+/// differential tests' reference entry.
+#[cfg_attr(not(test), allow(dead_code))]
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_packed_into(
     src: FpFormat,
@@ -511,6 +776,36 @@ pub(crate) fn gemm_packed_into(
         D,
         {
             gemm_packed_into_m::<S, D>(m, n, k, ap, bp, rm, out);
+            true
+        },
+        { false }
+    )
+}
+
+/// [`gemm_packed_into`] with the blocking decision precompiled by the
+/// caller — the zero-per-call-planning route [`crate::api::PlanInstance`]
+/// runs: the instance compiles a [`BlockPlan`] once at assembly time
+/// and replays it every call.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_packed_planned_into(
+    src: FpFormat,
+    dst: FpFormat,
+    plan: &BlockPlan,
+    m: usize,
+    n: usize,
+    k: usize,
+    ap: &[u64],
+    bp: &[u64],
+    rm: RoundingMode,
+    out: &mut Vec<f64>,
+) -> bool {
+    crate::with_expanding_pair!(
+        src,
+        dst,
+        S,
+        D,
+        {
+            gemm_packed_planned_into_m::<S, D>(plan, m, n, k, ap, bp, rm, out);
             true
         },
         { false }

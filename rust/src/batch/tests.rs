@@ -379,6 +379,115 @@ fn into_variants_match_allocating_twins() {
     assert_eq!(cast_buf, cast_slice(e3m4, FP16, &words, rm));
 }
 
+// --------------------------------------------- lane tiers and blocking
+
+#[test]
+fn lane_tiers_bit_identical_all_pairs() {
+    // The SWAR default vs the pinned scalar reference, full GEMMs, all
+    // six expanding pairs, all rounding modes — with inputs spiced to
+    // produce Inf/NaN/subnormal lanes so both the all-finite fast path
+    // and the screened fallback run.
+    let (m, n, k) = (12, 20, 32);
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let mut rng = Rng::new(0x5AA5);
+    let spice = |r: &mut Rng| match r.below(10) {
+        0 => f64::INFINITY,
+        1 => -60000.0, // overflows narrow formats
+        2 => 1e-9,     // subnormal territory
+        3 => -0.0,
+        _ => r.gaussian() * 0.5,
+    };
+    let a: Vec<f64> = (0..m * k).map(|_| spice(&mut rng)).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| spice(&mut rng)).collect();
+    let (ga, gb) = random_mats(m, n, k, 0xF1E1D); // all-finite Gaussians
+    for (src, dst) in expanding_pairs() {
+        for rm in [RoundingMode::Rne, RoundingMode::Rdn, RoundingMode::Rup, RoundingMode::Rtz, RoundingMode::Rmm] {
+            for (aa, bb) in [(&a, &b), (&ga, &gb)] {
+                let swar = with_lane_tier(LaneTier::Swar, || {
+                    gemm_expanding(src, dst, false, false, m, n, k, aa, bb, rm).expect("pair")
+                });
+                let scalar = with_lane_tier(LaneTier::Scalar, || {
+                    gemm_expanding(src, dst, false, false, m, n, k, aa, bb, rm).expect("pair")
+                });
+                assert_eq!(bits(&swar), bits(&scalar), "{}→{} rm={rm:?} tiers diverged", src.name(), dst.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_plans_bit_identical_to_simple_loop() {
+    // Forced custom tilings — including tile sizes that do not divide
+    // the problem in any dimension — must reproduce the simple loop bit
+    // for bit on both tiers: blocking only re-associates the loop nest,
+    // never the per-element fold order.
+    use crate::formats::spec::{Fp16, Fp8};
+    let (m, n, k) = (10, 20, 48); // wpr = 6 for FP8
+    let (a, b) = random_mats(m, n, k, 0xB10C);
+    let rm = RoundingMode::Rne;
+    let mut ws = Workspace::new();
+    pack_rows_into_m::<Fp8>(&a, m, k, rm, &mut ws.pa);
+    pack_cols_into_m::<Fp8>(&b, k, n, rm, &mut ws.pb);
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+    let mut simple = Vec::new();
+    gemm_packed_planned_into_m::<Fp8, Fp16>(&BlockPlan::simple(), m, n, k, &ws.pa, &ws.pb, rm, &mut simple);
+    let plans = [
+        BlockPlan::custom(4, 8, 4),  // none of m/n/wpr divide evenly
+        BlockPlan::custom(1, 1, 1),  // degenerate 1×1 tiles, word-at-a-time K
+        BlockPlan::custom(16, 64, 512), // tiles larger than the problem
+        BlockPlan::custom(3, 7, 5),  // coprime everything
+    ];
+    for tier in [LaneTier::Swar, LaneTier::Scalar] {
+        for plan in &plans {
+            let mut blocked = Vec::new();
+            with_lane_tier(tier, || {
+                gemm_packed_planned_into_m::<Fp8, Fp16>(plan, m, n, k, &ws.pa, &ws.pb, rm, &mut blocked);
+            });
+            assert_eq!(bits(&blocked), bits(&simple), "{tier:?} {plan:?} diverged from simple loop");
+        }
+    }
+}
+
+#[test]
+fn blocked_plans_handle_special_lanes() {
+    // Packed panels carrying Inf/NaN lanes defeat the pack-once screen;
+    // the blocked SWAR path must fall back per register and still match.
+    use crate::formats::spec::{Fp16, Fp8};
+    let (m, n, k) = (8, 8, 32);
+    let (a, mut b) = random_mats(m, n, k, 0x5bec);
+    b[3] = f64::INFINITY;
+    b[17] = f64::NAN;
+    let rm = RoundingMode::Rne;
+    let mut ws = Workspace::new();
+    pack_rows_into_m::<Fp8>(&a, m, k, rm, &mut ws.pa);
+    pack_cols_into_m::<Fp8>(&b, k, n, rm, &mut ws.pb);
+    assert!(!crate::softfloat::swar::slice_all_finite::<Fp8>(&ws.pb));
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let mut want = Vec::new();
+    with_lane_tier(LaneTier::Scalar, || {
+        gemm_packed_planned_into_m::<Fp8, Fp16>(&BlockPlan::simple(), m, n, k, &ws.pa, &ws.pb, rm, &mut want);
+    });
+    let mut got = Vec::new();
+    gemm_packed_planned_into_m::<Fp8, Fp16>(&BlockPlan::custom(4, 4, 2), m, n, k, &ws.pa, &ws.pb, rm, &mut got);
+    assert_eq!(bits(&got), bits(&want));
+}
+
+#[test]
+fn block_plan_threshold_decisions() {
+    // Small/benchmark shapes stay simple; large shapes tile.
+    assert!(!BlockPlan::for_problem(32, 32, 4).blocked, "32³ steady-state stays simple");
+    assert!(!BlockPlan::for_problem(128, 128, 16).blocked, "128³ FP8 headline stays simple");
+    assert!(BlockPlan::for_problem(512, 512, 64).blocked, "512³ FP8 tiles");
+    assert!(BlockPlan::for_problem(512, 512, 128).blocked, "512³ FP16 tiles");
+    assert!(!BlockPlan::for_problem(16, 4096, 64).blocked, "too few rows to tile");
+    assert!(!BlockPlan::for_problem(4096, 16, 640).blocked, "too few cols to tile");
+    // The tier override is scoped and restored.
+    assert_eq!(lane_tier(), LaneTier::Swar);
+    with_lane_tier(LaneTier::Scalar, || assert_eq!(lane_tier(), LaneTier::Scalar));
+    assert_eq!(lane_tier(), LaneTier::Swar);
+}
+
 #[test]
 fn regrid_in_place_matches_quantize_decode() {
     use crate::formats::{FP16, FP8, FP8ALT};

@@ -34,11 +34,19 @@
 //! * [`fast`] — monomorphized twins of [`unit`] and [`simd`] (constant
 //!   formats via [`crate::formats::FormatSpec`]), the per-lane kernels
 //!   behind the slice-level engine in [`crate::batch`].
+//! * [`swar`] — the lane-parallel tier: bit-plane field extraction and
+//!   one branch-free specials screen per packed register
+//!   ([`crate::softfloat::swar`]), then the same fused datapath in
+//!   64-bit lane arithmetic for all-finite registers. Specials fall
+//!   back to [`fast`]; both paths end in the shared
+//!   [`crate::softfloat::round::round_pack`], and the differential
+//!   suites pin the tiers bit-identical.
 
 pub mod cascade;
 pub mod exact;
 pub mod fast;
 pub mod simd;
+pub mod swar;
 pub mod table1;
 #[cfg(test)]
 mod tests;
@@ -48,5 +56,6 @@ pub use cascade::{exsdotp_cascade, exvsum_cascade};
 pub use exact::{exsdotp_exact, vsum_exact};
 pub use fast::{exsdotp_m, simd_exsdotp_m, vsum_tree_m};
 pub use simd::{SimdExSdotp, SimdOp};
+pub use swar::{swar_exsdotp_m, swar_vsum_m, vsum_tree_swar_m};
 pub use table1::{supported, OpKind};
 pub use unit::ExSdotpUnit;

@@ -1,0 +1,509 @@
+//! SWAR ExSdotp kernels — the lane-parallel tier of the batch engine.
+//!
+//! The scalar fast tier ([`super::fast`]) computes one destination lane
+//! at a time, and each lane pays the full descriptor machinery: five
+//! [`crate::softfloat::unpack`] calls, enum-classed addend terms, a
+//! tuple sort and 128-bit three-term arithmetic. This module makes the
+//! packed `u64` word the unit of computation instead:
+//!
+//! 1. **Register screen** — one branch-free AND-fold
+//!    ([`crate::softfloat::swar::special_lanes`]) classifies all lanes
+//!    of all three operand registers at once. Registers carrying any
+//!    NaN/∞ lane (rare in GEMM traffic) are routed to the scalar tier,
+//!    which *is* the reference — bit-identity for specials is therefore
+//!    trivial, and the hot path below never sees them.
+//! 2. **Bit-plane extraction** — sign/exponent/mantissa planes of every
+//!    lane are peeled with shared masks
+//!    ([`crate::softfloat::swar::sign_plane`] & friends), replacing the
+//!    per-lane unpack round-trips.
+//! 3. **Lane-parallel finite datapath** — each destination lane runs
+//!    [`three_term_finite_m`]: the *same* sort / first-sum / widen /
+//!    second-sum / single-round stages as
+//!    [`super::unit::ExSdotpUnit::exsdotp`] (eqs. 2–4, Fig. 4), but in
+//!    64-bit arithmetic. The internal field of every Table I pair fits
+//!    a `u64` with its guard and sticky bits isolated below the carry
+//!    chain: `2·p_dst + 4 + p_src ≤ 64` bits (63 for FP16→FP32, 29 for
+//!    FP8→FP16), so no carry can escape a lane's working word.
+//! 4. **Shared rounding** — every lane terminates in the same
+//!    [`crate::softfloat::round::round_pack`] as the scalar tier and
+//!    the cycle-accurate unit; there is exactly one rounding
+//!    implementation in the crate.
+//!
+//! Bit-identity with the scalar tier is pinned by the differential
+//! suite below (all six expanding pairs × all rounding modes × special
+//! values, plus seeded full-register sweeps) and by the batch-level
+//! tier differentials in [`crate::batch`]. Only [`crate::batch`]
+//! selects tiers; everything above it inherits the speedup through an
+//! unchanged API.
+
+use super::fast::{simd_exsdotp_m, simd_vsum_m};
+use crate::formats::spec::{ExpandTo, FormatSpec};
+use crate::softfloat::round::{round_pack, RoundingMode};
+use crate::softfloat::swar::{exp_plane, man_plane, sign_plane, special_lanes};
+
+/// One finite addend: `±mant · 2^(e_msb − msb(mant))`, or a signed
+/// zero when `mant == 0` (then `e_msb` is meaningless). `mant` is raw —
+/// its MSB sits anywhere at or below bit `p_dst − 1`.
+#[derive(Clone, Copy)]
+struct Fin {
+    sign: bool,
+    e_msb: i32,
+    mant: u64,
+}
+
+/// Decode lane `i` of the pre-extracted field planes into a [`Fin`]
+/// operand term (mirrors `unpack` + `operand_term` for finite lanes:
+/// subnormals keep the format's fixed subnormal weight, normals gain
+/// the hidden bit).
+#[inline(always)]
+fn fin_lane<F: FormatSpec>(signs: u64, exps: u64, mans: u64, i: u32) -> Fin {
+    let sh = i * F::WIDTH;
+    let sign = (signs >> sh) & 1 == 1;
+    let ef = (exps >> sh) & F::EXP_FIELD_MASK;
+    let mf = (mans >> sh) & F::MAN_FIELD_MASK;
+    let norm = (ef != 0) as u64;
+    let mant = mf | (norm << F::MAN_BITS);
+    // LSB weight: emin − man_bits for subnormals, ef − bias − man_bits
+    // for normals — `max(ef, 1)` folds both (emin = 1 − bias).
+    let e_lsb = (ef as i32).max(1) - F::BIAS - F::MAN_BITS as i32;
+    if mant == 0 {
+        Fin { sign, e_msb: 0, mant: 0 }
+    } else {
+        Fin { sign, e_msb: e_lsb + (63 - mant.leading_zeros() as i32), mant }
+    }
+}
+
+/// The exact product of two finite lane operands (mirrors
+/// `product_term` with both factors finite: zero absorbs, otherwise the
+/// integer significands multiply exactly — ≤ `2·p_src ≤ p_dst` bits).
+#[inline(always)]
+fn prod_term(a: Fin, b: Fin, a_lsb: i32, b_lsb: i32) -> Fin {
+    let sign = a.sign ^ b.sign;
+    if a.mant == 0 || b.mant == 0 {
+        return Fin { sign, e_msb: 0, mant: 0 };
+    }
+    let mant = a.mant * b.mant;
+    let msb = 63 - mant.leading_zeros() as i32;
+    Fin { sign, e_msb: a_lsb + b_lsb + msb, mant }
+}
+
+/// Right-shift with sticky collection (the 64-bit twin of the unit's
+/// `shift_sticky`; operands here never exceed 64 significant bits).
+#[inline(always)]
+fn shift_sticky64(v: u64, n: u32) -> (u64, bool) {
+    if n == 0 {
+        (v, false)
+    } else if n > 63 {
+        (0, v != 0)
+    } else {
+        (v >> n, v & ((1u64 << n) - 1) != 0)
+    }
+}
+
+/// Shift a mantissa so its MSB sits at `msb_at` (the unit's
+/// `normalize_to`; addends carry ≤ `p_dst` bits, so this is always a
+/// left shift).
+#[inline(always)]
+fn normalize_to64(mant: u64, msb_at: u32) -> u64 {
+    debug_assert!(mant != 0);
+    let msb = 63 - mant.leading_zeros();
+    debug_assert!(msb <= msb_at, "addend wider than p_dst");
+    mant << (msb_at - msb)
+}
+
+/// The fused three-term addition of [`super::unit::ExSdotpUnit`] for
+/// **finite** addends, in 64-bit lane arithmetic: identical sort,
+/// identical first-sum over `2·p_dst + 3` bits, identical `p_pad`
+/// widening, identical second-sum branch structure (including the
+/// cancellation-recovery and residue-collapse paths), identical
+/// zero-sign rules, terminating in the same shared [`round_pack`]. The
+/// only difference from the unit is the word size — legal because
+/// `2·p_dst + 4 + p_pad ≤ 64` for every Table I pair (the guard bits
+/// stay carry-isolated inside the `u64`).
+#[inline]
+fn three_term_finite_m<D: FormatSpec>(t0: Fin, t1: Fin, t2: Fin, p_pad: u32, rm: RoundingMode) -> u64 {
+    let dst = D::FMT;
+    debug_assert!(2 * D::PRECISION + 4 + p_pad <= 64, "lane working word would overflow");
+
+    // Collect finite nonzero addends in argument order; fold zero signs
+    // with the IEEE pairwise rule (exactly the unit's loop).
+    let mut buf = [Fin { sign: false, e_msb: 0, mant: 0 }; 3];
+    let mut n_finite = 0usize;
+    let mut zero_sign: Option<bool> = None;
+    for t in [t0, t1, t2] {
+        if t.mant == 0 {
+            zero_sign = Some(match zero_sign {
+                None => t.sign,
+                Some(prev) if prev == t.sign => t.sign,
+                _ => rm == RoundingMode::Rdn,
+            });
+        } else {
+            buf[n_finite] = t;
+            n_finite += 1;
+        }
+    }
+    let finite = &mut buf[..n_finite];
+
+    let p_dst = D::PRECISION;
+    let msb_at = p_dst - 1;
+    for f in finite.iter_mut() {
+        f.mant = normalize_to64(f.mant, msb_at);
+    }
+
+    match n_finite {
+        0 => dst.zero(zero_sign.unwrap_or(false)),
+        1 => {
+            let f = finite[0];
+            round_pack(f.sign, f.e_msb - msb_at as i32, f.mant as u128, false, dst, rm)
+        }
+        _ => {
+            // Magnitude sort, descending (same 3-element network and the
+            // same (exponent, mantissa) key as the unit).
+            #[inline(always)]
+            fn ge(a: &Fin, b: &Fin) -> bool {
+                (a.e_msb, a.mant) >= (b.e_msb, b.mant)
+            }
+            if !ge(&finite[0], &finite[1]) {
+                finite.swap(0, 1);
+            }
+            if n_finite == 3 {
+                if !ge(&finite[1], &finite[2]) {
+                    finite.swap(1, 2);
+                }
+                if !ge(&finite[0], &finite[1]) {
+                    finite.swap(0, 1);
+                }
+            }
+            let (max, int) = (finite[0], finite[1]);
+            let min3 = (n_finite == 3).then(|| finite[2]);
+
+            // --- First sum over 2·p_dst+3 bits.
+            let up1 = p_dst + 3;
+            let max_m = max.mant << up1;
+            let d1 = (max.e_msb - int.e_msb) as u32;
+            let (int_m, st_int) = shift_sticky64(int.mant << up1, d1);
+
+            let (mut sign1, mut k1, mut st1);
+            if max.sign == int.sign {
+                sign1 = max.sign;
+                k1 = max_m + int_m;
+                st1 = st_int;
+            } else {
+                sign1 = max.sign;
+                k1 = max_m - int_m - st_int as u64;
+                st1 = st_int;
+                if k1 == 0 && !st1 {
+                    // Exact cancellation of max and int: recovery path.
+                    return match min3 {
+                        Some(f) => round_pack(f.sign, f.e_msb - msb_at as i32, f.mant as u128, false, dst, rm),
+                        None => dst.zero(rm == RoundingMode::Rdn),
+                    };
+                }
+            }
+
+            // --- Widen by p_pad zeros.
+            k1 <<= p_pad;
+
+            // --- Second sum: add min on the widened grid, sticky
+            // residues OR-folded exactly as in the unit.
+            if let Some(f) = min3 {
+                let d2 = (max.e_msb - f.e_msb) as u32;
+                let (min_m, st_min) = shift_sticky64(f.mant << (up1 + p_pad), d2);
+                if f.sign == sign1 {
+                    k1 += min_m;
+                    st1 |= st_min;
+                } else {
+                    use std::cmp::Ordering::*;
+                    match (k1, st1).cmp(&(min_m, st_min)) {
+                        Greater => {
+                            if !st1 {
+                                k1 = k1 - min_m - st_min as u64;
+                            } else {
+                                k1 -= min_m;
+                            }
+                            st1 |= st_min;
+                        }
+                        Less => {
+                            if !st_min {
+                                k1 = min_m - k1 - st1 as u64;
+                            } else {
+                                k1 = min_m - k1;
+                            }
+                            st1 |= st_min;
+                            sign1 = f.sign;
+                        }
+                        Equal => {
+                            if !st1 {
+                                return dst.zero(rm == RoundingMode::Rdn);
+                            }
+                            k1 = 0;
+                        }
+                    }
+                }
+            }
+
+            // --- Single normalization + rounding on the shared step.
+            let grid = max.e_msb - (2 * p_dst as i32 + 2 + p_pad as i32);
+            round_pack(sign1, grid, k1 as u128, st1, dst, rm)
+        }
+    }
+}
+
+/// Lane-parallel SIMD `exsdotp` over registers whose lanes are **all
+/// finite** (caller guarantees it — see [`swar_exsdotp_m`] for the
+/// screened entry). Bit-plane extraction once per register, then each
+/// destination lane runs the finite three-term datapath.
+#[inline]
+pub fn swar_exsdotp_finite_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) -> u64 {
+    debug_assert!(special_lanes::<S>(rs1) | special_lanes::<S>(rs2) | special_lanes::<D>(rd) == 0);
+    let (s1, e1, m1) = (sign_plane::<S>(rs1), exp_plane::<S>(rs1), man_plane::<S>(rs1));
+    let (s2, e2, m2) = (sign_plane::<S>(rs2), exp_plane::<S>(rs2), man_plane::<S>(rs2));
+    let (sd, ed, md) = (sign_plane::<D>(rd), exp_plane::<D>(rd), man_plane::<D>(rd));
+    let mut out = 0u64;
+    for i in 0..D::LANES {
+        let a = fin_lane::<S>(s1, e1, m1, 2 * i);
+        let b = fin_lane::<S>(s2, e2, m2, 2 * i);
+        let c = fin_lane::<S>(s1, e1, m1, 2 * i + 1);
+        let d = fin_lane::<S>(s2, e2, m2, 2 * i + 1);
+        let e = fin_lane::<D>(sd, ed, md, i);
+        // `fin_lane` returns e_msb; products need the factors' LSB
+        // weights, recovered as e_msb − msb(mant).
+        let pa = prod_of(a, b);
+        let pc = prod_of(c, d);
+        let r = three_term_finite_m::<D>(pa, pc, e, S::PRECISION, rm);
+        out |= r << (i * D::WIDTH);
+    }
+    out
+}
+
+/// Product of two finite [`Fin`] operand terms.
+#[inline(always)]
+fn prod_of(x: Fin, y: Fin) -> Fin {
+    let x_lsb = if x.mant == 0 { 0 } else { x.e_msb - (63 - x.mant.leading_zeros() as i32) };
+    let y_lsb = if y.mant == 0 { 0 } else { y.e_msb - (63 - y.mant.leading_zeros() as i32) };
+    prod_term(x, y, x_lsb, y_lsb)
+}
+
+/// SIMD `exsdotp rd, rs1, rs2` on the SWAR tier: screens all three
+/// registers with one branch, runs the lane-parallel finite datapath on
+/// clean registers, and falls back to the scalar tier
+/// ([`simd_exsdotp_m`]) when any lane is NaN/∞ — bit-identical to the
+/// scalar tier either way.
+#[inline]
+pub fn swar_exsdotp_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) -> u64 {
+    if special_lanes::<S>(rs1) | special_lanes::<S>(rs2) | special_lanes::<D>(rd) != 0 {
+        return simd_exsdotp_m::<S, D>(rs1, rs2, rd, rm);
+    }
+    swar_exsdotp_finite_m::<S, D>(rs1, rs2, rd, rm)
+}
+
+/// [`swar_exsdotp_m`] for operand streams already known all-finite (the
+/// pack-once panel screen): only the running accumulator — which can
+/// still overflow to ±∞ — is screened per step.
+#[inline]
+pub fn swar_exsdotp_operands_finite_m<S: ExpandTo<D>, D: FormatSpec>(
+    rs1: u64,
+    rs2: u64,
+    rd: u64,
+    rm: RoundingMode,
+) -> u64 {
+    debug_assert!(special_lanes::<S>(rs1) | special_lanes::<S>(rs2) == 0);
+    if special_lanes::<D>(rd) != 0 {
+        return simd_exsdotp_m::<S, D>(rs1, rs2, rd, rm);
+    }
+    swar_exsdotp_finite_m::<S, D>(rs1, rs2, rd, rm)
+}
+
+/// SIMD `vsum rd, rs1` on the SWAR tier (pairwise reduction of `D`
+/// lanes, upper `rd` lanes pass through) — the unit's multiplier-bypass
+/// datapath with the same `p_src` widening, screened per register.
+#[inline]
+pub fn swar_vsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: RoundingMode) -> u64 {
+    if special_lanes::<D>(rs1) | special_lanes::<D>(rd) != 0 {
+        return simd_vsum_m::<S, D>(rs1, rd, rm);
+    }
+    let (s1, e1, m1) = (sign_plane::<D>(rs1), exp_plane::<D>(rs1), man_plane::<D>(rs1));
+    let (sd, ed, md) = (sign_plane::<D>(rd), exp_plane::<D>(rd), man_plane::<D>(rd));
+    let mut out = rd;
+    for i in 0..D::LANES / 2 {
+        let a = fin_lane::<D>(s1, e1, m1, 2 * i);
+        let c = fin_lane::<D>(s1, e1, m1, 2 * i + 1);
+        let e = fin_lane::<D>(sd, ed, md, i);
+        let v = three_term_finite_m::<D>(a, c, e, S::PRECISION, rm);
+        let sh = i * D::WIDTH;
+        out = (out & !(D::LANE_MASK << sh)) | (v << sh);
+    }
+    out
+}
+
+/// The kernels' `vsum` epilogue tree on the SWAR tier (twin of
+/// [`super::fast::vsum_tree_m`]).
+#[inline]
+pub fn vsum_tree_swar_m<S: ExpandTo<D>, D: FormatSpec>(acc: u64, rm: RoundingMode) -> u64 {
+    let mut t = acc;
+    let mut lanes = D::LANES;
+    while lanes > 1 {
+        t = swar_vsum_m::<S, D>(t, 0, rm);
+        lanes /= 2;
+    }
+    t & D::LANE_MASK
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exsdotp::fast::vsum_tree_m;
+    use crate::formats::spec::{Fp16, Fp16alt, Fp32, Fp8, Fp8alt};
+    use crate::util::prop::{for_all, FpGen};
+    use crate::util::rng::Rng;
+
+    const RMS: [RoundingMode; 5] = [
+        RoundingMode::Rne,
+        RoundingMode::Rtz,
+        RoundingMode::Rdn,
+        RoundingMode::Rup,
+        RoundingMode::Rmm,
+    ];
+
+    /// Pack one boundary-biased encoding per lane.
+    fn pack_reg<F: FormatSpec>(rng: &mut Rng, pick: impl Fn(&FpGen, &mut Rng) -> u64) -> u64 {
+        let g = FpGen::new(F::FMT);
+        let mut reg = 0u64;
+        for i in 0..F::LANES {
+            reg |= pick(&g, rng) << (i * F::WIDTH);
+        }
+        reg
+    }
+
+    fn check_all_ops<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rs2: u64, rd: u64) {
+        for rm in RMS {
+            assert_eq!(
+                swar_exsdotp_m::<S, D>(rs1, rs2, rd, rm),
+                simd_exsdotp_m::<S, D>(rs1, rs2, rd, rm),
+                "exsdotp rs1={rs1:#018x} rs2={rs2:#018x} rd={rd:#018x} rm={rm:?}"
+            );
+            assert_eq!(
+                swar_vsum_m::<S, D>(rd, rs1, rm),
+                simd_vsum_m::<S, D>(rd, rs1, rm),
+                "vsum rs1={rd:#018x} rd={rs1:#018x} rm={rm:?}"
+            );
+            assert_eq!(
+                vsum_tree_swar_m::<S, D>(rd, rm),
+                vsum_tree_m::<S, D>(rd, rm),
+                "vsum tree acc={rd:#018x} rm={rm:?}"
+            );
+        }
+    }
+
+    /// Seeded random full-register sweep for one expanding pair: raw
+    /// registers (exercises the screen + fallback), edge-lane registers
+    /// (NaN/∞/subnormal/±0/max-finite mixes), and all-finite registers
+    /// (pins the lane-parallel path itself, including the
+    /// operands-finite variant).
+    fn diff_sweep<S: ExpandTo<D>, D: FormatSpec>(cases: u64) {
+        for_all("swar vs scalar exsdotp", cases, |rng| {
+            // Raw 64-bit noise: lanes land on every class.
+            check_all_ops::<S, D>(rng.next_u64(), rng.next_u64(), rng.next_u64());
+            // Boundary-biased lanes (dense NaN/∞/subnormal traffic).
+            let rs1 = pack_reg::<S>(rng, |g, r| g.any(r));
+            let rs2 = pack_reg::<S>(rng, |g, r| g.any(r));
+            let rd = pack_reg::<D>(rng, |g, r| g.any(r));
+            check_all_ops::<S, D>(rs1, rs2, rd);
+            // All-finite registers: the SWAR finite path must run (not
+            // the fallback) and still agree bit-for-bit.
+            let f1 = pack_reg::<S>(rng, |g, r| g.finite(r));
+            let f2 = pack_reg::<S>(rng, |g, r| g.finite(r));
+            let fd = pack_reg::<D>(rng, |g, r| g.finite(r));
+            assert!(special_lanes::<S>(f1) | special_lanes::<S>(f2) | special_lanes::<D>(fd) == 0);
+            check_all_ops::<S, D>(f1, f2, fd);
+            for rm in RMS {
+                assert_eq!(
+                    swar_exsdotp_operands_finite_m::<S, D>(f1, f2, fd, rm),
+                    simd_exsdotp_m::<S, D>(f1, f2, fd, rm)
+                );
+                // Operands-finite variant with a special accumulator
+                // must still fall back correctly.
+                let inf_acc = fd | (D::EXP_FIELD_MASK << D::MAN_BITS);
+                assert_eq!(
+                    swar_exsdotp_operands_finite_m::<S, D>(f1, f2, inf_acc, rm),
+                    simd_exsdotp_m::<S, D>(f1, f2, inf_acc, rm)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn swar_bit_identical_fp16_to_fp32() {
+        diff_sweep::<Fp16, Fp32>(1_500);
+    }
+
+    #[test]
+    fn swar_bit_identical_fp16alt_to_fp32() {
+        diff_sweep::<Fp16alt, Fp32>(1_500);
+    }
+
+    #[test]
+    fn swar_bit_identical_fp8_to_fp16() {
+        diff_sweep::<Fp8, Fp16>(1_500);
+    }
+
+    #[test]
+    fn swar_bit_identical_fp8_to_fp16alt() {
+        diff_sweep::<Fp8, Fp16alt>(1_500);
+    }
+
+    #[test]
+    fn swar_bit_identical_fp8alt_to_fp16() {
+        diff_sweep::<Fp8alt, Fp16>(1_500);
+    }
+
+    #[test]
+    fn swar_bit_identical_fp8alt_to_fp16alt() {
+        diff_sweep::<Fp8alt, Fp16alt>(1_500);
+    }
+
+    #[test]
+    fn targeted_special_registers() {
+        // Hand-placed special lanes: NaN propagation, ±∞, ∞×0 invalid
+        // products, signed-zero sums under Rdn, subnormal operands — all
+        // must route through the screen to the scalar tier and agree.
+        let nan16 = 0x7e00u64;
+        let inf16 = 0x7c00u64;
+        let sub16 = 0x0001u64;
+        let nzero16 = 0x8000u64;
+        let cases: [(u64, u64, u64); 6] = [
+            // NaN in one source lane, rest finite.
+            ((nan16 << 16) | 0x3c00, 0x3c00_3c00_3c00_3c00, 0),
+            // +∞ × −1 product against finite accumulator.
+            ((inf16 << 48) | 0x3c00, 0xbc00_3c00_3c00_3c00, 0x3f80_0000_3f80_0000),
+            // ∞ × 0: invalid product ⇒ NaN lane.
+            (inf16, 0x0000_0000_0000_0000, 0),
+            // Subnormal-only sources (finite path, denormal weights).
+            ((sub16 << 32) | sub16, (sub16 << 16) | sub16, 0),
+            // Signed zeros everywhere: zero-sign rule per rounding mode.
+            (nzero16 | (nzero16 << 16), nzero16 << 32, 0x8000_0000_8000_0000),
+            // ∞ − ∞ through the accumulator.
+            ((inf16 << 16) | inf16, 0x3c00_3c00_3c00_3c00, 0xff80_0000_7f80_0000),
+        ];
+        for (rs1, rs2, rd) in cases {
+            check_all_ops::<Fp16, Fp32>(rs1, rs2, rd);
+        }
+        // FP8 lane torture: every lane a different class.
+        let rs1 = 0x7c_7f_fc_00_80_01_7b_34u64; // inf nan -inf 0 -0 sub max 1-ish
+        let rs2 = 0x34_34_34_34_34_34_34_34u64;
+        check_all_ops::<Fp8, Fp16>(rs1, rs2, 0x7e00_0000_0001_8000);
+    }
+
+    #[test]
+    fn finite_path_really_taken() {
+        // Guard against a regression where the screen misclassifies and
+        // everything silently falls back: an all-finite register must be
+        // classified clean for both formats of the pair.
+        let rs1 = 0x3434_3434_3434_3434u64;
+        assert!(special_lanes::<Fp8>(rs1) == 0);
+        assert_eq!(
+            swar_exsdotp_finite_m::<Fp8, Fp16>(rs1, rs1, 0, RoundingMode::Rne),
+            simd_exsdotp_m::<Fp8, Fp16>(rs1, rs1, 0, RoundingMode::Rne)
+        );
+    }
+}

@@ -23,6 +23,20 @@
 
 use super::FpFormat;
 
+/// Broadcast `pattern` (the low `width` bits) into every `width`-bit
+/// lane of a 64-bit register. `width` must divide 64 — true for every
+/// paper format (8/16/32/64), and the SWAR tier is only instantiated at
+/// those.
+pub const fn splat(pattern: u64, width: u32) -> u64 {
+    let mut out = 0u64;
+    let mut sh = 0u32;
+    while sh < 64 {
+        out |= pattern << sh;
+        sh += width;
+    }
+    out
+}
+
 /// A floating-point format known at compile time. All parameters are
 /// associated constants derived from `EXP_BITS`/`MAN_BITS`, mirroring
 /// [`FpFormat`]'s methods one for one.
@@ -42,6 +56,31 @@ pub trait FormatSpec: Copy + Send + Sync + 'static {
     const PRECISION: u32 = Self::MAN_BITS + 1;
     /// Exponent bias.
     const BIAS: i32 = (1 << (Self::EXP_BITS - 1)) - 1;
+
+    // ---- SWAR lane masks / broadcast planes -------------------------
+    //
+    // The SWAR tier ([`crate::softfloat::swar`], [`crate::exsdotp::swar`])
+    // treats a packed `u64` as `LANES` parallel bit fields. These
+    // constants are the broadcast masks that address one field of every
+    // lane at once; they constant-fold per instantiation exactly like
+    // the width/bias parameters above.
+
+    /// Mask of one lane's storage bits (low `WIDTH` bits).
+    const LANE_MASK: u64 = if Self::WIDTH == 64 { u64::MAX } else { (1u64 << Self::WIDTH) - 1 };
+    /// Mask of one lane's exponent field, at the field's own base.
+    const EXP_FIELD_MASK: u64 = (1u64 << Self::EXP_BITS) - 1;
+    /// Mask of one lane's mantissa field, at the field's own base.
+    const MAN_FIELD_MASK: u64 = (1u64 << Self::MAN_BITS) - 1;
+    /// Bit 0 of every lane.
+    const LANE_LSB_PLANE: u64 = splat(1, Self::WIDTH);
+    /// The sign bit of every lane, in place.
+    const SIGN_PLANE: u64 = splat(1u64 << (Self::WIDTH - 1), Self::WIDTH);
+    /// Every lane's exponent-field mask, shifted down to the lane base
+    /// (apply after `reg >> MAN_BITS`).
+    const EXP_FIELD_PLANE: u64 = splat(Self::EXP_FIELD_MASK, Self::WIDTH);
+    /// Every lane's mantissa-field mask, in place (the mantissa already
+    /// sits at the lane base).
+    const MAN_FIELD_PLANE: u64 = splat(Self::MAN_FIELD_MASK, Self::WIDTH);
 }
 
 /// FP8 (e5m2).
@@ -163,6 +202,39 @@ mod tests {
         assert_eq!(Fp16alt::FMT, FP16ALT);
         assert_eq!(Fp32::FMT, FP32);
         assert_eq!(Fp64::FMT, FP64);
+    }
+
+    #[test]
+    fn swar_planes_address_every_lane() {
+        // Spot checks against hand-written masks…
+        assert_eq!(Fp8::LANE_LSB_PLANE, 0x0101_0101_0101_0101);
+        assert_eq!(Fp8::SIGN_PLANE, 0x8080_8080_8080_8080);
+        assert_eq!(Fp16::LANE_LSB_PLANE, 0x0001_0001_0001_0001);
+        assert_eq!(Fp16::SIGN_PLANE, 0x8000_8000_8000_8000);
+        assert_eq!(Fp16::MAN_FIELD_PLANE, 0x03ff_03ff_03ff_03ff);
+        assert_eq!(Fp64::SIGN_PLANE, 0x8000_0000_0000_0000);
+        assert_eq!(Fp64::LANE_MASK, u64::MAX);
+
+        // …and the general invariants: each plane is the per-lane field
+        // replicated at every lane base, for every paper format.
+        fn check<F: FormatSpec>() {
+            assert_eq!(F::LANES * F::WIDTH, 64, "paper formats tile a register exactly");
+            for i in 0..F::LANES {
+                let sh = i * F::WIDTH;
+                assert_eq!((F::LANE_LSB_PLANE >> sh) & F::LANE_MASK, 1);
+                assert_eq!((F::SIGN_PLANE >> sh) & F::LANE_MASK, 1 << (F::WIDTH - 1));
+                assert_eq!((F::EXP_FIELD_PLANE >> sh) & F::LANE_MASK, F::EXP_FIELD_MASK);
+                assert_eq!((F::MAN_FIELD_PLANE >> sh) & F::LANE_MASK, F::MAN_FIELD_MASK);
+            }
+            assert_eq!(F::EXP_FIELD_MASK, F::FMT.exp_special());
+            assert_eq!(F::MAN_FIELD_MASK, F::FMT.man_mask());
+        }
+        check::<Fp8>();
+        check::<Fp8alt>();
+        check::<Fp16>();
+        check::<Fp16alt>();
+        check::<Fp32>();
+        check::<Fp64>();
     }
 
     #[test]

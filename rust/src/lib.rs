@@ -81,6 +81,14 @@
 //!
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
 //! reproduced tables and figures.
+//!
+//! The batch engine's lane math runs a SWAR (SIMD-within-a-register)
+//! tier by default ([`batch::LaneTier`]); the `simd-nightly` cargo
+//! feature additionally widens the packed-panel screens with
+//! `std::simd` (nightly toolchains only — the stable SWAR default needs
+//! no feature).
+
+#![cfg_attr(feature = "simd-nightly", feature(portable_simd))]
 
 pub mod accuracy;
 pub mod api;

@@ -24,11 +24,19 @@
 //! * [`fast`] provides monomorphized twins (`add_m::<Fp16>`, …) that
 //!   call the *same* implementations with compile-time formats, for the
 //!   batch engine's hot loops ([`crate::batch`]).
+//!
+//! A third, register-level layer — [`swar`] — treats a packed `u64` as
+//! all of a format's SIMD lanes at once: bit-plane field extraction and
+//! branch-free special-lane classification, feeding the SWAR ExSdotp
+//! kernels in [`crate::exsdotp::swar`]. It adds no third numerics
+//! implementation: special registers route back to the scalar tier and
+//! finite lanes terminate in the same [`round::round_pack`].
 
 pub mod convert;
 pub mod fast;
 pub mod ops;
 pub mod round;
+pub mod swar;
 #[cfg(test)]
 mod tests;
 pub mod unpack;

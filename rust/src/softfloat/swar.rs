@@ -1,0 +1,201 @@
+//! SWAR (SIMD-within-a-register) field planes and lane classification.
+//!
+//! The scalar fast tier ([`super::fast`]) still touches a packed
+//! register one lane at a time: every lane round-trips through
+//! [`super::unpack::unpack`], which re-derives its class with per-lane
+//! branches. This module is the register-level alternative: treating
+//! the 64-bit word as [`FormatSpec::LANES`] parallel bit fields, it
+//! extracts the sign/exponent/mantissa **planes** of all lanes with a
+//! handful of shared shift/mask operations, and classifies special
+//! lanes (NaN/∞) for the whole register with one branch-free AND-fold.
+//!
+//! The planes feed the SWAR ExSdotp kernels in [`crate::exsdotp::swar`];
+//! the classification is the screen those kernels use to route rare
+//! special-valued registers to the scalar tier (keeping bit-identity
+//! trivially) while the all-finite common case runs the lane-parallel
+//! fixed-point path.
+//!
+//! With the `simd-nightly` cargo feature, the slice-level screen
+//! ([`slice_all_finite`]) additionally processes eight packed words per
+//! step through `std::simd`; the stable default is the scalar-word loop.
+//! Both compute the identical predicate.
+
+use crate::formats::spec::FormatSpec;
+
+/// Bit `i·WIDTH` set iff lane `i` of `reg` has an all-ones exponent
+/// field (NaN or ±∞). Branch-free: AND-folds every lane's exponent bits
+/// down to the lane's bit 0 in `EXP_BITS − 1` shared shift/AND steps
+/// (a compile-time trip count after monomorphization).
+#[inline]
+pub fn special_lanes<F: FormatSpec>(reg: u64) -> u64 {
+    let mut acc = reg >> F::MAN_BITS;
+    let mut j = 1;
+    while j < F::EXP_BITS {
+        acc &= reg >> (F::MAN_BITS + j);
+        j += 1;
+    }
+    acc & F::LANE_LSB_PLANE
+}
+
+/// True when no lane of `reg` is NaN or ±∞.
+#[inline]
+pub fn all_finite<F: FormatSpec>(reg: u64) -> bool {
+    special_lanes::<F>(reg) == 0
+}
+
+/// The sign bit of every lane, moved to the lane base (0 or 1 per lane).
+#[inline]
+pub fn sign_plane<F: FormatSpec>(reg: u64) -> u64 {
+    (reg >> (F::WIDTH - 1)) & F::LANE_LSB_PLANE
+}
+
+/// The exponent field of every lane, moved to the lane base.
+#[inline]
+pub fn exp_plane<F: FormatSpec>(reg: u64) -> u64 {
+    (reg >> F::MAN_BITS) & F::EXP_FIELD_PLANE
+}
+
+/// The mantissa field of every lane (already at the lane base).
+#[inline]
+pub fn man_plane<F: FormatSpec>(reg: u64) -> u64 {
+    reg & F::MAN_FIELD_PLANE
+}
+
+/// True when no lane of any word in `words` is NaN or ±∞ — the
+/// pack-once panel screen: a GEMM checks its packed operands a single
+/// time, then streams them through the accumulator-screen-only SWAR
+/// kernel.
+#[inline]
+pub fn slice_all_finite<F: FormatSpec>(words: &[u64]) -> bool {
+    #[cfg(feature = "simd-nightly")]
+    {
+        wide::slice_all_finite_wide::<F>(words)
+    }
+    #[cfg(not(feature = "simd-nightly"))]
+    {
+        slice_all_finite_scalar::<F>(words)
+    }
+}
+
+/// Stable scalar-word screen (also the differential reference for the
+/// `simd-nightly` path).
+#[inline]
+pub fn slice_all_finite_scalar<F: FormatSpec>(words: &[u64]) -> bool {
+    // OR-fold specials over short runs so the hot loop stays branch-free
+    // but a special still exits early at slice scale.
+    for run in words.chunks(64) {
+        let mut any = 0u64;
+        for &w in run {
+            any |= special_lanes::<F>(w);
+        }
+        if any != 0 {
+            return false;
+        }
+    }
+    true
+}
+
+/// `std::simd`-accelerated slice screen: eight packed words per step.
+#[cfg(feature = "simd-nightly")]
+mod wide {
+    use super::FormatSpec;
+    use std::simd::u64x8;
+
+    pub fn slice_all_finite_wide<F: FormatSpec>(words: &[u64]) -> bool {
+        let (head, tail) = words.split_at(words.len() - words.len() % 8);
+        for run in head.chunks(8 * 8) {
+            let mut any = u64x8::splat(0);
+            for blk in run.chunks_exact(8) {
+                let v = u64x8::from_slice(blk);
+                // Same AND-fold as `special_lanes`, eight words wide.
+                let mut acc = v >> u64x8::splat(F::MAN_BITS as u64);
+                let mut j = 1;
+                while j < F::EXP_BITS {
+                    acc &= v >> u64x8::splat((F::MAN_BITS + j) as u64);
+                    j += 1;
+                }
+                any |= acc & u64x8::splat(F::LANE_LSB_PLANE);
+            }
+            if any.reduce_or() != 0 {
+                return false;
+            }
+        }
+        super::slice_all_finite_scalar::<F>(tail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::spec::{Fp16, Fp16alt, Fp32, Fp64, Fp8, Fp8alt};
+    use crate::util::prop::for_all;
+
+    /// Reference classification through the descriptor unpack path.
+    fn special_lanes_ref<F: FormatSpec>(reg: u64) -> u64 {
+        let mut out = 0u64;
+        for i in 0..F::LANES {
+            let lane = (reg >> (i * F::WIDTH)) & F::LANE_MASK;
+            let u = crate::softfloat::unpack(F::FMT, lane);
+            if u.is_nan() || u.is_inf() {
+                out |= 1u64 << (i * F::WIDTH);
+            }
+        }
+        out
+    }
+
+    fn sweep<F: FormatSpec>() {
+        for_all("swar special_lanes vs unpack", 4_000, |rng| {
+            let reg = rng.next_u64();
+            assert_eq!(special_lanes::<F>(reg), special_lanes_ref::<F>(reg));
+            // Planes agree with per-lane field extraction.
+            for i in 0..F::LANES {
+                let sh = i * F::WIDTH;
+                let lane = (reg >> sh) & F::LANE_MASK;
+                assert_eq!((sign_plane::<F>(reg) >> sh) & 1, lane >> (F::WIDTH - 1));
+                assert_eq!((exp_plane::<F>(reg) >> sh) & F::EXP_FIELD_MASK, (lane >> F::MAN_BITS) & F::EXP_FIELD_MASK);
+                assert_eq!((man_plane::<F>(reg) >> sh) & F::MAN_FIELD_MASK, lane & F::MAN_FIELD_MASK);
+            }
+        });
+    }
+
+    #[test]
+    fn classification_matches_unpack_all_formats() {
+        sweep::<Fp8>();
+        sweep::<Fp8alt>();
+        sweep::<Fp16>();
+        sweep::<Fp16alt>();
+        sweep::<Fp32>();
+        sweep::<Fp64>();
+    }
+
+    #[test]
+    fn targeted_special_patterns() {
+        // FP8 e5m2: exp=11111 ⇒ 0x7c..=0x7f are Inf/NaN; 0x7b is max finite.
+        assert_eq!(special_lanes::<Fp8>(0x7c), 1);
+        assert_eq!(special_lanes::<Fp8>(0x7f), 1);
+        assert_eq!(special_lanes::<Fp8>(0xfc), 1); // -Inf
+        assert_eq!(special_lanes::<Fp8>(0x7b), 0);
+        // Lane 3 of eight.
+        assert_eq!(special_lanes::<Fp8>(0x7c << 24), 1 << 24);
+        // FP16 +Inf in lane 2, NaN in lane 0.
+        let reg = (0x7c00u64 << 32) | 0x7e00;
+        assert_eq!(special_lanes::<Fp16>(reg), (1 << 32) | 1);
+        assert!(!all_finite::<Fp16>(reg));
+        // Subnormals, zeros and max-finite lanes are all finite.
+        assert!(all_finite::<Fp16>(0x0001_8000_03ff_7bff));
+    }
+
+    #[test]
+    fn slice_screen_matches_wordwise() {
+        for_all("slice_all_finite vs per-word", 300, |rng| {
+            let n = (rng.below(200) + 1) as usize;
+            let mut v: Vec<u64> = (0..n).map(|_| rng.next_u64() & 0x7b7b_7b7b_7b7b_7b7b).collect();
+            assert!(slice_all_finite::<Fp8>(&v), "masked words have no special exp fields");
+            // Inject one special lane at a random word.
+            let at = rng.below(n as u64) as usize;
+            v[at] |= 0x7cu64 << (8 * rng.below(8));
+            assert!(!slice_all_finite::<Fp8>(&v));
+            assert_eq!(slice_all_finite_scalar::<Fp8>(&v), slice_all_finite::<Fp8>(&v));
+        });
+    }
+}
