@@ -2,7 +2,11 @@
 //!
 //! Prints the full Table II grid (simulated vs paper cycles) and
 //! measures how fast the cycle-level simulation itself runs — both
-//! engines driven through the typed `Session`/`GemmPlan` API.
+//! engines driven through the typed `Session`/`GemmPlan` API — then
+//! runs the SoC roofline sweep and appends a trajectory point to
+//! `BENCH_cluster.json`.
+
+use std::io::Write;
 
 use minifloat_nn::isa::instr::{OpWidth, ScalarFmt};
 use minifloat_nn::prelude::*;
@@ -49,5 +53,35 @@ fn main() {
         b.bench_throughput(&format!("fun {label}"), flops, || {
             plan.run_f64(&a, &bm).expect("valid run").c
         });
+    }
+
+    println!("\n== SoC roofline (FLOP/cycle + GFLOPS/W vs cluster count) ==");
+    let rows = minifloat_nn::soc::run_roofline(
+        &[1, 2, 4, 8],
+        &[GemmKind::ExSdotp(OpWidth::BtoH), GemmKind::ExSdotp(OpWidth::HtoS)],
+        128,
+        256,
+        128,
+        ExecMode::CycleAccurate,
+        42,
+    )
+    .expect("the anchor roofline sweep is a valid configuration");
+    print!("{}", report::roofline_text(&rows));
+
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let json = format!(
+        "{{\"bench\":\"soc_roofline_128x256x128\",\"unix_time\":{ts},\
+         \"deterministic\":true,\"body\":{}}}\n",
+        report::roofline_json(&rows)
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open("BENCH_cluster.json") {
+        Ok(mut f) => {
+            let _ = f.write_all(json.as_bytes());
+            println!("trajectory point appended to BENCH_cluster.json");
+        }
+        Err(e) => eprintln!("could not write BENCH_cluster.json: {e}"),
     }
 }

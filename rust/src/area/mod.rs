@@ -210,6 +210,26 @@ pub fn cluster_total_mge() -> f64 {
     cluster_breakdown_mge().iter().map(|(_, a)| a).sum()
 }
 
+/// SoC area in MGE: N clusters + shared L2 SRAM + the cluster-to-L2
+/// interconnect. L2 SRAM macros are denser than TCDM banks (~1.2
+/// GE-equivalent/bit vs 1.9 — single wide port, no 32-way banking);
+/// the interconnect term grows with the crossbar's port count.
+pub fn soc_breakdown_mge(n_clusters: usize, l2_kib: usize) -> Vec<(&'static str, f64)> {
+    let clusters = n_clusters as f64 * cluster_total_mge();
+    let l2 = l2_kib as f64 * 1024.0 * 8.0 * 1.2 / 1e6;
+    let interconnect = 0.08 + 0.06 * n_clusters as f64;
+    vec![
+        ("clusters", clusters),
+        ("L2 SRAM", l2),
+        ("L2 interconnect", interconnect),
+    ]
+}
+
+/// Total SoC area in MGE.
+pub fn soc_total_mge(n_clusters: usize, l2_kib: usize) -> f64 {
+    soc_breakdown_mge(n_clusters, l2_kib).iter().map(|(_, a)| a).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,6 +283,18 @@ mod tests {
     fn cluster_total_matches_4_3_mge() {
         let total = cluster_total_mge();
         assert!((4.0..4.6).contains(&total), "cluster {total:.2} MGE");
+    }
+
+    #[test]
+    fn soc_area_scales_with_clusters_and_is_cluster_dominated() {
+        let one = soc_total_mge(1, 1024);
+        let eight = soc_total_mge(8, 1024);
+        assert!(eight > one, "more clusters must cost more");
+        // Clusters dominate: 8 clusters alone are ≥ 70% of the SoC.
+        let clusters = 8.0 * cluster_total_mge();
+        assert!(clusters / eight > 0.7, "cluster share {:.2}", clusters / eight);
+        // And the uncore is not free either.
+        assert!(eight > clusters);
     }
 
     #[test]

@@ -1,20 +1,55 @@
 //! The cluster DMA engine (the ninth, data-mover core's backend).
 //!
-//! Transfers are 1-D byte copies between global memory and the TCDM
-//! (either direction), processed in FIFO order at [`DMA_BYTES_PER_CYCLE`]
-//! — the 512-bit-wide mover of the Snitch cluster.
+//! Transfers are byte copies between global memory and the TCDM (either
+//! direction), processed in FIFO order at [`DMA_BYTES_PER_CYCLE`] — the
+//! 512-bit-wide mover of the Snitch cluster. Two shapes are supported:
+//!
+//! * **1-D** ([`DmaEngine::enqueue`]): a contiguous copy of `len` bytes.
+//! * **2-D strided** ([`DmaEngine::enqueue_2d`]): `rows` segments of
+//!   `row_bytes` each, with independent source and destination strides
+//!   between segment starts — the shape a GEMM tile sub-rectangle has
+//!   in a larger row-major matrix. The per-cycle budget flows across
+//!   row boundaries, so a 2-D transfer costs the same cycles as a 1-D
+//!   transfer of the same total size (the real mover's address
+//!   generators also keep the 512-bit port saturated across rows).
+//!
+//! Completion is observable two ways: drain [`DmaEngine::take_completed`]
+//! for the ids finished since the last drain (always in FIFO order), or
+//! register a hook with [`DmaEngine::set_on_complete`] that fires inside
+//! `tick` the cycle a transfer retires — the double-buffering signal the
+//! SoC model's ping-pong schedule keys on.
 
 use super::{GLOBAL_BASE, TCDM_BASE};
 
 /// Peak DMA bandwidth (bytes per cycle).
 pub const DMA_BYTES_PER_CYCLE: u64 = 64;
 
-/// One queued transfer.
+/// One queued transfer (1-D is the `rows_left == 1` special case).
 #[derive(Clone, Copy, Debug)]
 struct Transfer {
+    id: u32,
+    /// Cursor into the current row.
     src: u64,
     dst: u64,
-    remaining: u64,
+    /// Bytes left in the current row.
+    row_remaining: u64,
+    /// Rows left including the current one.
+    rows_left: u64,
+    /// Full row length (reloaded on row advance).
+    row_bytes: u64,
+    /// Start-to-start stride between consecutive source rows.
+    src_stride: u64,
+    /// Start-to-start stride between consecutive destination rows.
+    dst_stride: u64,
+    /// Base of the current row (cursor reload origin).
+    src_row: u64,
+    dst_row: u64,
+}
+
+impl Transfer {
+    fn total_remaining(&self) -> u64 {
+        self.row_remaining + (self.rows_left.saturating_sub(1)) * self.row_bytes
+    }
 }
 
 /// FIFO DMA engine.
@@ -26,17 +61,49 @@ pub struct DmaEngine {
     pub dst: u64,
     queue: Vec<Transfer>,
     next_id: u32,
+    completed: Vec<u32>,
+    on_complete: Option<Box<dyn FnMut(u32)>>,
     /// Total bytes moved (stats).
     pub bytes_moved: u64,
 }
 
 impl DmaEngine {
-    /// Enqueue a copy of `len` bytes from the staged src to the staged
-    /// dst. Returns the transfer id.
+    /// Enqueue a 1-D copy of `len` bytes from the staged src to the
+    /// staged dst. Returns the transfer id.
     pub fn enqueue(&mut self, len: u64) -> u32 {
-        self.queue.push(Transfer { src: self.src, dst: self.dst, remaining: len });
+        self.enqueue_2d(1, len, 0, 0)
+    }
+
+    /// Enqueue a 2-D strided copy: `rows` segments of `row_bytes` each,
+    /// source rows `src_stride` bytes apart and destination rows
+    /// `dst_stride` bytes apart (both measured start-to-start; a stride
+    /// equal to `row_bytes` — or `0` with `rows == 1` — degenerates to
+    /// 1-D). Returns the transfer id; ids complete in FIFO order.
+    pub fn enqueue_2d(&mut self, rows: u64, row_bytes: u64, src_stride: u64, dst_stride: u64) -> u32 {
+        let id = self.next_id;
         self.next_id += 1;
-        self.next_id - 1
+        if rows == 0 || row_bytes == 0 {
+            // Zero-size transfers complete immediately (the hardware
+            // raises the event without touching memory).
+            self.completed.push(id);
+            if let Some(f) = self.on_complete.as_mut() {
+                f(id);
+            }
+            return id;
+        }
+        self.queue.push(Transfer {
+            id,
+            src: self.src,
+            dst: self.dst,
+            row_remaining: row_bytes,
+            rows_left: rows,
+            row_bytes,
+            src_stride,
+            dst_stride,
+            src_row: self.src,
+            dst_row: self.dst,
+        });
+        id
     }
 
     /// Transfers still in flight.
@@ -44,25 +111,71 @@ impl DmaEngine {
         self.queue.len() as u32
     }
 
+    /// Bytes still to be moved across all queued transfers.
+    pub fn bytes_outstanding(&self) -> u64 {
+        self.queue.iter().map(|t| t.total_remaining()).sum()
+    }
+
+    /// Drain the ids of transfers that completed since the last drain,
+    /// in completion (= FIFO submission) order.
+    pub fn take_completed(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.completed)
+    }
+
+    /// Register a transfer-complete hook, called inside [`DmaEngine::tick`]
+    /// (and for zero-size enqueues) with the retiring transfer id.
+    /// Replaces any previous hook. [`DmaEngine::take_completed`] still
+    /// records ids independently of the hook.
+    pub fn set_on_complete(&mut self, f: impl FnMut(u32) + 'static) {
+        self.on_complete = Some(Box::new(f));
+    }
+
     /// Move up to the per-cycle budget.
     pub fn tick(&mut self, tcdm: &mut [u8], global: &mut [u8]) {
         let mut budget = DMA_BYTES_PER_CYCLE;
         while budget > 0 {
             let Some(t) = self.queue.first_mut() else { break };
-            let chunk = t.remaining.min(budget);
-            // Byte-by-byte copy through a small stack buffer (chunk ≤ 64).
+            // Copy within the current row only; the loop continues into
+            // the next row (or next transfer) with the leftover budget.
+            let chunk = t.row_remaining.min(budget);
             let mut buf = [0u8; DMA_BYTES_PER_CYCLE as usize];
             read_mem(tcdm, global, t.src, &mut buf[..chunk as usize]);
             write_mem(tcdm, global, t.dst, &buf[..chunk as usize]);
             t.src += chunk;
             t.dst += chunk;
-            t.remaining -= chunk;
+            t.row_remaining -= chunk;
             self.bytes_moved += chunk;
             budget -= chunk;
-            if t.remaining == 0 {
-                self.queue.remove(0);
+            if t.row_remaining == 0 {
+                t.rows_left -= 1;
+                if t.rows_left == 0 {
+                    let id = t.id;
+                    self.queue.remove(0);
+                    self.completed.push(id);
+                    if let Some(f) = self.on_complete.as_mut() {
+                        f(id);
+                    }
+                } else {
+                    t.src_row += t.src_stride;
+                    t.dst_row += t.dst_stride;
+                    t.src = t.src_row;
+                    t.dst = t.dst_row;
+                    t.row_remaining = t.row_bytes;
+                }
             }
         }
+    }
+
+    /// Run the engine to completion (host-side helper for models that
+    /// account DMA time analytically): ticks until the queue drains and
+    /// returns the number of cycles taken.
+    pub fn drain(&mut self, tcdm: &mut [u8], global: &mut [u8]) -> u64 {
+        let mut cycles = 0;
+        while self.outstanding() > 0 {
+            self.tick(tcdm, global);
+            cycles += 1;
+        }
+        cycles
     }
 }
 
@@ -119,5 +232,103 @@ mod tests {
         assert_eq!(dma.enqueue(10), 0);
         assert_eq!(dma.enqueue(10), 1);
         assert_eq!(dma.outstanding(), 2);
+    }
+
+    #[test]
+    fn strided_2d_gathers_a_tile_rectangle() {
+        // A 4-row × 24-byte sub-rectangle of a 64-byte-pitch matrix in
+        // global memory, packed contiguously into TCDM.
+        let (rows, row_bytes, pitch) = (4u64, 24u64, 64u64);
+        let mut global = vec![0u8; 1024];
+        for (i, b) in global.iter_mut().enumerate() {
+            *b = (i % 251) as u8;
+        }
+        let mut tcdm = vec![0u8; 256];
+        let mut dma = DmaEngine::default();
+        let src_off = 8u64; // tile starts mid-row
+        dma.src = GLOBAL_BASE + src_off;
+        dma.dst = TCDM_BASE;
+        dma.enqueue_2d(rows, row_bytes, pitch, row_bytes);
+        let cycles = dma.drain(&mut tcdm, &mut global);
+        // Budget flows across row boundaries: same cycles as a 1-D copy.
+        let total = rows * row_bytes;
+        assert_eq!(cycles, total.div_ceil(DMA_BYTES_PER_CYCLE));
+        assert_eq!(dma.bytes_moved, total);
+        for r in 0..rows {
+            let g = (src_off + r * pitch) as usize;
+            let t = (r * row_bytes) as usize;
+            assert_eq!(
+                &tcdm[t..t + row_bytes as usize],
+                &global[g..g + row_bytes as usize],
+                "row {r} stride math"
+            );
+        }
+    }
+
+    #[test]
+    fn strided_2d_scatters_back_to_global() {
+        // The write-back direction: contiguous TCDM rows scattered into
+        // a strided global destination (C tile into the big C matrix).
+        let (rows, row_bytes, pitch) = (3u64, 16u64, 40u64);
+        let mut tcdm = vec![0u8; 256];
+        for (i, b) in tcdm.iter_mut().enumerate() {
+            *b = (i as u8) ^ 0xA5;
+        }
+        let mut global = vec![0u8; 512];
+        let mut dma = DmaEngine::default();
+        dma.src = TCDM_BASE;
+        dma.dst = GLOBAL_BASE + 4;
+        dma.enqueue_2d(rows, row_bytes, row_bytes, pitch);
+        dma.drain(&mut tcdm, &mut global);
+        for r in 0..rows {
+            let t = (r * row_bytes) as usize;
+            let g = (4 + r * pitch) as usize;
+            assert_eq!(&global[g..g + row_bytes as usize], &tcdm[t..t + row_bytes as usize]);
+        }
+    }
+
+    #[test]
+    fn completion_events_drain_in_fifo_order() {
+        let mut tcdm = vec![0u8; 1024];
+        let mut global = vec![0u8; 1024];
+        let mut dma = DmaEngine::default();
+        dma.src = GLOBAL_BASE;
+        dma.dst = TCDM_BASE;
+        let id0 = dma.enqueue(96);
+        dma.src = GLOBAL_BASE + 96;
+        dma.dst = TCDM_BASE + 96;
+        let id1 = dma.enqueue_2d(2, 32, 48, 32);
+        assert!(dma.take_completed().is_empty(), "nothing retires before ticking");
+        // 96 B = 1.5 cycles: id0 retires mid-cycle 2 and id1's first 32 B
+        // move in the same cycle with the leftover budget.
+        dma.tick(&mut tcdm, &mut global);
+        assert!(dma.take_completed().is_empty());
+        dma.tick(&mut tcdm, &mut global);
+        assert_eq!(dma.take_completed(), vec![id0]);
+        dma.drain(&mut tcdm, &mut global);
+        assert_eq!(dma.take_completed(), vec![id1]);
+        assert!(dma.take_completed().is_empty(), "drain is destructive");
+    }
+
+    #[test]
+    fn completion_hook_fires_once_per_transfer() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        let mut tcdm = vec![0u8; 256];
+        let mut global = vec![0u8; 256];
+        let mut dma = DmaEngine::default();
+        let seen: Rc<RefCell<Vec<u32>>> = Rc::default();
+        let sink = Rc::clone(&seen);
+        dma.set_on_complete(move |id| sink.borrow_mut().push(id));
+        dma.src = GLOBAL_BASE;
+        dma.dst = TCDM_BASE;
+        let a = dma.enqueue(64);
+        let b = dma.enqueue(64);
+        let z = dma.enqueue(0); // zero-size: completes at enqueue
+        assert_eq!(*seen.borrow(), vec![z]);
+        dma.drain(&mut tcdm, &mut global);
+        assert_eq!(*seen.borrow(), vec![z, a, b]);
+        // The drain-style API observed the same retirements.
+        assert_eq!(dma.take_completed(), vec![z, a, b]);
     }
 }

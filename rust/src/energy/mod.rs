@@ -90,8 +90,10 @@ pub struct EnergyReport {
     pub gflops_per_w: f64,
 }
 
-/// Estimate energy for a simulated run from its op counters.
-pub fn estimate(stats: &CoreStats, cycles: u64, class: ComputeClass, table: &EnergyTable) -> EnergyReport {
+/// Dynamic (switching) energy in pJ for one run's op counters — the
+/// per-cycle static term is the caller's, so multi-cluster aggregations
+/// can bill static time per cluster without double counting.
+fn dynamic_pj(stats: &CoreStats, class: ComputeClass, table: &EnergyTable) -> f64 {
     let fpu_op = match class {
         ComputeClass::Sdotp(OpWidth::BtoH) => table.sdotp_btoh,
         ComputeClass::Sdotp(OpWidth::HtoS) => table.sdotp_htos,
@@ -110,17 +112,95 @@ pub fn estimate(stats: &CoreStats, cycles: u64, class: ComputeClass, table: &Ene
     pj += stats.ssr_elems as f64 * table.tcdm;
     pj += stats.ops_fmem as f64 * table.tcdm; // data side of fl/fs
     pj += stats.int_retired as f64 * table.int_instr;
-    pj += cycles as f64 * table.static_per_cycle;
+    pj
+}
 
+fn report(pj: f64, flops: f64, cycles: u64) -> EnergyReport {
     let seconds = cycles as f64 / (FREQ_GHZ * 1e9);
     let total_j = pj * 1e-12;
-    let flops = stats.flops as f64;
     EnergyReport {
         total_uj: total_j * 1e6,
         avg_mw: total_j / seconds * 1e3,
         gflops: flops / seconds / 1e9,
         gflops_per_w: flops / total_j / 1e9,
     }
+}
+
+/// Estimate energy for a simulated run from its op counters.
+pub fn estimate(stats: &CoreStats, cycles: u64, class: ComputeClass, table: &EnergyTable) -> EnergyReport {
+    let pj = dynamic_pj(stats, class, table) + cycles as f64 * table.static_per_cycle;
+    report(pj, stats.flops as f64, cycles)
+}
+
+// --------------------------------------------------------- SoC aggregation
+
+/// SoC-level energy terms layered on the per-cluster table: the shared
+/// L2 and the cluster-to-L2 interconnect. Model values in the same
+/// 0.8 V GF12 regime as [`EnergyTable`]: SRAM macro access energy per
+/// byte, interconnect wire/mux toggling per byte, and an L2 + fabric
+/// leakage/clock term per cycle.
+#[derive(Clone, Copy, Debug)]
+pub struct SocEnergyTable {
+    /// L2 SRAM access energy per byte (pJ/B).
+    pub l2_per_byte: f64,
+    /// Interconnect traversal energy per byte (pJ/B).
+    pub interconnect_per_byte: f64,
+    /// L2 + interconnect static/clock energy per cycle (pJ).
+    pub l2_static_per_cycle: f64,
+}
+
+impl Default for SocEnergyTable {
+    fn default() -> Self {
+        SocEnergyTable { l2_per_byte: 1.1, interconnect_per_byte: 0.4, l2_static_per_cycle: 60.0 }
+    }
+}
+
+/// Compute-region aggregate over clusters — the paper's *cluster*
+/// efficiency metric, scaled out: each entry is one cluster's
+/// (aggregated op counters, busy compute cycles). Static energy is
+/// billed per cluster for its own busy window; the wall clock for
+/// power/GFLOPS is the slowest cluster's busy window (they compute in
+/// parallel). With a single cluster this reduces exactly to
+/// [`estimate`] — the identity the roofline's N = 1 column and the
+/// `repro roofline --check-anchor` CI gate rely on.
+pub fn estimate_cluster_region(
+    clusters: &[(CoreStats, u64)],
+    class: ComputeClass,
+    table: &EnergyTable,
+) -> EnergyReport {
+    let mut pj = 0.0;
+    let mut flops = 0u64;
+    let mut busy_max = 0u64;
+    for (stats, busy) in clusters {
+        pj += dynamic_pj(stats, class, table) + *busy as f64 * table.static_per_cycle;
+        flops += stats.flops;
+        busy_max = busy_max.max(*busy);
+    }
+    report(pj, flops as f64, busy_max)
+}
+
+/// Whole-SoC estimate: cluster dynamic energy, per-cluster static for
+/// the full wall clock (idle clusters still burn leakage — the scale-out
+/// tax the roofline exists to show), plus L2/interconnect dynamic per
+/// byte moved and L2 static per cycle.
+pub fn estimate_soc(
+    clusters: &[(CoreStats, u64)],
+    total_cycles: u64,
+    l2_bytes: u64,
+    class: ComputeClass,
+    table: &EnergyTable,
+    soc: &SocEnergyTable,
+) -> EnergyReport {
+    let mut pj = 0.0;
+    let mut flops = 0u64;
+    for (stats, _busy) in clusters {
+        pj += dynamic_pj(stats, class, table);
+        flops += stats.flops;
+    }
+    pj += clusters.len() as f64 * total_cycles as f64 * table.static_per_cycle;
+    pj += l2_bytes as f64 * (soc.l2_per_byte + soc.interconnect_per_byte);
+    pj += total_cycles as f64 * soc.l2_static_per_cycle;
+    report(pj, flops as f64, total_cycles)
 }
 
 /// FPU-only peak efficiency for Table III's top rows: the op energy at
@@ -178,6 +258,84 @@ mod tests {
         assert!((rep.gflops - 128.0).abs() < 15.0, "GFLOPS {:.1}", rep.gflops);
         assert!((rep.avg_mw - 224.0).abs() < 35.0, "power {:.0} mW", rep.avg_mw);
         assert!((rep.gflops_per_w - 575.0).abs() < 60.0, "efficiency {:.0}", rep.gflops_per_w);
+    }
+
+    #[test]
+    fn fpu_peak_is_the_exact_16_flop_over_9p8_pj_derivation() {
+        // Calibration pin: the 1631 GFLOPS/W Table III figure is not a
+        // tuned constant but the arithmetic 16 FLOP / 9.8 pJ. If either
+        // the op energy or the derivation drifts, this fails exactly.
+        let t = EnergyTable::default();
+        assert_eq!(t.sdotp_btoh, 9.8, "exFP8 SDOTP op energy is the paper's 9.8 pJ");
+        let eff = fpu_peak_gflops_per_w(ComputeClass::Sdotp(OpWidth::BtoH), &t);
+        assert_eq!(eff, 16.0 / 9.8 * 1000.0, "derivation must be exactly FLOP/op ÷ pJ/op");
+        assert!((eff - 1632.65).abs() < 0.01, "≈1631 GFLOPS/W anchor, got {eff:.2}");
+    }
+
+    #[test]
+    fn anchor_gemm_cluster_power_derives_178_pj_per_cycle() {
+        // The 575 GFLOPS/W anchor implies 224 mW at 1.26 GHz, i.e.
+        // ≈177.8 pJ per cluster-cycle. Pin the simulated derivation:
+        // avg_mw / FREQ_GHZ is pJ/cycle by construction.
+        use crate::kernels::{GemmKernel, GemmKind};
+        let mut rng = crate::util::rng::Rng::new(3);
+        let (m, n, k) = (128, 256, 128);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+        let run = GemmKernel::new(GemmKind::ExSdotp(OpWidth::BtoH), m, n, k).run(&a, &b);
+        let rep = estimate(&run.stats, run.cycles, ComputeClass::Sdotp(OpWidth::BtoH), &EnergyTable::default());
+        let pj_per_cycle = rep.avg_mw / FREQ_GHZ;
+        assert!(
+            (160.0..195.0).contains(&pj_per_cycle),
+            "cluster power {pj_per_cycle:.1} pJ/cycle vs paper ≈177.8"
+        );
+    }
+
+    #[test]
+    fn cluster_region_of_one_is_identical_to_estimate() {
+        // The N = 1 roofline column leans on this reduction being exact.
+        use crate::kernels::{GemmKernel, GemmKind};
+        let mut rng = crate::util::rng::Rng::new(6);
+        let (m, n, k) = (64, 64, 64);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+        let run = GemmKernel::new(GemmKind::ExSdotp(OpWidth::BtoH), m, n, k).run(&a, &b);
+        let t = EnergyTable::default();
+        let one = estimate(&run.stats, run.cycles, ComputeClass::Sdotp(OpWidth::BtoH), &t);
+        let reg = estimate_cluster_region(
+            &[(run.stats, run.cycles)],
+            ComputeClass::Sdotp(OpWidth::BtoH),
+            &t,
+        );
+        assert_eq!(one.gflops_per_w.to_bits(), reg.gflops_per_w.to_bits());
+        assert_eq!(one.avg_mw.to_bits(), reg.avg_mw.to_bits());
+        assert_eq!(one.total_uj.to_bits(), reg.total_uj.to_bits());
+    }
+
+    #[test]
+    fn soc_estimate_charges_l2_and_idle_static_on_top() {
+        // SoC efficiency must be strictly below the compute-region
+        // figure: same flops, extra L2/interconnect/static energy.
+        use crate::kernels::{GemmKernel, GemmKind};
+        let mut rng = crate::util::rng::Rng::new(7);
+        let (m, n, k) = (64, 64, 64);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+        let run = GemmKernel::new(GemmKind::ExSdotp(OpWidth::BtoH), m, n, k).run(&a, &b);
+        let t = EnergyTable::default();
+        let soc_t = SocEnergyTable::default();
+        let per = [(run.stats, run.cycles)];
+        let reg = estimate_cluster_region(&per, ComputeClass::Sdotp(OpWidth::BtoH), &t);
+        let soc = estimate_soc(
+            &per,
+            run.cycles + 200, // wall clock includes DMA fill/drain
+            (m * k + k * n + m * n * 2) as u64,
+            ComputeClass::Sdotp(OpWidth::BtoH),
+            &t,
+            &soc_t,
+        );
+        assert!(soc.gflops_per_w < reg.gflops_per_w);
+        assert!(soc.gflops_per_w > 0.25 * reg.gflops_per_w, "L2 terms should tax, not dominate");
     }
 
     #[test]

@@ -78,6 +78,11 @@
 //!   queues, a dynamic batcher, a shard pool, and a seeded
 //!   virtual-time load generator — deterministic down to the bit
 //!   ([`api::Session::server`]).
+//! * [`soc`] — the multi-cluster SoC model: N clusters off a shared
+//!   L2 with bandwidth/latency contention, per-cluster DMA ping-pong
+//!   double-buffering, an M-partitioning coordinator that keeps results
+//!   bit-identical to a single cluster at every cluster count, and the
+//!   roofline sweep ([`soc::run_roofline`], `repro roofline`).
 //!
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
 //! reproduced tables and figures.
@@ -107,6 +112,7 @@ pub mod nn;
 pub mod report;
 pub mod runtime;
 pub mod serve;
+pub mod soc;
 pub mod softfloat;
 pub mod util;
 pub mod wide;
@@ -132,6 +138,7 @@ pub mod prelude {
         Activation, DataSpec, NativeTrainer, OptimSpec, PrecisionPolicy, StepRecord,
     };
     pub use crate::serve::{InferenceModel, ServeStats, Server};
+    pub use crate::soc::{Soc, SocCfg};
     pub use crate::softfloat::RoundingMode;
     pub use crate::util::error::{Error, Result};
 }

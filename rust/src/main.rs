@@ -32,6 +32,12 @@ Paper artifacts:
 Workloads:
   gemm              run one GEMM      [--size 128x128] [--kernel fp64|fp32|fp16|fp16to32|fp8]
                     [--mode functional|cycle]  (functional = batch engine, bit-identical C)
+  roofline          multi-cluster SoC sweep: FLOP/cycle + GFLOPS/W vs cluster count
+                    [--clusters 1,2,4,8]  comma-separated counts, each 1..=8
+                    [--size 128x256] [--k 128] [--pairs fp8,fp16to32]
+                    [--mode functional|cycle] [--json]
+                    [--check-anchor]  gate the 1-cluster FP8 row against the energy
+                                      model's 575 GFLOPS/W anchor within 1% (exit 1)
 
 End-to-end training:
   train             mixed-precision training on the minifloat batch engine
@@ -111,6 +117,72 @@ fn main() -> Result<()> {
             // |Δ|/max(|gold|,1): relative error for large outputs,
             // absolute for near-zero ones (a pure ratio blows up there).
             println!("worst |err|/max(|gold|,1) vs f64: {worst:.3e}");
+        }
+        Some("roofline") => {
+            // Same strictness contract as `serve`: every flag parses
+            // up front with a typed error and exit code 1 on bad input.
+            let (m, n) = api::parse_size(&args.get_str("size", "128x256"))?;
+            let k: usize = args.try_get("k", 128)?;
+            let mode = api::parse_mode(&args.get_str("mode", "cycle"))?;
+            let spec = args.get_str("clusters", "1,2,4,8");
+            let mut clusters = Vec::new();
+            for tok in spec.split(',') {
+                let tok = tok.trim();
+                let nc: usize = tok.parse().map_err(|_| {
+                    minifloat_nn::util::error::Error::msg(format!(
+                        "--clusters must be a comma-separated list of counts, got '{tok}'"
+                    ))
+                })?;
+                ensure!(
+                    (1..=8).contains(&nc),
+                    "--clusters entries must be 1..=8 (the paper's scale-out range), got {nc}"
+                );
+                if !clusters.contains(&nc) {
+                    clusters.push(nc);
+                }
+            }
+            let mut kinds = Vec::new();
+            for tok in args.get_str("pairs", "fp8,fp16to32").split(',') {
+                let kind = api::parse_kernel(tok.trim())?;
+                if !kinds.contains(&kind) {
+                    kinds.push(kind);
+                }
+            }
+            if args.has_flag("check-anchor") {
+                ensure!(
+                    mode == minifloat_nn::kernels::ExecMode::CycleAccurate,
+                    "--check-anchor needs op counters and only the cycle-accurate mode \
+                     collects them; drop --mode functional"
+                );
+                // Progress to stderr so --json leaves stdout one line.
+                eprintln!("checking the 575 GFLOPS/W anchor at 1 cluster...");
+                let chk = minifloat_nn::soc::roofline::check_anchor(seed)?;
+                eprintln!(
+                    "anchor: SoC {:.1} vs direct {:.1} GFLOPS/W ({:.3}% apart)",
+                    chk.soc_gflops_per_w,
+                    chk.direct_gflops_per_w,
+                    chk.rel_err * 100.0
+                );
+                ensure!(
+                    chk.rel_err < 0.01,
+                    "SoC single-cluster efficiency {:.2} GFLOPS/W drifted {:.2}% from the \
+                     energy model's {:.2} (gate: 1%)",
+                    chk.soc_gflops_per_w,
+                    chk.rel_err * 100.0,
+                    chk.direct_gflops_per_w
+                );
+                ensure!(
+                    (chk.direct_gflops_per_w - 575.0).abs() < 60.0,
+                    "anchor efficiency {:.0} GFLOPS/W left the paper's 575 band",
+                    chk.direct_gflops_per_w
+                );
+            }
+            let rows = minifloat_nn::soc::run_roofline(&clusters, &kinds, m, n, k, mode, seed)?;
+            if args.has_flag("json") {
+                println!("{}", report::roofline_json(&rows));
+            } else {
+                print!("{}", report::roofline_text(&rows));
+            }
         }
         Some("all") => {
             print!("{}", report::formats_text());

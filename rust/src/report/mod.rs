@@ -316,6 +316,73 @@ pub fn table3_text(seed: u64) -> String {
     s
 }
 
+// ------------------------------------------------------------- roofline
+
+/// Render the SoC roofline sweep: FLOPS/cycle and GFLOPS/W vs cluster
+/// count × expanding format pair (what `repro roofline` prints).
+pub fn roofline_text(rows: &[crate::soc::RooflineRow]) -> String {
+    let mut s = String::new();
+    s += "SoC roofline — achieved FLOP/cycle and GFLOPS/W vs cluster count\n";
+    s += &format!(
+        "{:<22} {:>4} {:>11} {:>9} {:>10} {:>6} {:>8} {:>9} {:>9} {:>8}\n",
+        "kernel", "ncl", "size", "cycles", "FLOP/cyc", "util%", "GFLOPS", "clW", "socW", "FLOP/B"
+    );
+    for r in rows {
+        let fmt_eff = |v: Option<f64>| v.map(|e| format!("{e:.0}")).unwrap_or_else(|| "-".into());
+        s += &format!(
+            "{:<22} {:>4} {:>11} {:>9} {:>10.1} {:>6.1} {:>8.1} {:>9} {:>9} {:>8.1}\n",
+            r.kind.label(),
+            r.n_clusters,
+            format!("{}x{}x{}", r.m, r.n, r.k),
+            r.total_cycles,
+            r.flop_per_cycle,
+            100.0 * r.utilization,
+            r.gflops,
+            fmt_eff(r.cluster_gflops_per_w),
+            fmt_eff(r.soc_gflops_per_w),
+            r.arith_intensity
+        );
+    }
+    s += "(clW = compute-region GFLOPS/W, paper anchor 575 at 1 cluster FP8; \
+          socW adds L2/interconnect/idle-static)\n";
+    s
+}
+
+/// Render the roofline sweep as one JSON line (the `--json` output and
+/// the BENCH_cluster.json trajectory record body).
+pub fn roofline_json(rows: &[crate::soc::RooflineRow]) -> String {
+    let cells: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let opt = |v: Option<f64>| v.map(|e| format!("{e:.3}")).unwrap_or_else(|| "null".into());
+            format!(
+                "{{\"kernel\":\"{}\",\"clusters\":{},\"m\":{},\"n\":{},\"k\":{},\
+                 \"total_cycles\":{},\"compute_cycles\":{},\"dma_stall_cycles\":{},\
+                 \"flops\":{},\"flop_per_cycle\":{:.3},\"utilization\":{:.4},\
+                 \"gflops\":{:.3},\"cluster_gflops_per_w\":{},\"soc_gflops_per_w\":{},\
+                 \"l2_bytes\":{},\"arith_intensity\":{:.3}}}",
+                r.kind.label(),
+                r.n_clusters,
+                r.m,
+                r.n,
+                r.k,
+                r.total_cycles,
+                r.compute_cycles,
+                r.dma_stall_cycles,
+                r.flops,
+                r.flop_per_cycle,
+                r.utilization,
+                r.gflops,
+                opt(r.cluster_gflops_per_w),
+                opt(r.soc_gflops_per_w),
+                r.l2_bytes,
+                r.arith_intensity
+            )
+        })
+        .collect();
+    format!("{{\"roofline\":[{}]}}", cells.join(","))
+}
+
 // ------------------------------------------------------ native training
 
 /// Compact loss-curve summary for a native training run: ~10 evenly

@@ -1,0 +1,207 @@
+//! The SoC coordinator: partitioning one large GEMM across clusters.
+//!
+//! ## Partitioning strategy (and why it preserves bit-identity)
+//!
+//! The coordinator splits **M only**. Each cluster owns a contiguous
+//! band of output rows; each band is cut into tiles whose logical
+//! footprint fits the 128 kB TCDM, and each tile runs the *unmodified*
+//! single-cluster kernel ([`crate::kernels::GemmKernel`]) over the
+//! **full K extent**. Because every output element is produced by
+//! exactly one kernel invocation folding k = 0..K in the kernel's own
+//! ascending order, the result bits are identical to a monolithic
+//! single-cluster run no matter how many clusters participate — there
+//! is no cross-cluster partial-sum join to get wrong.
+//!
+//! K *is* chunked, but only for **data movement**: a tile's A/B inputs
+//! stream from L2 in ascending-k chunks so the second chunk's DMA
+//! overlaps the first chunk's compute (ping-pong double-buffering).
+//! The chunk boundary is a barrier in the *schedule* (compute of chunk
+//! c may not start before its transfer retires), never a boundary in
+//! the *fold* — accumulators live in registers across it.
+
+use crate::kernels::GemmKind;
+use crate::util::error::Result;
+
+/// One ascending-k input chunk of a tile (data movement granule).
+#[derive(Clone, Copy, Debug)]
+pub struct KChunk {
+    /// First k index covered.
+    pub k0: usize,
+    /// Number of k indices covered (a multiple of the kernel's SIMD
+    /// width, so chunk boundaries fall between packed words).
+    pub klen: usize,
+}
+
+/// One tile: a contiguous band of output rows owned by one cluster.
+#[derive(Clone, Debug)]
+pub struct Tile {
+    /// Owning cluster index.
+    pub cluster: usize,
+    /// First output row.
+    pub row0: usize,
+    /// Rows in this tile (a positive multiple of 8).
+    pub rows: usize,
+    /// Ascending-k input chunks (1 or 2; ping-pong pairs).
+    pub chunks: Vec<KChunk>,
+}
+
+/// The full partition of one GEMM across the SoC.
+#[derive(Clone, Debug)]
+pub struct SocPlan {
+    /// All tiles, in (cluster, row) order.
+    pub tiles: Vec<Tile>,
+    /// Tile indices per cluster (empty for idle clusters).
+    pub per_cluster: Vec<Vec<usize>>,
+    /// The row cap a TCDM-resident tile may have for this problem.
+    pub tile_m_max: usize,
+    /// Clusters that received at least one tile.
+    pub active_clusters: usize,
+}
+
+/// Partition `M×N×K` across `n_clusters`, with per-tile footprints
+/// bounded by `tcdm_budget` bytes (the paper's 128 kB criterion counts
+/// logical data, matching [`crate::kernels::GemmKernel::footprint`]).
+pub fn partition(
+    kind: GemmKind,
+    m: usize,
+    n: usize,
+    k: usize,
+    n_clusters: usize,
+    tcdm_budget: u64,
+) -> Result<SocPlan> {
+    crate::ensure!(
+        (1..=8).contains(&n_clusters),
+        "SoC cluster count must be 1..=8 (the paper's scale-out range), got {n_clusters}"
+    );
+    // Validate kind + divisibility (M % 8, N % unroll, K % lanes) with
+    // the kernel's own typed errors — the tile kernels inherit them.
+    let probe = crate::kernels::GemmKernel::try_new(kind, m, n, k)?;
+    let sw = kind.try_src_fmt()?.width() as usize / 8;
+    let dw = kind.try_dst_fmt()?.width() as usize / 8;
+
+    // Largest TCDM-resident tile: B (K×N) is fully resident per tile,
+    // each 8-row block adds A rows + C rows.
+    let b_bytes = (k * n * sw) as u64;
+    let per_block = (8 * (k * sw + n * dw)) as u64;
+    crate::ensure!(
+        b_bytes + per_block <= tcdm_budget,
+        "GEMM {}x{} (K={}) cannot be tiled over M: B plus one 8-row strip needs {} bytes, \
+         the TCDM budget is {} (split N or K before the SoC layer)",
+        m,
+        n,
+        k,
+        b_bytes + per_block,
+        tcdm_budget
+    );
+    let blocks_fit = ((tcdm_budget - b_bytes) / per_block) as usize;
+    let tile_m_max = m.min(blocks_fit * 8);
+
+    // Contiguous block-balanced row assignment: m/8 blocks of 8 rows,
+    // the first (blocks % n_clusters) clusters get one extra block.
+    let total_blocks = m / 8;
+    let base = total_blocks / n_clusters;
+    let extra = total_blocks % n_clusters;
+
+    // Data-movement chunking: split the k sweep in two word-aligned
+    // halves when possible, so the ping-pong buffers have work.
+    let lanes = probe.kind.lanes();
+    let k_words = k / lanes;
+    let chunks = if k_words >= 2 {
+        let k_half = (k_words / 2) * lanes;
+        vec![KChunk { k0: 0, klen: k_half }, KChunk { k0: k_half, klen: k - k_half }]
+    } else {
+        vec![KChunk { k0: 0, klen: k }]
+    };
+
+    let mut tiles = Vec::new();
+    let mut per_cluster = vec![Vec::new(); n_clusters];
+    let mut row = 0usize;
+    for (cl, assigned) in per_cluster.iter_mut().enumerate() {
+        let mut rows_left = (base + usize::from(cl < extra)) * 8;
+        while rows_left > 0 {
+            let rows = rows_left.min(tile_m_max);
+            assigned.push(tiles.len());
+            tiles.push(Tile { cluster: cl, row0: row, rows, chunks: chunks.clone() });
+            row += rows;
+            rows_left -= rows;
+        }
+    }
+    debug_assert_eq!(row, m, "tiles must cover all output rows exactly once");
+    let active_clusters = per_cluster.iter().filter(|t| !t.is_empty()).count();
+    Ok(SocPlan { tiles, per_cluster, tile_m_max, active_clusters })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::instr::OpWidth;
+
+    const FP8: GemmKind = GemmKind::ExSdotp(OpWidth::BtoH);
+
+    #[test]
+    fn single_cluster_fitting_problem_is_one_whole_tile() {
+        // The paper's 575 GFLOPS/W anchor problem fits the TCDM whole:
+        // at N=1 the plan must be exactly the monolithic kernel run.
+        let p = partition(FP8, 128, 256, 128, 1, 128 * 1024).unwrap();
+        assert_eq!(p.tiles.len(), 1);
+        assert_eq!((p.tiles[0].row0, p.tiles[0].rows), (0, 128));
+        assert_eq!(p.active_clusters, 1);
+        assert_eq!(p.tiles[0].chunks.len(), 2, "k=128 splits into a ping-pong pair");
+        assert_eq!(p.tiles[0].chunks[0].klen + p.tiles[0].chunks[1].klen, 128);
+        assert_eq!(p.tiles[0].chunks[0].klen % 8, 0, "chunk edge on a packed-word boundary");
+    }
+
+    #[test]
+    fn rows_are_covered_once_in_8_row_blocks() {
+        for n_clusters in [1, 2, 3, 5, 8] {
+            let p = partition(FP8, 192, 64, 64, n_clusters, 128 * 1024).unwrap();
+            let mut covered = 0;
+            let mut next_row = 0;
+            for t in &p.tiles {
+                assert_eq!(t.row0, next_row, "tiles are contiguous in row order");
+                assert!(t.rows > 0 && t.rows % 8 == 0);
+                next_row += t.rows;
+                covered += t.rows;
+            }
+            assert_eq!(covered, 192);
+            // Balance: cluster row totals differ by at most one block.
+            let totals: Vec<usize> = p
+                .per_cluster
+                .iter()
+                .map(|ts| ts.iter().map(|&i| p.tiles[i].rows).sum())
+                .collect();
+            let (min, max) = (totals.iter().min().unwrap(), totals.iter().max().unwrap());
+            assert!(max - min <= 8, "unbalanced rows {totals:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_problems_split_into_tcdm_sized_tiles() {
+        // FP8 256×256 K=256: logical footprint 256 kB — must split.
+        let p = partition(FP8, 256, 256, 256, 2, 128 * 1024).unwrap();
+        assert!(p.tiles.len() > 2, "expected multiple tiles per cluster");
+        let sw = 1;
+        let dw = 2;
+        for t in &p.tiles {
+            let fp = (t.rows * 256 + 256 * 256) * sw + t.rows * 256 * dw;
+            assert!(fp as u64 <= 128 * 1024, "tile rows={} footprint {fp} over budget", t.rows);
+        }
+    }
+
+    #[test]
+    fn infeasible_column_footprint_is_a_typed_error() {
+        // B alone (K×N in FP8 = 512×512 = 256 kB) exceeds the TCDM: no
+        // M-tiling can help, and the coordinator must say so.
+        let err = partition(FP8, 64, 512, 512, 4, 128 * 1024).unwrap_err();
+        assert!(err.to_string().contains("cannot be tiled over M"), "{err}");
+    }
+
+    #[test]
+    fn invalid_shapes_reuse_kernel_typed_errors() {
+        assert!(partition(FP8, 12, 64, 64, 2, 128 * 1024).is_err(), "M % 8");
+        assert!(partition(FP8, 64, 66, 64, 2, 128 * 1024).is_err(), "N % unroll");
+        assert!(partition(FP8, 64, 64, 12, 2, 128 * 1024).is_err(), "K % lanes");
+        assert!(partition(FP8, 64, 64, 64, 0, 128 * 1024).is_err(), "cluster count");
+        assert!(partition(FP8, 64, 64, 64, 9, 128 * 1024).is_err(), "cluster count");
+    }
+}

@@ -1,0 +1,129 @@
+//! The shared-L2 bandwidth/latency model and its traffic accounting.
+//!
+//! Every cluster's DMA engine moves tiles between its private TCDM and
+//! one L2 scratchpad shared by all clusters. Two resources bound a
+//! transfer:
+//!
+//! * the cluster's own mover ([`crate::cluster::dma::DMA_BYTES_PER_CYCLE`]
+//!   = 64 B/cycle) — its cost is measured by actually draining the
+//!   [`crate::cluster::dma::DmaEngine`] that performs the copy;
+//! * the L2 port ([`L2Cfg::bytes_per_cycle`]), shared by every active
+//!   cluster. Contention is modeled as a **mean bandwidth share**: with
+//!   `A` active clusters a transfer of `B` bytes occupies the port for
+//!   `ceil(B·A / bytes_per_cycle)` cycles. This is a deliberate
+//!   simplification (no per-beat interleaving) that keeps the schedule
+//!   deterministic and errs pessimistic for bursty traffic — see
+//!   DESIGN.md's `soc/` section.
+//!
+//! Each transfer additionally pays [`L2Cfg::latency`] cycles once
+//! (request traversal of the interconnect + L2 access setup).
+
+/// L2 + interconnect configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct L2Cfg {
+    /// Peak L2 port bandwidth in bytes per cycle, shared by all
+    /// clusters. The default (256) feeds four clusters at the full
+    /// 64 B/cycle DMA rate; eight clusters see half that each — which
+    /// is exactly the knee the roofline report is there to show.
+    pub bytes_per_cycle: u64,
+    /// Per-transfer latency in cycles (interconnect traversal + L2
+    /// access setup), paid once per queued transfer.
+    pub latency: u64,
+}
+
+impl Default for L2Cfg {
+    fn default() -> Self {
+        L2Cfg { bytes_per_cycle: 256, latency: 40 }
+    }
+}
+
+/// The L2 model bound to a run's contention level.
+#[derive(Clone, Copy, Debug)]
+pub struct L2Model {
+    cfg: L2Cfg,
+    /// Clusters actively issuing DMA in this run (≥ 1).
+    contention: u64,
+}
+
+impl L2Model {
+    /// Bind the configuration to a run with `active` clusters issuing
+    /// transfers (clamped to ≥ 1).
+    pub fn new(cfg: L2Cfg, active: usize) -> Self {
+        L2Model { cfg, contention: (active as u64).max(1) }
+    }
+
+    /// Cycles one transfer occupies: the per-transfer latency plus the
+    /// slower of the cluster-local mover (`dma_cycles`, measured) and
+    /// the contended L2 port.
+    pub fn transfer_cycles(&self, bytes: u64, dma_cycles: u64) -> u64 {
+        let port = (bytes * self.contention).div_ceil(self.cfg.bytes_per_cycle);
+        self.cfg.latency + dma_cycles.max(port)
+    }
+
+    /// Effective per-cluster bandwidth in bytes/cycle under the bound
+    /// contention (reporting helper).
+    pub fn effective_bytes_per_cycle(&self) -> f64 {
+        let share = self.cfg.bytes_per_cycle as f64 / self.contention as f64;
+        share.min(crate::cluster::dma::DMA_BYTES_PER_CYCLE as f64)
+    }
+}
+
+/// L2 traffic accounting for one run (per cluster or SoC totals).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct L2Stats {
+    /// Bytes read from L2 (A/B tile fills).
+    pub read_bytes: u64,
+    /// Bytes written to L2 (C tile write-backs).
+    pub write_bytes: u64,
+    /// Number of DMA transfers issued.
+    pub transfers: u64,
+}
+
+impl L2Stats {
+    /// Total bytes through the L2 port.
+    pub fn total_bytes(&self) -> u64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    /// Merge another accounting record into this one.
+    pub fn merge(&mut self, other: &L2Stats) {
+        self.read_bytes += other.read_bytes;
+        self.write_bytes += other.write_bytes;
+        self.transfers += other.transfers;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncontended_transfer_is_latency_plus_mover_time() {
+        let l2 = L2Model::new(L2Cfg::default(), 1);
+        // 256 B at 64 B/cycle mover = 4 cycles; port does it in 1 —
+        // the mover is the bottleneck when the port is idle.
+        assert_eq!(l2.transfer_cycles(256, 4), 40 + 4);
+    }
+
+    #[test]
+    fn contention_divides_the_port() {
+        let cfg = L2Cfg::default();
+        // 8 clusters share 256 B/cycle → 32 B/cycle each: a 6400-byte
+        // tile fill takes 200 port cycles, dominating the 100-cycle
+        // mover time.
+        let l2 = L2Model::new(cfg, 8);
+        assert_eq!(l2.transfer_cycles(6400, 100), 40 + 200);
+        assert!((l2.effective_bytes_per_cycle() - 32.0).abs() < 1e-12);
+        // At 4 clusters the port share equals the mover rate.
+        let l2 = L2Model::new(cfg, 4);
+        assert!((l2.effective_bytes_per_cycle() - 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_merge_accumulates() {
+        let mut a = L2Stats { read_bytes: 10, write_bytes: 2, transfers: 1 };
+        a.merge(&L2Stats { read_bytes: 5, write_bytes: 3, transfers: 2 });
+        assert_eq!(a.total_bytes(), 20);
+        assert_eq!(a.transfers, 3);
+    }
+}

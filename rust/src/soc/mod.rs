@@ -1,0 +1,356 @@
+//! The multi-cluster SoC model: N clusters off a shared L2, scale-out
+//! for the cycle model (the paper positions the 8-core cluster as "the
+//! foundation for future scalable architectures", §V).
+//!
+//! ## Hierarchy
+//!
+//! ```text
+//!                ┌────────────────────── SoC ──────────────────────┐
+//!                │            shared L2 (A, B, C images)           │
+//!                │      bandwidth/latency model: soc::l2            │
+//!                │    ┌────────┬──── interconnect ────┬────────┐   │
+//!                │  DMA 0    DMA 1       ...        DMA N-1       │
+//!                │    │        │                      │           │
+//!                │ cluster 0 cluster 1    ...     cluster N-1     │
+//!                │ (8 PEs +  (the unmodified `cluster::` sim,      │
+//!                │  TCDM)     one private 128 kB TCDM each)        │
+//!                └─────────────────────────────────────────────────┘
+//! ```
+//!
+//! The coordinator ([`coord`]) partitions one large GEMM over M across
+//! clusters and cuts each cluster's band into TCDM-resident tiles; the
+//! schedule ([`sched`]) overlaps each tile's ascending-k input fills
+//! with compute via ping-pong double-buffering on the per-cluster DMA
+//! engine; the L2 model ([`l2`]) prices every transfer under contention.
+//!
+//! ## What is simulated vs modeled
+//!
+//! * **Data plane: real.** A, B and C live as packed byte images in an
+//!   L2 array; every tile fill and write-back is performed by the
+//!   actual [`crate::cluster::dma::DmaEngine`] using its 2-D strided
+//!   transfers, and the staged bytes are asserted identical to what
+//!   the tile kernel packs — the DMA path and the kernel path must
+//!   agree byte-for-byte.
+//! * **Tile compute: the existing engines.** Each tile runs the
+//!   unmodified [`crate::kernels::GemmKernel`] in the configured
+//!   [`ExecMode`] — cycle-accurate cluster simulation by default.
+//! * **Overlap timing: analytic.** Transfer/compute overlap is resolved
+//!   by the integer-cycle schedule in [`sched`] (the cluster sim's DMA
+//!   does not contend for TCDM banks, so co-simulating it would add
+//!   cost, not fidelity).
+//!
+//! ## Bit-identity
+//!
+//! Splitting M only (never the k fold) keeps every output element's
+//! accumulation order exactly the single-cluster kernel's; see
+//! [`coord`] for the argument and `soc::tests` for the differential
+//! pins (result words *and* compute cycles at N = 1).
+
+pub mod coord;
+pub mod l2;
+pub mod roofline;
+pub mod sched;
+#[cfg(test)]
+mod tests;
+
+use crate::cluster::dma::DmaEngine;
+use crate::cluster::{GLOBAL_BASE, TCDM_BASE};
+use crate::core::CoreStats;
+use crate::kernels::layout::{pack_matrix, pack_matrix_ld, unpack_matrix, MatrixOrder};
+use crate::kernels::{ExecMode, GemmKernel, GemmKind};
+use crate::util::error::Result;
+use l2::{L2Cfg, L2Model, L2Stats};
+use sched::{ChunkCost, TileCost, Timeline};
+
+pub use roofline::{run_roofline, RooflineRow};
+
+/// SoC configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SocCfg {
+    /// Cluster count (1..=8, the paper's scale-out range).
+    pub n_clusters: usize,
+    /// Shared-L2 bandwidth/latency parameters.
+    pub l2: L2Cfg,
+    /// Per-cluster TCDM bytes available for a tile's logical footprint
+    /// (the paper's 128 kB).
+    pub tcdm_budget: u64,
+    /// Tile compute engine (cycle-accurate sim by default; Functional
+    /// runs the batch engine with modeled cycles and no op counters).
+    pub mode: ExecMode,
+}
+
+impl Default for SocCfg {
+    fn default() -> Self {
+        SocCfg {
+            n_clusters: 1,
+            l2: L2Cfg::default(),
+            tcdm_budget: 128 * 1024,
+            mode: ExecMode::CycleAccurate,
+        }
+    }
+}
+
+/// One cluster's share of a run.
+#[derive(Clone, Debug)]
+pub struct ClusterRun {
+    /// Resolved DMA/compute timeline.
+    pub timeline: Timeline,
+    /// Aggregated op counters across this cluster's tiles (empty in
+    /// [`ExecMode::Functional`], which collects no per-op stats).
+    pub stats: CoreStats,
+    /// L2 traffic this cluster generated.
+    pub l2: L2Stats,
+    /// Tiles computed.
+    pub tiles: usize,
+}
+
+/// Result of one SoC GEMM run.
+pub struct SocRunResult {
+    /// C matrix decoded to f64 (row-major M×N) — bit-identical to the
+    /// single-cluster kernel at every cluster count.
+    pub c: Vec<f64>,
+    /// SoC wall-clock cycles (all clusters' compute and DMA retired).
+    pub total_cycles: u64,
+    /// Busy compute cycles on the critical cluster (max over clusters;
+    /// at N = 1 exactly the bare `cluster::` simulation's cycle count).
+    pub compute_cycles: u64,
+    /// Cycles the critical cluster's compute waited on DMA.
+    pub dma_stall_cycles: u64,
+    /// Total FLOP (2·M·N·K).
+    pub flops: u64,
+    /// SoC-wide L2 traffic.
+    pub l2: L2Stats,
+    /// Per-cluster breakdown (length = configured cluster count).
+    pub clusters: Vec<ClusterRun>,
+    /// Clusters that had work.
+    pub active_clusters: usize,
+}
+
+impl SocRunResult {
+    /// Achieved FLOP/cycle across the SoC (the roofline's y-axis).
+    pub fn flop_per_cycle(&self) -> f64 {
+        self.flops as f64 / self.total_cycles.max(1) as f64
+    }
+
+    /// Aggregated op counters over all clusters (for SoC energy).
+    pub fn stats_total(&self) -> CoreStats {
+        let mut agg = CoreStats::default();
+        for cl in &self.clusters {
+            add_stats(&mut agg, &cl.stats);
+        }
+        agg
+    }
+}
+
+/// The SoC model.
+pub struct Soc {
+    cfg: SocCfg,
+}
+
+impl Soc {
+    /// Build an SoC, validating the cluster count as a typed error.
+    pub fn new(cfg: SocCfg) -> Result<Self> {
+        crate::ensure!(
+            (1..=8).contains(&cfg.n_clusters),
+            "SoC cluster count must be 1..=8 (the paper's scale-out range), got {}",
+            cfg.n_clusters
+        );
+        Ok(Soc { cfg })
+    }
+
+    /// The bound configuration.
+    pub fn cfg(&self) -> &SocCfg {
+        &self.cfg
+    }
+
+    /// Run one `M×N×K` GEMM partitioned across the clusters. `a` is
+    /// M×K and `b` is K×N, both row-major f64 (quantized to the source
+    /// format when packed into L2, exactly like the kernel harness).
+    pub fn run_gemm(
+        &self,
+        kind: GemmKind,
+        m: usize,
+        n: usize,
+        k: usize,
+        a: &[f64],
+        b: &[f64],
+    ) -> Result<SocRunResult> {
+        let plan = coord::partition(kind, m, n, k, self.cfg.n_clusters, self.cfg.tcdm_budget)?;
+        crate::ensure!(a.len() == m * k, "A must be M*K = {} f64s, got {}", m * k, a.len());
+        crate::ensure!(b.len() == k * n, "B must be K*N = {} f64s, got {}", k * n, b.len());
+        let src = kind.try_src_fmt()?;
+        let dst = kind.try_dst_fmt()?;
+        let sw = src.width() as usize / 8;
+        let dw = dst.width() as usize / 8;
+
+        // ---- L2 images -------------------------------------------------
+        // B's stream layout (order + anti-bank-aliasing leading
+        // dimension) depends only on (kind, K, N): every tile shares it,
+        // so B is packed into L2 once and re-read per tile.
+        let b_ld = GemmKernel::try_new(kind, plan.tiles[0].rows, n, k)?.b_ld();
+        let a_img = pack_matrix(a, m, k, src, MatrixOrder::RowMajor);
+        let b_img = pack_matrix_ld(b, k, n, src, kind.b_order(), b_ld);
+        let a_off = 0u64;
+        let b_off = align64(a_off + a_img.len() as u64);
+        let c_off = align64(b_off + b_img.len() as u64);
+        let mut l2_img = vec![0u8; (c_off as usize) + m * n * dw];
+        l2_img[..a_img.len()].copy_from_slice(&a_img);
+        l2_img[b_off as usize..b_off as usize + b_img.len()].copy_from_slice(&b_img);
+
+        let l2_model = L2Model::new(self.cfg.l2, plan.active_clusters);
+        let mut clusters = Vec::with_capacity(self.cfg.n_clusters);
+        let mut l2_total = L2Stats::default();
+        let mut flops = 0u64;
+
+        for tile_ids in &plan.per_cluster {
+            let mut dma = DmaEngine::default();
+            let mut stats = CoreStats::default();
+            let mut l2_stats = L2Stats::default();
+            let mut tile_costs = Vec::with_capacity(tile_ids.len());
+            for &ti in tile_ids {
+                let tile = &plan.tiles[ti];
+                let tk = GemmKernel::try_new(kind, tile.rows, n, k)?;
+                let b_rel = tk.b_base() - TCDM_BASE;
+                let c_rel = tk.c_base() - TCDM_BASE;
+                let mut staging = vec![0u8; tk.footprint_padded() as usize];
+
+                // -- input fills: one 2-D strided A + one B transfer per
+                //    ascending-k chunk, through the real DMA engine.
+                let mut fills = Vec::with_capacity(tile.chunks.len());
+                for ch in &tile.chunks {
+                    dma.src = GLOBAL_BASE + a_off + ((tile.row0 * k + ch.k0) * sw) as u64;
+                    dma.dst = TCDM_BASE + (ch.k0 * sw) as u64;
+                    let a_id = dma.enqueue_2d(
+                        tile.rows as u64,
+                        (ch.klen * sw) as u64,
+                        (k * sw) as u64,
+                        (k * sw) as u64,
+                    );
+                    let stride = (b_ld * sw) as u64;
+                    let (lines, line_bytes, boff) = match kind.b_order() {
+                        MatrixOrder::ColMajor => (n as u64, (ch.klen * sw) as u64, (ch.k0 * sw) as u64),
+                        MatrixOrder::RowMajor => (ch.klen as u64, (n * sw) as u64, (ch.k0 * b_ld * sw) as u64),
+                    };
+                    dma.src = GLOBAL_BASE + b_off + boff;
+                    dma.dst = TCDM_BASE + b_rel + boff;
+                    let b_id = dma.enqueue_2d(lines, line_bytes, stride, stride);
+                    let dma_cycles = dma.drain(&mut staging, &mut l2_img);
+                    // The transfer-complete events arrive in FIFO order;
+                    // the schedule's "chunk ready" edge is b_id retiring.
+                    let done = dma.take_completed();
+                    debug_assert_eq!(done, vec![a_id, b_id], "DMA completion order broke FIFO");
+                    let bytes = ((tile.rows + n) * ch.klen * sw) as u64;
+                    l2_stats.read_bytes += bytes;
+                    l2_stats.transfers += 2;
+                    fills.push(ChunkCost { bytes, dma_cycles, compute_cycles: 0 });
+                }
+
+                // The DMA-staged TCDM image must be byte-identical to
+                // what the kernel harness packs — the data plane and the
+                // compute plane must agree before we trust either.
+                assert_eq!(
+                    &staging[..tile.rows * k * sw],
+                    &pack_matrix(&a[tile.row0 * k..(tile.row0 + tile.rows) * k], tile.rows, k, src, MatrixOrder::RowMajor)[..],
+                    "DMA-staged A tile differs from kernel packing (rows {}..{})",
+                    tile.row0,
+                    tile.row0 + tile.rows
+                );
+                assert_eq!(
+                    &staging[b_rel as usize..b_rel as usize + b_img.len()],
+                    &b_img[..],
+                    "DMA-staged B differs from kernel packing"
+                );
+
+                // -- tile compute: the unmodified single-cluster kernel,
+                //    full-K fold (this is the bit-identity invariant).
+                let res = tk.run_mode(
+                    &a[tile.row0 * k..(tile.row0 + tile.rows) * k],
+                    b,
+                    self.cfg.mode,
+                );
+                flops += res.flops;
+                add_stats(&mut stats, &res.stats);
+
+                // Apportion the tile's cycles to its chunks by k share
+                // (integer; remainder to the last chunk so they sum
+                // exactly to the kernel's cycle count).
+                let mut given = 0u64;
+                for (i, ch) in tile.chunks.iter().enumerate() {
+                    let share = if i + 1 == tile.chunks.len() {
+                        res.cycles - given
+                    } else {
+                        res.cycles * ch.klen as u64 / k as u64
+                    };
+                    given += share;
+                    fills[i].compute_cycles = share;
+                }
+
+                // -- C write-back through the same engine.
+                let c_len = tile.rows * n * dw;
+                let c_pack = pack_matrix(&res.c, tile.rows, n, dst, MatrixOrder::RowMajor);
+                staging[c_rel as usize..c_rel as usize + c_len].copy_from_slice(&c_pack);
+                dma.src = TCDM_BASE + c_rel;
+                dma.dst = GLOBAL_BASE + c_off + (tile.row0 * n * dw) as u64;
+                dma.enqueue((c_len) as u64);
+                let wb_cycles = dma.drain(&mut staging, &mut l2_img);
+                dma.take_completed();
+                l2_stats.write_bytes += c_len as u64;
+                l2_stats.transfers += 1;
+
+                tile_costs.push(TileCost {
+                    chunks: fills,
+                    writeback: ChunkCost { bytes: c_len as u64, dma_cycles: wb_cycles, compute_cycles: 0 },
+                });
+            }
+            let timeline = sched::schedule(&tile_costs, &l2_model);
+            l2_total.merge(&l2_stats);
+            clusters.push(ClusterRun { timeline, stats, l2: l2_stats, tiles: tile_ids.len() });
+        }
+
+        // SoC barrier: the run ends when the slowest cluster retires.
+        let total_cycles = clusters.iter().map(|c| c.timeline.end).max().unwrap_or(0);
+        let critical = clusters
+            .iter()
+            .max_by_key(|c| c.timeline.end)
+            .map(|c| c.timeline)
+            .unwrap_or_default();
+        let compute_cycles = clusters.iter().map(|c| c.timeline.compute_busy).max().unwrap_or(0);
+
+        let c_bytes = &l2_img[c_off as usize..c_off as usize + m * n * dw];
+        let c = unpack_matrix(c_bytes, m, n, dst, MatrixOrder::RowMajor);
+        Ok(SocRunResult {
+            c,
+            total_cycles,
+            compute_cycles,
+            dma_stall_cycles: critical.dma_stall,
+            flops,
+            l2: l2_total,
+            clusters,
+            active_clusters: plan.active_clusters,
+        })
+    }
+}
+
+/// Field-wise accumulation of op counters (cycles saturate to max —
+/// tiles run back-to-back on one cluster, so summing wall-cycles here
+/// would double-count what the timeline already owns).
+fn add_stats(agg: &mut CoreStats, s: &CoreStats) {
+    agg.cycles = agg.cycles.max(s.cycles);
+    agg.int_retired += s.int_retired;
+    agg.fp_issued += s.fp_issued;
+    agg.flops += s.flops;
+    agg.fp_idle += s.fp_idle;
+    agg.stall_raw += s.stall_raw;
+    agg.stall_bank += s.stall_bank;
+    agg.stall_fifo_full += s.stall_fifo_full;
+    agg.ssr_elems += s.ssr_elems;
+    agg.ops_addmul += s.ops_addmul;
+    agg.ops_sdotp += s.ops_sdotp;
+    agg.ops_cast += s.ops_cast;
+    agg.ops_comp += s.ops_comp;
+    agg.ops_fmem += s.ops_fmem;
+}
+
+fn align64(a: u64) -> u64 {
+    (a + 63) & !63
+}

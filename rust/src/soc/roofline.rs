@@ -1,0 +1,213 @@
+//! The roofline sweep: achieved FLOP/cycle and GFLOPS/W versus cluster
+//! count and expanding format pair (the SoC's Table III/IV story).
+//!
+//! One row per (cluster count × kernel family) on a fixed problem; the
+//! single-cluster expanding-FP8 row on the paper's 128×256 anchor
+//! reproduces §IV-C's 575 GFLOPS/W from the unmodified [`crate::energy`]
+//! model (the `repro roofline --check-anchor` CI gate pins it within 1%).
+
+use crate::energy::{self, ComputeClass, EnergyTable, SocEnergyTable};
+use crate::isa::instr::{OpWidth, ScalarFmt};
+use crate::kernels::{ExecMode, GemmKind};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+use super::{Soc, SocCfg};
+
+/// One roofline row: one (cluster count, kernel family) cell.
+#[derive(Clone, Debug)]
+pub struct RooflineRow {
+    /// Clusters configured.
+    pub n_clusters: usize,
+    /// Kernel family.
+    pub kind: GemmKind,
+    /// Problem shape.
+    pub m: usize,
+    /// Problem shape.
+    pub n: usize,
+    /// Problem shape.
+    pub k: usize,
+    /// SoC wall-clock cycles.
+    pub total_cycles: u64,
+    /// Critical cluster's busy compute cycles.
+    pub compute_cycles: u64,
+    /// Critical cluster's DMA-wait cycles.
+    pub dma_stall_cycles: u64,
+    /// Total FLOP.
+    pub flops: u64,
+    /// Achieved FLOP/cycle across the SoC.
+    pub flop_per_cycle: f64,
+    /// Peak FLOP/cycle (per-cluster kernel peak × cluster count).
+    pub peak_flop_per_cycle: f64,
+    /// Achieved / peak.
+    pub utilization: f64,
+    /// Achieved GFLOPS at [`energy::FREQ_GHZ`].
+    pub gflops: f64,
+    /// Compute-region cluster efficiency in GFLOPS/W (the paper's
+    /// cluster metric; 575 on the FP8 anchor at N = 1). `None` in
+    /// [`ExecMode::Functional`], which collects no op counters.
+    pub cluster_gflops_per_w: Option<f64>,
+    /// SoC efficiency including L2, interconnect and idle-cluster
+    /// static terms. `None` in [`ExecMode::Functional`].
+    pub soc_gflops_per_w: Option<f64>,
+    /// Bytes read from + written to L2.
+    pub l2_bytes: u64,
+    /// FLOP per L2 byte (the roofline's x-axis).
+    pub arith_intensity: f64,
+}
+
+/// Per-cluster kernel peak in FLOP/cycle (Fig. 8's rooflines: 8 FPUs ×
+/// the per-FPU width of the compute op).
+pub fn cluster_peak_flop_per_cycle(kind: GemmKind) -> f64 {
+    let per_fpu = match kind {
+        GemmKind::FmaF64 => 2.0,
+        GemmKind::FmaSimd(ScalarFmt::S) => 4.0,
+        GemmKind::FmaSimd(_) => 8.0,
+        GemmKind::ExSdotp(OpWidth::HtoS) => 8.0,
+        GemmKind::ExSdotp(OpWidth::BtoH) => 16.0,
+    };
+    8.0 * per_fpu
+}
+
+/// The energy row a kernel family bills its compute ops at.
+pub fn compute_class(kind: GemmKind) -> ComputeClass {
+    match kind {
+        GemmKind::FmaF64 => ComputeClass::Fma(ScalarFmt::D),
+        GemmKind::FmaSimd(f) => ComputeClass::Fma(f),
+        GemmKind::ExSdotp(w) => ComputeClass::Sdotp(w),
+    }
+}
+
+/// Run the sweep: `clusters × kinds` on one `M×N×K` problem with
+/// seeded Gaussian operands (the same operand bits for every cluster
+/// count, so scale-out is also a bit-identity differential).
+pub fn run_roofline(
+    clusters: &[usize],
+    kinds: &[GemmKind],
+    m: usize,
+    n: usize,
+    k: usize,
+    mode: ExecMode,
+    seed: u64,
+) -> Result<Vec<RooflineRow>> {
+    crate::ensure!(!clusters.is_empty(), "--clusters must list at least one cluster count");
+    crate::ensure!(!kinds.is_empty(), "at least one kernel family is required");
+    let table = EnergyTable::default();
+    let soc_table = SocEnergyTable::default();
+    let mut rows = Vec::with_capacity(clusters.len() * kinds.len());
+    for &kind in kinds {
+        let mut rng = Rng::new(seed ^ kind_salt(kind));
+        let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+        let mut c_ref: Option<Vec<u64>> = None;
+        for &nc in clusters {
+            let soc = Soc::new(SocCfg { n_clusters: nc, mode, ..SocCfg::default() })?;
+            let run = soc.run_gemm(kind, m, n, k, &a, &b)?;
+            // Scale-out bit-identity: every cluster count must produce
+            // the same C words.
+            let bits: Vec<u64> = run.c.iter().map(|v| v.to_bits()).collect();
+            match &c_ref {
+                None => c_ref = Some(bits),
+                Some(r) => crate::ensure!(
+                    *r == bits,
+                    "{} at {} clusters diverged bitwise from the first cluster count",
+                    kind.label(),
+                    nc
+                ),
+            }
+
+            let class = compute_class(kind);
+            let (cluster_eff, soc_eff) = if mode == ExecMode::CycleAccurate {
+                let per_cluster: Vec<(crate::core::CoreStats, u64)> = run
+                    .clusters
+                    .iter()
+                    .map(|c| (c.stats, c.timeline.compute_busy))
+                    .collect();
+                let reg = energy::estimate_cluster_region(&per_cluster, class, &table);
+                let soc_rep = energy::estimate_soc(
+                    &per_cluster,
+                    run.total_cycles,
+                    run.l2.total_bytes(),
+                    class,
+                    &table,
+                    &soc_table,
+                );
+                (Some(reg.gflops_per_w), Some(soc_rep.gflops_per_w))
+            } else {
+                (None, None)
+            };
+
+            let fpc = run.flop_per_cycle();
+            let peak = cluster_peak_flop_per_cycle(kind) * nc as f64;
+            rows.push(RooflineRow {
+                n_clusters: nc,
+                kind,
+                m,
+                n,
+                k,
+                total_cycles: run.total_cycles,
+                compute_cycles: run.compute_cycles,
+                dma_stall_cycles: run.dma_stall_cycles,
+                flops: run.flops,
+                flop_per_cycle: fpc,
+                peak_flop_per_cycle: peak,
+                utilization: fpc / peak,
+                gflops: fpc * energy::FREQ_GHZ,
+                cluster_gflops_per_w: cluster_eff,
+                soc_gflops_per_w: soc_eff,
+                l2_bytes: run.l2.total_bytes(),
+                arith_intensity: run.flops as f64 / run.l2.total_bytes().max(1) as f64,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// The `--check-anchor` gate's outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct AnchorCheck {
+    /// The SoC roofline's N = 1 FP8 compute-region GFLOPS/W.
+    pub soc_gflops_per_w: f64,
+    /// The direct kernel-plus-energy-model estimate on the same operands.
+    pub direct_gflops_per_w: f64,
+    /// |soc − direct| / direct.
+    pub rel_err: f64,
+}
+
+/// Run the paper's §IV-C anchor (128×256 K=128 FP8→FP16) through the
+/// SoC stack at one cluster and through the bare kernel + energy model,
+/// and compare — the CI gate requires agreement within 1% (and both
+/// sides in the 575 GFLOPS/W band).
+pub fn check_anchor(seed: u64) -> Result<AnchorCheck> {
+    let (m, n, k) = (128, 256, 128);
+    let kind = GemmKind::ExSdotp(OpWidth::BtoH);
+    let rows = run_roofline(&[1], &[kind], m, n, k, ExecMode::CycleAccurate, seed)?;
+    let soc_eff = rows[0]
+        .cluster_gflops_per_w
+        .expect("cycle-accurate roofline rows always carry energy");
+
+    let mut rng = Rng::new(seed ^ kind_salt(kind));
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    let bare = crate::kernels::GemmKernel::try_new(kind, m, n, k)?.run(&a, &b);
+    let direct = energy::estimate(
+        &bare.stats,
+        bare.cycles,
+        ComputeClass::Sdotp(OpWidth::BtoH),
+        &EnergyTable::default(),
+    );
+    let rel_err = (soc_eff - direct.gflops_per_w).abs() / direct.gflops_per_w;
+    Ok(AnchorCheck { soc_gflops_per_w: soc_eff, direct_gflops_per_w: direct.gflops_per_w, rel_err })
+}
+
+/// Per-kind operand salt so different format pairs draw different
+/// (but per-pair stable) operands.
+fn kind_salt(kind: GemmKind) -> u64 {
+    match kind {
+        GemmKind::FmaF64 => 0x64,
+        GemmKind::FmaSimd(ScalarFmt::S) => 0x32,
+        GemmKind::FmaSimd(_) => 0x16,
+        GemmKind::ExSdotp(OpWidth::HtoS) => 0x1632,
+        GemmKind::ExSdotp(OpWidth::BtoH) => 0x0816,
+    }
+}

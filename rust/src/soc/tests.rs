@@ -1,0 +1,169 @@
+//! SoC differential pins: the scale-out model must never change a bit
+//! of the single-cluster truth, and the N = 1 column must match the
+//! bare `cluster::` simulation in both result words and compute cycles.
+
+use crate::isa::instr::OpWidth;
+use crate::kernels::{ExecMode, GemmKernel, GemmKind};
+use crate::soc::{run_roofline, Soc, SocCfg};
+use crate::util::rng::Rng;
+
+const FP8: GemmKind = GemmKind::ExSdotp(OpWidth::BtoH);
+const FP16: GemmKind = GemmKind::ExSdotp(OpWidth::HtoS);
+
+fn operands(seed: u64, m: usize, n: usize, k: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let a = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    (a, b)
+}
+
+fn bits(c: &[f64]) -> Vec<u64> {
+    c.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The tentpole differential: at N = 1 on a TCDM-fitting problem the
+/// SoC is exactly the bare cluster sim — same result words, same
+/// compute cycle count — with DMA fill/drain visible only in the wall
+/// clock.
+fn pin_single_cluster(kind: GemmKind, seed: u64) {
+    let (m, n, k) = (64, 64, 64);
+    let (a, b) = operands(seed, m, n, k);
+
+    let kern = GemmKernel::new(kind, m, n, k);
+    let bare = kern.run(&a, &b);
+
+    let soc = Soc::new(SocCfg::default()).unwrap();
+    let run = soc.run_gemm(kind, m, n, k, &a, &b).unwrap();
+
+    assert_eq!(bits(&run.c), bits(&bare.c), "{}: SoC C words diverged", kind.label());
+    assert_eq!(
+        run.compute_cycles,
+        bare.cycles,
+        "{}: SoC compute region must be the bare cluster's cycle count",
+        kind.label()
+    );
+    assert!(
+        run.total_cycles > run.compute_cycles,
+        "wall clock must include the L2 fill the cluster sim never sees"
+    );
+    assert_eq!(run.active_clusters, 1);
+    assert_eq!(run.flops, bare.flops);
+}
+
+#[test]
+fn single_cluster_is_bit_identical_fp8_to_fp16() {
+    pin_single_cluster(FP8, 11);
+}
+
+#[test]
+fn single_cluster_is_bit_identical_fp16_to_fp32() {
+    pin_single_cluster(FP16, 12);
+}
+
+#[test]
+fn scale_out_preserves_result_bits() {
+    // M-only partitioning: every cluster count folds each output
+    // element in the same ascending-k order, so C is bitwise stable.
+    let (m, n, k) = (128, 64, 64);
+    let (a, b) = operands(13, m, n, k);
+    let mut reference: Option<Vec<u64>> = None;
+    for nc in [1usize, 2, 4, 8] {
+        let soc = Soc::new(SocCfg { n_clusters: nc, ..SocCfg::default() }).unwrap();
+        let run = soc.run_gemm(FP8, m, n, k, &a, &b).unwrap();
+        let got = bits(&run.c);
+        match &reference {
+            None => reference = Some(got),
+            Some(r) => assert_eq!(*r, got, "{nc} clusters diverged bitwise"),
+        }
+    }
+}
+
+#[test]
+fn multi_tile_run_matches_stitched_kernel_runs() {
+    // A problem too big for one TCDM residency (FP8 256×256 K=256:
+    // C alone is 128 kB) must split into tiles; the stitched reference
+    // below re-runs the unmodified kernel per 8-row band — a different
+    // tiling — and the bits must still agree, because each output row's
+    // fold never crosses a tile boundary.
+    let (m, n, k) = (256, 256, 256);
+    let (a, b) = operands(14, m, n, k);
+
+    let soc = Soc::new(SocCfg { n_clusters: 2, mode: ExecMode::Functional, ..SocCfg::default() })
+        .unwrap();
+    let run = soc.run_gemm(FP8, m, n, k, &a, &b).unwrap();
+    assert!(run.clusters.iter().map(|c| c.tiles).sum::<usize>() > 2, "expected a multi-tile plan");
+
+    let mut stitched = Vec::with_capacity(m * n);
+    let band = GemmKernel::try_new(FP8, 8, n, k).unwrap();
+    for r0 in (0..m).step_by(8) {
+        let res = band.run_mode(&a[r0 * k..(r0 + 8) * k], &b, ExecMode::Functional);
+        stitched.extend_from_slice(&res.c);
+    }
+    assert_eq!(bits(&run.c), bits(&stitched));
+}
+
+#[test]
+fn functional_mode_reports_no_energy_columns() {
+    let rows = run_roofline(&[1], &[FP8], 16, 16, 16, ExecMode::Functional, 9).unwrap();
+    assert_eq!(rows.len(), 1);
+    assert!(rows[0].cluster_gflops_per_w.is_none(), "no op counters → no energy estimate");
+    assert!(rows[0].soc_gflops_per_w.is_none());
+}
+
+#[test]
+fn roofline_single_cluster_reproduces_575_anchor() {
+    // The paper's §IV-C anchor through the whole SoC stack: the N = 1
+    // FP8 row on 128×256 K=128 must agree with a direct kernel-plus-
+    // energy-model estimate within 1%, and sit in the 575 GFLOPS/W band.
+    let (m, n, k) = (128, 256, 128);
+    let rows = run_roofline(&[1], &[FP8], m, n, k, ExecMode::CycleAccurate, 0x575).unwrap();
+    let eff = rows[0].cluster_gflops_per_w.expect("cycle mode must report energy");
+    assert!((eff - 575.0).abs() < 60.0, "anchor efficiency {eff:.0}");
+
+    let mut rng = Rng::new(0x575 ^ 0x0816); // run_roofline's FP8 operand salt
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    let bare = GemmKernel::new(FP8, m, n, k).run(&a, &b);
+    let direct = crate::energy::estimate(
+        &bare.stats,
+        bare.cycles,
+        crate::energy::ComputeClass::Sdotp(OpWidth::BtoH),
+        &crate::energy::EnergyTable::default(),
+    );
+    let rel = (eff - direct.gflops_per_w).abs() / direct.gflops_per_w;
+    assert!(rel < 0.01, "SoC N=1 column off direct estimate by {:.2}%", rel * 100.0);
+}
+
+#[test]
+fn more_clusters_cut_wall_clock_on_a_wide_problem() {
+    let (m, n, k) = (512, 256, 128);
+    let (a, b) = operands(15, m, n, k);
+    let cycles_at = |nc| {
+        let soc = Soc::new(SocCfg { n_clusters: nc, ..SocCfg::default() }).unwrap();
+        soc.run_gemm(FP8, m, n, k, &a, &b).unwrap().total_cycles
+    };
+    let one = cycles_at(1);
+    let eight = cycles_at(8);
+    assert!(
+        eight * 2 < one,
+        "8 clusters should be well over 2× faster ({one} → {eight} cycles)"
+    );
+}
+
+#[test]
+fn l2_traffic_accounts_every_operand_byte() {
+    // Single tile, N = 1: reads are A + B images (B per tile), writes
+    // exactly C.
+    let (m, n, k) = (64, 64, 64);
+    let (a, b) = operands(16, m, n, k);
+    let soc = Soc::new(SocCfg::default()).unwrap();
+    let run = soc.run_gemm(FP8, m, n, k, &a, &b).unwrap();
+    assert_eq!(run.l2.read_bytes, (m * k + k * n) as u64, "FP8 source bytes");
+    assert_eq!(run.l2.write_bytes, (m * n * 2) as u64, "FP16 destination bytes");
+}
+
+#[test]
+fn cluster_count_is_validated() {
+    assert!(Soc::new(SocCfg { n_clusters: 0, ..SocCfg::default() }).is_err());
+    assert!(Soc::new(SocCfg { n_clusters: 9, ..SocCfg::default() }).is_err());
+}

@@ -159,6 +159,62 @@ fn cli_gemm_smoke_runs_through_the_api() {
     assert!(stdout.contains("issue-slot model"), "{stdout}");
 }
 
+#[test]
+fn cli_roofline_rejects_bad_cluster_lists() {
+    assert_clean_cli_error(
+        &["roofline", "--clusters", "two"],
+        "--clusters must be a comma-separated list",
+    );
+    assert_clean_cli_error(&["roofline", "--clusters", "0"], "must be 1..=8");
+    assert_clean_cli_error(&["roofline", "--clusters", "1,16"], "must be 1..=8");
+}
+
+#[test]
+fn cli_roofline_rejects_bad_numeric_and_kernel_flags() {
+    assert_clean_cli_error(&["roofline", "--k", "banana"], "--k expects a numeric value");
+    assert_clean_cli_error(
+        &["roofline", "--pairs", "fp12"],
+        "--kernel must be fp64|fp32|fp16|fp16to32|fp8",
+    );
+    assert_clean_cli_error(&["roofline", "--mode", "warp"], "--mode must be functional|cycle");
+    // Shape errors surface the kernel's own typed divisibility message.
+    assert_clean_cli_error(&["roofline", "--size", "10x10"], "must be a positive multiple");
+}
+
+#[test]
+fn cli_roofline_check_anchor_conflicts_with_functional_mode() {
+    assert_clean_cli_error(
+        &["roofline", "--clusters", "1", "--mode", "functional", "--check-anchor"],
+        "--check-anchor",
+    );
+}
+
+#[test]
+fn cli_roofline_json_is_one_parseable_line() {
+    // Functional mode keeps this subprocess test fast; the JSON must be
+    // a single stdout line with energy columns explicitly null.
+    let out = repro(&[
+        "roofline",
+        "--clusters",
+        "1,2",
+        "--size",
+        "16x16",
+        "--k",
+        "16",
+        "--pairs",
+        "fp8",
+        "--mode",
+        "functional",
+        "--json",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.trim().lines().count(), 1, "--json must print one line:\n{stdout}");
+    assert!(stdout.starts_with("{\"roofline\":["), "{stdout}");
+    assert!(stdout.contains("\"clusters\":1") && stdout.contains("\"clusters\":2"), "{stdout}");
+    assert!(stdout.contains("\"cluster_gflops_per_w\":null"), "{stdout}");
+}
+
 // --------------------------------------------------------- PJRT (e2e)
 
 #[test]
