@@ -1,0 +1,113 @@
+//! Observability overhead benchmark (CI-visible, gate advisory).
+//!
+//! The obs layer's contract has two halves: instrumentation must be
+//! **bit-identical** (hard, asserted here and in
+//! `tests/obs_differential.rs`) and **cheap** (soft: ≤ 5% wall-clock
+//! overhead on the 128³ FP8→FP16 headline GEMM with metrics *and*
+//! tracing fully enabled). The cheapness half is advisory — wall-clock
+//! ratios on shared CI runners jitter, and a slow-but-correct trace
+//! must not block an unrelated build — but the measured ratio lands in
+//! `BENCH_obs.json` on every run so a regression shows up as a
+//! trajectory, not a flake.
+
+use minifloat_nn::obs;
+use minifloat_nn::prelude::*;
+use std::io::Write;
+
+fn main() {
+    let (m, n, k) = (128usize, 128, 128);
+    let iters = 200u32;
+    let session = Session::builder().mode(ExecMode::Functional).seed(42).build();
+    let mut rng = session.rng();
+    let a: Vec<f64> = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    let plan = session.gemm().src(FP8).acc(FP16).dims(m, n, k).expect("valid plan");
+
+    // Bit-identity gate before any timing: obs fully on vs fully off
+    // must agree in every result word. Hard — a fast observer that
+    // perturbs the observed run is worthless.
+    obs::disable_all();
+    obs::reset_all();
+    let c_off = plan.run_f64(&a, &b).expect("run").c_f64();
+    obs::enable_all();
+    obs::reset_all();
+    let c_on = plan.run_f64(&a, &b).expect("run").c_f64();
+    obs::disable_all();
+    obs::reset_all();
+    let identical = c_off
+        .iter()
+        .zip(&c_on)
+        .all(|(x, y)| x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan()));
+    assert!(identical, "observability perturbed the GEMM result — hard invariant broken");
+    println!("bit-identity: obs on == obs off on {m}x{n}x{k} FP8->FP16 ✓\n");
+
+    println!("== obs overhead ({m}x{n}x{k} FP8->FP16 functional, {iters} iterations/arm) ==");
+    // Warm both arms, then best-of-3 loop times (shared-runner jitter
+    // absorption, same shape as the gemm_batch gates). The traced arm
+    // resets the ring between attempts so it measures steady recording,
+    // never the drop-at-capacity path.
+    let mut inst = plan.instance();
+    let mut out = Vec::new();
+    for _ in 0..10 {
+        inst.run_f64_into(&a, &b, &mut out).expect("run");
+    }
+    let (mut off_s, mut on_s) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..3 {
+        obs::disable_all();
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            inst.run_f64_into(&a, &b, &mut out).expect("run");
+            std::hint::black_box(&out);
+        }
+        off_s = off_s.min(t0.elapsed().as_secs_f64());
+
+        obs::enable_all();
+        obs::reset_all();
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            inst.run_f64_into(&a, &b, &mut out).expect("run");
+            std::hint::black_box(&out);
+        }
+        on_s = on_s.min(t0.elapsed().as_secs_f64());
+        obs::disable_all();
+    }
+    obs::reset_all();
+
+    let overhead = on_s / off_s - 1.0;
+    println!(
+        "obs off {:.3} ms/iter   obs on (metrics+trace) {:.3} ms/iter   overhead {:+.2}%",
+        off_s * 1e3 / iters as f64,
+        on_s * 1e3 / iters as f64,
+        overhead * 100.0,
+    );
+
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let json = format!(
+        "{{\"bench\":\"obs_overhead_{m}x{n}x{k}\",\"unix_time\":{ts},\"iters\":{iters},\
+         \"off_ms\":{:.4},\"on_ms\":{:.4},\"overhead_ratio\":{:.4},\
+         \"advisory_gate\":0.05,\"bit_identical\":true}}\n",
+        off_s * 1e3 / iters as f64,
+        on_s * 1e3 / iters as f64,
+        on_s / off_s,
+    );
+    match std::fs::OpenOptions::new().create(true).append(true).open("BENCH_obs.json") {
+        Ok(mut f) => {
+            let _ = f.write_all(json.as_bytes());
+            println!("trajectory point appended to BENCH_obs.json");
+        }
+        Err(e) => eprintln!("could not write BENCH_obs.json: {e}"),
+    }
+
+    if overhead > 0.05 {
+        println!(
+            "ADVISORY: obs overhead {:.1}% exceeds the 5% budget — check the hot-path \
+             macros before it calcifies (not blocking: wall ratios jitter on shared runners)",
+            overhead * 100.0
+        );
+    } else {
+        println!("overhead within the 5% advisory budget ✓");
+    }
+}

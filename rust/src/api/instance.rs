@@ -191,6 +191,9 @@ impl PlanInstance {
         ensure!(b.len() == br * bc, "B must be {br}x{bc} = {} elements, got {}", br * bc, b.len());
         let t0 = std::time::Instant::now();
         let mode = self.session.mode();
+        let _sp = crate::obs::trace::span_with("plan.run", "api", || {
+            format!("\"m\":{m},\"n\":{n},\"k\":{k},\"mode\":\"{mode:?}\",\"packed\":false")
+        });
         let (cycles, stats) = match mode {
             ExecMode::CycleAccurate => {
                 // Builder invariant: cycle-accurate plans are nominal
@@ -241,6 +244,7 @@ impl PlanInstance {
             self.session.scoped(|| batch::regrid_in_place(acc, out, RoundingMode::Rne));
         }
         self.runs += 1;
+        crate::obs_count!("api.plan.runs");
         Ok(RunInfo {
             cycles,
             flops: self.kern.flops(),
@@ -270,6 +274,9 @@ impl PlanInstance {
         let b_streams = b.layout() == if self.tb { Layout::RowMajor } else { Layout::ColMajor };
         if self.session.mode() == ExecMode::Functional && a_streams && b_streams {
             let t0 = std::time::Instant::now();
+            let _sp = crate::obs::trace::span_with("plan.run", "api", || {
+                format!("\"m\":{m},\"n\":{n},\"k\":{k},\"mode\":\"Functional\",\"packed\":true")
+            });
             let rm = self.session.rounding();
             let (src, acc) = (self.src, self.acc);
             let plan = &self.block_plan;
@@ -282,6 +289,8 @@ impl PlanInstance {
                 }
                 self.runs += 1;
                 self.packed_runs += 1;
+                crate::obs_count!("api.plan.runs");
+                crate::obs_count!("api.plan.packed_runs");
                 return Ok(RunInfo {
                     cycles: self.session.cycle_model_enabled().then(|| self.kern.model_cycles()),
                     flops: self.kern.flops(),

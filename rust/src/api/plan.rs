@@ -109,6 +109,10 @@ impl<'s> GemmPlanBuilder<'s> {
     /// rounding-mode compatibility, and (cycle-accurate mode) the
     /// paper's 128 kB TCDM footprint.
     pub fn dims(self, m: usize, n: usize, k: usize) -> Result<GemmPlan<'s>> {
+        let _sp = crate::obs::trace::span_with("plan.compile", "api", || {
+            format!("\"m\":{m},\"n\":{n},\"k\":{k}")
+        });
+        crate::obs_count!("api.plan.compiles");
         let kind = match (self.kind, self.src, self.acc) {
             (Some(kind), src, acc) => {
                 kind.validate()?;

@@ -458,6 +458,9 @@ pub(crate) fn pack_rows_into(
     rm: RoundingMode,
     out: &mut Vec<u64>,
 ) -> bool {
+    let _sp = crate::obs::trace::span_with("pack.rows", "batch", || {
+        format!("\"rows\":{rows},\"cols\":{cols},\"fmt\":\"{}\"", fmt.name())
+    });
     with_spec!(fmt, S, {
         pack_rows_into_m::<S>(data, rows, cols, rm, out);
         return true;
@@ -474,6 +477,9 @@ pub(crate) fn pack_cols_into(
     rm: RoundingMode,
     out: &mut Vec<u64>,
 ) -> bool {
+    let _sp = crate::obs::trace::span_with("pack.cols", "batch", || {
+        format!("\"rows\":{rows},\"cols\":{cols},\"fmt\":\"{}\"", fmt.name())
+    });
     with_spec!(fmt, S, {
         pack_cols_into_m::<S>(data, rows, cols, rm, out);
         return true;
@@ -561,8 +567,18 @@ pub fn gemm_into_m<S: ExpandTo<D>, D: FormatSpec>(
     ws: &mut Workspace,
     out: &mut Vec<f64>,
 ) {
-    pack_rows_into_m::<S>(a, m, k, rm, &mut ws.pa);
-    pack_cols_into_m::<S>(b, k, n, rm, &mut ws.pb);
+    {
+        let _sp = crate::obs::trace::span_with("pack.a", "batch", || {
+            format!("\"rows\":{m},\"cols\":{k}")
+        });
+        pack_rows_into_m::<S>(a, m, k, rm, &mut ws.pa);
+    }
+    {
+        let _sp = crate::obs::trace::span_with("pack.b", "batch", || {
+            format!("\"rows\":{k},\"cols\":{n}")
+        });
+        pack_cols_into_m::<S>(b, k, n, rm, &mut ws.pb);
+    }
     gemm_packed_into_m::<S, D>(m, n, k, &ws.pa, &ws.pb, rm, out);
 }
 
@@ -625,7 +641,25 @@ pub fn gemm_packed_planned_into_m<S: ExpandTo<D>, D: FormatSpec>(
     assert_eq!(bp.len(), n * wpr, "packed B must be n*k/lanes words");
     out.clear();
     out.resize(m * n, 0f64);
-    match lane_tier() {
+    let tier = lane_tier();
+    // The scalar reference tier always runs the simple loop (below),
+    // so the route counters reflect the loop actually executed.
+    let runs_blocked = plan.blocked && tier == LaneTier::Swar;
+    crate::obs_count!(match tier {
+        LaneTier::Swar => "batch.tier.swar",
+        LaneTier::Scalar => "batch.tier.scalar",
+    });
+    crate::obs_count!(if runs_blocked { "batch.gemm.blocked" } else { "batch.gemm.simple" });
+    let _sp = crate::obs::trace::span_with("gemm.tier", "batch", || {
+        format!(
+            "\"m\":{m},\"n\":{n},\"k\":{k},\"tier\":\"{}\",\"blocked\":{runs_blocked}",
+            match tier {
+                LaneTier::Swar => "swar",
+                LaneTier::Scalar => "scalar",
+            }
+        )
+    });
+    match tier {
         LaneTier::Scalar => {
             // The reference tier stays on the untouched simple loop —
             // it is the timing baseline the speedup gates compare
@@ -722,6 +756,9 @@ fn gemm_loops<D: FormatSpec, K, V>(
         let mut tile = [0u64; ACC_TILE_WORDS];
         for jb in (0..n).step_by(nc) {
             let ncb = nc.min(n - jb);
+            let _tile_sp = crate::obs::trace::span_with("gemm.tile", "batch", || {
+                format!("\"i0\":{i0},\"jb\":{jb},\"rows\":{block_rows},\"cols\":{ncb}")
+            });
             tile[..block_rows * nc].fill(0); // all destination lanes +0.0
             for kb in (0..wpr).step_by(kc) {
                 let kcb = kc.min(wpr - kb);

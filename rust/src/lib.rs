@@ -83,6 +83,11 @@
 //!   double-buffering, an M-partitioning coordinator that keeps results
 //!   bit-identical to a single cluster at every cluster count, and the
 //!   roofline sweep ([`soc::run_roofline`], `repro roofline`).
+//! * [`obs`] — the deterministic observability layer: a sharded
+//!   metrics registry with byte-stable snapshots, virtual-time /
+//!   wall-time span tracing with a Chrome-trace exporter, and the
+//!   profiling roll-up — off by default, bit-transparent when on
+//!   (`repro ... --metrics --trace FILE`).
 //!
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
 //! reproduced tables and figures.
@@ -109,6 +114,7 @@ pub mod fpu;
 pub mod isa;
 pub mod kernels;
 pub mod nn;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

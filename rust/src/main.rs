@@ -61,7 +61,80 @@ Serving:
 
 Options:
   --seed S          RNG seed for simulated workloads (default 42)
+  --metrics         (gemm|roofline|train|serve) append the deterministic
+                    observability roll-up; the final stdout line is the
+                    byte-stable metrics snapshot JSON (merged into the
+                    --json object where one exists)
+  --trace FILE      (gemm|roofline|train|serve) write a Chrome trace-event
+                    JSON of the run (open in chrome://tracing / Perfetto)
 ";
+
+/// Parsed observability flags. Both are strict: a bare `--trace` (no
+/// path) and a valued `--metrics` are typed errors up front, and the
+/// trace path is created before any simulated work runs, so a bad path
+/// fails in milliseconds, not after minutes of GEMM.
+struct ObsOpts {
+    metrics: bool,
+    trace_path: Option<String>,
+}
+
+fn obs_setup(args: &Args) -> Result<ObsOpts> {
+    ensure!(
+        !args.has_flag("trace"),
+        "--trace needs a file path (usage: --trace FILE)"
+    );
+    ensure!(
+        !args.options.contains_key("metrics"),
+        "--metrics takes no value (got '--metrics {}')",
+        args.options["metrics"]
+    );
+    let metrics = args.has_flag("metrics");
+    let trace_path = args.options.get("trace").cloned();
+    if let Some(path) = &trace_path {
+        std::fs::File::create(path).map_err(|e| {
+            minifloat_nn::util::error::Error::msg(format!(
+                "--trace: cannot create '{path}': {e}"
+            ))
+        })?;
+    }
+    if metrics || trace_path.is_some() {
+        minifloat_nn::obs::reset_all();
+        minifloat_nn::obs::metrics::enable(metrics);
+        minifloat_nn::obs::trace::enable(trace_path.is_some());
+    }
+    Ok(ObsOpts { metrics, trace_path })
+}
+
+impl ObsOpts {
+    /// Write the trace file if requested (note to stderr — `--json`
+    /// stdout must stay one parseable line).
+    fn write_trace(&self) -> Result<()> {
+        if let Some(path) = &self.trace_path {
+            minifloat_nn::obs::trace::write_chrome_trace(path).map_err(|e| {
+                minifloat_nn::util::error::Error::msg(format!(
+                    "--trace: cannot write '{path}': {e}"
+                ))
+            })?;
+            eprintln!(
+                "trace written to {path} ({} events, {} dropped)",
+                minifloat_nn::obs::trace::len(),
+                minifloat_nn::obs::trace::dropped()
+            );
+        }
+        Ok(())
+    }
+
+    /// Append the human roll-up and the byte-stable snapshot line to
+    /// stdout (the non-`--json` metrics epilogue; the snapshot is
+    /// always the final line so scripts can `tail -n1`).
+    fn print_metrics(&self) {
+        if self.metrics {
+            let snap = minifloat_nn::obs::metrics::snapshot();
+            print!("{}", report::obs_text(&snap));
+            println!("{}", report::obs_json(&snap));
+        }
+    }
+}
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -90,6 +163,7 @@ fn main() -> Result<()> {
             // helpers for the flags, the plan builder for the problem
             // (format pair, divisibility, TCDM feasibility) — bad input
             // is a typed error and a nonzero exit, never a panic.
+            let obs = obs_setup(&args)?;
             let (m, n) = api::parse_size(&args.get_str("size", "128x128"))?;
             let k = m;
             let kind = api::parse_kernel(&args.get_str("kernel", "fp8"))?;
@@ -117,10 +191,13 @@ fn main() -> Result<()> {
             // |Δ|/max(|gold|,1): relative error for large outputs,
             // absolute for near-zero ones (a pure ratio blows up there).
             println!("worst |err|/max(|gold|,1) vs f64: {worst:.3e}");
+            obs.write_trace()?;
+            obs.print_metrics();
         }
         Some("roofline") => {
             // Same strictness contract as `serve`: every flag parses
             // up front with a typed error and exit code 1 on bad input.
+            let obs = obs_setup(&args)?;
             let (m, n) = api::parse_size(&args.get_str("size", "128x256"))?;
             let k: usize = args.try_get("k", 128)?;
             let mode = api::parse_mode(&args.get_str("mode", "cycle"))?;
@@ -178,10 +255,21 @@ fn main() -> Result<()> {
                 );
             }
             let rows = minifloat_nn::soc::run_roofline(&clusters, &kinds, m, n, k, mode, seed)?;
+            obs.write_trace()?;
             if args.has_flag("json") {
-                println!("{}", report::roofline_json(&rows));
+                let mut line = report::roofline_json(&rows);
+                if obs.metrics {
+                    // Merge the snapshot into the existing one-line
+                    // object: {"roofline":[...],"obs":{...}}.
+                    line.pop();
+                    line.push_str(",\"obs\":");
+                    line.push_str(&minifloat_nn::obs::metrics::snapshot_json());
+                    line.push('}');
+                }
+                println!("{line}");
             } else {
                 print!("{}", report::roofline_text(&rows));
+                obs.print_metrics();
             }
         }
         Some("all") => {
@@ -205,6 +293,7 @@ fn main() -> Result<()> {
             print!("{}", report::table4_text(seed));
         }
         Some("train") => {
+            let obs = obs_setup(&args)?;
             let log_every = if args.has_flag("quiet") { 0 } else { 20 };
             match api::parse_engine(&args.get_str("engine", "native"))? {
                 api::TrainEngine::Native => {
@@ -284,12 +373,15 @@ fn main() -> Result<()> {
                     println!("final loss {final_loss:.4}   accuracy {:.1}%", acc * 100.0);
                 }
             }
+            obs.write_trace()?;
+            obs.print_metrics();
         }
         Some("serve") => {
             // All argument validation is typed: numeric flags parse
             // strictly up front (a typo is an error, not a silent
             // default), everything structural in the ServePlanBuilder —
             // bad input is exit code 1 with a message, never a panic.
+            let obs = obs_setup(&args)?;
             let max_batch: usize = args.try_get("max-batch", 32)?;
             let max_wait: u64 = args.try_get("max-wait", 4)?;
             let shards: usize = args.try_get("shards", 4)?;
@@ -374,8 +466,20 @@ fn main() -> Result<()> {
             };
             let names: Vec<String> =
                 server.tenants().iter().map(|t| t.name.clone()).collect();
+            obs.write_trace()?;
             if args.has_flag("json") {
-                println!("{}", server.stats().summary_json());
+                if obs.metrics {
+                    // One parseable line either way: wrap the two views
+                    // side by side so their shared quantities (batches,
+                    // deadline misses) can be cross-checked downstream.
+                    println!(
+                        "{{\"serve\":{},\"obs\":{}}}",
+                        server.stats().summary_json(),
+                        minifloat_nn::obs::metrics::snapshot_json()
+                    );
+                } else {
+                    println!("{}", server.stats().summary_json());
+                }
             } else {
                 println!(
                     "served {} responses over {} virtual ticks ({} tenants, {} shards, \
@@ -388,6 +492,7 @@ fn main() -> Result<()> {
                     plan.batch_policy().max_wait_ticks
                 );
                 print!("{}", report::serve_stats_text(server.stats(), &names));
+                obs.print_metrics();
             }
         }
         _ => print!("{HELP}"),

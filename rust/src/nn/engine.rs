@@ -99,6 +99,7 @@ impl GemmCtx {
         let inst = builder.dims(m, n, k)?.instance();
         self.plans.push((key, inst));
         self.plan_builds += 1;
+        crate::obs_count!("nn.plan.builds");
         Ok((self.plans.len() - 1, false))
     }
 
@@ -170,11 +171,14 @@ impl GemmCtx {
         // a compile). So `plan_reuses <= calls` always, and on the
         // error-free hot loop `plan_reuses == calls - plan_builds`.
         self.calls += 1;
+        crate::obs_count!("nn.gemm.calls");
         if cached {
             self.plan_reuses += 1;
+            crate::obs_count!("nn.plan.reuses");
         }
         if info.packed_input {
             self.packed += 1;
+            crate::obs_count!("nn.gemm.packed");
         }
         Ok(())
     }

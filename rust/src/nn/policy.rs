@@ -219,6 +219,9 @@ impl LossScaler {
     pub fn update(&mut self, grads_finite: bool) -> bool {
         if !grads_finite {
             self.overflows += 1;
+            // One overflow event = one skipped step and (dynamic mode)
+            // one scale backoff; a single counter covers both.
+            crate::obs_count!("nn.scale.skips");
             if self.dynamic {
                 self.scale = (self.scale * 0.5).max(1.0);
             }
@@ -230,6 +233,7 @@ impl LossScaler {
             if self.good_steps >= self.growth_interval {
                 self.scale = (self.scale * 2.0).min(MAX_SCALE);
                 self.good_steps = 0;
+                crate::obs_count!("nn.scale.growths");
             }
         }
         true

@@ -164,26 +164,44 @@ impl NativeTrainer {
 
     /// Run one SGD/Adam step on a random batch; returns the record.
     pub fn step(&mut self) -> Result<StepRecord> {
+        let step_no = self.history.len();
+        let _step_sp = crate::obs::trace::span_with("train.step", "nn", || {
+            format!("\"step\":{step_no}")
+        });
+        crate::obs_count!("train.steps");
         self.data.batch_into(self.batch, &mut self.rng, &mut self.arena.x, &mut self.arena.labels);
         let scale = self.scaler.scale();
         self.tape.clear();
-        let logits =
-            self.model.forward(&mut self.ctx, &self.policy, &self.arena.x, self.batch, Some(&mut self.tape))?;
-        let loss = self.model.loss.forward(&logits, &self.arena.labels, Some(&mut self.tape))?;
-        let g0 = self.model.loss.backward(&self.arena.labels, scale, &mut self.tape)?;
-        self.model.backward(&mut self.ctx, &self.policy, &g0, self.batch, &mut self.tape)?;
-        self.tape.recycle_host(g0);
-        self.tape.recycle_host(logits);
+        let (logits, loss) = {
+            let _sp = crate::obs::trace::span("train.forward", "nn");
+            let logits = self.model.forward(
+                &mut self.ctx,
+                &self.policy,
+                &self.arena.x,
+                self.batch,
+                Some(&mut self.tape),
+            )?;
+            let loss = self.model.loss.forward(&logits, &self.arena.labels, Some(&mut self.tape))?;
+            (logits, loss)
+        };
+        {
+            let _sp = crate::obs::trace::span("train.backward", "nn");
+            let g0 = self.model.loss.backward(&self.arena.labels, scale, &mut self.tape)?;
+            self.model.backward(&mut self.ctx, &self.policy, &g0, self.batch, &mut self.tape)?;
+            self.tape.recycle_host(g0);
+            self.tape.recycle_host(logits);
+        }
         // A non-finite *loss* (forward overflow) skips exactly like a
         // gradient overflow.
         let finite = loss.is_finite() && self.model.grads_finite();
         let apply = self.scaler.update(finite);
         if apply {
+            let _sp = crate::obs::trace::span("train.optim", "nn");
             self.model.scale_grads((1.0 / scale) as f32);
             let mut params = self.model.params_mut();
             self.optim.step(&mut params)?;
         }
-        let record = StepRecord { step: self.history.len(), loss, scale, skipped: !apply };
+        let record = StepRecord { step: step_no, loss, scale, skipped: !apply };
         self.history.push(record);
         Ok(record)
     }

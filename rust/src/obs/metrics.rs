@@ -1,0 +1,406 @@
+//! The typed metrics registry: counters, max-gauges and log2-bucket
+//! histograms behind per-thread shards.
+//!
+//! Recording locks only the calling thread's own shard (uncontended in
+//! steady state); [`snapshot`] locks every shard and folds them into
+//! one deterministic view. A thread that exits folds its shard into a
+//! process-wide *retired* accumulator first, so short-lived scoped
+//! worker threads (the serve shard pool spawns them per tick) never
+//! lose data and never grow the live-shard list without bound.
+//!
+//! Merging is commutative and associative by construction — counters
+//! and histogram buckets add, gauges take the max — which is what makes
+//! [`snapshot_json`] byte-stable under any thread count.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is the metrics recorder on? One relaxed load — this is the entire
+/// hot-path cost when observability is disabled.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Switch the recorder on or off (off by default).
+pub fn enable(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Number of histogram buckets: one for zero plus one per power of two
+/// of the u64 range.
+pub const HIST_BUCKETS: usize = 65;
+
+/// A log2-bucket histogram. Bucket 0 holds exact zeros; bucket `i`
+/// (1..=64) holds values in `[2^(i-1), 2^i - 1]`.
+#[derive(Clone)]
+pub struct Hist {
+    /// Total samples recorded.
+    pub count: u64,
+    /// Sum of all samples (saturating).
+    pub sum: u64,
+    /// Per-bucket sample counts.
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { count: 0, sum: 0, buckets: [0; HIST_BUCKETS] }
+    }
+}
+
+impl Hist {
+    fn record(&mut self, v: u64) {
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.buckets[bucket_index(v)] += 1;
+    }
+
+    fn merge(&mut self, other: &Hist) {
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+    }
+
+    /// Upper edge of the bucket where the cumulative count first
+    /// reaches `q` of the total — a conservative (rounded-up) quantile.
+    /// Returns 0 for an empty histogram.
+    pub fn quantile_upper(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return bucket_upper_edge(i);
+            }
+        }
+        bucket_upper_edge(HIST_BUCKETS - 1)
+    }
+}
+
+/// Bucket index for a sample: 0 for 0, else `64 - leading_zeros(v)`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Largest value a bucket can hold (`u64::MAX` for the top bucket).
+pub fn bucket_upper_edge(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        64.. => u64::MAX,
+        _ => (1u64 << i) - 1,
+    }
+}
+
+#[derive(Default)]
+struct ShardData {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, u64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+impl ShardData {
+    fn merge(&mut self, other: &ShardData) {
+        for (k, v) in &other.counters {
+            *entry_or_zero(&mut self.counters, k) += v;
+        }
+        for (k, v) in &other.gauges {
+            let g = entry_or_zero(&mut self.gauges, k);
+            *g = (*g).max(*v);
+        }
+        for (k, h) in &other.hists {
+            if let Some(mine) = self.hists.get_mut(k.as_str()) {
+                mine.merge(h);
+            } else {
+                self.hists.insert(k.clone(), h.clone());
+            }
+        }
+    }
+}
+
+fn entry_or_zero<'a>(map: &'a mut BTreeMap<String, u64>, key: &str) -> &'a mut u64 {
+    if !map.contains_key(key) {
+        map.insert(key.to_string(), 0);
+    }
+    map.get_mut(key).expect("just inserted")
+}
+
+struct Registry {
+    live: Mutex<Vec<Arc<Mutex<ShardData>>>>,
+    retired: Mutex<ShardData>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        live: Mutex::new(Vec::new()),
+        retired: Mutex::new(ShardData::default()),
+    })
+}
+
+// A poisoned shard (a panic while holding the lock) must not take the
+// whole registry down — the data is monotone counters, always safe to
+// read.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Thread-local handle: registers the shard on first use, folds it
+/// into the retired accumulator (and drops out of the live list) when
+/// the thread exits.
+struct ThreadShard(Arc<Mutex<ShardData>>);
+
+impl Drop for ThreadShard {
+    fn drop(&mut self) {
+        let reg = registry();
+        lock(&reg.live).retain(|s| !Arc::ptr_eq(s, &self.0));
+        let data = std::mem::take(&mut *lock(&self.0));
+        lock(&reg.retired).merge(&data);
+    }
+}
+
+thread_local! {
+    static SHARD: ThreadShard = {
+        let shard = Arc::new(Mutex::new(ShardData::default()));
+        lock(&registry().live).push(shard.clone());
+        ThreadShard(shard)
+    };
+}
+
+fn with_shard(f: impl FnOnce(&mut ShardData)) {
+    SHARD.with(|s| f(&mut lock(&s.0)));
+}
+
+/// Add `n` to counter `name` (created at 0 on first touch). Prefer the
+/// [`obs_count!`](crate::obs_count) macro, which skips the call when
+/// disabled.
+pub fn counter_add(name: &str, n: u64) {
+    with_shard(|d| *entry_or_zero(&mut d.counters, name) += n);
+}
+
+/// Raise gauge `name` to at least `v`.
+pub fn gauge_max(name: &str, v: u64) {
+    with_shard(|d| {
+        let g = entry_or_zero(&mut d.gauges, name);
+        *g = (*g).max(v);
+    });
+}
+
+/// Record one histogram sample.
+pub fn hist_record(name: &str, v: u64) {
+    with_shard(|d| {
+        if !d.hists.contains_key(name) {
+            d.hists.insert(name.to_string(), Hist::default());
+        }
+        d.hists.get_mut(name).expect("just inserted").record(v);
+    });
+}
+
+/// An aggregated, immutable view of every shard at one instant.
+pub struct Snapshot {
+    /// Monotone event counts.
+    pub counters: BTreeMap<String, u64>,
+    /// Max-aggregated gauges.
+    pub gauges: BTreeMap<String, u64>,
+    /// Log2-bucket histograms.
+    pub hists: BTreeMap<String, Hist>,
+}
+
+impl Snapshot {
+    /// Counter value, 0 if never touched.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value, 0 if never touched.
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    /// Histogram by name.
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    /// Byte-stable JSON rendering: `BTreeMap` iteration fixes key
+    /// order, histogram buckets are emitted sparsely as
+    /// `[index, count]` pairs in ascending index order.
+    pub fn json(&self) -> String {
+        let mut s = String::from("{\"counters\":{");
+        let mut first = true;
+        for (k, v) in &self.counters {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s += &format!("\"{k}\":{v}");
+        }
+        s += "},\"gauges\":{";
+        first = true;
+        for (k, v) in &self.gauges {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s += &format!("\"{k}\":{v}");
+        }
+        s += "},\"hists\":{";
+        first = true;
+        for (k, h) in &self.hists {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            let buckets: Vec<String> = h
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &n)| n > 0)
+                .map(|(i, n)| format!("[{i},{n}]"))
+                .collect();
+            s += &format!(
+                "\"{k}\":{{\"count\":{},\"sum\":{},\"buckets\":[{}]}}",
+                h.count,
+                h.sum,
+                buckets.join(",")
+            );
+        }
+        s += "}}";
+        s
+    }
+}
+
+/// Aggregate every shard (live + retired) into one [`Snapshot`].
+pub fn snapshot() -> Snapshot {
+    let reg = registry();
+    let mut acc = ShardData::default();
+    acc.merge(&lock(&reg.retired));
+    // Clone the shard list out so no shard lock is held while another
+    // thread's Drop handler wants the live-list lock.
+    let shards: Vec<Arc<Mutex<ShardData>>> = lock(&reg.live).clone();
+    for shard in shards {
+        let data = lock(&shard);
+        acc.merge(&data);
+    }
+    Snapshot { counters: acc.counters, gauges: acc.gauges, hists: acc.hists }
+}
+
+/// [`Snapshot::json`] of the current state.
+pub fn snapshot_json() -> String {
+    snapshot().json()
+}
+
+/// Zero every shard, live and retired. (Keys are dropped, not kept at
+/// zero, so a snapshot after reset is `{}`-clean.)
+pub fn reset() {
+    let reg = registry();
+    *lock(&reg.retired) = ShardData::default();
+    let shards: Vec<Arc<Mutex<ShardData>>> = lock(&reg.live).clone();
+    for shard in shards {
+        *lock(&shard) = ShardData::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::test_guard;
+
+    // Unit tests here use test-unique metric names so that unrelated
+    // instrumented code running in parallel test threads (which only
+    // records while these tests hold the recorder enabled) cannot
+    // collide with the asserted values. Whole-snapshot byte-stability
+    // lives in the dedicated `obs_differential` integration binary.
+
+    #[test]
+    fn bucket_edges_are_exact_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(255), 8);
+        assert_eq!(bucket_index(256), 9);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_upper_edge(0), 0);
+        assert_eq!(bucket_upper_edge(1), 1);
+        assert_eq!(bucket_upper_edge(8), 255);
+        assert_eq!(bucket_upper_edge(64), u64::MAX);
+        // Every non-zero value lands in the bucket whose upper edge
+        // bounds it and whose predecessor's edge does not.
+        for v in [1u64, 2, 3, 7, 8, 1023, 1024, 1 << 40] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_upper_edge(i), "{v} above bucket {i}");
+            assert!(v > bucket_upper_edge(i - 1), "{v} below bucket {i}");
+        }
+    }
+
+    #[test]
+    fn counters_and_gauges_record_only_when_enabled() {
+        let _g = test_guard();
+        reset();
+        enable(false);
+        crate::obs_count!("test.metrics.off", 5);
+        assert_eq!(snapshot().counter("test.metrics.off"), 0);
+        enable(true);
+        crate::obs_count!("test.metrics.on", 5);
+        crate::obs_count!("test.metrics.on");
+        crate::obs_gauge_max!("test.metrics.gauge", 7);
+        crate::obs_gauge_max!("test.metrics.gauge", 3);
+        enable(false);
+        let snap = snapshot();
+        assert_eq!(snap.counter("test.metrics.on"), 6);
+        assert_eq!(snap.gauge("test.metrics.gauge"), 7);
+        reset();
+        assert_eq!(snapshot().counter("test.metrics.on"), 0);
+    }
+
+    #[test]
+    fn shards_from_exited_threads_fold_into_the_snapshot() {
+        let _g = test_guard();
+        reset();
+        enable(true);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| counter_add("test.metrics.sharded", 10));
+            }
+        });
+        counter_add("test.metrics.sharded", 2);
+        enable(false);
+        assert_eq!(snapshot().counter("test.metrics.sharded"), 42);
+        reset();
+    }
+
+    #[test]
+    fn histogram_quantiles_return_bucket_upper_edges() {
+        let mut h = Hist::default();
+        for v in [0u64, 1, 1, 2, 3, 4, 200, 300, 70_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count, 9);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[1], 2);
+        assert_eq!(h.buckets[2], 2);
+        assert_eq!(h.buckets[3], 1);
+        assert_eq!(h.buckets[8], 1);
+        assert_eq!(h.buckets[9], 1);
+        assert_eq!(h.buckets[17], 1);
+        // p50 of 9 samples = 5th -> bucket 2 (values 2..=3).
+        assert_eq!(h.quantile_upper(0.50), 3);
+        assert_eq!(h.quantile_upper(1.0), bucket_upper_edge(17));
+        assert_eq!(Hist::default().quantile_upper(0.5), 0);
+    }
+}

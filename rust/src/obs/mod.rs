@@ -1,0 +1,109 @@
+//! Unified deterministic observability: metrics, tracing, profiling.
+//!
+//! The paper's headline results are *per-layer breakdowns* — compute
+//! vs. DMA overlap, FPU utilization, packed-route hit rates — and the
+//! scattered one-off counters grown by PRs 1–7 (`nn::GemmCtx`,
+//! `api::PlanInstance`, `serve::ServeStats`, `soc::L2Stats`) could not
+//! answer "where do the cycles go?" for a whole run. This module is the
+//! common substrate those counters now feed:
+//!
+//! * [`metrics`] — a typed registry (counters, max-gauges, log2-bucket
+//!   histograms) with per-thread shards aggregated at snapshot time and
+//!   a byte-stable [`metrics::snapshot_json`].
+//! * [`trace`] — structured spans over **virtual time where it exists**
+//!   (SoC cycles, serve ticks) and monotonic wall time elsewhere, in a
+//!   bounded ring recorder with a Chrome-trace-event JSON exporter
+//!   (Perfetto-loadable, see [`trace::write_chrome_trace`]).
+//! * [`prof`] — the roll-up: per-phase cycle shares, packed/SWAR-route
+//!   hit rates, serve percentiles, derived from a metrics snapshot
+//!   (rendered by `report::obs_text` / `report::obs_json`).
+//!
+//! ## The two invariants
+//!
+//! **Observation never perturbs the system.** Every hot-path macro
+//! compiles to one relaxed atomic load when observability is off, and
+//! no module reads obs state to make a control-flow decision — obs is
+//! a *leaf* of the module graph (it depends only on `std`). The
+//! differential suite (`tests/obs_differential.rs`) pins bit-identity
+//! of every result word *and* cycle count with instrumentation on vs.
+//! off across the batch, nn, serve and soc pillars.
+//!
+//! **Snapshots are deterministic.** Counter/histogram merges are
+//! additive and gauges merge by max, so the aggregated snapshot — and
+//! its JSON rendering — is byte-identical however the work was sharded
+//! across threads (pinned under worker counts {1,4,7}).
+//!
+//! Everything here is disabled by default; `repro ... --metrics` and
+//! `repro ... --trace FILE` switch it on per run.
+
+pub mod metrics;
+pub mod prof;
+pub mod trace;
+
+/// Enable metrics and tracing together (the `--trace` + `--metrics`
+/// CLI combination).
+pub fn enable_all() {
+    metrics::enable(true);
+    trace::enable(true);
+}
+
+/// Disable both recorders (the default state).
+pub fn disable_all() {
+    metrics::enable(false);
+    trace::enable(false);
+}
+
+/// Clear all recorded metrics and trace events (recorder enablement is
+/// left as-is).
+pub fn reset_all() {
+    metrics::reset();
+    trace::reset();
+}
+
+/// Serialize tests that enable the global recorders. The registry and
+/// the trace ring are process-global, so concurrent tests that enable
+/// them would observe each other's increments; every test touching obs
+/// state holds this guard first. Poison-tolerant: a panicking test must
+/// not cascade into every later obs test.
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Bump a counter: `obs_count!("api.plan.runs")` or
+/// `obs_count!("soc.l2.read_bytes", n)`. Compiles to a relaxed atomic
+/// load + branch when metrics are disabled; the name and value
+/// expressions are only evaluated when enabled.
+#[macro_export]
+macro_rules! obs_count {
+    ($name:expr) => {
+        $crate::obs_count!($name, 1u64)
+    };
+    ($name:expr, $n:expr) => {
+        if $crate::obs::metrics::enabled() {
+            $crate::obs::metrics::counter_add($name, $n as u64);
+        }
+    };
+}
+
+/// Record a max-gauge: keeps the maximum value seen (max is the one
+/// aggregation that stays deterministic under arbitrary sharding).
+#[macro_export]
+macro_rules! obs_gauge_max {
+    ($name:expr, $v:expr) => {
+        if $crate::obs::metrics::enabled() {
+            $crate::obs::metrics::gauge_max($name, $v as u64);
+        }
+    };
+}
+
+/// Record a histogram sample into fixed log2 buckets:
+/// `obs_hist!("serve.batch_size", batch.len())`.
+#[macro_export]
+macro_rules! obs_hist {
+    ($name:expr, $v:expr) => {
+        if $crate::obs::metrics::enabled() {
+            $crate::obs::metrics::hist_record($name, $v as u64);
+        }
+    };
+}

@@ -1,0 +1,204 @@
+//! The profiling roll-up: one derived view answering "where did the
+//! run spend its time and which fast paths did it hit?", computed from
+//! a metrics [`Snapshot`](super::metrics::Snapshot).
+//!
+//! Rendering lives in `report::obs_text` / `report::obs_json`; this
+//! module only derives numbers, so the report layer stays the single
+//! place that owns formatting.
+
+use super::metrics::Snapshot;
+
+/// Per-tenant serving roll-up.
+pub struct TenantProfile {
+    /// Tenant name (the CLI `--tenants` entry).
+    pub name: String,
+    /// GemmPlan runs issued by this tenant's shard contexts.
+    pub gemm_calls: u64,
+    /// How many of those took the zero-repack packed route.
+    pub packed_runs: u64,
+}
+
+/// Everything the roll-up report prints, derived from one snapshot.
+pub struct Profile {
+    /// `api.plan.runs`: plan-instance executions.
+    pub plan_runs: u64,
+    /// `api.plan.packed_runs`: executions on the zero-repack route.
+    pub plan_packed: u64,
+    /// `batch.tier.swar` / `batch.tier.scalar`: lane-tier dispatches.
+    pub tier_swar: u64,
+    /// Scalar-tier dispatches (reference path).
+    pub tier_scalar: u64,
+    /// `batch.gemm.blocked` / `batch.gemm.simple`: BlockPlan routing.
+    pub gemm_blocked: u64,
+    /// Unblocked (single-tile) GEMM loops.
+    pub gemm_simple: u64,
+    /// `nn.plan.builds` / `nn.plan.reuses`: GemmCtx plan cache.
+    pub plan_builds: u64,
+    /// Plan-cache hits.
+    pub plan_reuses: u64,
+    /// `nn.scale.skips`: loss-scaler overflow skips (each also backs
+    /// the scale off).
+    pub scale_skips: u64,
+    /// `nn.scale.growths`: loss-scale doublings.
+    pub scale_growths: u64,
+    /// `soc.cycles.total/compute/dma_stall` summed over clusters.
+    pub soc_total: u64,
+    /// Busy compute cycles.
+    pub soc_compute: u64,
+    /// Cycles compute sat stalled on DMA.
+    pub soc_stall: u64,
+    /// `serve.submitted` / `serve.completed` / `serve.batches` /
+    /// `serve.deadline_misses` / `serve.ticks`.
+    pub serve_submitted: u64,
+    /// Completed responses.
+    pub serve_completed: u64,
+    /// Batch dispatches.
+    pub serve_batches: u64,
+    /// Responses past their deadline.
+    pub serve_deadline_misses: u64,
+    /// Virtual ticks simulated.
+    pub serve_ticks: u64,
+    /// Approximate latency percentiles (p50, p95, p99) in ticks from
+    /// the `serve.latency_ticks` log2 histogram — each is the upper
+    /// edge of the bucket the quantile falls in.
+    pub serve_latency: Option<(u64, u64, u64)>,
+    /// Per-tenant routing, in name order.
+    pub tenants: Vec<TenantProfile>,
+}
+
+fn share(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        0.0
+    } else {
+        part as f64 / whole as f64
+    }
+}
+
+impl Profile {
+    /// Packed-route hit rate over all plan runs (0..=1).
+    pub fn packed_rate(&self) -> f64 {
+        share(self.plan_packed, self.plan_runs)
+    }
+
+    /// SWAR share of lane-tier dispatches (0..=1).
+    pub fn swar_rate(&self) -> f64 {
+        share(self.tier_swar, self.tier_swar + self.tier_scalar)
+    }
+
+    /// SoC (compute, dma_stall, idle) cycle shares; zeros when no SoC
+    /// run was recorded.
+    pub fn soc_shares(&self) -> (f64, f64, f64) {
+        let idle = self.soc_total.saturating_sub(self.soc_compute + self.soc_stall);
+        (
+            share(self.soc_compute, self.soc_total),
+            share(self.soc_stall, self.soc_total),
+            share(idle, self.soc_total),
+        )
+    }
+}
+
+/// Derive the roll-up from a snapshot. Tenant rows are discovered from
+/// the `serve.tenant.<name>.gemm_calls` counter namespace.
+pub fn profile(s: &Snapshot) -> Profile {
+    let mut tenants = Vec::new();
+    for (key, &calls) in &s.counters {
+        if let Some(rest) = key.strip_prefix("serve.tenant.") {
+            if let Some(name) = rest.strip_suffix(".gemm_calls") {
+                tenants.push(TenantProfile {
+                    name: name.to_string(),
+                    gemm_calls: calls,
+                    packed_runs: s.counter(&format!("serve.tenant.{name}.packed_runs")),
+                });
+            }
+        }
+    }
+    let latency = s.hist("serve.latency_ticks").map(|h| {
+        (h.quantile_upper(0.50), h.quantile_upper(0.95), h.quantile_upper(0.99))
+    });
+    Profile {
+        plan_runs: s.counter("api.plan.runs"),
+        plan_packed: s.counter("api.plan.packed_runs"),
+        tier_swar: s.counter("batch.tier.swar"),
+        tier_scalar: s.counter("batch.tier.scalar"),
+        gemm_blocked: s.counter("batch.gemm.blocked"),
+        gemm_simple: s.counter("batch.gemm.simple"),
+        plan_builds: s.counter("nn.plan.builds"),
+        plan_reuses: s.counter("nn.plan.reuses"),
+        scale_skips: s.counter("nn.scale.skips"),
+        scale_growths: s.counter("nn.scale.growths"),
+        soc_total: s.counter("soc.cycles.total"),
+        soc_compute: s.counter("soc.cycles.compute"),
+        soc_stall: s.counter("soc.cycles.dma_stall"),
+        serve_submitted: s.counter("serve.submitted"),
+        serve_completed: s.counter("serve.completed"),
+        serve_batches: s.counter("serve.batches"),
+        serve_deadline_misses: s.counter("serve.deadline_misses"),
+        // Virtual time is monotone, so the tick clock dual-writes as a
+        // max-gauge (an assignment, not an increment, in ServeStats).
+        serve_ticks: s.gauge("serve.ticks"),
+        serve_latency: latency,
+        tenants,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Hist;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn derives_rates_shares_and_tenant_rows_from_a_snapshot() {
+        let mut counters = BTreeMap::new();
+        for (k, v) in [
+            ("api.plan.runs", 10u64),
+            ("api.plan.packed_runs", 8),
+            ("batch.tier.swar", 6),
+            ("batch.tier.scalar", 2),
+            ("soc.cycles.total", 1000),
+            ("soc.cycles.compute", 700),
+            ("soc.cycles.dma_stall", 100),
+            ("serve.tenant.fp32.gemm_calls", 4),
+            ("serve.tenant.fp32.packed_runs", 4),
+            ("serve.tenant.hfp8.gemm_calls", 5),
+            ("serve.tenant.hfp8.packed_runs", 3),
+        ] {
+            counters.insert(k.to_string(), v);
+        }
+        let mut lat = Hist::default();
+        for v in [1u64, 2, 2, 3, 9] {
+            lat.count += 1;
+            lat.sum += v;
+            lat.buckets[crate::obs::metrics::bucket_index(v)] += 1;
+        }
+        let mut hists = BTreeMap::new();
+        hists.insert("serve.latency_ticks".to_string(), lat);
+        let snap = Snapshot { counters, gauges: BTreeMap::new(), hists };
+        let p = profile(&snap);
+        assert!((p.packed_rate() - 0.8).abs() < 1e-12);
+        assert!((p.swar_rate() - 0.75).abs() < 1e-12);
+        let (compute, stall, idle) = p.soc_shares();
+        assert!((compute - 0.7).abs() < 1e-12);
+        assert!((stall - 0.1).abs() < 1e-12);
+        assert!((idle - 0.2).abs() < 1e-12);
+        assert_eq!(p.tenants.len(), 2);
+        assert_eq!(p.tenants[0].name, "fp32");
+        assert_eq!(p.tenants[1].packed_runs, 3);
+        // 5 samples: p50 = 3rd sample (2) -> bucket 2 upper edge 3.
+        assert_eq!(p.serve_latency, Some((3, 15, 15)));
+    }
+
+    #[test]
+    fn empty_snapshot_degrades_to_zeros() {
+        let snap = Snapshot {
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+        };
+        let p = profile(&snap);
+        assert_eq!(p.packed_rate(), 0.0);
+        assert_eq!(p.soc_shares(), (0.0, 0.0, 0.0));
+        assert!(p.serve_latency.is_none());
+        assert!(p.tenants.is_empty());
+    }
+}

@@ -1,0 +1,375 @@
+//! Structured span tracing with a Chrome-trace-event exporter.
+//!
+//! ## The clock rule
+//!
+//! Spans run on **virtual time wherever the system has one** and on
+//! monotonic wall time only where it does not:
+//!
+//! * [`Clock::Cycles`] — the SoC/cluster integer-cycle timelines
+//!   (`soc::sched`): DMA chunk fetches, compute windows, write-backs.
+//! * [`Clock::Ticks`] — the serving layer's virtual ticks: batch
+//!   dispatches on the tick they happen.
+//! * [`Clock::Wall`] — everything that has no simulated clock: plan
+//!   compilation, operand packing, tier dispatch, training phases.
+//!
+//! Each clock exports as its own Chrome *process* (pid 1 = wall,
+//! pid 2 = cycles, pid 3 = ticks) so Perfetto renders the three time
+//! bases side by side instead of interleaving nanoseconds with cycle
+//! numbers. Within the cycles process, tid is the cluster index;
+//! within the wall process, tids are small per-thread integers handed
+//! out on first use.
+//!
+//! Events land in a bounded ring ([`CAPACITY`]); overflow increments a
+//! drop counter instead of reallocating (observation must never cause
+//! unbounded memory growth). Everything is a no-op — one relaxed
+//! atomic load — while tracing is disabled.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is the trace recorder on? One relaxed load on the hot path.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Switch the recorder on or off (off by default).
+pub fn enable(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Ring capacity in events; past this, new events are counted as
+/// dropped rather than stored.
+pub const CAPACITY: usize = 1 << 18;
+
+/// Which time base an event's `ts`/`dur` are measured in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Clock {
+    /// Monotonic wall time, nanoseconds since the process trace epoch.
+    Wall,
+    /// Simulated hardware cycles (SoC / cluster timelines).
+    Cycles,
+    /// Serving-layer virtual ticks.
+    Ticks,
+}
+
+impl Clock {
+    fn pid(self) -> u32 {
+        match self {
+            Clock::Wall => 1,
+            Clock::Cycles => 2,
+            Clock::Ticks => 3,
+        }
+    }
+
+    fn process_name(self) -> &'static str {
+        match self {
+            Clock::Wall => "wall",
+            Clock::Cycles => "cycles",
+            Clock::Ticks => "virtual-ticks",
+        }
+    }
+}
+
+/// One recorded complete ("ph":"X") event.
+#[derive(Clone)]
+pub struct Event {
+    /// Span name (the taxonomy table in DESIGN.md lists them all).
+    pub name: &'static str,
+    /// Category, e.g. `"api"`, `"batch"`, `"nn"`, `"serve"`, `"soc"`.
+    pub cat: &'static str,
+    /// Time base of `ts`/`dur`.
+    pub clock: Clock,
+    /// Thread/cluster/queue lane within the clock's process.
+    pub tid: u64,
+    /// Start time (ns for [`Clock::Wall`], native units otherwise).
+    pub ts: u64,
+    /// Duration in the same unit as `ts`.
+    pub dur: u64,
+    /// Pre-rendered JSON object *body* (no braces), e.g.
+    /// `"m":128,"tier":"swar"` — built by the caller only when tracing
+    /// is enabled.
+    pub args: Option<String>,
+}
+
+struct Recorder {
+    events: Mutex<Vec<Event>>,
+    dropped: AtomicU64,
+}
+
+fn recorder() -> &'static Recorder {
+    static REC: OnceLock<Recorder> = OnceLock::new();
+    REC.get_or_init(|| Recorder { events: Mutex::new(Vec::new()), dropped: AtomicU64::new(0) })
+}
+
+fn lock_events() -> MutexGuard<'static, Vec<Event>> {
+    recorder().events.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Record one event (caller has already checked [`enabled`]).
+pub fn record(ev: Event) {
+    let mut events = lock_events();
+    if events.len() >= CAPACITY {
+        recorder().dropped.fetch_add(1, Ordering::Relaxed);
+    } else {
+        events.push(ev);
+    }
+}
+
+/// Events dropped since the last [`reset`] because the ring was full.
+pub fn dropped() -> u64 {
+    recorder().dropped.load(Ordering::Relaxed)
+}
+
+/// Number of events currently held.
+pub fn len() -> usize {
+    lock_events().len()
+}
+
+/// Clear the ring and the drop counter.
+pub fn reset() {
+    lock_events().clear();
+    recorder().dropped.store(0, Ordering::Relaxed);
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process trace epoch (first use).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn wall_tid() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TID: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+/// A wall-clock span guard: created at phase entry, records one
+/// complete event when dropped. `None` inside means tracing was off at
+/// creation — the guard is then a true no-op.
+pub struct Span(Option<SpanInner>);
+
+struct SpanInner {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    args: Option<String>,
+}
+
+/// Open a wall-clock span (no-op while tracing is disabled).
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanInner { name, cat, start_ns: now_ns(), args: None }))
+}
+
+/// Open a wall-clock span carrying pre-rendered args. The `args`
+/// closure runs only when tracing is enabled, so hot paths pay no
+/// formatting cost while off.
+pub fn span_with(name: &'static str, cat: &'static str, args: impl FnOnce() -> String) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanInner { name, cat, start_ns: now_ns(), args: Some(args()) }))
+}
+
+impl Span {
+    /// Is this guard actually recording?
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(inner) = self.0.take() {
+            let end = now_ns();
+            record(Event {
+                name: inner.name,
+                cat: inner.cat,
+                clock: Clock::Wall,
+                tid: wall_tid(),
+                ts: inner.start_ns,
+                dur: end.saturating_sub(inner.start_ns),
+                args: inner.args,
+            });
+        }
+    }
+}
+
+/// Record a virtual-time span (cycles or ticks) directly: virtual
+/// timelines are resolved after the fact by the schedulers, so there
+/// is no guard to hold open. No-op while tracing is disabled; the
+/// `args` closure runs only when it is not.
+pub fn virt_span(
+    clock: Clock,
+    tid: u64,
+    name: &'static str,
+    cat: &'static str,
+    ts: u64,
+    dur: u64,
+    args: impl FnOnce() -> String,
+) {
+    if !enabled() {
+        return;
+    }
+    record(Event { name, cat, clock, tid, ts, dur, args: Some(args()) });
+}
+
+// ------------------------------------------------------------- export
+
+fn push_ts(out: &mut String, clock: Clock, v: u64) {
+    match clock {
+        // Wall ns -> fractional microseconds (Chrome's native unit).
+        Clock::Wall => *out += &format!("{}.{:03}", v / 1000, v % 1000),
+        // One cycle / one tick renders as one microsecond: virtual
+        // timelines keep their integer coordinates verbatim.
+        Clock::Cycles | Clock::Ticks => *out += &v.to_string(),
+    }
+}
+
+/// Render the ring as a Chrome trace-event JSON document
+/// (`chrome://tracing` / Perfetto "Open trace file").
+pub fn chrome_json() -> String {
+    let events = lock_events();
+    let mut s = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    // Name the three clock processes so the viewer labels the tracks.
+    for clock in [Clock::Wall, Clock::Cycles, Clock::Ticks] {
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        s += &format!(
+            "{{\"ph\":\"M\",\"pid\":{},\"tid\":0,\"name\":\"process_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            clock.pid(),
+            clock.process_name()
+        );
+    }
+    for ev in events.iter() {
+        s.push(',');
+        s += &format!(
+            "{{\"ph\":\"X\",\"pid\":{},\"tid\":{},\"name\":\"{}\",\"cat\":\"{}\",\"ts\":",
+            ev.clock.pid(),
+            ev.tid,
+            ev.name,
+            ev.cat
+        );
+        push_ts(&mut s, ev.clock, ev.ts);
+        s += ",\"dur\":";
+        push_ts(&mut s, ev.clock, ev.dur);
+        if let Some(args) = &ev.args {
+            s += &format!(",\"args\":{{{args}}}");
+        }
+        s += "}";
+    }
+    let dropped = recorder().dropped.load(Ordering::Relaxed);
+    s += &format!("],\"displayTimeUnit\":\"ms\",\"otherData\":{{\"dropped\":{dropped}}}}}");
+    s
+}
+
+/// Write [`chrome_json`] to `path`.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, chrome_json())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::test_guard;
+
+    #[test]
+    fn disabled_recorder_stores_nothing() {
+        let _g = test_guard();
+        reset();
+        enable(false);
+        {
+            let s = span("test.trace.off", "test");
+            assert!(!s.is_active());
+        }
+        virt_span(Clock::Cycles, 0, "test.trace.off", "test", 0, 10, String::new);
+        assert_eq!(len(), 0);
+    }
+
+    #[test]
+    fn spans_and_virtual_events_export_as_chrome_json() {
+        let _g = test_guard();
+        reset();
+        enable(true);
+        {
+            let _s = span_with("test.trace.span", "test", || "\"k\":1".to_string());
+        }
+        virt_span(Clock::Cycles, 3, "test.trace.dma", "soc", 100, 40, || {
+            "\"bytes\":512".to_string()
+        });
+        virt_span(Clock::Ticks, 0, "test.trace.tick", "serve", 7, 1, String::new);
+        enable(false);
+        let json = chrome_json();
+        reset();
+        assert!(json.starts_with("{\"traceEvents\":["), "{json}");
+        assert!(json.contains("\"name\":\"test.trace.span\""), "{json}");
+        // The cycles-clock event keeps its integer coordinates and
+        // lands in pid 2, tid 3.
+        assert!(
+            json.contains(
+                "{\"ph\":\"X\",\"pid\":2,\"tid\":3,\"name\":\"test.trace.dma\",\"cat\":\"soc\",\
+                 \"ts\":100,\"dur\":40,\"args\":{\"bytes\":512}}"
+            ),
+            "{json}"
+        );
+        assert!(json.contains("\"args\":{\"name\":\"cycles\"}"), "{json}");
+        assert!(json.ends_with("\"otherData\":{\"dropped\":0}}"), "{json}");
+        // Balanced braces: the document must parse as JSON.
+        let open = json.matches('{').count();
+        let close = json.matches('}').count();
+        assert_eq!(open, close, "unbalanced braces in {json}");
+    }
+
+    #[test]
+    fn ring_overflow_counts_drops_instead_of_growing() {
+        let _g = test_guard();
+        reset();
+        // Exercise the bound without allocating 256k events: fill via
+        // the public record path up to capacity is too slow here, so
+        // emulate by checking the drop counter path with a full ring.
+        {
+            let mut events = super::lock_events();
+            events.clear();
+            let ev = Event {
+                name: "test.trace.fill",
+                cat: "test",
+                clock: Clock::Wall,
+                tid: 1,
+                ts: 0,
+                dur: 0,
+                args: None,
+            };
+            events.resize(CAPACITY, ev);
+        }
+        record(Event {
+            name: "test.trace.over",
+            cat: "test",
+            clock: Clock::Wall,
+            tid: 1,
+            ts: 0,
+            dur: 0,
+            args: None,
+        });
+        assert_eq!(len(), CAPACITY);
+        assert_eq!(dropped(), 1);
+        reset();
+        assert_eq!(len(), 0);
+        assert_eq!(dropped(), 0);
+    }
+}

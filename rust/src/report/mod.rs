@@ -454,3 +454,89 @@ pub fn serve_stats_text(stats: &crate::serve::ServeStats, tenant_names: &[String
     }
     s
 }
+
+// ------------------------------------------------------- observability
+
+/// Human-readable roll-up of an observability snapshot — the
+/// `--metrics` report every instrumented subcommand appends. Sections
+/// whose counters are all zero (pillars the run never touched) are
+/// omitted, so a pure-GEMM run prints two lines, not an empty SoC/serve
+/// scaffold.
+pub fn obs_text(snap: &crate::obs::metrics::Snapshot) -> String {
+    let p = crate::obs::prof::profile(snap);
+    let mut s = String::from("== observability roll-up ==\n");
+    if p.plan_runs > 0 {
+        s += &format!(
+            "plans        : {} runs, {} packed ({:.0}% fast path), {} compiled\n",
+            p.plan_runs,
+            p.plan_packed,
+            100.0 * p.packed_rate(),
+            snap.counter("api.plan.compiles"),
+        );
+    }
+    if p.tier_swar + p.tier_scalar > 0 {
+        s += &format!(
+            "lane tiers   : {} SWAR / {} scalar dispatches ({:.0}% SWAR), {} blocked / {} simple loops\n",
+            p.tier_swar,
+            p.tier_scalar,
+            100.0 * p.swar_rate(),
+            p.gemm_blocked,
+            p.gemm_simple,
+        );
+    }
+    if p.plan_builds + p.plan_reuses > 0 {
+        s += &format!(
+            "plan cache   : {} builds, {} reuses\n",
+            p.plan_builds, p.plan_reuses
+        );
+    }
+    let steps = snap.counter("train.steps");
+    if steps > 0 {
+        s += &format!(
+            "training     : {} steps, {} overflow skips, {} scale growths\n",
+            steps, p.scale_skips, p.scale_growths
+        );
+    }
+    if p.soc_total > 0 {
+        let (compute, stall, idle) = p.soc_shares();
+        s += &format!(
+            "soc cycles   : {} total — {:.0}% compute / {:.0}% dma-stall / {:.0}% other\n",
+            p.soc_total,
+            100.0 * compute,
+            100.0 * stall,
+            100.0 * idle,
+        );
+        s += &format!(
+            "l2 traffic   : {} B read, {} B written, {} transfers\n",
+            snap.counter("soc.l2.read_bytes"),
+            snap.counter("soc.l2.write_bytes"),
+            snap.counter("soc.l2.transfers"),
+        );
+    }
+    if p.serve_submitted > 0 {
+        s += &format!(
+            "serving      : {}/{} completed over {} ticks, {} batches, {} deadline misses\n",
+            p.serve_completed, p.serve_submitted, p.serve_ticks, p.serve_batches, p.serve_deadline_misses
+        );
+        if let Some((p50, p95, p99)) = p.serve_latency {
+            s += &format!("serve latency: p50 ≤{p50} / p95 ≤{p95} / p99 ≤{p99} ticks (bucket upper edges)\n");
+        }
+        for t in &p.tenants {
+            s += &format!(
+                "tenant {:<8}: {} GEMM calls, {} packed\n",
+                t.name, t.gemm_calls, t.packed_runs
+            );
+        }
+    }
+    if s.ends_with("==\n") {
+        s += "(no instrumented work recorded)\n";
+    }
+    s
+}
+
+/// The machine-readable companion of [`obs_text`]: the raw snapshot
+/// JSON (byte-stable; see `obs::metrics::Snapshot::json`). Kept as a
+/// report entry point so callers never format snapshots ad hoc.
+pub fn obs_json(snap: &crate::obs::metrics::Snapshot) -> String {
+    snap.json()
+}

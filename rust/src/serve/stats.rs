@@ -57,6 +57,7 @@ impl ServeStats {
         self.queue_depth_max = self.queue_depth_max.max(depth);
         self.queue_depth_sum += depth as u64;
         self.depth_samples += 1;
+        crate::obs_gauge_max!("serve.queue_depth_max", depth);
     }
 
     /// Record `n` quiet (no-dispatch) ticks at backlog `depth` in one
@@ -71,10 +72,15 @@ impl ServeStats {
         self.depth_samples += n;
     }
 
-    /// Record one dispatched batch's logical size.
+    /// Record one dispatched batch's logical size. The obs dual-write
+    /// happens here, at the same single choke point `summary_json`
+    /// reads, so the two views agree by construction (cross-checked in
+    /// `tests/obs_differential.rs`).
     pub(crate) fn record_batch(&mut self, size: usize) {
         self.batches += 1;
         *self.batch_hist.entry(size).or_insert(0) += 1;
+        crate::obs_count!("serve.batches");
+        crate::obs_hist!("serve.batch_size", size);
     }
 
     /// Record one completed response.
@@ -82,6 +88,11 @@ impl ServeStats {
         self.completed += 1;
         self.latencies.push(r.latency_ticks());
         self.deadline_misses += r.deadline_missed as u64;
+        crate::obs_count!("serve.completed");
+        crate::obs_hist!("serve.latency_ticks", r.latency_ticks());
+        if r.deadline_missed {
+            crate::obs_count!("serve.deadline_misses");
+        }
     }
 
     fn rank(sorted: &[u64], q: f64) -> u64 {

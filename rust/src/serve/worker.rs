@@ -296,6 +296,7 @@ impl Server {
             deadline_tick: deadline_in.map(|d| self.now.saturating_add(d)),
         });
         self.stats.submitted += 1;
+        crate::obs_count!("serve.submitted");
         Ok(id)
     }
 
@@ -316,6 +317,18 @@ impl Server {
         for (t, q) in self.queues.iter_mut().enumerate() {
             for batch in self.policy.drain(q, self.now) {
                 self.stats.record_batch(batch.len());
+                // Virtual-ticks clock: one span per dispatched batch at
+                // the tick it leaves the queue (tid = tenant index).
+                let (now, size) = (self.now, batch.len());
+                crate::obs::trace::virt_span(
+                    crate::obs::trace::Clock::Ticks,
+                    t as u64,
+                    "serve.dispatch",
+                    "serve",
+                    now,
+                    1,
+                    || format!("\"tenant\":{t},\"batch\":{size},\"tick\":{now}"),
+                );
                 self.shards[batch_no % n_shards].inbox.push((t, batch));
                 batch_no += 1;
                 any = true;
@@ -361,6 +374,17 @@ impl Server {
                 for (t, (calls, packed)) in shard.counters.iter_mut().enumerate() {
                     self.stats.tenants[t].gemm_calls += *calls;
                     self.stats.tenants[t].packed_runs += *packed;
+                    if crate::obs::metrics::enabled() && (*calls != 0 || *packed != 0) {
+                        let name = &self.tenants[t].name;
+                        crate::obs::metrics::counter_add(
+                            &format!("serve.tenant.{name}.gemm_calls"),
+                            *calls,
+                        );
+                        crate::obs::metrics::counter_add(
+                            &format!("serve.tenant.{name}.packed_runs"),
+                            *packed,
+                        );
+                    }
                     *calls = 0;
                     *packed = 0;
                 }
@@ -372,6 +396,7 @@ impl Server {
         }
         self.now += 1;
         self.stats.ticks = self.now;
+        crate::obs_gauge_max!("serve.ticks", self.now);
         Ok(responses)
     }
 
@@ -417,6 +442,7 @@ impl Server {
             self.stats.record_quiet(target - self.now, self.pending());
             self.now = target;
             self.stats.ticks = self.now;
+            crate::obs_gauge_max!("serve.ticks", self.now);
         }
         self.now
     }

@@ -202,7 +202,7 @@ impl Soc {
         let mut l2_total = L2Stats::default();
         let mut flops = 0u64;
 
-        for tile_ids in &plan.per_cluster {
+        for (cl_id, tile_ids) in plan.per_cluster.iter().enumerate() {
             let mut dma = DmaEngine::default();
             let mut stats = CoreStats::default();
             let mut l2_stats = L2Stats::default();
@@ -302,7 +302,31 @@ impl Soc {
                     writeback: ChunkCost { bytes: c_len as u64, dma_cycles: wb_cycles, compute_cycles: 0 },
                 });
             }
-            let timeline = sched::schedule(&tile_costs, &l2_model);
+            // Both branches run the same resolver (`sched::schedule_impl`),
+            // so tracing can never move a cycle — the differential tests
+            // pin the timeline either way.
+            let timeline = if crate::obs::trace::enabled() {
+                let (tl, events) = sched::schedule_with_events(&tile_costs, &l2_model);
+                for ev in &events {
+                    let (name, cat) = match ev.kind {
+                        sched::SchedEventKind::Fill => ("dma.chunk", "soc"),
+                        sched::SchedEventKind::Compute => ("compute.chunk", "soc"),
+                        sched::SchedEventKind::Writeback => ("writeback", "soc"),
+                    };
+                    crate::obs::trace::virt_span(
+                        crate::obs::trace::Clock::Cycles,
+                        cl_id as u64,
+                        name,
+                        cat,
+                        ev.start,
+                        ev.end - ev.start,
+                        || format!("\"tile\":{},\"chunk\":{},\"bytes\":{}", ev.tile, ev.chunk, ev.bytes),
+                    );
+                }
+                tl
+            } else {
+                sched::schedule(&tile_costs, &l2_model)
+            };
             l2_total.merge(&l2_stats);
             clusters.push(ClusterRun { timeline, stats, l2: l2_stats, tiles: tile_ids.len() });
         }
@@ -315,6 +339,15 @@ impl Soc {
             .map(|c| c.timeline)
             .unwrap_or_default();
         let compute_cycles = clusters.iter().map(|c| c.timeline.compute_busy).max().unwrap_or(0);
+
+        // Metrics dual-write next to the same aggregates the result
+        // struct reports (critical-cluster view, matching `soc_shares`).
+        crate::obs_count!("soc.cycles.total", total_cycles);
+        crate::obs_count!("soc.cycles.compute", compute_cycles);
+        crate::obs_count!("soc.cycles.dma_stall", critical.dma_stall);
+        crate::obs_count!("soc.l2.read_bytes", l2_total.read_bytes);
+        crate::obs_count!("soc.l2.write_bytes", l2_total.write_bytes);
+        crate::obs_count!("soc.l2.transfers", l2_total.transfers);
 
         let c_bytes = &l2_img[c_off as usize..c_off as usize + m * n * dw];
         let c = unpack_matrix(c_bytes, m, n, dst, MatrixOrder::RowMajor);

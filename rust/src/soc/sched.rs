@@ -55,23 +55,74 @@ pub struct Timeline {
     pub dma_stall: u64,
 }
 
-/// Resolve one cluster's tile sequence against the (contended) L2.
-pub fn schedule(tiles: &[TileCost], l2: &L2Model) -> Timeline {
+/// What one resolved [`SchedEvent`] window was doing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedEventKind {
+    /// An input-chunk DMA fill occupying the engine.
+    Fill,
+    /// A chunk's compute window on the cores.
+    Compute,
+    /// The tile's C write-back transfer.
+    Writeback,
+}
+
+/// One resolved window of the ping-pong timeline, in absolute cluster
+/// cycles — the raw material the observability layer exports as
+/// cycles-clock trace spans. Produced by [`schedule_with_events`];
+/// [`schedule`] resolves the identical timeline without materializing
+/// them.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedEvent {
+    /// Index into the scheduled tile sequence.
+    pub tile: usize,
+    /// Chunk index within the tile (0 for write-backs).
+    pub chunk: usize,
+    /// Fill / compute / write-back.
+    pub kind: SchedEventKind,
+    /// First cycle of the window.
+    pub start: u64,
+    /// One past the last cycle.
+    pub end: u64,
+    /// Bytes moved (0 for compute windows).
+    pub bytes: u64,
+}
+
+/// The one ping-pong resolver: both public entry points run this exact
+/// loop, so emitting events can never change a cycle of the timeline
+/// (the obs differential tests pin `schedule` == `schedule_with_events`
+/// on the cycle counts).
+fn schedule_impl(tiles: &[TileCost], l2: &L2Model, on_event: &mut dyn FnMut(SchedEvent)) -> Timeline {
     let mut dma_free = 0u64;
     let mut compute_free = 0u64;
     let mut buffer_free = [0u64; 2];
     let mut parity = 0usize;
     let mut tl = Timeline::default();
-    for tile in tiles {
-        for ch in &tile.chunks {
+    for (ti, tile) in tiles.iter().enumerate() {
+        for (ci, ch) in tile.chunks.iter().enumerate() {
             let dur = l2.transfer_cycles(ch.bytes, ch.dma_cycles);
             let t_start = dma_free.max(buffer_free[parity]);
             let t_end = t_start + dur;
             dma_free = t_end;
             tl.dma_busy += dur;
+            on_event(SchedEvent {
+                tile: ti,
+                chunk: ci,
+                kind: SchedEventKind::Fill,
+                start: t_start,
+                end: t_end,
+                bytes: ch.bytes,
+            });
             let c_start = compute_free.max(t_end);
             tl.dma_stall += c_start - compute_free;
             let c_end = c_start + ch.compute_cycles;
+            on_event(SchedEvent {
+                tile: ti,
+                chunk: ci,
+                kind: SchedEventKind::Compute,
+                start: c_start,
+                end: c_end,
+                bytes: 0,
+            });
             buffer_free[parity] = c_end;
             compute_free = c_end;
             tl.compute_busy += ch.compute_cycles;
@@ -83,9 +134,31 @@ pub fn schedule(tiles: &[TileCost], l2: &L2Model) -> Timeline {
         let w_start = dma_free.max(compute_free);
         dma_free = w_start + dur;
         tl.dma_busy += dur;
+        on_event(SchedEvent {
+            tile: ti,
+            chunk: 0,
+            kind: SchedEventKind::Writeback,
+            start: w_start,
+            end: w_start + dur,
+            bytes: tile.writeback.bytes,
+        });
     }
     tl.end = compute_free.max(dma_free);
     tl
+}
+
+/// Resolve one cluster's tile sequence against the (contended) L2.
+pub fn schedule(tiles: &[TileCost], l2: &L2Model) -> Timeline {
+    schedule_impl(tiles, l2, &mut |_| {})
+}
+
+/// [`schedule`] plus the per-window event list (same resolver, same
+/// cycles) — what `Soc::run_gemm` exports as cycles-clock trace spans
+/// when tracing is enabled.
+pub fn schedule_with_events(tiles: &[TileCost], l2: &L2Model) -> (Timeline, Vec<SchedEvent>) {
+    let mut events = Vec::new();
+    let tl = schedule_impl(tiles, l2, &mut |ev| events.push(ev));
+    (tl, events)
 }
 
 #[cfg(test)]

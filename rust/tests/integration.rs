@@ -215,6 +215,91 @@ fn cli_roofline_json_is_one_parseable_line() {
     assert!(stdout.contains("\"cluster_gflops_per_w\":null"), "{stdout}");
 }
 
+// ------------------------------------------------- observability CLI
+
+#[test]
+fn cli_rejects_bad_obs_flags() {
+    // A bare --trace parses as a flag, not an option — typed error.
+    assert_clean_cli_error(&["gemm", "--size", "16x16", "--trace"], "--trace needs a file path");
+    // An uncreatable path fails up front, before any simulated work.
+    assert_clean_cli_error(
+        &["gemm", "--size", "16x16", "--trace", "/nonexistent-dir/t.json"],
+        "--trace: cannot create",
+    );
+    // --metrics is a flag; a trailing value is a typed error.
+    assert_clean_cli_error(&["serve", "--metrics", "yes"], "--metrics takes no value");
+    assert_clean_cli_error(&["train", "--metrics", "yes"], "--metrics takes no value");
+}
+
+#[test]
+fn cli_gemm_trace_emits_chrome_trace_with_span_taxonomy() {
+    // 256x512 (K = 256) FP8 crosses the blocking threshold, so the
+    // trace must show the whole kernel taxonomy: plan compile/run,
+    // operand packing, the tier dispatch and the tile loop.
+    let path = std::env::temp_dir().join(format!("mfnn_trace_{}.json", std::process::id()));
+    let path = path.to_str().expect("utf-8 temp path");
+    let out = repro(&[
+        "gemm", "--size", "256x512", "--kernel", "fp8", "--mode", "functional", "--trace", path,
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("trace written"),
+        "stderr must note the trace file"
+    );
+    let trace = std::fs::read_to_string(path).expect("read trace file");
+    std::fs::remove_file(path).ok();
+    assert!(trace.starts_with('{') && trace.trim_end().ends_with('}'), "not a JSON object");
+    assert!(trace.contains("\"traceEvents\""), "not a Chrome trace document");
+    for span in ["plan.compile", "plan.run", "pack.a", "pack.b", "gemm.tier", "gemm.tile"] {
+        assert!(trace.contains(&format!("\"name\":\"{span}\"")), "trace missing '{span}'");
+    }
+}
+
+#[test]
+fn cli_gemm_metrics_final_line_is_the_snapshot_json() {
+    let out = repro(&["gemm", "--size", "16x16", "--kernel", "fp8", "--metrics"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("== observability roll-up =="), "{stdout}");
+    let last = stdout.trim_end().lines().last().expect("nonempty stdout");
+    assert!(
+        last.starts_with("{\"counters\":{") && last.ends_with('}'),
+        "final line must be the snapshot JSON, got: {last}"
+    );
+    assert!(last.contains("\"batch.tier."), "snapshot missing tier counters: {last}");
+    assert!(last.contains("\"api.plan.runs\":1"), "{last}");
+}
+
+#[test]
+fn cli_serve_json_with_metrics_is_one_parseable_line() {
+    let out = repro(&[
+        "serve", "--tenants", "hfp8", "--train-steps", "4", "--requests", "12", "--max-batch",
+        "4", "--seed", "3", "--json", "--metrics",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.trim().lines().count(), 1, "--json must stay one line:\n{stdout}");
+    assert!(stdout.starts_with("{\"serve\":{"), "{stdout}");
+    assert!(stdout.contains(",\"obs\":{\"counters\":{"), "{stdout}");
+    // The two views must agree on the shared quantity.
+    assert!(stdout.contains("\"completed\":12"), "{stdout}");
+    assert!(stdout.contains("\"serve.completed\":12"), "{stdout}");
+}
+
+#[test]
+fn cli_roofline_json_with_metrics_merges_obs_into_the_object() {
+    let out = repro(&[
+        "roofline", "--clusters", "1", "--size", "16x16", "--k", "16", "--pairs", "fp8",
+        "--mode", "functional", "--json", "--metrics",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.trim().lines().count(), 1, "--json must stay one line:\n{stdout}");
+    assert!(stdout.starts_with("{\"roofline\":["), "{stdout}");
+    assert!(stdout.contains(",\"obs\":{\"counters\":{"), "{stdout}");
+    assert!(stdout.contains("\"soc.cycles.total\":"), "{stdout}");
+}
+
 // --------------------------------------------------------- PJRT (e2e)
 
 #[test]

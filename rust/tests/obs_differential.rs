@@ -1,0 +1,295 @@
+//! Observability differential gates (`cargo test --test obs_differential`).
+//!
+//! The obs layer's hard invariant: instrumentation on vs off is
+//! **bit-identical** in every result word and every virtual cycle/tick
+//! count. Each test here runs the same workload twice — obs fully
+//! enabled, obs fully disabled — and compares bits, not tolerances.
+//! The second family cross-checks the two bookkeeping views
+//! (`ServeStats::summary_json` vs the obs snapshot) and pins snapshot
+//! JSON byte-stability under different thread counts.
+//!
+//! Obs state is process-global, so every test serializes on
+//! [`minifloat_nn::obs::test_guard`] and starts from a reset.
+
+use minifloat_nn::batch::{with_lane_tier, LaneTier};
+use minifloat_nn::obs;
+use minifloat_nn::prelude::*;
+use minifloat_nn::serve::sim;
+
+fn gaussian_mats(m: usize, n: usize, k: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = minifloat_nn::util::rng::Rng::new(seed);
+    let a = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    (a, b)
+}
+
+/// Take the guard, reset to a known-clean disabled state, run `f`, and
+/// leave obs disabled for whoever runs next.
+fn with_clean_obs<R>(f: impl FnOnce() -> R) -> R {
+    let _guard = obs::test_guard();
+    obs::disable_all();
+    obs::reset_all();
+    let r = f();
+    obs::disable_all();
+    obs::reset_all();
+    r
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ------------------------------------------------ bit/cycle identity
+
+#[test]
+fn batch_gemm_is_bit_identical_with_obs_on_both_lane_tiers() {
+    with_clean_obs(|| {
+        // Functional mode routes through the batch engine — the tier
+        // dispatch, pack spans and gemm.tile spans all fire. 32x64x32
+        // keeps the subprocess-free test fast.
+        let (m, n, k) = (32, 64, 32);
+        let (a, b) = gaussian_mats(m, n, k, 7);
+        for tier in [LaneTier::Swar, LaneTier::Scalar] {
+            let run_once = || {
+                with_lane_tier(tier, || {
+                    let session = Session::builder().mode(ExecMode::Functional).seed(7).build();
+                    let run = session
+                        .gemm()
+                        .src(FP8)
+                        .acc(FP16)
+                        .dims(m, n, k)
+                        .expect("plan")
+                        .run_f64(&a, &b)
+                        .expect("run");
+                    (bits(&run.c_f64()), run.cycles)
+                })
+            };
+            obs::disable_all();
+            let (c_off, cy_off) = run_once();
+            obs::enable_all();
+            obs::reset_all();
+            let (c_on, cy_on) = run_once();
+            obs::disable_all();
+            assert_eq!(c_on, c_off, "{tier:?}: obs flipped a result bit");
+            assert_eq!(cy_on, cy_off, "{tier:?}: obs moved the modeled cycle count");
+        }
+    });
+}
+
+#[test]
+fn native_training_is_bit_identical_with_obs_on() {
+    with_clean_obs(|| {
+        let run_once = || {
+            let session = Session::builder().seed(13).build();
+            let mut tr = session.native_trainer(PrecisionPolicy::hfp8()).expect("trainer");
+            tr.train(6, 0).expect("train");
+            let hist: Vec<(usize, u64, u64, bool)> = tr
+                .history
+                .iter()
+                .map(|r| (r.step, r.loss.to_bits(), r.scale.to_bits(), r.skipped))
+                .collect();
+            (hist, tr.gemm_calls(), tr.packed_runs(), tr.accuracy().expect("acc").to_bits())
+        };
+        obs::disable_all();
+        let off = run_once();
+        obs::enable_all();
+        obs::reset_all();
+        let on = run_once();
+        obs::disable_all();
+        assert_eq!(on, off, "obs perturbed the training trajectory");
+    });
+}
+
+#[test]
+fn serve_replay_is_bit_identical_with_obs_on_at_shard_counts_1_and_4() {
+    with_clean_obs(|| {
+        let session = Session::builder().seed(6).build();
+        let mut tr = session.native_trainer(PrecisionPolicy::hfp8()).expect("trainer");
+        tr.train(5, 0).expect("train");
+        let model =
+            minifloat_nn::serve::InferenceModel::freeze(&session, tr.model(), tr.policy())
+                .expect("freeze");
+        let trace = sim::Trace::open_loop(11, &[8], 48, 0.5, Some(32)).expect("trace");
+        for shards in [1usize, 4] {
+            let plan = session
+                .server()
+                .tenant("t", model.clone())
+                .max_batch(8)
+                .max_wait_ticks(2)
+                .shards(shards)
+                .build()
+                .expect("plan");
+            let run_once = || {
+                let mut server = plan.server();
+                let responses = sim::replay(&mut server, &trace).expect("replay");
+                let logits: Vec<Vec<u64>> = responses.iter().map(|r| bits(&r.logits)).collect();
+                let ticks: Vec<u64> = responses.iter().map(|r| r.completion_tick).collect();
+                (logits, ticks, server.stats().summary_json())
+            };
+            obs::disable_all();
+            let off = run_once();
+            obs::enable_all();
+            obs::reset_all();
+            let on = run_once();
+            obs::disable_all();
+            assert_eq!(on.0, off.0, "shards={shards}: obs flipped a logit bit");
+            assert_eq!(on.1, off.1, "shards={shards}: obs moved a completion tick");
+            assert_eq!(on.2, off.2, "shards={shards}: obs changed the stats JSON");
+        }
+    });
+}
+
+#[test]
+fn soc_gemm_is_cycle_and_bit_identical_with_tracing_on() {
+    with_clean_obs(|| {
+        // One roofline-style row: the traced path runs
+        // `schedule_with_events`, the untraced one `schedule` — same
+        // resolver, so every cycle figure and every C bit must match.
+        let (m, n, k) = (32, 32, 32);
+        let (a, b) = gaussian_mats(m, n, k, 21);
+        let soc = Soc::new(SocCfg { n_clusters: 2, ..SocCfg::default() }).expect("soc");
+        let run_once = || {
+            let r = soc
+                .run_gemm(GemmKind::ExSdotp(minifloat_nn::isa::instr::OpWidth::BtoH), m, n, k, &a, &b)
+                .expect("run");
+            (bits(&r.c), r.total_cycles, r.compute_cycles, r.dma_stall_cycles, r.l2.read_bytes)
+        };
+        obs::disable_all();
+        let off = run_once();
+        obs::enable_all();
+        obs::reset_all();
+        let on = run_once();
+        // The traced run must actually have produced SoC spans —
+        // otherwise this test compares two untraced runs.
+        let trace = obs::trace::chrome_json();
+        obs::disable_all();
+        assert_eq!(on, off, "tracing perturbed the SoC timeline or result");
+        for span in ["dma.chunk", "compute.chunk", "writeback"] {
+            assert!(trace.contains(span), "traced SoC run missing '{span}' spans");
+        }
+    });
+}
+
+// ------------------------------------------- cross-view consistency
+
+#[test]
+fn serve_stats_and_obs_snapshot_agree_on_shared_quantities() {
+    with_clean_obs(|| {
+        let session = Session::builder().seed(9).build();
+        let mut tr = session.native_trainer(PrecisionPolicy::fp32()).expect("trainer");
+        tr.train(4, 0).expect("train");
+        let model =
+            minifloat_nn::serve::InferenceModel::freeze(&session, tr.model(), tr.policy())
+                .expect("freeze");
+        let plan = session
+            .server()
+            .tenant("solo", model)
+            .max_batch(8)
+            .max_wait_ticks(2)
+            .shards(2)
+            .build()
+            .expect("plan");
+        // Enable only after training: the snapshot should describe the
+        // serving run alone, like `repro serve --metrics` post-setup.
+        obs::enable_all();
+        obs::reset_all();
+        let mut server = plan.server();
+        let trace = sim::Trace::open_loop(17, &[8], 40, 0.5, Some(24)).expect("trace");
+        sim::replay(&mut server, &trace).expect("replay");
+        let snap = obs::metrics::snapshot();
+        let stats = server.stats();
+        obs::disable_all();
+        // Dual-written at single choke points, so equality is by
+        // construction — this is the regression net for the next person
+        // who adds a second increment site.
+        assert_eq!(snap.counter("serve.submitted"), stats.submitted);
+        assert_eq!(snap.counter("serve.completed"), stats.completed);
+        assert_eq!(snap.counter("serve.batches"), stats.batches);
+        assert_eq!(snap.counter("serve.deadline_misses"), stats.deadline_misses);
+        assert_eq!(snap.gauge("serve.ticks"), stats.ticks);
+        assert_eq!(snap.gauge("serve.queue_depth_max"), stats.queue_depth_max as u64);
+        assert_eq!(snap.counter("serve.tenant.solo.gemm_calls"), stats.gemm_calls());
+        assert_eq!(snap.counter("serve.tenant.solo.packed_runs"), stats.packed_runs());
+        let h = snap.hist("serve.batch_size").expect("batch-size hist");
+        assert_eq!(h.count, stats.batches);
+        let h = snap.hist("serve.latency_ticks").expect("latency hist");
+        assert_eq!(h.count, stats.completed);
+    });
+}
+
+#[test]
+fn snapshot_json_is_byte_stable_across_thread_counts() {
+    with_clean_obs(|| {
+        // The same logical workload sharded over 1, 4 and 7 threads
+        // must snapshot to the identical byte string: merges are
+        // commutative and the snapshot iterates sorted maps.
+        let mut renders = Vec::new();
+        for threads in [1usize, 4, 7] {
+            obs::enable_all();
+            obs::reset_all();
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    s.spawn(move || {
+                        // Round-robin split of a fixed work list: the
+                        // per-thread share varies, the totals do not.
+                        for i in (t..84).step_by(threads) {
+                            minifloat_nn::obs_count!("difftest.events");
+                            minifloat_nn::obs_count!("difftest.bytes", (i as u64) * 3);
+                            minifloat_nn::obs_gauge_max!("difftest.peak", i as u64);
+                            minifloat_nn::obs_hist!("difftest.lat", (i % 11) as u64);
+                        }
+                    });
+                }
+            });
+            renders.push(obs::metrics::snapshot_json());
+            obs::disable_all();
+        }
+        assert_eq!(renders[0], renders[1], "1-thread vs 4-thread snapshots differ");
+        assert_eq!(renders[0], renders[2], "1-thread vs 7-thread snapshots differ");
+        assert!(renders[0].contains("\"difftest.events\":84"), "{}", renders[0]);
+    });
+}
+
+#[test]
+fn trace_captures_the_span_taxonomy_end_to_end() {
+    with_clean_obs(|| {
+        obs::enable_all();
+        obs::reset_all();
+        // A blocked-shape GEMM (m ≥ 32, n ≥ 128, n·k/lanes over the
+        // 2^13 threshold) so the `gemm.tile` loop fires, plus a short
+        // training run for the nn spans (whose MfTensor packing fires
+        // the `pack.rows`/`pack.cols` dispatchers).
+        let (m, n, k) = (32, 128, 1024);
+        let (a, b) = gaussian_mats(m, n, k, 3);
+        let session = Session::builder().mode(ExecMode::Functional).seed(3).build();
+        session
+            .gemm()
+            .src(FP8)
+            .acc(FP16)
+            .dims(m, n, k)
+            .expect("plan")
+            .run_f64(&a, &b)
+            .expect("run");
+        let mut tr = session.native_trainer(PrecisionPolicy::hfp8()).expect("trainer");
+        tr.train(2, 0).expect("train");
+        let trace = obs::trace::chrome_json();
+        obs::disable_all();
+        for span in [
+            "plan.compile",
+            "plan.run",
+            "pack.a",
+            "pack.b",
+            "pack.rows",
+            "pack.cols",
+            "gemm.tier",
+            "gemm.tile",
+            "train.step",
+            "train.forward",
+            "train.backward",
+            "train.optim",
+        ] {
+            assert!(trace.contains(&format!("\"name\":\"{span}\"")), "missing span '{span}'");
+        }
+        assert!(trace.contains("\"traceEvents\""), "not a Chrome trace document");
+    });
+}
