@@ -30,8 +30,17 @@ pub struct AccuracyPoint {
 /// Run the accumulation experiment for one (src→dst) pair and input
 /// count (Table IV rows use n ∈ {500, 1000, 2000}).
 pub fn accumulate(src: FpFormat, dst: FpFormat, n: usize, seed: u64) -> AccuracyPoint {
+    accumulate_with(src, dst, n, seed, RoundingMode::Rne)
+}
+
+/// [`accumulate`] under an explicit rounding mode — RNE reproduces the
+/// Table IV setup bit for bit; a seeded [`RoundingMode::StochasticRound`]
+/// runs the same draw sequence with per-element quantization keys and
+/// per-step accumulation keys (`sr_element` / `sr_step`, identity under
+/// RNE). The FP64 golden and its final conversion always round RNE —
+/// the reference must not inherit the noise under test.
+pub fn accumulate_with(src: FpFormat, dst: FpFormat, n: usize, seed: u64, rm: RoundingMode) -> AccuracyPoint {
     let unit = ExSdotpUnit::new(src, dst);
-    let rm = RoundingMode::Rne;
     let mut rng = Rng::new(seed);
 
     let mut acc_fused = dst.zero(false);
@@ -39,11 +48,13 @@ pub fn accumulate(src: FpFormat, dst: FpFormat, n: usize, seed: u64) -> Accuracy
     let mut acc_f64 = 0f64; // FP64 ExFMA accumulation == native f64 FMA chain
 
     // n dot products = n/2 ExSdotp operations (each handles two).
-    for _ in 0..n / 2 {
-        let q = |r: &mut Rng| from_f64(r.gaussian(), src, rm);
-        let (a, b, c, d) = (q(&mut rng), q(&mut rng), q(&mut rng), q(&mut rng));
-        acc_fused = unit.exsdotp(a, b, c, d, acc_fused, rm);
-        acc_casc = exsdotp_cascade(src, dst, a, b, c, d, acc_casc, rm);
+    for step in 0..(n / 2) as u64 {
+        let a = from_f64(rng.gaussian(), src, rm.sr_element(4 * step));
+        let b = from_f64(rng.gaussian(), src, rm.sr_element(4 * step + 1));
+        let c = from_f64(rng.gaussian(), src, rm.sr_element(4 * step + 2));
+        let d = from_f64(rng.gaussian(), src, rm.sr_element(4 * step + 3));
+        acc_fused = unit.exsdotp(a, b, c, d, acc_fused, rm.sr_step(step));
+        acc_casc = exsdotp_cascade(src, dst, a, b, c, d, acc_casc, rm.sr_step(step));
         let (af, bf, cf, df) = (to_f64(a, src), to_f64(b, src), to_f64(c, src), to_f64(d, src));
         acc_f64 = af.mul_add(bf, acc_f64);
         acc_f64 = cf.mul_add(df, acc_f64);
@@ -51,7 +62,7 @@ pub fn accumulate(src: FpFormat, dst: FpFormat, n: usize, seed: u64) -> Accuracy
 
     // "The golden FP64 result is converted to FP32/FP16 for the error
     // calculation."
-    let golden = to_f64(from_f64(acc_f64, dst, rm), dst);
+    let golden = to_f64(from_f64(acc_f64, dst, RoundingMode::Rne), dst);
     let rel = |x: u64| {
         if golden == 0.0 {
             (to_f64(x, dst) - golden).abs()
@@ -69,35 +80,45 @@ pub fn accumulate(src: FpFormat, dst: FpFormat, n: usize, seed: u64) -> Accuracy
 /// the `n ≫ 2000` regimes of the FP8-training literature) tractable.
 /// Falls back to the descriptor path for non-Table I pairs.
 pub fn accumulate_fast(src: FpFormat, dst: FpFormat, n: usize, seed: u64) -> AccuracyPoint {
-    crate::with_expanding_pair!(src, dst, S, D, { accumulate_m::<S, D>(n, seed) }, {
-        accumulate(src, dst, n, seed)
+    accumulate_fast_with(src, dst, n, seed, RoundingMode::Rne)
+}
+
+/// [`accumulate_fast`] under an explicit rounding mode (the fast twin
+/// of [`accumulate_with`], deriving the identical `sr_element` /
+/// `sr_step` key schedule so the two paths stay bit-identical for any
+/// mode). Falls back to the descriptor path for non-Table I pairs.
+pub fn accumulate_fast_with(src: FpFormat, dst: FpFormat, n: usize, seed: u64, rm: RoundingMode) -> AccuracyPoint {
+    crate::with_expanding_pair!(src, dst, S, D, { accumulate_m::<S, D>(n, seed, rm) }, {
+        accumulate_with(src, dst, n, seed, rm)
     })
 }
 
 /// Monomorphized accumulation experiment — the same draw sequence and
-/// datapaths as [`accumulate`], dispatched at compile time.
-fn accumulate_m<S: ExpandTo<D>, D: FormatSpec>(n: usize, seed: u64) -> AccuracyPoint {
-    let rm = RoundingMode::Rne;
+/// datapaths as [`accumulate_with`], dispatched at compile time.
+fn accumulate_m<S: ExpandTo<D>, D: FormatSpec>(n: usize, seed: u64, rm: RoundingMode) -> AccuracyPoint {
     let mut rng = Rng::new(seed);
 
     let mut acc_fused = D::FMT.zero(false);
     let mut acc_casc = D::FMT.zero(false);
     let mut acc_f64 = 0f64;
 
-    for _ in 0..n / 2 {
-        let q = |r: &mut Rng| from_f64_m::<S>(r.gaussian(), rm);
-        let (a, b, c, d) = (q(&mut rng), q(&mut rng), q(&mut rng), q(&mut rng));
-        acc_fused = exsdotp_m::<S, D>(a, b, c, d, acc_fused, rm);
+    for step in 0..(n / 2) as u64 {
+        let a = from_f64_m::<S>(rng.gaussian(), rm.sr_element(4 * step));
+        let b = from_f64_m::<S>(rng.gaussian(), rm.sr_element(4 * step + 1));
+        let c = from_f64_m::<S>(rng.gaussian(), rm.sr_element(4 * step + 2));
+        let d = from_f64_m::<S>(rng.gaussian(), rm.sr_element(4 * step + 3));
+        let srm = rm.sr_step(step);
+        acc_fused = exsdotp_m::<S, D>(a, b, c, d, acc_fused, srm);
         // The two-ExFMA cascade, monomorphized: c·d + e first, then a·b.
-        let inner = ex_fma_m::<S, D>(c, d, acc_casc, rm);
-        acc_casc = ex_fma_m::<S, D>(a, b, inner, rm);
+        let inner = ex_fma_m::<S, D>(c, d, acc_casc, srm);
+        acc_casc = ex_fma_m::<S, D>(a, b, inner, srm);
         let (af, bf, cf, df) =
             (to_f64_m::<S>(a), to_f64_m::<S>(b), to_f64_m::<S>(c), to_f64_m::<S>(d));
         acc_f64 = af.mul_add(bf, acc_f64);
         acc_f64 = cf.mul_add(df, acc_f64);
     }
 
-    let golden = to_f64_m::<D>(from_f64_m::<D>(acc_f64, rm));
+    let golden = to_f64_m::<D>(from_f64_m::<D>(acc_f64, RoundingMode::Rne));
     let rel = |x: u64| {
         if golden == 0.0 {
             (to_f64_m::<D>(x) - golden).abs()

@@ -66,6 +66,11 @@ pub struct PlanInstance {
     /// every run — blocking is bit-invisible, so this is purely a
     /// skip-the-per-call-planning optimization.
     block_plan: BlockPlan,
+    /// Packed words of K per chunked sub-accumulation, when the plan
+    /// requested chunking ([`crate::api::GemmPlanBuilder::chunk_k`],
+    /// builder-validated: expanding family, elems a multiple of the
+    /// SIMD width).
+    chunk_words: Option<usize>,
     a_bound: Option<MfTensor>,
     b_bound: Option<MfTensor>,
     /// Re-grid the decoded C onto the accumulation grid in place
@@ -86,6 +91,7 @@ impl PlanInstance {
         acc: FpFormat,
         ta: bool,
         tb: bool,
+        chunk: Option<usize>,
     ) -> Self {
         // The packed route streams k/lanes words per output element;
         // non-paper source formats never reach it (gemm_packed_into
@@ -97,6 +103,8 @@ impl PlanInstance {
         } else {
             BlockPlan::simple()
         };
+        // Builder-validated: chunk elems divide by the lane count.
+        let chunk_words = chunk.map(|c| c / lanes.max(1));
         PlanInstance {
             session,
             kern,
@@ -105,6 +113,7 @@ impl PlanInstance {
             ta,
             tb,
             block_plan,
+            chunk_words,
             ws: Workspace::new(),
             a_bound: None,
             b_bound: None,
@@ -204,12 +213,24 @@ impl PlanInstance {
                 (Some(r.cycles), Some(r.stats))
             }
             ExecMode::Functional => {
-                let rm = self.session.rounding();
+                // Per-run key split: under seeded stochastic rounding
+                // each execution of the instance draws a fresh key
+                // stream (`sr_run` is the identity otherwise, and the
+                // run counter starts at 0, so one-shot plan wrappers
+                // and an instance's first run stay bit-identical).
+                let rm = self.session.rounding().sr_run(self.runs);
                 let (src, acc, ta, tb) = (self.src, self.acc, self.ta, self.tb);
                 let kind = self.kern.kind;
+                let chunk_words = self.chunk_words;
                 let ws = &mut self.ws;
                 self.session.scoped(|| {
-                    if !batch::gemm_expanding_into(src, acc, ta, tb, m, n, k, a, b, rm, ws, out) {
+                    let ran_chunked = match chunk_words {
+                        Some(cw) => {
+                            batch::gemm_expanding_chunked_into(src, acc, ta, tb, cw, m, n, k, a, b, rm, ws, out)
+                        }
+                        None => false,
+                    };
+                    if !ran_chunked && !batch::gemm_expanding_into(src, acc, ta, tb, m, n, k, a, b, rm, ws, out) {
                         // Non-expanding family (the FMA kernels):
                         // materialize the logical operands in the
                         // workspace's transpose staging (taken out for
@@ -245,6 +266,9 @@ impl PlanInstance {
         }
         self.runs += 1;
         crate::obs_count!("api.plan.runs");
+        if self.session.rounding().is_stochastic() {
+            crate::obs_count!("numerics.sr.runs");
+        }
         Ok(RunInfo {
             cycles,
             flops: self.kern.flops(),
@@ -277,11 +301,18 @@ impl PlanInstance {
             let _sp = crate::obs::trace::span_with("plan.run", "api", || {
                 format!("\"m\":{m},\"n\":{n},\"k\":{k},\"mode\":\"Functional\",\"packed\":true")
             });
-            let rm = self.session.rounding();
+            // Same per-run key split as the f64 route (identity for
+            // non-stochastic modes), so both routes stay bit-identical
+            // run for run.
+            let rm = self.session.rounding().sr_run(self.runs);
             let (src, acc) = (self.src, self.acc);
             let plan = &self.block_plan;
-            let hit = self.session.scoped(|| {
-                batch::gemm_packed_planned_into(src, acc, plan, m, n, k, a.words(), b.words(), rm, out)
+            let chunk_words = self.chunk_words;
+            let hit = self.session.scoped(|| match chunk_words {
+                Some(cw) => {
+                    batch::gemm_packed_chunked_into(src, acc, cw, m, n, k, a.words(), b.words(), rm, out)
+                }
+                None => batch::gemm_packed_planned_into(src, acc, plan, m, n, k, a.words(), b.words(), rm, out),
             });
             if hit {
                 if self.regrid_output {
@@ -291,6 +322,9 @@ impl PlanInstance {
                 self.packed_runs += 1;
                 crate::obs_count!("api.plan.runs");
                 crate::obs_count!("api.plan.packed_runs");
+                if self.session.rounding().is_stochastic() {
+                    crate::obs_count!("numerics.sr.runs");
+                }
                 return Ok(RunInfo {
                     cycles: self.session.cycle_model_enabled().then(|| self.kern.model_cycles()),
                     flops: self.kern.flops(),

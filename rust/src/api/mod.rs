@@ -120,9 +120,9 @@ pub fn parse_engine(s: &str) -> Result<TrainEngine> {
     }
 }
 
-/// Parse a precision-policy name (`fp32|fp16|fp16alt|fp8|hfp8`) —
-/// thin re-export of [`crate::nn::PrecisionPolicy::parse`] so the CLI
-/// keeps one import.
+/// Parse a precision-policy name
+/// (`fp32|fp16|fp16alt|fp8|hfp8|fp8sr|fp8flex`) — thin re-export of
+/// [`crate::nn::PrecisionPolicy::parse`] so the CLI keeps one import.
 pub fn parse_policy(s: &str) -> Result<crate::nn::PrecisionPolicy> {
     crate::nn::PrecisionPolicy::parse(s)
 }

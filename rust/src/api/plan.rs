@@ -63,11 +63,12 @@ pub struct GemmPlanBuilder<'s> {
     kind: Option<GemmKind>,
     ta: bool,
     tb: bool,
+    chunk: Option<usize>,
 }
 
 impl<'s> GemmPlanBuilder<'s> {
     pub(crate) fn new(session: &'s Session) -> Self {
-        GemmPlanBuilder { session, src: None, acc: None, kind: None, ta: false, tb: false }
+        GemmPlanBuilder { session, src: None, acc: None, kind: None, ta: false, tb: false, chunk: None }
     }
 
     /// Source element format of A and B.
@@ -101,6 +102,18 @@ impl<'s> GemmPlanBuilder<'s> {
     /// backward pass). Functional engine only.
     pub fn transpose_b(mut self) -> Self {
         self.tb = true;
+        self
+    }
+
+    /// Accumulate K in fixed-size chunks of `elems` source elements:
+    /// each chunk folds from a fresh zero in the wide format and the
+    /// per-chunk sums combine left-to-right (Wang et al. 2018's
+    /// chunk-based accumulation — bounds the swamping error of long-K
+    /// folds). `elems` must be a positive multiple of the source SIMD
+    /// width; `elems ≥ k` degenerates to the naive fold bit-for-bit.
+    /// Expanding (ExSdotp) family on the functional engine only.
+    pub fn chunk_k(mut self, elems: usize) -> Self {
+        self.chunk = Some(elems);
         self
     }
 
@@ -185,6 +198,26 @@ impl<'s> GemmPlanBuilder<'s> {
                 self.session.rounding()
             );
         }
+        if let Some(chunk) = self.chunk {
+            ensure!(
+                self.session.mode() == ExecMode::Functional,
+                "chunked accumulation (chunk_k) runs on the functional batch engine; the \
+                 simulated kernels stream the naive ascending-k fold only. Use \
+                 ExecMode::Functional / --mode functional"
+            );
+            ensure!(
+                matches!(kind, GemmKind::ExSdotp(_)),
+                "chunk_k applies to the expanding (ExSdotp) GEMM family only (requested {:?})",
+                kind
+            );
+            let lanes = src_fmt.lanes_in_64() as usize;
+            ensure!(
+                chunk >= lanes && chunk % lanes == 0,
+                "chunk_k ({chunk}) must be a positive multiple of the SIMD width ({lanes} {} \
+                 lanes per packed word)",
+                src_fmt.name()
+            );
+        }
         let kern = GemmKernel::try_new(kind, m, n, k)?;
         if self.session.mode() == ExecMode::CycleAccurate {
             ensure!(
@@ -197,7 +230,15 @@ impl<'s> GemmPlanBuilder<'s> {
                 kern.footprint()
             );
         }
-        Ok(GemmPlan { session: self.session, kern, src: src_fmt, acc: acc_fmt, ta: self.ta, tb: self.tb })
+        Ok(GemmPlan {
+            session: self.session,
+            kern,
+            src: src_fmt,
+            acc: acc_fmt,
+            ta: self.ta,
+            tb: self.tb,
+            chunk: self.chunk,
+        })
     }
 }
 
@@ -212,6 +253,7 @@ pub struct GemmPlan<'s> {
     acc: FpFormat,
     ta: bool,
     tb: bool,
+    chunk: Option<usize>,
 }
 
 impl GemmPlan<'_> {
@@ -229,6 +271,12 @@ impl GemmPlan<'_> {
     /// for a transposed product (see [`GemmPlanBuilder::transpose_a`]).
     pub fn transposes(&self) -> (bool, bool) {
         (self.ta, self.tb)
+    }
+
+    /// Chunk size (source elements of K per sub-accumulation) when
+    /// chunked accumulation is on (see [`GemmPlanBuilder::chunk_k`]).
+    pub fn chunk(&self) -> Option<usize> {
+        self.chunk
     }
 
     /// The underlying kernel descriptor (program generator, cycle
@@ -258,7 +306,15 @@ impl GemmPlan<'_> {
     /// [`GemmPlan::run`] / [`GemmPlan::run_f64`]; both paths are
     /// bit-identical (pinned by `api::tests`).
     pub fn instance(&self) -> super::instance::PlanInstance {
-        super::instance::PlanInstance::assemble(*self.session, self.kern, self.src, self.acc, self.ta, self.tb)
+        super::instance::PlanInstance::assemble(
+            *self.session,
+            self.kern,
+            self.src,
+            self.acc,
+            self.ta,
+            self.tb,
+            self.chunk,
+        )
     }
 
     /// Run on row-major `f64` matrices (quantized to the source format
@@ -406,12 +462,15 @@ impl<'s> AccumulatePlanBuilder<'s> {
             bail!("missing formats: call .src(..).acc(..) before .n(..)");
         };
         ensure!(n >= 2, "n ({n}) must be at least one dot-product pair");
-        // Both accumulation engines round RNE internally (the Table IV
-        // experiment is defined that way); honoring any other session
-        // mode is impossible, so reject instead of silently ignoring it.
+        // The Table IV experiment is defined for RNE; seeded stochastic
+        // rounding is also honored (the harness threads the session
+        // mode through both engines). Directed modes (Rtz/Rdn/Rup/Rmm)
+        // would bias the error metric away from anything in the paper,
+        // so they stay rejected — by name, with the supported set.
         ensure!(
-            self.session.rounding() == RoundingMode::Rne,
-            "the accumulation harness rounds RNE (the Table IV setup); use RoundingMode::Rne \
+            matches!(self.session.rounding(), RoundingMode::Rne | RoundingMode::StochasticRound(_)),
+            "the accumulation harness supports RoundingMode::Rne (the Table IV setup) and \
+             RoundingMode::StochasticRound; directed modes are not meaningful here \
              (requested {:?})",
             self.session.rounding()
         );
@@ -465,11 +524,13 @@ impl AccumulatePlan<'_> {
         self.n
     }
 
-    /// One draw with an explicit seed.
+    /// One draw with an explicit seed (honors the session rounding
+    /// mode — RNE or seeded stochastic).
     pub fn run_seeded(&self, seed: u64) -> AccuracyPoint {
+        let rm = self.session.rounding();
         match self.session.mode() {
-            ExecMode::Functional => accuracy::accumulate_fast(self.src, self.dst, self.n, seed),
-            ExecMode::CycleAccurate => accuracy::accumulate(self.src, self.dst, self.n, seed),
+            ExecMode::Functional => accuracy::accumulate_fast_with(self.src, self.dst, self.n, seed, rm),
+            ExecMode::CycleAccurate => accuracy::accumulate_with(self.src, self.dst, self.n, seed, rm),
         }
     }
 

@@ -49,7 +49,7 @@ impl Default for Session {
 impl Session {
     /// Start building a session.
     pub fn builder() -> SessionBuilder {
-        SessionBuilder { inner: Session::default() }
+        SessionBuilder { inner: Session::default(), sr_from_seed: false }
     }
 
     /// The default policy (functional engine, RNE, seed 42).
@@ -65,6 +65,14 @@ impl Session {
     /// Rounding mode applied to quantization and functional-engine runs.
     pub fn rounding(&self) -> RoundingMode {
         self.rm
+    }
+
+    /// A copy of this session with a different rounding mode — how the
+    /// nn trainer honors a [`PrecisionPolicy`]'s stochastic-rounding
+    /// knob without rebuilding the whole policy bundle.
+    pub fn with_rounding(mut self, rm: RoundingMode) -> Session {
+        self.rm = rm;
+        self
     }
 
     /// Seed for [`Session::rng`] and the accuracy plans.
@@ -208,6 +216,10 @@ impl Session {
 #[derive(Clone, Copy, Debug)]
 pub struct SessionBuilder {
     inner: Session,
+    /// Resolve the rounding mode to `StochasticRound(seed)` at build
+    /// time (so `.stochastic_rounding()` and `.seed(..)` compose in
+    /// either order).
+    sr_from_seed: bool,
 }
 
 impl SessionBuilder {
@@ -222,6 +234,18 @@ impl SessionBuilder {
     /// modes when paired with [`ExecMode::CycleAccurate`].
     pub fn rounding(mut self, rm: RoundingMode) -> Self {
         self.inner.rm = rm;
+        self.sr_from_seed = false;
+        self
+    }
+
+    /// Round stochastically, keyed by the session seed: shorthand for
+    /// `.rounding(RoundingMode::StochasticRound(seed))` that stays in
+    /// sync with `.seed(..)` regardless of call order. Functional
+    /// engine only (the cycle-accurate cluster rounds RNE); results are
+    /// deterministic per seed and bit-identical across thread counts,
+    /// lane tiers, and executor backends.
+    pub fn stochastic_rounding(mut self) -> Self {
+        self.sr_from_seed = true;
         self
     }
 
@@ -247,7 +271,10 @@ impl SessionBuilder {
     }
 
     /// Finish.
-    pub fn build(self) -> Session {
+    pub fn build(mut self) -> Session {
+        if self.sr_from_seed {
+            self.inner.rm = RoundingMode::StochasticRound(self.inner.seed);
+        }
         self.inner
     }
 }

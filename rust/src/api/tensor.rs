@@ -150,7 +150,12 @@ impl MfTensor {
                         Layout::RowMajor => (line, e),
                         Layout::ColMajor => (e, line),
                     };
-                    packed |= from_f64(data[r * cols + c], fmt, rm) << (lane_i as u32 * fmt.width());
+                    // Same per-element SR key the batch packers derive
+                    // (the row-major data index), so a custom-format
+                    // tensor quantizes like a paper-format one would.
+                    let idx = r * cols + c;
+                    packed |= from_f64(data[idx], fmt, rm.sr_element(idx as u64))
+                        << (lane_i as u32 * fmt.width());
                 }
                 buf[line * wpl + w] = packed;
             }

@@ -67,7 +67,7 @@
 #[cfg(test)]
 mod tests;
 
-use crate::exsdotp::fast::{simd_exsdotp_m, vsum_tree_m};
+use crate::exsdotp::fast::{simd_exsdotp_m, vsum_m, vsum_tree_m};
 use crate::exsdotp::simd::SimdExSdotp;
 use crate::exsdotp::swar::{swar_exsdotp_m, swar_exsdotp_operands_finite_m, vsum_tree_swar_m};
 use crate::formats::spec::{ExpandTo, FormatSpec, Fp16, Fp16alt, Fp32, Fp64, Fp8, Fp8alt};
@@ -287,18 +287,21 @@ pub fn cast_slice_into(from: FpFormat, to: FpFormat, bits: &[u64], rm: RoundingM
     par_chunks_mut(out, CAST_CHUNK, |ci, chunk| {
         let base = ci * CAST_CHUNK;
         for (off, o) in chunk.iter_mut().enumerate() {
-            *o = cast(from, to, bits[base + off], rm);
+            *o = cast(from, to, bits[base + off], rm.sr_element((base + off) as u64));
         }
     });
 }
 
 /// Monomorphized slice cast `S → D` into a preallocated output.
+/// Element `i` rounds under `rm.sr_element(i)` — identity for the IEEE
+/// modes, a per-element stochastic key otherwise, derived from the
+/// *global* element index so the result is independent of worker count.
 pub fn cast_into_m<S: FormatSpec, D: FormatSpec>(bits: &[u64], out: &mut [u64], rm: RoundingMode) {
     assert_eq!(bits.len(), out.len());
     par_chunks_mut(out, CAST_CHUNK, |ci, chunk| {
         let base = ci * CAST_CHUNK;
         for (off, o) in chunk.iter_mut().enumerate() {
-            *o = cast_m::<S, D>(bits[base + off], rm);
+            *o = cast_m::<S, D>(bits[base + off], rm.sr_element((base + off) as u64));
         }
     });
 }
@@ -311,16 +314,18 @@ pub fn cast_into_m<S: FormatSpec, D: FormatSpec>(bits: &[u64], out: &mut [u64], 
 /// otherwise).
 pub fn regrid_in_place(fmt: FpFormat, vals: &mut [f64], rm: RoundingMode) {
     with_spec!(fmt, S, {
-        par_chunks_mut(vals, CAST_CHUNK, |_, chunk| {
-            for v in chunk.iter_mut() {
-                *v = to_f64_m::<S>(from_f64_m::<S>(*v, rm));
+        par_chunks_mut(vals, CAST_CHUNK, |ci, chunk| {
+            let base = ci * CAST_CHUNK;
+            for (off, v) in chunk.iter_mut().enumerate() {
+                *v = to_f64_m::<S>(from_f64_m::<S>(*v, rm.sr_element((base + off) as u64)));
             }
         });
         return;
     });
-    par_chunks_mut(vals, CAST_CHUNK, |_, chunk| {
-        for v in chunk.iter_mut() {
-            *v = to_f64(from_f64(*v, fmt, rm), fmt);
+    par_chunks_mut(vals, CAST_CHUNK, |ci, chunk| {
+        let base = ci * CAST_CHUNK;
+        for (off, v) in chunk.iter_mut().enumerate() {
+            *v = to_f64(from_f64(*v, fmt, rm.sr_element((base + off) as u64)), fmt);
         }
     });
 }
@@ -351,12 +356,17 @@ pub fn exsdotp_accumulate(
         { exsdotp_accumulate_m::<S, D>(rs1, rs2, acc0, rm) },
         {
             let simd = SimdExSdotp::new(src, dst);
-            rs1.iter().zip(rs2).fold(acc0, |acc, (&x, &y)| simd.exsdotp(x, y, acc, rm))
+            rs1.iter()
+                .zip(rs2)
+                .enumerate()
+                .fold(acc0, |acc, (i, (&x, &y))| simd.exsdotp(x, y, acc, rm.sr_step(i as u64)))
         }
     )
 }
 
-/// Monomorphized [`exsdotp_accumulate`].
+/// Monomorphized [`exsdotp_accumulate`]. Step `i` of the fold rounds
+/// under `rm.sr_step(i)` (identity for the IEEE modes), so a stochastic
+/// fold decorrelates across the K dimension.
 #[inline]
 pub fn exsdotp_accumulate_m<S: ExpandTo<D>, D: FormatSpec>(
     rs1: &[u64],
@@ -365,7 +375,10 @@ pub fn exsdotp_accumulate_m<S: ExpandTo<D>, D: FormatSpec>(
     rm: RoundingMode,
 ) -> u64 {
     debug_assert_eq!(rs1.len(), rs2.len());
-    rs1.iter().zip(rs2).fold(acc0, |acc, (&x, &y)| simd_exsdotp_m::<S, D>(x, y, acc, rm))
+    rs1.iter()
+        .zip(rs2)
+        .enumerate()
+        .fold(acc0, |acc, (i, (&x, &y))| simd_exsdotp_m::<S, D>(x, y, acc, rm.sr_step(i as u64)))
 }
 
 // -------------------------------------------------------------- packing
@@ -398,7 +411,12 @@ pub fn pack_rows_into_m<F: FormatSpec>(
         for (w, word) in row.iter_mut().enumerate() {
             let mut packed = 0u64;
             for lane_i in 0..l {
-                let v = from_f64_m::<F>(data[r * cols + w * l + lane_i], rm);
+                // Per-element stochastic key from the *source* element
+                // index (identity for the IEEE modes), so quantization
+                // noise decorrelates across the matrix and the packing
+                // stays independent of worker count.
+                let idx = r * cols + w * l + lane_i;
+                let v = from_f64_m::<F>(data[idx], rm.sr_element(idx as u64));
                 packed |= v << (lane_i as u32 * F::WIDTH);
             }
             *word = packed;
@@ -436,7 +454,10 @@ pub fn pack_cols_into_m<F: FormatSpec>(
         for (w, word) in col.iter_mut().enumerate() {
             let mut packed = 0u64;
             for lane_i in 0..l {
-                let v = from_f64_m::<F>(data[(w * l + lane_i) * cols + j], rm);
+                // Key from the source (row-major) element index, as in
+                // [`pack_rows_into_m`].
+                let idx = (w * l + lane_i) * cols + j;
+                let v = from_f64_m::<F>(data[idx], rm.sr_element(idx as u64));
                 packed |= v << (lane_i as u32 * F::WIDTH);
             }
             *word = packed;
@@ -659,6 +680,13 @@ pub fn gemm_packed_planned_into_m<S: ExpandTo<D>, D: FormatSpec>(
             }
         )
     });
+    // Stochastic-key plumbing: the kernel closure receives the global
+    // output-element index and packed-word index, the epilogue closure
+    // the element index; both derive per-site keys (`sr_element` /
+    // `sr_step` / `sr_tree`) that are the identity for the IEEE modes.
+    // Keys depend only on *global* indices, never on worker identity,
+    // so SR results stay bit-identical across thread counts, blocking
+    // decisions, and lane tiers.
     match tier {
         LaneTier::Scalar => {
             // The reference tier stays on the untouched simple loop —
@@ -672,8 +700,8 @@ pub fn gemm_packed_planned_into_m<S: ExpandTo<D>, D: FormatSpec>(
                 ap,
                 bp,
                 out,
-                |x, y, acc| simd_exsdotp_m::<S, D>(x, y, acc, rm),
-                |acc| vsum_tree_m::<S, D>(acc, rm),
+                |x, y, acc, e, kw| simd_exsdotp_m::<S, D>(x, y, acc, rm.sr_element(e).sr_step(kw)),
+                |acc, e| vsum_tree_m::<S, D>(acc, rm.sr_element(e).sr_tree(0)),
                 false,
             );
         }
@@ -691,8 +719,10 @@ pub fn gemm_packed_planned_into_m<S: ExpandTo<D>, D: FormatSpec>(
                     ap,
                     bp,
                     out,
-                    |x, y, acc| swar_exsdotp_operands_finite_m::<S, D>(x, y, acc, rm),
-                    |acc| vsum_tree_swar_m::<S, D>(acc, rm),
+                    |x, y, acc, e, kw| {
+                        swar_exsdotp_operands_finite_m::<S, D>(x, y, acc, rm.sr_element(e).sr_step(kw))
+                    },
+                    |acc, e| vsum_tree_swar_m::<S, D>(acc, rm.sr_element(e).sr_tree(0)),
                     plan.blocked,
                 );
             } else {
@@ -703,8 +733,8 @@ pub fn gemm_packed_planned_into_m<S: ExpandTo<D>, D: FormatSpec>(
                     ap,
                     bp,
                     out,
-                    |x, y, acc| swar_exsdotp_m::<S, D>(x, y, acc, rm),
-                    |acc| vsum_tree_swar_m::<S, D>(acc, rm),
+                    |x, y, acc, e, kw| swar_exsdotp_m::<S, D>(x, y, acc, rm.sr_element(e).sr_step(kw)),
+                    |acc, e| vsum_tree_swar_m::<S, D>(acc, rm.sr_element(e).sr_tree(0)),
                     plan.blocked,
                 );
             }
@@ -714,11 +744,14 @@ pub fn gemm_packed_planned_into_m<S: ExpandTo<D>, D: FormatSpec>(
 
 /// Shared loop structure for both tiers: `kernel` folds one packed
 /// register pair into the accumulator, `vsum` is the epilogue reduction
-/// tree. With `blocked`, the output is tiled `plan.mc × plan.nc` with
+/// tree. Both closures additionally receive the **global** output
+/// element index (`i·n + j`), and `kernel` the global packed-word index
+/// along K — the stochastic-rounding key sites (ignored under IEEE
+/// modes). With `blocked`, the output is tiled `plan.mc × plan.nc` with
 /// K streamed in `plan.kc_words` panels — the accumulator tile persists
 /// across K-panels on the worker's stack, so each output element still
-/// folds its words in ascending-k order (bit-identical to the simple
-/// loop by construction).
+/// folds its words in ascending-k order *with the same global indices*
+/// (bit-identical to the simple loop by construction, IEEE or SR).
 #[allow(clippy::too_many_arguments)]
 fn gemm_loops<D: FormatSpec, K, V>(
     plan: &BlockPlan,
@@ -731,19 +764,20 @@ fn gemm_loops<D: FormatSpec, K, V>(
     vsum: V,
     blocked: bool,
 ) where
-    K: Fn(u64, u64, u64) -> u64 + Sync,
-    V: Fn(u64) -> u64 + Sync,
+    K: Fn(u64, u64, u64, u64, u64) -> u64 + Sync,
+    V: Fn(u64, u64) -> u64 + Sync,
 {
     if !blocked {
         par_chunks_mut(out, n.max(1), |i, row| {
             let aw = &ap[i * wpr..(i + 1) * wpr];
             for (j, o) in row.iter_mut().enumerate() {
                 let bw = &bp[j * wpr..(j + 1) * wpr];
+                let elem = (i * n + j) as u64;
                 let mut acc = 0u64; // all destination lanes +0.0
-                for (&x, &y) in aw.iter().zip(bw) {
-                    acc = kernel(x, y, acc);
+                for (kw, (&x, &y)) in aw.iter().zip(bw).enumerate() {
+                    acc = kernel(x, y, acc, elem, kw as u64);
                 }
-                *o = to_f64_m::<D>(vsum(acc));
+                *o = to_f64_m::<D>(vsum(acc, elem));
             }
         });
         return;
@@ -766,9 +800,10 @@ fn gemm_loops<D: FormatSpec, K, V>(
                     let aw = &ap[(i0 + ii) * wpr + kb..][..kcb];
                     for jj in 0..ncb {
                         let bw = &bp[(jb + jj) * wpr + kb..][..kcb];
+                        let elem = ((i0 + ii) * n + jb + jj) as u64;
                         let mut acc = tile[ii * nc + jj];
-                        for (&x, &y) in aw.iter().zip(bw) {
-                            acc = kernel(x, y, acc);
+                        for (off, (&x, &y)) in aw.iter().zip(bw).enumerate() {
+                            acc = kernel(x, y, acc, elem, (kb + off) as u64);
                         }
                         tile[ii * nc + jj] = acc;
                     }
@@ -776,11 +811,177 @@ fn gemm_loops<D: FormatSpec, K, V>(
             }
             for ii in 0..block_rows {
                 for jj in 0..ncb {
-                    rows[ii * n + jb + jj] = to_f64_m::<D>(vsum(tile[ii * nc + jj]));
+                    let elem = ((i0 + ii) * n + jb + jj) as u64;
+                    rows[ii * n + jb + jj] = to_f64_m::<D>(vsum(tile[ii * nc + jj], elem));
                 }
             }
         }
     });
+}
+
+// ------------------------------------------------- chunked accumulation
+//
+// Long-K accumulation in a narrow wide-format swamps: once the running
+// sum grows, each new product loses its low bits to rounding, and with
+// biased modes the error compounds monotonically (Wang et al. 2018,
+// §"chunk-based accumulation"). Chunking re-associates the fold: K is
+// split into fixed-size sub-ranges, each accumulated from a fresh zero
+// in the wide format exactly like a miniature naive GEMM (same packed
+// ExSdotp fold, same `vsum` epilogue tree), and the per-chunk partials
+// are then combined left-to-right with the scalar three-term `vsum`.
+// Each addend into the long chain is now a chunk sum instead of a
+// single product, cutting the number of large-magnitude-absorbs-small
+// rounding steps per element from K to K/chunk + chunk.
+//
+// `chunk = K` degenerates to the naive path bit-for-bit (one chunk,
+// combined with nothing) — pinned by differential tests, which makes
+// the naive ascending-k fold the differential reference for the
+// chunked path's plumbing.
+
+/// Chunked-accumulation expanding GEMM on pre-packed operands:
+/// `chunk_words` packed words of K per sub-accumulation (`chunk_words ·
+/// S::LANES` source elements). Resolves the [`LaneTier`] on the calling
+/// thread like [`gemm_packed_planned_into_m`]; both tiers fold the
+/// per-chunk partials with the *scalar* [`vsum_m`], so tier
+/// bit-identity holds by construction. Runs the simple row-parallel
+/// loop (chunking is itself a K-blocking; cache tiling is not layered
+/// on top).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_packed_chunked_into_m<S: ExpandTo<D>, D: FormatSpec>(
+    chunk_words: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    ap: &[u64],
+    bp: &[u64],
+    rm: RoundingMode,
+    out: &mut Vec<f64>,
+) {
+    let l = S::LANES as usize;
+    assert_eq!(k % l, 0, "K must divide by the SIMD width");
+    assert!(chunk_words > 0, "chunk must cover at least one packed word");
+    let wpr = k / l;
+    assert_eq!(ap.len(), m * wpr, "packed A must be m*k/lanes words");
+    assert_eq!(bp.len(), n * wpr, "packed B must be n*k/lanes words");
+    out.clear();
+    out.resize(m * n, 0f64);
+    let tier = lane_tier();
+    crate::obs_count!("batch.gemm.chunked");
+    let _sp = crate::obs::trace::span_with("gemm.chunked", "batch", || {
+        format!("\"m\":{m},\"n\":{n},\"k\":{k},\"chunk_words\":{chunk_words}")
+    });
+    let clean = tier == LaneTier::Swar && slice_all_finite::<S>(ap) && slice_all_finite::<S>(bp);
+    par_chunks_mut(out, n.max(1), |i, row| {
+        let aw = &ap[i * wpr..(i + 1) * wpr];
+        for (j, o) in row.iter_mut().enumerate() {
+            let bw = &bp[j * wpr..(j + 1) * wpr];
+            let elem = (i * n + j) as u64;
+            let erm = rm.sr_element(elem);
+            let mut result = 0u64;
+            let mut chunk = 0u64;
+            let mut kb = 0usize;
+            while kb < wpr {
+                let kcb = chunk_words.min(wpr - kb);
+                let mut acc = 0u64; // all destination lanes +0.0
+                for off in 0..kcb {
+                    let (x, y) = (aw[kb + off], bw[kb + off]);
+                    // Same global (element, word) keys as the naive
+                    // loop, so chunk = K reproduces it bit-for-bit.
+                    let krm = erm.sr_step((kb + off) as u64);
+                    acc = match tier {
+                        LaneTier::Scalar => simd_exsdotp_m::<S, D>(x, y, acc, krm),
+                        LaneTier::Swar if clean => swar_exsdotp_operands_finite_m::<S, D>(x, y, acc, krm),
+                        LaneTier::Swar => swar_exsdotp_m::<S, D>(x, y, acc, krm),
+                    };
+                }
+                let trm = erm.sr_tree(chunk);
+                let s = match tier {
+                    LaneTier::Scalar => vsum_tree_m::<S, D>(acc, trm),
+                    LaneTier::Swar => vsum_tree_swar_m::<S, D>(acc, trm),
+                };
+                // First chunk passes through untouched (a `0 + s` vsum
+                // would lose −0.0); later chunks fold left-to-right on
+                // the scalar combine shared by both tiers.
+                result = if chunk == 0 { s } else { vsum_m::<S, D>(result, s, 0, erm.sr_fold(chunk - 1)) };
+                chunk += 1;
+                kb += kcb;
+            }
+            *o = to_f64_m::<D>(result);
+        }
+    });
+}
+
+/// Runtime-dispatched [`gemm_packed_chunked_into_m`]: `true` when
+/// `(src, dst)` is one of Table I's six expanding pairs, `false`
+/// otherwise (caller falls back). Crate-internal — the validated
+/// [`crate::api::GemmPlan`] (`chunk_k`) is the public route.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_packed_chunked_into(
+    src: FpFormat,
+    dst: FpFormat,
+    chunk_words: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    ap: &[u64],
+    bp: &[u64],
+    rm: RoundingMode,
+    out: &mut Vec<f64>,
+) -> bool {
+    crate::with_expanding_pair!(
+        src,
+        dst,
+        S,
+        D,
+        {
+            gemm_packed_chunked_into_m::<S, D>(chunk_words, m, n, k, ap, bp, rm, out);
+            true
+        },
+        { false }
+    )
+}
+
+/// Chunked twin of [`gemm_expanding_into`]: packs f64 operands for the
+/// requested shape (`A·B`, `Aᵀ·B`, `A·Bᵀ`) with the same packers as the
+/// naive route, then runs the chunked core. `true` when the pair/shape
+/// combination ran.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_expanding_chunked_into(
+    src: FpFormat,
+    dst: FpFormat,
+    trans_a: bool,
+    trans_b: bool,
+    chunk_words: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f64],
+    b: &[f64],
+    rm: RoundingMode,
+    ws: &mut Workspace,
+    out: &mut Vec<f64>,
+) -> bool {
+    crate::with_expanding_pair!(src, dst, S, D, {
+        match (trans_a, trans_b) {
+            (false, false) => {
+                pack_rows_into_m::<S>(a, m, k, rm, &mut ws.pa);
+                pack_cols_into_m::<S>(b, k, n, rm, &mut ws.pb);
+            }
+            (true, false) => {
+                pack_cols_into_m::<S>(a, k, m, rm, &mut ws.pa);
+                pack_cols_into_m::<S>(b, k, n, rm, &mut ws.pb);
+            }
+            (false, true) => {
+                pack_rows_into_m::<S>(a, m, k, rm, &mut ws.pa);
+                pack_rows_into_m::<S>(b, n, k, rm, &mut ws.pb);
+            }
+            (true, true) => return false,
+        }
+        gemm_packed_chunked_into_m::<S, D>(chunk_words, m, n, k, &ws.pa, &ws.pb, rm, out);
+        true
+    }, {
+        false
+    })
 }
 
 /// Runtime-dispatched [`gemm_packed_into_m`] for the expanding
@@ -1021,11 +1222,12 @@ fn gemm_fma_simd_into<F: FormatSpec, RS: ExpandTo<RD>, RD: FormatSpec>(
         let aw = &ap[i * wpr..(i + 1) * wpr];
         for (j, o) in row.iter_mut().enumerate() {
             let bw = &bp[j * wpr..(j + 1) * wpr];
+            let erm = rm.sr_element((i * n + j) as u64);
             let mut acc = 0u64;
-            for (&x, &y) in aw.iter().zip(bw) {
-                acc = simd_fma_m::<F>(x, y, acc, rm);
+            for (kw, (&x, &y)) in aw.iter().zip(bw).enumerate() {
+                acc = simd_fma_m::<F>(x, y, acc, erm.sr_step(kw as u64));
             }
-            *o = to_f64_m::<RD>(vsum_tree_m::<RS, RD>(acc, rm));
+            *o = to_f64_m::<RD>(vsum_tree_m::<RS, RD>(acc, erm.sr_tree(0)));
         }
     });
 }
@@ -1059,9 +1261,10 @@ fn gemm_fma64_into(
     out.resize(m * n, 0f64);
     par_chunks_mut(out, n.max(1), |i, row| {
         for (j, o) in row.iter_mut().enumerate() {
+            let erm = rm.sr_element((i * n + j) as u64);
             let mut acc = 0u64; // +0.0
             for kk in 0..k {
-                acc = fma_m::<Fp64>(a[i * k + kk].to_bits(), bt[j * k + kk], acc, rm);
+                acc = fma_m::<Fp64>(a[i * k + kk].to_bits(), bt[j * k + kk], acc, erm.sr_step(kk as u64));
             }
             *o = f64::from_bits(acc);
         }
@@ -1078,7 +1281,7 @@ pub fn simd_fma_m<F: FormatSpec>(rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) 
     let mut out = 0u64;
     for i in 0..F::LANES {
         let sh = i * F::WIDTH;
-        let v = fma_m::<F>((rs1 >> sh) & mask, (rs2 >> sh) & mask, (rd >> sh) & mask, rm);
+        let v = fma_m::<F>((rs1 >> sh) & mask, (rs2 >> sh) & mask, (rd >> sh) & mask, rm.sr_lane(i));
         out |= (v & mask) << sh;
     }
     out

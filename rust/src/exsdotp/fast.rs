@@ -45,7 +45,11 @@ pub fn vsum_m<S: ExpandTo<D>, D: FormatSpec>(a: u64, c: u64, e: u64, rm: Roundin
 }
 
 /// Monomorphized SIMD `exsdotp rd, rs1, rs2`: all `D::LANES` units in
-/// one call, constant lane plumbing.
+/// one call, constant lane plumbing. Each lane rounds under
+/// `rm.sr_lane(i)` — the identity for every non-stochastic mode, and
+/// the per-lane key split under stochastic rounding (the SWAR tier and
+/// the descriptor wrapper derive the same keys for the same `i`, so
+/// the tiers stay bit-identical under SR too).
 #[inline]
 pub fn simd_exsdotp_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) -> u64 {
     let unit = unit_m::<S, D>();
@@ -56,12 +60,13 @@ pub fn simd_exsdotp_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rs2: u64, rd: u64
         let c = lane_c::<S>(rs1, 2 * i + 1);
         let d = lane_c::<S>(rs2, 2 * i + 1);
         let e = lane_c::<D>(rd, i);
-        out = set_lane_c::<D>(out, i, unit.exsdotp(a, b, c, d, e, rm));
+        out = set_lane_c::<D>(out, i, unit.exsdotp(a, b, c, d, e, rm.sr_lane(i)));
     }
     out
 }
 
-/// Monomorphized SIMD `exvsum rd, rs1`.
+/// Monomorphized SIMD `exvsum rd, rs1` (per-lane `rm.sr_lane(i)`, like
+/// [`simd_exsdotp_m`]).
 #[inline]
 pub fn simd_exvsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: RoundingMode) -> u64 {
     let unit = unit_m::<S, D>();
@@ -70,13 +75,13 @@ pub fn simd_exvsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: Round
         let a = lane_c::<S>(rs1, 2 * i);
         let c = lane_c::<S>(rs1, 2 * i + 1);
         let e = lane_c::<D>(rd, i);
-        out = set_lane_c::<D>(out, i, unit.exvsum(a, c, e, rm));
+        out = set_lane_c::<D>(out, i, unit.exvsum(a, c, e, rm.sr_lane(i)));
     }
     out
 }
 
 /// Monomorphized SIMD `vsum rd, rs1` (pairwise reduction of `D` lanes;
-/// upper `rd` lanes pass through).
+/// upper `rd` lanes pass through; per-lane `rm.sr_lane(i)`).
 #[inline]
 pub fn simd_vsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: RoundingMode) -> u64 {
     let unit = unit_m::<S, D>();
@@ -85,7 +90,7 @@ pub fn simd_vsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: Roundin
         let a = lane_c::<D>(rs1, 2 * i);
         let c = lane_c::<D>(rs1, 2 * i + 1);
         let e = lane_c::<D>(rd, i);
-        out = set_lane_c::<D>(out, i, unit.vsum(a, c, e, rm));
+        out = set_lane_c::<D>(out, i, unit.vsum(a, c, e, rm.sr_lane(i)));
     }
     out
 }
@@ -93,13 +98,18 @@ pub fn simd_vsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: Roundin
 /// Fold a packed accumulator register down to its low lane with the
 /// kernels' `vsum` tree (one level for 2 destination lanes, two levels
 /// for 4 — exactly the epilogue the generated GEMM programs execute).
+/// Tree level `l` rounds under `rm.sr_level(l)` (identity for
+/// non-stochastic modes; [`vsum_tree_swar_m`](crate::exsdotp::swar::vsum_tree_swar_m)
+/// derives identically, keeping the tiers bit-identical under SR).
 #[inline]
 pub fn vsum_tree_m<S: ExpandTo<D>, D: FormatSpec>(acc: u64, rm: RoundingMode) -> u64 {
     let mut t = acc;
     let mut lanes = D::LANES;
+    let mut level = 0u32;
     while lanes > 1 {
-        t = simd_vsum_m::<S, D>(t, 0, rm);
+        t = simd_vsum_m::<S, D>(t, 0, rm.sr_level(level));
         lanes /= 2;
+        level += 1;
     }
     lane_c::<D>(t, 0)
 }
@@ -126,12 +136,16 @@ mod tests {
     use crate::formats::FpFormat;
     use crate::util::prop::{for_all, FpGen};
 
-    const RMS: [RoundingMode; 5] = [
+    const RMS: [RoundingMode; 7] = [
         RoundingMode::Rne,
         RoundingMode::Rtz,
         RoundingMode::Rdn,
         RoundingMode::Rup,
         RoundingMode::Rmm,
+        // Stochastic keys too: both tiers must split per-lane keys the
+        // same way, so the differential holds beyond the IEEE modes.
+        RoundingMode::StochasticRound(0),
+        RoundingMode::StochasticRound(0x5EED_CAFE_F00D_BEEF),
     ];
 
     fn same(fmt: FpFormat, x: u64, y: u64) -> bool {

@@ -104,6 +104,9 @@ impl SimdExSdotp {
     }
 
     /// SIMD `exsdotp rd, rs1, rs2` (rd is also the accumulator input).
+    /// Lane `i` rounds under `rm.sr_lane(i)` — identity for the IEEE
+    /// modes, per-lane key split under stochastic rounding, matching
+    /// the monomorphized tier lane for lane.
     pub fn exsdotp(&self, rs1: u64, rs2: u64, rd: u64, rm: RoundingMode) -> u64 {
         let sw = self.unit.src.width();
         let dw = self.unit.dst.width();
@@ -114,7 +117,7 @@ impl SimdExSdotp {
             let c = lane(rs1, 2 * i + 1, sw);
             let d = lane(rs2, 2 * i + 1, sw);
             let e = lane(rd, i, dw);
-            out = set_lane(out, i, dw, self.unit.exsdotp(a, b, c, d, e, rm));
+            out = set_lane(out, i, dw, self.unit.exsdotp(a, b, c, d, e, rm.sr_lane(i)));
         }
         out
     }
@@ -128,7 +131,7 @@ impl SimdExSdotp {
             let a = lane(rs1, 2 * i, sw);
             let c = lane(rs1, 2 * i + 1, sw);
             let e = lane(rd, i, dw);
-            out = set_lane(out, i, dw, self.unit.exvsum(a, c, e, rm));
+            out = set_lane(out, i, dw, self.unit.exvsum(a, c, e, rm.sr_lane(i)));
         }
         out
     }
@@ -144,7 +147,7 @@ impl SimdExSdotp {
             let a = lane(rs1, 2 * i, dw);
             let c = lane(rs1, 2 * i + 1, dw);
             let e = lane(rd, i, dw);
-            out = set_lane(out, i, dw, self.unit.vsum(a, c, e, rm));
+            out = set_lane(out, i, dw, self.unit.vsum(a, c, e, rm.sr_lane(i)));
         }
         out
     }

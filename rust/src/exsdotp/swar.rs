@@ -267,10 +267,12 @@ pub fn swar_exsdotp_finite_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rs2: u64, 
         let d = fin_lane::<S>(s2, e2, m2, 2 * i + 1);
         let e = fin_lane::<D>(sd, ed, md, i);
         // `fin_lane` returns e_msb; products need the factors' LSB
-        // weights, recovered as e_msb − msb(mant).
+        // weights, recovered as e_msb − msb(mant). Lane `i` rounds
+        // under `rm.sr_lane(i)` — the same per-lane key split the
+        // scalar tier applies, so SR stays bit-identical across tiers.
         let pa = prod_of(a, b);
         let pc = prod_of(c, d);
-        let r = three_term_finite_m::<D>(pa, pc, e, S::PRECISION, rm);
+        let r = three_term_finite_m::<D>(pa, pc, e, S::PRECISION, rm.sr_lane(i));
         out |= r << (i * D::WIDTH);
     }
     out
@@ -329,7 +331,7 @@ pub fn swar_vsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: Roundin
         let a = fin_lane::<D>(s1, e1, m1, 2 * i);
         let c = fin_lane::<D>(s1, e1, m1, 2 * i + 1);
         let e = fin_lane::<D>(sd, ed, md, i);
-        let v = three_term_finite_m::<D>(a, c, e, S::PRECISION, rm);
+        let v = three_term_finite_m::<D>(a, c, e, S::PRECISION, rm.sr_lane(i));
         let sh = i * D::WIDTH;
         out = (out & !(D::LANE_MASK << sh)) | (v << sh);
     }
@@ -337,14 +339,17 @@ pub fn swar_vsum_m<S: ExpandTo<D>, D: FormatSpec>(rs1: u64, rd: u64, rm: Roundin
 }
 
 /// The kernels' `vsum` epilogue tree on the SWAR tier (twin of
-/// [`super::fast::vsum_tree_m`]).
+/// [`super::fast::vsum_tree_m`], including the per-level
+/// `rm.sr_level(l)` key split).
 #[inline]
 pub fn vsum_tree_swar_m<S: ExpandTo<D>, D: FormatSpec>(acc: u64, rm: RoundingMode) -> u64 {
     let mut t = acc;
     let mut lanes = D::LANES;
+    let mut level = 0u32;
     while lanes > 1 {
-        t = swar_vsum_m::<S, D>(t, 0, rm);
+        t = swar_vsum_m::<S, D>(t, 0, rm.sr_level(level));
         lanes /= 2;
+        level += 1;
     }
     t & D::LANE_MASK
 }
@@ -357,12 +362,16 @@ mod tests {
     use crate::util::prop::{for_all, FpGen};
     use crate::util::rng::Rng;
 
-    const RMS: [RoundingMode; 5] = [
+    const RMS: [RoundingMode; 7] = [
         RoundingMode::Rne,
         RoundingMode::Rtz,
         RoundingMode::Rdn,
         RoundingMode::Rup,
         RoundingMode::Rmm,
+        // Stochastic keys: the SWAR tier must split per-lane/per-level
+        // keys exactly like the scalar tier for SR bit-identity.
+        RoundingMode::StochasticRound(0),
+        RoundingMode::StochasticRound(0x5EED_CAFE_F00D_BEEF),
     ];
 
     /// Pack one boundary-biased encoding per lane.

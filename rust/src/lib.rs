@@ -83,6 +83,13 @@
 //!   double-buffering, an M-partitioning coordinator that keeps results
 //!   bit-identical to a single cluster at every cluster count, and the
 //!   roofline sweep ([`soc::run_roofline`], `repro roofline`).
+//! * [`numerics`] — accuracy-at-scale numerics: seeded stochastic
+//!   rounding ([`softfloat::RoundingMode::StochasticRound`], threaded
+//!   through every engine tier bit-deterministically), chunked big-K
+//!   accumulation ([`api::GemmPlanBuilder::chunk_k`]), Flexpoint-style
+//!   scaled tensors ([`numerics::ScaledTensor`]) with predictive
+//!   exponent management, and the accuracy matrix behind
+//!   `repro accuracy` ([`numerics::run_sweep`]).
 //! * [`obs`] — the deterministic observability layer: a sharded
 //!   metrics registry with byte-stable snapshots, virtual-time /
 //!   wall-time span tracing with a Chrome-trace exporter, and the
@@ -114,6 +121,7 @@ pub mod fpu;
 pub mod isa;
 pub mod kernels;
 pub mod nn;
+pub mod numerics;
 pub mod obs;
 pub mod report;
 pub mod runtime;
@@ -143,6 +151,7 @@ pub mod prelude {
     pub use crate::nn::{
         Activation, DataSpec, NativeTrainer, OptimSpec, PrecisionPolicy, StepRecord,
     };
+    pub use crate::numerics::{ExponentManager, ScaledTensor};
     pub use crate::serve::{InferenceModel, ServeStats, Server};
     pub use crate::soc::{Soc, SocCfg};
     pub use crate::softfloat::RoundingMode;

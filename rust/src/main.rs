@@ -39,10 +39,20 @@ Workloads:
                     [--check-anchor]  gate the 1-cluster FP8 row against the energy
                                       model's 575 GFLOPS/W anchor within 1% (exit 1)
 
+Numerics:
+  accuracy          accuracy-at-scale matrix: spiral training per policy (incl. the
+                    stochastic-rounding fp8sr / scaled fp8flex recipes) + big-K
+                    FP8->FP16 dot probe {naive, chunked} vs an f64 reference, and
+                    the SR bit-determinism check across thread budgets; exits 1
+                    when a gate fails (SR determinism, fp8sr within 3 accuracy
+                    points of fp32)
+                    [--steps N]  training steps per policy row (default 300)
+                    [--seed S] [--json]
+
 End-to-end training:
   train             mixed-precision training on the minifloat batch engine
                     [--engine native|pjrt]  (default native: offline, every matmul a GemmPlan)
-                    [--precision fp32|fp16|fp16alt|fp8|hfp8]  (default hfp8)
+                    [--precision fp32|fp16|fp16alt|fp8|hfp8|fp8sr|fp8flex]  (default hfp8)
                     [--steps N] [--dataset spiral|rings] [--hidden H] [--batch B]
                     [--optim adam|sgd] [--lr X] [--act relu|gelu] [--seed S] [--quiet]
                     [--save FILE]  (freeze the trained model into a serving checkpoint)
@@ -61,11 +71,11 @@ Serving:
 
 Options:
   --seed S          RNG seed for simulated workloads (default 42)
-  --metrics         (gemm|roofline|train|serve) append the deterministic
+  --metrics         (gemm|roofline|train|serve|accuracy) append the deterministic
                     observability roll-up; the final stdout line is the
                     byte-stable metrics snapshot JSON (merged into the
                     --json object where one exists)
-  --trace FILE      (gemm|roofline|train|serve) write a Chrome trace-event
+  --trace FILE      (gemm|roofline|train|serve|accuracy) write a Chrome trace-event
                     JSON of the run (open in chrome://tracing / Perfetto)
 ";
 
@@ -292,6 +302,31 @@ fn main() -> Result<()> {
             println!();
             print!("{}", report::table4_text(seed));
         }
+        Some("accuracy") => {
+            let obs = obs_setup(&args)?;
+            let steps: usize = args.try_get("steps", 300)?;
+            ensure!(steps > 0, "--steps must be positive");
+            // Progress to stderr: --json leaves stdout one line.
+            eprintln!("accuracy matrix: 7 policy rows x {steps} steps + big-K dot probe...");
+            let sweep = minifloat_nn::numerics::run_sweep(steps, seed)?;
+            obs.write_trace()?;
+            if args.has_flag("json") {
+                let mut line = report::accuracy_json(&sweep);
+                if obs.metrics {
+                    line.pop();
+                    line.push_str(",\"obs\":");
+                    line.push_str(&minifloat_nn::obs::metrics::snapshot_json());
+                    line.push('}');
+                }
+                println!("{line}");
+            } else {
+                print!("{}", report::accuracy_text(&sweep));
+                obs.print_metrics();
+            }
+            // Gates last, after every requested output is flushed, so a
+            // failing run still leaves the full record behind.
+            sweep.check_gates()?;
+        }
         Some("train") => {
             let obs = obs_setup(&args)?;
             let log_every = if args.has_flag("quiet") { 0 } else { 20 };
@@ -410,13 +445,13 @@ fn main() -> Result<()> {
                     if name.is_empty() {
                         bail!(
                             "--tenants must be a non-empty comma-separated list of \
-                             fp32|fp16|fp16alt|fp8|hfp8, got '{spec}'"
+                             fp32|fp16|fp16alt|fp8|hfp8|fp8sr|fp8flex, got '{spec}'"
                         );
                     }
                     let policy = PrecisionPolicy::parse(name).map_err(|_| {
                         minifloat_nn::util::error::Error::msg(format!(
                             "--tenants must list precision policies \
-                             (fp32|fp16|fp16alt|fp8|hfp8), got '{name}'"
+                             (fp32|fp16|fp16alt|fp8|hfp8|fp8sr|fp8flex), got '{name}'"
                         ))
                     })?;
                     if tenants.iter().any(|(n, _)| n == name) {

@@ -91,7 +91,28 @@ pub fn linear_forward_into(
     // A row-major, B column-major: the layouts the kernel streams,
     // so the plan's zero-repack route runs.
     let xt = session.tensor_reusing(x, batch, in_dim, policy.fwd, Layout::RowMajor, xt_buf)?;
-    ctx.matmul_into(policy.fwd, &xt, wt, batch, out_dim, in_dim, false, false, y)?;
+    if policy.scaled {
+        // Flexpoint-style activation scaling ([`crate::numerics`]): one
+        // shared power-of-two scale re-centers the batch near the top
+        // of the forward format's range before quantizing, so small
+        // post-activation values stay out of the subnormal band and
+        // large ones clear of saturation. The GEMM streams the scaled
+        // payload; the output is rescaled exactly (power of two) before
+        // the bias add. The tape keeps the *unscaled* quantized input
+        // (`xt` above), so the backward GEMMs never see the scale.
+        let sexp = crate::numerics::shared_exponent(x, policy.fwd, 1);
+        crate::obs_count!("numerics.scale.tensors");
+        let inv = crate::numerics::exp2(-sexp);
+        let scaled: Vec<f64> = x.iter().map(|&v| v * inv).collect();
+        let st = session.tensor(&scaled, batch, in_dim, policy.fwd)?;
+        ctx.matmul_into(policy.fwd, &st, wt, batch, out_dim, in_dim, false, false, y)?;
+        let back = crate::numerics::exp2(sexp);
+        for v in y.iter_mut() {
+            *v *= back;
+        }
+    } else {
+        ctx.matmul_into(policy.fwd, &xt, wt, batch, out_dim, in_dim, false, false, y)?;
+    }
     for bi in 0..batch {
         for j in 0..out_dim {
             y[bi * out_dim + j] += bias[j] as f64;

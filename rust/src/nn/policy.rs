@@ -12,6 +12,8 @@
 //! | [`PrecisionPolicy::fp16alt`] | FP16alt | FP16alt | FP32 | static 1 |
 //! | [`PrecisionPolicy::fp8`]     | FP8     | FP8     | FP16 | dynamic |
 //! | [`PrecisionPolicy::hfp8`]    | FP8alt  | FP8     | FP16 | dynamic |
+//! | [`PrecisionPolicy::fp8sr`]   | FP8     | FP8     | FP16 | dynamic + stochastic rounding |
+//! | [`PrecisionPolicy::fp8flex`] | FP8     | FP8     | FP16 | dynamic + SR + tensor scaling |
 //!
 //! HFP8 (Sun et al. / Wang et al.) is the headline recipe: e4m3 for the
 //! forward pass (precision-bound), e5m2 for gradients (range-bound),
@@ -46,6 +48,17 @@ pub struct PrecisionPolicy {
     pub init_loss_scale: f64,
     /// Whether the loss scale adapts (overflow backoff / growth).
     pub dynamic_loss_scale: bool,
+    /// Round stochastically instead of RNE: the trainer rekeys its
+    /// session to `RoundingMode::StochasticRound(seed)`, so every
+    /// quantization and GEMM rounding decision is an unbiased seeded
+    /// coin flip (still deterministic per seed, still bit-identical
+    /// across thread counts).
+    pub stochastic: bool,
+    /// Flexpoint-style per-tensor scaling: operands are managed through
+    /// [`crate::numerics::ScaledTensor`] with predictive exponent
+    /// management, trading the shared scale's headroom against the
+    /// narrow format's dynamic range.
+    pub scaled: bool,
 }
 
 impl PrecisionPolicy {
@@ -58,6 +71,8 @@ impl PrecisionPolicy {
             acc: FP32,
             init_loss_scale: 1.0,
             dynamic_loss_scale: false,
+            stochastic: false,
+            scaled: false,
         }
     }
 
@@ -71,6 +86,8 @@ impl PrecisionPolicy {
             acc: FP32,
             init_loss_scale: 1024.0,
             dynamic_loss_scale: true,
+            stochastic: false,
+            scaled: false,
         }
     }
 
@@ -84,6 +101,8 @@ impl PrecisionPolicy {
             acc: FP32,
             init_loss_scale: 1.0,
             dynamic_loss_scale: false,
+            stochastic: false,
+            scaled: false,
         }
     }
 
@@ -96,6 +115,8 @@ impl PrecisionPolicy {
             acc: FP16,
             init_loss_scale: 256.0,
             dynamic_loss_scale: true,
+            stochastic: false,
+            scaled: false,
         }
     }
 
@@ -110,7 +131,28 @@ impl PrecisionPolicy {
             acc: FP16,
             init_loss_scale: 256.0,
             dynamic_loss_scale: true,
+            stochastic: false,
+            scaled: false,
         }
+    }
+
+    /// FP8 with seeded stochastic rounding: same formats as
+    /// [`PrecisionPolicy::fp8`], but every rounding decision in the
+    /// quantizers and the ExSdotp datapath is an unbiased coin flip
+    /// keyed on the session seed. SR decorrelates the systematic
+    /// round-to-nearest bias that stalls low-precision training
+    /// (Gupta et al. 2015); runs stay deterministic per seed.
+    pub fn fp8sr() -> Self {
+        PrecisionPolicy { name: "fp8sr", stochastic: true, ..Self::fp8() }
+    }
+
+    /// FP8 with stochastic rounding *and* Flexpoint-style per-tensor
+    /// scaling ([`crate::numerics::ScaledTensor`]): a shared power-of-two
+    /// scale re-centers each tensor in FP8's dynamic range, managed
+    /// predictively from overflow/headroom statistics (Köster et al.
+    /// 2017). The widest-range recipe the crate offers at 8 bits.
+    pub fn fp8flex() -> Self {
+        PrecisionPolicy { name: "fp8flex", stochastic: true, scaled: true, ..Self::fp8() }
     }
 
     /// Parse a CLI-style policy name.
@@ -121,13 +163,22 @@ impl PrecisionPolicy {
             "fp16alt" => Ok(Self::fp16alt()),
             "fp8" => Ok(Self::fp8()),
             "hfp8" => Ok(Self::hfp8()),
-            other => bail!("--precision must be fp32|fp16|fp16alt|fp8|hfp8, got '{other}'"),
+            "fp8sr" => Ok(Self::fp8sr()),
+            "fp8flex" => Ok(Self::fp8flex()),
+            other => bail!("--precision must be fp32|fp16|fp16alt|fp8|hfp8|fp8sr|fp8flex, got '{other}'"),
         }
     }
 
     /// All presets (bench / report sweeps), widest first.
     pub fn presets() -> [PrecisionPolicy; 5] {
         [Self::fp32(), Self::fp16alt(), Self::fp16(), Self::fp8(), Self::hfp8()]
+    }
+
+    /// The numerics presets layered on top of [`PrecisionPolicy::presets`]
+    /// — the accuracy-at-scale recipes ([`crate::numerics::sweep`]
+    /// compares these against the plain ones).
+    pub fn numerics_presets() -> [PrecisionPolicy; 2] {
+        [Self::fp8sr(), Self::fp8flex()]
     }
 
     /// The widest SIMD lane count any operand format uses — model

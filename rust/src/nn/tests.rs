@@ -399,6 +399,8 @@ fn policy_validation_rejects_bad_pairs() {
         acc: crate::formats::FP32, // FP8→FP32 is not a Table I pair
         init_loss_scale: 1.0,
         dynamic_loss_scale: false,
+        stochastic: false,
+        scaled: false,
     };
     let err = bad.validate().unwrap_err();
     assert!(err.to_string().contains("neither a Table I expanding pair"), "{err}");

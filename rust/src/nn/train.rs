@@ -86,6 +86,16 @@ impl NativeTrainer {
         act: Activation,
         optim: OptimSpec,
     ) -> Self {
+        // A stochastic policy rekeys the session before any plan or
+        // tensor is built, so quantization and every GEMM rounding
+        // decision draw from the same seeded stream. Weight init and
+        // batch sampling below key off `seed()` and are unaffected.
+        let session = if policy.stochastic {
+            session
+                .with_rounding(crate::softfloat::RoundingMode::StochasticRound(session.seed()))
+        } else {
+            session
+        };
         let mut init_rng = session.rng();
         let model = Mlp::new(IN_DIM, hidden, OUT_DIM, data.classes, act, &mut init_rng);
         let scaler = LossScaler::for_policy(&policy);

@@ -1,0 +1,38 @@
+//! Accuracy-at-scale numerics: stochastic rounding, chunked
+//! accumulation, and Flexpoint-style scaled-tensor formats.
+//!
+//! Three pillars, layered strictly on `formats`/`softfloat`/`batch`/
+//! `api` (the sweep additionally drives the `nn` trainer from above):
+//!
+//! 1. **Stochastic rounding** lives in the softfloat core
+//!    ([`crate::softfloat::RoundingMode::StochasticRound`]): every
+//!    rounding decision is a seeded coin flip whose probability is the
+//!    distance to the two neighboring grid points. The key is derived
+//!    counter-style from the element/lane/step indices
+//!    (`sr_element`/`sr_lane`/`sr_step`/…, see `softfloat::round`), so
+//!    results are deterministic per seed and bit-identical across
+//!    thread counts, lane tiers, and executor backends. Sessions opt in
+//!    with [`crate::api::SessionBuilder::stochastic_rounding`].
+//! 2. **Chunked accumulation** lives in the batch engine
+//!    ([`crate::batch::gemm_packed_chunked_into`], selected via
+//!    [`crate::api::GemmPlanBuilder::chunk_k`]): big-K dot products
+//!    fold in fixed-size sub-trees instead of one long sequential
+//!    chain, shrinking the worst-case rounding-error growth from
+//!    O(K) toward O(K/c + log c).
+//! 3. **Scaled tensors** ([`ScaledTensor`], this module): a packed
+//!    minifloat payload plus one shared power-of-two scale per tensor,
+//!    with predictive exponent management ([`ExponentManager`]) driven
+//!    by overflow/headroom statistics — the Flexpoint recipe (Köster et
+//!    al. 2017) adapted to minifloat payloads. The nn trainer applies
+//!    the same recipe to forward activations under
+//!    [`crate::nn::PrecisionPolicy::fp8flex`].
+//!
+//! [`sweep`] ties the three together: the accuracy matrix
+//! ({format × rounding × chunking × scaling} on spiral training plus a
+//! big-K dot probe against an f64 reference) behind `repro accuracy`.
+
+pub mod scaled;
+pub mod sweep;
+
+pub use scaled::{exp2, shared_exponent, ExponentManager, ScaledTensor, TensorStats};
+pub use sweep::{run_sweep, AccuracySweep, DotPoint, TrainPoint};

@@ -1,0 +1,405 @@
+//! Flexpoint-style scaled tensors: a packed minifloat payload plus one
+//! shared power-of-two scale, with predictive exponent management.
+//!
+//! A narrow format spends most of its encoding space on a fixed window
+//! of binades; real tensors drift out of that window as training
+//! proceeds. [`ScaledTensor`] re-centers each tensor before
+//! quantization: the logical value is `payload · 2^scale_exp`, where
+//! `scale_exp` places the tensor's largest magnitude a configurable
+//! headroom below the format's overflow threshold. Because the scale is
+//! a power of two, applying and removing it is *exact* in f64, and —
+//! as long as no value crosses the subnormal or overflow boundary —
+//! commutes with round-to-nearest quantization bit-for-bit.
+//!
+//! [`ExponentManager`] chooses the next tensor's scale predictively
+//! from the current tensor's statistics (max exponent trend +
+//! saturation pressure), the Flexpoint "Autoflex" recipe: adjusting
+//! from *stats* rather than re-scanning avoids a second pass over the
+//! data on the hot path. Every committed adjustment counts on the
+//! `numerics.scale.adjusts` observability counter.
+
+use crate::api::{MfTensor, Session};
+use crate::ensure;
+use crate::formats::FpFormat;
+use crate::util::error::Result;
+
+/// Exact power-of-two `2^e` as f64, built by bit assembly (no libm, so
+/// the value is identical on every platform). `e` is clamped to the
+/// f64 normal range — scales outside ±1022 binades are far beyond any
+/// representable payload anyway.
+pub fn exp2(e: i32) -> f64 {
+    let e = e.clamp(-1022, 1023);
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// The unbiased binary exponent of `v`'s magnitude (⌊log2 |v|⌋), by bit
+/// inspection. Subnormals report the subnormal-range floor (-1022);
+/// returns `None` for zero and non-finite values, which never
+/// participate in scale decisions.
+fn f64_exp(v: f64) -> Option<i32> {
+    let bits = v.to_bits() & !(1u64 << 63);
+    if bits == 0 {
+        return None;
+    }
+    let raw = (bits >> 52) as i32;
+    match raw {
+        0x7ff => None,
+        0 => Some(-1022),
+        _ => Some(raw - 1023),
+    }
+}
+
+/// The shared scale exponent Flexpoint assigns `data` for `fmt`:
+/// dividing by `2^result` places the largest finite magnitude
+/// `headroom` binades below the format's overflow threshold. An
+/// all-zero (or all-non-finite) tensor scales by `2^0`.
+pub fn shared_exponent(data: &[f64], fmt: FpFormat, headroom: i32) -> i32 {
+    let mut max_exp = i32::MIN;
+    for &v in data {
+        if let Some(e) = f64_exp(v) {
+            max_exp = max_exp.max(e);
+        }
+    }
+    if max_exp == i32::MIN {
+        return 0;
+    }
+    max_exp - (fmt.emax() - headroom)
+}
+
+/// Payload statistics that drive predictive exponent management.
+/// Exponents are *logical* (payload exponent + the tensor's scale), so
+/// a manager can track a tensor series across scale changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TensorStats {
+    /// Largest logical magnitude exponent (⌊log2 |v|⌋) in the tensor;
+    /// `i32::MIN` for an all-zero tensor.
+    pub max_exp: i32,
+    /// Saturation pressure: payload elements at the format's
+    /// max-finite magnitude, plus any that overflowed to non-finite
+    /// (RNE rounds overflow to ±inf on the quantization path).
+    pub saturated: u64,
+    /// Non-zero payload elements.
+    pub nonzero: u64,
+    /// Total elements.
+    pub total: u64,
+}
+
+/// A packed minifloat tensor with one shared power-of-two scale:
+/// logical value = `payload() · 2^scale_exp()`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScaledTensor {
+    payload: MfTensor,
+    scale_exp: i32,
+}
+
+impl ScaledTensor {
+    /// Quantize `data` (row-major `rows×cols`) into `fmt` under the
+    /// tensor's own shared exponent (one binade of headroom), using the
+    /// session's rounding mode and thread budget for the payload pack.
+    pub fn quantize(
+        session: &Session,
+        data: &[f64],
+        rows: usize,
+        cols: usize,
+        fmt: FpFormat,
+    ) -> Result<Self> {
+        let scale_exp = shared_exponent(data, fmt, 1);
+        Self::quantize_with_exp(session, data, rows, cols, fmt, scale_exp)
+    }
+
+    /// [`ScaledTensor::quantize`] with an externally chosen scale —
+    /// what an [`ExponentManager`]-driven pipeline uses (the predicted
+    /// scale is committed *before* the data exists).
+    pub fn quantize_with_exp(
+        session: &Session,
+        data: &[f64],
+        rows: usize,
+        cols: usize,
+        fmt: FpFormat,
+        scale_exp: i32,
+    ) -> Result<Self> {
+        let inv = exp2(-scale_exp);
+        let scaled: Vec<f64> = data.iter().map(|&v| v * inv).collect();
+        let payload = session.tensor(&scaled, rows, cols, fmt)?;
+        Ok(ScaledTensor { payload, scale_exp })
+    }
+
+    /// The packed payload (values in `fmt`'s window).
+    pub fn payload(&self) -> &MfTensor {
+        &self.payload
+    }
+
+    /// The shared scale exponent.
+    pub fn scale_exp(&self) -> i32 {
+        self.scale_exp
+    }
+
+    /// Payload element format.
+    pub fn fmt(&self) -> FpFormat {
+        self.payload.fmt()
+    }
+
+    /// Decode to logical row-major f64 values. The scale removal is a
+    /// power-of-two multiply — exact, so this loses nothing beyond the
+    /// original quantization.
+    pub fn to_f64(&self) -> Vec<f64> {
+        let s = exp2(self.scale_exp);
+        self.payload.to_f64().iter().map(|&v| v * s).collect()
+    }
+
+    /// Statistics of the logical tensor (drives [`ExponentManager`]).
+    pub fn stats(&self) -> TensorStats {
+        let fmt = self.payload.fmt();
+        let max_mag = crate::softfloat::to_f64(fmt.max_finite(false), fmt);
+        let vals = self.payload.to_f64();
+        let mut st = TensorStats {
+            max_exp: i32::MIN,
+            saturated: 0,
+            nonzero: 0,
+            total: vals.len() as u64,
+        };
+        for &v in &vals {
+            if v == 0.0 {
+                continue;
+            }
+            st.nonzero += 1;
+            if !v.is_finite() {
+                st.saturated += 1;
+                continue;
+            }
+            if let Some(e) = f64_exp(v) {
+                st.max_exp = st.max_exp.max(e + self.scale_exp);
+            }
+            if v.abs() == max_mag {
+                st.saturated += 1;
+            }
+        }
+        st
+    }
+
+    /// `C = A·B` on the payloads through a validated
+    /// [`crate::api::GemmPlan`] (src = payload format, `acc`
+    /// accumulation), rescaled by `2^(sa+sb)` — exact, because the
+    /// scales commute with the multiply: each product `a·b` carries
+    /// the factor `2^(sa+sb)` out of the sum unchanged. Returns logical
+    /// row-major f64 values.
+    pub fn gemm(session: &Session, a: &ScaledTensor, b: &ScaledTensor, acc: FpFormat) -> Result<Vec<f64>> {
+        ensure!(
+            a.fmt() == b.fmt(),
+            "scaled GEMM operands must share a payload format, got {} and {}",
+            a.fmt().name(),
+            b.fmt().name()
+        );
+        let (m, k) = (a.payload.rows(), a.payload.cols());
+        let n = b.payload.cols();
+        let plan = session.gemm().src(a.fmt()).acc(acc).dims(m, n, k)?;
+        let report = plan.run(&a.payload, &b.payload)?;
+        let s = exp2(a.scale_exp + b.scale_exp);
+        Ok(report.c_f64().iter().map(|&v| v * s).collect())
+    }
+}
+
+/// Predictive per-tensor exponent management (Flexpoint "Autoflex"):
+/// commit the *next* tensor's scale from the *current* tensor's
+/// statistics, so the hot path never re-scans data to pick a scale.
+///
+/// The prediction is `observed max exponent + rising trend`, bumped one
+/// binade when any element saturated; the committed scale places that
+/// prediction `headroom` binades below the format's overflow
+/// threshold. Every committed change counts on the
+/// `numerics.scale.adjusts` observability counter.
+#[derive(Clone, Debug)]
+pub struct ExponentManager {
+    fmt: FpFormat,
+    headroom: i32,
+    scale_exp: i32,
+    last_max: Option<i32>,
+    /// Committed scale changes so far.
+    pub adjusts: u64,
+}
+
+impl ExponentManager {
+    /// A manager for `fmt` with one binade of headroom and scale `2^0`.
+    pub fn new(fmt: FpFormat) -> Self {
+        Self::with_headroom(fmt, 1)
+    }
+
+    /// A manager keeping `headroom` binades between the predicted max
+    /// and the overflow threshold.
+    pub fn with_headroom(fmt: FpFormat, headroom: i32) -> Self {
+        ExponentManager { fmt, headroom, scale_exp: 0, last_max: None, adjusts: 0 }
+    }
+
+    /// The scale committed for the next tensor.
+    pub fn scale_exp(&self) -> i32 {
+        self.scale_exp
+    }
+
+    /// Feed one tensor's statistics; returns the scale committed for
+    /// the *next* tensor. An all-zero tensor (no finite nonzero
+    /// elements) leaves the scale untouched — there is nothing to
+    /// predict from.
+    pub fn observe(&mut self, stats: &TensorStats) -> i32 {
+        if stats.max_exp == i32::MIN {
+            return self.scale_exp;
+        }
+        let trend = self.last_max.map(|p| (stats.max_exp - p).max(0)).unwrap_or(0);
+        self.last_max = Some(stats.max_exp);
+        let sat_bump = i32::from(stats.saturated > 0);
+        let predicted = stats.max_exp + trend + sat_bump;
+        let want = predicted - (self.fmt.emax() - self.headroom);
+        if want != self.scale_exp {
+            self.scale_exp = want;
+            self.adjusts += 1;
+            crate::obs_count!("numerics.scale.adjusts");
+        }
+        self.scale_exp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP16, FP8};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exp2_is_exact_bit_assembly() {
+        assert_eq!(exp2(0), 1.0);
+        assert_eq!(exp2(3), 8.0);
+        assert_eq!(exp2(-3), 0.125);
+        assert_eq!(exp2(10) * exp2(-10), 1.0);
+    }
+
+    #[test]
+    fn shared_exponent_places_max_below_overflow() {
+        // FP8 (e5m2): emax 15. Max magnitude 3.0 has exponent 1; one
+        // binade of headroom targets exponent 14, so the scale is
+        // 1 - 14 = -13.
+        let s = shared_exponent(&[0.5, -3.0, 0.0], FP8, 1);
+        assert_eq!(s, 1 - (FP8.emax() - 1));
+        // Zeros (and empty tensors) scale by 2^0.
+        assert_eq!(shared_exponent(&[0.0, -0.0], FP8, 1), 0);
+        assert_eq!(shared_exponent(&[], FP8, 1), 0);
+        // Non-finite values are ignored, not propagated into the scale.
+        assert_eq!(shared_exponent(&[f64::INFINITY, 2.0], FP8, 1), 1 - (FP8.emax() - 1));
+    }
+
+    #[test]
+    fn scaling_commutes_with_quantization_in_the_normal_range() {
+        // Values whose payload stays normal before *and* after scaling:
+        // power-of-two scaling shifts only the exponent, so RNE rounds
+        // the same mantissa either way and the round trip is exact.
+        let session = Session::new();
+        let data: Vec<f64> = {
+            let mut rng = Rng::new(7);
+            (0..64).map(|_| 1.0 + rng.gaussian().abs() % 1.0).collect()
+        };
+        let direct = session.tensor(&data, 8, 8, FP8).expect("direct").to_f64();
+        let scaled = ScaledTensor::quantize(&session, &data, 8, 8, FP8).expect("scaled");
+        assert!(scaled.scale_exp() != 0, "test data should need a re-center");
+        assert_eq!(scaled.to_f64(), direct, "power-of-two scaling must commute with RNE here");
+    }
+
+    #[test]
+    fn scaling_rescues_subnormal_underflow() {
+        // Magnitudes around 2^-17: below FP8's subnormal floor (2^-16),
+        // direct quantization flushes or coarsens badly; the shared
+        // scale re-centers them into the normal window.
+        let session = Session::new();
+        let mut rng = Rng::new(11);
+        let data: Vec<f64> = (0..64).map(|_| rng.gaussian() * exp2(-17)).collect();
+        let rel_err = |got: &[f64]| {
+            data.iter()
+                .zip(got)
+                .filter(|(&d, _)| d != 0.0)
+                .map(|(&d, &g)| ((g - d) / d).abs())
+                .fold(0.0, f64::max)
+        };
+        let direct = session.tensor(&data, 8, 8, FP8).expect("direct").to_f64();
+        let scaled = ScaledTensor::quantize(&session, &data, 8, 8, FP8).expect("scaled").to_f64();
+        assert!(
+            rel_err(&scaled) < rel_err(&direct),
+            "shared scale should beat direct quantization on subnormal-range data: \
+             scaled {} vs direct {}",
+            rel_err(&scaled),
+            rel_err(&direct)
+        );
+        // And the scaled payload is within the format's relative error
+        // bound for normals (2^-(man_bits+1) = 1/8 for e5m2).
+        assert!(rel_err(&scaled) <= 0.125 + 1e-12, "rel err {}", rel_err(&scaled));
+    }
+
+    #[test]
+    fn stats_report_logical_exponents_and_saturation() {
+        let session = Session::new();
+        // One binade of headroom ⇒ quantized max sits at exponent
+        // emax-1 of the payload; logically back at its true exponent.
+        let data = [2.0, 0.25, 0.0, -4.0];
+        let t = ScaledTensor::quantize(&session, &data, 1, 4, FP8).expect("quantize");
+        let st = t.stats();
+        assert_eq!(st.total, 4);
+        assert_eq!(st.nonzero, 3);
+        assert_eq!(st.max_exp, 2, "logical max exponent of -4.0");
+        assert_eq!(st.saturated, 0);
+        // Force saturation: scale so the payload overflows to
+        // max-finite (RNE overflow on the quantization path clamps).
+        let hot = ScaledTensor::quantize_with_exp(&session, &data, 1, 4, FP8, -20).expect("hot");
+        assert!(hot.stats().saturated > 0, "payload should pin at max finite");
+    }
+
+    #[test]
+    fn exponent_manager_tracks_trend_and_saturation() {
+        let mut mgr = ExponentManager::new(FP8);
+        let stats = |max_exp: i32, saturated: u64| TensorStats {
+            max_exp,
+            saturated,
+            nonzero: 10,
+            total: 16,
+        };
+        // First observation: no trend; scale targets emax-1 = 14.
+        assert_eq!(mgr.observe(&stats(4, 0)), 4 - 14);
+        assert_eq!(mgr.adjusts, 1);
+        // Steady input: no change, no new adjustment.
+        assert_eq!(mgr.observe(&stats(4, 0)), 4 - 14);
+        assert_eq!(mgr.adjusts, 1);
+        // Rising max: predicted = observed + trend.
+        assert_eq!(mgr.observe(&stats(6, 0)), 6 + 2 - 14);
+        assert_eq!(mgr.adjusts, 2);
+        // Saturation pressure bumps one extra binade.
+        let before = mgr.scale_exp();
+        mgr.observe(&stats(6, 3));
+        assert_eq!(mgr.scale_exp(), before - 2 + 1, "trend collapses to 0, sat adds 1");
+        // All-zero tensors never move the scale.
+        let frozen = mgr.scale_exp();
+        assert_eq!(mgr.observe(&stats(i32::MIN, 0)), frozen);
+    }
+
+    #[test]
+    fn scaled_gemm_matches_unscaled_plan_modulo_scale() {
+        let session = Session::new();
+        let mut rng = Rng::new(3);
+        let a: Vec<f64> = (0..8 * 8).map(|_| rng.gaussian() * 0.5).collect();
+        let b: Vec<f64> = (0..8 * 8).map(|_| rng.gaussian() * 0.5).collect();
+        // Scale 0 payloads: bit-identical to the plain plan route.
+        let a0 = ScaledTensor::quantize_with_exp(&session, &a, 8, 8, FP8, 0).expect("a0");
+        let b0 = ScaledTensor::quantize_with_exp(&session, &b, 8, 8, FP8, 0).expect("b0");
+        let c0 = ScaledTensor::gemm(&session, &a0, &b0, FP16).expect("c0");
+        let plan = session.gemm().src(FP8).acc(FP16).dims(8, 8, 8).expect("plan");
+        let plain = plan
+            .run(a0.payload(), b0.payload())
+            .expect("plain run")
+            .c_f64();
+        assert_eq!(c0, plain);
+        // Auto-scaled: same result modulo the exact power-of-two factor
+        // (payload mantissas match by the commutation argument), so the
+        // outputs agree to FP16 accumulation accuracy.
+        let a1 = ScaledTensor::quantize(&session, &a, 8, 8, FP8).expect("a1");
+        let b1 = ScaledTensor::quantize(&session, &b, 8, 8, FP8).expect("b1");
+        let c1 = ScaledTensor::gemm(&session, &a1, &b1, FP16).expect("c1");
+        for (x, y) in c0.iter().zip(&c1) {
+            let tol = 1e-2 * x.abs().max(1.0);
+            assert!((x - y).abs() <= tol, "scaled {y} vs plain {x}");
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! The accuracy-at-scale matrix: {format × rounding × chunking ×
+//! scaling} on spiral training, plus a big-K dot-product probe against
+//! an f64 reference — the numbers behind `repro accuracy` and
+//! `BENCH_accuracy.json`.
+//!
+//! Everything here is deterministic from the sweep seed: the trainer
+//! rows reuse the nn subsystem's seeded spiral task, the dot probe
+//! draws its operands from a seeded RNG, and the embedded
+//! stochastic-rounding determinism check re-runs the SR+chunked probe
+//! under thread budgets {1, 4, 7} and demands bit-equal outputs — the
+//! repo-wide bit-identity invariant, gated in CI.
+
+use crate::api::Session;
+use crate::ensure;
+use crate::formats::{FP16, FP8};
+use crate::nn::policy::PrecisionPolicy;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Dot-probe shape: `PROBE_M×PROBE_N` outputs over a `PROBE_K`-deep
+/// inner dimension — deep enough that accumulation-order error growth
+/// dominates quantization noise.
+pub const PROBE_M: usize = 8;
+/// See [`PROBE_M`].
+pub const PROBE_N: usize = 8;
+/// See [`PROBE_M`].
+pub const PROBE_K: usize = 8192;
+/// Chunk size (elements of K) the chunked probe folds at.
+pub const PROBE_CHUNK: usize = 256;
+
+/// One spiral-training row of the matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrainPoint {
+    /// Policy name (`fp32`, `fp8sr`, …).
+    pub policy: &'static str,
+    /// `"sr"` when the policy rounds stochastically, else `"rne"`.
+    pub rounding: &'static str,
+    /// Whether forward activations ran through the shared-scale path.
+    pub scaled: bool,
+    /// Classification accuracy over the full dataset after training.
+    pub accuracy: f64,
+    /// Final training loss.
+    pub final_loss: f64,
+    /// Steps skipped by loss-scaling overflow backoff.
+    pub skipped: u64,
+}
+
+/// One big-K dot-probe cell: FP8 operands, FP16 ExSdotp accumulation,
+/// error against the f64 reference GEMM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DotPoint {
+    /// `"rne"` or `"sr"`.
+    pub rounding: &'static str,
+    /// `Some(chunk)` for the chunked-accumulation run, `None` naive.
+    pub chunk: Option<usize>,
+    /// Max absolute error over the `PROBE_M×PROBE_N` outputs.
+    pub max_abs_err: f64,
+    /// Mean absolute error.
+    pub mean_abs_err: f64,
+}
+
+/// The full sweep result (render with
+/// [`crate::report::accuracy_text`] / [`crate::report::accuracy_json`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccuracySweep {
+    /// Training steps per policy row.
+    pub steps: usize,
+    /// Seed everything derives from.
+    pub seed: u64,
+    /// Spiral-training rows (one per policy).
+    pub train: Vec<TrainPoint>,
+    /// Dot-probe cells ({rne, sr} × {naive, chunked}).
+    pub dot: Vec<DotPoint>,
+    /// Whether the SR+chunked probe was bit-identical across thread
+    /// budgets {1, 4, 7}.
+    pub sr_deterministic: bool,
+}
+
+impl AccuracySweep {
+    /// The accuracy of a named policy row, if present.
+    pub fn train_accuracy(&self, policy: &str) -> Option<f64> {
+        self.train.iter().find(|t| t.policy == policy).map(|t| t.accuracy)
+    }
+
+    /// The CI gates: SR must be bit-deterministic across thread
+    /// budgets, and the FP8+SR spiral row must land within 3 accuracy
+    /// points of the fp32 baseline.
+    pub fn check_gates(&self) -> Result<()> {
+        ensure!(
+            self.sr_deterministic,
+            "stochastic rounding was not bit-identical across thread budgets {{1, 4, 7}}"
+        );
+        let fp32 = self.train_accuracy("fp32").unwrap_or(0.0);
+        let fp8sr = self.train_accuracy("fp8sr").unwrap_or(0.0);
+        ensure!(
+            fp8sr + 0.03 >= fp32,
+            "fp8sr spiral accuracy {fp8sr:.3} fell more than 3 points below the fp32 \
+             baseline {fp32:.3}"
+        );
+        Ok(())
+    }
+}
+
+/// Reference `C = A·B` in f64 (row-major, no quantization) — the
+/// golden the dot probe measures against.
+fn gemm_f64(a: &[f64], b: &[f64], m: usize, n: usize, k: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Run one probe cell and return the output values.
+fn probe_run(seed: u64, sr: bool, chunk: Option<usize>, threads: Option<usize>, a: &[f64], b: &[f64]) -> Result<Vec<f64>> {
+    let mut builder = Session::builder().seed(seed);
+    if sr {
+        builder = builder.stochastic_rounding();
+    }
+    if let Some(t) = threads {
+        builder = builder.threads(t);
+    }
+    let session = builder.build();
+    let mut plan = session.gemm().src(FP8).acc(FP16);
+    if let Some(c) = chunk {
+        plan = plan.chunk_k(c);
+    }
+    let report = plan.dims(PROBE_M, PROBE_N, PROBE_K)?.run_f64(a, b)?;
+    Ok(report.c_f64())
+}
+
+/// Run the full matrix. `steps` spiral-training steps per policy
+/// (`repro accuracy` uses 300); everything derives from `seed`.
+pub fn run_sweep(steps: usize, seed: u64) -> Result<AccuracySweep> {
+    let _sp = crate::obs::trace::span("numerics.sweep", "numerics");
+    // ---- training rows: the five plain presets + the two numerics
+    // presets, all on the same task, same seed.
+    let mut train = Vec::new();
+    let policies = PrecisionPolicy::presets()
+        .into_iter()
+        .chain(PrecisionPolicy::numerics_presets());
+    for policy in policies {
+        let session = Session::builder().seed(seed).build();
+        let mut tr = session.train().policy(policy).build()?.trainer()?;
+        let final_loss = tr.train(steps, 0)?;
+        let accuracy = tr.accuracy()?;
+        train.push(TrainPoint {
+            policy: policy.name,
+            rounding: if policy.stochastic { "sr" } else { "rne" },
+            scaled: policy.scaled,
+            accuracy,
+            final_loss,
+            skipped: tr.skipped_steps(),
+        });
+    }
+
+    // ---- big-K dot probe: FP8 -> FP16 accumulation, {rne, sr} ×
+    // {naive, chunked}, error vs the f64 reference.
+    let mut rng = Rng::new(seed ^ 0xACC5);
+    let a: Vec<f64> = (0..PROBE_M * PROBE_K).map(|_| rng.gaussian() * 0.25).collect();
+    let b: Vec<f64> = (0..PROBE_K * PROBE_N).map(|_| rng.gaussian() * 0.25).collect();
+    let golden = gemm_f64(&a, &b, PROBE_M, PROBE_N, PROBE_K);
+    let mut dot = Vec::new();
+    for sr in [false, true] {
+        for chunk in [None, Some(PROBE_CHUNK)] {
+            let out = probe_run(seed, sr, chunk, None, &a, &b)?;
+            let mut max_abs = 0.0f64;
+            let mut sum_abs = 0.0f64;
+            for (&g, &o) in golden.iter().zip(&out) {
+                let e = (g - o).abs();
+                max_abs = max_abs.max(e);
+                sum_abs += e;
+            }
+            dot.push(DotPoint {
+                rounding: if sr { "sr" } else { "rne" },
+                chunk,
+                max_abs_err: max_abs,
+                mean_abs_err: sum_abs / golden.len() as f64,
+            });
+        }
+    }
+
+    // ---- SR determinism: the SR+chunked cell re-run under explicit
+    // thread budgets must be bit-identical.
+    let reference: Vec<u64> = probe_run(seed, true, Some(PROBE_CHUNK), Some(1), &a, &b)?
+        .iter()
+        .map(|v| v.to_bits())
+        .collect();
+    let mut sr_deterministic = true;
+    for t in [4usize, 7] {
+        let bits: Vec<u64> = probe_run(seed, true, Some(PROBE_CHUNK), Some(t), &a, &b)?
+            .iter()
+            .map(|v| v.to_bits())
+            .collect();
+        sr_deterministic &= bits == reference;
+    }
+
+    Ok(AccuracySweep { steps, seed, train, dot, sr_deterministic })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_probe_is_seeded_and_chunking_helps_at_big_k() {
+        // One training step keeps this test cheap; the probe is the
+        // point here.
+        let sweep = run_sweep(1, 42).expect("sweep");
+        assert_eq!(sweep.train.len(), 7, "five plain presets + fp8sr + fp8flex");
+        assert_eq!(sweep.dot.len(), 4, "{{rne, sr}} x {{naive, chunked}}");
+        assert!(sweep.sr_deterministic, "SR must be bit-identical across thread budgets");
+        let cell = |r: &str, c: Option<usize>| {
+            sweep
+                .dot
+                .iter()
+                .find(|d| d.rounding == r && d.chunk == c)
+                .copied()
+                .expect("cell present")
+        };
+        let naive = cell("rne", None);
+        let chunked = cell("rne", Some(PROBE_CHUNK));
+        assert!(
+            chunked.max_abs_err <= naive.max_abs_err,
+            "chunked accumulation must not be worse than the naive chain at K={PROBE_K}: \
+             chunked {} vs naive {}",
+            chunked.max_abs_err,
+            naive.max_abs_err
+        );
+        // SR decorrelates the accumulation bias: its mean error stays
+        // in the same regime as RNE's (sanity band, not a tight claim).
+        let sr = cell("sr", None);
+        assert!(sr.mean_abs_err <= 10.0 * naive.mean_abs_err.max(1e-12));
+    }
+}

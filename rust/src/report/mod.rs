@@ -455,6 +455,98 @@ pub fn serve_stats_text(stats: &crate::serve::ServeStats, tenant_names: &[String
     s
 }
 
+// ------------------------------------------------- accuracy-at-scale
+
+/// Render the accuracy-at-scale matrix (`repro accuracy`): spiral
+/// training per policy, the big-K dot probe, and the SR determinism
+/// verdict.
+pub fn accuracy_text(sweep: &crate::numerics::AccuracySweep) -> String {
+    let mut s = String::new();
+    s += &format!(
+        "Accuracy-at-scale matrix — spiral training ({} steps, seed {})\n",
+        sweep.steps, sweep.seed
+    );
+    s += &format!(
+        "{:<9} {:>8} {:>7} {:>10} {:>11} {:>8}\n",
+        "policy", "rounding", "scaled", "accuracy", "final loss", "skipped"
+    );
+    for t in &sweep.train {
+        s += &format!(
+            "{:<9} {:>8} {:>7} {:>9.1}% {:>11.4} {:>8}\n",
+            t.policy,
+            t.rounding,
+            if t.scaled { "yes" } else { "no" },
+            100.0 * t.accuracy,
+            t.final_loss,
+            t.skipped
+        );
+    }
+    s += &format!(
+        "\nBig-K dot probe — FP8->FP16 ExSdotp, {}x{}x{} vs f64 reference\n",
+        crate::numerics::sweep::PROBE_M,
+        crate::numerics::sweep::PROBE_N,
+        crate::numerics::sweep::PROBE_K
+    );
+    s += &format!("{:<9} {:>9} {:>13} {:>13}\n", "rounding", "chunk", "max |err|", "mean |err|");
+    for d in &sweep.dot {
+        s += &format!(
+            "{:<9} {:>9} {:>13.3e} {:>13.3e}\n",
+            d.rounding,
+            d.chunk.map(|c| c.to_string()).unwrap_or_else(|| "naive".into()),
+            d.max_abs_err,
+            d.mean_abs_err
+        );
+    }
+    s += &format!(
+        "\nSR bit-determinism across thread budgets {{1, 4, 7}}: {}\n",
+        if sweep.sr_deterministic { "PASS" } else { "FAIL" }
+    );
+    s
+}
+
+/// The machine-readable companion of [`accuracy_text`] (one JSON line —
+/// the `--json` output and the BENCH_accuracy.json body).
+pub fn accuracy_json(sweep: &crate::numerics::AccuracySweep) -> String {
+    let train: Vec<String> = sweep
+        .train
+        .iter()
+        .map(|t| {
+            format!(
+                "{{\"policy\":\"{}\",\"rounding\":\"{}\",\"scaled\":{},\
+                 \"accuracy\":{:.6},\"final_loss\":{:.6},\"skipped\":{}}}",
+                t.policy, t.rounding, t.scaled, t.accuracy, t.final_loss, t.skipped
+            )
+        })
+        .collect();
+    let dot: Vec<String> = sweep
+        .dot
+        .iter()
+        .map(|d| {
+            format!(
+                "{{\"rounding\":\"{}\",\"chunk\":{},\"max_abs_err\":{:.6e},\
+                 \"mean_abs_err\":{:.6e}}}",
+                d.rounding,
+                d.chunk.map(|c| c.to_string()).unwrap_or_else(|| "null".into()),
+                d.max_abs_err,
+                d.mean_abs_err
+            )
+        })
+        .collect();
+    format!(
+        "{{\"steps\":{},\"seed\":{},\"probe\":{{\"m\":{},\"n\":{},\"k\":{},\"chunk\":{}}},\
+         \"sr_deterministic\":{},\"train\":[{}],\"dot\":[{}]}}",
+        sweep.steps,
+        sweep.seed,
+        crate::numerics::sweep::PROBE_M,
+        crate::numerics::sweep::PROBE_N,
+        crate::numerics::sweep::PROBE_K,
+        crate::numerics::sweep::PROBE_CHUNK,
+        sweep.sr_deterministic,
+        train.join(","),
+        dot.join(",")
+    )
+}
+
 // ------------------------------------------------------- observability
 
 /// Human-readable roll-up of an observability snapshot — the

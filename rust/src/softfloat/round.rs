@@ -6,10 +6,53 @@
 //! [`FpFormat`]. Centralizing this guarantees that accuracy differences
 //! measured in Table IV come from the *datapath* (one rounding vs. two),
 //! not from inconsistent rounding implementations.
+//!
+//! # Stochastic rounding
+//!
+//! [`RoundingMode::StochasticRound`] carries a 64-bit key and rounds up
+//! with probability equal to the dropped fraction (resolved to 32 bits),
+//! the unbiased scheme Wang et al. (1812.08011) use to rescue FP8
+//! training. The draw is a pure function of the key — no global RNG, no
+//! state — so a rounding is deterministic wherever and whenever it
+//! executes. Callers derive per-site keys from the session seed with the
+//! `sr_*` helpers below ([`RoundingMode::sr_element`],
+//! [`RoundingMode::sr_lane`], …), which are the **identity on every
+//! non-stochastic mode**: threading them through the kernels changes
+//! nothing unless a session explicitly opts into stochastic rounding.
+//! The derivation discipline (who mixes which index where) is pinned in
+//! DESIGN.md's "Accuracy-at-scale numerics" section; the differential
+//! tests pin the consequence — SR results are bit-identical across
+//! thread counts, lane tiers and executor backends.
 
 use crate::formats::FpFormat;
 
-/// RISC-V `frm` rounding modes.
+/// One avalanche round of the splitmix64 finalizer over `a` mixed with
+/// `b` — the key-derivation primitive behind every `sr_*` helper. Full
+/// 64-bit avalanche: any differing input bit flips each output bit with
+/// probability ~1/2, so derived keys are statistically independent even
+/// for adjacent indices.
+pub const fn sr_mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+// Domain tags for the `sr_*` derivation helpers: each index space is
+// salted into its own top byte so `sr_lane(3)` can never collide with
+// `sr_level(3)` on the same key.
+const SR_DOM_LANE: u64 = 0x01 << 56;
+const SR_DOM_LEVEL: u64 = 0x02 << 56;
+const SR_DOM_ELEMENT: u64 = 0x03 << 56;
+const SR_DOM_STEP: u64 = 0x04 << 56;
+const SR_DOM_TREE: u64 = 0x05 << 56;
+const SR_DOM_FOLD: u64 = 0x06 << 56;
+const SR_DOM_RUN: u64 = 0x07 << 56;
+/// Domain separator between a rounding site's key and its Bernoulli
+/// draw, so the draw never equals a child key derived from the same key.
+const SR_DOM_DRAW: u64 = 0x0f << 56;
+
+/// RISC-V `frm` rounding modes, plus the software-level stochastic mode.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum RoundingMode {
     /// Round to nearest, ties to even (`frm=000`).
@@ -22,10 +65,20 @@ pub enum RoundingMode {
     Rup,
     /// Round to nearest, ties to max magnitude (`frm=100`).
     Rmm,
+    /// Seeded stochastic rounding: round up with probability equal to
+    /// the dropped fraction, drawn deterministically from the carried
+    /// key (derived from the session seed and the rounding site — see
+    /// the `sr_*` helpers). Uses the reserved `frm=101` encoding; the
+    /// hardware CSR decoder does not accept it
+    /// ([`RoundingMode::from_frm`] still returns `None` for `0b101`),
+    /// because the cycle-accurate engine has no SR datapath — only the
+    /// functional engine runs it.
+    StochasticRound(u64),
 }
 
 impl RoundingMode {
-    /// RISC-V `frm` encoding.
+    /// RISC-V `frm` encoding (stochastic rounding reports the reserved
+    /// `0b101` slot; the key does not fit in a CSR and is dropped).
     pub const fn to_frm(self) -> u32 {
         match self {
             RoundingMode::Rne => 0b000,
@@ -33,10 +86,14 @@ impl RoundingMode {
             RoundingMode::Rdn => 0b010,
             RoundingMode::Rup => 0b011,
             RoundingMode::Rmm => 0b100,
+            RoundingMode::StochasticRound(_) => 0b101,
         }
     }
 
-    /// Decode a RISC-V `frm` field.
+    /// Decode a RISC-V `frm` field. `0b101` decodes to `None`: the
+    /// stochastic mode is a software construct whose key cannot round-
+    /// trip through a 3-bit CSR field, so hardware-facing decoders fall
+    /// back to RNE exactly as they do for any reserved encoding.
     pub const fn from_frm(frm: u32) -> Option<Self> {
         match frm {
             0b000 => Some(RoundingMode::Rne),
@@ -48,16 +105,90 @@ impl RoundingMode {
         }
     }
 
+    /// Is this the stochastic mode (any key)?
+    pub const fn is_stochastic(self) -> bool {
+        matches!(self, RoundingMode::StochasticRound(_))
+    }
+
+    /// Core key derivation: mix `salt` into a stochastic key; the
+    /// **identity** on every other mode. All public `sr_*` helpers
+    /// delegate here with a domain-tagged salt.
+    #[inline]
+    pub const fn sr_derive(self, salt: u64) -> RoundingMode {
+        match self {
+            RoundingMode::StochasticRound(k) => RoundingMode::StochasticRound(sr_mix(k, salt)),
+            other => other,
+        }
+    }
+
+    /// Derive the key for SIMD/SWAR lane `i` of one packed operation.
+    /// Identity for non-stochastic modes.
+    #[inline]
+    pub const fn sr_lane(self, i: u32) -> RoundingMode {
+        self.sr_derive(SR_DOM_LANE ^ i as u64)
+    }
+
+    /// Derive the key for level `l` of a vsum reduction tree. Identity
+    /// for non-stochastic modes.
+    #[inline]
+    pub const fn sr_level(self, l: u32) -> RoundingMode {
+        self.sr_derive(SR_DOM_LEVEL ^ l as u64)
+    }
+
+    /// Derive the key for output/tensor element `e` (a flat index over
+    /// the logical tensor, independent of blocking, packing or thread
+    /// assignment). Identity for non-stochastic modes.
+    #[inline]
+    pub const fn sr_element(self, e: u64) -> RoundingMode {
+        self.sr_derive(SR_DOM_ELEMENT ^ e)
+    }
+
+    /// Derive the key for accumulation step `s` (the k-index of a dot
+    /// product's fold, again independent of blocking). Identity for
+    /// non-stochastic modes.
+    #[inline]
+    pub const fn sr_step(self, s: u64) -> RoundingMode {
+        self.sr_derive(SR_DOM_STEP ^ s)
+    }
+
+    /// Derive the key for accumulation sub-tree (chunk) `c` of a
+    /// chunked fold. Identity for non-stochastic modes.
+    #[inline]
+    pub const fn sr_tree(self, c: u64) -> RoundingMode {
+        self.sr_derive(SR_DOM_TREE ^ c)
+    }
+
+    /// Derive the key for inter-chunk combine `f` of a chunked fold.
+    /// Identity for non-stochastic modes.
+    #[inline]
+    pub const fn sr_fold(self, f: u64) -> RoundingMode {
+        self.sr_derive(SR_DOM_FOLD ^ f)
+    }
+
+    /// Derive the key for run `r` of a reused plan instance, so
+    /// repeated executions draw fresh randomness while any single run
+    /// stays a pure function of (seed, run index). Identity for
+    /// non-stochastic modes.
+    #[inline]
+    pub const fn sr_run(self, r: u64) -> RoundingMode {
+        self.sr_derive(SR_DOM_RUN ^ r)
+    }
+
     /// Should the magnitude be incremented, given the rounding digits?
     ///
     /// * `sign` — sign of the value being rounded
     /// * `lsb` — least significant kept bit
     /// * `round` — first dropped bit
     /// * `sticky` — OR of all remaining dropped bits
+    ///
+    /// The stochastic mode answers as RNE here: [`round_pack`] never
+    /// consults `increment` for it (the Bernoulli draw needs the full
+    /// dropped fraction, not just round/sticky), so this arm only
+    /// defines a sane nearest-style default for any out-of-tree caller.
     #[inline]
     pub fn increment(self, sign: bool, lsb: bool, round: bool, sticky: bool) -> bool {
         match self {
-            RoundingMode::Rne => round && (sticky || lsb),
+            RoundingMode::Rne | RoundingMode::StochasticRound(_) => round && (sticky || lsb),
             RoundingMode::Rtz => false,
             RoundingMode::Rdn => sign && (round || sticky),
             RoundingMode::Rup => !sign && (round || sticky),
@@ -67,15 +198,53 @@ impl RoundingMode {
 
     /// On overflow, does this mode saturate to max-finite instead of
     /// producing infinity (per IEEE 754 §4.3 directed-rounding rules)?
+    /// Stochastic rounding overflows to infinity like the nearest
+    /// modes.
     #[inline]
     pub fn overflow_to_max_finite(self, sign: bool) -> bool {
         match self {
-            RoundingMode::Rne | RoundingMode::Rmm => false,
+            RoundingMode::Rne | RoundingMode::Rmm | RoundingMode::StochasticRound(_) => false,
             RoundingMode::Rtz => true,
             RoundingMode::Rdn => !sign, // +overflow stays at +maxfinite
             RoundingMode::Rup => sign,  // −overflow stays at −maxfinite
         }
     }
+}
+
+/// The uniform 32-bit draw for one stochastic rounding: the high half
+/// of the key avalanched once more under its own domain tag (so the
+/// draw is independent of every key derived *from* this key).
+#[inline]
+fn sr_draw32(key: u64) -> u64 {
+    sr_mix(key, SR_DOM_DRAW) >> 32
+}
+
+/// The dropped fraction of an alignment shift, resolved to 32 bits:
+/// `floor(dropped / 2^shift * 2^32)`, plus one if any nonzero residue
+/// sits below that resolution (so a nonzero dropped part always has
+/// probability ≥ 2^-32 and an exact midpoint is exactly `2^31`).
+/// Returns a value in `[0, 2^32]`; rounding up fires iff the 32-bit
+/// uniform draw is strictly below it.
+#[inline]
+fn sr_fraction(mant: u128, shift: u32, sticky: bool) -> u64 {
+    debug_assert!(shift > 0, "sr_fraction needs a dropping shift");
+    if shift >= 160 {
+        // The whole 128-bit significand sits ≥ 2^32 below the grid:
+        // below resolution, but nonzero.
+        return 1;
+    }
+    let (hi, residue) = if shift > 127 {
+        // Everything is dropped; the fraction is mant / 2^shift.
+        (mant >> (shift - 32), (mant & ((1u128 << (shift - 32)) - 1)) != 0)
+    } else {
+        let dropped = mant & ((1u128 << shift) - 1);
+        if shift >= 32 {
+            (dropped >> (shift - 32), (dropped & ((1u128 << (shift - 32)) - 1)) != 0)
+        } else {
+            (dropped << (32 - shift), false)
+        }
+    };
+    hi as u64 + (residue || sticky) as u64
 }
 
 /// Round and pack an exact finite nonzero-or-zero magnitude into `fmt`.
@@ -87,20 +256,30 @@ impl RoundingMode {
 ///
 /// Handles normal/subnormal boundaries, overflow (to ±∞ or ±max-finite
 /// depending on mode), and total underflow (to ±0 or the minimum
-/// subnormal for directed modes).
+/// subnormal for directed modes). Under
+/// [`RoundingMode::StochasticRound`] the increment decision is a seeded
+/// Bernoulli draw on the dropped fraction instead of a nearest/directed
+/// rule; exact values (nothing dropped, no sticky) are never perturbed.
 ///
 /// `#[inline]`: the monomorphized fast tier calls this with a constant
 /// format, folding the grid arithmetic per instantiation.
 #[inline]
 pub fn round_pack(sign: bool, exp: i32, mant: u128, sticky: bool, fmt: FpFormat, rm: RoundingMode) -> u64 {
+    let sticky_in = sticky;
     if mant == 0 {
         if !sticky {
             return fmt.zero(sign);
         }
         // Magnitude is a pure sticky residue: strictly between 0 and one
         // LSB of whatever grid — rounds to zero except in directed modes
-        // pointing away from zero.
-        return if rm.increment(sign, false, false, true) {
+        // pointing away from zero (stochastically: with the minimum
+        // representable probability, since the residue is below the
+        // 32-bit fraction resolution).
+        let inc = match rm {
+            RoundingMode::StochasticRound(key) => sr_draw32(key) < 1,
+            _ => rm.increment(sign, false, false, true),
+        };
+        return if inc {
             fmt.min_subnormal() | if sign { fmt.sign_mask() } else { 0 }
         } else {
             fmt.zero(sign)
@@ -136,7 +315,21 @@ pub fn round_pack(sign: bool, exp: i32, mant: u128, sticky: bool, fmt: FpFormat,
 
     let mut kept = kept;
     let mut lsb_w = lsb_w;
-    if rm.increment(sign, kept & 1 == 1, round, sticky) {
+    let inc = match rm {
+        RoundingMode::StochasticRound(key) => {
+            if !round && !sticky {
+                false // exact on the grid: never perturbed
+            } else if shift <= 0 {
+                // Only the incoming sticky residue was dropped — below
+                // the fraction resolution, so minimum probability.
+                sr_draw32(key) < 1
+            } else {
+                sr_draw32(key) < sr_fraction(mant, shift as u32, sticky_in)
+            }
+        }
+        _ => rm.increment(sign, kept & 1 == 1, round, sticky),
+    };
+    if inc {
         kept += 1;
         if kept >> p != 0 {
             // Carry out of the significand: renormalize.
@@ -267,5 +460,137 @@ mod tests {
             assert_eq!(RoundingMode::from_frm(rm.to_frm()), Some(rm));
         }
         assert_eq!(RoundingMode::from_frm(0b101), None);
+        // The stochastic mode reports the reserved slot and (by design)
+        // does not round-trip: the key cannot live in a 3-bit field.
+        assert_eq!(RoundingMode::StochasticRound(7).to_frm(), 0b101);
+    }
+
+    // ------------------------------------------- stochastic rounding
+
+    /// Keys used across the SR tests: element-derived from one session
+    /// key, the way the batch engine derives them.
+    fn sr_keys(n: u64) -> impl Iterator<Item = RoundingMode> {
+        (0..n).map(|e| RoundingMode::StochasticRound(0xABCD_EF01).sr_element(e))
+    }
+
+    #[test]
+    fn sr_helpers_are_identity_for_non_stochastic_modes() {
+        for rm in [
+            RoundingMode::Rne,
+            RoundingMode::Rtz,
+            RoundingMode::Rdn,
+            RoundingMode::Rup,
+            RoundingMode::Rmm,
+        ] {
+            assert_eq!(rm.sr_derive(123), rm);
+            assert_eq!(rm.sr_lane(3).sr_level(2).sr_element(9).sr_step(4), rm);
+            assert_eq!(rm.sr_tree(1).sr_fold(2).sr_run(7), rm);
+            assert!(!rm.is_stochastic());
+        }
+        let sr = RoundingMode::StochasticRound(42);
+        assert!(sr.is_stochastic());
+        assert_ne!(sr.sr_lane(0), sr.sr_lane(1));
+        assert_ne!(sr.sr_lane(3), sr.sr_level(3), "domain tags must separate index spaces");
+        // Same derivation path, same key: determinism by construction.
+        assert_eq!(sr.sr_element(5).sr_step(2), sr.sr_element(5).sr_step(2));
+    }
+
+    #[test]
+    fn sr_is_deterministic_per_key() {
+        for rm in sr_keys(64) {
+            let a = round_pack(false, -3, 9, false, FP8, rm); // 1.125, a midpoint
+            let b = round_pack(false, -3, 9, false, FP8, rm);
+            assert_eq!(a, b, "same key must round the same way");
+            assert!(a == 0x3c || a == 0x3d, "midpoint must land on a neighbor, got {a:#x}");
+        }
+    }
+
+    #[test]
+    fn sr_never_perturbs_exact_values() {
+        for rm in sr_keys(256) {
+            // 1.0 and -1.5 are exact in every tested format.
+            assert_eq!(round_pack(false, 0, 1, false, FP32, rm), 0x3f80_0000);
+            assert_eq!(round_pack(true, -1, 3, false, FP16, rm), 0xbe00);
+            assert_eq!(round_pack(false, -3, 8, false, FP8, rm), 0x3c); // 1.0 = 8/8
+            assert_eq!(round_pack(false, 0, 0, false, FP8, rm), FP8.zero(false));
+        }
+    }
+
+    /// Seeded statistical unbiasedness: over many derived keys, an
+    /// exact midpoint (dropped fraction 1/2) must round up almost
+    /// exactly half the time, and the mean of the rounded values must
+    /// converge to the exact value. Everything is derived from fixed
+    /// seeds, so the counts are deterministic — the bounds cannot
+    /// flake.
+    #[test]
+    fn sr_midpoint_is_unbiased() {
+        let n = 4096u64;
+        let mut ups = 0u64;
+        let mut mean = 0.0f64;
+        for rm in sr_keys(n) {
+            // 1.125 in FP8 e5m2: exactly between 1.0 (0x3c) and 1.25
+            // (0x3d).
+            let r = round_pack(false, -3, 9, false, FP8, rm);
+            if r == 0x3d {
+                ups += 1;
+            } else {
+                assert_eq!(r, 0x3c);
+            }
+            mean += crate::softfloat::to_f64(r, FP8) / n as f64;
+        }
+        // Binomial(4096, 1/2): |ups - 2048| < 256 is > 15 sigma — and
+        // the draw is seeded, so this is a fixed number, not a sample.
+        let dev = ups.abs_diff(n / 2);
+        assert!(dev < 256, "midpoint rounded up {ups}/{n} times");
+        // E[rounded] = 1.125 exactly; the seeded mean must sit within
+        // the same deviation bound scaled by the 0.25 step.
+        let err = (mean - 1.125).abs();
+        assert!(err < 256.0 / n as f64 * 0.25, "seeded mean {mean} drifted from 1.125");
+        // RNE on the same midpoint is deterministic — all-down here —
+        // which is exactly the bias SR removes.
+        assert_eq!(round_pack(false, -3, 9, false, FP8, RoundingMode::Rne), 0x3c);
+    }
+
+    /// A quarter-fraction value must round up about a quarter of the
+    /// time: the probability tracks the dropped fraction, not just 1/2
+    /// at midpoints.
+    #[test]
+    fn sr_probability_tracks_the_dropped_fraction() {
+        let n = 4096u64;
+        let mut ups = 0u64;
+        for rm in sr_keys(n) {
+            // 1.0625 = 17/16 in FP8: dropped fraction 1/4 of an ulp.
+            let r = round_pack(false, -4, 17, false, FP8, rm);
+            if r == 0x3d {
+                ups += 1;
+            } else {
+                assert_eq!(r, 0x3c);
+            }
+        }
+        let dev = ups.abs_diff(n / 4);
+        assert!(dev < 256, "quarter-fraction rounded up {ups}/{n} times");
+    }
+
+    #[test]
+    fn sr_fraction_resolution() {
+        // Exact midpoint at a 1-bit shift: fraction is exactly 2^31.
+        assert_eq!(sr_fraction(1, 1, false), 1u64 << 31);
+        // Exact midpoint at a wide shift.
+        assert_eq!(sr_fraction(1u128 << 63, 64, false), 1u64 << 31);
+        // A nonzero residue below resolution still has probability 1.
+        assert_eq!(sr_fraction(1, 64, false), 1);
+        assert_eq!(sr_fraction(0, 1, true), 1);
+        // Sticky bumps an otherwise-exact fraction by one step.
+        assert_eq!(sr_fraction(1, 1, true), (1u64 << 31) + 1);
+        // Just below a full ulp saturates at 2^32 (always rounds up).
+        assert_eq!(sr_fraction(u32::MAX as u128, 32, true), 1u64 << 32);
+    }
+
+    #[test]
+    fn sr_overflow_goes_to_infinity() {
+        for rm in sr_keys(16) {
+            assert_eq!(round_pack(false, 16, 1, false, FP16, rm), FP16.infinity(false));
+            assert_eq!(round_pack(true, 16, 1, false, FP16, rm), FP16.infinity(true));
+        }
     }
 }

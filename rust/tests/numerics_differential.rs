@@ -1,0 +1,181 @@
+//! Accuracy-at-scale numerics differentials
+//! (`cargo test --test numerics_differential`).
+//!
+//! Two gate families for the `numerics` subsystem:
+//!
+//! * **Stochastic rounding is seeded, not noisy.** An SR run is a pure
+//!   function of `(seed, element index)` — the same plan must produce
+//!   bit-identical results across thread budgets, lane tiers, and
+//!   executor backends, and two sessions built from the same seed must
+//!   agree while different seeds (and RNE) must not.
+//! * **Chunked accumulation tightens big-K error without forking the
+//!   semantics.** At K = 4096 an FP8→FP16 GEMM with a 256-element
+//!   chunk tree must be at least as close to the f64 reference (taken
+//!   over the *quantized* operands, isolating accumulation error) as
+//!   the naive left-to-right fold, and `chunk_k(K)` must degenerate to
+//!   the naive fold bit-for-bit — under RNE and under SR.
+
+use minifloat_nn::batch::{with_lane_tier, LaneTier};
+use minifloat_nn::prelude::*;
+use minifloat_nn::util::parallel::{with_dispatch, Dispatch};
+
+fn gaussian_mats(m: usize, n: usize, k: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = minifloat_nn::util::rng::Rng::new(seed);
+    let a = (0..m * k).map(|_| rng.gaussian() * 0.25).collect();
+    let b = (0..k * n).map(|_| rng.gaussian() * 0.25).collect();
+    (a, b)
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run one FP8→FP16 GEMM on a fresh SR session and return result bits.
+fn sr_gemm_bits(
+    seed: u64,
+    threads: usize,
+    chunk: Option<usize>,
+    (m, n, k): (usize, usize, usize),
+    a: &[f64],
+    b: &[f64],
+) -> Vec<u64> {
+    let session = Session::builder().seed(seed).threads(threads).stochastic_rounding().build();
+    let mut plan = session.gemm().src(FP8).acc(FP16);
+    if let Some(c) = chunk {
+        plan = plan.chunk_k(c);
+    }
+    let run = plan.dims(m, n, k).expect("plan").run_f64(a, b).expect("run");
+    bits(&run.c_f64())
+}
+
+// ------------------------------------------------- SR bit-determinism
+
+#[test]
+fn sr_is_bit_identical_across_threads_tiers_and_dispatchers() {
+    let dims = (16, 16, 512);
+    let (a, b) = gaussian_mats(dims.0, dims.1, dims.2, 0xD1FF);
+    // Reference: serial dispatch, default SWAR tier, one worker.
+    let reference = with_dispatch(Dispatch::Serial, || {
+        with_lane_tier(LaneTier::Swar, || sr_gemm_bits(42, 1, Some(128), dims, &a, &b))
+    });
+    for tier in [LaneTier::Swar, LaneTier::Scalar] {
+        for disp in [Dispatch::Pool, Dispatch::Scoped, Dispatch::Serial] {
+            for threads in [1usize, 4, 7] {
+                let got = with_dispatch(disp, || {
+                    with_lane_tier(tier, || sr_gemm_bits(42, threads, Some(128), dims, &a, &b))
+                });
+                assert_eq!(
+                    got, reference,
+                    "{tier:?}/{disp:?}/threads={threads}: SR result drifted from the \
+                     serial single-worker reference"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sr_is_a_pure_function_of_the_seed() {
+    let dims = (8, 8, 256);
+    let (a, b) = gaussian_mats(dims.0, dims.1, dims.2, 0x5EED);
+    // Same seed, two independently built sessions: identical bits.
+    let first = sr_gemm_bits(7, 4, None, dims, &a, &b);
+    let again = sr_gemm_bits(7, 4, None, dims, &a, &b);
+    assert_eq!(first, again, "same-seed SR runs disagree");
+    // A different seed must actually change the draws...
+    let other = sr_gemm_bits(8, 4, None, dims, &a, &b);
+    assert_ne!(first, other, "SR ignored the session seed");
+    // ...and SR must differ from RNE on an inexact big-K problem.
+    let session = Session::builder().seed(7).threads(4).build();
+    let rne = session
+        .gemm()
+        .src(FP8)
+        .acc(FP16)
+        .dims(dims.0, dims.1, dims.2)
+        .expect("plan")
+        .run_f64(&a, &b)
+        .expect("run");
+    assert_ne!(first, bits(&rne.c_f64()), "SR session rounded exactly like RNE");
+}
+
+// --------------------------------------------- chunked error tightening
+
+/// f64 reference GEMM over already-quantized operands.
+fn gemm_f64(a: &[f64], b: &[f64], m: usize, n: usize, k: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+fn max_abs_err(c: &[f64], reference: &[f64]) -> f64 {
+    c.iter().zip(reference).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+#[test]
+fn chunked_accumulation_tightens_big_k_error() {
+    let (m, n, k) = (4, 4, 4096);
+    let session = Session::builder().seed(11).build();
+    let (a, b) = gaussian_mats(m, n, k, 0xB16C);
+    // Quantize once through the same RNE grid the plans use, so the
+    // reference isolates *accumulation* error from quantization error.
+    let aq = session.tensor(&a, m, k, FP8).expect("a quant").to_f64();
+    let bq = session.tensor(&b, k, n, FP8).expect("b quant").to_f64();
+    let reference = gemm_f64(&aq, &bq, m, n, k);
+    let naive = session
+        .gemm()
+        .src(FP8)
+        .acc(FP16)
+        .dims(m, n, k)
+        .expect("naive plan")
+        .run_f64(&a, &b)
+        .expect("naive run");
+    let chunked = session
+        .gemm()
+        .src(FP8)
+        .acc(FP16)
+        .chunk_k(256)
+        .dims(m, n, k)
+        .expect("chunked plan")
+        .run_f64(&a, &b)
+        .expect("chunked run");
+    let err_naive = max_abs_err(&naive.c_f64(), &reference);
+    let err_chunked = max_abs_err(&chunked.c_f64(), &reference);
+    assert!(err_naive > 0.0, "K=4096 FP16 accumulation came out exact — probe is degenerate");
+    assert!(
+        err_chunked <= err_naive,
+        "chunk tree worsened the K=4096 error: chunked {err_chunked:e} vs naive {err_naive:e}"
+    );
+}
+
+#[test]
+fn full_k_chunk_degenerates_to_the_naive_fold_bit_for_bit() {
+    let (m, n, k) = (8, 8, 1024);
+    let (a, b) = gaussian_mats(m, n, k, 0xF01D);
+    // RNE and SR both: a single chunk spanning all of K reuses the
+    // naive epilogue keys, so the results must match to the bit.
+    for sr in [false, true] {
+        let builder = Session::builder().seed(23);
+        let session = if sr { builder.stochastic_rounding().build() } else { builder.build() };
+        let run_with = |chunk: Option<usize>| {
+            let mut plan = session.gemm().src(FP8).acc(FP16);
+            if let Some(c) = chunk {
+                plan = plan.chunk_k(c);
+            }
+            let run = plan.dims(m, n, k).expect("plan").run_f64(&a, &b).expect("run");
+            bits(&run.c_f64())
+        };
+        assert_eq!(
+            run_with(Some(k)),
+            run_with(None),
+            "sr={sr}: chunk_k(K) is not bit-identical to the naive plan"
+        );
+    }
+}

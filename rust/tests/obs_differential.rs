@@ -77,6 +77,44 @@ fn batch_gemm_is_bit_identical_with_obs_on_both_lane_tiers() {
 }
 
 #[test]
+fn sr_gemm_is_bit_identical_with_obs_on_and_counts_sr_runs() {
+    with_clean_obs(|| {
+        // A stochastically-rounded, chunked GEMM: the SR draw keys are
+        // derived from (seed, element index) only, so flipping obs on
+        // must not move a single bit — and the obs-on run must record
+        // exactly one `numerics.sr.runs` plan execution.
+        let (m, n, k) = (16, 32, 256);
+        let (a, b) = gaussian_mats(m, n, k, 29);
+        let run_once = || {
+            let session = Session::builder()
+                .mode(ExecMode::Functional)
+                .seed(29)
+                .stochastic_rounding()
+                .build();
+            let run = session
+                .gemm()
+                .src(FP8)
+                .acc(FP16)
+                .chunk_k(64)
+                .dims(m, n, k)
+                .expect("plan")
+                .run_f64(&a, &b)
+                .expect("run");
+            bits(&run.c_f64())
+        };
+        obs::disable_all();
+        let off = run_once();
+        obs::enable_all();
+        obs::reset_all();
+        let on = run_once();
+        let snap = obs::metrics::snapshot();
+        obs::disable_all();
+        assert_eq!(on, off, "obs flipped a stochastically-rounded result bit");
+        assert_eq!(snap.counter("numerics.sr.runs"), 1, "SR plan run not counted");
+    });
+}
+
+#[test]
 fn native_training_is_bit_identical_with_obs_on() {
     with_clean_obs(|| {
         let run_once = || {
