@@ -1,27 +1,35 @@
-//! Serving throughput: dynamic batching vs a batch-of-1 baseline.
+//! Serving throughput: continuous (iteration-level) batching vs the
+//! legacy whole-batch scheduler vs a batch-of-1 baseline.
 //!
-//! Both servers replay the *same* seeded open-loop trace over the same
-//! two frozen tenants (HFP8 + FP32). The unbatched baseline runs
-//! `max_batch = 1`, so every request occupies a full 8-row padded GEMM
-//! alone; the batched server coalesces up to 64 requests per dispatch.
-//! Before any timing, the run gates on correctness:
+//! Every arm replays the *same* seeded trace over the same two frozen
+//! tenants (HFP8 + FP32), under deliberate overload: ~64 arrivals/tick
+//! against a 64-row batch limit and a 12-tick deadline. The legacy
+//! run-to-completion scheduler tops out at `max_batch / pipeline
+//! latency` ≈ 21 admissions per tenant-tick, so its queues grow without
+//! bound and deadlines blow; continuous batching admits a fresh cohort
+//! every tick and keeps latency near the pipeline floor. Before any
+//! timing, the run gates on correctness:
 //!
 //! * determinism — two replays (and shard counts 1 vs 4) must produce
-//!   bit-identical responses and identical stats;
+//!   bit-identical responses and byte-identical stats;
 //! * routing — every expanding-pair tenant GEMM must take the packed
-//!   zero-repack route (the frozen weights were packed for exactly
-//!   that);
-//! * **throughput — the batched path must be at least 2x the unbatched
-//!   baseline** (the CI-blocking gate: if batching stops paying for
-//!   itself, the subsystem lost its reason to exist).
+//!   zero-repack route;
+//! * **goodput — continuous must deliver ≥ 1.5x the legacy within-
+//!   deadline completions per virtual tick, at a p99 latency no worse**
+//!   (the CI-blocking gate for the scheduler rebuild);
+//! * **throughput — continuous must be ≥ 2x the batch-of-1 baseline on
+//!   the wall clock** (best-of-3 minima per arm, so one scheduler
+//!   hiccup cannot flake the gate);
+//! * backpressure — a bursty overload arm with a token bucket and a
+//!   bounded queue must actually shed (and replay deterministically).
 //!
 //! Appends a trajectory point to `BENCH_serve.json` in the working
 //! directory, next to `BENCH_gemm.json` and `BENCH_train.json`.
 
 use minifloat_nn::prelude::*;
-use minifloat_nn::serve::sim;
-use minifloat_nn::util::bench::Bencher;
+use minifloat_nn::serve::{sim, BatchMode};
 use std::io::Write;
+use std::time::Instant;
 
 fn frozen(session: &Session, policy: PrecisionPolicy, steps: usize) -> InferenceModel {
     let mut tr = session.native_trainer(policy).expect("valid train plan");
@@ -29,14 +37,29 @@ fn frozen(session: &Session, policy: PrecisionPolicy, steps: usize) -> Inference
     InferenceModel::freeze(session, tr.model(), tr.policy()).expect("freeze")
 }
 
+/// Best-of-3 wall seconds for one replay arm (the minimum is the
+/// noise-robust estimator: scheduler preemption only ever adds time).
+fn best_of_3(mut f: impl FnMut()) -> f64 {
+    (0..3)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
 fn main() {
     let session = Session::builder().seed(42).build();
-    let n_requests = 384;
-    println!("== serving: dynamic batching vs batch-of-1, {n_requests}-request open-loop trace ==\n");
+    let n_requests = 3840;
+    println!(
+        "== serving: continuous vs whole-batch vs batch-of-1, \
+         {n_requests}-request overloaded open loop ==\n"
+    );
 
     let hfp8 = frozen(&session, PrecisionPolicy::hfp8(), 24);
     let fp32 = frozen(&session, PrecisionPolicy::fp32(), 24);
-    let plan_with = |max_batch: usize, shards: usize| {
+    let plan_with = |mode: BatchMode, max_batch: usize, shards: usize| {
         session
             .server()
             .tenant("hfp8", hfp8.clone())
@@ -44,15 +67,19 @@ fn main() {
             .max_batch(max_batch)
             .max_wait_ticks(4)
             .shards(shards)
+            .batching(mode)
             .build()
             .expect("valid serve plan")
     };
-    let batched = plan_with(64, 4);
-    let unbatched = plan_with(1, 4);
-    // High arrival rate (8/tick) so the batcher actually has queues to
-    // coalesce — the regime batching exists for.
+    let continuous = plan_with(BatchMode::Continuous, 64, 4);
+    let legacy = plan_with(BatchMode::WholeBatch, 64, 4);
+    let batch_of_1 = plan_with(BatchMode::WholeBatch, 1, 4);
+    // ~64 arrivals/tick split over two tenants, each due 12 ticks after
+    // arrival (4x the 3-wave pipeline latency): comfortably feasible
+    // for continuous admission, structurally infeasible for
+    // run-to-completion once the backlog builds.
     let trace =
-        sim::Trace::open_loop(42, &[8, 8], n_requests, 1.0 / 8.0, None).expect("trace");
+        sim::Trace::open_loop(42, &[8, 8], n_requests, 1.0 / 64.0, Some(12)).expect("trace");
 
     // Gate 1: determinism across runs and shard counts, plus routing.
     let run = |plan: &ServePlan| {
@@ -60,55 +87,137 @@ fn main() {
         let responses = sim::replay(&mut server, &trace).expect("replay");
         (responses, server.stats().clone())
     };
-    let (r1, s1) = run(&batched);
-    let (r2, s2) = run(&batched);
-    let (r3, s3) = run(&plan_with(64, 1));
+    let (r1, cont_stats) = run(&continuous);
+    let (r2, s2) = run(&continuous);
+    let (r3, s3) = run(&plan_with(BatchMode::Continuous, 64, 1));
     assert_eq!(r1.len(), n_requests);
     let bits = |rs: &[minifloat_nn::serve::Response]| -> Vec<Vec<u64>> {
         rs.iter().map(|r| r.logits.iter().map(|v| v.to_bits()).collect()).collect()
     };
     assert_eq!(bits(&r1), bits(&r2), "same trace must replay bit-identically");
     assert_eq!(bits(&r1), bits(&r3), "shard count must not change a single bit");
-    assert_eq!(s1.summary_json(), s2.summary_json(), "stats must replay identically");
-    assert_eq!(s1.summary_json(), s3.summary_json(), "stats must be shard-count independent");
+    assert_eq!(cont_stats.summary_json(), s2.summary_json(), "stats must replay identically");
     assert_eq!(
-        s1.tenants[0].packed_runs, s1.tenants[0].gemm_calls,
+        cont_stats.summary_json(),
+        s3.summary_json(),
+        "stats must be shard-count independent"
+    );
+    assert_eq!(
+        cont_stats.tenants[0].packed_runs, cont_stats.tenants[0].gemm_calls,
         "hfp8 tenant: every GEMM must take the packed zero-repack route"
     );
-    assert!(s1.tenants[0].gemm_calls > 0 && s1.tenants[1].gemm_calls > 0);
+    assert!(cont_stats.tenants[0].gemm_calls > 0 && cont_stats.tenants[1].gemm_calls > 0);
+    // And the legacy reference computes the same bits on its own
+    // schedule — scheduling policy must never touch a logit.
+    let (r_legacy, legacy_stats) = run(&legacy);
+    let mut by_id = r_legacy.clone();
+    by_id.sort_by_key(|r| r.id);
+    let mut r1_by_id = r1.clone();
+    r1_by_id.sort_by_key(|r| r.id);
+    assert_eq!(
+        bits(&r1_by_id),
+        bits(&by_id),
+        "continuous vs whole-batch must agree on every logit bit"
+    );
     println!(
-        "determinism: 2 runs x shards {{1,4}} bit-identical; hfp8 routing 100% packed ✓\n"
+        "determinism: 2 runs x shards {{1,4}} x modes {{cont,whole}} bit-identical; \
+         hfp8 routing 100% packed ✓\n"
     );
 
-    // Gate 2 setup: time both paths on wall clock.
-    let mut bench = Bencher::new();
-    let batched_s = bench
-        .bench_throughput("batched (max_batch 64)", n_requests as f64, || run(&batched).0)
-        .median
-        .as_secs_f64();
-    let unbatched_s = bench
-        .bench_throughput("unbatched (max_batch 1)", n_requests as f64, || run(&unbatched).0)
-        .median
-        .as_secs_f64();
-    let batched_rps = n_requests as f64 / batched_s;
-    let unbatched_rps = n_requests as f64 / unbatched_s;
-    let speedup = batched_rps / unbatched_rps;
+    // Gate 2: virtual-time goodput and tail latency (deterministic —
+    // these come from the replayed stats, not the wall clock).
+    let goodput_cont = cont_stats.goodput_per_tick();
+    let goodput_legacy = legacy_stats.goodput_per_tick();
+    let goodput_ratio = goodput_cont / goodput_legacy.max(1e-12);
+    let p99_cont = cont_stats.p99();
+    let p99_legacy = legacy_stats.p99();
     println!(
-        "\nthroughput: batched {batched_rps:.0} req/s vs unbatched {unbatched_rps:.0} req/s \
-         ({speedup:.1}x, gate: >= 2x)"
+        "goodput:  continuous {goodput_cont:.2} req/tick ({} misses) vs whole-batch \
+         {goodput_legacy:.2} req/tick ({} misses) -> {goodput_ratio:.2}x (gate: >= 1.5x)",
+        cont_stats.deadline_misses, legacy_stats.deadline_misses
+    );
+    println!("p99:      continuous {p99_cont} ticks vs whole-batch {p99_legacy} ticks\n");
+
+    // Gate 3: wall-clock throughput, best-of-3 minima per arm.
+    let cont_s = best_of_3(|| {
+        run(&continuous);
+    });
+    let legacy_s = best_of_3(|| {
+        run(&legacy);
+    });
+    let one_s = best_of_3(|| {
+        run(&batch_of_1);
+    });
+    let cont_rps = n_requests as f64 / cont_s;
+    let legacy_rps = n_requests as f64 / legacy_s;
+    let one_rps = n_requests as f64 / one_s;
+    let speedup = cont_rps / one_rps;
+    println!(
+        "wall (best of 3): continuous {cont_rps:.0} req/s, whole-batch {legacy_rps:.0} req/s, \
+         batch-of-1 {one_rps:.0} req/s ({speedup:.1}x vs batch-of-1, gate: >= 2x)"
+    );
+
+    // Backpressure arm: MMPP bursts against a token bucket and a
+    // bounded queue — sheds must actually happen, deterministically.
+    let shed_plan = session
+        .server()
+        .tenant("hfp8", hfp8.clone())
+        .tenant("fp32", fp32.clone())
+        .max_batch(64)
+        .max_wait_ticks(4)
+        .shards(4)
+        .queue_cap(64)
+        .rate_limit("hfp8", 8.0, 32)
+        .rate_limit("fp32", 8.0, 32)
+        .build()
+        .expect("valid shed plan");
+    let bursty = sim::Trace::bursty(42, &[8, 8], 768, 1.0 / 64.0, 8.0, 32.0, Some(12))
+        .expect("bursty trace");
+    let shed_run = |plan: &ServePlan| {
+        let mut server = plan.server();
+        sim::replay(&mut server, &bursty).expect("replay");
+        server.stats().clone()
+    };
+    let shed_stats = shed_run(&shed_plan);
+    assert_eq!(
+        shed_stats.summary_json(),
+        shed_run(&shed_plan).summary_json(),
+        "shed decisions must replay bit-for-bit"
+    );
+    let shed_rate = shed_stats.shed_rate();
+    assert!(
+        shed_stats.shed() > 0,
+        "the overload arm must exercise admission control (0 sheds recorded)"
+    );
+    assert!(
+        shed_stats.completed > 0 && shed_rate < 1.0,
+        "admission control must shed the excess, not the service"
+    );
+    println!(
+        "\nbackpressure: {} shed ({} rate-limited, {} queue-full, {:.1}% of offered), \
+         {} served ✓",
+        shed_stats.shed(),
+        shed_stats.shed_rate_limited,
+        shed_stats.shed_queue_full,
+        shed_rate * 100.0,
+        shed_stats.completed
     );
 
     // Trajectory point first (a failed gate should still leave data),
-    // then the blocking assert.
+    // then the blocking asserts.
     let ts = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let json = format!(
-        "{{\"bench\":\"serve_open_loop_{n_requests}req\",\"unix_time\":{ts},\
-         \"batched_rps\":{batched_rps:.1},\"unbatched_rps\":{unbatched_rps:.1},\
-         \"speedup\":{speedup:.2},\"deterministic\":true,\"stats\":{}}}\n",
-        s1.summary_json()
+        "{{\"bench\":\"serve_overload_{n_requests}req\",\"unix_time\":{ts},\
+         \"continuous_rps\":{cont_rps:.1},\"legacy_rps\":{legacy_rps:.1},\
+         \"batch_of_1_rps\":{one_rps:.1},\"speedup_vs_batch_of_1\":{speedup:.2},\
+         \"goodput_cont\":{goodput_cont:.4},\"goodput_legacy\":{goodput_legacy:.4},\
+         \"goodput_ratio\":{goodput_ratio:.2},\"p99_cont_ticks\":{p99_cont},\
+         \"p99_legacy_ticks\":{p99_legacy},\"shed_rate\":{shed_rate:.4},\
+         \"deterministic\":true,\"stats\":{}}}\n",
+        cont_stats.summary_json()
     );
     match std::fs::OpenOptions::new().create(true).append(true).open("BENCH_serve.json") {
         Ok(mut f) => {
@@ -119,9 +228,16 @@ fn main() {
     }
 
     assert!(
+        goodput_ratio >= 1.5 && p99_cont <= p99_legacy,
+        "continuous batching must deliver >= 1.5x legacy goodput at a p99 no worse \
+         (got {goodput_ratio:.2}x, p99 {p99_cont} vs {p99_legacy}) — the rebuild's \
+         reason to exist"
+    );
+    println!("goodput gate passed: {goodput_ratio:.1}x >= 1.5x, p99 {p99_cont} <= {p99_legacy} ✓");
+    assert!(
         speedup >= 2.0,
-        "dynamic batching must deliver at least 2x the batch-of-1 throughput \
-         (got {speedup:.2}x) — the serving layer's reason to exist"
+        "continuous batching must deliver at least 2x the batch-of-1 wall throughput \
+         (got {speedup:.2}x)"
     );
     println!("throughput gate passed: {speedup:.1}x >= 2x ✓");
 }

@@ -5,7 +5,8 @@
 //! `session.server().tenant("hfp8", model).max_batch(64).build()?`
 //! checks everything a server needs before any request exists: the
 //! session drives the functional engine, tenant names are unique,
-//! the knobs are sane, and — per tenant, per layer — a **probe
+//! the knobs are sane (batching mode, queue cap, per-tenant rate
+//! limits included), and — per tenant, per layer — a **probe
 //! [`crate::api::GemmPlan`]** is built for both the smallest padded
 //! batch and the largest one, so an unsupported policy pair or a
 //! lane-infeasible layer width is a typed error here, never a panic
@@ -20,7 +21,13 @@
 //! let mut tr = session.native_trainer(PrecisionPolicy::hfp8())?;
 //! tr.train(5, 0)?;
 //! let model = InferenceModel::freeze(&session, tr.model(), tr.policy())?;
-//! let plan = session.server().tenant("prod", model).max_batch(32).build()?;
+//! let plan = session
+//!     .server()
+//!     .tenant("prod", model)
+//!     .max_batch(32)
+//!     .queue_cap(256)
+//!     .rate_limit("prod", 8.0, 32)
+//!     .build()?;
 //! let server = plan.server();
 //! assert_eq!(server.tenants().len(), 1);
 //! # Ok(())
@@ -28,12 +35,13 @@
 //! ```
 
 use super::session::Session;
-use crate::ensure;
 use crate::kernels::gemm::ExecMode;
-use crate::serve::batcher::{pad_rows, BatchPolicy, ROW_PAD};
+use crate::serve::admission::RateLimit;
+use crate::serve::batcher::{pad_rows, BatchMode, BatchPolicy, ROW_PAD};
 use crate::serve::model::InferenceModel;
 use crate::serve::worker::{Server, Tenant};
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
 
 /// Range-check the serving knobs. Shared by [`ServePlanBuilder::build`]
 /// and the `repro serve` CLI, which wants to reject a bad knob *before*
@@ -53,8 +61,19 @@ pub fn validate_knobs(max_batch: usize, max_wait_ticks: u64, shards: usize) -> R
     Ok(())
 }
 
+/// Range-check a bounded-queue capacity. Shared with the CLI like
+/// [`validate_knobs`].
+pub fn validate_queue_cap(cap: usize) -> Result<()> {
+    ensure!(
+        (1..=1 << 20).contains(&cap),
+        "queue_cap ({cap}) must be in 1..=2^20 requests (--queue-cap; omit for unbounded)"
+    );
+    Ok(())
+}
+
 /// Builder returned by [`Session::server`]; add at least one tenant,
-/// every knob has a sensible default (batch 32, wait 4 ticks, 1 shard).
+/// every knob has a sensible default (batch 32, wait 4 ticks, 1 shard,
+/// continuous batching, unbounded queues, no rate limits).
 #[derive(Clone, Debug)]
 pub struct ServePlanBuilder<'s> {
     session: &'s Session,
@@ -62,11 +81,23 @@ pub struct ServePlanBuilder<'s> {
     max_batch: usize,
     max_wait_ticks: u64,
     shards: usize,
+    mode: BatchMode,
+    queue_cap: Option<usize>,
+    rate_limits: Vec<(String, f64, u64)>,
 }
 
 impl<'s> ServePlanBuilder<'s> {
     pub(crate) fn new(session: &'s Session) -> Self {
-        ServePlanBuilder { session, tenants: Vec::new(), max_batch: 32, max_wait_ticks: 4, shards: 1 }
+        ServePlanBuilder {
+            session,
+            tenants: Vec::new(),
+            max_batch: 32,
+            max_wait_ticks: 4,
+            shards: 1,
+            mode: BatchMode::default(),
+            queue_cap: None,
+            rate_limits: Vec::new(),
+        }
     }
 
     /// Register a tenant: a name plus its frozen model. Call once per
@@ -84,7 +115,8 @@ impl<'s> ServePlanBuilder<'s> {
     }
 
     /// Longest a request may queue before its tenant dispatches anyway
-    /// (default 4 ticks; `--max-wait` on the CLI).
+    /// (default 4 ticks; `--max-wait` on the CLI). Only the WholeBatch
+    /// mode waits — continuous batching admits every tick.
     pub fn max_wait_ticks(mut self, t: u64) -> Self {
         self.max_wait_ticks = t;
         self
@@ -94,6 +126,35 @@ impl<'s> ServePlanBuilder<'s> {
     /// the CLI). Responses are bit-identical at any shard count.
     pub fn shards(mut self, n: usize) -> Self {
         self.shards = n;
+        self
+    }
+
+    /// Wave scheduling mode (default [`BatchMode::Continuous`];
+    /// `--batching` on the CLI). [`BatchMode::WholeBatch`] pins the
+    /// legacy run-to-completion policy as the differential/timing
+    /// reference.
+    pub fn batching(mut self, mode: BatchMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Bound every tenant queue to `cap` pending requests; overflow is
+    /// shed with a typed [`crate::serve::ShedReason::QueueFull`]
+    /// (default unbounded; `--queue-cap` on the CLI).
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = Some(cap);
+        self
+    }
+
+    /// Token-bucket rate limit for one tenant: `per_tick` requests per
+    /// tick sustained (fractional allowed), `burst` requests of
+    /// headroom. Validated (tenant name, ranges) at [`build`];
+    /// submissions beyond the budget are shed with
+    /// [`crate::serve::ShedReason::RateLimited`].
+    ///
+    /// [`build`]: ServePlanBuilder::build
+    pub fn rate_limit(mut self, tenant: &str, per_tick: f64, burst: u64) -> Self {
+        self.rate_limits.push((tenant.to_string(), per_tick, burst));
         self
     }
 
@@ -109,6 +170,9 @@ impl<'s> ServePlanBuilder<'s> {
             "a server needs at least one tenant (ServePlanBuilder::tenant / --tenants)"
         );
         validate_knobs(self.max_batch, self.max_wait_ticks, self.shards)?;
+        if let Some(cap) = self.queue_cap {
+            validate_queue_cap(cap)?;
+        }
         for (i, t) in self.tenants.iter().enumerate() {
             ensure!(!t.name.is_empty(), "tenant {i} has an empty name");
             ensure!(
@@ -132,11 +196,28 @@ impl<'s> ServePlanBuilder<'s> {
                 }
             }
         }
+        let mut limits: Vec<Option<RateLimit>> = vec![None; self.tenants.len()];
+        for (name, rate, burst) in &self.rate_limits {
+            let Some(i) = self.tenants.iter().position(|t| &t.name == name) else {
+                bail!("rate limit names unknown tenant '{name}'");
+            };
+            ensure!(limits[i].is_none(), "duplicate rate limit for tenant '{name}'");
+            limits[i] = Some(
+                RateLimit::per_tick(*rate, *burst)
+                    .with_context(|| format!("rate limit for tenant '{name}'"))?,
+            );
+        }
         Ok(ServePlan {
             session: *self.session,
             tenants: self.tenants,
-            policy: BatchPolicy { max_batch: self.max_batch, max_wait_ticks: self.max_wait_ticks },
+            policy: BatchPolicy {
+                max_batch: self.max_batch,
+                max_wait_ticks: self.max_wait_ticks,
+                mode: self.mode,
+            },
             shards: self.shards,
+            queue_cap: self.queue_cap,
+            limits,
         })
     }
 }
@@ -150,12 +231,24 @@ pub struct ServePlan {
     tenants: Vec<Tenant>,
     policy: BatchPolicy,
     shards: usize,
+    queue_cap: Option<usize>,
+    limits: Vec<Option<RateLimit>>,
 }
 
 impl ServePlan {
     /// The batching knobs.
     pub fn batch_policy(&self) -> BatchPolicy {
         self.policy
+    }
+
+    /// The wave scheduling mode.
+    pub fn batch_mode(&self) -> BatchMode {
+        self.policy.mode
+    }
+
+    /// The bounded-queue capacity, if one was set.
+    pub fn queue_cap(&self) -> Option<usize> {
+        self.queue_cap
     }
 
     /// Shards the server will run.
@@ -171,6 +264,13 @@ impl ServePlan {
     /// Build a fresh server (clones the frozen models, so one plan can
     /// spawn several servers — e.g. the shard-count determinism tests).
     pub fn server(&self) -> Server {
-        Server::assemble(self.session, self.tenants.clone(), self.policy, self.shards)
+        Server::assemble(
+            self.session,
+            self.tenants.clone(),
+            self.policy,
+            self.shards,
+            self.queue_cap,
+            self.limits.clone(),
+        )
     }
 }

@@ -65,9 +65,18 @@ Serving:
                                            each, trained in-process (default hfp8,fp32)
                     [--checkpoint FILE]    serve a saved model instead (see train --save)
                     [--requests N] [--max-batch B] [--max-wait T] [--shards S]
-                    [--load open|closed] [--clients N] [--deadline T] [--train-steps N]
-                    [--rate R]  mean arrivals per tick for the open loop
-                    [--seed S] [--json]
+                    [--batching continuous|whole]  wave scheduling mode (default
+                                           continuous; whole = legacy run-to-completion)
+                    [--queue-cap N]        bound each tenant queue; overflow is shed
+                                           (0 = unbounded, the default)
+                    [--rate-limit R]       per-tenant token bucket, R requests/tick
+                                           sustained (0 = off); [--burst B] headroom
+                                           (default --max-batch)
+                    [--load open|bursty|closed] [--clients N] [--deadline T]
+                    [--rate R]  mean arrivals per tick (open and bursty loops)
+                    [--on-ticks T] [--off-ticks T]  bursty ON/OFF dwell means
+                                           (defaults 8, 32)
+                    [--train-steps N] [--seed S] [--json]
 
 Options:
   --seed S          RNG seed for simulated workloads (default 42)
@@ -423,9 +432,23 @@ fn main() -> Result<()> {
             let requests: usize = args.try_get("requests", 512)?;
             let deadline: u64 = args.try_get("deadline", 0)?;
             let deadline = (deadline > 0).then_some(deadline);
+            let batching =
+                minifloat_nn::serve::BatchMode::parse(&args.get_str("batching", "continuous"))?;
+            // 0 = unbounded / off, the defaults.
+            let queue_cap: usize = args.try_get("queue-cap", 0)?;
+            let rate_limit: f64 = args.try_get("rate-limit", 0.0)?;
+            let burst: u64 = args.try_get("burst", 0)?;
             // Reject out-of-range knobs *before* the tenant-training
             // loop spends seconds of GEMM work.
             minifloat_nn::api::serve::validate_knobs(max_batch, max_wait, shards)?;
+            if queue_cap > 0 {
+                minifloat_nn::api::serve::validate_queue_cap(queue_cap)?;
+            }
+            ensure!(
+                rate_limit == 0.0 || (rate_limit.is_finite() && rate_limit > 0.0),
+                "--rate-limit must be a positive requests-per-tick budget (0 = off), got \
+                 {rate_limit}"
+            );
             let session = Session::builder().seed(seed).build();
             let mut tenants: Vec<(String, InferenceModel)> = Vec::new();
             if let Some(path) = args.options.get("checkpoint") {
@@ -468,10 +491,26 @@ fn main() -> Result<()> {
                     tenants.push((name.to_string(), InferenceModel::freeze(&session, tr.model(), tr.policy())?));
                 }
             }
-            let mut builder =
-                session.server().max_batch(max_batch).max_wait_ticks(max_wait).shards(shards);
+            let mut builder = session
+                .server()
+                .max_batch(max_batch)
+                .max_wait_ticks(max_wait)
+                .shards(shards)
+                .batching(batching);
+            if queue_cap > 0 {
+                builder = builder.queue_cap(queue_cap);
+            }
+            let tenant_names: Vec<String> = tenants.iter().map(|(n, _)| n.clone()).collect();
             for (name, model) in tenants {
                 builder = builder.tenant(&name, model);
+            }
+            if rate_limit > 0.0 {
+                // One uniform bucket per tenant; --burst defaults to the
+                // batch size so one full wave of headroom is spendable.
+                let burst = if burst > 0 { burst } else { max_batch as u64 };
+                for name in &tenant_names {
+                    builder = builder.rate_limit(name, rate_limit, burst);
+                }
             }
             let plan = builder.build()?;
             let mut server = plan.server();
@@ -493,11 +532,30 @@ fn main() -> Result<()> {
                     )?;
                     sim::replay(&mut server, &trace)?
                 }
+                "bursty" => {
+                    let rate: f64 = args.try_get("rate", 4.0)?;
+                    ensure!(
+                        rate.is_finite() && rate > 0.0,
+                        "--rate must be a positive arrival rate per tick, got {rate}"
+                    );
+                    let on_ticks: f64 = args.try_get("on-ticks", 8.0)?;
+                    let off_ticks: f64 = args.try_get("off-ticks", 32.0)?;
+                    let trace = sim::Trace::bursty(
+                        seed ^ 0x7E1,
+                        &in_dims,
+                        requests,
+                        1.0 / rate,
+                        on_ticks,
+                        off_ticks,
+                        deadline,
+                    )?;
+                    sim::replay(&mut server, &trace)?
+                }
                 "closed" => {
                     let clients: usize = args.try_get("clients", 16)?;
                     sim::closed_loop(&mut server, clients, requests, 1, seed ^ 0x7E1, deadline)?
                 }
-                other => bail!("--load must be open|closed, got '{other}'"),
+                other => bail!("--load must be open|bursty|closed, got '{other}'"),
             };
             let names: Vec<String> =
                 server.tenants().iter().map(|t| t.name.clone()).collect();
@@ -518,11 +576,12 @@ fn main() -> Result<()> {
             } else {
                 println!(
                     "served {} responses over {} virtual ticks ({} tenants, {} shards, \
-                     max batch {}, max wait {})",
+                     {} batching, max batch {}, max wait {})",
                     responses.len(),
                     server.now(),
                     names.len(),
                     server.shard_count(),
+                    plan.batch_mode().name(),
                     plan.batch_policy().max_batch,
                     plan.batch_policy().max_wait_ticks
                 );

@@ -429,6 +429,12 @@ pub fn serve_stats_text(stats: &crate::serve::ServeStats, tenant_names: &[String
             .collect::<Vec<_>>()
             .join(" ")
     );
+    s += &format!(
+        "waves        : {} layer waves, mean {:.1} rows/wave, goodput {:.2} req/tick\n",
+        stats.waves,
+        stats.mean_wave_rows(),
+        stats.goodput_per_tick()
+    );
     let (p50, p95, p99) = stats.latency_percentiles();
     s += &format!(
         "latency      : p50 {p50} / p95 {p95} / p99 {p99} ticks, {} deadline misses\n",
@@ -439,6 +445,15 @@ pub fn serve_stats_text(stats: &crate::serve::ServeStats, tenant_names: &[String
         stats.queue_depth_max,
         stats.mean_queue_depth()
     );
+    if stats.shed() > 0 {
+        s += &format!(
+            "shed         : {} submissions ({} rate-limited, {} queue-full, {:.1}% of offered)\n",
+            stats.shed(),
+            stats.shed_rate_limited,
+            stats.shed_queue_full,
+            stats.shed_rate() * 100.0
+        );
+    }
     for (t, c) in stats.tenants.iter().enumerate() {
         let name = tenant_names.get(t).map(|n| n.as_str()).unwrap_or("?");
         // "100%" means exactly all-packed — a single fallback run must

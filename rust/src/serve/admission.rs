@@ -1,0 +1,218 @@
+//! Admission control: per-tenant token-bucket rate limits and typed
+//! shed decisions.
+//!
+//! Overload protection has to be **deterministic** here — the whole
+//! serving subsystem replays bit-for-bit — so the bucket runs on the
+//! virtual tick clock in pure integer arithmetic: tokens are counted
+//! in micro-tokens ([`TOKEN_SCALE`] per request) and refill is lazy,
+//! computed from the elapsed ticks at the moment of admission. A
+//! fractional per-tick rate like 0.25 requests/tick therefore
+//! accumulates *exactly* (one token every 4 ticks), with no float
+//! drift across a million-tick trace.
+//!
+//! A submission that the bucket (or a bounded queue) rejects is not an
+//! error: it is a typed [`Admission::Shed`] with a [`ShedReason`], the
+//! backpressure signal a load generator or upstream router reacts to.
+
+use crate::ensure;
+use crate::util::error::Result;
+
+/// Micro-tokens per request: the integer sub-tick resolution of the
+/// bucket. 10^6 keeps any CLI-plausible fractional rate exact enough
+/// that rounding error is below one token per ~10^6 ticks.
+pub const TOKEN_SCALE: u64 = 1_000_000;
+
+/// A validated per-tenant rate-limit configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RateLimit {
+    /// Micro-tokens added per elapsed tick.
+    pub refill_micro: u64,
+    /// Bucket capacity in micro-tokens (the burst allowance).
+    pub burst_micro: u64,
+}
+
+impl RateLimit {
+    /// Build from the user-facing knobs: `rate` requests per tick
+    /// (fractional allowed) and `burst` whole requests of headroom.
+    pub fn per_tick(rate: f64, burst: u64) -> Result<RateLimit> {
+        ensure!(
+            rate.is_finite() && rate > 0.0 && rate <= 1e6,
+            "rate limit must be a positive finite rate up to 1e6 requests/tick, got {rate} \
+             (--rate-limit)"
+        );
+        ensure!(
+            (1..=1_000_000_000).contains(&burst),
+            "rate-limit burst ({burst}) must be in 1..=1e9 requests (--burst)"
+        );
+        let refill_micro = (rate * TOKEN_SCALE as f64).round() as u64;
+        ensure!(refill_micro > 0, "rate limit {rate} rounds to zero micro-tokens per tick");
+        Ok(RateLimit { refill_micro, burst_micro: burst.saturating_mul(TOKEN_SCALE) })
+    }
+}
+
+/// A deterministic token bucket on the virtual tick clock.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenBucket {
+    micro: u64,
+    refill_micro: u64,
+    burst_micro: u64,
+    last_tick: u64,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full (the burst allowance is immediately
+    /// spendable, the standard token-bucket convention).
+    pub fn new(cfg: RateLimit) -> Self {
+        TokenBucket {
+            micro: cfg.burst_micro,
+            refill_micro: cfg.refill_micro,
+            burst_micro: cfg.burst_micro,
+            last_tick: 0,
+        }
+    }
+
+    /// Credit the ticks elapsed since the last observation. Saturating
+    /// multiply + clamp to capacity: a quiet aeon fills the bucket, it
+    /// never wraps it.
+    pub fn refill(&mut self, now: u64) {
+        if now > self.last_tick {
+            let dt = now - self.last_tick;
+            self.micro =
+                self.micro.saturating_add(dt.saturating_mul(self.refill_micro)).min(self.burst_micro);
+            self.last_tick = now;
+        }
+    }
+
+    /// Try to spend one request's worth of tokens at tick `now`.
+    pub fn try_take(&mut self, now: u64) -> bool {
+        self.refill(now);
+        if self.micro >= TOKEN_SCALE {
+            self.micro -= TOKEN_SCALE;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current balance in micro-tokens (test/report introspection).
+    pub fn micro(&self) -> u64 {
+        self.micro
+    }
+}
+
+/// Why a submission was shed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The tenant's token bucket was empty.
+    RateLimited,
+    /// The tenant's bounded queue was full.
+    QueueFull,
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ShedReason::RateLimited => "rate-limited",
+            ShedReason::QueueFull => "queue-full",
+        })
+    }
+}
+
+/// The typed outcome of [`crate::serve::Server::try_submit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Accepted; carries the assigned request id.
+    Admitted(u64),
+    /// Rejected by admission control; nothing was enqueued.
+    Shed(ShedReason),
+}
+
+impl Admission {
+    /// The request id, when admitted.
+    pub fn id(&self) -> Option<u64> {
+        match self {
+            Admission::Admitted(id) => Some(*id),
+            Admission::Shed(_) => None,
+        }
+    }
+
+    /// True when the submission was shed.
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Admission::Shed(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractional_refill_accumulates_exactly() {
+        // 0.25 requests/tick: one token every 4 ticks, exactly, with
+        // integer micro-token arithmetic — no float drift.
+        let mut b = TokenBucket::new(RateLimit::per_tick(0.25, 1).unwrap());
+        assert!(b.try_take(0), "the bucket starts full (burst 1)");
+        assert!(!b.try_take(0), "second take at the same tick must fail");
+        assert!(!b.try_take(3), "3 ticks x 0.25 = 0.75 tokens, still short");
+        assert!(b.try_take(4), "4 ticks x 0.25 = exactly 1 token");
+        assert!(!b.try_take(7));
+        assert!(b.try_take(8));
+        assert_eq!(b.micro(), 0, "exact arithmetic leaves no residue on the 4-tick grid");
+    }
+
+    #[test]
+    fn burst_caps_the_balance() {
+        let mut b = TokenBucket::new(RateLimit::per_tick(1.0, 3).unwrap());
+        // A long quiet stretch refills to the burst cap, not beyond.
+        b.refill(1_000_000);
+        assert_eq!(b.micro(), 3 * TOKEN_SCALE);
+        assert!(b.try_take(1_000_000));
+        assert!(b.try_take(1_000_000));
+        assert!(b.try_take(1_000_000));
+        assert!(!b.try_take(1_000_000), "burst of 3 spent within one tick");
+        assert!(b.try_take(1_000_001), "the per-tick refill resumes");
+    }
+
+    #[test]
+    fn one_big_jump_equals_many_small_refills() {
+        let cfg = RateLimit::per_tick(0.3, 100).unwrap();
+        let mut jump = TokenBucket::new(cfg);
+        let mut steps = TokenBucket::new(cfg);
+        jump.try_take(0);
+        steps.try_take(0);
+        jump.refill(97);
+        for t in 1..=97 {
+            steps.refill(t);
+        }
+        assert_eq!(jump, steps, "lazy refill must be path-independent");
+    }
+
+    #[test]
+    fn refill_saturates_instead_of_wrapping() {
+        let mut b = TokenBucket::new(RateLimit { refill_micro: u64::MAX, burst_micro: u64::MAX });
+        b.refill(u64::MAX);
+        assert_eq!(b.micro(), u64::MAX, "saturating math, no wrap");
+        assert!(b.try_take(u64::MAX));
+    }
+
+    #[test]
+    fn rate_limit_rejects_degenerate_knobs() {
+        assert!(RateLimit::per_tick(0.0, 1).is_err());
+        assert!(RateLimit::per_tick(-1.0, 1).is_err());
+        assert!(RateLimit::per_tick(f64::NAN, 1).is_err());
+        assert!(RateLimit::per_tick(f64::INFINITY, 1).is_err());
+        assert!(RateLimit::per_tick(1.0, 0).is_err());
+        assert!(RateLimit::per_tick(1e-9, 1).is_err(), "rounds to zero micro-tokens");
+        assert!(RateLimit::per_tick(0.5, 16).is_ok());
+    }
+
+    #[test]
+    fn admission_accessors() {
+        assert_eq!(Admission::Admitted(7).id(), Some(7));
+        assert!(!Admission::Admitted(7).is_shed());
+        assert_eq!(Admission::Shed(ShedReason::QueueFull).id(), None);
+        assert!(Admission::Shed(ShedReason::RateLimited).is_shed());
+        assert_eq!(ShedReason::RateLimited.to_string(), "rate-limited");
+        assert_eq!(ShedReason::QueueFull.to_string(), "queue-full");
+    }
+}

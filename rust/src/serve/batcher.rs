@@ -5,25 +5,43 @@
 //! *large, lane-aligned* GEMMs and wasteful at tiny ones: a single
 //! request still has to occupy [`ROW_PAD`] padded rows (the kernel's
 //! M-divisibility), so batch-of-1 throws away 7/8 of the compute. The
-//! batcher trades a bounded amount of queueing latency for full rows:
-//! a tenant's queue dispatches when it has a full `max_batch`, when its
-//! oldest request has waited `max_wait_ticks`, or when a pending
-//! deadline is already due — whichever comes first.
+//! batcher trades a bounded amount of queueing latency for full rows.
+//!
+//! Two scheduling modes ([`BatchMode`]):
+//!
+//! * **Continuous** (the default) — iteration-level batching. Every
+//!   tick is a layer-0 boundary: up to `max_batch` queued rows join a
+//!   fresh cohort immediately and advance one layer per tick alongside
+//!   the cohorts already in flight, so a request never waits for the
+//!   previous batch to drain. Wave composition is SLO-weighted: when
+//!   the queue overflows one wave, near-deadline rows go first.
+//! * **WholeBatch** (the legacy reference, kept behind this flag the
+//!   way `batch::with_lane_tier` pins the scalar tier) — a tenant's
+//!   queue dispatches when it has a full `max_batch`, when its oldest
+//!   request has waited `max_wait_ticks`, or when a pending deadline
+//!   is about to become infeasible; the dispatched batch then runs to
+//!   completion (one model's worth of layers) before the tenant can
+//!   dispatch again.
 
 use super::queue::{Request, TenantQueue};
+use crate::bail;
+use crate::util::error::Result;
 
 /// Row granularity every GEMM batch is padded to: the kernels require
 /// `M % 8 == 0` (8 compute cores), which also covers the widest SIMD
 /// lane count (8×FP8 per 64-bit word).
 pub const ROW_PAD: usize = 8;
 
-/// The virtual service quantum: a dispatched batch's results are ready
-/// this many ticks after dispatch. Uniform (independent of batch shape
-/// and shard), so completion ticks stay shard-count independent. It
-/// also makes the deadline metric meaningful: the deadline trigger
-/// dispatches early enough that every deadline of at least one quantum
-/// is met by construction, while a sub-quantum deadline is infeasible
-/// and counted as missed.
+/// The virtual service quantum: one **layer wave**. Each tick, every
+/// in-flight cohort advances exactly one layer; a cohort's results are
+/// ready `SERVICE_TICKS` after its final wave. Uniform (independent of
+/// batch shape and shard), so completion ticks stay shard-count
+/// independent. A whole model therefore costs
+/// [`pipeline_latency_ticks`] ticks end to end, which is what makes
+/// the deadline metric meaningful: the legacy dispatch trigger fires
+/// early enough that any deadline of at least one pipeline latency is
+/// met by construction, while a shorter one is infeasible and counted
+/// as missed.
 pub const SERVICE_TICKS: u64 = 1;
 
 /// Round a logical batch size up to the row-padding granularity.
@@ -31,19 +49,69 @@ pub fn pad_rows(n: usize) -> usize {
     (n + ROW_PAD - 1) / ROW_PAD * ROW_PAD
 }
 
+/// End-to-end service latency of an `layers`-deep model in ticks: one
+/// wave per layer (waves run back to back, one per tick), results
+/// ready [`SERVICE_TICKS`] after the last wave. A cohort admitted at
+/// tick `T` completes at `T + pipeline_latency_ticks(layers)`.
+pub fn pipeline_latency_ticks(layers: usize) -> u64 {
+    layers.saturating_sub(1) as u64 + SERVICE_TICKS
+}
+
+/// How the server schedules queued requests onto layer waves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Continuous (iteration-level) batching: requests join a fresh
+    /// cohort at the next layer-0 boundary — i.e. the very next tick —
+    /// and pipeline through the layers alongside the cohorts already
+    /// in flight.
+    #[default]
+    Continuous,
+    /// The legacy whole-batch policy: one cohort per tenant at a time,
+    /// dispatched by the size/wait/deadline triggers and run to
+    /// completion. Kept as the differential/timing reference.
+    WholeBatch,
+}
+
+impl BatchMode {
+    /// Parse the CLI spelling (`--batching continuous|whole`).
+    pub fn parse(s: &str) -> Result<BatchMode> {
+        match s {
+            "continuous" | "cont" => Ok(BatchMode::Continuous),
+            "whole" | "legacy" | "wholebatch" => Ok(BatchMode::WholeBatch),
+            other => bail!(
+                "unknown batching mode '{other}' (--batching takes 'continuous' or 'whole')"
+            ),
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchMode::Continuous => "continuous",
+            BatchMode::WholeBatch => "whole",
+        }
+    }
+}
+
 /// The batching knobs, shared by every tenant queue.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BatchPolicy {
     /// Largest logical batch one dispatch coalesces (>= 1).
     pub max_batch: usize,
-    /// Longest a request may wait before its queue dispatches anyway.
+    /// Longest a request may wait before its queue dispatches anyway
+    /// (WholeBatch mode; Continuous admits every tick regardless).
     /// 0 = dispatch on the first tick the request is visible.
     pub max_wait_ticks: u64,
+    /// Wave scheduling mode.
+    pub mode: BatchMode,
 }
 
 impl BatchPolicy {
-    /// Should this queue dispatch at tick `now`?
-    pub fn should_dispatch(&self, q: &TenantQueue, now: u64) -> bool {
+    /// Should this queue dispatch at tick `now`? `lead_ticks` is the
+    /// tenant's end-to-end pipeline latency
+    /// ([`pipeline_latency_ticks`]): the deadline trigger fires while
+    /// dispatching can still meet the deadline.
+    pub fn should_dispatch(&self, q: &TenantQueue, now: u64, lead_ticks: u64) -> bool {
         if q.is_empty() {
             return false;
         }
@@ -53,10 +121,10 @@ impl BatchPolicy {
         let waited =
             q.oldest_arrival().map(|a| a.saturating_add(self.max_wait_ticks) <= now).unwrap_or(false);
         // Deadline-aware: dispatch while the deadline can still be met
-        // (results land SERVICE_TICKS after dispatch).
+        // (results land `lead_ticks` after dispatch).
         let due = q
             .earliest_deadline()
-            .map(|d| d <= now.saturating_add(SERVICE_TICKS))
+            .map(|d| d <= now.saturating_add(lead_ticks))
             .unwrap_or(false);
         waited || due
     }
@@ -66,10 +134,12 @@ impl BatchPolicy {
     /// condition is re-evaluated after each batch, so one call may
     /// yield several; a FIFO remainder of *newer* arrivals whose own
     /// wait/deadline has not fired (and that no longer fills
-    /// `max_batch`) stays queued until its trigger comes up.
-    pub fn drain(&self, q: &mut TenantQueue, now: u64) -> Vec<Vec<Request>> {
+    /// `max_batch`) stays queued until its trigger comes up. (The
+    /// server itself admits at most one cohort per tenant per tick —
+    /// this loop form exists for the batcher unit tests.)
+    pub fn drain(&self, q: &mut TenantQueue, now: u64, lead_ticks: u64) -> Vec<Vec<Request>> {
         let mut out = Vec::new();
-        while self.should_dispatch(q, now) {
+        while self.should_dispatch(q, now, lead_ticks) {
             out.push(q.take(self.max_batch));
         }
         out
@@ -84,6 +154,10 @@ mod tests {
         Request { id, tenant: 0, features: vec![0.0; 8], arrival_tick: arrival, deadline_tick: deadline }
     }
 
+    fn pol(max_batch: usize, max_wait_ticks: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait_ticks, mode: BatchMode::WholeBatch }
+    }
+
     #[test]
     fn pads_to_the_kernel_row_granularity() {
         assert_eq!(pad_rows(1), 8);
@@ -93,16 +167,31 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_latency_is_one_tick_per_layer() {
+        assert_eq!(pipeline_latency_ticks(1), SERVICE_TICKS);
+        assert_eq!(pipeline_latency_ticks(3), 2 + SERVICE_TICKS);
+    }
+
+    #[test]
+    fn batch_mode_parses_the_cli_spellings() {
+        assert_eq!(BatchMode::parse("continuous").unwrap(), BatchMode::Continuous);
+        assert_eq!(BatchMode::parse("whole").unwrap(), BatchMode::WholeBatch);
+        assert_eq!(BatchMode::parse("legacy").unwrap(), BatchMode::WholeBatch);
+        assert!(BatchMode::parse("bogus").is_err());
+        assert_eq!(BatchMode::default(), BatchMode::Continuous);
+    }
+
+    #[test]
     fn dispatches_on_full_batch() {
-        let pol = BatchPolicy { max_batch: 4, max_wait_ticks: 100 };
+        let pol = pol(4, 100);
         let mut q = TenantQueue::new();
         for i in 0..3 {
             q.push(req(i, 0, None));
         }
-        assert!(!pol.should_dispatch(&q, 0), "3 < max_batch and nothing waited");
+        assert!(!pol.should_dispatch(&q, 0, 1), "3 < max_batch and nothing waited");
         q.push(req(3, 0, None));
-        assert!(pol.should_dispatch(&q, 0));
-        let batches = pol.drain(&mut q, 0);
+        assert!(pol.should_dispatch(&q, 0, 1));
+        let batches = pol.drain(&mut q, 0, 1);
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].len(), 4);
         assert!(q.is_empty());
@@ -110,48 +199,53 @@ mod tests {
 
     #[test]
     fn dispatches_on_wait_and_flushes_the_remainder() {
-        let pol = BatchPolicy { max_batch: 4, max_wait_ticks: 2 };
+        let pol = pol(4, 2);
         let mut q = TenantQueue::new();
         for i in 0..6 {
             q.push(req(i, 0, None));
         }
         // 6 pending: one full batch triggers on size, the remainder of 2
         // flushes with it once the wait clock fires.
-        assert!(pol.should_dispatch(&q, 0), "over max_batch");
-        let batches = pol.drain(&mut q, 2);
+        assert!(pol.should_dispatch(&q, 0, 1), "over max_batch");
+        let batches = pol.drain(&mut q, 2, 1);
         assert_eq!(batches.iter().map(Vec::len).collect::<Vec<_>>(), vec![4, 2]);
         assert!(q.is_empty());
 
         // A lone request dispatches only once it has waited long enough.
         q.push(req(9, 10, None));
-        assert!(!pol.should_dispatch(&q, 11));
-        assert!(pol.should_dispatch(&q, 12));
-        let batches = pol.drain(&mut q, 12);
+        assert!(!pol.should_dispatch(&q, 11, 1));
+        assert!(pol.should_dispatch(&q, 12, 1));
+        let batches = pol.drain(&mut q, 12, 1);
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0][0].id, 9);
     }
 
     #[test]
-    fn dispatches_one_service_quantum_before_the_deadline() {
-        let pol = BatchPolicy { max_batch: 64, max_wait_ticks: 1000 };
+    fn dispatches_one_pipeline_latency_before_the_deadline() {
+        let pol = pol(64, 1000);
         let mut q = TenantQueue::new();
         q.push(req(0, 0, Some(5)));
-        // Results land SERVICE_TICKS after dispatch, so the trigger
-        // fires at tick 4: dispatch then, complete at 5 — met exactly.
-        assert!(!pol.should_dispatch(&q, 3), "deadline still comfortably ahead");
-        assert!(pol.should_dispatch(&q, 4), "last tick that can meet the deadline");
-        assert!(pol.should_dispatch(&q, 5), "overdue still dispatches (counted as a miss)");
+        // Results land `lead` ticks after dispatch. With a 3-layer
+        // pipeline (lead 3) the trigger fires at tick 2: dispatch then,
+        // complete at 5 — met exactly.
+        assert!(!pol.should_dispatch(&q, 1, 3), "deadline still comfortably ahead");
+        assert!(pol.should_dispatch(&q, 2, 3), "last tick that can meet the deadline");
+        assert!(pol.should_dispatch(&q, 5, 3), "overdue still dispatches (counted as a miss)");
+        // A single-layer model (lead = SERVICE_TICKS) keeps the old
+        // one-quantum trigger.
+        assert!(!pol.should_dispatch(&q, 3, 1));
+        assert!(pol.should_dispatch(&q, 4, 1));
     }
 
     #[test]
     fn fifo_order_is_preserved() {
-        let pol = BatchPolicy { max_batch: 2, max_wait_ticks: 0 };
+        let pol = pol(2, 0);
         let mut q = TenantQueue::new();
         for i in 0..5 {
             q.push(req(i, 0, None));
         }
         let ids: Vec<u64> =
-            pol.drain(&mut q, 0).into_iter().flatten().map(|r| r.id).collect();
+            pol.drain(&mut q, 0, 1).into_iter().flatten().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1, 2, 3, 4]);
     }
 }

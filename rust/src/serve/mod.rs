@@ -5,12 +5,18 @@
 //! The cluster exists to make large, lane-aligned low-precision GEMMs
 //! cheap; inference traffic arrives as many small, latency-bound
 //! requests. This subsystem is the standard bridge between the two:
-//! **dynamic request batching**. Requests park in per-tenant queues,
-//! a batcher coalesces them into lane-padded batches under
-//! `max_batch`/`max_wait_ticks` knobs, and a shard pool runs each batch
-//! as one forward pass over a frozen model whose weights were packed
-//! *once* into the GEMM kernels' preferred stream layout — so every
-//! request rides the zero-repack fast path the engine is built around.
+//! **continuous (iteration-level) batching**. Requests pass admission
+//! control (per-tenant token buckets, bounded queues — overflow is a
+//! typed shed, not an unbounded backlog), park briefly in per-tenant
+//! queues, and join a lane-padded **cohort** at the next layer-0
+//! boundary; every tick, each in-flight cohort advances one layer
+//! (one **wave**) over the shard pool, so new requests pipeline
+//! alongside running batches instead of waiting for them to drain.
+//! The frozen models' weights were packed *once* into the GEMM
+//! kernels' preferred stream layout — so every request rides the
+//! zero-repack fast path the engine is built around. The legacy
+//! whole-batch run-to-completion policy stays available behind
+//! [`BatchMode::WholeBatch`] as the differential/timing reference.
 //!
 //! Everything is **offline and deterministic**: time is virtual
 //! (ticks), traffic is seeded ([`sim`]), and per-request outputs are
@@ -23,12 +29,13 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`model`]   | [`InferenceModel`]: frozen packed weights + versioned checkpoints |
-//! | [`queue`]   | [`Request`]/[`Response`] + per-tenant deadline-aware queues |
-//! | [`batcher`] | dynamic batching policy (`max_batch`, `max_wait_ticks`, row padding) |
-//! | [`worker`]  | [`worker::Shard`] pool (persistent per-tenant plan instances + reused batch buffers) + the [`Server`] tick loop |
-//! | [`stats`]   | [`ServeStats`]: throughput, batch histogram, p50/p95/p99 ticks |
-//! | [`sim`]     | seeded open/closed-loop load generation + [`sim::replay`] |
+//! | [`model`]   | [`InferenceModel`]: frozen packed weights + versioned checkpoints, per-layer wave forward |
+//! | [`queue`]   | [`Request`]/[`Response`] + per-tenant deadline-aware queues (SLO-weighted take) |
+//! | [`batcher`] | scheduling modes ([`BatchMode`]) + knobs (`max_batch`, `max_wait_ticks`, row padding) |
+//! | [`admission`] | token buckets, [`Admission`]/[`ShedReason`] backpressure types |
+//! | [`worker`]  | cohort/wave scheduler + [`worker::Shard`] pool (persistent per-tenant plan instances) + the [`Server`] tick loop |
+//! | [`stats`]   | [`ServeStats`]: throughput, goodput, wave occupancy, shed counts, p50/p95/p99 ticks |
+//! | [`sim`]     | seeded open/closed-loop + bursty load generation + [`sim::replay`] |
 //!
 //! ## Layering
 //!
@@ -65,6 +72,7 @@
 //! # }
 //! ```
 
+pub mod admission;
 pub mod batcher;
 pub mod model;
 pub mod queue;
@@ -75,7 +83,10 @@ pub mod worker;
 #[cfg(test)]
 mod tests;
 
-pub use batcher::{pad_rows, BatchPolicy, ROW_PAD, SERVICE_TICKS};
+pub use admission::{Admission, RateLimit, ShedReason, TokenBucket};
+pub use batcher::{
+    pad_rows, pipeline_latency_ticks, BatchMode, BatchPolicy, ROW_PAD, SERVICE_TICKS,
+};
 pub use model::{FrozenLayer, InferenceModel};
 pub use queue::{Request, Response, TenantQueue};
 pub use sim::{Trace, TraceEvent};

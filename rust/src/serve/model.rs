@@ -188,11 +188,51 @@ impl InferenceModel {
         scratch: &mut Vec<f64>,
         xt_pool: &mut Vec<u64>,
     ) -> Result<()> {
+        let n = self.layers.len();
+        // `scratch` carries the activations entering the next layer.
+        scratch.clear();
+        scratch.extend_from_slice(x);
+        for i in 0..n {
+            self.forward_layer_into(ctx, i, scratch, rows, out, xt_pool)?;
+            std::mem::swap(scratch, out);
+        }
+        // The loop parks the final activations in `scratch`.
+        std::mem::swap(scratch, out);
+        Ok(())
+    }
+
+    /// Advance a padded batch through **one** layer: the wave quantum
+    /// of the continuous batcher. `x` is `rows × layers[i].in_dim`
+    /// row-major activations; `out` receives `rows × layers[i].out_dim`
+    /// (with the inter-layer activation applied on every layer but the
+    /// last, exactly as the whole-model forward does). Chaining the
+    /// waves layer by layer is bit-identical to [`forward_into`] by
+    /// construction — same [`crate::nn::layer::linear_forward_into`]
+    /// call, same activation site — which is what lets the continuous
+    /// scheduler interleave cohorts at different layers without
+    /// touching the numerics.
+    ///
+    /// [`forward_into`]: InferenceModel::forward_into
+    pub fn forward_layer_into(
+        &self,
+        ctx: &mut GemmCtx,
+        layer: usize,
+        x: &[f64],
+        rows: usize,
+        out: &mut Vec<f64>,
+        xt_pool: &mut Vec<u64>,
+    ) -> Result<()> {
         ensure!(
-            x.len() == rows * self.in_dim(),
-            "inference input must be {rows}x{} = {} values, got {}",
-            self.in_dim(),
-            rows * self.in_dim(),
+            layer < self.layers.len(),
+            "layer index {layer} out of range (model has {} layers)",
+            self.layers.len()
+        );
+        let l = &self.layers[layer];
+        ensure!(
+            x.len() == rows * l.in_dim,
+            "layer {layer} input must be {rows}x{} = {} values, got {}",
+            l.in_dim,
+            rows * l.in_dim,
             x.len()
         );
         ensure!(
@@ -201,31 +241,22 @@ impl InferenceModel {
             ctx.acc.name(),
             self.policy.acc.name()
         );
-        let n = self.layers.len();
-        // `scratch` carries the activations entering the next layer.
-        scratch.clear();
-        scratch.extend_from_slice(x);
-        for (i, l) in self.layers.iter().enumerate() {
-            let xt = crate::nn::layer::linear_forward_into(
-                ctx,
-                &self.policy,
-                &l.w_packed,
-                &l.bias,
-                scratch,
-                rows,
-                l.in_dim,
-                l.out_dim,
-                std::mem::take(xt_pool),
-                out,
-            )?;
-            *xt_pool = xt.into_words();
-            if i + 1 < n {
-                self.act.apply_in_place(out);
-            }
-            std::mem::swap(scratch, out);
+        let xt = crate::nn::layer::linear_forward_into(
+            ctx,
+            &self.policy,
+            &l.w_packed,
+            &l.bias,
+            x,
+            rows,
+            l.in_dim,
+            l.out_dim,
+            std::mem::take(xt_pool),
+            out,
+        )?;
+        *xt_pool = xt.into_words();
+        if layer + 1 < self.layers.len() {
+            self.act.apply_in_place(out);
         }
-        // The loop parks the final activations in `scratch`.
-        std::mem::swap(scratch, out);
         Ok(())
     }
 

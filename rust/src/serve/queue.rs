@@ -39,8 +39,10 @@ pub struct Response {
     pub pred: usize,
     /// Tick the request arrived.
     pub arrival_tick: u64,
-    /// Tick the results are ready: the dispatch tick plus the uniform
-    /// service quantum ([`crate::serve::batcher::SERVICE_TICKS`]).
+    /// Tick the results are ready: the cohort's final layer wave plus
+    /// the uniform service quantum
+    /// ([`crate::serve::batcher::SERVICE_TICKS`]) — i.e. the admission
+    /// tick plus [`crate::serve::batcher::pipeline_latency_ticks`].
     pub completion_tick: u64,
     /// Logical batch size (requests coalesced, before lane padding).
     pub batch_size: usize,
@@ -97,5 +99,70 @@ impl TenantQueue {
     pub fn take(&mut self, n: usize) -> Vec<Request> {
         let n = n.min(self.pending.len());
         self.pending.drain(..n).collect()
+    }
+
+    /// Dequeue up to `n` requests, SLO-weighted: when more than `n`
+    /// are pending, the `n` most urgent — nearest deadline first,
+    /// deadline-free rows last, request id breaking ties — are
+    /// selected; the selected rows are returned in FIFO (id) order so
+    /// the batch row layout stays deterministic, and the rest keep
+    /// their queue order. When everything fits in one wave this is
+    /// exactly [`TenantQueue::take`].
+    pub fn take_prioritized(&mut self, n: usize) -> Vec<Request> {
+        if self.pending.len() <= n {
+            return self.take(n);
+        }
+        let mut order: Vec<usize> = (0..self.pending.len()).collect();
+        order.sort_by_key(|&i| {
+            (self.pending[i].deadline_tick.unwrap_or(u64::MAX), self.pending[i].id)
+        });
+        let mut pick = vec![false; self.pending.len()];
+        for &i in order.iter().take(n) {
+            pick[i] = true;
+        }
+        let mut taken = Vec::with_capacity(n);
+        let mut rest = VecDeque::with_capacity(self.pending.len() - n);
+        for (i, r) in self.pending.drain(..).enumerate() {
+            if pick[i] {
+                taken.push(r);
+            } else {
+                rest.push_back(r);
+            }
+        }
+        self.pending = rest;
+        taken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, deadline: Option<u64>) -> Request {
+        Request { id, tenant: 0, features: vec![], arrival_tick: 0, deadline_tick: deadline }
+    }
+
+    #[test]
+    fn prioritized_take_prefers_near_deadlines() {
+        let mut q = TenantQueue::new();
+        q.push(req(0, None)); // deadline-free: least urgent
+        q.push(req(1, Some(10)));
+        q.push(req(2, Some(5))); // most urgent
+        q.push(req(3, Some(10))); // ties with id 1, loses on id
+        let wave = q.take_prioritized(2);
+        // Urgency picks {2, 1}; the wave itself is in id (FIFO) order.
+        assert_eq!(wave.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        // The remainder keeps queue order.
+        assert_eq!(q.take(10).iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 3]);
+    }
+
+    #[test]
+    fn prioritized_take_degenerates_to_fifo_when_everything_fits() {
+        let mut q = TenantQueue::new();
+        q.push(req(0, None));
+        q.push(req(1, Some(3)));
+        let wave = q.take_prioritized(8);
+        assert_eq!(wave.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(q.is_empty());
     }
 }

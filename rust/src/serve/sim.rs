@@ -7,11 +7,16 @@
 //! twice, or on a different shard count, yields bit-identical
 //! responses (the determinism tests pin exactly that).
 //!
-//! Two load models:
+//! Three load models:
 //!
 //! * **open loop** ([`Trace::open_loop`]) — arrivals are an exponential
 //!   (Poisson-process) stream that does not react to the server:
 //!   the back-pressure-free regime where queues and batches build.
+//! * **bursty** ([`Trace::bursty`]) — an on/off Markov-modulated
+//!   Poisson process: exponential dwell times alternate an ON phase
+//!   (Poisson arrivals at the given rate) with a silent OFF phase.
+//!   The offered load arrives in bursts far above the mean rate —
+//!   exactly the regime admission control and shed paths exist for.
 //! * **closed loop** ([`closed_loop`]) — a fixed population of clients,
 //!   each submitting its next request a think-time after its previous
 //!   response: arrival rate self-throttles to the server's throughput.
@@ -92,6 +97,75 @@ impl Trace {
         Ok(Trace { events })
     }
 
+    /// Generate a bursty trace: an on/off Markov-modulated Poisson
+    /// process. During an ON phase (mean dwell `mean_on_ticks`),
+    /// arrivals are exponential with mean gap `mean_gap_ticks`; an OFF
+    /// phase (mean dwell `mean_off_ticks`) is silent — the arrival
+    /// clock pauses and resumes when the next ON phase starts. Tenants
+    /// are drawn uniformly, `in_dims[t]` is tenant `t`'s feature
+    /// width. Deterministic in every argument, ticks non-decreasing.
+    pub fn bursty(
+        seed: u64,
+        in_dims: &[usize],
+        n: usize,
+        mean_gap_ticks: f64,
+        mean_on_ticks: f64,
+        mean_off_ticks: f64,
+        deadline_in: Option<u64>,
+    ) -> Result<Trace> {
+        ensure!(!in_dims.is_empty(), "a trace needs at least one tenant");
+        for (name, v, positive) in [
+            ("mean inter-arrival gap", mean_gap_ticks, false),
+            ("mean ON dwell", mean_on_ticks, true),
+            ("mean OFF dwell", mean_off_ticks, false),
+        ] {
+            ensure!(
+                v.is_finite() && v <= 1e12 && (if positive { v > 0.0 } else { v >= 0.0 }),
+                "{name} must be finite, {} and at most 1e12 ticks, got {v}",
+                if positive { "positive" } else { "non-negative" }
+            );
+        }
+        for (t, &d) in in_dims.iter().enumerate() {
+            ensure!(d >= 4, "tenant {t} feature width ({d}) must be at least 4 (the embedding)");
+        }
+        let mut rng = Rng::new(seed);
+        fn exp(rng: &mut Rng, mean: f64) -> f64 {
+            -(1.0 - rng.uniform()).ln() * mean
+        }
+        // Continuous virtual time `t`; `on_left` is the remainder of
+        // the current ON dwell. An arrival gap that outlives the ON
+        // phase carries its remainder across the OFF dwell (the
+        // arrival clock pauses while OFF — the standard MMPP).
+        let mut t = 0f64;
+        let mut on_left = exp(&mut rng, mean_on_ticks);
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut gap = exp(&mut rng, mean_gap_ticks);
+            // `>=` so an exhausted ON budget (on_left == 0) always
+            // rolls into the next dwell pair: forward progress even at
+            // the boundary, since every pass consumes RNG draws and
+            // adds the OFF dwell.
+            while gap >= on_left {
+                gap -= on_left;
+                t += on_left + exp(&mut rng, mean_off_ticks);
+                on_left = exp(&mut rng, mean_on_ticks);
+            }
+            t += gap;
+            on_left -= gap;
+            // The f64→u64 cast saturates, so extreme dwell means cannot
+            // wrap the clock into a non-monotonic trace.
+            let tick = t as u64;
+            let tenant = rng.below(in_dims.len() as u64) as usize;
+            events.push(TraceEvent {
+                tick,
+                tenant,
+                features: sample_features(&mut rng, in_dims[tenant]),
+                deadline_in,
+            });
+        }
+        Ok(Trace { events })
+    }
+
     /// Scheduled arrivals.
     pub fn len(&self) -> usize {
         self.events.len()
@@ -106,7 +180,11 @@ impl Trace {
 /// Replay a trace against a server from its current tick: submit each
 /// event when its tick comes up, tick through quiet gaps, and drain the
 /// tail. Returns all responses in completion order (sorted by id within
-/// each tick).
+/// each tick). Submissions go through admission control
+/// ([`Server::try_submit`]): a shed event is counted in the server's
+/// stats and simply produces no response — exactly what an open-loop
+/// client would observe — so a rate-limited or queue-capped replay
+/// stays deterministic instead of erroring.
 pub fn replay(server: &mut Server, trace: &Trace) -> Result<Vec<Response>> {
     let mut responses = Vec::new();
     let base = server.now();
@@ -119,7 +197,7 @@ pub fn replay(server: &mut Server, trace: &Trace) -> Result<Vec<Response>> {
         let now = server.now();
         while idx < trace.events.len() && base.saturating_add(trace.events[idx].tick) <= now {
             let e = &trace.events[idx];
-            server.submit(e.tenant, e.features.clone(), e.deadline_in)?;
+            server.try_submit(e.tenant, e.features.clone(), e.deadline_in)?;
             idx += 1;
         }
         responses.append(&mut server.tick()?);
@@ -227,6 +305,50 @@ mod tests {
         assert!(Trace::open_loop(1, &[2], 10, 1.0, None).is_err());
         assert!(Trace::open_loop(1, &[8], 10, f64::NAN, None).is_err());
         assert!(Trace::open_loop(1, &[8], 10, -1.0, None).is_err());
+    }
+
+    #[test]
+    fn bursty_traces_are_deterministic_and_ordered() {
+        let a = Trace::bursty(5, &[8, 8], 300, 0.25, 8.0, 64.0, Some(16)).unwrap();
+        let b = Trace::bursty(5, &[8, 8], 300, 0.25, 8.0, 64.0, Some(16)).unwrap();
+        assert_eq!(a, b, "same seed must generate the identical trace");
+        assert_eq!(a.len(), 300);
+        assert!(a.events.windows(2).all(|w| w[0].tick <= w[1].tick), "ticks must be sorted");
+        assert!(a.events.iter().all(|e| e.features.len() == 8 && e.tenant < 2));
+        let c = Trace::bursty(6, &[8, 8], 300, 0.25, 8.0, 64.0, Some(16)).unwrap();
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn bursty_traces_actually_burst() {
+        // ON bursts at 4 req/tick, mean OFF silence 8x the ON dwell:
+        // inter-arrival gaps must be bimodal — mostly tiny (intra-burst)
+        // with a heavy tail of long OFF silences. Deterministic given
+        // the seed, so concrete thresholds are safe to assert.
+        let t = Trace::bursty(11, &[8], 400, 0.25, 8.0, 64.0, None).unwrap();
+        let gaps: Vec<u64> =
+            t.events.windows(2).map(|w| w[1].tick - w[0].tick).collect();
+        let long = gaps.iter().filter(|&&g| g >= 16).count();
+        let tiny = gaps.iter().filter(|&&g| g <= 1).count();
+        assert!(long >= 5, "expected OFF-phase silences >= 16 ticks, saw {long}");
+        assert!(tiny >= gaps.len() / 2, "expected mostly intra-burst arrivals, saw {tiny}");
+        // The same knobs with no OFF phase degenerate toward plain
+        // Poisson: long silences should all but vanish.
+        let p = Trace::bursty(11, &[8], 400, 0.25, 8.0, 0.0, None).unwrap();
+        let plong =
+            p.events.windows(2).filter(|w| w[1].tick - w[0].tick >= 16).count();
+        assert!(plong < long / 2, "no-OFF trace still bursting ({plong} vs {long})");
+    }
+
+    #[test]
+    fn bursty_rejects_degenerate_knobs() {
+        assert!(Trace::bursty(1, &[], 10, 1.0, 8.0, 8.0, None).is_err());
+        assert!(Trace::bursty(1, &[2], 10, 1.0, 8.0, 8.0, None).is_err());
+        assert!(Trace::bursty(1, &[8], 10, f64::NAN, 8.0, 8.0, None).is_err());
+        assert!(Trace::bursty(1, &[8], 10, 1.0, 0.0, 8.0, None).is_err(), "ON dwell must be > 0");
+        assert!(Trace::bursty(1, &[8], 10, 1.0, 8.0, -1.0, None).is_err());
+        assert!(Trace::bursty(1, &[8], 10, 1.0, 1e13, 8.0, None).is_err());
+        assert!(Trace::bursty(1, &[8], 10, 1.0, 8.0, 0.0, None).is_ok(), "OFF dwell 0 is Poisson");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use std::collections::BTreeMap;
 
+use super::admission::ShedReason;
 use super::queue::Response;
 
 /// Per-tenant GEMM routing counters (mirrors
@@ -40,6 +41,14 @@ pub struct ServeStats {
     pub queue_depth_max: usize,
     /// Responses whose deadline had already passed at completion.
     pub deadline_misses: u64,
+    /// Layer waves executed (one per in-flight cohort per tick).
+    pub waves: u64,
+    /// Logical rows advanced, summed over waves (occupancy numerator).
+    pub wave_rows: u64,
+    /// Submissions shed by an empty token bucket.
+    pub shed_rate_limited: u64,
+    /// Submissions shed by a full bounded queue.
+    pub shed_queue_full: u64,
     /// Per-tenant GEMM routing counters.
     pub tenants: Vec<TenantCounters>,
     queue_depth_sum: u64,
@@ -81,6 +90,29 @@ impl ServeStats {
         *self.batch_hist.entry(size).or_insert(0) += 1;
         crate::obs_count!("serve.batches");
         crate::obs_hist!("serve.batch_size", size);
+    }
+
+    /// Record one layer wave advancing `rows` logical rows. Dual-written
+    /// to obs at the same choke point, like [`ServeStats::record_batch`].
+    pub(crate) fn record_wave(&mut self, rows: usize) {
+        self.waves += 1;
+        self.wave_rows += rows as u64;
+        crate::obs_count!("serve.waves");
+        crate::obs_hist!("serve.wave_rows", rows);
+    }
+
+    /// Record one shed submission.
+    pub(crate) fn record_shed(&mut self, reason: ShedReason) {
+        match reason {
+            ShedReason::RateLimited => {
+                self.shed_rate_limited += 1;
+                crate::obs_count!("serve.shed.rate_limited");
+            }
+            ShedReason::QueueFull => {
+                self.shed_queue_full += 1;
+                crate::obs_count!("serve.shed.queue_full");
+            }
+        }
     }
 
     /// Record one completed response.
@@ -151,6 +183,35 @@ impl ServeStats {
         self.completed as f64 / self.ticks.max(1) as f64
     }
 
+    /// Submissions shed, all reasons.
+    pub fn shed(&self) -> u64 {
+        self.shed_rate_limited + self.shed_queue_full
+    }
+
+    /// Shed fraction of everything offered (shed + admitted).
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.shed() + self.submitted;
+        self.shed() as f64 / offered.max(1) as f64
+    }
+
+    /// Responses that completed *within* their deadline (deadline-free
+    /// responses count as good).
+    pub fn goodput(&self) -> u64 {
+        self.completed - self.deadline_misses
+    }
+
+    /// Within-deadline completions per virtual tick — the metric the
+    /// serve bench gates continuous vs whole-batch scheduling on.
+    pub fn goodput_per_tick(&self) -> f64 {
+        self.goodput() as f64 / self.ticks.max(1) as f64
+    }
+
+    /// Mean logical rows per wave (lane-occupancy proxy: divide by the
+    /// padded wave width for a utilization fraction).
+    pub fn mean_wave_rows(&self) -> f64 {
+        self.wave_rows as f64 / self.waves.max(1) as f64
+    }
+
     /// Total GEMM plans executed across tenants.
     pub fn gemm_calls(&self) -> u64 {
         self.tenants.iter().map(|t| t.gemm_calls).sum()
@@ -174,6 +235,8 @@ impl ServeStats {
              \"mean_batch\":{:.3},\"throughput_per_tick\":{:.4},\
              \"p50_ticks\":{p50},\"p95_ticks\":{p95},\"p99_ticks\":{p99},\
              \"queue_depth_max\":{},\"deadline_misses\":{},\
+             \"waves\":{},\"mean_wave_rows\":{:.2},\"goodput_per_tick\":{:.4},\
+             \"shed_rate_limited\":{},\"shed_queue_full\":{},\
              \"gemm_calls\":{},\"packed_runs\":{},\"batch_hist\":{{{}}}}}",
             self.submitted,
             self.completed,
@@ -183,6 +246,11 @@ impl ServeStats {
             self.throughput_per_tick(),
             self.queue_depth_max,
             self.deadline_misses,
+            self.waves,
+            self.mean_wave_rows(),
+            self.goodput_per_tick(),
+            self.shed_rate_limited,
+            self.shed_queue_full,
             self.gemm_calls(),
             self.packed_runs(),
             hist.join(",")
@@ -245,5 +313,31 @@ mod tests {
         assert_eq!(s.mean_queue_depth(), 5.0);
         // JSON is stable: BTreeMap orders the histogram keys.
         assert!(s.summary_json().contains("\"batch_hist\":{\"1\":1,\"4\":2}"));
+    }
+
+    #[test]
+    fn waves_sheds_and_goodput_accumulate() {
+        let mut s = ServeStats::new(1);
+        s.record_wave(8);
+        s.record_wave(4);
+        s.record_shed(ShedReason::RateLimited);
+        s.record_shed(ShedReason::RateLimited);
+        s.record_shed(ShedReason::QueueFull);
+        s.submitted = 7;
+        s.ticks = 4;
+        s.record_response(&resp(0, 3, false));
+        s.record_response(&resp(0, 9, true));
+        assert_eq!(s.waves, 2);
+        assert_eq!(s.mean_wave_rows(), 6.0);
+        assert_eq!(s.shed(), 3);
+        assert_eq!(s.shed_rate_limited, 2);
+        assert_eq!(s.shed_queue_full, 1);
+        assert_eq!(s.shed_rate(), 0.3);
+        assert_eq!(s.goodput(), 1, "the missed-deadline response is not goodput");
+        assert_eq!(s.goodput_per_tick(), 0.25);
+        let json = s.summary_json();
+        assert!(json.contains("\"waves\":2"), "{json}");
+        assert!(json.contains("\"shed_rate_limited\":2,\"shed_queue_full\":1"), "{json}");
+        assert!(json.contains("\"goodput_per_tick\":0.2500"), "{json}");
     }
 }

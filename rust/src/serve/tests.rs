@@ -230,33 +230,93 @@ fn per_request_outputs_are_independent_of_batch_composition() {
 }
 
 #[test]
-fn batching_coalesces_and_pads() {
+fn whole_batch_coalesces_pads_and_runs_to_completion() {
+    // The legacy reference: one cohort at a time, occupying the
+    // pipeline for a full latency (3 waves for the 3-layer MLP).
     let session = session();
     let model = frozen(&session, PrecisionPolicy::hfp8(), 2);
-    let plan =
-        session.server().tenant("t", model).max_batch(8).max_wait_ticks(2).build().expect("plan");
+    let plan = session
+        .server()
+        .tenant("t", model)
+        .max_batch(8)
+        .max_wait_ticks(2)
+        .batching(super::batcher::BatchMode::WholeBatch)
+        .build()
+        .expect("plan");
     let mut server = plan.server();
     let mut rng = Rng::new(1);
-    // 19 requests at tick 0: two full batches of 8 dispatch immediately,
-    // the remainder of 3 waits for the clock.
+    // 19 requests at tick 0: the first batch of 8 dispatches
+    // immediately (size trigger); the rest wait for the pipeline.
     for _ in 0..19 {
         server.submit(0, sim::sample_features(&mut rng, 8), None).expect("submit");
     }
-    let first = server.tick().expect("tick");
-    assert_eq!(first.len(), 16);
-    // Dispatched at tick 0, ready one service quantum later.
-    assert!(first.iter().all(|r| r.batch_size == 8 && r.completion_tick == 1));
-    assert_eq!(server.pending(), 3);
+    assert!(server.tick().expect("tick 0").is_empty(), "wave 1 of 3 in flight");
+    assert!(server.tick().expect("tick 1").is_empty(), "wave 2 of 3 in flight");
+    let first = server.tick().expect("tick 2");
+    assert_eq!(first.len(), 8);
+    // Dispatched at tick 0, three waves, ready one quantum after the last.
+    assert!(first.iter().all(|r| r.batch_size == 8 && r.completion_tick == 3));
+    assert_eq!(server.pending(), 11);
     let rest = server.drain().expect("drain");
-    assert_eq!(rest.len(), 3);
-    assert!(rest.iter().all(|r| r.batch_size == 3 && r.completion_tick == 3));
+    assert_eq!(rest.len(), 11);
+    // Second full batch dispatches at tick 3 (pipeline empty again),
+    // the remainder of 3 at tick 6 (wait trigger: 6 - 0 >= 2).
+    assert!(rest[..8].iter().all(|r| r.batch_size == 8 && r.completion_tick == 6));
+    assert!(rest[8..].iter().all(|r| r.batch_size == 3 && r.completion_tick == 9));
     let stats = server.stats();
     assert_eq!(stats.batch_hist.get(&8), Some(&2));
     assert_eq!(stats.batch_hist.get(&3), Some(&1));
     assert_eq!(stats.completed, 19);
     assert_eq!(stats.queue_depth_max, 19);
-    assert_eq!(stats.p50(), 1);
-    assert_eq!(stats.latency_percentile(1.0), 3);
+    assert_eq!(stats.waves, 9, "three cohorts x three layers");
+    assert_eq!(stats.p50(), 6);
+    assert_eq!(stats.latency_percentile(1.0), 9);
+}
+
+#[test]
+fn continuous_pipelines_cohorts_instead_of_draining() {
+    // The tentpole's timing win in miniature: a late request joins at
+    // the next layer-0 boundary and pipelines alongside the running
+    // cohort (completing at arrival + pipeline latency), instead of
+    // waiting for the whole previous batch to drain.
+    use super::batcher::BatchMode;
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 2);
+    let mut rng = Rng::new(6);
+    let f0 = sim::sample_features(&mut rng, 8);
+    let f1 = sim::sample_features(&mut rng, 8);
+    let run = |mode: BatchMode| {
+        let plan = session
+            .server()
+            .tenant("t", model.clone())
+            .max_batch(8)
+            .max_wait_ticks(2)
+            .batching(mode)
+            .build()
+            .expect("plan");
+        let mut server = plan.server();
+        server.submit(0, f0.clone(), None).expect("submit r0");
+        // One tick elapses before the second request arrives.
+        assert!(server.tick().expect("tick 0").is_empty());
+        server.submit(0, f1.clone(), None).expect("submit r1");
+        let mut out = server.drain().expect("drain");
+        out.sort_by_key(|r| r.id);
+        assert_eq!(out.len(), 2);
+        (out[0].completion_tick, out[1].completion_tick, bits(&out[0].logits), bits(&out[1].logits))
+    };
+    let (c0, c1, cl0, cl1) = run(BatchMode::Continuous);
+    let (w0, w1, wl0, wl1) = run(BatchMode::WholeBatch);
+    // r0 admitted at tick 0 either way: 3 waves, done at tick 3.
+    assert_eq!(c0, 3);
+    assert_eq!(w0, 3);
+    // r1 (arrival tick 1): continuous admits it at tick 1 -> done at 4;
+    // whole-batch waits for the pipeline to drain (tick 3) plus the
+    // wait trigger (1 + max_wait = 3) -> done at 6.
+    assert_eq!(c1, 4, "continuous joins the next layer-0 boundary");
+    assert_eq!(w1, 6, "legacy runs the first batch to completion");
+    // Per-row independence: identical logits under either schedule.
+    assert_eq!(cl0, wl0);
+    assert_eq!(cl1, wl1);
 }
 
 #[test]
@@ -268,28 +328,31 @@ fn feasible_deadlines_are_met_and_infeasible_ones_are_counted_missed() {
         .tenant("t", model)
         .max_batch(64)
         .max_wait_ticks(100)
+        .batching(super::batcher::BatchMode::WholeBatch)
         .build()
         .expect("plan");
     let mut server = plan.server();
     let mut rng = Rng::new(2);
-    // Due at tick 3: the deadline trigger dispatches one service
-    // quantum early (tick 2), so the result lands exactly on time —
-    // long before the 100-tick wait clock.
-    server.submit(0, sim::sample_features(&mut rng, 8), Some(3)).expect("submit");
+    // Due at tick 5: the deadline trigger dispatches one pipeline
+    // latency (3 ticks for the 3-layer MLP) early — tick 2 — so the
+    // result lands exactly on time, long before the 100-tick wait clock.
+    server.submit(0, sim::sample_features(&mut rng, 8), Some(5)).expect("submit");
     assert!(server.tick().expect("tick 0").is_empty());
     assert!(server.tick().expect("tick 1").is_empty());
-    let due = server.tick().expect("tick 2");
+    assert!(server.tick().expect("tick 2").is_empty(), "dispatched, wave 1 of 3");
+    assert!(server.tick().expect("tick 3").is_empty(), "wave 2 of 3");
+    let due = server.tick().expect("tick 4");
     assert_eq!(due.len(), 1);
-    assert_eq!(due[0].completion_tick, 3);
+    assert_eq!(due[0].completion_tick, 5);
     assert!(!due[0].deadline_missed, "a feasible deadline is met by construction");
     assert_eq!(server.stats().deadline_misses, 0);
-    // A sub-quantum deadline (due the instant it arrives) is infeasible:
-    // it dispatches immediately but completes one quantum later — the
+    // A sub-latency deadline (due the instant it arrives) is infeasible:
+    // it dispatches immediately but needs a full pipeline latency — the
     // miss counter must actually count it.
     server.submit(0, sim::sample_features(&mut rng, 8), Some(0)).expect("submit");
-    let late = server.tick().expect("tick 3");
+    let late = server.drain().expect("drain");
     assert_eq!(late.len(), 1);
-    assert!(late[0].deadline_missed, "sub-quantum deadline must be recorded as missed");
+    assert!(late[0].deadline_missed, "sub-latency deadline must be recorded as missed");
     assert_eq!(server.stats().deadline_misses, 1);
 }
 
@@ -300,8 +363,14 @@ fn replay_fast_forwards_sparse_traces() {
     // span and dispatch timing stays exactly per-policy.
     let session = session();
     let model = frozen(&session, PrecisionPolicy::hfp8(), 2);
-    let plan =
-        session.server().tenant("t", model).max_batch(4).max_wait_ticks(1).build().expect("plan");
+    let plan = session
+        .server()
+        .tenant("t", model)
+        .max_batch(4)
+        .max_wait_ticks(1)
+        .batching(super::batcher::BatchMode::WholeBatch)
+        .build()
+        .expect("plan");
     let mut server = plan.server();
     let mut rng = Rng::new(8);
     let events = [0u64, 10_000, 20_000]
@@ -317,9 +386,10 @@ fn replay_fast_forwards_sparse_traces() {
     let responses = sim::replay(&mut server, &trace).expect("replay");
     assert_eq!(responses.len(), 3);
     let ticks: Vec<u64> = responses.iter().map(|r| r.completion_tick).collect();
-    // Dispatch after exactly max_wait_ticks, ready one quantum later.
-    assert_eq!(ticks, vec![2, 10_002, 20_002]);
-    assert!(server.now() >= 20_001);
+    // Dispatch after exactly max_wait_ticks, then one wave per layer
+    // (3) with the result ready one quantum after the last.
+    assert_eq!(ticks, vec![4, 10_004, 20_004]);
+    assert!(server.now() >= 20_003);
     assert_eq!(server.stats().queue_depth_max, 1);
 }
 
@@ -402,6 +472,35 @@ fn serve_plan_rejects_bad_configurations() {
         .unwrap_err();
     assert!(err.to_string().contains("duplicate tenant name"), "{err}");
 
+    // Admission-control knobs validate at build too.
+    let err = session.server().tenant("a", model.clone()).queue_cap(0).build().unwrap_err();
+    assert!(err.to_string().contains("queue_cap"), "{err}");
+
+    let err = session
+        .server()
+        .tenant("a", model.clone())
+        .rate_limit("nobody", 2.0, 8)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown tenant 'nobody'"), "{err}");
+
+    let err = session
+        .server()
+        .tenant("a", model.clone())
+        .rate_limit("a", 2.0, 8)
+        .rate_limit("a", 4.0, 8)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("duplicate rate limit"), "{err}");
+
+    let err = session
+        .server()
+        .tenant("a", model.clone())
+        .rate_limit("a", -1.0, 8)
+        .build()
+        .unwrap_err();
+    assert!(err.to_string().contains("rate limit for tenant 'a'"), "{err}");
+
     let cycle = Session::builder().mode(crate::kernels::gemm::ExecMode::CycleAccurate).build();
     let err = cycle.server().tenant("a", model).build().unwrap_err();
     assert!(err.to_string().contains("functional"), "{err}");
@@ -417,6 +516,113 @@ fn server_rejects_malformed_submissions() {
     assert!(err.to_string().contains("unknown tenant"), "{err}");
     let err = server.submit(0, vec![0.0; 3], None).unwrap_err();
     assert!(err.to_string().contains("features"), "{err}");
+    // try_submit makes the same structural checks typed errors (a shed
+    // is an Ok(Admission::Shed), a malformed submission never is).
+    let err = server.try_submit(5, vec![0.0; 8], None).unwrap_err();
+    assert!(err.to_string().contains("unknown tenant"), "{err}");
+}
+
+// ------------------------------------------------- admission control
+
+#[test]
+fn token_bucket_sheds_over_budget_and_refills_with_virtual_time() {
+    use super::admission::{Admission, ShedReason};
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 2);
+    // 1 request/tick sustained, 2 of burst headroom.
+    let plan = session
+        .server()
+        .tenant("t", model)
+        .max_batch(8)
+        .rate_limit("t", 1.0, 2)
+        .build()
+        .expect("plan");
+    let mut server = plan.server();
+    let mut rng = Rng::new(3);
+    let mut feat = || sim::sample_features(&mut rng, 8);
+    // Tick 0: the full bucket admits the 2-token burst, then sheds.
+    assert!(matches!(server.try_submit(0, feat(), None).expect("a"), Admission::Admitted(_)));
+    assert!(matches!(server.try_submit(0, feat(), None).expect("b"), Admission::Admitted(_)));
+    let shed = server.try_submit(0, feat(), None).expect("c");
+    assert_eq!(shed, Admission::Shed(ShedReason::RateLimited));
+    assert!(shed.is_shed() && shed.id().is_none());
+    // The plain submit wrapper turns the shed into a typed error.
+    let err = server.submit(0, feat(), None).unwrap_err();
+    assert!(err.to_string().contains("rate-limited"), "{err}");
+    // One virtual tick refills one token.
+    server.tick().expect("tick");
+    assert!(matches!(server.try_submit(0, feat(), None).expect("d"), Admission::Admitted(_)));
+    assert_eq!(server.stats().shed(), 2);
+    assert_eq!(server.stats().shed_rate_limited, 2);
+    // Every admitted request still completes; the sheds never entered a
+    // queue, so the books balance.
+    let out = server.drain().expect("drain");
+    assert_eq!(out.len(), 3);
+    assert_eq!(server.stats().submitted, 3);
+    assert_eq!(server.stats().completed, 3);
+}
+
+#[test]
+fn bounded_queues_shed_overflow_without_burning_tokens() {
+    use super::admission::{Admission, ShedReason};
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 2);
+    let plan = session
+        .server()
+        .tenant("t", model)
+        .max_batch(8)
+        .queue_cap(2)
+        .rate_limit("t", 1.0, 3)
+        .build()
+        .expect("plan");
+    assert_eq!(plan.queue_cap(), Some(2));
+    let mut server = plan.server();
+    let mut rng = Rng::new(4);
+    let mut feat = || sim::sample_features(&mut rng, 8);
+    assert!(matches!(server.try_submit(0, feat(), None).expect("a"), Admission::Admitted(_)));
+    assert!(matches!(server.try_submit(0, feat(), None).expect("b"), Admission::Admitted(_)));
+    // Queue full: shed as QueueFull, and — checked before the bucket —
+    // the third token survives for after the queue drains below cap.
+    let shed = server.try_submit(0, feat(), None).expect("c");
+    assert_eq!(shed, Admission::Shed(ShedReason::QueueFull));
+    assert_eq!(server.stats().shed_queue_full, 1);
+    assert_eq!(server.stats().shed_rate_limited, 0);
+    // The admit pass empties the queue into a cohort; the saved token
+    // admits the retry.
+    server.tick().expect("tick");
+    assert!(matches!(server.try_submit(0, feat(), None).expect("d"), Admission::Admitted(_)));
+    let out = server.drain().expect("drain");
+    assert_eq!(out.len(), 3);
+    assert_eq!(server.stats().completed, 3);
+    assert_eq!(server.stats().shed(), 1);
+}
+
+#[test]
+fn continuous_waves_are_slo_weighted_when_oversubscribed() {
+    // max_batch 2 with 4 queued requests: the wave takes the two
+    // nearest deadlines first (ties and the deadline-free tail by id),
+    // so near-SLO rows complete a full pipeline latency earlier.
+    let session = session();
+    let model = frozen(&session, PrecisionPolicy::hfp8(), 2);
+    let plan = session.server().tenant("t", model).max_batch(2).build().expect("plan");
+    let mut server = plan.server();
+    let mut rng = Rng::new(9);
+    let ids = [
+        server.submit(0, sim::sample_features(&mut rng, 8), None).expect("r0"),
+        server.submit(0, sim::sample_features(&mut rng, 8), Some(10)).expect("r1"),
+        server.submit(0, sim::sample_features(&mut rng, 8), Some(2)).expect("r2"),
+        server.submit(0, sim::sample_features(&mut rng, 8), None).expect("r3"),
+    ];
+    let mut out = server.drain().expect("drain");
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), 4);
+    let tick_of = |id: u64| out.iter().find(|r| r.id == id).expect("served").completion_tick;
+    // First wave (tick 0): r2 (due 2) and r1 (due 10) -> done at 3.
+    assert_eq!(tick_of(ids[2]), 3);
+    assert_eq!(tick_of(ids[1]), 3);
+    // Second wave (tick 1): the deadline-free pair -> done at 4.
+    assert_eq!(tick_of(ids[0]), 4);
+    assert_eq!(tick_of(ids[3]), 4);
 }
 
 // --------------------------------------- executor / plan-instance reuse

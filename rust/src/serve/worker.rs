@@ -1,30 +1,54 @@
-//! The shard pool and the [`Server`] driving it.
+//! The wave scheduler, shard pool and the [`Server`] driving them.
+//!
+//! ## Execution model: layer waves
+//!
+//! The unit of scheduling is a **cohort**: up to `max_batch` requests
+//! admitted together at a layer-0 boundary, carried as one lane-padded
+//! activation matrix. Every tick, *each* in-flight cohort advances
+//! exactly one layer (one **wave**); a cohort that has cleared its
+//! last layer completes one service quantum later. Under
+//! [`BatchMode::Continuous`] a fresh cohort is admitted every tick a
+//! queue is non-empty — new requests join at the next layer-0 boundary
+//! and pipeline *alongside* the cohorts already in flight, so nobody
+//! waits for the previous batch to drain. Under
+//! [`BatchMode::WholeBatch`] (the legacy reference) a tenant admits
+//! only when its pipeline is empty, reproducing the old
+//! run-to-completion timing on the same wave engine.
+//!
+//! ## Shards
 //!
 //! A [`Shard`] is one parallel execution lane: it owns **one
 //! persistent [`GemmCtx`] per tenant** — compiled
 //! [`crate::api::PlanInstance`]s (pre-warmed for the boundary padded
 //! batch shapes at assembly, cached thereafter) plus reusable
-//! workspaces — and per-dispatch buffers (padded input, logits,
-//! ping-pong scratch, quantized-input words), so a steady-state
-//! dispatch re-plans nothing and allocates nothing. Plan execution and
-//! routing counters never share mutable state across shards. Batches
-//! spread round-robin over the pool in formation order (so even one
-//! tenant saturates every shard). The shard fan-out itself rides
-//! per-tick scoped threads (control plane — at most `shards` spawns
-//! per dispatching tick), while every GEMM inside a shard dispatches
-//! to the persistent [`crate::util::parallel`] executor pool, so the
-//! numeric hot path uses the whole machine even when `shards` is
-//! smaller than the core count.
+//! workspaces and scratch — so a steady-state wave re-plans nothing
+//! and allocates nothing beyond the cohort's own activation buffer.
+//! Wave jobs spread round-robin over the pool in formation order (so
+//! even one tenant's pipelined cohorts saturate every shard). The
+//! fan-out rides per-tick scoped threads (control plane), while every
+//! GEMM inside a shard dispatches to the persistent
+//! [`crate::util::parallel`] executor pool.
 //!
-//! **Determinism.** Scheduling decisions (batch formation, dispatch
-//! ticks) are made by the [`Server`] *before* the fan-out, and each
-//! output row of a GEMM depends only on its own input row, so shards
-//! are a pure wall-clock parallelism vehicle: per-request responses —
-//! logits bits, ticks, batch sizes — are identical at any shard count.
-//! The per-tick response stream is sorted by request id to keep the
-//! observable ordering shard-count independent too. Reused contexts
-//! and buffers carry capacity, never values, so reuse is bit-invisible
-//! (pinned by the dispatch-mode and shard-count differential tests).
+//! ## Determinism
+//!
+//! Scheduling decisions — admission, wave composition, shard routing —
+//! are made by the [`Server`] *before* the fan-out, and each output
+//! row of a GEMM depends only on its own input row, so shards are a
+//! pure wall-clock parallelism vehicle: per-request responses are
+//! identical at any shard count, and — because per-row independence
+//! also holds across *batch composition* — identical between
+//! continuous, whole-batch, and batch-of-1 scheduling (pinned by
+//! `tests/serve_differential.rs`). The per-tick response stream is
+//! sorted by request id to keep the observable ordering schedule
+//! independent too.
+//!
+//! ## Admission control
+//!
+//! In front of the scheduler, [`Server::try_submit`] applies
+//! backpressure deterministically: a bounded per-tenant queue
+//! (`queue_cap`) and a per-tenant token bucket
+//! ([`crate::serve::admission::TokenBucket`]) shed with a typed
+//! [`Admission::Shed`] instead of queueing unboundedly.
 
 use crate::api::Session;
 use crate::nn::engine::GemmCtx;
@@ -32,7 +56,10 @@ use crate::util::error::{Error, Result};
 use crate::util::parallel::par_chunks_mut;
 use crate::{bail, ensure};
 
-use super::batcher::{pad_rows, BatchPolicy, ROW_PAD, SERVICE_TICKS};
+use super::admission::{Admission, RateLimit, ShedReason, TokenBucket};
+use super::batcher::{
+    pad_rows, pipeline_latency_ticks, BatchMode, BatchPolicy, ROW_PAD, SERVICE_TICKS,
+};
 use super::model::InferenceModel;
 use super::queue::{Request, Response, TenantQueue};
 use super::stats::ServeStats;
@@ -47,22 +74,42 @@ pub struct Tenant {
     pub model: InferenceModel,
 }
 
+/// One in-flight batch: requests admitted together at a layer-0
+/// boundary plus their current activation matrix. Advances one layer
+/// per wave; owned by the server between waves, loaned to a shard
+/// during one.
+#[derive(Debug)]
+struct Cohort {
+    /// Tenant index.
+    tenant: usize,
+    /// Next layer to execute (== layers.len() when done).
+    layer: usize,
+    /// Logical rows (requests), before lane padding.
+    size: usize,
+    /// The member requests, in id order (row i belongs to reqs[i]).
+    reqs: Vec<Request>,
+    /// Current activations, `pad_rows(size) × current-layer-in_dim`
+    /// row-major. Padding rows start zero and ride along — per-row
+    /// independence keeps them bit-invisible to the real rows.
+    acts: Vec<f64>,
+    /// Global formation sequence number: the deterministic shard
+    /// routing and re-insertion key.
+    seq: u64,
+}
+
 /// One parallel execution lane of the pool: persistent per-tenant GEMM
-/// contexts plus reusable per-dispatch buffers.
+/// contexts plus reusable per-wave scratch.
 #[derive(Debug)]
 pub struct Shard {
-    inbox: Vec<(usize, Vec<Request>)>,
-    outbox: Vec<Response>,
+    inbox: Vec<Cohort>,
+    done: Vec<Cohort>,
     /// Per-tenant (gemm_calls, packed_runs) accumulated this tick.
     counters: Vec<(u64, u64)>,
     /// One persistent context per tenant: compiled plan instances and
-    /// workspaces reused across dispatches.
+    /// workspaces reused across waves.
     ctxs: Vec<GemmCtx>,
-    /// Reused padded-input buffer.
-    x: Vec<f64>,
-    /// Reused logits buffer.
-    logits: Vec<f64>,
-    /// Reused inter-layer ping-pong scratch.
+    /// Reused wave-output scratch (swapped into the cohort after each
+    /// wave, so the cohort always owns its current activations).
     scratch: Vec<f64>,
     /// Recycled quantized-input word storage.
     xt_pool: Vec<u64>,
@@ -88,11 +135,9 @@ impl Shard {
         }
         Shard {
             inbox: Vec::new(),
-            outbox: Vec::new(),
+            done: Vec::new(),
             counters: vec![(0, 0); tenants.len()],
             ctxs,
-            x: Vec::new(),
-            logits: Vec::new(),
             scratch: Vec::new(),
             xt_pool: Vec::new(),
             error: None,
@@ -105,13 +150,13 @@ impl Shard {
         self.ctxs.iter().fold((0, 0), |(b, r), c| (b + c.plan_builds, r + c.plan_reuses))
     }
 
-    /// Execute every batch in the inbox (called from the parallel
+    /// Execute every wave job in the inbox (called from the parallel
     /// fan-out; errors are parked and surfaced after the join).
-    fn run_inbox(&mut self, tenants: &[Tenant], now: u64) {
+    fn run_waves(&mut self, tenants: &[Tenant]) {
         let inbox = std::mem::take(&mut self.inbox);
-        for (t, batch) in inbox {
-            match self.execute(&tenants[t], t, batch, now) {
-                Ok(mut responses) => self.outbox.append(&mut responses),
+        for mut cohort in inbox {
+            match self.advance(&tenants[cohort.tenant], &mut cohort) {
+                Ok(()) => self.done.push(cohort),
                 Err(e) => {
                     self.error = Some(e);
                     return;
@@ -120,65 +165,25 @@ impl Shard {
         }
     }
 
-    /// Run one tenant batch: pad rows to the kernel granularity, one
-    /// forward pass on the tenant's persistent context and the shard's
-    /// reused buffers, slice the logical rows back out.
-    fn execute(
-        &mut self,
-        tenant: &Tenant,
-        t: usize,
-        batch: Vec<Request>,
-        now: u64,
-    ) -> Result<Vec<Response>> {
-        let model = &tenant.model;
-        let size = batch.len();
-        let rows = pad_rows(size);
-        let in_dim = model.in_dim();
-        self.x.clear();
-        self.x.resize(rows * in_dim, 0f64);
-        for (i, r) in batch.iter().enumerate() {
-            ensure!(
-                r.features.len() == in_dim,
-                "request {} for tenant '{}' has {} features, the model consumes {in_dim}",
-                r.id,
-                tenant.name,
-                r.features.len()
-            );
-            self.x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&r.features);
-        }
-        let ctx = &mut self.ctxs[t];
-        model.forward_into(ctx, &self.x, rows, &mut self.logits, &mut self.scratch, &mut self.xt_pool)?;
-        let (calls, packed) = ctx.take_counters();
-        self.counters[t].0 += calls;
-        self.counters[t].1 += packed;
-        let w = model.out_dim();
-        let classes = model.classes();
-        // Results are ready one service quantum after dispatch; the
-        // quantum is uniform, so completion ticks are shard-independent.
-        let done = now.saturating_add(SERVICE_TICKS);
-        Ok(batch
-            .into_iter()
-            .enumerate()
-            .map(|(i, r)| {
-                let row = self.logits[i * w..(i + 1) * w].to_vec();
-                let pred = row[..classes]
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                    .map(|(j, _)| j)
-                    .unwrap_or(0);
-                Response {
-                    id: r.id,
-                    tenant: t,
-                    logits: row,
-                    pred,
-                    arrival_tick: r.arrival_tick,
-                    completion_tick: done,
-                    batch_size: size,
-                    deadline_missed: r.deadline_tick.map(|d| done > d).unwrap_or(false),
-                }
-            })
-            .collect())
+    /// Run one wave: advance a cohort through its next layer on the
+    /// tenant's persistent context, swapping the shard scratch in as
+    /// the cohort's new activation buffer.
+    fn advance(&mut self, tenant: &Tenant, cohort: &mut Cohort) -> Result<()> {
+        let rows = pad_rows(cohort.size);
+        tenant.model.forward_layer_into(
+            &mut self.ctxs[cohort.tenant],
+            cohort.layer,
+            &cohort.acts,
+            rows,
+            &mut self.scratch,
+            &mut self.xt_pool,
+        )?;
+        std::mem::swap(&mut cohort.acts, &mut self.scratch);
+        let (calls, packed) = self.ctxs[cohort.tenant].take_counters();
+        self.counters[cohort.tenant].0 += calls;
+        self.counters[cohort.tenant].1 += packed;
+        cohort.layer += 1;
+        Ok(())
     }
 }
 
@@ -195,8 +200,15 @@ pub struct Server {
     shards: Vec<Shard>,
     policy: BatchPolicy,
     stats: ServeStats,
+    /// Per-tenant in-flight cohorts, ordered by formation sequence.
+    inflight: Vec<Vec<Cohort>>,
+    /// Per-tenant token buckets (None = unlimited).
+    buckets: Vec<Option<TokenBucket>>,
+    /// Bounded-queue cap (None = unbounded).
+    queue_cap: Option<usize>,
     now: u64,
     next_id: u64,
+    next_cohort: u64,
 }
 
 impl Server {
@@ -207,6 +219,8 @@ impl Server {
         tenants: Vec<Tenant>,
         policy: BatchPolicy,
         n_shards: usize,
+        queue_cap: Option<usize>,
+        limits: Vec<Option<RateLimit>>,
     ) -> Self {
         let n_tenants = tenants.len();
         let shards = (0..n_shards).map(|_| Shard::new(session, &tenants, &policy)).collect();
@@ -214,10 +228,14 @@ impl Server {
             queues: (0..n_tenants).map(|_| TenantQueue::new()).collect(),
             shards,
             stats: ServeStats::new(n_tenants),
+            inflight: (0..n_tenants).map(|_| Vec::new()).collect(),
+            buckets: limits.into_iter().map(|l| l.map(TokenBucket::new)).collect(),
+            queue_cap,
             tenants,
             policy,
             now: 0,
             next_id: 0,
+            next_cohort: 0,
         }
     }
 
@@ -236,9 +254,15 @@ impl Server {
         self.now
     }
 
-    /// Requests parked across all tenant queues.
+    /// Requests parked across all tenant queues (not yet admitted to a
+    /// cohort).
     pub fn pending(&self) -> usize {
         self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Requests riding in-flight cohorts (admitted, not yet completed).
+    pub fn in_flight(&self) -> usize {
+        self.inflight.iter().map(|v| v.iter().map(|c| c.size).sum::<usize>()).sum()
     }
 
     /// Accumulated statistics.
@@ -265,15 +289,24 @@ impl Server {
         })
     }
 
-    /// Enqueue a request for `tenant`, due `deadline_in` ticks from now
-    /// if set. Returns the assigned request id (monotone in submission
-    /// order — the id responses are keyed and sorted by).
-    pub fn submit(
+    /// The tenant's end-to-end pipeline latency in ticks (one wave per
+    /// layer plus the service quantum).
+    fn depth_ticks(&self, tenant: usize) -> u64 {
+        pipeline_latency_ticks(self.tenants[tenant].model.layers().len())
+    }
+
+    /// Submit a request through admission control: the bounded queue
+    /// and the tenant's token bucket may **shed** it (a typed
+    /// [`Admission::Shed`], not an error — nothing is enqueued and the
+    /// shed is counted). A malformed submission (unknown tenant, wrong
+    /// feature width) is still a typed error. The queue-cap check runs
+    /// first so a full queue does not burn bucket tokens.
+    pub fn try_submit(
         &mut self,
         tenant: usize,
         features: Vec<f64>,
         deadline_in: Option<u64>,
-    ) -> Result<u64> {
+    ) -> Result<Admission> {
         let Some(t) = self.tenants.get(tenant) else {
             bail!("unknown tenant index {tenant} (server has {})", self.tenants.len());
         };
@@ -284,6 +317,18 @@ impl Server {
             t.model.in_dim(),
             features.len()
         );
+        if let Some(cap) = self.queue_cap {
+            if self.queues[tenant].len() >= cap {
+                self.stats.record_shed(ShedReason::QueueFull);
+                return Ok(Admission::Shed(ShedReason::QueueFull));
+            }
+        }
+        if let Some(bucket) = &mut self.buckets[tenant] {
+            if !bucket.try_take(self.now) {
+                self.stats.record_shed(ShedReason::RateLimited);
+                return Ok(Admission::Shed(ShedReason::RateLimited));
+            }
+        }
         let id = self.next_id;
         self.next_id += 1;
         self.queues[tenant].push(Request {
@@ -297,47 +342,146 @@ impl Server {
         });
         self.stats.submitted += 1;
         crate::obs_count!("serve.submitted");
-        Ok(id)
+        Ok(Admission::Admitted(id))
     }
 
-    /// Advance virtual time by one tick: sample queue depths, let the
-    /// batcher coalesce ready requests, fan the batches out over the
-    /// shard pool, and return this tick's responses sorted by request
-    /// id.
+    /// Enqueue a request for `tenant`, due `deadline_in` ticks from now
+    /// if set. Returns the assigned request id (monotone in submission
+    /// order — the id responses are keyed and sorted by). A shed
+    /// submission is an error here; callers that want to react to
+    /// backpressure use [`Server::try_submit`].
+    pub fn submit(
+        &mut self,
+        tenant: usize,
+        features: Vec<f64>,
+        deadline_in: Option<u64>,
+    ) -> Result<u64> {
+        match self.try_submit(tenant, features, deadline_in)? {
+            Admission::Admitted(id) => Ok(id),
+            Admission::Shed(reason) => bail!(
+                "request for tenant {tenant} shed ({reason}); use try_submit to handle \
+                 backpressure"
+            ),
+        }
+    }
+
+    /// Admit queued requests into fresh layer-0 cohorts, per the mode:
+    /// Continuous admits up to `max_batch` SLO-weighted rows per tenant
+    /// every tick; WholeBatch admits (FIFO) only when the tenant's
+    /// pipeline is empty and a size/wait/deadline trigger fires.
+    fn admit(&mut self) {
+        let now = self.now;
+        for t in 0..self.tenants.len() {
+            let batch = match self.policy.mode {
+                BatchMode::Continuous => {
+                    if self.queues[t].is_empty() {
+                        continue;
+                    }
+                    self.queues[t].take_prioritized(self.policy.max_batch)
+                }
+                BatchMode::WholeBatch => {
+                    if !self.inflight[t].is_empty() {
+                        continue;
+                    }
+                    let lead = self.depth_ticks(t);
+                    if !self.policy.should_dispatch(&self.queues[t], now, lead) {
+                        continue;
+                    }
+                    self.queues[t].take(self.policy.max_batch)
+                }
+            };
+            let size = batch.len();
+            self.stats.record_batch(size);
+            // Virtual-ticks clock: one span per admitted cohort at the
+            // tick it leaves the queue (tid = tenant index).
+            crate::obs::trace::virt_span(
+                crate::obs::trace::Clock::Ticks,
+                t as u64,
+                "serve.dispatch",
+                "serve",
+                now,
+                1,
+                || format!("\"tenant\":{t},\"batch\":{size},\"tick\":{now}"),
+            );
+            let in_dim = self.tenants[t].model.in_dim();
+            let rows = pad_rows(size);
+            let mut acts = vec![0f64; rows * in_dim];
+            for (i, r) in batch.iter().enumerate() {
+                acts[i * in_dim..(i + 1) * in_dim].copy_from_slice(&r.features);
+            }
+            let seq = self.next_cohort;
+            self.next_cohort += 1;
+            self.inflight[t].push(Cohort { tenant: t, layer: 0, size, reqs: batch, acts, seq });
+        }
+    }
+
+    /// Turn a completed cohort into per-request responses.
+    fn finish(tenants: &[Tenant], cohort: Cohort, now: u64, out: &mut Vec<Response>) {
+        let Cohort { tenant, size, reqs, acts, .. } = cohort;
+        let model = &tenants[tenant].model;
+        let w = model.out_dim();
+        let classes = model.classes();
+        // Results are ready one service quantum after the final wave;
+        // the quantum is uniform, so completion ticks are shard- and
+        // schedule-independent given the admission tick.
+        let done = now.saturating_add(SERVICE_TICKS);
+        for (i, r) in reqs.into_iter().enumerate() {
+            let row = acts[i * w..(i + 1) * w].to_vec();
+            let pred = row[..classes]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            out.push(Response {
+                id: r.id,
+                tenant,
+                logits: row,
+                pred,
+                arrival_tick: r.arrival_tick,
+                completion_tick: done,
+                batch_size: size,
+                deadline_missed: r.deadline_tick.map(|d| done > d).unwrap_or(false),
+            });
+        }
+    }
+
+    /// Advance virtual time by one tick: sample queue depths, admit
+    /// fresh cohorts at the layer-0 boundary, run one wave for *every*
+    /// in-flight cohort over the shard pool, and return the responses
+    /// of cohorts that cleared their last layer, sorted by request id.
     pub fn tick(&mut self) -> Result<Vec<Response>> {
         self.stats.record_depth(self.pending());
-        // Batch formation is global and precedes the fan-out, so the
-        // dispatch schedule is independent of the shard count. Batches
-        // spread round-robin in formation order — keyed by a batch
-        // counter, not the tenant index, so a single-tenant server
-        // still uses the whole pool.
+        self.admit();
+        // Wave formation is global and precedes the fan-out, so the
+        // schedule is independent of the shard count. Jobs spread
+        // round-robin in formation order — keyed by a job counter, not
+        // the tenant index, so even a single tenant's pipelined cohorts
+        // use the whole pool.
         let n_shards = self.shards.len();
         let mut any = false;
-        let mut batch_no = 0usize;
-        for (t, q) in self.queues.iter_mut().enumerate() {
-            for batch in self.policy.drain(q, self.now) {
-                self.stats.record_batch(batch.len());
-                // Virtual-ticks clock: one span per dispatched batch at
-                // the tick it leaves the queue (tid = tenant index).
-                let (now, size) = (self.now, batch.len());
+        let mut job_no = 0usize;
+        for t in 0..self.tenants.len() {
+            for cohort in self.inflight[t].drain(..) {
+                let (now, layer, size) = (self.now, cohort.layer, cohort.size);
+                self.stats.record_wave(size);
                 crate::obs::trace::virt_span(
                     crate::obs::trace::Clock::Ticks,
                     t as u64,
-                    "serve.dispatch",
+                    "serve.wave",
                     "serve",
                     now,
                     1,
-                    || format!("\"tenant\":{t},\"batch\":{size},\"tick\":{now}"),
+                    || format!("\"tenant\":{t},\"layer\":{layer},\"rows\":{size},\"tick\":{now}"),
                 );
-                self.shards[batch_no % n_shards].inbox.push((t, batch));
-                batch_no += 1;
+                self.shards[job_no % n_shards].inbox.push(cohort);
+                job_no += 1;
                 any = true;
             }
         }
         let mut responses = Vec::new();
         if any {
             let tenants: &[Tenant] = &self.tenants;
-            let now = self.now;
             // The shard fan-out runs on per-tick scoped threads, NOT on
             // the executor pool: pool workers run nested dispatch
             // inline, so parking shards on the pool would serialize
@@ -356,7 +500,7 @@ impl Server {
             let ambient = dispatch_mode();
             let fanout = |shards: &mut [Shard]| {
                 par_chunks_mut(shards, 1, |_, s| {
-                    with_dispatch(ambient, || s[0].run_inbox(tenants, now))
+                    with_dispatch(ambient, || s[0].run_waves(tenants))
                 });
             };
             // An ambient Serial pin means "single-threaded, period"
@@ -366,11 +510,12 @@ impl Server {
             } else {
                 fanout(&mut self.shards);
             }
+            let mut advanced: Vec<Cohort> = Vec::new();
             for shard in &mut self.shards {
                 if let Some(e) = shard.error.take() {
                     return Err(e);
                 }
-                responses.append(&mut shard.outbox);
+                advanced.append(&mut shard.done);
                 for (t, (calls, packed)) in shard.counters.iter_mut().enumerate() {
                     self.stats.tenants[t].gemm_calls += *calls;
                     self.stats.tenants[t].packed_runs += *packed;
@@ -389,6 +534,17 @@ impl Server {
                     *packed = 0;
                 }
             }
+            // Re-insert in formation order: the deterministic schedule
+            // key, independent of which shard ran which wave.
+            advanced.sort_by_key(|c| c.seq);
+            let now = self.now;
+            for cohort in advanced {
+                if cohort.layer == self.tenants[cohort.tenant].model.layers().len() {
+                    Self::finish(&self.tenants, cohort, now, &mut responses);
+                } else {
+                    self.inflight[cohort.tenant].push(cohort);
+                }
+            }
             responses.sort_by_key(|r| r.id);
             for r in &responses {
                 self.stats.record_response(r);
@@ -400,37 +556,48 @@ impl Server {
         Ok(responses)
     }
 
-    /// The earliest tick at which the batcher could dispatch anything:
-    /// `Some(now)` when a queue is ready right now, the nearest future
-    /// wait/deadline trigger otherwise, `None` when nothing is pending.
+    /// The earliest tick at which the scheduler has work: `Some(now)`
+    /// when a cohort is in flight (a wave runs every tick) or a queue
+    /// can admit right now, the nearest future wait/deadline trigger
+    /// otherwise (WholeBatch), `None` when fully idle.
     fn next_dispatch_tick(&self) -> Option<u64> {
+        if self.inflight.iter().any(|v| !v.is_empty()) {
+            return Some(self.now);
+        }
         let mut next: Option<u64> = None;
-        for q in &self.queues {
+        for (t, q) in self.queues.iter().enumerate() {
             if q.is_empty() {
                 continue;
             }
-            if self.policy.should_dispatch(q, self.now) {
+            // Continuous admission is greedy: a non-empty queue admits
+            // at the very next tick.
+            if self.policy.mode == BatchMode::Continuous {
+                return Some(self.now);
+            }
+            let lead = self.depth_ticks(t);
+            if self.policy.should_dispatch(q, self.now, lead) {
                 return Some(self.now);
             }
             // should_dispatch was false, so both triggers are strictly
             // in the future (and the size trigger needs a new arrival,
             // which only the caller can produce).
-            let mut t = q
+            let mut tick = q
                 .oldest_arrival()
                 .map(|a| a.saturating_add(self.policy.max_wait_ticks))
                 .unwrap_or(u64::MAX);
             if let Some(d) = q.earliest_deadline() {
-                t = t.min(d.saturating_sub(super::batcher::SERVICE_TICKS));
+                tick = tick.min(d.saturating_sub(lead));
             }
-            next = Some(next.map_or(t, |n: u64| n.min(t)));
+            next = Some(next.map_or(tick, |n: u64| n.min(tick)));
         }
         next
     }
 
-    /// Fast-forward to `cap` or the next possible dispatch tick,
+    /// Fast-forward to `cap` or the next tick with schedulable work,
     /// whichever is earlier — observably identical to ticking through
     /// the skipped quiet ticks one by one (each would sample the same
-    /// queue depth and dispatch nothing) but O(1). Keeps sparse-trace
+    /// queue depth and dispatch nothing) but O(1). Never skips while a
+    /// cohort is in flight (a wave runs every tick). Keeps sparse-trace
     /// replay and large `max_wait_ticks` drains O(events) instead of
     /// O(tick span). Returns the new current tick.
     pub fn advance_to(&mut self, cap: u64) -> u64 {
@@ -447,22 +614,34 @@ impl Server {
         self.now
     }
 
-    /// Tick until every queue is empty, collecting the responses.
-    /// Progress is guaranteed: a non-empty queue dispatches at the
-    /// latest `max_wait_ticks` after its oldest arrival, and quiet
-    /// stretches fast-forward in O(1).
+    /// Tick until every queue is empty and every cohort has completed,
+    /// collecting the responses. Progress is guaranteed: each tick with
+    /// work either admits a cohort or advances every in-flight cohort
+    /// one layer, and quiet stretches fast-forward in O(1).
     pub fn drain(&mut self) -> Result<Vec<Response>> {
         let mut out = Vec::new();
-        // Every pending request arrived at or before `now`, so the wait
-        // trigger guarantees the last one dispatches within
-        // `max_wait_ticks` ticks — anything longer is a batcher bug.
-        let bound = self.now.saturating_add(self.policy.max_wait_ticks).saturating_add(1);
-        while self.pending() > 0 {
+        let max_lat = self
+            .tenants
+            .iter()
+            .map(|t| pipeline_latency_ticks(t.model.layers().len()))
+            .max()
+            .unwrap_or(SERVICE_TICKS);
+        // Worst case is WholeBatch batch-of-1: each remaining request
+        // occupies the pipeline for a full latency, serially, after at
+        // most `max_wait_ticks` of queueing — anything beyond that
+        // bound is a scheduler bug, not a slow drain.
+        let work = (self.pending() + self.in_flight()) as u64;
+        let bound = self
+            .now
+            .saturating_add(self.policy.max_wait_ticks)
+            .saturating_add(work.max(1).saturating_mul(max_lat + 1))
+            .saturating_add(max_lat + 1);
+        while self.pending() > 0 || self.in_flight() > 0 {
             self.advance_to(bound);
             out.append(&mut self.tick()?);
             ensure!(
-                self.pending() == 0 || self.now <= bound,
-                "server failed to drain within the wait bound (a batcher bug)"
+                (self.pending() == 0 && self.in_flight() == 0) || self.now <= bound,
+                "server failed to drain within the wait bound (a scheduler bug)"
             );
         }
         Ok(out)

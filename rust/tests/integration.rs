@@ -396,7 +396,20 @@ fn cli_serve_rejects_bad_arguments() {
     assert_clean_cli_error(&["serve", "--shards", "0", "--train-steps", "1"], "shard count");
     assert_clean_cli_error(
         &["serve", "--load", "warp", "--tenants", "hfp8", "--train-steps", "1"],
-        "--load must be open|closed",
+        "--load must be open|bursty|closed",
+    );
+    // The admission/scheduling knobs reject bad input before training.
+    assert_clean_cli_error(
+        &["serve", "--batching", "sometimes", "--train-steps", "1"],
+        "unknown batching mode 'sometimes'",
+    );
+    assert_clean_cli_error(
+        &["serve", "--queue-cap", "9999999999", "--train-steps", "1"],
+        "queue_cap",
+    );
+    assert_clean_cli_error(
+        &["serve", "--rate-limit", "-3", "--train-steps", "1"],
+        "--rate-limit must be a positive",
     );
     assert_clean_cli_error(&["serve", "--checkpoint", "/nonexistent/model.bin"], "checkpoint");
     // --checkpoint and --tenants are mutually exclusive, loudly.
@@ -424,9 +437,30 @@ fn cli_serve_smoke_open_loop() {
     assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("served 24 responses"), "{stdout}");
+    assert!(stdout.contains("continuous batching"), "{stdout}");
     assert!(stdout.contains("p50"), "{stdout}");
     assert!(stdout.contains("tenant hfp8"), "{stdout}");
     assert!(stdout.contains("100% packed fast path"), "{stdout}");
+}
+
+#[test]
+fn cli_serve_bursty_load_with_admission_control() {
+    // The backpressure path end to end: an MMPP bursty trace against a
+    // token bucket and a bounded queue, on the legacy scheduler for
+    // variety. Sheds show up in the stats JSON; everything stays one
+    // parseable line.
+    let out = repro(&[
+        "serve", "--tenants", "hfp8", "--train-steps", "4", "--requests", "32", "--max-batch",
+        "8", "--load", "bursty", "--rate", "16", "--on-ticks", "4", "--off-ticks", "16",
+        "--rate-limit", "2", "--burst", "4", "--queue-cap", "16", "--batching", "whole",
+        "--seed", "5", "--json",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.trim().lines().count(), 1, "--json must stay one line:\n{stdout}");
+    assert!(stdout.contains("\"shed_rate_limited\":"), "{stdout}");
+    assert!(stdout.contains("\"goodput_per_tick\":"), "{stdout}");
+    assert!(stdout.contains("\"waves\":"), "{stdout}");
 }
 
 #[test]

@@ -243,6 +243,7 @@ fn serve_stats_and_obs_snapshot_agree_on_shared_quantities() {
         assert_eq!(snap.counter("serve.submitted"), stats.submitted);
         assert_eq!(snap.counter("serve.completed"), stats.completed);
         assert_eq!(snap.counter("serve.batches"), stats.batches);
+        assert_eq!(snap.counter("serve.waves"), stats.waves);
         assert_eq!(snap.counter("serve.deadline_misses"), stats.deadline_misses);
         assert_eq!(snap.gauge("serve.ticks"), stats.ticks);
         assert_eq!(snap.gauge("serve.queue_depth_max"), stats.queue_depth_max as u64);
@@ -250,6 +251,9 @@ fn serve_stats_and_obs_snapshot_agree_on_shared_quantities() {
         assert_eq!(snap.counter("serve.tenant.solo.packed_runs"), stats.packed_runs());
         let h = snap.hist("serve.batch_size").expect("batch-size hist");
         assert_eq!(h.count, stats.batches);
+        let h = snap.hist("serve.wave_rows").expect("wave-rows hist");
+        assert_eq!(h.count, stats.waves);
+        assert_eq!(h.sum, stats.wave_rows);
         let h = snap.hist("serve.latency_ticks").expect("latency hist");
         assert_eq!(h.count, stats.completed);
     });

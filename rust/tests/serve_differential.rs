@@ -1,0 +1,164 @@
+//! Serving scheduler differential gates
+//! (`cargo test --test serve_differential`).
+//!
+//! The tentpole invariant of the continuous-batching rebuild: the
+//! scheduler decides *when* a request runs, never *what* it computes.
+//! Because every GEMM output row depends only on its own input row,
+//! each response's logits must be bit-identical to its batch-of-1 run
+//! — at any shard count, any thread budget, and under any join
+//! schedule (continuous waves, legacy whole-batch, batch-of-1).
+//!
+//! Three gates:
+//!  1. **Bit identity**: per-id logits and predictions equal across
+//!     {Continuous, WholeBatch} x shards {1, 4} x thread budgets
+//!     {1, 4, 7}, all against a WholeBatch `max_batch(1)` reference.
+//!  2. **Completion-tick monotonicity**: replay emits responses in
+//!     nondecreasing completion order within every arm.
+//!  3. **Stats byte-stability**: `ServeStats::summary_json` is the
+//!     identical byte string across shard counts, thread budgets and
+//!     repeats within a scheduling mode (virtual time only — nothing
+//!     wall-clock leaks in).
+
+use minifloat_nn::prelude::*;
+use minifloat_nn::serve::{sim, BatchMode, InferenceModel};
+use minifloat_nn::util::parallel::with_worker_count;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Train-and-freeze one tenant model.
+fn frozen(session: &Session, policy: PrecisionPolicy) -> InferenceModel {
+    let mut tr = session.native_trainer(policy).expect("trainer");
+    tr.train(4, 0).expect("train");
+    InferenceModel::freeze(session, tr.model(), tr.policy()).expect("freeze")
+}
+
+/// One replay arm: `(per-id (logits, pred, completion), emission-order
+/// completion ticks, stats JSON)`.
+type Arm = (Vec<(u64, Vec<u64>, usize, u64)>, Vec<u64>, String);
+
+fn run_arm(
+    session: &Session,
+    models: &[InferenceModel],
+    trace: &sim::Trace,
+    mode: BatchMode,
+    max_batch: usize,
+    shards: usize,
+) -> Arm {
+    let mut builder = session.server();
+    for (i, m) in models.iter().enumerate() {
+        builder = builder.tenant(&format!("t{i}"), m.clone());
+    }
+    let plan = builder
+        .max_batch(max_batch)
+        .max_wait_ticks(2)
+        .shards(shards)
+        .batching(mode)
+        .build()
+        .expect("plan");
+    let mut server = plan.server();
+    let responses = sim::replay(&mut server, trace).expect("replay");
+    let emission: Vec<u64> = responses.iter().map(|r| r.completion_tick).collect();
+    let mut keyed: Vec<(u64, Vec<u64>, usize, u64)> = responses
+        .iter()
+        .map(|r| (r.id, bits(&r.logits), r.pred, r.completion_tick))
+        .collect();
+    keyed.sort_by_key(|(id, ..)| *id);
+    (keyed, emission, server.stats().summary_json())
+}
+
+#[test]
+fn scheduling_never_changes_a_bit() {
+    let session = Session::builder().seed(41).build();
+    let models = [frozen(&session, PrecisionPolicy::hfp8()), frozen(&session, PrecisionPolicy::fp8())];
+    // Two tenants, bursty-ish open loop with deadlines: exercises the
+    // SLO-weighted wave composition and the legacy deadline trigger.
+    let trace = sim::Trace::open_loop(4242, &[8, 8], 120, 0.3, Some(48)).expect("trace");
+
+    // Reference: batch-of-1, run-to-completion, single shard.
+    let (reference, _, _) = run_arm(&session, &models, &trace, BatchMode::WholeBatch, 1, 1);
+    assert_eq!(reference.len(), 120);
+
+    let mut stats_by_mode: std::collections::BTreeMap<&str, Vec<String>> = Default::default();
+    let mut latency_sum = std::collections::BTreeMap::<&str, u64>::new();
+    for (mode, mode_name) in
+        [(BatchMode::Continuous, "continuous"), (BatchMode::WholeBatch, "whole")]
+    {
+        for shards in [1usize, 4] {
+            for threads in [1usize, 4, 7] {
+                let (keyed, emission, stats) = with_worker_count(threads, || {
+                    run_arm(&session, &models, &trace, mode, 16, shards)
+                });
+                // Gate 1: per-id logits and predictions are bit-equal
+                // to the batch-of-1 reference.
+                assert_eq!(keyed.len(), reference.len());
+                for ((id, logits, pred, _), (rid, rlogits, rpred, _)) in
+                    keyed.iter().zip(&reference)
+                {
+                    assert_eq!(id, rid);
+                    assert_eq!(
+                        logits, rlogits,
+                        "{mode_name}/shards={shards}/threads={threads}: request {id} \
+                         diverged from its batch-of-1 logits"
+                    );
+                    assert_eq!(pred, rpred, "request {id}: prediction flipped");
+                }
+                // Gate 2: responses stream out in completion order.
+                assert!(
+                    emission.windows(2).all(|w| w[0] <= w[1]),
+                    "{mode_name}/shards={shards}/threads={threads}: completion ticks \
+                     not monotone: {emission:?}"
+                );
+                stats_by_mode.entry(mode_name).or_default().push(stats);
+                *latency_sum.entry(mode_name).or_insert(0) +=
+                    keyed.iter().map(|(_, _, _, c)| c).sum::<u64>();
+            }
+        }
+        // Repeat one arm verbatim: byte-stable across runs too.
+        let (_, _, again) = run_arm(&session, &models, &trace, mode, 16, 1);
+        stats_by_mode.entry(mode_name).or_default().push(again);
+    }
+    // Gate 3: within a mode, every arm (shards x threads x repeat)
+    // renders the identical stats JSON byte string.
+    for (mode_name, renders) in &stats_by_mode {
+        for r in &renders[1..] {
+            assert_eq!(
+                r, &renders[0],
+                "{mode_name}: stats JSON not byte-stable across shards/threads/repeats"
+            );
+        }
+    }
+    // And the timing *should* differ between the modes — continuous
+    // pipelines cohorts, whole-batch runs them to completion — which is
+    // exactly why the bit-identity above is a nontrivial claim.
+    let cont = latency_sum["continuous"];
+    let whole = latency_sum["whole"];
+    assert!(
+        cont < whole,
+        "continuous batching should finish the trace strictly earlier in aggregate \
+         (continuous completion-tick sum {cont}, whole-batch {whole})"
+    );
+}
+
+#[test]
+fn bursty_traces_replay_bit_identically_across_schedulers() {
+    // The MMPP arrival model feeds the same invariant: ON/OFF bursts
+    // change *when* cohorts form, never what any row computes.
+    let session = Session::builder().seed(43).build();
+    let models = [frozen(&session, PrecisionPolicy::hfp8())];
+    let trace = sim::Trace::bursty(99, &[8], 80, 0.4, 6.0, 24.0, Some(64)).expect("trace");
+    let (reference, _, _) = run_arm(&session, &models, &trace, BatchMode::WholeBatch, 1, 1);
+    for mode in [BatchMode::Continuous, BatchMode::WholeBatch] {
+        for shards in [1usize, 4] {
+            let (keyed, emission, _) = run_arm(&session, &models, &trace, mode, 8, shards);
+            assert_eq!(keyed.len(), reference.len());
+            for ((id, logits, pred, _), (rid, rlogits, rpred, _)) in keyed.iter().zip(&reference) {
+                assert_eq!(id, rid);
+                assert_eq!(logits, rlogits, "{mode:?}/shards={shards}: request {id} diverged");
+                assert_eq!(pred, rpred);
+            }
+            assert!(emission.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+}
